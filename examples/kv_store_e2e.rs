@@ -1,0 +1,71 @@
+//! End-to-end driver (the DESIGN.md E2E validation run): bring up the full
+//! system — Trust\<T\> runtime, delegated shards, TCP server, socket-worker
+//! fibers — put a real workload through it over loopback, and report the
+//! paper's headline metric (delegation vs locking throughput under
+//! contention) plus latency percentiles.
+//!
+//!     cargo run --release --example kv_store_e2e -- \
+//!         [--keys 1000] [--ops 20000] [--dist zipf] [--write-pct 5]
+//!
+//! Results from this driver are recorded in EXPERIMENTS.md §E2E.
+
+use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
+use trustee::util::cli::Args;
+use trustee::util::stats::{fmt_mops, fmt_ns};
+
+fn main() {
+    let args = Args::from_env();
+    let keys: u64 = args.get("keys", 1_000);
+    let ops: u64 = args.get("ops", 20_000);
+    let dist = args.get_str("dist", "zipf");
+    let write_pct: u32 = args.get("write-pct", 5);
+    let threads: usize = args.get("client-threads", 2);
+
+    println!("== Trust<T> KV store end-to-end ==");
+    println!("keys={keys} ops={ops} dist={dist} writes={write_pct}% clients={threads}");
+
+    let mut results = Vec::new();
+    for (label, backend, dedicated) in [
+        ("Trust (delegated, 2 dedicated)", BackendKind::Trust { shards: 8 }, 2usize),
+        ("Trust (delegated, shared)", BackendKind::Trust { shards: 8 }, 0),
+        ("Sharded Mutex", BackendKind::Mutex, 0),
+        ("Sharded RwLock", BackendKind::RwLock, 0),
+        ("Dashmap-like", BackendKind::Swift, 0),
+    ] {
+        let server = KvServer::start(KvServerConfig {
+            workers: 4,
+            dedicated,
+            backend,
+            addr: "127.0.0.1:0".into(),
+        });
+        server.prefill(keys, 16);
+        let stats = run_load(&LoadConfig {
+            addr: server.addr(),
+            threads,
+            pipeline: 32,
+            ops_per_thread: ops / threads as u64,
+            keys,
+            dist: dist.clone(),
+            write_pct,
+            val_len: 16,
+            seed: 0xE2E,
+        });
+        assert_eq!(stats.misses, 0, "prefilled keys must not miss");
+        println!(
+            "{label:<32} {:>14}   mean {:>10}   p99.9 {:>10}",
+            fmt_mops(stats.throughput()),
+            fmt_ns(stats.hist.mean()),
+            fmt_ns(stats.hist.quantile(0.999) as f64),
+        );
+        results.push((label, stats.throughput()));
+        server.stop();
+    }
+
+    let trust = results[0].1.max(results[1].1);
+    let best_lock = results[2..].iter().map(|r| r.1).fold(0.0f64, f64::max);
+    println!(
+        "\nheadline: delegation/locking throughput ratio = {:.2}x ({dist} dist, {keys} keys)",
+        trust / best_lock
+    );
+    println!("paper (fig 8/9, congested): 5-9x; uncongested: ~1x. See EXPERIMENTS.md.");
+}

@@ -1,0 +1,51 @@
+//! Mini-memcached demo (§7): start the stock and delegated engines side by
+//! side, drive both with the memtier-style client, and print the speedup.
+//!
+//!     cargo run --release --example memcached_demo -- \
+//!         [--keys 10000] [--ops 20000] [--dist zipf] [--write-pct 5]
+
+use trustee::memcache::{run_memtier, EngineKind, McdServer, McdServerConfig, MemtierConfig};
+use trustee::util::cli::Args;
+use trustee::util::stats::fmt_mops;
+
+fn main() {
+    let args = Args::from_env();
+    let keys: u64 = args.get("keys", 10_000);
+    let ops: u64 = args.get("ops", 20_000);
+    let dist = args.get_str("dist", "zipf");
+    let write_pct: u32 = args.get("write-pct", 5);
+
+    println!("== mini-memcached: stock (locks) vs Trust<T> (delegated shards) ==");
+    println!("keys={keys} ops={ops} dist={dist} writes={write_pct}% pipeline=48");
+
+    let mut tputs = Vec::new();
+    for engine in [EngineKind::Stock, EngineKind::Trust { shards: 8 }] {
+        let label = engine.label();
+        let server = McdServer::start(McdServerConfig {
+            workers: 4,
+            dedicated: 0,
+            engine,
+            addr: "127.0.0.1:0".into(),
+        });
+        server.prefill(keys, 16);
+        let stats = run_memtier(&MemtierConfig {
+            addr: server.addr(),
+            threads: 2,
+            pipeline: 48,
+            ops_per_thread: ops / 2,
+            keys,
+            dist: dist.clone(),
+            write_pct,
+            val_len: 16,
+            seed: 0xDEC0,
+        });
+        assert_eq!(stats.misses, 0, "prefilled keys must not miss");
+        println!("{label:<12} {:>14}  ({} ops in {:.2}s)",
+                 fmt_mops(stats.throughput()), stats.ops,
+                 stats.elapsed.as_secs_f64());
+        tputs.push(stats.throughput());
+        server.stop();
+    }
+    println!("\ndelegated/stock speedup: {:.2}x (paper fig 10/11: up to 5-9x under contention)",
+             tputs[1] / tputs[0]);
+}

@@ -1,0 +1,129 @@
+//! The L1/L2 extension as an application: a "counter farm" property whose
+//! trustee applies whole delegation batches through the AOT-compiled
+//! JAX + Pallas engine (PJRT CPU) — Python never runs at serving time.
+//!
+//! A `BatchEngine` (65536 counters) is entrusted to worker 0; client
+//! fibers on the other workers submit windowed fetch-and-add ops; the
+//! trustee groups them into batches of 256 and executes one XLA call per
+//! batch. Numerics are verified against a scalar oracle at the end.
+//!
+//!     make artifacts && cargo run --release --example xla_counter_farm
+
+use trustee::runtime::xla_exec::BatchEngine;
+use trustee::runtime::Runtime;
+use trustee::util::stats::fmt_mops;
+use trustee::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The entrusted property: the XLA engine plus an op staging buffer.
+struct CounterFarm {
+    engine: BatchEngine,
+    staged_keys: Vec<i32>,
+    staged_deltas: Vec<i32>,
+    flushed_ops: u64,
+}
+
+impl CounterFarm {
+    /// Stage one op; flush a full batch through XLA when the batch fills.
+    fn add(&mut self, key: i32, delta: i32) {
+        self.staged_keys.push(key);
+        self.staged_deltas.push(delta);
+        if self.staged_keys.len() == self.engine.batch_size() {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.staged_keys.is_empty() {
+            return;
+        }
+        self.engine
+            .apply_batch(&self.staged_keys, &self.staged_deltas)
+            .expect("xla batch");
+        self.flushed_ops += self.staged_keys.len() as u64;
+        self.staged_keys.clear();
+        self.staged_deltas.clear();
+    }
+}
+
+fn main() {
+    let artifact = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/batch_engine.hlo.txt");
+    if !artifact.exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    const N: usize = 65536;
+    const OPS_PER_CLIENT: u64 = 4096;
+
+    let rt = Runtime::builder().workers(3).build();
+    // Build the engine here, then move the whole object graph to the
+    // trustee via entrust (see xla_exec.rs's Send rationale).
+    let engine = BatchEngine::new(&artifact, N, 256).expect("engine");
+    let farm = rt.trustee(0).entrust(CounterFarm {
+        engine,
+        staged_keys: Vec::new(),
+        staged_deltas: Vec::new(),
+        flushed_ops: 0,
+    });
+
+    // Oracle bookkeeping: every client records its (key, delta) stream.
+    let delta_sum = Arc::new(AtomicU64::new(0));
+    let done = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    for w in 1..3u64 {
+        let farm = farm.clone();
+        let ds = delta_sum.clone();
+        let done = done.clone();
+        rt.spawn_on(w as usize, move || {
+            let mut rng = Rng::new(0xFA23 ^ w);
+            for _ in 0..OPS_PER_CLIENT {
+                let key = rng.below(N as u64) as i32;
+                let delta = (rng.below(9) + 1) as i32;
+                ds.fetch_add(delta as u64, Ordering::Relaxed);
+                farm.apply_forget(move |f| f.add(key, delta));
+            }
+            done.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+    while done.load(Ordering::Acquire) != 2 {
+        std::thread::yield_now();
+    }
+
+    // Fire-and-forget ops may still be in flight after the issuing fibers
+    // finish; poll until every op has been flushed, then verify
+    // conservation: sum(table) must equal the sum of all deltas issued.
+    let expected = 2 * OPS_PER_CLIENT;
+    let (flushed, table_sum) = loop {
+        let farm2 = farm.clone();
+        let (flushed, sum) = rt.block_on(1, move || {
+            farm2.apply(|f| {
+                f.flush(); // drain any partial batch
+                let sum: i64 = f.engine.table().unwrap().iter().map(|&v| v as i64).sum();
+                (f.flushed_ops, sum as u64)
+            })
+        });
+        if flushed == expected {
+            break (flushed, sum);
+        }
+        std::thread::yield_now();
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(flushed, expected, "all ops must flush");
+    assert_eq!(
+        table_sum,
+        delta_sum.load(Ordering::Acquire),
+        "XLA table must conserve the delta sum"
+    );
+    println!(
+        "counter farm: {} ops through the XLA batch engine in {:.2}s ({})",
+        flushed,
+        secs,
+        fmt_mops(flushed as f64 / secs)
+    );
+    println!("conservation check passed: sum(table) == sum(deltas) == {table_sum}");
+    drop(farm);
+    rt.shutdown();
+}

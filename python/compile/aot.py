@@ -1,0 +1,50 @@
+"""AOT lowering: JAX -> HLO *text* -> artifacts/*.hlo.txt.
+
+HLO text (NOT ``lowered.compile().serialize()`` or proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+"""
+
+import argparse
+import pathlib
+
+from jax._src.lib import xla_client as xc
+
+from .model import AOT_VARIANTS, lowered
+
+
+def to_hlo_text(low) -> str:
+    mlir_mod = low.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path for the primary artifact; variants are "
+                         "written as siblings named <variant>.hlo.txt")
+    args = ap.parse_args()
+    primary = pathlib.Path(args.out)
+    outdir = primary.parent
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    for name, shape in AOT_VARIANTS.items():
+        text = to_hlo_text(lowered(**shape))
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {name}: {len(text)} chars -> {path} (n={shape['n']}, b={shape['b']})")
+
+    # The Makefile's stamp target: primary artifact aliases batch_engine.
+    primary.write_text((outdir / "batch_engine.hlo.txt").read_text())
+    print(f"wrote primary artifact {primary}")
+
+
+if __name__ == "__main__":
+    main()

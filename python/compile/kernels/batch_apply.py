@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: trustee-side batched apply of delegated operations.
+
+The paper's trustee applies the N closures of a request batch *sequentially*
+(§5.2); for homogeneous operations (the fetch-and-add microbenchmark of
+§6.1, counter/accumulator properties) the whole batch can instead be applied
+as one kernel launch. This kernel is the Trust<T> batch engine's hot spot:
+
+    for i in 0..B:                        # in submission order
+        old[i]        = table[idx[i]]
+        table[idx[i]] = old[i] + delta[i]
+
+In-order semantics matter: duplicate indices must observe one another
+(two increments of a hot key in one batch accumulate, and each sees the
+running value), exactly as the trustee's sequential closure execution would.
+A vectorized scatter-add would break the *fetch* half for duplicates, so the
+kernel is a `fori_loop` over the batch with the table resident in VMEM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the table block plus
+the three B-vectors are the VMEM working set; a real-TPU deployment tiles
+`table` via BlockSpec so a shard's counters stay resident across batches —
+the analogue of the paper keeping the property hot in the trustee's cache.
+Lowered with interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _batch_apply_kernel(table_ref, idx_ref, delta_ref, table_out_ref, old_out_ref):
+    """Apply B fetch-and-add ops to the table, in order."""
+    # Copy the table block into the output ref once; then mutate in place.
+    table_out_ref[...] = table_ref[...]
+
+    def body(i, _):
+        j = idx_ref[i]
+        old = table_out_ref[j]
+        old_out_ref[i] = old
+        table_out_ref[j] = old + delta_ref[i]
+        return _
+
+    jax.lax.fori_loop(0, idx_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def batch_apply(table, idx, delta):
+    """Pallas-backed batched fetch-and-add.
+
+    Args:
+      table: (N,) int32 — the entrusted counter table (one shard).
+      idx:   (B,) int32 — target index per op, in submission order.
+      delta: (B,) int32 — increment per op.
+
+    Returns:
+      (new_table, old): the updated table and the pre-increment values —
+      the batch of delegation *responses*.
+    """
+    n = table.shape[0]
+    b = idx.shape[0]
+    return pl.pallas_call(
+        _batch_apply_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ),
+        interpret=True,  # CPU PJRT: Mosaic custom-calls are TPU-only
+    )(table, idx, delta)
+
+
+def _shard_route_kernel(keys_ref, out_ref, *, n_shards):
+    """FNV-1a-style mix of each key -> shard id (vectorized, no loop)."""
+    k = keys_ref[...].astype(jnp.uint32)
+    h = (k ^ jnp.uint32(2166136261)) * jnp.uint32(16777619)
+    h = (h ^ (h >> 13)) * jnp.uint32(0x5BD1E995)
+    h = h ^ (h >> 15)
+    out_ref[...] = (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def shard_route(keys, n_shards):
+    """Route a batch of keys to shards (the L3 router's hash, vectorized)."""
+    b = keys.shape[0]
+    return pl.pallas_call(
+        functools.partial(_shard_route_kernel, n_shards=n_shards),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(keys)

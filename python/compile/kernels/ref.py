@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the executable spec: `batch_apply_ref` expresses the trustee's
+sequential closure application directly with `lax.scan` (carrying the table
+through each op), with none of the Pallas machinery.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_apply_ref(table, idx, delta):
+    """Sequential-semantics batched fetch-and-add, as a scan."""
+
+    def step(tbl, op):
+        j, d = op
+        old = tbl[j]
+        return tbl.at[j].set(old + d), old
+
+    new_table, old = jax.lax.scan(step, table, (idx, delta))
+    return new_table, old
+
+
+def shard_route_ref(keys, n_shards):
+    """Same FNV-1a-style mix as the kernel, in plain jnp."""
+    k = keys.astype(jnp.uint32)
+    h = (k ^ jnp.uint32(2166136261)) * jnp.uint32(16777619)
+    h = (h ^ (h >> 13)) * jnp.uint32(0x5BD1E995)
+    h = h ^ (h >> 15)
+    return (h % jnp.uint32(n_shards)).astype(jnp.int32)

@@ -1,0 +1,64 @@
+"""L2: the trustee batch-engine compute graph.
+
+Composes the L1 kernels into the function the Rust runtime executes per
+delegation batch: route each op's key to a shard-local index, apply the
+batch of fetch-and-adds in submission order, and gather the responses.
+For read ops (`delta == 0`) the fetch-and-add *is* the read, so one graph
+serves the paper's mixed GET/PUT-style batches.
+
+The whole step is one jit so XLA fuses routing, the Pallas batch-apply,
+and the response gather into a single executable — this is the module AOT
+lowering hands to the Rust PJRT runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.batch_apply import batch_apply, shard_route
+
+
+def engine_step(table, keys, delta):
+    """One trustee batch: (table, keys, delta) -> (new_table, old, shard).
+
+    Args:
+      table: (N,) int32 counter table for this trustee's shard group.
+      keys:  (B,) int32 raw op keys (pre-hash).
+      delta: (B,) int32 increments (0 = pure fetch/read).
+
+    Returns a tuple:
+      new_table: (N,) int32
+      old:       (B,) int32 — pre-increment values (the responses)
+      shard:     (B,) int32 — routing decision per op (for L3 telemetry)
+    """
+    n = table.shape[0]
+    shard = shard_route(keys, 64)
+    # Map keys into table indices (the shard's local slot space).
+    idx = (keys.astype(jnp.uint32) % jnp.uint32(n)).astype(jnp.int32)
+    new_table, old = batch_apply(table, idx, delta)
+    return new_table, old, shard
+
+
+def engine_step_ref(table, keys, delta):
+    """Oracle composition used by the pytest suite."""
+    from .kernels.ref import batch_apply_ref, shard_route_ref
+
+    n = table.shape[0]
+    shard = shard_route_ref(keys, 64)
+    idx = (keys.astype(jnp.uint32) % jnp.uint32(n)).astype(jnp.int32)
+    new_table, old = batch_apply_ref(table, idx, delta)
+    return new_table, old, shard
+
+
+#: Shapes the AOT pipeline compiles (one executable per variant, as the
+#: runtime design prescribes: "one compiled executable per model variant").
+AOT_VARIANTS = {
+    "batch_engine": dict(n=65536, b=256),
+    "batch_engine_small": dict(n=1024, b=32),
+}
+
+
+def lowered(n, b):
+    """jax.jit(...).lower(...) for a (table=n, batch=b) variant."""
+    spec_t = jax.ShapeDtypeStruct((n,), jnp.int32)
+    spec_b = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return jax.jit(engine_step).lower(spec_t, spec_b, spec_b)

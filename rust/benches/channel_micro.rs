@@ -1,0 +1,76 @@
+//! E13 — channel microbenchmarks behind the paper's §6.1.2 capacity claim:
+//! "even MCSLocks ... offer at best 2.5 MOPs. By comparison, a single
+//! Trust<T> trustee will reliably offer 25 MOPs" — a ~10× single-object
+//! capacity ratio.
+//!
+//! Measures: (1) single-pair round-trip latency (batch = 1),
+//! (2) single-trustee throughput under windowed async load from all
+//! clients, (3) single MCS lock and single Mutex throughput, and the
+//! resulting trustee/MCS capacity ratio.
+//!
+//! Usage: cargo bench --bench channel_micro -- [--ops N] [--threads N]
+
+use trustee::bench::fadd::{run_async, run_lock_by_name, FaddConfig};
+use trustee::bench::print_table;
+use trustee::runtime::Runtime;
+use trustee::util::cli::Args;
+use trustee::util::stats::fmt_ns;
+use std::time::Instant;
+
+fn round_trip_latency(ops: u64) -> f64 {
+    let rt = Runtime::builder().workers(2).build();
+    let ct = rt.block_on(0, || trustee::trust::local_trustee().entrust(0u64));
+    let ct2 = ct.clone();
+    let secs = rt.block_on(1, move || {
+        // Warm up the edge.
+        for _ in 0..100 {
+            ct2.apply(|c| *c += 1);
+        }
+        let t0 = Instant::now();
+        for _ in 0..ops {
+            ct2.apply(|c| *c += 1);
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    drop(ct);
+    rt.shutdown();
+    secs / ops as f64 * 1e9
+}
+
+fn main() {
+    let args = Args::from_env();
+    let ops: u64 = args.get("ops", 20_000);
+    let threads: usize = args.get("threads", 4);
+
+    let rtt = round_trip_latency(ops.min(20_000));
+
+    // Single object = maximal contention: the §6.1.2 capacity comparison.
+    let cfg = FaddConfig {
+        threads,
+        objects: 1,
+        ops_per_thread: ops,
+        window: 128,
+        ..Default::default()
+    };
+    let mcs = run_lock_by_name("mcs", &cfg);
+    let mutex = run_lock_by_name("mutex", &cfg);
+    let trustee_async = run_async(&FaddConfig { dedicated: 1, ..cfg.clone() });
+
+    print_table(
+        "E13: single-object capacity (paper: MCS ~2.5 MOPs vs trustee ~25 MOPs, ~10x)",
+        &["metric", "value"],
+        &[
+            vec!["apply() round-trip".into(), fmt_ns(rtt)],
+            vec!["single MCS lock".into(), format!("{:.3} MOPs", mcs.mops())],
+            vec!["single Mutex".into(), format!("{:.3} MOPs", mutex.mops())],
+            vec![
+                "single trustee (async, dedicated)".into(),
+                format!("{:.3} MOPs", trustee_async.mops()),
+            ],
+            vec![
+                "trustee/MCS capacity ratio".into(),
+                format!("{:.2}x", trustee_async.mops() / mcs.mops()),
+            ],
+        ],
+    );
+}

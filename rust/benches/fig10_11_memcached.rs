@@ -1,0 +1,83 @@
+//! Figures 10 & 11: mini-memcached throughput vs. table size, for 1%, 5%
+//! and 10% writes — stock (lock-based) vs. Trust\<T\> (delegated shards).
+//!
+//! `--dist uniform` regenerates Fig. 10; `--dist zipf` regenerates Fig. 11.
+//!
+//! Usage: cargo bench --bench fig10_11_memcached -- \
+//!            [--dist uniform|zipf] [--sizes 100,10000,...] [--pcts 1,5,10]
+//!            [--quick]
+
+use trustee::bench::print_table;
+use trustee::memcache::{run_memtier, EngineKind, McdServer, McdServerConfig, MemtierConfig};
+use trustee::util::cli::Args;
+
+fn run_one(engine: EngineKind, keys: u64, dist: &str, write_pct: u32, ops: u64) -> f64 {
+    let server = McdServer::start(McdServerConfig {
+        workers: 4,
+        dedicated: 0,
+        engine,
+        addr: "127.0.0.1:0".into(),
+    });
+    server.prefill(keys, 16);
+    let stats = run_memtier(&MemtierConfig {
+        addr: server.addr(),
+        threads: 2,
+        pipeline: 48, // the paper's memtier pipelining
+        ops_per_thread: ops,
+        keys,
+        dist: dist.into(),
+        write_pct,
+        val_len: 16,
+        seed: 0x3E3C,
+    });
+    let tput = stats.throughput();
+    server.stop();
+    tput
+}
+
+fn main() {
+    let args = Args::from_env();
+    let dist_arg = args.get_str("dist", "both");
+    let quick = args.flag("quick");
+    let dists: Vec<String> = if dist_arg == "both" {
+        vec!["uniform".into(), "zipf".into()]
+    } else {
+        vec![dist_arg]
+    };
+    for dist in dists {
+    let default_sizes: &[u64] = if quick {
+        &[100, 10_000]
+    } else {
+        &[100, 1_000, 10_000, 100_000]
+    };
+    let sizes = args.get_list::<u64>("sizes", default_sizes);
+    let pcts = args.get_list::<u32>("pcts", if quick { &[5] } else { &[1, 5, 10] });
+    let ops: u64 = args.get("ops", if quick { 2_000 } else { 5_000 });
+
+    println!("# Figure {} reproduction: mini-memcached throughput (kOPs) vs table size",
+             if dist == "uniform" { "10 (uniform)" } else { "11 (zipfian)" });
+    println!("# S = stock (locks), T = Trust<T> delegated shards; paper pipeline=48");
+
+    let mut header = vec!["keys".to_string()];
+    for &p in &pcts {
+        header.push(format!("S-{p}%w"));
+        header.push(format!("T-{p}%w"));
+        header.push(format!("speedup-{p}%w"));
+    }
+    let mut rows = Vec::new();
+    for &keys in &sizes {
+        let mut row = vec![keys.to_string()];
+        for &pct in &pcts {
+            let s = run_one(EngineKind::Stock, keys, &dist, pct, ops);
+            let t = run_one(EngineKind::Trust { shards: 8 }, keys, &dist, pct, ops);
+            row.push(format!("{:.1}", s / 1e3));
+            row.push(format!("{:.1}", t / 1e3));
+            row.push(format!("{:.2}x", t / s));
+        }
+        eprintln!("done keys={keys}");
+        rows.push(row);
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(&format!("fig10/11 {dist}"), &header_refs, &rows);
+    }
+}

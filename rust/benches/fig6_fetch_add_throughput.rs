@@ -1,0 +1,82 @@
+//! Figure 6a/6b: fetch-and-add throughput vs. object count.
+//!
+//! Series: Mutex / spinlock / MCS / flat-combining (TCLocks stand-in,
+//! Fig 6a only in the paper) / Trust (blocking fibers) / Async
+//! (non-blocking), each in shared and dedicated-trustee flavors.
+//!
+//! Usage: cargo bench --bench fig6_fetch_add_throughput -- \
+//!            [--dist uniform|zipf] [--threads N] [--ops N] [--sizes 1,4,...]
+//!            [--quick]
+
+use trustee::bench::fadd::{run_async, run_lock_by_name, run_trust, FaddConfig};
+use trustee::bench::print_table;
+use trustee::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let dist_arg = args.get_str("dist", "both");
+    let quick = args.flag("quick");
+    let threads: usize = args.get("threads", 4);
+    let ops: u64 = args.get("ops", if quick { 2_000 } else { 10_000 });
+    let default_sizes: &[u64] = if quick {
+        &[1, 8, 64]
+    } else {
+        &[1, 2, 4, 8, 16, 32, 64, 128, 256, 1024]
+    };
+    let sizes = args.get_list::<u64>("sizes", default_sizes);
+    let fibers: usize = args.get("fibers", 16);
+    let dedicated: usize = args.get("dedicated", 1);
+
+    let dists: Vec<&str> = if dist_arg == "both" { vec!["uniform", "zipf"] } else { vec![dist_arg.as_str()] };
+    for dist in dists {
+    let dist = dist.to_string();
+    println!("# Figure 6{} reproduction: fetch-and-add throughput (MOPs) vs object count",
+             if dist == "uniform" { "a (uniform)" } else { "b (zipfian a=1)" });
+    println!("# threads={threads} ops/thread={ops} dist={dist} (paper: 128 threads, 1M ops)");
+
+    let mut header = vec!["objects".to_string()];
+    let engines = ["mutex", "spin", "mcs", "fc"];
+    for e in engines {
+        header.push(e.to_string());
+    }
+    header.extend([
+        "trust-shared".to_string(),
+        format!("trust-ded{dedicated}"),
+        "async-shared".to_string(),
+        format!("async-ded{dedicated}"),
+    ]);
+
+    let mut rows = Vec::new();
+    for &objects in &sizes {
+        let base = FaddConfig {
+            threads,
+            objects: objects as usize,
+            ops_per_thread: ops,
+            dist: dist.clone(),
+            fibers,
+            ..Default::default()
+        };
+        let mut row = vec![objects.to_string()];
+        for name in engines {
+            let r = run_lock_by_name(name, &base);
+            row.push(format!("{:.3}", r.mops()));
+        }
+        let r = run_trust(&base);
+        row.push(format!("{:.3}", r.mops()));
+        let r = run_trust(&FaddConfig { dedicated, ..base.clone() });
+        row.push(format!("{:.3}", r.mops()));
+        let r = run_async(&base);
+        row.push(format!("{:.3}", r.mops()));
+        let r = run_async(&FaddConfig { dedicated, ..base.clone() });
+        row.push(format!("{:.3}", r.mops()));
+        eprintln!("done objects={objects}");
+        rows.push(row);
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(
+        &format!("fig6 {dist}: MOPs by engine and object count"),
+        &header_refs,
+        &rows,
+    );
+    }
+}

@@ -1,0 +1,84 @@
+//! Figure 7a/7b: mean latency vs. offered load (plus the §6.2 tail-latency
+//! observations: lock p99.9 ≈ 10× mean; delegation p99.9 ≈ 2.5× mean).
+//!
+//! Series: spinlock / Mutex / MCS / Trust shared / Trust dedicated.
+//!
+//! Usage: cargo bench --bench fig7_fetch_add_latency -- \
+//!            [--dist uniform|zipf] [--threads N] [--loads 10000,...] [--quick]
+
+use trustee::bench::latency::{run_latency_lock, run_latency_trust, LatencyConfig};
+use trustee::bench::print_table;
+use trustee::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let dist_arg = args.get_str("dist", "both");
+    let quick = args.flag("quick");
+    let threads: usize = args.get("threads", 4);
+    let dists: Vec<String> = if dist_arg == "both" {
+        vec!["uniform".into(), "zipf".into()]
+    } else {
+        vec![dist_arg]
+    };
+    for dist in dists {
+    // Paper: 64 objects uniform / 1,000,000 objects zipfian.
+    let objects: usize = args.get(
+        "objects",
+        if dist == "uniform" { 64 } else { 100_000 },
+    );
+    let default_loads: &[f64] = if quick {
+        &[20_000.0, 200_000.0]
+    } else {
+        &[10_000.0, 30_000.0, 100_000.0, 300_000.0, 1_000_000.0, 3_000_000.0]
+    };
+    let loads = args.get_list::<f64>("loads", default_loads);
+    let secs: f64 = args.get("secs", 0.4);
+    let dedicated: usize = args.get("dedicated", 1);
+
+    println!("# Figure 7{} reproduction: mean latency (us) vs offered load",
+             if dist == "uniform" { "a (uniform, 64 objects)" } else { "b (zipfian)" });
+    println!("# threads={threads} objects={objects} (paper: 8 dedicated / 64 shared trustees)");
+
+    let header = vec![
+        "offered_ops", "spin_mean", "spin_p999", "mutex_mean", "mutex_p999",
+        "mcs_mean", "mcs_p999", "trust_shared_mean", "trust_shared_p999",
+        "trust_ded_mean", "trust_ded_p999", "achieved_trust",
+    ];
+    let mut rows = Vec::new();
+    for &load in &loads {
+        let ops_per_thread =
+            ((load * secs / threads as f64) as u64).clamp(200, 50_000);
+        let cfg = LatencyConfig {
+            threads,
+            objects,
+            offered_ops_per_sec: load,
+            ops_per_thread,
+            dist: dist.clone(),
+            seed: 0x717,
+            dedicated: 0,
+        };
+        let mut row = vec![format!("{load:.0}")];
+        for name in ["spin", "mutex", "mcs"] {
+            let r = run_latency_lock(name, &cfg);
+            row.push(format!("{:.1}", r.mean_us()));
+            row.push(format!("{:.1}", r.p999_us()));
+        }
+        let r = run_latency_trust(&cfg);
+        row.push(format!("{:.1}", r.mean_us()));
+        row.push(format!("{:.1}", r.p999_us()));
+        let rd = run_latency_trust(&LatencyConfig { dedicated, ..cfg.clone() });
+        row.push(format!("{:.1}", rd.mean_us()));
+        row.push(format!("{:.1}", rd.p999_us()));
+        row.push(format!("{:.0}", r.achieved_ops_per_sec));
+        eprintln!("done load={load}");
+        rows.push(row);
+    }
+    print_table(
+        &format!("fig7 {dist}: latency vs offered load"),
+        &header,
+        &rows,
+    );
+    println!("\n# E5 (tail latency, 6.2): compare *_p999 columns to *_mean --");
+    println!("# paper: locks ~10x mean at low load, delegation ~2.5x mean.");
+    }
+}

@@ -1,0 +1,89 @@
+//! Figure 8a/8b: key-value store throughput vs. table size (5% writes).
+//!
+//! Series: TrustD (dedicated trustees, the paper's Trust16/Trust24 scaled
+//! to this box), TrustS (shared), Dashmap-like (SwiftMap), sharded Mutex,
+//! sharded RwLock.
+//!
+//! Usage: cargo bench --bench fig8_kv_table_size -- \
+//!            [--dist uniform|zipf] [--sizes 1,10,...] [--write-pct 5] [--quick]
+
+use trustee::bench::print_table;
+use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
+use trustee::util::cli::Args;
+
+fn run_one(
+    backend: BackendKind,
+    dedicated: usize,
+    keys: u64,
+    dist: &str,
+    write_pct: u32,
+    ops: u64,
+    client_threads: usize,
+) -> f64 {
+    let server = KvServer::start(KvServerConfig {
+        workers: 4,
+        dedicated,
+        backend,
+        addr: "127.0.0.1:0".into(),
+    });
+    server.prefill(keys, 16);
+    let stats = run_load(&LoadConfig {
+        addr: server.addr(),
+        threads: client_threads,
+        pipeline: 32,
+        ops_per_thread: ops,
+        keys,
+        dist: dist.into(),
+        write_pct,
+        val_len: 16,
+        seed: 0xF18,
+    });
+    let tput = stats.throughput();
+    server.stop();
+    tput
+}
+
+fn main() {
+    let args = Args::from_env();
+    let dist_arg = args.get_str("dist", "both");
+    let quick = args.flag("quick");
+    let write_pct: u32 = args.get("write-pct", 5);
+    let dists: Vec<String> = if dist_arg == "both" {
+        vec!["uniform".into(), "zipf".into()]
+    } else {
+        vec![dist_arg]
+    };
+    for dist in dists {
+    let default_sizes: &[u64] = if quick {
+        &[10, 1_000]
+    } else {
+        &[1, 10, 100, 1_000, 10_000, 100_000, 1_000_000]
+    };
+    let sizes = args.get_list::<u64>("sizes", default_sizes);
+    let ops: u64 = args.get("ops", if quick { 2_000 } else { 5_000 });
+    let client_threads: usize = args.get("client-threads", 2);
+
+    println!("# Figure 8{} reproduction: KV store throughput (kOPs) vs table size, {write_pct}% writes",
+             if dist == "uniform" { "a (uniform)" } else { "b (zipfian)" });
+    println!("# paper: Trust16/Trust24 dedicated trustees; here TrustD2 = 2 dedicated of 4 workers");
+
+    let header = vec!["keys", "TrustD2", "TrustS", "Dashmap-like", "Mutex", "RwLock"];
+    let mut rows = Vec::new();
+    for &keys in &sizes {
+        let mut row = vec![keys.to_string()];
+        for (backend, ded) in [
+            (BackendKind::Trust { shards: 8 }, 2usize),
+            (BackendKind::Trust { shards: 8 }, 0),
+            (BackendKind::Swift, 0),
+            (BackendKind::Mutex, 0),
+            (BackendKind::RwLock, 0),
+        ] {
+            let tput = run_one(backend, ded, keys, &dist, write_pct, ops, client_threads);
+            row.push(format!("{:.1}", tput / 1e3));
+        }
+        eprintln!("done keys={keys}");
+        rows.push(row);
+    }
+    print_table(&format!("fig8 {dist}: kOPs vs table size"), &header, &rows);
+    }
+}

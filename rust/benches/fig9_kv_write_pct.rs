@@ -1,0 +1,69 @@
+//! Figure 9a/9b: key-value store throughput vs. write percentage.
+//!
+//! Paper setup: 1,000 keys uniform / 10,000,000 keys zipfian — "table
+//! sizes where lock-based approaches hold an advantage in Fig. 8".
+//!
+//! Usage: cargo bench --bench fig9_kv_write_pct -- \
+//!            [--dist uniform|zipf] [--keys N] [--pcts 0,5,25,...] [--quick]
+
+use trustee::bench::print_table;
+use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
+use trustee::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let dist_arg = args.get_str("dist", "both");
+    let quick = args.flag("quick");
+    let dists: Vec<String> = if dist_arg == "both" {
+        vec!["uniform".into(), "zipf".into()]
+    } else {
+        vec![dist_arg]
+    };
+    for dist in dists {
+    let keys: u64 = args.get("keys", if dist == "uniform" { 1_000 } else { 100_000 });
+    let default_pcts: &[u32] = if quick { &[5, 50] } else { &[0, 5, 25, 50, 75, 100] };
+    let pcts = args.get_list::<u32>("pcts", default_pcts);
+    let ops: u64 = args.get("ops", if quick { 2_000 } else { 5_000 });
+    let client_threads: usize = args.get("client-threads", 2);
+
+    println!("# Figure 9{} reproduction: KV store throughput (kOPs) vs write %, {keys} keys",
+             if dist == "uniform" { "a (uniform)" } else { "b (zipfian)" });
+
+    let header = vec!["write_pct", "TrustD2", "TrustS", "Dashmap-like", "Mutex", "RwLock"];
+    let mut rows = Vec::new();
+    for &pct in &pcts {
+        let mut row = vec![pct.to_string()];
+        for (backend, ded) in [
+            (BackendKind::Trust { shards: 8 }, 2usize),
+            (BackendKind::Trust { shards: 8 }, 0),
+            (BackendKind::Swift, 0),
+            (BackendKind::Mutex, 0),
+            (BackendKind::RwLock, 0),
+        ] {
+            let server = KvServer::start(KvServerConfig {
+                workers: 4,
+                dedicated: ded,
+                backend,
+                addr: "127.0.0.1:0".into(),
+            });
+            server.prefill(keys, 16);
+            let stats = run_load(&LoadConfig {
+                addr: server.addr(),
+                threads: client_threads,
+                pipeline: 32,
+                ops_per_thread: ops,
+                keys,
+                dist: dist.clone(),
+                write_pct: pct,
+                val_len: 16,
+                seed: 0xF19,
+            });
+            row.push(format!("{:.1}", stats.throughput() / 1e3));
+            server.stop();
+        }
+        eprintln!("done write_pct={pct}");
+        rows.push(row);
+    }
+    print_table(&format!("fig9 {dist}: kOPs vs write %"), &header, &rows);
+    }
+}

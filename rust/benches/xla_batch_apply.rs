@@ -1,0 +1,86 @@
+//! E14 — the L1/L2 extension: trustee-side batched apply through the
+//! AOT-compiled XLA engine (JAX + Pallas, PJRT CPU) vs. the scalar
+//! trustee loop applying the same operations one closure at a time.
+//!
+//! Run `make artifacts` first. Usage:
+//!     cargo bench --bench xla_batch_apply -- [--batches N]
+
+use trustee::bench::print_table;
+use trustee::runtime::xla_exec::BatchEngine;
+use trustee::util::cli::Args;
+use trustee::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    let batches: u64 = args.get("batches", 200);
+
+    let artifact = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/batch_engine.hlo.txt");
+    if !artifact.exists() {
+        eprintln!("SKIP: {artifact:?} missing — run `make artifacts` first");
+        return;
+    }
+
+    const N: usize = 65536;
+    const B: usize = 256;
+    let mut eng = BatchEngine::new(&artifact, N, B).expect("engine");
+    let mut rng = Rng::new(0xBA7C);
+
+    // Pre-generate the op stream.
+    let mut keys = Vec::with_capacity((batches as usize) * B);
+    let mut deltas = Vec::with_capacity((batches as usize) * B);
+    for _ in 0..batches as usize * B {
+        keys.push(rng.below(N as u64) as i32);
+        deltas.push((rng.below(5) + 1) as i32);
+    }
+
+    // Scalar trustee loop (per-op closure application over a Vec table).
+    let mut table = vec![0i32; N];
+    let t0 = Instant::now();
+    let mut checksum = 0i64;
+    for i in 0..keys.len() {
+        let k = keys[i] as usize;
+        let old = table[k];
+        checksum = checksum.wrapping_add(old as i64);
+        table[k] = old + deltas[i];
+    }
+    let scalar_secs = t0.elapsed().as_secs_f64();
+
+    // Warm up the executable, then run the batch engine.
+    eng.apply_batch(&keys[..B], &deltas[..B]).unwrap();
+    let mut eng = BatchEngine::new(&artifact, N, B).expect("engine reset");
+    let t0 = Instant::now();
+    let mut xla_checksum = 0i64;
+    for b in 0..batches as usize {
+        let lo = b * B;
+        let old = eng.apply_batch(&keys[lo..lo + B], &deltas[lo..lo + B]).unwrap();
+        for o in old {
+            xla_checksum = xla_checksum.wrapping_add(o as i64);
+        }
+    }
+    let xla_secs = t0.elapsed().as_secs_f64();
+
+    assert_eq!(checksum, xla_checksum, "engines disagree");
+    assert_eq!(eng.table().unwrap(), table, "final tables disagree");
+
+    let total_ops = (batches as usize * B) as f64;
+    print_table(
+        "E14: batched apply — scalar trustee loop vs AOT XLA engine (numerics verified equal)",
+        &["engine", "ops/s", "ns/op"],
+        &[
+            vec![
+                "scalar loop".into(),
+                format!("{:.0}", total_ops / scalar_secs),
+                format!("{:.1}", scalar_secs / total_ops * 1e9),
+            ],
+            vec![
+                format!("xla batch (B={B})"),
+                format!("{:.0}", total_ops / xla_secs),
+                format!("{:.1}", xla_secs / total_ops * 1e9),
+            ],
+        ],
+    );
+    println!("# note: interpret=True Pallas on CPU-PJRT measures *dispatch* cost, not TPU");
+    println!("# perf; see DESIGN.md \"Perf (L1)\" for the VMEM-footprint analysis.");
+}

@@ -1,0 +1,386 @@
+//! Fetch-and-add throughput engines (Figure 6a/6b) for every contender:
+//! std Mutex, spinlock, ticket, MCS, flat-combining (TCLocks stand-in),
+//! Trust (blocking fibers) and Async (non-blocking delegation).
+
+use crate::locks::{FcLock, LockCell, McsLock, RawLock, SpinLock, TicketLock};
+use crate::runtime::Runtime;
+use crate::trust::Trust;
+use crate::util::cache::{pause, CachePadded};
+use crate::util::{KeyDist, Rng};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+/// Configuration for one fetch-and-add run.
+#[derive(Clone, Debug)]
+pub struct FaddConfig {
+    /// Client threads (lock benches) / client workers (delegation).
+    pub threads: usize,
+    /// Number of counters.
+    pub objects: usize,
+    /// Increments per thread.
+    pub ops_per_thread: u64,
+    /// "uniform" or "zipf[:alpha]".
+    pub dist: String,
+    pub seed: u64,
+    /// Trust-specific: dedicated trustee workers (0 = shared mode, every
+    /// worker is both client and trustee, §6.1's *shared*).
+    pub dedicated: usize,
+    /// Trust-specific: concurrent fibers per client worker.
+    pub fibers: usize,
+    /// Async-specific: outstanding requests per client worker.
+    pub window: usize,
+}
+
+impl Default for FaddConfig {
+    fn default() -> Self {
+        FaddConfig {
+            threads: 8,
+            objects: 64,
+            ops_per_thread: 20_000,
+            dist: "uniform".into(),
+            seed: 0xFADD,
+            dedicated: 0,
+            fibers: 16,
+            window: 64,
+        }
+    }
+}
+
+/// Result of one run.
+#[derive(Clone, Copy, Debug)]
+pub struct FaddResult {
+    pub ops: u64,
+    pub secs: f64,
+}
+
+impl FaddResult {
+    pub fn mops(&self) -> f64 {
+        self.ops as f64 / self.secs / 1e6
+    }
+}
+
+/// The checksum every engine must reproduce: each counter ends at its
+/// access count; total increments == threads * ops_per_thread.
+fn check_total(counts: &[u64], cfg: &FaddConfig) {
+    let total: u64 = counts.iter().sum();
+    assert_eq!(
+        total,
+        cfg.threads as u64 * cfg.ops_per_thread,
+        "lost updates detected"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Lock engines
+// ---------------------------------------------------------------------
+
+/// Generic engine over [`RawLock`].
+pub fn run_rawlock<L: RawLock + 'static>(cfg: &FaddConfig) -> FaddResult {
+    let objects: Arc<Vec<CachePadded<LockCell<L, u64>>>> = Arc::new(
+        (0..cfg.objects)
+            .map(|_| CachePadded::new(LockCell::new(0)))
+            .collect(),
+    );
+    run_lock_threads(cfg, objects.clone(), move |objects, obj| {
+        objects[obj].with_lock(|c| {
+            pause(); // the paper's in-critical-section pause
+            *c += 1;
+            *c // fetch
+        });
+    })
+}
+
+/// std::sync::Mutex engine (the paper's "Mutex").
+pub fn run_std_mutex(cfg: &FaddConfig) -> FaddResult {
+    let objects: Arc<Vec<CachePadded<Mutex<u64>>>> = Arc::new(
+        (0..cfg.objects)
+            .map(|_| CachePadded::new(Mutex::new(0)))
+            .collect(),
+    );
+    run_lock_threads(cfg, objects.clone(), move |objects, obj| {
+        let mut c = objects[obj].lock().unwrap();
+        pause();
+        *c += 1;
+        let _ = *c;
+    })
+}
+
+/// Flat-combining engine (TCLocks stand-in).
+pub fn run_flat_combining(cfg: &FaddConfig) -> FaddResult {
+    let objects: Arc<Vec<FcLock<u64>>> =
+        Arc::new((0..cfg.objects).map(|_| FcLock::new(0)).collect());
+    run_lock_threads(cfg, objects.clone(), move |objects, obj| {
+        objects[obj].apply(|c| {
+            pause();
+            *c += 1;
+            *c
+        });
+    })
+}
+
+fn run_lock_threads<O: Send + Sync + 'static>(
+    cfg: &FaddConfig,
+    objects: Arc<O>,
+    op: impl Fn(&O, usize) + Send + Sync + Copy + 'static,
+) -> FaddResult {
+    let barrier = Arc::new(Barrier::new(cfg.threads + 1));
+    let handles: Vec<_> = (0..cfg.threads)
+        .map(|t| {
+            let objects = objects.clone();
+            let barrier = barrier.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (t as u64) << 17);
+                let dist = KeyDist::from_spec(&cfg.dist, cfg.objects as u64);
+                barrier.wait();
+                for _ in 0..cfg.ops_per_thread {
+                    let obj = dist.sample(&mut rng) as usize;
+                    op(&objects, obj);
+                }
+            })
+        })
+        .collect();
+    // Take the clock BEFORE releasing the barrier: on a single-CPU box the
+    // worker threads can run to completion before this thread is scheduled
+    // again, which would make an after-the-barrier timestamp miss the
+    // entire run.
+    let start = Instant::now();
+    barrier.wait();
+    for h in handles {
+        h.join().expect("bench thread");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    FaddResult { ops: cfg.threads as u64 * cfg.ops_per_thread, secs }
+}
+
+/// Convenience dispatch by name (bench CLI).
+pub fn run_lock_by_name(name: &str, cfg: &FaddConfig) -> FaddResult {
+    match name {
+        "mutex" => run_std_mutex(cfg),
+        "spin" => run_rawlock::<SpinLock>(cfg),
+        "ticket" => run_rawlock::<TicketLock>(cfg),
+        "mcs" => run_rawlock::<McsLock>(cfg),
+        "fc" | "tclocks" => run_flat_combining(cfg),
+        other => panic!("unknown lock engine {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Delegation engines
+// ---------------------------------------------------------------------
+
+/// Build the runtime + entrusted counters for a delegation run.
+/// Counters are spread round-robin over trustees (dedicated workers if
+/// `cfg.dedicated > 0`, else all workers).
+fn setup_trust(cfg: &FaddConfig) -> (Runtime, Vec<Trust<u64>>, Vec<usize>) {
+    let workers = cfg.dedicated + cfg.threads;
+    let rt = Runtime::builder()
+        .workers(workers)
+        .dedicated_trustees(cfg.dedicated)
+        .build();
+    let trustee_ids: Vec<usize> = if cfg.dedicated > 0 {
+        (0..cfg.dedicated).collect()
+    } else {
+        (0..workers).collect()
+    };
+    let mut counters = Vec::with_capacity(cfg.objects);
+    for o in 0..cfg.objects {
+        let w = trustee_ids[o % trustee_ids.len()];
+        counters.push(rt.trustee(w).entrust(0u64));
+    }
+    let clients: Vec<usize> = (cfg.dedicated..workers).collect();
+    (rt, counters, clients)
+}
+
+/// Blocking delegation ("Trust" series): `fibers` synchronous fibers per
+/// client worker, each issuing `apply` and suspending.
+pub fn run_trust(cfg: &FaddConfig) -> FaddResult {
+    let (rt, counters, clients) = setup_trust(cfg);
+    let counters = Arc::new(counters);
+    let done = Arc::new(AtomicU64::new(0));
+    let total_fibers = clients.len() * cfg.fibers;
+    let ops_per_fiber = cfg.ops_per_thread * cfg.threads as u64 / total_fibers as u64;
+
+    let start = Instant::now();
+    for (ci, &w) in clients.iter().enumerate() {
+        for f in 0..cfg.fibers {
+            let counters = counters.clone();
+            let done = done.clone();
+            let cfg2 = cfg.clone();
+            let seed = cfg.seed ^ ((ci * cfg.fibers + f) as u64) << 13;
+            rt.spawn_on(w, move || {
+                let mut rng = Rng::new(seed);
+                let dist = KeyDist::from_spec(&cfg2.dist, cfg2.objects as u64);
+                for _ in 0..ops_per_fiber {
+                    let obj = dist.sample(&mut rng) as usize;
+                    counters[obj].apply(|c| {
+                        pause(); // delegated-closure pause (§6.1)
+                        *c += 1;
+                        *c
+                    });
+                }
+                done.fetch_add(1, Ordering::AcqRel);
+            });
+        }
+    }
+    while done.load(Ordering::Acquire) != total_fibers as u64 {
+        std::thread::yield_now();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let ops = ops_per_fiber * total_fibers as u64;
+
+    // Verify: sum of counters equals ops issued.
+    let counts: Vec<u64> = {
+        let counters = counters.clone();
+        let n = counters.len();
+        rt.block_on(clients[0], move || {
+            (0..n).map(|i| counters[i].apply(|c| *c)).collect()
+        })
+    };
+    assert_eq!(counts.iter().sum::<u64>(), ops, "lost updates");
+    drop(counters);
+    rt.shutdown();
+    FaddResult { ops, secs }
+}
+
+/// Non-blocking delegation ("Async" series): one fiber per client worker
+/// keeps `window` apply_then requests outstanding.
+pub fn run_async(cfg: &FaddConfig) -> FaddResult {
+    let (rt, counters, clients) = setup_trust(cfg);
+    let counters = Arc::new(counters);
+    let done = Arc::new(AtomicU64::new(0));
+    let ops_per_client = cfg.ops_per_thread * cfg.threads as u64 / clients.len() as u64;
+
+    let start = Instant::now();
+    for (ci, &w) in clients.iter().enumerate() {
+        let counters = counters.clone();
+        let done = done.clone();
+        let cfg2 = cfg.clone();
+        let seed = cfg.seed ^ (ci as u64) << 11;
+        rt.spawn_on(w, move || {
+            use std::cell::Cell;
+            use std::rc::Rc;
+            let mut rng = Rng::new(seed);
+            let dist = KeyDist::from_spec(&cfg2.dist, cfg2.objects as u64);
+            let completed = Rc::new(Cell::new(0u64));
+            // Park the issuing fiber while the window is full; the first
+            // completion of each response batch resumes it. Busy-yielding
+            // here would starve the trustee thread of CPU on small boxes.
+            let parked: Rc<Cell<Option<crate::fiber::FiberId>>> = Rc::new(Cell::new(None));
+            let mut issued = 0u64;
+            while completed.get() < ops_per_client {
+                while issued < ops_per_client
+                    && issued - completed.get() < cfg2.window as u64
+                {
+                    let obj = dist.sample(&mut rng) as usize;
+                    let comp = completed.clone();
+                    let parked2 = parked.clone();
+                    counters[obj].apply_then(
+                        |c| {
+                            pause();
+                            *c += 1;
+                            *c
+                        },
+                        move |_v| {
+                            comp.set(comp.get() + 1);
+                            if let Some(id) = parked2.take() {
+                                crate::fiber::with_executor(|e| e.resume(id));
+                            }
+                        },
+                    );
+                    issued += 1;
+                }
+                if completed.get() < ops_per_client {
+                    crate::fiber::suspend(|id| parked.set(Some(id)));
+                }
+            }
+            done.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+    while done.load(Ordering::Acquire) != clients.len() as u64 {
+        std::thread::yield_now();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let ops = ops_per_client * clients.len() as u64;
+
+    let counts: Vec<u64> = {
+        let counters = counters.clone();
+        let n = counters.len();
+        rt.block_on(clients[0], move || {
+            (0..n).map(|i| counters[i].apply(|c| *c)).collect()
+        })
+    };
+    assert_eq!(counts.iter().sum::<u64>(), ops, "lost updates");
+    drop(counters);
+    rt.shutdown();
+    FaddResult { ops, secs }
+}
+
+#[allow(unused)]
+fn unused_check(counts: &[u64], cfg: &FaddConfig) {
+    check_total(counts, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(objects: usize) -> FaddConfig {
+        FaddConfig {
+            threads: 2,
+            objects,
+            ops_per_thread: 500,
+            fibers: 2,
+            window: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_lock_engines_count_exactly() {
+        for name in ["mutex", "spin", "ticket", "mcs", "fc"] {
+            let r = run_lock_by_name(name, &quick_cfg(8));
+            assert_eq!(r.ops, 1000, "{name}");
+            assert!(r.secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn trust_engine_counts_exactly() {
+        let r = run_trust(&quick_cfg(4));
+        assert_eq!(r.ops, 1000);
+    }
+
+    #[test]
+    fn async_engine_counts_exactly() {
+        let r = run_async(&quick_cfg(4));
+        assert_eq!(r.ops, 1000);
+    }
+
+    #[test]
+    fn dedicated_trustees_work() {
+        let mut cfg = quick_cfg(4);
+        cfg.dedicated = 1;
+        let r = run_trust(&cfg);
+        assert_eq!(r.ops, 1000);
+        let r = run_async(&cfg);
+        assert_eq!(r.ops, 1000);
+    }
+
+    #[test]
+    fn zipf_dist_works_across_engines() {
+        let mut cfg = quick_cfg(16);
+        cfg.dist = "zipf".into();
+        assert_eq!(run_std_mutex(&cfg).ops, 1000);
+        assert_eq!(run_trust(&cfg).ops, 1000);
+    }
+
+    #[test]
+    fn single_object_contended() {
+        let cfg = quick_cfg(1);
+        assert_eq!(run_std_mutex(&cfg).ops, 1000);
+        assert_eq!(run_trust(&cfg).ops, 1000);
+        assert_eq!(run_async(&cfg).ops, 1000);
+    }
+}

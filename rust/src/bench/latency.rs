@@ -1,0 +1,265 @@
+//! Open-loop latency-vs-offered-load engines (Figure 7a/7b).
+//!
+//! §6.2: "we measure mean latency ... while varying the offered load."
+//! Open-loop accounting: each operation has a scheduled arrival time drawn
+//! from the offered rate; latency = completion − scheduled arrival, so
+//! queueing delay counts when the system falls behind (this is what makes
+//! the near-vertical "capacity" walls visible).
+
+use super::fadd::FaddConfig;
+use crate::locks::{LockCell, McsLock, SpinLock};
+use crate::trust::Trust;
+use crate::util::cache::{pause, CachePadded};
+use crate::util::stats::LatencyHist;
+use crate::util::{KeyDist, Rng};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct LatencyConfig {
+    pub threads: usize,
+    pub objects: usize,
+    /// Total offered load, operations per second (spread over threads).
+    pub offered_ops_per_sec: f64,
+    /// Ops per thread for the run.
+    pub ops_per_thread: u64,
+    pub dist: String,
+    pub seed: u64,
+    pub dedicated: usize,
+}
+
+#[derive(Clone)]
+pub struct LatencyResult {
+    pub hist: LatencyHist,
+    pub achieved_ops_per_sec: f64,
+}
+
+impl LatencyResult {
+    pub fn mean_us(&self) -> f64 {
+        self.hist.mean() / 1000.0
+    }
+
+    pub fn p999_us(&self) -> f64 {
+        self.hist.quantile(0.999) as f64 / 1000.0
+    }
+}
+
+/// Lock-based open-loop run, generic over the protected op.
+fn run_lock_open_loop<O: Send + Sync + 'static>(
+    cfg: &LatencyConfig,
+    objects: Arc<O>,
+    op: impl Fn(&O, usize) + Send + Sync + Copy + 'static,
+) -> LatencyResult {
+    let per_thread_rate = cfg.offered_ops_per_sec / cfg.threads as f64;
+    let interval = Duration::from_secs_f64(1.0 / per_thread_rate);
+    let barrier = Arc::new(Barrier::new(cfg.threads + 1));
+    let handles: Vec<_> = (0..cfg.threads)
+        .map(|t| {
+            let objects = objects.clone();
+            let barrier = barrier.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (t as u64) << 9);
+                let dist = KeyDist::from_spec(&cfg.dist, cfg.objects as u64);
+                let mut hist = LatencyHist::new();
+                barrier.wait();
+                let start = Instant::now();
+                for i in 0..cfg.ops_per_thread {
+                    let scheduled = start + interval.mul_f64(i as f64);
+                    let now = Instant::now();
+                    if now < scheduled {
+                        // Open loop: wait for the arrival.
+                        std::thread::sleep(scheduled - now);
+                    }
+                    let obj = dist.sample(&mut rng) as usize;
+                    op(&objects, obj);
+                    hist.record(scheduled.elapsed().as_nanos() as u64);
+                }
+                hist
+            })
+        })
+        .collect();
+    barrier.wait();
+    let start = Instant::now();
+    let mut hist = LatencyHist::new();
+    for h in handles {
+        hist.merge(&h.join().expect("latency thread"));
+    }
+    let secs = start.elapsed().as_secs_f64();
+    LatencyResult {
+        achieved_ops_per_sec: (cfg.threads as u64 * cfg.ops_per_thread) as f64 / secs,
+        hist,
+    }
+}
+
+pub fn run_latency_lock(name: &str, cfg: &LatencyConfig) -> LatencyResult {
+    match name {
+        "mutex" => {
+            let objs: Arc<Vec<CachePadded<Mutex<u64>>>> = Arc::new(
+                (0..cfg.objects).map(|_| CachePadded::new(Mutex::new(0))).collect(),
+            );
+            run_lock_open_loop(cfg, objs, |o, i| {
+                let mut g = o[i].lock().unwrap();
+                pause();
+                *g += 1;
+            })
+        }
+        "spin" => {
+            let objs: Arc<Vec<CachePadded<LockCell<SpinLock, u64>>>> = Arc::new(
+                (0..cfg.objects).map(|_| CachePadded::new(LockCell::new(0))).collect(),
+            );
+            run_lock_open_loop(cfg, objs, |o, i| {
+                o[i].with_lock(|c| {
+                    pause();
+                    *c += 1;
+                });
+            })
+        }
+        "mcs" => {
+            let objs: Arc<Vec<CachePadded<LockCell<McsLock, u64>>>> = Arc::new(
+                (0..cfg.objects).map(|_| CachePadded::new(LockCell::new(0))).collect(),
+            );
+            run_lock_open_loop(cfg, objs, |o, i| {
+                o[i].with_lock(|c| {
+                    pause();
+                    *c += 1;
+                });
+            })
+        }
+        other => panic!("unknown lock {other:?}"),
+    }
+}
+
+/// Delegation open-loop run: one pacing fiber per client worker issues
+/// `apply_then` at scheduled arrivals; completion callbacks record latency
+/// from the scheduled time.
+pub fn run_latency_trust(cfg: &LatencyConfig) -> LatencyResult {
+    let fcfg = FaddConfig {
+        threads: cfg.threads,
+        objects: cfg.objects,
+        dedicated: cfg.dedicated,
+        ..Default::default()
+    };
+    let workers = fcfg.dedicated + fcfg.threads;
+    let rt = crate::runtime::Runtime::builder()
+        .workers(workers)
+        .dedicated_trustees(fcfg.dedicated)
+        .build();
+    let trustee_ids: Vec<usize> = if fcfg.dedicated > 0 {
+        (0..fcfg.dedicated).collect()
+    } else {
+        (0..workers).collect()
+    };
+    let counters: Arc<Vec<Trust<u64>>> = Arc::new(
+        (0..cfg.objects)
+            .map(|o| rt.trustee(trustee_ids[o % trustee_ids.len()]).entrust(0u64))
+            .collect(),
+    );
+    let clients: Vec<usize> = (fcfg.dedicated..workers).collect();
+    let per_client_rate = cfg.offered_ops_per_sec / clients.len() as f64;
+    let interval = Duration::from_secs_f64(1.0 / per_client_rate);
+    let ops_per_client = cfg.ops_per_thread * cfg.threads as u64 / clients.len() as u64;
+
+    let done = Arc::new(AtomicU64::new(0));
+    let hists: Arc<Mutex<Vec<LatencyHist>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    for (ci, &w) in clients.iter().enumerate() {
+        let counters = counters.clone();
+        let done = done.clone();
+        let hists = hists.clone();
+        let cfg2 = cfg.clone();
+        rt.spawn_on(w, move || {
+            let mut rng = Rng::new(cfg2.seed ^ (ci as u64) << 7);
+            let dist = KeyDist::from_spec(&cfg2.dist, cfg2.objects as u64);
+            let hist = std::rc::Rc::new(std::cell::RefCell::new(LatencyHist::new()));
+            let completed = std::rc::Rc::new(std::cell::Cell::new(0u64));
+            let start = Instant::now();
+            let mut issued = 0u64;
+            while completed.get() < ops_per_client {
+                let scheduled = start + interval.mul_f64(issued as f64);
+                if issued < ops_per_client && Instant::now() >= scheduled {
+                    let obj = dist.sample(&mut rng) as usize;
+                    let h = hist.clone();
+                    let comp = completed.clone();
+                    counters[obj].apply_then(
+                        |c| {
+                            pause();
+                            *c += 1;
+                            *c
+                        },
+                        move |_| {
+                            h.borrow_mut().record(scheduled.elapsed().as_nanos() as u64);
+                            comp.set(comp.get() + 1);
+                        },
+                    );
+                    issued += 1;
+                } else {
+                    crate::fiber::yield_now();
+                }
+            }
+            hists.lock().unwrap().push(hist.borrow().clone());
+            done.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+    while done.load(Ordering::Acquire) != clients.len() as u64 {
+        std::thread::yield_now();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let mut hist = LatencyHist::new();
+    for h in hists.lock().unwrap().iter() {
+        hist.merge(h);
+    }
+    let total_ops = ops_per_client * clients.len() as u64;
+    drop(counters);
+    rt.shutdown();
+    LatencyResult { achieved_ops_per_sec: total_ops as f64 / secs, hist }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> LatencyConfig {
+        LatencyConfig {
+            threads: 2,
+            objects: 8,
+            offered_ops_per_sec: 50_000.0,
+            ops_per_thread: 300,
+            dist: "uniform".into(),
+            seed: 1,
+            dedicated: 0,
+        }
+    }
+
+    #[test]
+    fn lock_latency_records_all_ops() {
+        for name in ["mutex", "spin", "mcs"] {
+            let r = run_latency_lock(name, &quick_cfg());
+            assert_eq!(r.hist.count(), 600, "{name}");
+            assert!(r.mean_us() > 0.0);
+            assert!(r.p999_us() >= r.mean_us() / 10.0);
+        }
+    }
+
+    #[test]
+    fn trust_latency_records_all_ops() {
+        let r = run_latency_trust(&quick_cfg());
+        assert_eq!(r.hist.count(), 600);
+        assert!(r.achieved_ops_per_sec > 0.0);
+    }
+
+    #[test]
+    fn overload_inflates_latency() {
+        // At absurd offered load the system saturates; latency at the
+        // tail must exceed the uncontended mean noticeably.
+        let mut cfg = quick_cfg();
+        cfg.offered_ops_per_sec = 1e9; // far beyond capacity
+        let r = run_latency_lock("mutex", &cfg);
+        // The system cannot meet an absurd offered rate: achieved must be
+        // far below offered, and open-loop queueing must show up in the
+        // tail (p99.9 >> best case).
+        assert!(r.achieved_ops_per_sec < 1e8, "achieved {}", r.achieved_ops_per_sec);
+        assert!(r.hist.quantile(0.999) > r.hist.min());
+    }
+}

@@ -1,0 +1,23 @@
+//! Benchmark harness library: the fetch-and-add microbenchmark engines
+//! behind Figures 6 and 7, shared by the `rust/benches/*` figure drivers.
+//!
+//! §6.1's setup: "a number of threads repeatedly increment a counter chosen
+//! from a set of one or more, and fetches the value of the counter ... we
+//! also include a single `pause` instruction in both the critical section
+//! and the delegated closures. The counter is chosen at random, either from
+//! a uniform distribution, or a zipfian distribution."
+
+pub mod fadd;
+pub mod latency;
+
+pub use fadd::{FaddConfig, FaddResult};
+pub use latency::{LatencyConfig, LatencyResult};
+
+/// Print a CSV header + rows helper used by all figure drivers.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n# {title}");
+    println!("{}", header.join(","));
+    for row in rows {
+        println!("{}", row.join(","));
+    }
+}

@@ -1,0 +1,822 @@
+//! The delegation channel (paper §5.1, §5.3): framing of closure requests,
+//! client-side batching, and trustee-side batch service.
+//!
+//! Each (client thread, trustee thread) pair owns a dedicated
+//! [`SlotPair`][slot::SlotPair] in a global [`Matrix`]. Clients append
+//! *records* — erased closures — to their request slot; the trustee applies
+//! them in submission order and publishes one response per record (zero
+//! bytes for fire-and-forget records) in the same order.
+//!
+//! A record is framed as:
+//!
+//! ```text
+//! 0..8    thunk     unsafe fn(env, prop, args, &mut ResponseWriter)
+//! 8..16   prop      *mut u8 — the entrusted property (or runtime object)
+//! 16..20  flags     bit0 NO_RESPONSE, bit1 HEAP (payload out-of-line)
+//! 20..22  env_len   u16
+//! 22..24  arg_len   u16 — serialized `apply_with` argument bytes
+//! 24..    env bytes, then arg bytes, padded to 8
+//! ```
+//!
+//! The 24-byte minimum matches the paper's accounting (fat pointer +
+//! property pointer). The closure's captured environment is copied into the
+//! slot *by value* and ownership transfers to the trustee (the client
+//! forgets it); this is what makes the paper's pass-by-value discipline
+//! race-free. Requests fill the 128-byte primary block first, then the
+//! 1024-byte overflow block, preserving submission order (§5.3.1); a record
+//! too large even for the overflow block travels out-of-line via a heap
+//! allocation (flags.HEAP), mirroring the paper's dynamic-allocation escape
+//! hatch for oversized responses.
+
+pub mod slot;
+
+pub use slot::{Header, Slot, SlotPair, MAX_BATCH, OVERFLOW_BYTES, PRIMARY_BYTES};
+
+use crate::codec::{Wire, WireReader, WireWriter};
+use std::collections::VecDeque;
+
+/// Erased request thunk. `env` points at the (possibly unaligned) captured
+/// environment; the thunk takes ownership of it. `args` are serialized
+/// `apply_with` arguments. The thunk writes exactly one response value into
+/// `out` (or nothing for fire-and-forget records).
+pub type Thunk = unsafe fn(env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter);
+
+pub const FLAG_NO_RESPONSE: u32 = 1 << 0;
+pub const FLAG_HEAP: u32 = 1 << 1;
+
+const RECORD_HEADER: usize = 24;
+/// Largest inline record payload (env+args): must fit the overflow block.
+pub const MAX_INLINE_PAYLOAD: usize = OVERFLOW_BYTES - RECORD_HEADER;
+
+/// Runs with the decoded response bytes for one request, in order.
+/// `None` for fire-and-forget requests (no bytes on the wire).
+pub type Completion = Option<Box<dyn FnOnce(&mut WireReader<'_>)>>;
+
+/// A fully framed request waiting in the outbox.
+pub struct PendingReq {
+    bytes: Vec<u8>,
+    flags: u32,
+    completion: Completion,
+}
+
+/// All slot pairs for an `n`-worker runtime. `pair(c, t)` is written by
+/// client `c` and served by trustee `t`.
+pub struct Matrix {
+    n: usize,
+    cells: Vec<SlotPair>,
+}
+
+impl Matrix {
+    pub fn new(n: usize) -> Matrix {
+        let mut cells = Vec::new();
+        cells.resize_with(n * n, SlotPair::default);
+        Matrix { n, cells }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn pair(&self, client: usize, trustee: usize) -> &SlotPair {
+        &self.cells[client * self.n + trustee]
+    }
+}
+
+/// Frame one request's bytes (see module docs for the record layout).
+pub struct RequestBuilder;
+
+impl RequestBuilder {
+    /// Frame a request into `buf` (cleared first; pooled by the endpoint).
+    ///
+    /// # Safety contract (enforced by the `trust` layer)
+    /// `thunk` must interpret `env`/`args`/`prop` with the same types used
+    /// to frame them here, and `env` must be the by-value bytes of a
+    /// closure the caller has `mem::forget`-ed (ownership moves here).
+    pub fn build(
+        mut buf: Vec<u8>,
+        thunk: Thunk,
+        prop: *mut u8,
+        env: &[u8],
+        args: &[u8],
+        no_response: bool,
+    ) -> PendingReq {
+        buf.clear();
+        let payload = env.len() + args.len();
+        let mut flags = if no_response { FLAG_NO_RESPONSE } else { 0 };
+        let heap = payload > MAX_INLINE_PAYLOAD;
+        if heap {
+            flags |= FLAG_HEAP;
+        }
+        buf.extend_from_slice(&(thunk as usize as u64).to_le_bytes());
+        buf.extend_from_slice(&(prop as usize as u64).to_le_bytes());
+        buf.extend_from_slice(&flags.to_le_bytes());
+        if heap {
+            // Out-of-line payload: the record body is [ptr u64][len u64]
+            // and the heap buffer is [args_len u64][env][args]. Closure
+            // envs are compile-time sized and small; args may be large.
+            assert!(env.len() <= u16::MAX as usize, "closure env too large");
+            buf.extend_from_slice(&(env.len() as u16).to_le_bytes());
+            buf.extend_from_slice(&0u16.to_le_bytes()); // inline arg_len unused
+            let mut heap_buf = Vec::with_capacity(payload + 8);
+            heap_buf.extend_from_slice(&(args.len() as u64).to_le_bytes());
+            heap_buf.extend_from_slice(env);
+            heap_buf.extend_from_slice(args);
+            let boxed: Box<[u8]> = heap_buf.into_boxed_slice();
+            let len = boxed.len();
+            let ptr = Box::into_raw(boxed) as *mut u8 as usize as u64;
+            buf.extend_from_slice(&ptr.to_le_bytes());
+            buf.extend_from_slice(&(len as u64).to_le_bytes());
+        } else {
+            assert!(env.len() <= u16::MAX as usize && args.len() <= u16::MAX as usize);
+            buf.extend_from_slice(&(env.len() as u16).to_le_bytes());
+            buf.extend_from_slice(&(args.len() as u16).to_le_bytes());
+            buf.extend_from_slice(env);
+            buf.extend_from_slice(args);
+        }
+        // Pad to 8 so successive records stay 8-aligned.
+        while buf.len() % 8 != 0 {
+            buf.push(0);
+        }
+        PendingReq { bytes: buf, flags, completion: None }
+    }
+}
+
+/// Client side of one (client, trustee) edge: outbox, in-flight batch, and
+/// response dispatch.
+pub struct ClientEndpoint {
+    /// Toggle of the last published batch.
+    toggle: bool,
+    /// A batch is in flight (published, response not yet consumed).
+    awaiting: bool,
+    inflight: VecDeque<Completion>,
+    outbox: VecDeque<PendingReq>,
+    buf_pool: Vec<Vec<u8>>,
+    scratch: Vec<u8>,
+    /// Stats: requests enqueued / batches published / responses dispatched.
+    pub sent: u64,
+    pub batches: u64,
+    pub completed: u64,
+}
+
+impl Default for ClientEndpoint {
+    fn default() -> Self {
+        ClientEndpoint {
+            toggle: false,
+            awaiting: false,
+            inflight: VecDeque::new(),
+            outbox: VecDeque::new(),
+            buf_pool: Vec::new(),
+            scratch: Vec::new(),
+            sent: 0,
+            batches: 0,
+            completed: 0,
+        }
+    }
+}
+
+impl ClientEndpoint {
+    /// Take a pooled buffer for framing a request.
+    pub fn take_buf(&mut self) -> Vec<u8> {
+        self.buf_pool.pop().unwrap_or_default()
+    }
+
+    /// Enqueue a framed request with its completion.
+    pub fn enqueue(&mut self, mut req: PendingReq, completion: Completion) {
+        debug_assert_eq!(
+            req.flags & FLAG_NO_RESPONSE != 0,
+            completion.is_none(),
+            "completion must be present iff the request expects a response"
+        );
+        req.completion = completion;
+        self.outbox.push_back(req);
+        self.sent += 1;
+    }
+
+    /// Number of requests not yet responded to (outbox + in flight).
+    pub fn pending(&self) -> usize {
+        self.outbox.len() + self.inflight.len()
+    }
+
+    pub fn has_inflight(&self) -> bool {
+        self.awaiting
+    }
+
+    /// If no batch is in flight and the outbox is non-empty, pack a batch
+    /// into the request slot and publish it. Returns requests flushed.
+    pub fn try_flush(&mut self, pair: &SlotPair) -> usize {
+        if self.awaiting || self.outbox.is_empty() {
+            return 0;
+        }
+        // SAFETY: we are the unique producer and no batch is in flight.
+        let (primary, overflow) = unsafe { pair.request.payload_mut() };
+        let mut pcur = 0usize;
+        let mut ocur = 0usize;
+        let mut in_overflow = false;
+        let mut count = 0usize;
+        while let Some(front) = self.outbox.front() {
+            let len = front.bytes.len();
+            if count + 1 >= MAX_BATCH {
+                break;
+            }
+            // Primary first; once a record spills to overflow, all later
+            // records in the batch follow it (preserves submission order).
+            if !in_overflow && pcur + len <= PRIMARY_BYTES {
+                primary[pcur..pcur + len].copy_from_slice(&front.bytes);
+                pcur += len;
+            } else if ocur + len <= OVERFLOW_BYTES {
+                in_overflow = true;
+                overflow[ocur..ocur + len].copy_from_slice(&front.bytes);
+                ocur += len;
+            } else {
+                break;
+            }
+            let req = self.outbox.pop_front().unwrap();
+            self.inflight.push_back(req.completion);
+            let mut buf = req.bytes;
+            if self.buf_pool.len() < 64 {
+                buf.clear();
+                self.buf_pool.push(buf);
+            }
+            count += 1;
+        }
+        debug_assert!(count > 0, "outbox head must fit an empty overflow block");
+        self.toggle = !self.toggle;
+        pair.request
+            .publish(Header::new(self.toggle, false, count, pcur, ocur));
+        self.awaiting = true;
+        self.batches += 1;
+        count
+    }
+
+    /// Poll the response slot; if the in-flight batch completed, dispatch
+    /// all completions in order and flush the next batch. Returns
+    /// completions dispatched.
+    pub fn poll(&mut self, pair: &SlotPair) -> usize {
+        if !self.awaiting {
+            self.try_flush(pair);
+            return 0;
+        }
+        let h = pair.response.header_acquire();
+        if h.toggle() != self.toggle {
+            return 0;
+        }
+        // SAFETY: trustee published this batch's responses and will not
+        // rewrite them until we publish the next request batch.
+        let (p, o) = unsafe { pair.response.payload() };
+        let plen = h.primary_len();
+        let olen = h.overflow_len();
+        let mut dispatched = 0;
+        {
+            // Build a contiguous view (zero-copy when primary-only).
+            let mut scratch = std::mem::take(&mut self.scratch);
+            let bytes: &[u8] = if olen == 0 && !h.spill() {
+                &p[..plen]
+            } else {
+                scratch.clear();
+                scratch.extend_from_slice(&p[..plen]);
+                scratch.extend_from_slice(&o[..olen]);
+                if h.spill() {
+                    let spill = unsafe { pair.response.take_spill() };
+                    scratch.extend_from_slice(&spill);
+                }
+                &scratch
+            };
+            let mut reader = WireReader::new(bytes);
+            while let Some(completion) = self.inflight.pop_front() {
+                if let Some(f) = completion {
+                    f(&mut reader);
+                }
+                dispatched += 1;
+            }
+            debug_assert!(
+                reader.is_empty(),
+                "response bytes not fully consumed: {} left",
+                reader.remaining()
+            );
+            self.scratch = scratch;
+        }
+        self.awaiting = false;
+        self.completed += dispatched as u64;
+        self.try_flush(pair);
+        dispatched
+    }
+}
+
+/// Writes the response stream for one batch. Fixed-size values are written
+/// raw; variable-size values are preceded by their size (§5.3).
+pub struct ResponseWriter {
+    out: WireWriter,
+}
+
+impl Default for ResponseWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResponseWriter {
+    pub fn new() -> ResponseWriter {
+        ResponseWriter { out: WireWriter::new() }
+    }
+
+    pub fn reuse(buf: Vec<u8>) -> ResponseWriter {
+        ResponseWriter { out: WireWriter::reuse(buf) }
+    }
+
+    /// Append one response value.
+    pub fn write_value<U: Wire>(&mut self, u: &U) {
+        if U::FIXED_SIZE.is_none() {
+            // Length prefix lets the client-side reader skip/validate.
+            self.out.put_varint(u.encoded_size() as u64);
+        }
+        u.write(&mut self.out);
+    }
+
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+
+    /// Publish the accumulated responses into the response slot. Returns
+    /// the scratch buffer for reuse.
+    pub fn publish(self, pair: &SlotPair, toggle: bool, count: usize) -> Vec<u8> {
+        let bytes = self.out.into_vec();
+        // SAFETY: trustee is the unique producer of the response slot and
+        // the previous batch was consumed (client republished requests).
+        let (p, o) = unsafe { pair.response.payload_mut() };
+        let n = bytes.len();
+        let plen = n.min(PRIMARY_BYTES);
+        p[..plen].copy_from_slice(&bytes[..plen]);
+        let rest = &bytes[plen..];
+        let olen = rest.len().min(OVERFLOW_BYTES);
+        o[..olen].copy_from_slice(&rest[..olen]);
+        let spill_bytes = &rest[olen..];
+        let spill = !spill_bytes.is_empty();
+        if spill {
+            unsafe { pair.response.set_spill(spill_bytes.to_vec().into_boxed_slice()) };
+        }
+        pair.response
+            .publish(Header::new(toggle, spill, count, plen, olen));
+        bytes // returned for buffer reuse
+    }
+}
+
+/// Read one response value the way the client dispatch does.
+pub fn read_response<U: Wire>(r: &mut WireReader<'_>) -> U {
+    if U::FIXED_SIZE.is_none() {
+        let len = r.get_varint().expect("response length") as usize;
+        let bytes = r.take(len).expect("response bytes");
+        let mut sub = WireReader::new(bytes);
+        return U::read(&mut sub).expect("response decode");
+    }
+    U::read(r).expect("response decode")
+}
+
+/// Trustee side of one (client, trustee) edge.
+#[derive(Default)]
+pub struct TrusteeEndpoint {
+    last_served: bool,
+    resp_buf: Vec<u8>,
+    /// Stats.
+    pub served_batches: u64,
+    pub served_requests: u64,
+}
+
+impl TrusteeEndpoint {
+    /// Serve a pending batch, if any: apply every record in order and
+    /// publish the responses. Returns records processed.
+    ///
+    /// # Safety
+    /// Every record in the slot must have been framed by
+    /// [`RequestBuilder::build`] with a thunk whose types match the framed
+    /// payload, and `prop` pointers must be live objects owned by this
+    /// trustee thread.
+    pub unsafe fn serve(&mut self, pair: &SlotPair) -> usize {
+        let h = pair.request.header_acquire();
+        if h.toggle() == self.last_served {
+            return 0;
+        }
+        let count = h.count();
+        // SAFETY: client published this batch and won't touch the payload
+        // until we publish the response.
+        let (p, o) = unsafe { pair.request.payload() };
+        let mut rw = ResponseWriter::reuse(std::mem::take(&mut self.resp_buf));
+        let mut served = 0;
+        let mut region: &[u8] = &p[..h.primary_len()];
+        let mut cur = 0usize;
+        let mut in_overflow = false;
+        while served < count {
+            if cur >= region.len() {
+                assert!(!in_overflow, "batch count exceeds payload");
+                region = &o[..h.overflow_len()];
+                cur = 0;
+                in_overflow = true;
+                continue;
+            }
+            cur += unsafe { Self::apply_record(&region[cur..], &mut rw) };
+            cur = (cur + 7) & !7;
+            served += 1;
+        }
+        self.resp_buf = rw.publish(pair, h.toggle(), count);
+        self.last_served = h.toggle();
+        self.served_batches += 1;
+        self.served_requests += served as u64;
+        served
+    }
+
+    /// Apply a single record starting at `rec[0]`; returns its unpadded
+    /// length within the region.
+    unsafe fn apply_record(rec: &[u8], rw: &mut ResponseWriter) -> usize {
+        let thunk_raw = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+        let prop = u64::from_le_bytes(rec[8..16].try_into().unwrap()) as usize as *mut u8;
+        let flags = u32::from_le_bytes(rec[16..20].try_into().unwrap());
+        let env_len = u16::from_le_bytes(rec[20..22].try_into().unwrap()) as usize;
+        let arg_len = u16::from_le_bytes(rec[22..24].try_into().unwrap()) as usize;
+        // SAFETY: thunk was framed from a real fn pointer in this binary.
+        let thunk: Thunk = unsafe { std::mem::transmute::<usize, Thunk>(thunk_raw as usize) };
+        if flags & FLAG_HEAP != 0 {
+            let ptr = u64::from_le_bytes(rec[24..32].try_into().unwrap()) as usize as *mut u8;
+            let len = u64::from_le_bytes(rec[32..40].try_into().unwrap()) as usize;
+            // SAFETY: ownership of the heap buffer transfers to us.
+            let heap =
+                unsafe { Box::from_raw(std::ptr::slice_from_raw_parts_mut(ptr, len)) };
+            let args_len = u64::from_le_bytes(heap[0..8].try_into().unwrap()) as usize;
+            let env = &heap[8..8 + env_len];
+            let args = &heap[8 + env_len..8 + env_len + args_len];
+            unsafe { thunk(env.as_ptr(), prop, args, rw) };
+            return 40;
+        }
+        let env = &rec[RECORD_HEADER..RECORD_HEADER + env_len];
+        let args = &rec[RECORD_HEADER + env_len..RECORD_HEADER + env_len + arg_len];
+        unsafe { thunk(env.as_ptr(), prop, args, rw) };
+        RECORD_HEADER + env_len + arg_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    /// Thunk: increment a u64 property by the u64 captured in env, respond
+    /// with the pre-increment value (fetch-and-add).
+    unsafe fn fadd_thunk(env: *const u8, prop: *mut u8, _args: &[u8], out: &mut ResponseWriter) {
+        let delta = unsafe { env.cast::<u64>().read_unaligned() };
+        let p = prop.cast::<u64>();
+        let old = unsafe { *p };
+        unsafe { *p = old + delta };
+        out.write_value(&old);
+    }
+
+    /// Fire-and-forget thunk: add without responding.
+    unsafe fn add_thunk(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter) {
+        let delta = unsafe { env.cast::<u64>().read_unaligned() };
+        unsafe { *prop.cast::<u64>() += delta };
+    }
+
+    /// Thunk with serialized args: append a string length.
+    unsafe fn arg_thunk(_env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter) {
+        let mut r = WireReader::new(args);
+        let s = String::read(&mut r).unwrap();
+        unsafe { *prop.cast::<u64>() += s.len() as u64 };
+        out.write_value(&s.to_uppercase());
+    }
+
+    fn frame_fadd(ep: &mut ClientEndpoint, prop: *mut u64, delta: u64) -> PendingReq {
+        let buf = ep.take_buf();
+        RequestBuilder::build(
+            buf,
+            fadd_thunk,
+            prop as *mut u8,
+            &delta.to_le_bytes(),
+            &[],
+            false,
+        )
+    }
+
+    #[test]
+    fn loopback_single_request() {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut counter: u64 = 100;
+
+        let got = Rc::new(Cell::new(0u64));
+        let g = got.clone();
+        let req = frame_fadd(&mut client, &mut counter, 5);
+        client.enqueue(
+            req,
+            Some(Box::new(move |r| g.set(read_response::<u64>(r)))),
+        );
+        assert_eq!(client.try_flush(&pair), 1);
+        assert_eq!(unsafe { trustee.serve(&pair) }, 1);
+        assert_eq!(client.poll(&pair), 1);
+        assert_eq!(got.get(), 100);
+        assert_eq!(counter, 105);
+        assert_eq!(client.pending(), 0);
+    }
+
+    #[test]
+    fn batch_packs_multiple_and_preserves_order() {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut counter: u64 = 0;
+
+        let order = Rc::new(std::cell::RefCell::new(Vec::new()));
+        for i in 0..10u64 {
+            let o = order.clone();
+            let req = frame_fadd(&mut client, &mut counter, 1);
+            client.enqueue(
+                req,
+                Some(Box::new(move |r| {
+                    o.borrow_mut().push((i, read_response::<u64>(r)))
+                })),
+            );
+        }
+        // 10 records × 32 bytes: fills primary (3 recs) then overflow
+        // (7 recs) in one batch.
+        client.try_flush(&pair);
+        assert_eq!(unsafe { trustee.serve(&pair) }, 10);
+        assert_eq!(client.poll(&pair), 10);
+        assert_eq!(counter, 10);
+        let got = order.borrow().clone();
+        // Responses must arrive in submission order: old values 0..9.
+        assert_eq!(got, (0..10).map(|i| (i, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fire_and_forget_no_response_bytes() {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut counter: u64 = 0;
+
+        for _ in 0..3 {
+            let buf = client.take_buf();
+            let req = RequestBuilder::build(
+                buf,
+                add_thunk,
+                &mut counter as *mut u64 as *mut u8,
+                &7u64.to_le_bytes(),
+                &[],
+                true,
+            );
+            client.enqueue(req, None);
+        }
+        client.try_flush(&pair);
+        assert_eq!(unsafe { trustee.serve(&pair) }, 3);
+        let h = pair.response.header_acquire();
+        assert_eq!(h.primary_len(), 0, "no response bytes for fire-and-forget");
+        assert_eq!(client.poll(&pair), 3);
+        assert_eq!(counter, 21);
+    }
+
+    #[test]
+    fn serialized_args_and_variable_response() {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut acc: u64 = 0;
+
+        let got = Rc::new(std::cell::RefCell::new(String::new()));
+        let g = got.clone();
+        let args = crate::codec::to_bytes(&"hello".to_string());
+        let buf = client.take_buf();
+        let req = RequestBuilder::build(
+            buf,
+            arg_thunk,
+            &mut acc as *mut u64 as *mut u8,
+            &[],
+            &args,
+            false,
+        );
+        client.enqueue(
+            req,
+            Some(Box::new(move |r| {
+                *g.borrow_mut() = read_response::<String>(r)
+            })),
+        );
+        client.try_flush(&pair);
+        unsafe { trustee.serve(&pair) };
+        client.poll(&pair);
+        assert_eq!(&*got.borrow(), "HELLO");
+        assert_eq!(acc, 5);
+    }
+
+    #[test]
+    fn outbox_queues_while_batch_in_flight() {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut counter: u64 = 0;
+
+        let req = frame_fadd(&mut client, &mut counter, 1);
+        client.enqueue(req, Some(Box::new(|r| {
+            read_response::<u64>(r);
+        })));
+        client.try_flush(&pair);
+        // Second request while first is in flight: must queue, not clobber.
+        let req = frame_fadd(&mut client, &mut counter, 2);
+        client.enqueue(req, Some(Box::new(|r| {
+            read_response::<u64>(r);
+        })));
+        assert_eq!(client.try_flush(&pair), 0, "slot busy");
+        assert_eq!(client.pending(), 2);
+
+        unsafe { trustee.serve(&pair) };
+        // poll dispatches batch 1 AND flushes batch 2.
+        assert_eq!(client.poll(&pair), 1);
+        unsafe { trustee.serve(&pair) };
+        assert_eq!(client.poll(&pair), 1);
+        assert_eq!(counter, 3);
+        assert_eq!(client.pending(), 0);
+    }
+
+    #[test]
+    fn huge_args_take_heap_path() {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut acc: u64 = 0;
+
+        // args larger than the overflow block force FLAG_HEAP.
+        let big_args = crate::codec::to_bytes(&vec![1u8; 4000]);
+        unsafe fn count_thunk(
+            _env: *const u8,
+            prop: *mut u8,
+            args: &[u8],
+            out: &mut ResponseWriter,
+        ) {
+            let mut r = WireReader::new(args);
+            let v = Vec::<u8>::read(&mut r).unwrap();
+            unsafe { *prop.cast::<u64>() = v.len() as u64 };
+            out.write_value(&(v.len() as u64));
+        }
+        let got = Rc::new(Cell::new(0u64));
+        let g = got.clone();
+        let buf = client.take_buf();
+        let req = RequestBuilder::build(
+            buf,
+            count_thunk,
+            &mut acc as *mut u64 as *mut u8,
+            &[],
+            &big_args,
+            false,
+        );
+        client.enqueue(req, Some(Box::new(move |r| g.set(read_response::<u64>(r)))));
+        client.try_flush(&pair);
+        unsafe { trustee.serve(&pair) };
+        client.poll(&pair);
+        assert_eq!(got.get(), 4000);
+        assert_eq!(acc, 4000);
+    }
+
+    #[test]
+    fn huge_response_spills() {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut acc: u64 = 0;
+
+        unsafe fn big_resp_thunk(
+            env: *const u8,
+            _prop: *mut u8,
+            _args: &[u8],
+            out: &mut ResponseWriter,
+        ) {
+            let n = unsafe { env.cast::<u64>().read_unaligned() };
+            out.write_value(&vec![0xABu8; n as usize]);
+        }
+        let got = Rc::new(Cell::new(0usize));
+        let g = got.clone();
+        let buf = client.take_buf();
+        let req = RequestBuilder::build(
+            buf,
+            big_resp_thunk,
+            &mut acc as *mut u64 as *mut u8,
+            &5000u64.to_le_bytes(),
+            &[],
+            false,
+        );
+        client.enqueue(
+            req,
+            Some(Box::new(move |r| {
+                let v = read_response::<Vec<u8>>(r);
+                assert!(v.iter().all(|&b| b == 0xAB));
+                g.set(v.len());
+            })),
+        );
+        client.try_flush(&pair);
+        unsafe { trustee.serve(&pair) };
+        client.poll(&pair);
+        assert_eq!(got.get(), 5000);
+    }
+
+    #[test]
+    fn cross_thread_fetch_and_add() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        static COUNTER_ADDR: std::sync::atomic::AtomicUsize =
+            std::sync::atomic::AtomicUsize::new(0);
+
+        let matrix = Arc::new(Matrix::new(2));
+        let stop = Arc::new(AtomicBool::new(false));
+        // Trustee thread (worker 1) owns the counter and serves client 0.
+        let m2 = matrix.clone();
+        let stop2 = stop.clone();
+        let trustee_thread = std::thread::spawn(move || {
+            let mut counter: u64 = 0;
+            COUNTER_ADDR.store(&mut counter as *mut u64 as usize, Ordering::Release);
+            let mut ep = TrusteeEndpoint::default();
+            while !stop2.load(Ordering::Acquire) {
+                unsafe { ep.serve(m2.pair(0, 1)) };
+                std::thread::yield_now();
+            }
+            counter
+        });
+
+        let prop = loop {
+            let a = COUNTER_ADDR.load(Ordering::Acquire);
+            if a != 0 {
+                break a as *mut u64;
+            }
+            std::thread::yield_now();
+        };
+
+        let mut client = ClientEndpoint::default();
+        let pair = matrix.pair(0, 1);
+        let sum = Rc::new(Cell::new(0u64));
+        let n = 500u64;
+        let mut sent = 0u64;
+        while sent < n || client.pending() > 0 {
+            if sent < n {
+                let s = sum.clone();
+                let req = frame_fadd(&mut client, prop, 1);
+                client.enqueue(
+                    req,
+                    Some(Box::new(move |r| {
+                        s.set(s.get() + read_response::<u64>(r));
+                    })),
+                );
+                sent += 1;
+            }
+            client.try_flush(pair);
+            client.poll(pair);
+        }
+        stop.store(true, Ordering::Release);
+        let final_count = trustee_thread.join().unwrap();
+        assert_eq!(final_count, n);
+        // fetch-and-add old values: 0 + 1 + ... + (n-1)
+        assert_eq!(sum.get(), n * (n - 1) / 2);
+        assert!(client.batches >= 1);
+        assert_eq!(client.completed, n);
+    }
+
+    #[test]
+    fn record_framing_roundtrip_property() {
+        use crate::util::quickcheck::check;
+        // Frame then serve records with arbitrary env/args sizes; the
+        // summing thunk checks payload integrity end-to-end. The property
+        // pointer carries the env length so the thunk can slice the env.
+        unsafe fn sum_thunk(env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter) {
+            let env_len = unsafe { *prop.cast::<u16>() } as usize;
+            let env_bytes = unsafe { std::slice::from_raw_parts(env, env_len) };
+            let s: u64 = env_bytes.iter().map(|&b| b as u64).sum::<u64>()
+                + args.iter().map(|&b| b as u64).sum::<u64>();
+            out.write_value(&s);
+        }
+        check::<(Vec<u8>, Vec<u8>)>("record-framing", 60, |(env, args)| {
+            if env.len() > 60_000 || args.len() > 60_000 {
+                return true;
+            }
+            let pair = SlotPair::default();
+            let mut client = ClientEndpoint::default();
+            let mut trustee = TrusteeEndpoint::default();
+            let mut env_len_holder: u16 = env.len() as u16;
+            let want: u64 = env.iter().map(|&b| b as u64).sum::<u64>()
+                + args.iter().map(|&b| b as u64).sum::<u64>();
+            let got = Rc::new(Cell::new(u64::MAX));
+            let g = got.clone();
+            let req = RequestBuilder::build(
+                client.take_buf(),
+                sum_thunk,
+                &mut env_len_holder as *mut u16 as *mut u8,
+                env,
+                args,
+                false,
+            );
+            client.enqueue(req, Some(Box::new(move |r| g.set(read_response::<u64>(r)))));
+            client.try_flush(&pair);
+            unsafe { trustee.serve(&pair) };
+            client.poll(&pair);
+            got.get() == want
+        });
+    }
+}

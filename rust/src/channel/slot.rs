@@ -1,0 +1,310 @@
+//! The fixed-size request/response slot pair (paper §5.3, Fig. 5) with the
+//! two-part primary/overflow optimization (§5.3.1).
+//!
+//! There is one dedicated pair of request/response slots for each
+//! (client thread, trustee thread) pair. Only the client writes the request
+//! slot; only the trustee writes the response slot. A *ready bit* (toggle)
+//! in each header signals new batches: the request slot holds a new batch
+//! iff its toggle differs from the last batch the trustee served; the
+//! response is complete iff the response toggle equals the request toggle
+//! the client last published.
+//!
+//! ### On the "no atomic instructions" claim
+//! Rust's memory model requires atomic *types* for any cross-thread flag,
+//! but `AtomicU64::{load(Acquire), store(Release)}` compile to plain `mov`
+//! on x86-64 — no `lock` prefix, no fence. This matches the paper's machine
+//! code while staying sound (DESIGN.md substitution #7).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bytes in the primary block following the header word. The paper uses a
+/// 128-byte primary block; 8 bytes of it are the header.
+pub const PRIMARY_BYTES: usize = 120;
+/// Bytes in the overflow block (paper: 1024).
+pub const OVERFLOW_BYTES: usize = 1024;
+/// Default total slot budget quoted by the paper (§5.3): 1152 bytes.
+pub const SLOT_BYTES: usize = PRIMARY_BYTES + 8 + OVERFLOW_BYTES;
+/// Maximum requests per batch (count field width).
+pub const MAX_BATCH: usize = 1 << 14;
+
+/// Packed slot header.
+///
+/// ```text
+/// bit  0      : toggle (ready bit)
+/// bit  1      : heap spill flag (payload continues in a heap buffer)
+/// bits 2..16  : request count (request slots) / unused (response slots)
+/// bits 16..32 : primary payload length
+/// bits 32..48 : overflow payload length
+/// bits 48..64 : reserved
+/// ```
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Header(pub u64);
+
+impl Header {
+    pub fn new(toggle: bool, spill: bool, count: usize, plen: usize, olen: usize) -> Header {
+        debug_assert!(count < MAX_BATCH);
+        debug_assert!(plen <= PRIMARY_BYTES);
+        debug_assert!(olen <= OVERFLOW_BYTES);
+        Header(
+            toggle as u64
+                | (spill as u64) << 1
+                | (count as u64) << 2
+                | (plen as u64) << 16
+                | (olen as u64) << 32,
+        )
+    }
+
+    #[inline]
+    pub fn toggle(self) -> bool {
+        self.0 & 1 != 0
+    }
+
+    #[inline]
+    pub fn spill(self) -> bool {
+        self.0 & 2 != 0
+    }
+
+    #[inline]
+    pub fn count(self) -> usize {
+        ((self.0 >> 2) & 0x3fff) as usize
+    }
+
+    #[inline]
+    pub fn primary_len(self) -> usize {
+        ((self.0 >> 16) & 0xffff) as usize
+    }
+
+    #[inline]
+    pub fn overflow_len(self) -> usize {
+        ((self.0 >> 32) & 0xffff) as usize
+    }
+}
+
+/// One direction of a slot (requests or responses share the same shape).
+///
+/// Layout places the header + primary block on the first two cache lines
+/// and the overflow block on its own lines, so a trustee scanning mostly
+/// idle clients touches only the primary lines (§5.3.1).
+#[repr(C, align(64))]
+pub struct Slot {
+    header: AtomicU64,
+    primary: UnsafeCell<[u8; PRIMARY_BYTES]>,
+    overflow: UnsafeCell<[u8; OVERFLOW_BYTES]>,
+    /// Heap spill escape hatch: oversized payloads travel out-of-line.
+    /// Written by the producer before the header Release-store, consumed by
+    /// the receiver after the Acquire-load — same ordering as the blocks.
+    spill_ptr: UnsafeCell<*mut u8>,
+    spill_len: UnsafeCell<usize>,
+}
+
+// SAFETY: the single-writer/single-reader protocol above; all cross-thread
+// publication goes through `header` with Release/Acquire ordering.
+unsafe impl Sync for Slot {}
+unsafe impl Send for Slot {}
+
+impl Default for Slot {
+    fn default() -> Self {
+        Slot {
+            header: AtomicU64::new(Header::new(false, false, 0, 0, 0).0),
+            primary: UnsafeCell::new([0; PRIMARY_BYTES]),
+            overflow: UnsafeCell::new([0; OVERFLOW_BYTES]),
+            spill_ptr: UnsafeCell::new(std::ptr::null_mut()),
+            spill_len: UnsafeCell::new(0),
+        }
+    }
+}
+
+impl Slot {
+    /// Producer: current header (Relaxed — producer owns the slot between
+    /// publishes).
+    #[inline]
+    pub fn header_relaxed(&self) -> Header {
+        Header(self.header.load(Ordering::Relaxed))
+    }
+
+    /// Consumer: acquire-load the header.
+    #[inline]
+    pub fn header_acquire(&self) -> Header {
+        Header(self.header.load(Ordering::Acquire))
+    }
+
+    /// Producer: publish a batch (Release).
+    #[inline]
+    pub fn publish(&self, h: Header) {
+        self.header.store(h.0, Ordering::Release);
+    }
+
+    /// Producer-side mutable view of the payload blocks.
+    ///
+    /// # Safety
+    /// Caller must be the unique producer for this slot and must not be
+    /// racing an unconsumed batch.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn payload_mut(&self) -> (&mut [u8; PRIMARY_BYTES], &mut [u8; OVERFLOW_BYTES]) {
+        unsafe { (&mut *self.primary.get(), &mut *self.overflow.get()) }
+    }
+
+    /// Consumer-side view of the payload blocks.
+    ///
+    /// # Safety
+    /// Caller must have acquire-observed a header publishing this batch and
+    /// the producer must not republish until the consumer is done.
+    #[inline]
+    pub unsafe fn payload(&self) -> (&[u8; PRIMARY_BYTES], &[u8; OVERFLOW_BYTES]) {
+        unsafe { (&*self.primary.get(), &*self.overflow.get()) }
+    }
+
+    /// Producer: stash a heap spill buffer (leaked Box<[u8]>); receiver
+    /// takes ownership via [`Slot::take_spill`].
+    ///
+    /// # Safety
+    /// Producer-only, pre-publish.
+    pub unsafe fn set_spill(&self, buf: Box<[u8]>) {
+        let len = buf.len();
+        let ptr = Box::into_raw(buf) as *mut u8;
+        unsafe {
+            *self.spill_ptr.get() = ptr;
+            *self.spill_len.get() = len;
+        }
+    }
+
+    /// Consumer: take ownership of the spill buffer.
+    ///
+    /// # Safety
+    /// Consumer-only, post-acquire of a header with the spill bit set.
+    pub unsafe fn take_spill(&self) -> Box<[u8]> {
+        unsafe {
+            let ptr = *self.spill_ptr.get();
+            let len = *self.spill_len.get();
+            *self.spill_ptr.get() = std::ptr::null_mut();
+            *self.spill_len.get() = 0;
+            assert!(!ptr.is_null(), "spill flag set but no spill buffer");
+            Box::from_raw(std::ptr::slice_from_raw_parts_mut(ptr, len))
+        }
+    }
+}
+
+/// A request/response slot pair for one (client, trustee) edge.
+#[repr(C)]
+#[derive(Default)]
+pub struct SlotPair {
+    pub request: Slot,
+    pub response: Slot,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn header_roundtrip_fields() {
+        let h = Header::new(true, false, 37, 119, 1000);
+        assert!(h.toggle());
+        assert!(!h.spill());
+        assert_eq!(h.count(), 37);
+        assert_eq!(h.primary_len(), 119);
+        assert_eq!(h.overflow_len(), 1000);
+    }
+
+    #[test]
+    fn prop_header_roundtrip() {
+        check::<(bool, bool, u16, u8, u16)>("header-pack", 300, |&(t, s, c, p, o)| {
+            let c = (c as usize) % MAX_BATCH;
+            let p = (p as usize) % (PRIMARY_BYTES + 1);
+            let o = (o as usize) % (OVERFLOW_BYTES + 1);
+            let h = Header::new(t, s, c, p, o);
+            h.toggle() == t
+                && h.spill() == s
+                && h.count() == c
+                && h.primary_len() == p
+                && h.overflow_len() == o
+        });
+    }
+
+    #[test]
+    fn slot_layout_sizes() {
+        // header (8) + primary (120) = 128-byte primary region, as in §5.3.1
+        assert_eq!(std::mem::align_of::<Slot>(), 64);
+        assert_eq!(SLOT_BYTES, 1152, "paper's default slot budget");
+        let s = std::mem::size_of::<Slot>();
+        assert!(s >= SLOT_BYTES, "slot must hold both blocks (got {s})");
+    }
+
+    #[test]
+    fn publish_and_consume() {
+        let slot = Slot::default();
+        unsafe {
+            let (p, _o) = slot.payload_mut();
+            p[..4].copy_from_slice(&[1, 2, 3, 4]);
+        }
+        slot.publish(Header::new(true, false, 1, 4, 0));
+        let h = slot.header_acquire();
+        assert!(h.toggle());
+        assert_eq!(h.count(), 1);
+        let (p, _) = unsafe { slot.payload() };
+        assert_eq!(&p[..4], &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn spill_ownership_transfer() {
+        let slot = Slot::default();
+        let data: Box<[u8]> = vec![7u8; 5000].into_boxed_slice();
+        unsafe { slot.set_spill(data) };
+        slot.publish(Header::new(true, true, 1, 0, 0));
+        assert!(slot.header_acquire().spill());
+        let back = unsafe { slot.take_spill() };
+        assert_eq!(back.len(), 5000);
+        assert!(back.iter().all(|&b| b == 7));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        use std::sync::Arc;
+        let pair = Arc::new(SlotPair::default());
+        let p2 = pair.clone();
+        let t = std::thread::spawn(move || {
+            // trustee: wait for request toggle, echo payload into response
+            let mut served = false;
+            loop {
+                let h = p2.request.header_acquire();
+                if h.toggle() != served {
+                    let n = h.primary_len();
+                    let bytes = unsafe { p2.request.payload().0[..n].to_vec() };
+                    unsafe {
+                        p2.response.payload_mut().0[..n].copy_from_slice(&bytes);
+                    }
+                    p2.response.publish(Header::new(h.toggle(), false, h.count(), n, 0));
+                    served = h.toggle();
+                    if bytes == [0xFF] {
+                        return;
+                    }
+                }
+                std::hint::spin_loop();
+                std::thread::yield_now();
+            }
+        });
+
+        let mut toggle = false;
+        for msg in [&[1u8, 2, 3][..], &[9, 8][..], &[0xFF][..]] {
+            toggle = !toggle;
+            unsafe {
+                pair.request.payload_mut().0[..msg.len()].copy_from_slice(msg);
+            }
+            pair.request.publish(Header::new(toggle, false, 1, msg.len(), 0));
+            // wait for echo
+            loop {
+                let h = pair.response.header_acquire();
+                if h.toggle() == toggle {
+                    let echoed = unsafe { &pair.response.payload().0[..h.primary_len()] };
+                    assert_eq!(echoed, msg);
+                    break;
+                }
+                std::thread::yield_now();
+            }
+        }
+        t.join().unwrap();
+    }
+}

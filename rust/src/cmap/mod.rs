@@ -1,0 +1,258 @@
+//! Concurrent map substrates for the key-value store evaluation (§6.3):
+//!
+//! - [`ShardedMutexMap`] — the paper's "naïvely sharded HashMap" with
+//!   `std::sync::Mutex` per shard (512 shards by default, "many more locks
+//!   than threads").
+//! - [`ShardedRwMap`] — same, with readers-writer locks.
+//! - [`SwiftMap`] — the Dashmap stand-in: sharded `RwLock` over our
+//!   open-addressing robin-hood [`OaTable`] (Dashmap's own design), with a
+//!   lower-overhead fixed-shard layout and FxHash.
+//!
+//! All three expose the same minimal interface the KV store needs
+//! (`get` → owned value, `insert`, `remove`, `len`), so the bench harness
+//! is generic via [`ConcurrentMap`].
+
+pub mod oatable;
+
+pub use oatable::{fxhash, FxHasher, OaTable};
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Mutex, RwLock};
+
+/// The operations the KV store and benches need, object-safe enough to be
+/// generic over the backend.
+pub trait ConcurrentMap<K, V>: Send + Sync {
+    fn get(&self, k: &K) -> Option<V>;
+    fn insert(&self, k: K, v: V) -> Option<V>;
+    fn remove(&self, k: &K) -> Option<V>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Read-modify-write (used by fetch-and-add style workloads).
+    fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R;
+}
+
+#[inline]
+fn shard_of<K: Hash + ?Sized>(k: &K, n_shards: usize) -> usize {
+    (fxhash(k) as usize >> 7) & (n_shards - 1)
+}
+
+macro_rules! sharded_map {
+    ($name:ident, $lock:ident, $read:ident, $write:ident, $doc:literal) => {
+        #[doc = $doc]
+        pub struct $name<K, V> {
+            shards: Vec<$lock<HashMap<K, V>>>,
+        }
+
+        impl<K: Eq + Hash, V> $name<K, V> {
+            /// `n_shards` is rounded up to a power of two (default 512,
+            /// the paper's §6.3 configuration).
+            pub fn new(n_shards: usize) -> Self {
+                let n = n_shards.next_power_of_two().max(1);
+                let mut shards = Vec::with_capacity(n);
+                shards.resize_with(n, || $lock::new(HashMap::new()));
+                Self { shards }
+            }
+
+            pub fn n_shards(&self) -> usize {
+                self.shards.len()
+            }
+        }
+
+        impl<K: Eq + Hash, V> Default for $name<K, V> {
+            fn default() -> Self {
+                Self::new(512)
+            }
+        }
+
+        impl<K, V> ConcurrentMap<K, V> for $name<K, V>
+        where
+            K: Eq + Hash + Send + Sync,
+            V: Clone + Send + Sync,
+        {
+            fn get(&self, k: &K) -> Option<V> {
+                let shard = &self.shards[shard_of(k, self.shards.len())];
+                shard.$read().unwrap().get(k).cloned()
+            }
+
+            fn insert(&self, k: K, v: V) -> Option<V> {
+                let shard = &self.shards[shard_of(&k, self.shards.len())];
+                shard.$write().unwrap().insert(k, v)
+            }
+
+            fn remove(&self, k: &K) -> Option<V> {
+                let shard = &self.shards[shard_of(k, self.shards.len())];
+                shard.$write().unwrap().remove(k)
+            }
+
+            fn len(&self) -> usize {
+                self.shards.iter().map(|s| s.$read().unwrap().len()).sum()
+            }
+
+            fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R {
+                let shard = &self.shards[shard_of(k, self.shards.len())];
+                f(shard.$write().unwrap().get_mut(k))
+            }
+        }
+    };
+}
+
+sharded_map!(
+    ShardedMutexMap,
+    Mutex,
+    lock,
+    lock,
+    "Sharded `HashMap` with one `Mutex` per shard (paper §6.3 \"Mutex\")."
+);
+sharded_map!(
+    ShardedRwMap,
+    RwLock,
+    read,
+    write,
+    "Sharded `HashMap` with one `RwLock` per shard (paper §6.3 \"RwLock\")."
+);
+
+/// Dashmap stand-in: fixed power-of-two shards, each an
+/// `RwLock<OaTable<K, V>>` — structurally what Dashmap 5.x does, built on
+/// our own robin-hood table.
+pub struct SwiftMap<K, V> {
+    shards: Vec<RwLock<OaTable<K, V>>>,
+}
+
+impl<K: Eq + Hash, V> SwiftMap<K, V> {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards.next_power_of_two().max(1);
+        let mut shards = Vec::with_capacity(n);
+        shards.resize_with(n, || RwLock::new(OaTable::default()));
+        SwiftMap { shards }
+    }
+
+    pub fn with_capacity(n_shards: usize, cap: usize) -> Self {
+        let n = n_shards.next_power_of_two().max(1);
+        let per = (cap / n).max(8);
+        let mut shards = Vec::with_capacity(n);
+        shards.resize_with(n, || RwLock::new(OaTable::with_capacity(per)));
+        SwiftMap { shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl<K: Eq + Hash, V> Default for SwiftMap<K, V> {
+    fn default() -> Self {
+        SwiftMap::new(64) // dashmap defaults to 4*ncpu, rounded up
+    }
+}
+
+impl<K, V> ConcurrentMap<K, V> for SwiftMap<K, V>
+where
+    K: Eq + Hash + Send + Sync,
+    V: Clone + Send + Sync,
+{
+    fn get(&self, k: &K) -> Option<V> {
+        let shard = &self.shards[shard_of(k, self.shards.len())];
+        shard.read().unwrap().get(k).cloned()
+    }
+
+    fn insert(&self, k: K, v: V) -> Option<V> {
+        let shard = &self.shards[shard_of(&k, self.shards.len())];
+        shard.write().unwrap().insert(k, v)
+    }
+
+    fn remove(&self, k: &K) -> Option<V> {
+        let shard = &self.shards[shard_of(k, self.shards.len())];
+        shard.write().unwrap().remove(k)
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R {
+        let shard = &self.shards[shard_of(k, self.shards.len())];
+        f(shard.write().unwrap().get_mut(k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn exercise<M: ConcurrentMap<u64, u64> + 'static>(map: Arc<M>) {
+        let threads = 4;
+        let per = 1000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let map = map.clone();
+                std::thread::spawn(move || {
+                    let base = t as u64 * per;
+                    for i in 0..per {
+                        map.insert(base + i, i);
+                    }
+                    for i in 0..per {
+                        assert_eq!(map.get(&(base + i)), Some(i));
+                    }
+                    for i in (0..per).step_by(2) {
+                        assert_eq!(map.remove(&(base + i)), Some(i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(map.len(), threads as usize * (per as usize) / 2);
+    }
+
+    #[test]
+    fn sharded_mutex_map_concurrent() {
+        exercise(Arc::new(ShardedMutexMap::new(64)));
+    }
+
+    #[test]
+    fn sharded_rw_map_concurrent() {
+        exercise(Arc::new(ShardedRwMap::new(64)));
+    }
+
+    #[test]
+    fn swift_map_concurrent() {
+        exercise(Arc::new(SwiftMap::new(64)));
+    }
+
+    #[test]
+    fn update_read_modify_write() {
+        let m = SwiftMap::new(4);
+        m.insert(1u64, 10u64);
+        let old = m.update(&1, &mut |v| {
+            let v = v.unwrap();
+            let o = *v;
+            *v += 1;
+            o
+        });
+        assert_eq!(old, 10);
+        assert_eq!(m.get(&1), Some(11));
+        let missing = m.update(&99, &mut |v| v.is_none());
+        assert!(missing);
+    }
+
+    #[test]
+    fn shard_counts_power_of_two() {
+        assert_eq!(ShardedMutexMap::<u64, u64>::new(500).n_shards(), 512);
+        assert_eq!(SwiftMap::<u64, u64>::new(3).n_shards(), 4);
+    }
+
+    #[test]
+    fn string_keys_work() {
+        let m = SwiftMap::default();
+        m.insert("alpha".to_string(), 1u32);
+        m.insert("beta".to_string(), 2);
+        assert_eq!(m.get(&"alpha".to_string()), Some(1));
+        assert_eq!(m.remove(&"beta".to_string()), Some(2));
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,328 @@
+//! Open-addressing robin-hood hash table — the from-scratch table behind
+//! [`SwiftMap`](super::SwiftMap) (the Dashmap stand-in) and the delegated
+//! KV-store shards.
+//!
+//! Robin-hood insertion with backward-shift deletion (no tombstones) keeps
+//! probe sequences short under churn, which matters for the write-heavy
+//! sweeps in Fig. 9. Hashing is FxHash (the rustc hash): two multiplies per
+//! word, deterministic across runs (bench reproducibility).
+
+/// FxHash, as used by rustc. Deterministic; not DoS-resistant (fine for
+/// benches and trusted keys).
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl std::hash::Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.hash = (self.hash.rotate_left(5) ^ b as u64).wrapping_mul(SEED);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ n).wrapping_mul(SEED);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+/// Hash a key with FxHash.
+#[inline]
+pub fn fxhash<K: std::hash::Hash + ?Sized>(k: &K) -> u64 {
+    use std::hash::Hasher;
+    let mut h = FxHasher::default();
+    k.hash(&mut h);
+    // Final avalanche so low bits are usable as bucket indices.
+    crate::util::rng::mix64(h.finish())
+}
+
+struct Entry<K, V> {
+    hash: u64,
+    key: K,
+    value: V,
+}
+
+/// Open-addressing robin-hood table.
+pub struct OaTable<K, V> {
+    slots: Vec<Option<Entry<K, V>>>,
+    mask: usize,
+    len: usize,
+}
+
+impl<K: Eq + std::hash::Hash, V> Default for OaTable<K, V> {
+    fn default() -> Self {
+        Self::with_capacity(8)
+    }
+}
+
+impl<K: Eq + std::hash::Hash, V> OaTable<K, V> {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.next_power_of_two().max(8);
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize_with(cap, || None);
+        OaTable { slots, mask: cap - 1, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    fn distance(&self, hash: u64, slot: usize) -> usize {
+        let home = (hash as usize) & self.mask;
+        slot.wrapping_sub(home) & self.mask
+    }
+
+    fn grow(&mut self) {
+        let mut bigger = OaTable::with_capacity(self.slots.len() * 2);
+        for e in self.slots.drain(..).flatten() {
+            bigger.insert_hashed(e.hash, e.key, e.value);
+        }
+        *self = bigger;
+    }
+
+    fn insert_hashed(&mut self, hash: u64, key: K, value: V) -> Option<V> {
+        if (self.len + 1) * 4 > self.slots.len() * 3 {
+            self.grow();
+        }
+        let mask = self.mask;
+        let distance = |hash: u64, slot: usize| slot.wrapping_sub((hash as usize) & mask) & mask;
+        let mut idx = (hash as usize) & mask;
+        let mut probe = Entry { hash, key, value };
+        let mut dist = 0usize;
+        loop {
+            match &mut self.slots[idx] {
+                slot @ None => {
+                    *slot = Some(probe);
+                    self.len += 1;
+                    return None;
+                }
+                Some(e) if e.hash == probe.hash && e.key == probe.key => {
+                    return Some(std::mem::replace(&mut e.value, probe.value));
+                }
+                Some(e) => {
+                    let their_dist = distance(e.hash, idx);
+                    if their_dist < dist {
+                        // Robin hood: steal from the rich.
+                        std::mem::swap(e, &mut probe);
+                        dist = their_dist;
+                    }
+                }
+            }
+            idx = (idx + 1) & mask;
+            dist += 1;
+        }
+    }
+
+    pub fn insert(&mut self, key: K, value: V) -> Option<V> {
+        let hash = fxhash(&key);
+        self.insert_hashed(hash, key, value)
+    }
+
+    #[inline]
+    fn find_slot<Q>(&self, key: &Q) -> Option<usize>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        let hash = fxhash(key);
+        let mut idx = (hash as usize) & self.mask;
+        let mut dist = 0usize;
+        loop {
+            match &self.slots[idx] {
+                None => return None,
+                Some(e) => {
+                    if e.hash == hash && e.key.borrow() == key {
+                        return Some(idx);
+                    }
+                    // Robin-hood invariant: if this entry is closer to home
+                    // than our probe distance, the key cannot be present.
+                    if self.distance(e.hash, idx) < dist {
+                        return None;
+                    }
+                }
+            }
+            idx = (idx + 1) & self.mask;
+            dist += 1;
+            if dist > self.slots.len() {
+                return None;
+            }
+        }
+    }
+
+    pub fn get<Q>(&self, key: &Q) -> Option<&V>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        self.find_slot(key).map(|i| &self.slots[i].as_ref().unwrap().value)
+    }
+
+    pub fn get_mut<Q>(&mut self, key: &Q) -> Option<&mut V>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        self.find_slot(key)
+            .map(|i| &mut self.slots[i].as_mut().unwrap().value)
+    }
+
+    pub fn contains_key<Q>(&self, key: &Q) -> bool
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        self.find_slot(key).is_some()
+    }
+
+    pub fn remove<Q>(&mut self, key: &Q) -> Option<V>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        let mut idx = self.find_slot(key)?;
+        let removed = self.slots[idx].take().unwrap();
+        self.len -= 1;
+        // Backward-shift deletion: pull successors left until a hole or a
+        // home-positioned entry.
+        loop {
+            let next = (idx + 1) & self.mask;
+            let shift = match &self.slots[next] {
+                Some(e) => self.distance(e.hash, next) > 0,
+                None => false,
+            };
+            if !shift {
+                break;
+            }
+            self.slots[idx] = self.slots[next].take();
+            idx = next;
+        }
+        Some(removed.value)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.slots
+            .iter()
+            .filter_map(|s| s.as_ref().map(|e| (&e.key, &e.value)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove_basic() {
+        let mut t = OaTable::default();
+        assert_eq!(t.insert("a".to_string(), 1), None);
+        assert_eq!(t.insert("b".to_string(), 2), None);
+        assert_eq!(t.insert("a".to_string(), 3), Some(1));
+        assert_eq!(t.get("a"), Some(&3));
+        assert_eq!(t.get("b"), Some(&2));
+        assert_eq!(t.get("c"), None);
+        assert_eq!(t.remove("a"), Some(3));
+        assert_eq!(t.get("a"), None);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn grows_and_keeps_everything() {
+        let mut t = OaTable::with_capacity(8);
+        for i in 0..10_000u64 {
+            t.insert(i, i * 7);
+        }
+        assert_eq!(t.len(), 10_000);
+        for i in 0..10_000u64 {
+            assert_eq!(t.get(&i), Some(&(i * 7)), "key {i}");
+        }
+    }
+
+    #[test]
+    fn backward_shift_deletion_preserves_lookups() {
+        let mut t = OaTable::with_capacity(8);
+        for i in 0..1000u64 {
+            t.insert(i, i);
+        }
+        // Remove every third key; everything else must stay findable.
+        for i in (0..1000u64).step_by(3) {
+            assert_eq!(t.remove(&i), Some(i));
+        }
+        for i in 0..1000u64 {
+            if i % 3 == 0 {
+                assert_eq!(t.get(&i), None);
+            } else {
+                assert_eq!(t.get(&i), Some(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn get_mut_mutates() {
+        let mut t = OaTable::default();
+        t.insert(5u64, 10u64);
+        *t.get_mut(&5).unwrap() += 1;
+        assert_eq!(t.get(&5), Some(&11));
+    }
+
+    #[test]
+    fn iter_sees_all() {
+        let mut t = OaTable::default();
+        for i in 0..100u64 {
+            t.insert(i, i);
+        }
+        let mut seen: Vec<u64> = t.iter().map(|(k, _)| *k).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_model_equivalence() {
+        // Random op sequences agree with std HashMap.
+        check::<Vec<(u8, u8, bool)>>("oatable-model", 120, |ops| {
+            let mut t = OaTable::default();
+            let mut m = HashMap::new();
+            for &(k, v, del) in ops {
+                if del {
+                    assert_eq!(t.remove(&k), m.remove(&k));
+                } else {
+                    assert_eq!(t.insert(k, v), m.insert(k, v));
+                }
+                if t.len() != m.len() {
+                    return false;
+                }
+            }
+            m.iter().all(|(k, v)| t.get(k) == Some(v))
+        });
+    }
+
+    #[test]
+    fn fxhash_deterministic() {
+        assert_eq!(fxhash(&42u64), fxhash(&42u64));
+        assert_ne!(fxhash(&42u64), fxhash(&43u64));
+        assert_eq!(fxhash("abc"), fxhash("abc"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Wire codec — the serde/bincode stand-in used by the delegation channel.
+//!
+//! The paper serializes `apply_with` arguments and all closure return
+//! values with serde + bincode (§4.3.3, §5.1): *"any type that can be
+//! serialized and deserialized may pass over the delegation channel in
+//! serialized form"*. Neither crate is available offline, so this module
+//! provides [`Wire`], a compact little-endian binary codec with the two
+//! properties the channel design depends on:
+//!
+//! 1. **Statically-sized types advertise their size** ([`Wire::FIXED_SIZE`])
+//!    so fixed-size responses are not length-prefixed in the response slot
+//!    (§5.3: "The size of each response is often statically known, in which
+//!    case it is not encoded in the channel").
+//! 2. **Variable-size values are preceded by their size** (varint), exactly
+//!    like the paper's variable responses.
+//!
+//! Implementations cover the primitive types, tuples, `Option`, `Result`,
+//! `String`, `Vec<T>`, fixed arrays, and `()`; user types implement `Wire`
+//! by composing fields (see `kvstore::proto` for a realistic example).
+
+mod wire;
+
+pub use wire::{Wire, WireError, WireReader, WireWriter};
+
+/// Serialize a value to a fresh byte vector.
+pub fn to_bytes<T: Wire>(v: &T) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    v.write(&mut w);
+    w.into_vec()
+}
+
+/// Deserialize a value from bytes, requiring full consumption.
+pub fn from_bytes<T: Wire>(bytes: &[u8]) -> Result<T, WireError> {
+    let mut r = WireReader::new(bytes);
+    let v = T::read(&mut r)?;
+    if !r.is_empty() {
+        return Err(WireError::TrailingBytes(r.remaining()));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    fn roundtrip<T: Wire + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = to_bytes(&v);
+        let back: T = from_bytes(&bytes).expect("decode");
+        assert_eq!(back, v);
+        if let Some(fixed) = T::FIXED_SIZE {
+            assert_eq!(bytes.len(), fixed, "FIXED_SIZE mismatch for {v:?}");
+        }
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(());
+        roundtrip(true);
+        roundtrip(false);
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(u16::MAX);
+        roundtrip(u32::MAX);
+        roundtrip(u64::MAX);
+        roundtrip(i8::MIN);
+        roundtrip(i32::MIN);
+        roundtrip(i64::MIN);
+        roundtrip(-0.0f32);
+        roundtrip(std::f64::consts::PI);
+        roundtrip(usize::MAX as u64);
+    }
+
+    #[test]
+    fn compound_roundtrip() {
+        roundtrip((1u32, 2u64, 3i8));
+        roundtrip(Some(42u16));
+        roundtrip(None::<u16>);
+        roundtrip(Ok::<u8, String>(7));
+        roundtrip(Err::<u8, String>("nope".into()));
+        roundtrip("hello world".to_string());
+        roundtrip(String::new());
+        roundtrip(vec![1u64, 2, 3]);
+        roundtrip(Vec::<u8>::new());
+        roundtrip([1u32, 2, 3, 4]);
+        roundtrip((vec!["a".to_string(), "b".to_string()], Some((1u8, 2u8))));
+    }
+
+    #[test]
+    fn fixed_size_advertised_correctly() {
+        assert_eq!(<()>::FIXED_SIZE, Some(0));
+        assert_eq!(u8::FIXED_SIZE, Some(1));
+        assert_eq!(u64::FIXED_SIZE, Some(8));
+        assert_eq!(<(u32, u16)>::FIXED_SIZE, Some(6));
+        assert_eq!(<[u16; 4]>::FIXED_SIZE, Some(8));
+        assert_eq!(String::FIXED_SIZE, None);
+        assert_eq!(Vec::<u8>::FIXED_SIZE, None);
+        assert_eq!(Option::<u8>::FIXED_SIZE, None);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let bytes = to_bytes(&12345u64);
+        for cut in 0..bytes.len() {
+            assert!(from_bytes::<u64>(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_error() {
+        let mut bytes = to_bytes(&1u8);
+        bytes.push(0);
+        assert!(matches!(
+            from_bytes::<u8>(&bytes),
+            Err(WireError::TrailingBytes(1))
+        ));
+    }
+
+    #[test]
+    fn bad_utf8_rejected() {
+        // length-1 string with invalid byte
+        let bytes = vec![1u8, 0xFF];
+        assert!(from_bytes::<String>(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_enum_tag_rejected() {
+        let bytes = vec![7u8];
+        assert!(from_bytes::<Option<u8>>(&bytes).is_err());
+        assert!(from_bytes::<bool>(&bytes).is_err());
+    }
+
+    #[test]
+    fn huge_length_prefix_rejected_without_alloc() {
+        // varint length claiming ~u64::MAX elements must not OOM.
+        let mut w = WireWriter::new();
+        w.put_varint(u64::MAX);
+        let bytes = w.into_vec();
+        assert!(from_bytes::<Vec<u64>>(&bytes).is_err());
+    }
+
+    // ---- property tests ----
+
+    #[test]
+    fn prop_u64_roundtrip() {
+        check::<u64>("wire-u64", 300, |&x| from_bytes::<u64>(&to_bytes(&x)) == Ok(x));
+    }
+
+    #[test]
+    fn prop_vec_u8_roundtrip() {
+        check::<Vec<u8>>("wire-vec-u8", 300, |v| {
+            from_bytes::<Vec<u8>>(&to_bytes(v)).as_ref() == Ok(v)
+        });
+    }
+
+    #[test]
+    fn prop_string_roundtrip() {
+        check::<String>("wire-string", 300, |s| {
+            from_bytes::<String>(&to_bytes(s)).as_ref() == Ok(s)
+        });
+    }
+
+    #[test]
+    fn prop_tuple_roundtrip() {
+        check::<(u32, String, Vec<u16>)>("wire-tuple", 200, |t| {
+            from_bytes::<(u32, String, Vec<u16>)>(&to_bytes(t)).as_ref() == Ok(t)
+        });
+    }
+
+    #[test]
+    fn prop_varint_roundtrip() {
+        check::<u64>("wire-varint", 500, |&x| {
+            let mut w = WireWriter::new();
+            w.put_varint(x);
+            let v = w.into_vec();
+            let mut r = WireReader::new(&v);
+            r.get_varint() == Ok(x) && r.is_empty()
+        });
+    }
+}

@@ -1,0 +1,439 @@
+//! The [`Wire`] trait and its reader/writer, plus implementations for the
+//! standard types the delegation channel carries.
+
+use std::fmt;
+
+/// Decoding errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the value was complete (needed, available).
+    Truncated { needed: usize, available: usize },
+    /// An enum/bool tag byte had an invalid value.
+    BadTag(u8),
+    /// A string was not valid UTF-8.
+    BadUtf8,
+    /// A length prefix exceeded the remaining input (element-count sanity).
+    BadLength(u64),
+    /// A varint ran past 10 bytes.
+    BadVarint,
+    /// Bytes were left over after a full-value decode.
+    TrailingBytes(usize),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { needed, available } => {
+                write!(f, "truncated input: needed {needed}, had {available}")
+            }
+            WireError::BadTag(t) => write!(f, "invalid tag byte {t}"),
+            WireError::BadUtf8 => write!(f, "invalid utf-8 in string"),
+            WireError::BadLength(l) => write!(f, "implausible length {l}"),
+            WireError::BadVarint => write!(f, "varint longer than 10 bytes"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Byte sink for encoding. Grows a `Vec<u8>`; the channel writes the
+/// resulting bytes into slot memory (or encodes directly into a scratch
+/// buffer reused per worker).
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl Default for WireWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        WireWriter { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        WireWriter { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Reuse an existing buffer (cleared) to avoid allocation on hot paths.
+    pub fn reuse(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        WireWriter { buf }
+    }
+
+    #[inline]
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// LEB128-style varint (used for lengths).
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+/// Byte source for decoding.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    #[inline]
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { needed: n, available: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn get_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_varint(&mut self) -> Result<u64, WireError> {
+        let mut v = 0u64;
+        for i in 0..10 {
+            let b = self.get_u8()?;
+            v |= ((b & 0x7f) as u64) << (7 * i);
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(WireError::BadVarint)
+    }
+
+    /// Read a varint length and sanity-check it against remaining input,
+    /// assuming elements occupy at least `min_elem_size` bytes each. This
+    /// blocks hostile/corrupt length prefixes from causing huge allocations.
+    pub fn get_len(&mut self, min_elem_size: usize) -> Result<usize, WireError> {
+        let l = self.get_varint()?;
+        let floor = min_elem_size.max(1) as u64;
+        if l > (self.remaining() as u64) / floor + 1 {
+            // +1 tolerates zero-size-element edge cases
+            if l.saturating_mul(floor) > self.remaining() as u64 {
+                return Err(WireError::BadLength(l));
+            }
+        }
+        Ok(l as usize)
+    }
+}
+
+/// A value that can traverse the delegation channel in serialized form.
+pub trait Wire: Sized {
+    /// `Some(n)` iff every value of this type encodes to exactly `n` bytes.
+    const FIXED_SIZE: Option<usize>;
+
+    fn write(&self, w: &mut WireWriter);
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError>;
+
+    /// Exact encoded size of this particular value.
+    fn encoded_size(&self) -> usize {
+        match Self::FIXED_SIZE {
+            Some(n) => n,
+            None => {
+                let mut w = WireWriter::new();
+                self.write(&mut w);
+                w.len()
+            }
+        }
+    }
+}
+
+impl Wire for () {
+    const FIXED_SIZE: Option<usize> = Some(0);
+    fn write(&self, _w: &mut WireWriter) {}
+    fn read(_r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(())
+    }
+}
+
+impl Wire for bool {
+    const FIXED_SIZE: Option<usize> = Some(1);
+    fn write(&self, w: &mut WireWriter) {
+        w.put_u8(*self as u8);
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+macro_rules! wire_num {
+    ($($t:ty),*) => {$(
+        impl Wire for $t {
+            const FIXED_SIZE: Option<usize> = Some(std::mem::size_of::<$t>());
+            #[inline]
+            fn write(&self, w: &mut WireWriter) {
+                w.put_bytes(&self.to_le_bytes());
+            }
+            #[inline]
+            fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+                let b = r.take(std::mem::size_of::<$t>())?;
+                Ok(<$t>::from_le_bytes(b.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+wire_num!(u8, u16, u32, u64, u128, i8, i16, i32, i64, i128, f32, f64);
+
+// usize always encodes as u64 for cross-platform stability.
+impl Wire for usize {
+    const FIXED_SIZE: Option<usize> = Some(8);
+    fn write(&self, w: &mut WireWriter) {
+        (*self as u64).write(w);
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(u64::read(r)? as usize)
+    }
+}
+
+impl Wire for char {
+    const FIXED_SIZE: Option<usize> = Some(4);
+    fn write(&self, w: &mut WireWriter) {
+        (*self as u32).write(w);
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        char::from_u32(u32::read(r)?).ok_or(WireError::BadTag(0))
+    }
+}
+
+impl Wire for String {
+    const FIXED_SIZE: Option<usize> = None;
+    fn write(&self, w: &mut WireWriter) {
+        w.put_varint(self.len() as u64);
+        w.put_bytes(self.as_bytes());
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let len = r.get_len(1)?;
+        let bytes = r.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    const FIXED_SIZE: Option<usize> = None;
+    fn write(&self, w: &mut WireWriter) {
+        w.put_varint(self.len() as u64);
+        for x in self {
+            x.write(w);
+        }
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let min = T::FIXED_SIZE.unwrap_or(1).max(1);
+        let len = r.get_len(min)?;
+        let mut v = Vec::with_capacity(len.min(r.remaining() / min + 1));
+        for _ in 0..len {
+            v.push(T::read(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    const FIXED_SIZE: Option<usize> = None;
+    fn write(&self, w: &mut WireWriter) {
+        match self {
+            None => w.put_u8(0),
+            Some(x) => {
+                w.put_u8(1);
+                x.write(w);
+            }
+        }
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::read(r)?)),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+impl<T: Wire, E: Wire> Wire for Result<T, E> {
+    const FIXED_SIZE: Option<usize> = None;
+    fn write(&self, w: &mut WireWriter) {
+        match self {
+            Ok(x) => {
+                w.put_u8(0);
+                x.write(w);
+            }
+            Err(e) => {
+                w.put_u8(1);
+                e.write(w);
+            }
+        }
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.get_u8()? {
+            0 => Ok(Ok(T::read(r)?)),
+            1 => Ok(Err(E::read(r)?)),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+impl<T: Wire, const N: usize> Wire for [T; N] {
+    const FIXED_SIZE: Option<usize> = match T::FIXED_SIZE {
+        Some(n) => Some(n * N),
+        None => None,
+    };
+    fn write(&self, w: &mut WireWriter) {
+        for x in self {
+            x.write(w);
+        }
+    }
+    fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        // Build via Vec to avoid MaybeUninit gymnastics; N is small in
+        // practice (channel payloads).
+        let mut v = Vec::with_capacity(N);
+        for _ in 0..N {
+            v.push(T::read(r)?);
+        }
+        v.try_into().map_err(|_| WireError::BadLength(N as u64))
+    }
+}
+
+const fn sum_fixed(sizes: &[Option<usize>]) -> Option<usize> {
+    let mut total = 0;
+    let mut i = 0;
+    while i < sizes.len() {
+        match sizes[i] {
+            Some(n) => total += n,
+            None => return None,
+        }
+        i += 1;
+    }
+    Some(total)
+}
+
+macro_rules! wire_tuple {
+    ($($t:ident . $idx:tt),+) => {
+        impl<$($t: Wire),+> Wire for ($($t,)+) {
+            const FIXED_SIZE: Option<usize> = sum_fixed(&[$($t::FIXED_SIZE),+]);
+            fn write(&self, w: &mut WireWriter) {
+                $(self.$idx.write(w);)+
+            }
+            fn read(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+                Ok(($($t::read(r)?,)+))
+            }
+        }
+    };
+}
+wire_tuple!(A.0);
+wire_tuple!(A.0, B.1);
+wire_tuple!(A.0, B.1, C.2);
+wire_tuple!(A.0, B.1, C.2, D.3);
+wire_tuple!(A.0, B.1, C.2, D.3, E.4);
+wire_tuple!(A.0, B.1, C.2, D.3, E.4, F.5);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_sizes() {
+        for (v, len) in [(0u64, 1), (127, 1), (128, 2), (16383, 2), (16384, 3), (u64::MAX, 10)] {
+            let mut w = WireWriter::new();
+            w.put_varint(v);
+            assert_eq!(w.len(), len, "varint({v})");
+        }
+    }
+
+    #[test]
+    fn reader_take_bounds() {
+        let mut r = WireReader::new(&[1, 2, 3]);
+        assert_eq!(r.take(2).unwrap(), &[1, 2]);
+        assert_eq!(r.remaining(), 1);
+        assert!(r.take(2).is_err());
+        assert_eq!(r.take(1).unwrap(), &[3]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn encoded_size_matches_actual() {
+        let vals: Vec<Box<dyn Fn() -> (usize, usize)>> = vec![
+            Box::new(|| {
+                let v = 42u64;
+                (v.encoded_size(), crate::codec::to_bytes(&v).len())
+            }),
+            Box::new(|| {
+                let v = "hello".to_string();
+                (v.encoded_size(), crate::codec::to_bytes(&v).len())
+            }),
+            Box::new(|| {
+                let v = vec![1u16, 2, 3];
+                (v.encoded_size(), crate::codec::to_bytes(&v).len())
+            }),
+        ];
+        for f in vals {
+            let (hint, actual) = f();
+            assert_eq!(hint, actual);
+        }
+    }
+
+    #[test]
+    fn writer_reuse_clears() {
+        let mut w = WireWriter::new();
+        w.put_bytes(&[1, 2, 3]);
+        let w2 = WireWriter::reuse(w.into_vec());
+        assert!(w2.is_empty());
+    }
+}

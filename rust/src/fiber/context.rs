@@ -1,0 +1,115 @@
+//! The x86-64 SysV context switch at the heart of the fiber runtime.
+//!
+//! A *context* is just a saved stack pointer; everything else (the six
+//! callee-saved registers) lives on the stack it points to. Switching is
+//! ~12 instructions and touches one cache line of each stack — this is what
+//! makes `apply()`'s suspend/resume cheap enough for the paper's
+//! fiber-per-request model (§3.3).
+//!
+//! Safety model: fibers never migrate between OS threads, so a context is
+//! only ever switched from the thread that created it. Panics never unwind
+//! across a switch (the fiber entry wraps user code in `catch_unwind`).
+
+#[cfg(not(target_arch = "x86_64"))]
+compile_error!("the fiber runtime implements x86-64 SysV context switching only");
+
+/// A saved execution context (stack pointer into a stack holding the
+/// callee-saved registers and a return address).
+#[derive(Debug)]
+#[repr(C)]
+pub struct Context {
+    pub(crate) rsp: *mut u8,
+}
+
+impl Context {
+    /// A context that must be written (by a switch *away* from it) before
+    /// it is ever restored.
+    pub fn empty() -> Context {
+        Context { rsp: std::ptr::null_mut() }
+    }
+}
+
+/// Switch from the current context to `restore_rsp`, saving the current
+/// context's stack pointer through `save`.
+///
+/// # Safety
+/// - `restore_rsp` must be a stack pointer previously produced by this
+///   function (or by [`prepare_stack`]) on the **same OS thread**.
+/// - The stack behind `restore_rsp` must be live and not in use by any
+///   other execution.
+#[unsafe(naked)]
+pub unsafe extern "sysv64" fn raw_switch(save: *mut *mut u8, restore_rsp: *mut u8) {
+    core::arch::naked_asm!(
+        // Save callee-saved registers on the current stack.
+        "push rbp",
+        "push rbx",
+        "push r12",
+        "push r13",
+        "push r14",
+        "push r15",
+        // Publish the old stack pointer, adopt the new one.
+        "mov [rdi], rsp",
+        "mov rsp, rsi",
+        // Restore the target's callee-saved registers and return into it.
+        "pop r15",
+        "pop r14",
+        "pop r13",
+        "pop r12",
+        "pop rbx",
+        "pop rbp",
+        "ret",
+    )
+}
+
+/// First-run trampoline: a brand-new fiber's prepared stack "returns" here.
+/// The fiber pointer was parked in `rbx` by [`prepare_stack`]; move it into
+/// the first argument register and enter the Rust entry point.
+#[unsafe(naked)]
+unsafe extern "sysv64" fn fiber_trampoline() {
+    core::arch::naked_asm!(
+        "mov rdi, rbx",
+        "call {entry}",
+        // The entry point never returns; trap if it somehow does.
+        "ud2",
+        entry = sym super::fiber_entry,
+    )
+}
+
+/// Prepare a fresh stack so that switching to the returned rsp enters
+/// [`fiber_trampoline`] with `fiber_ptr` in `rbx`.
+///
+/// Layout (addresses descending from `top`, which must be 16-aligned):
+/// ```text
+///   top-8  : fiber_trampoline        <- 'ret' target
+///   top-16 : rbp = 0
+///   top-24 : rbx = fiber_ptr
+///   top-32 : r12 = 0
+///   top-40 : r13 = 0
+///   top-48 : r14 = 0
+///   top-56 : r15 = 0                 <- returned rsp
+/// ```
+/// After the six pops and the `ret`, rsp = `top`, which is 16-aligned, so
+/// the `call` in the trampoline gives the entry function a correctly
+/// aligned frame (rsp ≡ 8 mod 16 at entry, per the SysV ABI).
+pub unsafe fn prepare_stack(top: *mut u8, fiber_ptr: *mut u8) -> *mut u8 {
+    debug_assert_eq!(top as usize % 16, 0, "stack top must be 16-aligned");
+    let mut p = top as *mut u64;
+    // SAFETY: caller guarantees at least 56 writable bytes below `top`.
+    unsafe {
+        p = p.sub(1);
+        p.write(fiber_trampoline as *const () as usize as u64); // ret target
+        p = p.sub(1);
+        p.write(0); // rbp
+        p = p.sub(1);
+        p.write(fiber_ptr as u64); // rbx
+        p = p.sub(1);
+        p.write(0); // r12
+        p = p.sub(1);
+        p.write(0); // r13
+        p = p.sub(1);
+        p.write(0); // r14
+        p = p.sub(1);
+        p.write(0); // r15
+    }
+    p as *mut u8
+}

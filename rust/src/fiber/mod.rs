@@ -1,0 +1,522 @@
+//! Stackful, delegation-aware user threads (§3.3) and the per-worker
+//! cooperative executor that schedules them (§5.2).
+//!
+//! Fibers share a kernel thread but execute on their own `mmap`'d stacks,
+//! "enabling a thread to do useful work for one fiber while another waits
+//! for a response from a trustee". The runtime builds on three primitives:
+//!
+//! - [`Executor::spawn`] — create a fiber from a closure
+//! - [`suspend`] — park the current fiber, handing its id to a stash
+//!   callback (the waker registers it against a pending response)
+//! - [`Executor::resume`] — make a parked fiber runnable again
+//!
+//! Fibers never migrate across OS threads, so all executor state is
+//! thread-local and entirely free of atomic instructions — one of the
+//! paper's design goals (§2: "implement Trust<T> without any use of atomic
+//! instructions").
+//!
+//! Panic policy: a panic in fiber code is caught at the fiber boundary and
+//! re-thrown on the scheduler stack by [`Executor::run_one`] — panics never
+//! unwind across a context switch.
+
+mod context;
+mod stack;
+
+pub use context::Context;
+pub use stack::{Stack, StackPool, DEFAULT_STACK_SIZE};
+
+use context::{prepare_stack, raw_switch};
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+/// Identifies a fiber within its executor (slab index).
+pub type FiberId = usize;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum State {
+    Ready,
+    Running,
+    Parked,
+    Done,
+}
+
+pub(crate) struct Fiber {
+    ctx: Context,
+    stack: Option<Stack>,
+    state: State,
+    entry: Option<Box<dyn FnOnce() + 'static>>,
+}
+
+thread_local! {
+    static EXEC: Cell<*mut Executor> = const { Cell::new(std::ptr::null_mut()) };
+}
+
+#[inline]
+fn tls_exec() -> *mut Executor {
+    let p = EXEC.with(|c| c.get());
+    assert!(!p.is_null(), "no fiber executor installed on this thread");
+    p
+}
+
+/// Is a fiber executor installed on this thread?
+pub fn executor_installed() -> bool {
+    EXEC.with(|c| !c.get().is_null())
+}
+
+/// Run a closure with mutable access to the thread's installed executor.
+///
+/// # Panics
+/// If no executor is installed.
+pub fn with_executor<R>(f: impl FnOnce(&mut Executor) -> R) -> R {
+    // SAFETY: the TLS pointer is only set while the executor is pinned and
+    // live (InstallGuard clears it); re-entrancy is the caller's burden and
+    // all crate-internal uses are non-reentrant.
+    unsafe { f(&mut *tls_exec()) }
+}
+
+/// Is the caller running inside a fiber (vs. on the scheduler stack)?
+pub fn in_fiber() -> bool {
+    EXEC.with(|c| {
+        let p = c.get();
+        // SAFETY: pointer installed by `install` and cleared before the
+        // executor is dropped.
+        !p.is_null() && unsafe { (*p).current.is_some() }
+    })
+}
+
+/// Id of the currently running fiber, if any.
+pub fn current_fiber() -> Option<FiberId> {
+    EXEC.with(|c| {
+        let p = c.get();
+        if p.is_null() {
+            None
+        } else {
+            unsafe { (*p).current }
+        }
+    })
+}
+
+/// Cooperatively yield the current fiber to the back of the ready queue.
+pub fn yield_now() {
+    // SAFETY: tls_exec is installed; we are inside a fiber (asserted).
+    unsafe {
+        let exec = tls_exec();
+        let id = (*exec).current.expect("yield_now outside fiber");
+        let f = (*exec).fiber_ptr(id);
+        (*f).state = State::Ready;
+        (*exec).ready.push_back(id);
+        raw_switch(&mut (*f).ctx.rsp, (*exec).sched_ctx.rsp);
+    }
+}
+
+/// Park the current fiber. `stash` receives the fiber id *before* the
+/// switch; store it wherever the wake-up condition lives, then call
+/// [`Executor::resume`] from this same thread to make it runnable again.
+///
+/// Single-thread discipline makes the handoff race-free: the resumer can
+/// only run after this fiber has actually switched away.
+pub fn suspend(stash: impl FnOnce(FiberId)) {
+    // SAFETY: executor installed; caller is a fiber (asserted).
+    unsafe {
+        let exec = tls_exec();
+        let id = (*exec).current.expect("suspend outside fiber context");
+        let f = (*exec).fiber_ptr(id);
+        (*f).state = State::Parked;
+        stash(id);
+        raw_switch(&mut (*f).ctx.rsp, (*exec).sched_ctx.rsp);
+    }
+}
+
+/// Fiber entry point, reached via the trampoline on first switch-in.
+pub(crate) unsafe extern "sysv64" fn fiber_entry(fiber: *mut Fiber) -> ! {
+    // SAFETY: `fiber` is the live Box<Fiber> this stack belongs to; the
+    // executor TLS pointer is installed (we got here via run_one).
+    unsafe {
+        let entry = (*fiber).entry.take().expect("fiber entered twice");
+        let result = catch_unwind(AssertUnwindSafe(entry));
+        let exec = tls_exec();
+        if let Err(payload) = result {
+            (*exec).pending_panic = Some(payload);
+        }
+        (*fiber).state = State::Done;
+        // Final switch back to the scheduler; the saved rsp is dead.
+        raw_switch(&mut (*fiber).ctx.rsp, (*exec).sched_ctx.rsp);
+    }
+    unreachable!("switched into a completed fiber")
+}
+
+/// A per-thread cooperative fiber executor.
+///
+/// Not `Send`/`Sync`: it must be driven by the thread that created it
+/// (enforced by the raw-pointer TLS installation).
+pub struct Executor {
+    sched_ctx: Context,
+    fibers: Vec<Option<Box<Fiber>>>,
+    free: Vec<FiberId>,
+    ready: VecDeque<FiberId>,
+    current: Option<FiberId>,
+    pool: StackPool,
+    pending_panic: Option<Box<dyn Any + Send + 'static>>,
+    live: usize,
+    /// Cumulative count of fibers ever spawned (metrics).
+    pub spawned_total: u64,
+    /// Cumulative count of context switches into fibers (metrics).
+    pub switches_total: u64,
+    _not_send: std::marker::PhantomData<*mut ()>,
+}
+
+impl Executor {
+    pub fn new() -> Box<Executor> {
+        Self::with_stack_size(DEFAULT_STACK_SIZE)
+    }
+
+    pub fn with_stack_size(stack_size: usize) -> Box<Executor> {
+        Box::new(Executor {
+            sched_ctx: Context::empty(),
+            fibers: Vec::new(),
+            free: Vec::new(),
+            ready: VecDeque::new(),
+            current: None,
+            pool: StackPool::new(stack_size, 64),
+            pending_panic: None,
+            live: 0,
+            spawned_total: 0,
+            switches_total: 0,
+            _not_send: std::marker::PhantomData,
+        })
+    }
+
+    /// Install this executor as the thread's executor; returns a guard that
+    /// uninstalls on drop. The executor must stay pinned (hence `Box`).
+    pub fn install(self: &mut Box<Executor>) -> InstallGuard {
+        let ptr: *mut Executor = &mut **self;
+        EXEC.with(|c| {
+            assert!(c.get().is_null(), "an executor is already installed");
+            c.set(ptr);
+        });
+        InstallGuard
+    }
+
+    fn fiber_ptr(&mut self, id: FiberId) -> *mut Fiber {
+        &mut **self.fibers[id].as_mut().expect("stale fiber id") as *mut Fiber
+    }
+
+    /// Create a fiber and enqueue it as ready.
+    pub fn spawn(&mut self, f: impl FnOnce() + 'static) -> FiberId {
+        let stack = self.pool.get();
+        let mut fiber = Box::new(Fiber {
+            ctx: Context::empty(),
+            stack: None,
+            state: State::Ready,
+            entry: Some(Box::new(f)),
+        });
+        let fiber_ptr: *mut Fiber = &mut *fiber;
+        // SAFETY: fresh stack; prepare_stack writes only below `top`.
+        fiber.ctx.rsp = unsafe { prepare_stack(stack.top(), fiber_ptr as *mut u8) };
+        fiber.stack = Some(stack);
+
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.fibers[i] = Some(fiber);
+                i
+            }
+            None => {
+                self.fibers.push(Some(fiber));
+                self.fibers.len() - 1
+            }
+        };
+        self.live += 1;
+        self.spawned_total += 1;
+        self.ready.push_back(id);
+        id
+    }
+
+    /// Make a parked fiber runnable. Panics if it isn't parked.
+    pub fn resume(&mut self, id: FiberId) {
+        let f = self.fibers[id].as_mut().expect("resume of dead fiber");
+        assert_eq!(f.state, State::Parked, "resume of non-parked fiber");
+        f.state = State::Ready;
+        self.ready.push_back(id);
+    }
+
+    /// Run one ready fiber until it suspends, yields, or completes.
+    /// Returns false if no fiber was ready. Must be called from the
+    /// scheduler stack (never from inside a fiber).
+    pub fn run_one(&mut self) -> bool {
+        assert!(self.current.is_none(), "run_one called from inside a fiber");
+        let Some(id) = self.ready.pop_front() else {
+            return false;
+        };
+        let fiber_ptr = self.fiber_ptr(id);
+        self.current = Some(id);
+        self.switches_total += 1;
+        // SAFETY: fiber_ptr is a live pinned Fiber on this thread whose ctx
+        // was produced by prepare_stack or a prior switch-out.
+        unsafe {
+            (*fiber_ptr).state = State::Running;
+            let sched_rsp: *mut *mut u8 = &mut self.sched_ctx.rsp;
+            raw_switch(sched_rsp, (*fiber_ptr).ctx.rsp);
+        }
+        self.current = None;
+        // SAFETY: fiber_ptr still live (completion only marks state).
+        let done = unsafe { (*fiber_ptr).state == State::Done };
+        if done {
+            self.recycle(id);
+        }
+        if let Some(p) = self.pending_panic.take() {
+            resume_unwind(p);
+        }
+        true
+    }
+
+    /// Drive fibers until the ready queue drains. Parked fibers stay
+    /// parked. Returns the number of fiber slices executed.
+    pub fn run_until_idle(&mut self) -> usize {
+        let mut n = 0;
+        while self.run_one() {
+            n += 1;
+        }
+        n
+    }
+
+    fn recycle(&mut self, id: FiberId) {
+        let mut fiber = self.fibers[id].take().expect("double recycle");
+        if let Some(stack) = fiber.stack.take() {
+            self.pool.put(stack);
+        }
+        self.free.push(id);
+        self.live -= 1;
+    }
+
+    /// Fibers alive (ready, running, or parked).
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Fibers currently ready to run.
+    pub fn ready_len(&self) -> usize {
+        self.ready.len()
+    }
+
+    pub fn has_ready(&self) -> bool {
+        !self.ready.is_empty()
+    }
+
+    /// State of a fiber id, if alive.
+    pub fn state(&self, id: FiberId) -> Option<State> {
+        self.fibers.get(id).and_then(|f| f.as_ref()).map(|f| f.state)
+    }
+
+    /// Number of stacks currently pooled for reuse (metrics/tests).
+    pub fn pooled_stacks(&self) -> usize {
+        self.pool.pooled()
+    }
+}
+
+/// RAII guard for the thread-local executor installation.
+pub struct InstallGuard;
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        EXEC.with(|c| c.set(std::ptr::null_mut()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn with_exec(f: impl FnOnce(&mut Executor)) {
+        let mut exec = Executor::with_stack_size(64 * 1024);
+        let _guard = exec.install();
+        f(&mut exec);
+    }
+
+    #[test]
+    fn spawn_and_complete() {
+        with_exec(|exec| {
+            let hit = Rc::new(Cell::new(false));
+            let h = hit.clone();
+            exec.spawn(move || h.set(true));
+            assert_eq!(exec.live(), 1);
+            assert!(exec.run_one());
+            assert!(hit.get());
+            assert_eq!(exec.live(), 0);
+            assert!(!exec.run_one());
+        });
+    }
+
+    #[test]
+    fn yield_round_robin() {
+        with_exec(|exec| {
+            let order = Rc::new(RefCell::new(Vec::new()));
+            for tag in 0..3 {
+                let o = order.clone();
+                exec.spawn(move || {
+                    o.borrow_mut().push((tag, 0));
+                    yield_now();
+                    o.borrow_mut().push((tag, 1));
+                });
+            }
+            exec.run_until_idle();
+            let got = order.borrow().clone();
+            assert_eq!(
+                got,
+                vec![(0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (2, 1)],
+                "fibers should interleave FIFO"
+            );
+        });
+    }
+
+    #[test]
+    fn suspend_and_resume() {
+        with_exec(|exec| {
+            let parked: Rc<Cell<Option<FiberId>>> = Rc::new(Cell::new(None));
+            let p = parked.clone();
+            let steps = Rc::new(Cell::new(0));
+            let s = steps.clone();
+            exec.spawn(move || {
+                s.set(1);
+                suspend(|id| p.set(Some(id)));
+                s.set(2);
+            });
+            exec.run_until_idle();
+            assert_eq!(steps.get(), 1, "fiber parked after step 1");
+            assert_eq!(exec.live(), 1);
+            let id = parked.get().expect("stash ran");
+            assert_eq!(exec.state(id), Some(State::Parked));
+            exec.resume(id);
+            exec.run_until_idle();
+            assert_eq!(steps.get(), 2);
+            assert_eq!(exec.live(), 0);
+        });
+    }
+
+    #[test]
+    fn fiber_spawns_fiber() {
+        with_exec(|exec| {
+            let hits = Rc::new(Cell::new(0));
+            let h = hits.clone();
+            exec.spawn(move || {
+                let h2 = h.clone();
+                // Spawning from inside a fiber goes through TLS.
+                with_executor(|e| e.spawn(move || h2.set(h2.get() + 10)));
+                h.set(h.get() + 1);
+            });
+            exec.run_until_idle();
+            assert_eq!(hits.get(), 11);
+        });
+    }
+
+    #[test]
+    fn many_fibers() {
+        with_exec(|exec| {
+            let sum = Rc::new(Cell::new(0u64));
+            for i in 0..500u64 {
+                let s = sum.clone();
+                exec.spawn(move || {
+                    yield_now();
+                    s.set(s.get() + i);
+                });
+            }
+            exec.run_until_idle();
+            assert_eq!(sum.get(), 500 * 499 / 2);
+            assert_eq!(exec.live(), 0);
+        });
+    }
+
+    #[test]
+    fn deep_stack_usage() {
+        with_exec(|exec| {
+            let ok = Rc::new(Cell::new(false));
+            let o = ok.clone();
+            exec.spawn(move || {
+                // Recurse enough to use a few KB of fiber stack.
+                fn rec(n: u64) -> u64 {
+                    let pad = [n; 16]; // force frame growth
+                    if n == 0 {
+                        pad[0]
+                    } else {
+                        rec(n - 1) + pad[15] % 2
+                    }
+                }
+                let v = rec(200);
+                o.set(v < 1000);
+            });
+            exec.run_until_idle();
+            assert!(ok.get());
+        });
+    }
+
+    #[test]
+    fn panic_propagates_to_scheduler() {
+        let result = std::panic::catch_unwind(|| {
+            with_exec(|exec| {
+                exec.spawn(|| panic!("boom in fiber"));
+                exec.run_until_idle();
+            });
+        });
+        let err = result.expect_err("panic should propagate");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom in fiber");
+    }
+
+    #[test]
+    fn panic_does_not_poison_other_fibers() {
+        with_exec(|exec| {
+            let hit = Rc::new(Cell::new(false));
+            let h = hit.clone();
+            exec.spawn(|| panic!("first dies"));
+            exec.spawn(move || h.set(true));
+            let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                exec.run_until_idle();
+            }));
+            // Second fiber still runnable after the first one's panic.
+            exec.run_until_idle();
+            assert!(hit.get());
+            assert_eq!(exec.live(), 0);
+        });
+    }
+
+    #[test]
+    fn in_fiber_and_current_reporting() {
+        with_exec(|exec| {
+            assert!(!in_fiber());
+            let seen = Rc::new(Cell::new(false));
+            let s = seen.clone();
+            exec.spawn(move || {
+                s.set(in_fiber() && current_fiber().is_some());
+            });
+            exec.run_until_idle();
+            assert!(seen.get());
+            assert!(!in_fiber());
+        });
+    }
+
+    #[test]
+    fn stacks_are_recycled() {
+        with_exec(|exec| {
+            for _ in 0..10 {
+                exec.spawn(|| {});
+            }
+            exec.run_until_idle();
+            assert!(exec.pooled_stacks() >= 1, "stacks returned to pool");
+            assert_eq!(exec.spawned_total, 10);
+        });
+    }
+
+    #[test]
+    fn ids_are_reused() {
+        with_exec(|exec| {
+            let a = exec.spawn(|| {});
+            exec.run_until_idle();
+            let b = exec.spawn(|| {});
+            exec.run_until_idle();
+            assert_eq!(a, b, "slab id should be recycled");
+        });
+    }
+}

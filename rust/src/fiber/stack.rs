@@ -1,0 +1,150 @@
+//! Fiber stacks: `mmap`-allocated with a PROT_NONE guard page, recycled
+//! through a per-thread pool (stack allocation is on the `launch()` hot
+//! path — §4.3 creates a temporary fiber per launched closure).
+
+use std::ptr::NonNull;
+
+/// Default usable stack size. Virtual memory only — pages are faulted in
+/// lazily, so a generous default costs little.
+pub const DEFAULT_STACK_SIZE: usize = 256 * 1024;
+
+fn page_size() -> usize {
+    // SAFETY: sysconf is always safe to call.
+    let sz = unsafe { libc::sysconf(libc::_SC_PAGESIZE) };
+    if sz <= 0 {
+        4096
+    } else {
+        sz as usize
+    }
+}
+
+/// An owned, guard-paged fiber stack.
+pub struct Stack {
+    /// Base of the mapping (the guard page).
+    base: NonNull<u8>,
+    /// Total mapping length including the guard page.
+    len: usize,
+}
+
+// The stack is plain memory; ownership moves with the Fiber.
+unsafe impl Send for Stack {}
+
+impl Stack {
+    /// Allocate a stack with at least `usable` usable bytes plus one guard
+    /// page at the low end (overflow faults instead of corrupting memory).
+    pub fn new(usable: usize) -> Stack {
+        let page = page_size();
+        let usable = usable.div_ceil(page) * page;
+        let len = usable + page;
+        // SAFETY: anonymous private mapping; checked for MAP_FAILED below.
+        let base = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_STACK,
+                -1,
+                0,
+            )
+        };
+        assert!(base != libc::MAP_FAILED, "mmap fiber stack failed");
+        // SAFETY: base is a fresh page-aligned mapping of >= 1 page.
+        unsafe {
+            let r = libc::mprotect(base, page, libc::PROT_NONE);
+            assert_eq!(r, 0, "mprotect guard page failed");
+        }
+        Stack {
+            base: NonNull::new(base as *mut u8).unwrap(),
+            len,
+        }
+    }
+
+    /// Highest address of the stack (stacks grow down), 16-byte aligned.
+    pub fn top(&self) -> *mut u8 {
+        let top = unsafe { self.base.as_ptr().add(self.len) };
+        ((top as usize) & !15) as *mut u8
+    }
+
+    /// Usable bytes (excludes guard page).
+    pub fn usable(&self) -> usize {
+        self.len - page_size()
+    }
+}
+
+impl Drop for Stack {
+    fn drop(&mut self) {
+        // SAFETY: we own the whole mapping.
+        unsafe {
+            libc::munmap(self.base.as_ptr() as *mut libc::c_void, self.len);
+        }
+    }
+}
+
+/// Per-thread stack pool: `launch()` churn reuses warm stacks instead of
+/// paying mmap/munmap per fiber.
+pub struct StackPool {
+    free: Vec<Stack>,
+    size: usize,
+    max_pooled: usize,
+}
+
+impl StackPool {
+    pub fn new(size: usize, max_pooled: usize) -> StackPool {
+        StackPool { free: Vec::new(), size, max_pooled }
+    }
+
+    pub fn get(&mut self) -> Stack {
+        self.free.pop().unwrap_or_else(|| Stack::new(self.size))
+    }
+
+    pub fn put(&mut self, s: Stack) {
+        if self.free.len() < self.max_pooled && s.usable() >= self.size {
+            self.free.push(s);
+        }
+    }
+
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_alloc_and_use() {
+        let s = Stack::new(64 * 1024);
+        assert!(s.usable() >= 64 * 1024);
+        let top = s.top();
+        assert_eq!(top as usize % 16, 0);
+        // Touch memory near the top (valid region).
+        unsafe {
+            let p = top.sub(8);
+            p.write(0xAB);
+            assert_eq!(p.read(), 0xAB);
+        }
+    }
+
+    #[test]
+    fn pool_reuses() {
+        let mut pool = StackPool::new(32 * 1024, 4);
+        let a = pool.get();
+        let a_top = a.top() as usize;
+        pool.put(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.get();
+        assert_eq!(b.top() as usize, a_top, "stack should be reused");
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_caps_retention() {
+        let mut pool = StackPool::new(16 * 1024, 2);
+        let stacks: Vec<Stack> = (0..4).map(|_| pool.get()).collect();
+        for s in stacks {
+            pool.put(s);
+        }
+        assert_eq!(pool.pooled(), 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! Load-generating TCP client for the KV store benchmarks (§6.3): "The TCP
+//! client continuously maintains a queue of parallel queries over the
+//! socket, such that the server always has new requests to serve", with
+//! out-of-order response acceptance and per-request latency tracking.
+
+use super::proto::{self, FrameCursor};
+use crate::util::stats::LatencyHist;
+use crate::util::{KeyDist, Rng};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// 8-byte key encoding shared by client and prefill (paper: "The key size
+/// is 8 bytes and the value size is 16 bytes").
+pub fn key_bytes(k: u64) -> Vec<u8> {
+    k.to_le_bytes().to_vec()
+}
+
+/// Workload configuration for one run.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub addr: std::net::SocketAddr,
+    /// Concurrent client threads (each with its own connection).
+    pub threads: usize,
+    /// Outstanding requests per connection.
+    pub pipeline: usize,
+    /// Total operations per thread.
+    pub ops_per_thread: u64,
+    /// Key space size and distribution spec ("uniform" | "zipf[:a]").
+    pub keys: u64,
+    pub dist: String,
+    /// Percentage of writes (rest are reads).
+    pub write_pct: u32,
+    pub val_len: usize,
+    pub seed: u64,
+}
+
+/// Aggregated results.
+pub struct LoadStats {
+    pub ops: u64,
+    pub elapsed: std::time::Duration,
+    pub hist: LatencyHist,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LoadStats {
+    pub fn throughput(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+/// Run the workload; returns aggregate stats.
+pub fn run_load(cfg: &LoadConfig) -> LoadStats {
+    let start = Instant::now();
+    let handles: Vec<_> = (0..cfg.threads)
+        .map(|t| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_one_connection(&cfg, t as u64))
+        })
+        .collect();
+    let mut hist = LatencyHist::new();
+    let mut ops = 0;
+    let mut hits = 0;
+    let mut misses = 0;
+    for h in handles {
+        let (h_ops, h_hist, h_hits, h_misses) = h.join().expect("client thread");
+        ops += h_ops;
+        hits += h_hits;
+        misses += h_misses;
+        hist.merge(&h_hist);
+    }
+    LoadStats { ops, elapsed: start.elapsed(), hist, hits, misses }
+}
+
+fn run_one_connection(cfg: &LoadConfig, tid: u64) -> (u64, LatencyHist, u64, u64) {
+    let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0x9E37_79B9)));
+    let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
+    let mut stream = TcpStream::connect(cfg.addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    stream.set_nonblocking(true).expect("nonblocking");
+
+    let mut hist = LatencyHist::new();
+    let mut sent = 0u64;
+    let mut done = 0u64;
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut next_id = 0u64;
+    let mut in_flight: HashMap<u64, Instant> = HashMap::new();
+    let mut out = Vec::with_capacity(64 * 1024);
+    let mut wcur = 0usize;
+    let mut inbuf = Vec::with_capacity(64 * 1024);
+    let mut cursor = FrameCursor::new();
+    let val = vec![b'x'; cfg.val_len];
+
+    while done < cfg.ops_per_thread {
+        // Top up the pipeline.
+        while sent < cfg.ops_per_thread && in_flight.len() < cfg.pipeline {
+            let key = key_bytes(dist.sample(&mut rng));
+            let id = next_id;
+            next_id += 1;
+            if rng.pct(cfg.write_pct) {
+                proto::write_request(&mut out, id, proto::OP_PUT, &key, &val);
+            } else {
+                proto::write_request(&mut out, id, proto::OP_GET, &key, &[]);
+            }
+            in_flight.insert(id, Instant::now());
+            sent += 1;
+        }
+        // Flush writes (partial ok).
+        loop {
+            if wcur >= out.len() {
+                out.clear();
+                wcur = 0;
+                break;
+            }
+            match stream.write(&out[wcur..]) {
+                Ok(0) => panic!("server closed"),
+                Ok(n) => wcur += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => panic!("write: {e}"),
+            }
+        }
+        // Drain responses.
+        let mut chunk = [0u8; 32 * 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => panic!("server closed"),
+            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => panic!("read: {e}"),
+        }
+        while let Some(resp) = cursor.next_response(&inbuf) {
+            let t0 = in_flight.remove(&resp.id).expect("unexpected response id");
+            hist.record(t0.elapsed().as_nanos() as u64);
+            if resp.status == proto::ST_OK {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+            done += 1;
+        }
+        proto::compact(&mut inbuf, &mut cursor);
+    }
+    (done, hist, hits, misses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::backend::BackendKind;
+    use crate::kvstore::server::{KvServer, KvServerConfig};
+
+    #[test]
+    fn load_generator_end_to_end() {
+        let server = KvServer::start(KvServerConfig {
+            workers: 3,
+            backend: BackendKind::Trust { shards: 3 },
+            ..Default::default()
+        });
+        server.prefill(100, 16);
+        let stats = run_load(&LoadConfig {
+            addr: server.addr(),
+            threads: 2,
+            pipeline: 16,
+            ops_per_thread: 500,
+            keys: 100,
+            dist: "uniform".into(),
+            write_pct: 5,
+            val_len: 16,
+            seed: 42,
+        });
+        assert_eq!(stats.ops, 1000);
+        // Table was prefilled: reads must hit.
+        assert_eq!(stats.misses, 0, "prefilled keys must not miss");
+        assert!(stats.throughput() > 0.0);
+        assert!(stats.hist.quantile(0.999) >= stats.hist.quantile(0.5));
+        server.stop();
+    }
+
+    #[test]
+    fn zipf_load_against_lock_backend() {
+        let server = KvServer::start(KvServerConfig {
+            workers: 2,
+            backend: BackendKind::Swift,
+            ..Default::default()
+        });
+        server.prefill(1000, 16);
+        let stats = run_load(&LoadConfig {
+            addr: server.addr(),
+            threads: 2,
+            pipeline: 8,
+            ops_per_thread: 300,
+            keys: 1000,
+            dist: "zipf".into(),
+            write_pct: 50,
+            val_len: 16,
+            seed: 7,
+        });
+        assert_eq!(stats.ops, 600);
+        assert_eq!(stats.misses, 0);
+        server.stop();
+    }
+}

@@ -1,0 +1,20 @@
+//! The TCP key-value store application (paper §6.3): a multi-threaded
+//! server where socket workers parse pipelined GET/PUT/DEL requests and
+//! dispatch them to a pluggable backend — Trust\<T\>-delegated shards or
+//! the lock-based comparators — plus the load-generating client used by
+//! the Fig. 8/9 benches.
+//!
+//! Testbed substitution (DESIGN.md #2): the paper runs client and server
+//! on two machines over 100 Gbps Ethernet; here both sides share loopback
+//! on one box. The code path (sockets, batching, pipelining, out-of-order
+//! responses) is identical.
+
+pub mod backend;
+pub mod client;
+pub mod netfiber;
+pub mod proto;
+pub mod server;
+
+pub use backend::{AsyncKv, BackendKind, TrustKv};
+pub use client::{key_bytes, run_load, LoadConfig, LoadStats};
+pub use server::{KvServer, KvServerConfig};

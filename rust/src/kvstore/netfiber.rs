@@ -1,0 +1,93 @@
+//! Non-blocking socket helpers for fibers: a connection fiber reads and
+//! writes without ever blocking its worker thread, yielding to the fiber
+//! scheduler (which runs trustee work and other connections) whenever the
+//! socket has no progress to offer.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+/// Outcome of one read attempt.
+pub enum ReadOutcome {
+    /// `n` bytes appended to the buffer.
+    Data(usize),
+    /// Socket has nothing right now (caller should yield).
+    WouldBlock,
+    /// Peer closed or connection errored.
+    Closed,
+}
+
+/// Read whatever is available into `buf` (append).
+pub fn read_available(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
+    let mut chunk = [0u8; 16 * 1024];
+    match stream.read(&mut chunk) {
+        Ok(0) => ReadOutcome::Closed,
+        Ok(n) => {
+            buf.extend_from_slice(&chunk[..n]);
+            ReadOutcome::Data(n)
+        }
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted => {
+            ReadOutcome::WouldBlock
+        }
+        Err(_) => ReadOutcome::Closed,
+    }
+}
+
+/// Write as much of `buf[*cursor..]` as the socket accepts; advances
+/// `cursor`. Returns false if the connection died. When the whole buffer
+/// drains, both buffer and cursor reset.
+pub fn write_pending(stream: &mut TcpStream, buf: &mut Vec<u8>, cursor: &mut usize) -> bool {
+    while *cursor < buf.len() {
+        match stream.write(&buf[*cursor..]) {
+            Ok(0) => return false,
+            Ok(n) => *cursor += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted => {
+                break;
+            }
+            Err(_) => return false,
+        }
+    }
+    if *cursor == buf.len() && !buf.is_empty() {
+        buf.clear();
+        *cursor = 0;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn echo_over_nonblocking_pair() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.set_nonblocking(true).unwrap();
+            let mut inbuf = Vec::new();
+            let mut out = Vec::new();
+            let mut cur = 0usize;
+            loop {
+                match read_available(&mut s, &mut inbuf) {
+                    ReadOutcome::Data(_) => {
+                        out.extend_from_slice(&inbuf);
+                        inbuf.clear();
+                    }
+                    ReadOutcome::WouldBlock => std::thread::yield_now(),
+                    ReadOutcome::Closed => break,
+                }
+                if !write_pending(&mut s, &mut out, &mut cur) {
+                    break;
+                }
+            }
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"hello fiber net").unwrap();
+        let mut back = [0u8; 15];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"hello fiber net");
+        drop(c);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,204 @@
+//! Binary wire protocol for the TCP key-value store (§6.3).
+//!
+//! Requests and responses carry a 64-bit request id so the server can send
+//! responses **out of order** and the client can match them ("the client
+//! accepts responses out-of-order, to minimize waiting"). Frames:
+//!
+//! ```text
+//! request:  [u32 frame_len][u64 id][u8 op][u16 key_len][key][u32 val_len][val]
+//! response: [u32 frame_len][u64 id][u8 status][u32 val_len][val]
+//! ```
+//!
+//! `frame_len` counts the bytes after itself. Parsing is incremental over a
+//! growable buffer (sockets deliver partial frames).
+
+pub const OP_GET: u8 = 0;
+pub const OP_PUT: u8 = 1;
+pub const OP_DEL: u8 = 2;
+
+pub const ST_OK: u8 = 0;
+pub const ST_NOT_FOUND: u8 = 1;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub op: u8,
+    pub key: Vec<u8>,
+    pub val: Vec<u8>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub id: u64,
+    pub status: u8,
+    pub val: Vec<u8>,
+}
+
+/// Append an encoded request to `out`.
+pub fn write_request(out: &mut Vec<u8>, id: u64, op: u8, key: &[u8], val: &[u8]) {
+    let frame_len = 8 + 1 + 2 + key.len() + 4 + val.len();
+    out.extend_from_slice(&(frame_len as u32).to_le_bytes());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.push(op);
+    out.extend_from_slice(&(key.len() as u16).to_le_bytes());
+    out.extend_from_slice(key);
+    out.extend_from_slice(&(val.len() as u32).to_le_bytes());
+    out.extend_from_slice(val);
+}
+
+/// Append an encoded response to `out`.
+pub fn write_response(out: &mut Vec<u8>, id: u64, status: u8, val: &[u8]) {
+    let frame_len = 8 + 1 + 4 + val.len();
+    out.extend_from_slice(&(frame_len as u32).to_le_bytes());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.push(status);
+    out.extend_from_slice(&(val.len() as u32).to_le_bytes());
+    out.extend_from_slice(val);
+}
+
+/// Incremental frame scanner over a receive buffer. `consumed` is advanced
+/// past fully parsed frames; callers compact the buffer when convenient.
+pub struct FrameCursor {
+    pub consumed: usize,
+}
+
+impl FrameCursor {
+    pub fn new() -> Self {
+        FrameCursor { consumed: 0 }
+    }
+
+    fn next_frame<'a>(&mut self, buf: &'a [u8]) -> Option<&'a [u8]> {
+        let rest = &buf[self.consumed..];
+        if rest.len() < 4 {
+            return None;
+        }
+        let frame_len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+        if rest.len() < 4 + frame_len {
+            return None;
+        }
+        let frame = &rest[4..4 + frame_len];
+        self.consumed += 4 + frame_len;
+        Some(frame)
+    }
+
+    /// Parse the next complete request, if any.
+    pub fn next_request(&mut self, buf: &[u8]) -> Option<Request> {
+        let f = self.next_frame(buf)?;
+        assert!(f.len() >= 15, "malformed request frame");
+        let id = u64::from_le_bytes(f[0..8].try_into().unwrap());
+        let op = f[8];
+        let key_len = u16::from_le_bytes(f[9..11].try_into().unwrap()) as usize;
+        let key = f[11..11 + key_len].to_vec();
+        let off = 11 + key_len;
+        let val_len = u32::from_le_bytes(f[off..off + 4].try_into().unwrap()) as usize;
+        let val = f[off + 4..off + 4 + val_len].to_vec();
+        Some(Request { id, op, key, val })
+    }
+
+    /// Parse the next complete response, if any.
+    pub fn next_response(&mut self, buf: &[u8]) -> Option<Response> {
+        let f = self.next_frame(buf)?;
+        assert!(f.len() >= 13, "malformed response frame");
+        let id = u64::from_le_bytes(f[0..8].try_into().unwrap());
+        let status = f[8];
+        let val_len = u32::from_le_bytes(f[9..13].try_into().unwrap()) as usize;
+        let val = f[13..13 + val_len].to_vec();
+        Some(Response { id, status, val })
+    }
+}
+
+impl Default for FrameCursor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Compact a receive buffer after parsing (drop consumed prefix).
+pub fn compact(buf: &mut Vec<u8>, cursor: &mut FrameCursor) {
+    if cursor.consumed > 0 {
+        buf.drain(..cursor.consumed);
+        cursor.consumed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, 7, OP_PUT, b"key1", b"value-bytes");
+        let mut c = FrameCursor::new();
+        let r = c.next_request(&buf).unwrap();
+        assert_eq!(r, Request { id: 7, op: OP_PUT, key: b"key1".to_vec(), val: b"value-bytes".to_vec() });
+        assert_eq!(c.consumed, buf.len());
+        assert!(c.next_request(&buf).is_none());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 9, ST_OK, b"v");
+        write_response(&mut buf, 10, ST_NOT_FOUND, b"");
+        let mut c = FrameCursor::new();
+        assert_eq!(c.next_response(&buf).unwrap().id, 9);
+        let r2 = c.next_response(&buf).unwrap();
+        assert_eq!((r2.id, r2.status), (10, ST_NOT_FOUND));
+    }
+
+    #[test]
+    fn partial_frames_wait() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, 1, OP_GET, b"abc", b"");
+        let full = buf.clone();
+        for cut in 0..full.len() {
+            let mut c = FrameCursor::new();
+            assert!(c.next_request(&full[..cut]).is_none(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn multiple_frames_in_one_buffer() {
+        let mut buf = Vec::new();
+        for i in 0..5u64 {
+            write_request(&mut buf, i, OP_GET, format!("k{i}").as_bytes(), b"");
+        }
+        let mut c = FrameCursor::new();
+        for i in 0..5u64 {
+            assert_eq!(c.next_request(&buf).unwrap().id, i);
+        }
+        assert!(c.next_request(&buf).is_none());
+    }
+
+    #[test]
+    fn compact_resets() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, 1, OP_GET, b"k", b"");
+        let tail_start = buf.len();
+        write_request(&mut buf, 2, OP_GET, b"k2", b"");
+        let mut c = FrameCursor::new();
+        c.next_request(&buf).unwrap();
+        compact(&mut buf, &mut c);
+        assert_eq!(c.consumed, 0);
+        assert_eq!(buf.len(), tail_start + 1 /*k2 longer*/ + 0);
+        assert_eq!(c.next_request(&buf).unwrap().id, 2);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_payloads() {
+        check::<(u64, Vec<u8>, Vec<u8>)>("kv-proto", 150, |(id, key, val)| {
+            if key.len() > 60_000 {
+                return true;
+            }
+            let mut buf = Vec::new();
+            write_request(&mut buf, *id, OP_PUT, key, val);
+            let mut c = FrameCursor::new();
+            match c.next_request(&buf) {
+                Some(r) => r.id == *id && &r.key == key && &r.val == val,
+                None => false,
+            }
+        });
+    }
+}

@@ -1,0 +1,415 @@
+//! The multi-threaded TCP key-value server (§6.3).
+//!
+//! "Each worker-thread receives GET or PUT queries from one or more
+//! connections, and applies these to the backend hashmap. Both reading
+//! requests and sending results is done in batches ... the client accepts
+//! responses out-of-order." Each accepted connection becomes a fiber on a
+//! socket worker; requests are dispatched to the backend via callbacks
+//! that append responses (tagged with the request id) to the connection's
+//! write buffer as they complete — hence naturally out of order.
+
+use super::backend::{AsyncKv, BackendKind};
+use super::netfiber::{read_available, write_pending, ReadOutcome};
+use super::proto::{self, FrameCursor};
+use crate::fiber;
+use crate::runtime::Runtime;
+use std::cell::RefCell;
+use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct KvServerConfig {
+    pub workers: usize,
+    /// Dedicated trustee workers (shards live there; no socket fibers).
+    pub dedicated: usize,
+    pub backend: BackendKind,
+    pub addr: String,
+}
+
+impl Default for KvServerConfig {
+    fn default() -> Self {
+        KvServerConfig {
+            workers: 4,
+            dedicated: 0,
+            backend: BackendKind::Trust { shards: 0 },
+            addr: "127.0.0.1:0".into(),
+        }
+    }
+}
+
+/// A running KV server (owns its runtime and accept thread).
+pub struct KvServer {
+    rt: Option<Runtime>,
+    backend: Arc<dyn AsyncKv>,
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    pub ops_served: Arc<AtomicU64>,
+}
+
+impl KvServer {
+    pub fn start(cfg: KvServerConfig) -> KvServer {
+        let rt = Runtime::builder()
+            .workers(cfg.workers)
+            .dedicated_trustees(cfg.dedicated)
+            .build();
+        // Shard trustees: the dedicated workers if any, else all workers.
+        let trustees: Vec<usize> = if cfg.dedicated > 0 {
+            (0..cfg.dedicated).collect()
+        } else {
+            (0..cfg.workers).collect()
+        };
+        let backend = cfg.backend.build(&rt, &trustees);
+        let listener = TcpListener::bind(&cfg.addr).expect("bind kv server");
+        let local_addr = listener.local_addr().unwrap();
+        listener.set_nonblocking(true).expect("nonblocking listener");
+        let stop = Arc::new(AtomicBool::new(false));
+        let ops_served = Arc::new(AtomicU64::new(0));
+
+        // Socket workers: the non-dedicated ones.
+        let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
+        assert!(!socket_workers.is_empty(), "no socket workers left");
+
+        let accept_handle = {
+            let stop = stop.clone();
+            let backend = backend.clone();
+            let shared = rt.shared().clone();
+            let ops = ops_served.clone();
+            std::thread::Builder::new()
+                .name("kv-accept".into())
+                .spawn(move || {
+                    let mut next = 0usize;
+                    while !stop.load(Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((stream, _peer)) => {
+                                let worker = socket_workers[next % socket_workers.len()];
+                                next += 1;
+                                let backend = backend.clone();
+                                let ops = ops.clone();
+                                let stop = stop.clone();
+                                shared.inject(
+                                    worker,
+                                    Box::new(move |w| {
+                                        w.exec.spawn(move || {
+                                            connection_fiber(stream, backend, ops, stop)
+                                        });
+                                    }),
+                                );
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(std::time::Duration::from_micros(200));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn acceptor")
+        };
+
+        KvServer {
+            rt: Some(rt),
+            backend,
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            ops_served,
+        }
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn backend(&self) -> &Arc<dyn AsyncKv> {
+        &self.backend
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt.as_ref().unwrap()
+    }
+
+    /// Pre-fill the table with `n` keys ("Prior to each run, we pre-fill
+    /// the table"). Key format matches the load generator's.
+    pub fn prefill(&self, n: u64, val_len: usize) {
+        let worker = self.runtime().workers() - 1;
+        let backend = self.backend.clone();
+        self.runtime().block_on(worker, move || {
+            let done = Arc::new(AtomicU64::new(0));
+            let mut issued = 0u64;
+            while issued < n || done.load(Ordering::Relaxed) < n {
+                // Keep a bounded window in flight so outboxes stay small.
+                while issued < n && issued - done.load(Ordering::Relaxed) < 256 {
+                    let d = done.clone();
+                    backend.put(
+                        super::client::key_bytes(issued),
+                        vec![b'x'; val_len],
+                        Box::new(move |_| {
+                            d.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    );
+                    issued += 1;
+                }
+                fiber::yield_now();
+            }
+        });
+    }
+
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(rt) = self.rt.take() {
+            rt.shutdown();
+        }
+    }
+}
+
+impl Drop for KvServer {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+/// Per-connection fiber: parse requests, dispatch to the backend, stream
+/// responses back out of order as their callbacks fire. Exits when the
+/// peer closes or the server stops.
+fn connection_fiber(
+    mut stream: TcpStream,
+    backend: Arc<dyn AsyncKv>,
+    ops: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) {
+    stream.set_nonblocking(true).expect("nonblocking conn");
+    stream.set_nodelay(true).ok();
+    let out = Rc::new(RefCell::new(Vec::<u8>::new()));
+    let inflight = Rc::new(std::cell::Cell::new(0usize));
+    let mut inbuf: Vec<u8> = Vec::with_capacity(32 * 1024);
+    let mut cursor = FrameCursor::new();
+    let mut wcursor = 0usize;
+    let mut peer_gone = false;
+
+    loop {
+        // 1. Ingest.
+        if !peer_gone {
+            match read_available(&mut stream, &mut inbuf) {
+                ReadOutcome::Closed => peer_gone = true,
+                ReadOutcome::Data(_) | ReadOutcome::WouldBlock => {}
+            }
+        }
+        // 2. Parse + dispatch every complete request ("reading requests is
+        //    done in batches").
+        while let Some(req) = cursor.next_request(&inbuf) {
+            inflight.set(inflight.get() + 1);
+            let out = out.clone();
+            let infl = inflight.clone();
+            let ops = ops.clone();
+            let id = req.id;
+            match req.op {
+                proto::OP_GET => backend.get(
+                    req.key,
+                    Box::new(move |v| {
+                        let mut o = out.borrow_mut();
+                        match v {
+                            Some(val) => proto::write_response(&mut o, id, proto::ST_OK, &val),
+                            None => proto::write_response(&mut o, id, proto::ST_NOT_FOUND, &[]),
+                        }
+                        infl.set(infl.get() - 1);
+                        ops.fetch_add(1, Ordering::Relaxed);
+                    }),
+                ),
+                proto::OP_PUT => backend.put(
+                    req.key,
+                    req.val,
+                    Box::new(move |_| {
+                        proto::write_response(&mut out.borrow_mut(), id, proto::ST_OK, &[]);
+                        infl.set(infl.get() - 1);
+                        ops.fetch_add(1, Ordering::Relaxed);
+                    }),
+                ),
+                proto::OP_DEL => backend.del(
+                    req.key,
+                    Box::new(move |existed| {
+                        let st = if existed { proto::ST_OK } else { proto::ST_NOT_FOUND };
+                        proto::write_response(&mut out.borrow_mut(), id, st, &[]);
+                        infl.set(infl.get() - 1);
+                        ops.fetch_add(1, Ordering::Relaxed);
+                    }),
+                ),
+                other => panic!("unknown op {other}"),
+            }
+        }
+        proto::compact(&mut inbuf, &mut cursor);
+        // 3. Egress ("sending results is done in batches").
+        {
+            let mut o = out.borrow_mut();
+            if !write_pending(&mut stream, &mut o, &mut wcursor) {
+                break;
+            }
+        }
+        if peer_gone && inflight.get() == 0 && out.borrow().is_empty() {
+            break;
+        }
+        // Server shutdown: stop accepting new work and drain what's left.
+        if stop.load(Ordering::Acquire) && inflight.get() == 0 {
+            break;
+        }
+        // 4. Let the scheduler serve trustee work / other connections.
+        fiber::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn get(stream: &mut TcpStream, id: u64, key: &[u8]) -> proto::Response {
+        let mut buf = Vec::new();
+        proto::write_request(&mut buf, id, proto::OP_GET, key, &[]);
+        stream.write_all(&buf).unwrap();
+        read_one_response(stream)
+    }
+
+    fn put(stream: &mut TcpStream, id: u64, key: &[u8], val: &[u8]) -> proto::Response {
+        let mut buf = Vec::new();
+        proto::write_request(&mut buf, id, proto::OP_PUT, key, val);
+        stream.write_all(&buf).unwrap();
+        read_one_response(stream)
+    }
+
+    fn read_one_response(stream: &mut TcpStream) -> proto::Response {
+        let mut buf = Vec::new();
+        let mut cursor = FrameCursor::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(r) = cursor.next_response(&buf) {
+                return r;
+            }
+            let n = stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed early");
+            buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    fn smoke(backend: BackendKind) {
+        let server = KvServer::start(KvServerConfig {
+            workers: 2,
+            dedicated: 0,
+            backend,
+            addr: "127.0.0.1:0".into(),
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        // miss, put, hit, overwrite, delete
+        assert_eq!(get(&mut c, 1, b"k").status, proto::ST_NOT_FOUND);
+        assert_eq!(put(&mut c, 2, b"k", b"v1").status, proto::ST_OK);
+        let r = get(&mut c, 3, b"k");
+        assert_eq!((r.status, r.val.as_slice()), (proto::ST_OK, &b"v1"[..]));
+        assert_eq!(put(&mut c, 4, b"k", b"v2").status, proto::ST_OK);
+        let r = get(&mut c, 5, b"k");
+        assert_eq!(r.val, b"v2");
+        drop(c);
+        assert_eq!(server.ops_served.load(Ordering::Relaxed), 5);
+        server.stop();
+    }
+
+    #[test]
+    fn trust_server_smoke() {
+        smoke(BackendKind::Trust { shards: 2 });
+    }
+
+    #[test]
+    fn mutex_server_smoke() {
+        smoke(BackendKind::Mutex);
+    }
+
+    #[test]
+    fn pipelined_out_of_order_ids_match() {
+        let server = KvServer::start(KvServerConfig {
+            workers: 2,
+            backend: BackendKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        server.prefill(100, 16);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        // Fire 50 pipelined GETs, then collect all 50 responses by id.
+        let mut buf = Vec::new();
+        for i in 0..50u64 {
+            proto::write_request(
+                &mut buf,
+                1000 + i,
+                proto::OP_GET,
+                &super::super::client::key_bytes(i % 100),
+                &[],
+            );
+        }
+        c.write_all(&buf).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        let mut rbuf = Vec::new();
+        let mut cursor = FrameCursor::new();
+        let mut chunk = [0u8; 8192];
+        while seen.len() < 50 {
+            if let Some(r) = cursor.next_response(&rbuf) {
+                assert_eq!(r.status, proto::ST_OK);
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+                assert!((1000..1050).contains(&r.id));
+                continue;
+            }
+            let n = c.read(&mut chunk).unwrap();
+            assert!(n > 0);
+            rbuf.extend_from_slice(&chunk[..n]);
+        }
+        drop(c);
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_connections_concurrent() {
+        let server = KvServer::start(KvServerConfig {
+            workers: 3,
+            backend: BackendKind::Trust { shards: 3 },
+            ..Default::default()
+        });
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = TcpStream::connect(addr).unwrap();
+                    for i in 0..50u64 {
+                        let key = format!("t{t}-k{i}").into_bytes();
+                        assert_eq!(put(&mut c, i, &key, b"val").status, proto::ST_OK);
+                        let r = get(&mut c, 1000 + i, &key);
+                        assert_eq!(r.val, b"val");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.backend().len(), 200);
+        server.stop();
+    }
+
+    #[test]
+    fn dedicated_trustee_topology() {
+        let server = KvServer::start(KvServerConfig {
+            workers: 3,
+            dedicated: 1,
+            backend: BackendKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        assert_eq!(put(&mut c, 1, b"a", b"b").status, proto::ST_OK);
+        assert_eq!(get(&mut c, 2, b"a").val, b"b");
+        drop(c);
+        server.stop();
+    }
+}

@@ -1,0 +1,50 @@
+//! # Trust\<T\>: delegation as a scalable, type- and memory-safe alternative to locks
+//!
+//! Reproduction of *"Delegation with Trust\<T\>"* (Ahmad, Baenen, Chen,
+//! Eriksson, 2024). Instead of synchronizing multi-threaded access to an
+//! object of type `T` with a lock, the object is placed in a [`Trust<T>`]
+//! and becomes accessible only by *delegating* closures to its *trustee*
+//! thread over a shared-memory message-passing channel:
+//!
+//! ```ignore
+//! let rt = trustee::runtime::Runtime::builder().workers(4).build();
+//! rt.block_on(0, |cx| {
+//!     let ct = cx.local_trustee().entrust(17u64);
+//!     ct.apply(|c| *c += 1);
+//!     assert_eq!(ct.apply(|c| *c), 18);
+//! });
+//! ```
+//!
+//! ## Crate layout (paper section in parentheses)
+//!
+//! - [`fiber`] — stackful user threads and per-worker scheduler (§3.3, §5.2)
+//! - [`channel`] — two-part request/response delegation slots (§5.1, §5.3)
+//! - [`trust`] — `Trust<T>`, `apply`/`apply_then`/`apply_with`/`launch`,
+//!   `Latch<T>`, delegated reference counting (§3, §4)
+//! - [`runtime`] — worker topology (shared / dedicated trustees), the
+//!   PJRT/XLA executor for AOT-compiled batch-apply artifacts (§5.2)
+//! - [`locks`] — the lock baselines the paper evaluates against (§6)
+//! - [`cmap`] — sharded and dashmap-style concurrent hash maps (§6.3)
+//! - [`kvstore`] — the TCP key-value store application (§6.3)
+//! - [`memcache`] — mini-memcached, stock (locks) vs delegated shards (§7)
+//! - [`bench`] — workload generators and the figure-regeneration harnesses
+//! - [`util`], [`codec`] — substrates built from scratch for the offline
+//!   environment (PRNG, zipfian sampling, stats, CLI, affinity, a
+//!   property-test harness, and a bincode-style wire codec)
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod util;
+pub mod codec;
+pub mod fiber;
+pub mod channel;
+pub mod trust;
+pub mod runtime;
+pub mod locks;
+pub mod cmap;
+pub mod kvstore;
+pub mod memcache;
+pub mod bench;
+
+pub use trust::{Latch, Trust, TrusteeRef};

@@ -1,0 +1,213 @@
+//! Flat-combining lock — the combining-class baseline (Hendler et al.;
+//! DESIGN.md substitution #4 for TCLocks).
+//!
+//! Threads publish their critical sections as records on a lock-free
+//! publication stack; whichever thread holds the combiner lock applies
+//! *all* published operations before releasing. Like TCLocks, the critical
+//! section is "shipped" to another core, and like the paper observes (§2),
+//! the technique "makes heavy use of atomic operations, and moves data
+//! between cores as new threads take on the combiner role" — which is
+//! exactly the overhead profile Fig. 6a shows.
+
+use crate::util::cache::{Backoff, CachePadded};
+use std::cell::UnsafeCell;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
+
+/// One published operation. Lives on the requesting thread's stack; the
+/// requester spins on `done` and the combiner never touches the record
+/// after the Release store to `done`.
+struct FcRecord {
+    next: *mut FcRecord,
+    /// Type-erased critical section: `call(ctx)` applies the closure to
+    /// the value and stores the result in the requester's stack frame.
+    call: unsafe fn(ctx: *mut u8, value: *mut u8),
+    ctx: *mut u8,
+    done: AtomicBool,
+}
+
+/// A flat-combining protected value.
+pub struct FcLock<T> {
+    combiner: CachePadded<AtomicBool>,
+    head: CachePadded<AtomicPtr<FcRecord>>,
+    value: UnsafeCell<T>,
+}
+
+// SAFETY: `value` is only touched by the combiner, which is unique.
+unsafe impl<T: Send> Send for FcLock<T> {}
+unsafe impl<T: Send> Sync for FcLock<T> {}
+
+impl<T> FcLock<T> {
+    pub fn new(value: T) -> FcLock<T> {
+        FcLock {
+            combiner: CachePadded::new(AtomicBool::new(false)),
+            head: CachePadded::new(AtomicPtr::new(ptr::null_mut())),
+            value: UnsafeCell::new(value),
+        }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value.into_inner()
+    }
+
+    /// Apply `f` to the protected value, possibly by combining it into
+    /// another thread's pass.
+    pub fn apply<R, F: FnOnce(&mut T) -> R>(&self, f: F) -> R {
+        // Stack context: closure in, result out.
+        struct Ctx<T, R, F> {
+            f: Option<F>,
+            result: Option<R>,
+            _marker: std::marker::PhantomData<fn(&mut T)>,
+        }
+        unsafe fn call_one<T, R, F: FnOnce(&mut T) -> R>(ctx: *mut u8, value: *mut u8) {
+            // SAFETY: ctx/value types match by construction below.
+            unsafe {
+                let ctx = &mut *(ctx as *mut Ctx<T, R, F>);
+                let f = ctx.f.take().expect("op applied twice");
+                ctx.result = Some(f(&mut *(value as *mut T)));
+            }
+        }
+
+        let mut ctx = Ctx::<T, R, F> { f: Some(f), result: None, _marker: std::marker::PhantomData };
+        let mut rec = FcRecord {
+            next: ptr::null_mut(),
+            call: call_one::<T, R, F>,
+            ctx: &mut ctx as *mut Ctx<T, R, F> as *mut u8,
+            done: AtomicBool::new(false),
+        };
+
+        // Publish.
+        let rec_ptr = &mut rec as *mut FcRecord;
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            rec.next = head;
+            match self.head.compare_exchange_weak(
+                head,
+                rec_ptr,
+                Ordering::Release,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(h) => head = h,
+            }
+        }
+
+        // Wait-or-combine.
+        let mut backoff = Backoff::new();
+        loop {
+            if rec.done.load(Ordering::Acquire) {
+                return ctx.result.take().expect("combined without result");
+            }
+            if self
+                .combiner
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.combine();
+                self.combiner.store(false, Ordering::Release);
+                if rec.done.load(Ordering::Acquire) {
+                    return ctx.result.take().expect("combined without result");
+                }
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Drain the publication stack and apply everything (combiner role).
+    fn combine(&self) {
+        // Take the whole list; new arrivals republish onto an empty head.
+        let mut cur = self.head.swap(ptr::null_mut(), Ordering::AcqRel);
+        while !cur.is_null() {
+            // SAFETY: records are live until we set `done`; read `next`
+            // first because the record may be reclaimed right after.
+            unsafe {
+                let next = (*cur).next;
+                ((*cur).call)((*cur).ctx, self.value.get() as *mut u8);
+                (*cur).done.store(true, Ordering::Release);
+                cur = next;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_thread_apply() {
+        let l = FcLock::new(10u64);
+        let old = l.apply(|v| {
+            let o = *v;
+            *v += 5;
+            o
+        });
+        assert_eq!(old, 10);
+        assert_eq!(l.apply(|v| *v), 15);
+    }
+
+    #[test]
+    fn multi_thread_counter_exact() {
+        let l = Arc::new(FcLock::new(0u64));
+        let threads = 4;
+        let iters = 2_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..iters {
+                        l.apply(|v| *v += 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(l.apply(|v| *v), threads as u64 * iters);
+    }
+
+    #[test]
+    fn returns_values_to_correct_thread() {
+        let l = Arc::new(FcLock::new(0u64));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut olds = Vec::new();
+                    for _ in 0..500 {
+                        olds.push(l.apply(|v| {
+                            let o = *v;
+                            *v += 1;
+                            o
+                        }));
+                    }
+                    // Each thread must see strictly increasing old values.
+                    assert!(olds.windows(2).all(|w| w[0] < w[1]), "thread {t}");
+                    olds.len()
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 2000);
+        assert_eq!(l.apply(|v| *v), 2000);
+    }
+
+    #[test]
+    fn mixed_types_in_critical_sections() {
+        let l = Arc::new(FcLock::new(String::new()));
+        let l2 = l.clone();
+        let t = std::thread::spawn(move || {
+            for _ in 0..100 {
+                l2.apply(|s| s.push('b'));
+            }
+        });
+        for _ in 0..100 {
+            l.apply(|s| s.push('a'));
+        }
+        t.join().unwrap();
+        let len = l.apply(|s| s.len());
+        assert_eq!(len, 200);
+    }
+}

@@ -1,0 +1,143 @@
+//! Lock baselines the paper evaluates Trust\<T\> against (§6):
+//!
+//! - [`SpinLock`] — test-and-test-and-set (the `spin-rs` crate stand-in)
+//! - [`TicketLock`] — FIFO ticket lock
+//! - [`McsLock`] — queue lock (the `synctools` MCS stand-in)
+//! - [`FcLock`] — flat combining (the TCLocks / combining-class stand-in,
+//!   DESIGN.md substitution #4)
+//! - `std::sync::Mutex` — used directly by the benches as "Mutex"
+//!
+//! All locks share the [`RawLock`] interface so the fetch-and-add
+//! microbenchmark (Fig. 6/7) is generic over the lock type, and the
+//! [`LockCell`] combinator pairs a lock with a value, mirroring
+//! `Mutex<T>`.
+//!
+//! **Single-core substitution:** every spin path escalates to OS yields via
+//! [`Backoff`](crate::util::cache::Backoff) — on the paper's 128-thread
+//! testbed spinning burns a hardware thread, but on this container it would
+//! starve the lock holder outright (DESIGN.md substitution #1).
+
+mod fc;
+mod mcs;
+mod spin;
+mod ticket;
+
+pub use fc::FcLock;
+pub use mcs::McsLock;
+pub use spin::SpinLock;
+pub use ticket::TicketLock;
+
+use std::cell::UnsafeCell;
+
+/// A raw mutual-exclusion primitive. `Token` carries queue-node state for
+/// locks that need it (MCS); plain locks use `()`.
+pub trait RawLock: Send + Sync + Default {
+    type Token;
+    const NAME: &'static str;
+
+    fn lock(&self) -> Self::Token;
+    fn try_lock(&self) -> Option<Self::Token>;
+    fn unlock(&self, token: Self::Token);
+}
+
+/// A lock paired with the value it protects (like `Mutex<T>` but generic
+/// over [`RawLock`]).
+pub struct LockCell<L: RawLock, T> {
+    lock: L,
+    value: UnsafeCell<T>,
+}
+
+// SAFETY: access to `value` is serialized by `lock`.
+unsafe impl<L: RawLock, T: Send> Send for LockCell<L, T> {}
+unsafe impl<L: RawLock, T: Send> Sync for LockCell<L, T> {}
+
+impl<L: RawLock, T> LockCell<L, T> {
+    pub fn new(value: T) -> Self {
+        LockCell { lock: L::default(), value: UnsafeCell::new(value) }
+    }
+
+    /// Run `f` under the lock.
+    #[inline]
+    pub fn with_lock<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        let tok = self.lock.lock();
+        // SAFETY: lock held.
+        let r = f(unsafe { &mut *self.value.get() });
+        self.lock.unlock(tok);
+        r
+    }
+
+    /// Run `f` under the lock if it is immediately available.
+    #[inline]
+    pub fn try_with_lock<R>(&self, f: impl FnOnce(&mut T) -> R) -> Option<R> {
+        let tok = self.lock.try_lock()?;
+        let r = f(unsafe { &mut *self.value.get() });
+        self.lock.unlock(tok);
+        Some(r)
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value.into_inner()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Hammer a counter from several threads; the total must be exact.
+    pub(crate) fn exercise_lock<L: RawLock + 'static>() {
+        let cell = Arc::new(LockCell::<L, u64>::new(0));
+        let threads = 4;
+        let iters = 2_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let cell = cell.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..iters {
+                        cell.with_lock(|v| *v += 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cell.with_lock(|v| *v), threads as u64 * iters);
+    }
+
+    /// Critical sections must be mutually exclusive (flag check).
+    pub(crate) fn exercise_mutual_exclusion<L: RawLock + 'static>() {
+        let cell = Arc::new(LockCell::<L, (bool, u64)>::new((false, 0)));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let cell = cell.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        cell.with_lock(|(busy, viol)| {
+                            if *busy {
+                                *viol += 1;
+                            }
+                            *busy = true;
+                            std::hint::spin_loop();
+                            *busy = false;
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cell.with_lock(|(_, viol)| *viol), 0);
+    }
+
+    #[test]
+    fn try_lock_contract() {
+        let cell = LockCell::<SpinLock, u64>::new(5);
+        let tok = cell.lock.lock();
+        assert!(cell.lock.try_lock().is_none());
+        cell.lock.unlock(tok);
+        assert!(cell.try_with_lock(|v| *v).is_some());
+    }
+}

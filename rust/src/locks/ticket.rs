@@ -1,0 +1,72 @@
+//! FIFO ticket lock.
+
+use super::RawLock;
+use crate::util::cache::Backoff;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Classic ticket lock: fetch-and-increment a ticket, wait for the grant
+/// counter. FIFO-fair, one atomic per acquisition.
+#[derive(Default)]
+pub struct TicketLock {
+    next: AtomicU64,
+    serving: AtomicU64,
+}
+
+impl RawLock for TicketLock {
+    type Token = ();
+    const NAME: &'static str = "ticket";
+
+    #[inline]
+    fn lock(&self) {
+        let my = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut backoff = Backoff::new();
+        while self.serving.load(Ordering::Acquire) != my {
+            backoff.snooze();
+        }
+    }
+
+    #[inline]
+    fn try_lock(&self) -> Option<()> {
+        let serving = self.serving.load(Ordering::Acquire);
+        // Only take a ticket if we'd be served immediately.
+        if self
+            .next
+            .compare_exchange(serving, serving + 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    fn unlock(&self, _t: ()) {
+        self.serving.fetch_add(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::tests::{exercise_lock, exercise_mutual_exclusion};
+
+    #[test]
+    fn ticket_counter_exact() {
+        exercise_lock::<TicketLock>();
+    }
+
+    #[test]
+    fn ticket_mutual_exclusion() {
+        exercise_mutual_exclusion::<TicketLock>();
+    }
+
+    #[test]
+    fn ticket_try_lock() {
+        let l = TicketLock::default();
+        let t = l.try_lock().unwrap();
+        assert!(l.try_lock().is_none());
+        l.unlock(t);
+        assert!(l.try_lock().is_some());
+    }
+}

@@ -1,0 +1,172 @@
+//! `trustee` — the Trust\<T\> launcher.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! trustee kv-server    --backend trust[:N]|mutex|rwlock|swift --workers W
+//!                      --dedicated D --addr HOST:PORT [--prefill N]
+//! trustee kv-load      --addr HOST:PORT --threads T --pipeline P --ops N
+//!                      --keys K --dist uniform|zipf --write-pct W
+//! trustee mcd-server   --engine stock|trust[:N] --workers W --addr HOST:PORT
+//!                      [--prefill N]
+//! trustee mcd-load     --addr HOST:PORT ... (same knobs as kv-load)
+//! trustee fadd         --engine mutex|spin|ticket|mcs|fc|trust|async
+//!                      --threads T --objects O --ops N --dist D
+//! trustee demo         quick in-process tour (Figure 1)
+//! ```
+
+use trustee::bench::fadd::{run_async, run_lock_by_name, run_trust, FaddConfig};
+use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
+use trustee::memcache::{run_memtier, EngineKind, McdServer, McdServerConfig, MemtierConfig};
+use trustee::util::cli::Args;
+use trustee::util::stats::{fmt_mops, fmt_ns};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "kv-server" => kv_server(&args),
+        "kv-load" => kv_load(&args),
+        "mcd-server" => mcd_server(&args),
+        "mcd-load" => mcd_load(&args),
+        "fadd" => fadd(&args),
+        "demo" => demo(),
+        _ => {
+            println!("usage: trustee <kv-server|kv-load|mcd-server|mcd-load|fadd|demo> [--flags]");
+            println!("see the module docs in rust/src/main.rs for every knob");
+        }
+    }
+}
+
+fn kv_server(args: &Args) {
+    let server = KvServer::start(KvServerConfig {
+        workers: args.get("workers", 4),
+        dedicated: args.get("dedicated", 0),
+        backend: BackendKind::from_spec(&args.get_str("backend", "trust")),
+        addr: args.get_str("addr", "127.0.0.1:7878"),
+    });
+    let prefill: u64 = args.get("prefill", 0);
+    if prefill > 0 {
+        server.prefill(prefill, args.get("val-len", 16));
+        println!("prefilled {prefill} keys");
+    }
+    println!("kv server listening on {} (ctrl-c to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn kv_load(args: &Args) {
+    let addr: std::net::SocketAddr = args
+        .get_str("addr", "127.0.0.1:7878")
+        .parse()
+        .expect("bad --addr");
+    let stats = run_load(&LoadConfig {
+        addr,
+        threads: args.get("threads", 2),
+        pipeline: args.get("pipeline", 32),
+        ops_per_thread: args.get("ops", 10_000),
+        keys: args.get("keys", 1_000),
+        dist: args.get_str("dist", "uniform"),
+        write_pct: args.get("write-pct", 5),
+        val_len: args.get("val-len", 16),
+        seed: args.get("seed", 42),
+    });
+    println!(
+        "{} ops in {:.2}s = {} | mean {} p99.9 {} | hits {} misses {}",
+        stats.ops,
+        stats.elapsed.as_secs_f64(),
+        fmt_mops(stats.throughput()),
+        fmt_ns(stats.hist.mean()),
+        fmt_ns(stats.hist.quantile(0.999) as f64),
+        stats.hits,
+        stats.misses
+    );
+}
+
+fn mcd_server(args: &Args) {
+    let spec = args.get_str("engine", "trust:8");
+    let engine = if spec == "stock" {
+        EngineKind::Stock
+    } else {
+        let shards = spec
+            .strip_prefix("trust")
+            .map(|r| r.trim_start_matches(':'))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(8);
+        EngineKind::Trust { shards }
+    };
+    let server = McdServer::start(McdServerConfig {
+        workers: args.get("workers", 4),
+        dedicated: args.get("dedicated", 0),
+        engine,
+        addr: args.get_str("addr", "127.0.0.1:11211"),
+    });
+    let prefill: u64 = args.get("prefill", 0);
+    if prefill > 0 {
+        server.prefill(prefill, args.get("val-len", 16));
+        println!("prefilled {prefill} items");
+    }
+    println!("mini-memcached listening on {} (ctrl-c to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn mcd_load(args: &Args) {
+    let addr: std::net::SocketAddr = args
+        .get_str("addr", "127.0.0.1:11211")
+        .parse()
+        .expect("bad --addr");
+    let stats = run_memtier(&MemtierConfig {
+        addr,
+        threads: args.get("threads", 2),
+        pipeline: args.get("pipeline", 48),
+        ops_per_thread: args.get("ops", 10_000),
+        keys: args.get("keys", 10_000),
+        dist: args.get_str("dist", "uniform"),
+        write_pct: args.get("write-pct", 5),
+        val_len: args.get("val-len", 16),
+        seed: args.get("seed", 42),
+    });
+    println!(
+        "{} ops in {:.2}s = {} | hits {} misses {}",
+        stats.ops,
+        stats.elapsed.as_secs_f64(),
+        fmt_mops(stats.throughput()),
+        stats.hits,
+        stats.misses
+    );
+}
+
+fn fadd(args: &Args) {
+    let engine = args.get_str("engine", "trust");
+    let cfg = FaddConfig {
+        threads: args.get("threads", 4),
+        objects: args.get("objects", 64),
+        ops_per_thread: args.get("ops", 20_000),
+        dist: args.get_str("dist", "uniform"),
+        seed: args.get("seed", 0xFADD),
+        dedicated: args.get("dedicated", 0),
+        fibers: args.get("fibers", 8),
+        window: args.get("window", 64),
+    };
+    let r = match engine.as_str() {
+        "trust" => run_trust(&cfg),
+        "async" => run_async(&cfg),
+        lock => run_lock_by_name(lock, &cfg),
+    };
+    println!("{engine}: {} ops in {:.3}s = {:.3} MOPs", r.ops, r.secs, r.mops());
+}
+
+fn demo() {
+    let rt = trustee::runtime::Runtime::builder().workers(2).build();
+    let v = rt.block_on(0, || {
+        let ct = trustee::trust::local_trustee().entrust(17u64);
+        ct.apply(|c| *c += 1);
+        ct.apply(|c| *c)
+    });
+    println!("Figure 1: entrust(17); apply(+1) -> {v}");
+    rt.shutdown();
+}

@@ -1,0 +1,311 @@
+//! Storage engines for mini-memcached (§7).
+//!
+//! [`StockEngine`] models stock memcached's synchronization profile:
+//! bucket-chained hash table with striped locks, a **global** LRU list
+//! behind its own mutex, and a slab-allocator byte counter behind another —
+//! "memory allocation, LRU updates as well as table writes, all of which
+//! involve synchronization in a lock-based design".
+//!
+//! [`TrustEngine`] is the delegated port: the table and supporting
+//! structures are divided into shards, each entrusted to a trustee with a
+//! **per-shard LRU** ("we use the traditional eviction scheme, maintaining
+//! one LRU per shard"); all operations on a shard are local to its trustee
+//! and require no synchronization.
+
+use crate::cmap::{fxhash, OaTable};
+use crate::runtime::Runtime;
+use crate::trust::Trust;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A stored item: flags + payload (expiry elided — the paper disables
+/// eviction/expiry for the evaluation).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Item {
+    pub flags: u32,
+    pub data: Vec<u8>,
+}
+
+pub type GetCb = Box<dyn FnOnce(Option<Item>) + 'static>;
+pub type SetCb = Box<dyn FnOnce(()) + 'static>;
+
+/// Callback-style engine interface (same shape as the KV backend so the
+/// server loop is engine-agnostic).
+pub trait McdEngine: Send + Sync + 'static {
+    fn get(&self, key: Vec<u8>, cb: GetCb);
+    fn set(&self, key: Vec<u8>, flags: u32, data: Vec<u8>, cb: SetCb);
+    fn item_count(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------
+// Stock engine (lock-based)
+// ---------------------------------------------------------------------
+
+const LRU_BUMP_EVERY: u64 = 8; // memcached bumps lazily; model that
+
+pub struct StockEngine {
+    buckets: Vec<Mutex<HashMap<Vec<u8>, Item>>>,
+    /// Global LRU — the contended structure writes (and periodic read
+    /// bumps) must take.
+    lru: Mutex<VecDeque<Vec<u8>>>,
+    /// Slab allocator stand-in: a byte budget behind a mutex.
+    slab_bytes: Mutex<u64>,
+    accesses: AtomicU64,
+}
+
+impl StockEngine {
+    pub fn new(n_buckets: usize) -> Arc<StockEngine> {
+        let n = n_buckets.next_power_of_two().max(16);
+        let mut buckets = Vec::with_capacity(n);
+        buckets.resize_with(n, || Mutex::new(HashMap::new()));
+        Arc::new(StockEngine {
+            buckets,
+            lru: Mutex::new(VecDeque::new()),
+            slab_bytes: Mutex::new(0),
+            accesses: AtomicU64::new(0),
+        })
+    }
+
+    #[inline]
+    fn bucket(&self, key: &[u8]) -> &Mutex<HashMap<Vec<u8>, Item>> {
+        &self.buckets[(fxhash(key) as usize >> 6) & (self.buckets.len() - 1)]
+    }
+}
+
+impl McdEngine for StockEngine {
+    fn get(&self, key: Vec<u8>, cb: GetCb) {
+        let item = self.bucket(&key).lock().unwrap().get(&key).cloned();
+        // Periodic LRU bump: even reads synchronize on the global list
+        // every so often (stock memcached's lazy bump).
+        if item.is_some() && self.accesses.fetch_add(1, Ordering::Relaxed) % LRU_BUMP_EVERY == 0 {
+            let mut lru = self.lru.lock().unwrap();
+            lru.push_back(key);
+            if lru.len() > 1 << 20 {
+                lru.pop_front();
+            }
+        }
+        cb(item);
+    }
+
+    fn set(&self, key: Vec<u8>, flags: u32, data: Vec<u8>, cb: SetCb) {
+        // Slab allocation (global mutex) ...
+        {
+            let mut bytes = self.slab_bytes.lock().unwrap();
+            *bytes += (key.len() + data.len()) as u64;
+        }
+        // ... table write (bucket lock) ...
+        let prev = self
+            .bucket(&key)
+            .lock()
+            .unwrap()
+            .insert(key.clone(), Item { flags, data });
+        // ... and LRU insertion (global mutex).
+        {
+            let mut lru = self.lru.lock().unwrap();
+            lru.push_back(key);
+            if lru.len() > 1 << 20 {
+                lru.pop_front();
+            }
+        }
+        if let Some(old) = prev {
+            let mut bytes = self.slab_bytes.lock().unwrap();
+            *bytes = bytes.saturating_sub(old.data.len() as u64);
+        }
+        cb(());
+    }
+
+    fn item_count(&self) -> usize {
+        self.buckets.iter().map(|b| b.lock().unwrap().len()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "stock"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Delegated engine (Trust<T>)
+// ---------------------------------------------------------------------
+
+/// One delegated shard: table + its own LRU + byte accounting, all
+/// trustee-local (zero synchronization).
+pub struct McdShard {
+    table: OaTable<Vec<u8>, Item>,
+    lru: VecDeque<Vec<u8>>,
+    bytes: u64,
+    accesses: u64,
+}
+
+impl Default for McdShard {
+    fn default() -> Self {
+        McdShard {
+            table: OaTable::with_capacity(1024),
+            lru: VecDeque::new(),
+            bytes: 0,
+            accesses: 0,
+        }
+    }
+}
+
+impl McdShard {
+    fn get(&mut self, key: &[u8]) -> Option<Item> {
+        let item = self.table.get(key).cloned();
+        if item.is_some() {
+            self.accesses += 1;
+            if self.accesses % LRU_BUMP_EVERY == 0 {
+                self.lru.push_back(key.to_vec());
+                if self.lru.len() > 1 << 18 {
+                    self.lru.pop_front();
+                }
+            }
+        }
+        item
+    }
+
+    fn set(&mut self, key: Vec<u8>, flags: u32, data: Vec<u8>) {
+        self.bytes += (key.len() + data.len()) as u64;
+        if let Some(old) = self.table.insert(key.clone(), Item { flags, data }) {
+            self.bytes = self.bytes.saturating_sub(old.data.len() as u64);
+        }
+        self.lru.push_back(key);
+        if self.lru.len() > 1 << 18 {
+            self.lru.pop_front();
+        }
+    }
+}
+
+pub struct TrustEngine {
+    shards: Vec<Trust<McdShard>>,
+}
+
+impl TrustEngine {
+    pub fn new(rt: &Runtime, trustees: &[usize], n_shards: usize) -> Arc<TrustEngine> {
+        let mut shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let tr = rt.trustee(trustees[s % trustees.len()]);
+            shards.push(tr.entrust(McdShard::default()));
+        }
+        Arc::new(TrustEngine { shards })
+    }
+
+    #[inline]
+    fn shard(&self, key: &[u8]) -> &Trust<McdShard> {
+        &self.shards[(fxhash(key) as usize >> 8) % self.shards.len()]
+    }
+}
+
+impl McdEngine for TrustEngine {
+    fn get(&self, key: Vec<u8>, cb: GetCb) {
+        self.shard(&key).apply_with_then(
+            |s, k: Vec<u8>| s.get(&k).map(|i| (i.flags, i.data)),
+            key,
+            move |r| cb(r.map(|(flags, data)| Item { flags, data })),
+        );
+    }
+
+    fn set(&self, key: Vec<u8>, flags: u32, data: Vec<u8>, cb: SetCb) {
+        self.shard(&key).apply_with_then(
+            move |s, (k, f, d): (Vec<u8>, u32, Vec<u8>)| {
+                s.set(k, f, d);
+                0u8 // fixed-size ack
+            },
+            (key, flags, data),
+            move |_| cb(()),
+        );
+    }
+
+    fn item_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.apply(|sh| sh.table.len() as u64) as usize)
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "trust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stock_engine_basics() {
+        let e = StockEngine::new(64);
+        let got = Arc::new(Mutex::new(None));
+        let g = got.clone();
+        e.set(b"k".to_vec(), 3, b"hello".to_vec(), Box::new(|_| {}));
+        e.get(
+            b"k".to_vec(),
+            Box::new(move |i| {
+                *g.lock().unwrap() = i;
+            }),
+        );
+        let item = got.lock().unwrap().clone().unwrap();
+        assert_eq!(item.flags, 3);
+        assert_eq!(item.data, b"hello");
+        assert_eq!(e.item_count(), 1);
+    }
+
+    #[test]
+    fn stock_engine_concurrent_sets() {
+        let e = StockEngine::new(64);
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let e = e.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        e.set(
+                            format!("t{t}-{i}").into_bytes(),
+                            0,
+                            vec![0u8; 16],
+                            Box::new(|_| {}),
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(e.item_count(), 800);
+    }
+
+    #[test]
+    fn trust_engine_roundtrip() {
+        let rt = Runtime::builder().workers(2).build();
+        let e = TrustEngine::new(&rt, &[0], 2);
+        let e2 = e.clone();
+        rt.block_on(1, move || {
+            let done = Arc::new(AtomicU64::new(0));
+            let d = done.clone();
+            e2.set(b"alpha".to_vec(), 7, b"beta".to_vec(), Box::new(move |_| {
+                d.fetch_add(1, Ordering::Relaxed);
+            }));
+            while done.load(Ordering::Relaxed) == 0 {
+                crate::fiber::yield_now();
+            }
+            let got = Arc::new(Mutex::new(None));
+            let g = got.clone();
+            e2.get(
+                b"alpha".to_vec(),
+                Box::new(move |i| {
+                    *g.lock().unwrap() = i;
+                }),
+            );
+            loop {
+                if let Some(item) = got.lock().unwrap().clone() {
+                    assert_eq!(item.flags, 7);
+                    assert_eq!(item.data, b"beta");
+                    break;
+                }
+                crate::fiber::yield_now();
+            }
+        });
+        assert_eq!(e.item_count(), 1);
+        rt.shutdown();
+    }
+}

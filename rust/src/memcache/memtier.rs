@@ -1,0 +1,240 @@
+//! memtier-benchmark stand-in (§7.1): multi-threaded text-protocol load
+//! generator with per-thread connections, configurable pipelining, key
+//! distribution, and write percentage — reporting aggregate throughput the
+//! way `memtier_benchmark` does.
+
+use crate::util::{KeyDist, Rng};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Key encoding shared by prefill and load ("memtier-<n>" style).
+pub fn key_bytes(k: u64) -> Vec<u8> {
+    format!("memtier-{k}").into_bytes()
+}
+
+#[derive(Clone, Debug)]
+pub struct MemtierConfig {
+    pub addr: std::net::SocketAddr,
+    pub threads: usize,
+    /// Pipelining depth (paper: 48).
+    pub pipeline: usize,
+    pub ops_per_thread: u64,
+    pub keys: u64,
+    pub dist: String,
+    pub write_pct: u32,
+    pub val_len: usize,
+    pub seed: u64,
+}
+
+pub struct MemtierStats {
+    pub ops: u64,
+    pub elapsed: std::time::Duration,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl MemtierStats {
+    pub fn throughput(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+pub fn run_memtier(cfg: &MemtierConfig) -> MemtierStats {
+    let start = Instant::now();
+    let handles: Vec<_> = (0..cfg.threads)
+        .map(|t| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_connection(&cfg, t as u64))
+        })
+        .collect();
+    let mut ops = 0;
+    let mut hits = 0;
+    let mut misses = 0;
+    for h in handles {
+        let (o, hi, mi) = h.join().expect("memtier thread");
+        ops += o;
+        hits += hi;
+        misses += mi;
+    }
+    MemtierStats { ops, elapsed: start.elapsed(), hits, misses }
+}
+
+/// What we expect back for each sent command (text protocol is in-order).
+enum Expect {
+    Stored,
+    Value,
+}
+
+fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
+    let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0xA24B_AED4)));
+    let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
+    let mut stream = TcpStream::connect(cfg.addr).expect("connect memtier");
+    stream.set_nodelay(true).ok();
+    stream.set_nonblocking(true).unwrap();
+
+    let val: Vec<u8> = vec![b'm'; cfg.val_len];
+    let mut expect: std::collections::VecDeque<Expect> =
+        std::collections::VecDeque::with_capacity(cfg.pipeline);
+    let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
+    let mut wcur = 0usize;
+    let mut inbuf: Vec<u8> = Vec::with_capacity(64 * 1024);
+    let mut parsed = 0usize; // consumed prefix of inbuf
+    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
+
+    while done < cfg.ops_per_thread {
+        while sent < cfg.ops_per_thread && expect.len() < cfg.pipeline {
+            let key = key_bytes(dist.sample(&mut rng));
+            if rng.pct(cfg.write_pct) {
+                out.extend_from_slice(
+                    format!("set {} 0 0 {}\r\n", String::from_utf8_lossy(&key), val.len())
+                        .as_bytes(),
+                );
+                out.extend_from_slice(&val);
+                out.extend_from_slice(b"\r\n");
+                expect.push_back(Expect::Stored);
+            } else {
+                out.extend_from_slice(
+                    format!("get {}\r\n", String::from_utf8_lossy(&key)).as_bytes(),
+                );
+                expect.push_back(Expect::Value);
+            }
+            sent += 1;
+        }
+        // Flush.
+        loop {
+            if wcur >= out.len() {
+                out.clear();
+                wcur = 0;
+                break;
+            }
+            match stream.write(&out[wcur..]) {
+                Ok(0) => panic!("server closed"),
+                Ok(n) => wcur += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => panic!("write: {e}"),
+            }
+        }
+        // Read.
+        let mut chunk = [0u8; 32 * 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => panic!("server closed"),
+            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => panic!("read: {e}"),
+        }
+        // Parse responses in order.
+        loop {
+            let Some(front) = expect.front() else { break };
+            match front {
+                Expect::Stored => {
+                    let Some(end) = find_crlf(&inbuf[parsed..]) else { break };
+                    debug_assert_eq!(&inbuf[parsed..parsed + end], b"STORED");
+                    parsed += end + 2;
+                    expect.pop_front();
+                    done += 1;
+                    hits += 1;
+                }
+                Expect::Value => {
+                    // Either "END\r\n" (miss) or VALUE header + data + END.
+                    match try_parse_get(&inbuf[parsed..]) {
+                        Some((used, hit)) => {
+                            parsed += used;
+                            expect.pop_front();
+                            done += 1;
+                            if hit {
+                                hits += 1;
+                            } else {
+                                misses += 1;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+        if parsed > 0 {
+            inbuf.drain(..parsed);
+            parsed = 0;
+        }
+    }
+    (done, hits, misses)
+}
+
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
+}
+
+/// Parse a full GET response; returns (bytes_used, was_hit).
+fn try_parse_get(buf: &[u8]) -> Option<(usize, bool)> {
+    let line_end = find_crlf(buf)?;
+    let line = &buf[..line_end];
+    if line == b"END" {
+        return Some((line_end + 2, false));
+    }
+    assert!(line.starts_with(b"VALUE "), "unexpected reply {:?}", String::from_utf8_lossy(line));
+    // VALUE <key> <flags> <bytes>
+    let bytes: usize = std::str::from_utf8(line.rsplit(|&b| b == b' ').next()?)
+        .ok()?
+        .parse()
+        .ok()?;
+    let data_start = line_end + 2;
+    let end_start = data_start + bytes + 2;
+    if buf.len() < end_start + 5 {
+        return None;
+    }
+    debug_assert_eq!(&buf[end_start..end_start + 5], b"END\r\n");
+    Some((end_start + 5, true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memcache::server::{EngineKind, McdServer, McdServerConfig};
+
+    fn smoke(engine: EngineKind) -> MemtierStats {
+        let server = McdServer::start(McdServerConfig {
+            workers: 3,
+            engine,
+            ..Default::default()
+        });
+        server.prefill(200, 16);
+        let stats = run_memtier(&MemtierConfig {
+            addr: server.addr(),
+            threads: 2,
+            pipeline: 12,
+            ops_per_thread: 400,
+            keys: 200,
+            dist: "uniform".into(),
+            write_pct: 10,
+            val_len: 16,
+            seed: 99,
+        });
+        server.stop();
+        stats
+    }
+
+    #[test]
+    fn memtier_against_trust_engine() {
+        let stats = smoke(EngineKind::Trust { shards: 4 });
+        assert_eq!(stats.ops, 800);
+        assert_eq!(stats.misses, 0, "prefilled keys must hit");
+    }
+
+    #[test]
+    fn memtier_against_stock_engine() {
+        let stats = smoke(EngineKind::Stock);
+        assert_eq!(stats.ops, 800);
+        assert_eq!(stats.misses, 0);
+    }
+
+    #[test]
+    fn get_parser_handles_partials() {
+        let full = b"VALUE k 0 5\r\nhello\r\nEND\r\n";
+        for cut in 0..full.len() {
+            assert!(try_parse_get(&full[..cut]).is_none(), "cut={cut}");
+        }
+        assert_eq!(try_parse_get(full), Some((full.len(), true)));
+        assert_eq!(try_parse_get(b"END\r\nmore"), Some((5, false)));
+    }
+}

@@ -1,0 +1,18 @@
+//! Mini-memcached (paper §7): a faithful miniature of the memcached port —
+//! text protocol, the stock lock-based engine vs. delegated Trust<T>
+//! shards, and a memtier-benchmark-style load generator.
+//!
+//! Substitution note (DESIGN.md #3): we cannot link the C memcached here;
+//! this Rust miniature reproduces the *structural* change of the paper's
+//! port — critical sections become delegated closures on sharded state,
+//! socket workers use asynchronous delegation and reorder responses — and
+//! the synchronization profile of stock memcached (per-item locks, global
+//! LRU + slab locks).
+
+pub mod engine;
+pub mod memtier;
+pub mod server;
+
+pub use engine::{Item, McdEngine, McdShard, StockEngine, TrustEngine};
+pub use memtier::{run_memtier, MemtierConfig, MemtierStats};
+pub use server::{EngineKind, McdServer, McdServerConfig};

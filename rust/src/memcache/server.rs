@@ -1,0 +1,460 @@
+//! Mini-memcached TCP server speaking the memcached **text protocol**
+//! (get/set subset), structured like the paper's port (§7):
+//!
+//! - Socket worker fibers follow the original state-machine order:
+//!   receive → parse → process → enqueue result → transmit.
+//! - With the [`TrustEngine`](super::engine::TrustEngine), each request is
+//!   dispatched with asynchronous delegation (`apply_then`) and the worker
+//!   "moves on to the next request without waiting".
+//! - The memcached protocol has no request ids, so responses to one
+//!   connection must be transmitted **in order** even though shard
+//!   responses may complete out of order — exactly the reordering buffer
+//!   the paper describes ("the memcached socket worker thread must order
+//!   the responses before they are transmitted").
+
+use super::engine::McdEngine;
+use crate::kvstore::netfiber::{read_available, write_pending, ReadOutcome};
+use crate::fiber;
+use crate::runtime::Runtime;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One parsed text-protocol command.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Command {
+    Get { key: Vec<u8> },
+    Set { key: Vec<u8>, flags: u32, data: Vec<u8> },
+}
+
+/// Incremental text-protocol parser. Returns (command, bytes_consumed).
+pub fn parse_command(buf: &[u8]) -> Option<(Command, usize)> {
+    let line_end = find_crlf(buf)?;
+    let line = &buf[..line_end];
+    let mut parts = line.split(|&b| b == b' ').filter(|p| !p.is_empty());
+    match parts.next()? {
+        b"get" => {
+            let key = parts.next()?.to_vec();
+            Some((Command::Get { key }, line_end + 2))
+        }
+        b"set" => {
+            let key = parts.next()?.to_vec();
+            let flags: u32 = parse_num(parts.next()?)?;
+            let _exptime: u64 = parse_num(parts.next()?)?;
+            let bytes: usize = parse_num(parts.next()?)?;
+            let data_start = line_end + 2;
+            if buf.len() < data_start + bytes + 2 {
+                return None; // waiting for the data block
+            }
+            let data = buf[data_start..data_start + bytes].to_vec();
+            Some((Command::Set { key, flags, data }, data_start + bytes + 2))
+        }
+        other => panic!(
+            "mini-memcached: unsupported command {:?}",
+            String::from_utf8_lossy(other)
+        ),
+    }
+}
+
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
+}
+
+fn parse_num<N: std::str::FromStr>(b: &[u8]) -> Option<N> {
+    std::str::from_utf8(b).ok()?.parse().ok()
+}
+
+/// Engine selector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Stock,
+    Trust { shards: usize },
+}
+
+impl EngineKind {
+    pub fn label(&self) -> String {
+        match self {
+            EngineKind::Stock => "S (stock)".into(),
+            EngineKind::Trust { shards } => format!("Trust{shards}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct McdServerConfig {
+    pub workers: usize,
+    pub dedicated: usize,
+    pub engine: EngineKind,
+    pub addr: String,
+}
+
+impl Default for McdServerConfig {
+    fn default() -> Self {
+        McdServerConfig {
+            workers: 4,
+            dedicated: 0,
+            engine: EngineKind::Trust { shards: 4 },
+            addr: "127.0.0.1:0".into(),
+        }
+    }
+}
+
+/// A running mini-memcached instance.
+pub struct McdServer {
+    rt: Option<Runtime>,
+    engine: Arc<dyn McdEngine>,
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    pub ops_served: Arc<AtomicU64>,
+}
+
+impl McdServer {
+    pub fn start(cfg: McdServerConfig) -> McdServer {
+        let rt = Runtime::builder()
+            .workers(cfg.workers)
+            .dedicated_trustees(cfg.dedicated)
+            .build();
+        let trustees: Vec<usize> = if cfg.dedicated > 0 {
+            (0..cfg.dedicated).collect()
+        } else {
+            (0..cfg.workers).collect()
+        };
+        let engine: Arc<dyn McdEngine> = match &cfg.engine {
+            EngineKind::Stock => super::engine::StockEngine::new(1 << 16),
+            EngineKind::Trust { shards } => {
+                super::engine::TrustEngine::new(&rt, &trustees, (*shards).max(1))
+            }
+        };
+        let listener = TcpListener::bind(&cfg.addr).expect("bind memcached");
+        let local_addr = listener.local_addr().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let ops_served = Arc::new(AtomicU64::new(0));
+        let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
+        assert!(!socket_workers.is_empty());
+
+        let accept_handle = {
+            let stop = stop.clone();
+            let engine = engine.clone();
+            let shared = rt.shared().clone();
+            let ops = ops_served.clone();
+            std::thread::Builder::new()
+                .name("mcd-accept".into())
+                .spawn(move || {
+                    let mut next = 0usize;
+                    while !stop.load(Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let worker = socket_workers[next % socket_workers.len()];
+                                next += 1;
+                                let engine = engine.clone();
+                                let ops = ops.clone();
+                                let stop = stop.clone();
+                                shared.inject(
+                                    worker,
+                                    Box::new(move |w| {
+                                        w.exec.spawn(move || {
+                                            connection_fiber(stream, engine, ops, stop)
+                                        });
+                                    }),
+                                );
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(std::time::Duration::from_micros(200));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .unwrap()
+        };
+
+        McdServer {
+            rt: Some(rt),
+            engine,
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            ops_served,
+        }
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn engine(&self) -> &Arc<dyn McdEngine> {
+        &self.engine
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt.as_ref().unwrap()
+    }
+
+    /// Populate the table with `n` items of `val_len` bytes.
+    pub fn prefill(&self, n: u64, val_len: usize) {
+        let worker = self.runtime().workers() - 1;
+        let engine = self.engine.clone();
+        self.runtime().block_on(worker, move || {
+            let done = Arc::new(AtomicU64::new(0));
+            let mut issued = 0u64;
+            while issued < n || done.load(Ordering::Relaxed) < n {
+                while issued < n && issued - done.load(Ordering::Relaxed) < 256 {
+                    let d = done.clone();
+                    engine.set(
+                        super::memtier::key_bytes(issued),
+                        0,
+                        vec![b'v'; val_len],
+                        Box::new(move |_| {
+                            d.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    );
+                    issued += 1;
+                }
+                fiber::yield_now();
+            }
+        });
+    }
+
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(rt) = self.rt.take() {
+            rt.shutdown();
+        }
+    }
+}
+
+impl Drop for McdServer {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+/// Ordered response buffer: completions arrive out of order from the
+/// shards; the wire needs them in request order.
+struct Reorder {
+    next_seq: u64,
+    next_emit: u64,
+    pending: HashMap<u64, Vec<u8>>,
+}
+
+fn connection_fiber(
+    mut stream: TcpStream,
+    engine: Arc<dyn McdEngine>,
+    ops: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) {
+    stream.set_nonblocking(true).unwrap();
+    stream.set_nodelay(true).ok();
+    let reorder = Rc::new(RefCell::new(Reorder {
+        next_seq: 0,
+        next_emit: 0,
+        pending: HashMap::new(),
+    }));
+    let mut inbuf: Vec<u8> = Vec::with_capacity(32 * 1024);
+    let mut out: Vec<u8> = Vec::with_capacity(32 * 1024);
+    let mut wcur = 0usize;
+    let mut peer_gone = false;
+
+    loop {
+        if !peer_gone {
+            match read_available(&mut stream, &mut inbuf) {
+                ReadOutcome::Closed => peer_gone = true,
+                _ => {}
+            }
+        }
+        // Parse + dispatch (state machine: receive → parse → process).
+        let mut consumed = 0usize;
+        while let Some((cmd, used)) = parse_command(&inbuf[consumed..]) {
+            consumed += used;
+            let seq = {
+                let mut r = reorder.borrow_mut();
+                let s = r.next_seq;
+                r.next_seq += 1;
+                s
+            };
+            let ro = reorder.clone();
+            let ops = ops.clone();
+            match cmd {
+                Command::Get { key } => {
+                    let echo_key = key.clone();
+                    engine.get(
+                        key,
+                        Box::new(move |item| {
+                            let mut resp = Vec::new();
+                            if let Some(item) = item {
+                                resp.extend_from_slice(
+                                    format!(
+                                        "VALUE {} {} {}\r\n",
+                                        String::from_utf8_lossy(&echo_key),
+                                        item.flags,
+                                        item.data.len()
+                                    )
+                                    .as_bytes(),
+                                );
+                                resp.extend_from_slice(&item.data);
+                                resp.extend_from_slice(b"\r\n");
+                            }
+                            resp.extend_from_slice(b"END\r\n");
+                            ro.borrow_mut().pending.insert(seq, resp);
+                            ops.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    );
+                }
+                Command::Set { key, flags, data } => {
+                    engine.set(
+                        key,
+                        flags,
+                        data,
+                        Box::new(move |_| {
+                            ro.borrow_mut().pending.insert(seq, b"STORED\r\n".to_vec());
+                            ops.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    );
+                }
+            }
+        }
+        if consumed > 0 {
+            inbuf.drain(..consumed);
+        }
+        // Emit the contiguous prefix of completed responses, in order.
+        {
+            let mut r = reorder.borrow_mut();
+            loop {
+                let seq = r.next_emit;
+                let Some(resp) = r.pending.remove(&seq) else { break };
+                out.extend_from_slice(&resp);
+                r.next_emit += 1;
+            }
+        }
+        if !write_pending(&mut stream, &mut out, &mut wcur) {
+            break;
+        }
+        {
+            let r = reorder.borrow();
+            let drained = r.next_emit == r.next_seq && out.is_empty();
+            if drained && (peer_gone || stop.load(Ordering::Acquire)) {
+                break;
+            }
+        }
+        fiber::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Read, Write};
+
+    #[test]
+    fn parse_get_and_set() {
+        let (cmd, used) = parse_command(b"get foo\r\n").unwrap();
+        assert_eq!(cmd, Command::Get { key: b"foo".to_vec() });
+        assert_eq!(used, 9);
+        let (cmd, used) = parse_command(b"set foo 7 0 5\r\nhello\r\nget x\r\n").unwrap();
+        assert_eq!(
+            cmd,
+            Command::Set { key: b"foo".to_vec(), flags: 7, data: b"hello".to_vec() }
+        );
+        assert_eq!(used, 22);
+    }
+
+    #[test]
+    fn parse_waits_for_data_block() {
+        assert!(parse_command(b"set foo 0 0 5\r\nhel").is_none());
+        assert!(parse_command(b"set foo 0 0 5\r\n").is_none());
+        assert!(parse_command(b"get fo").is_none());
+    }
+
+    fn mcd_roundtrip(engine: EngineKind) {
+        let server = McdServer::start(McdServerConfig {
+            workers: 2,
+            engine,
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        c.write_all(b"set greeting 5 0 5\r\nhello\r\n").unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "STORED\r\n");
+
+        c.write_all(b"get greeting\r\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "VALUE greeting 5 5\r\n");
+        let mut data = vec![0u8; 7];
+        reader.read_exact(&mut data).unwrap();
+        assert_eq!(&data, b"hello\r\n");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "END\r\n");
+
+        c.write_all(b"get missing\r\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "END\r\n");
+        drop((c, reader));
+        server.stop();
+    }
+
+    #[test]
+    fn stock_server_roundtrip() {
+        mcd_roundtrip(EngineKind::Stock);
+    }
+
+    #[test]
+    fn trust_server_roundtrip() {
+        mcd_roundtrip(EngineKind::Trust { shards: 2 });
+    }
+
+    #[test]
+    fn pipelined_responses_stay_ordered() {
+        // The delegated engine completes out of order across shards; the
+        // text protocol demands in-order responses. Hammer with a
+        // pipelined mix and verify strict ordering by echoing keys.
+        let server = McdServer::start(McdServerConfig {
+            workers: 3,
+            engine: EngineKind::Trust { shards: 8 },
+            ..Default::default()
+        });
+        server.prefill(64, 8);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let mut sent_keys = Vec::new();
+        let mut req = Vec::new();
+        for i in 0..64u64 {
+            let key = super::super::memtier::key_bytes(i);
+            req.extend_from_slice(format!("get {}\r\n", String::from_utf8_lossy(&key)).as_bytes());
+            sent_keys.push(key);
+        }
+        c.write_all(&req).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        for want in &sent_keys {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(
+                line.starts_with(&format!("VALUE {} ", String::from_utf8_lossy(want))),
+                "out-of-order response: got {line:?} want key {}",
+                String::from_utf8_lossy(want)
+            );
+            let mut data_line = String::new();
+            reader.read_line(&mut data_line).unwrap(); // data
+            let mut end = String::new();
+            reader.read_line(&mut end).unwrap();
+            assert_eq!(end, "END\r\n");
+        }
+        drop((c, reader));
+        server.stop();
+    }
+}

@@ -1,0 +1,601 @@
+//! The Trust\<T\> runtime: worker threads, the per-worker scheduler loop,
+//! and the shared/dedicated trustee topology (paper §3.2, §5.2).
+//!
+//! Every OS worker thread is simultaneously:
+//!
+//! - a **trustee**, serving delegation requests addressed to properties it
+//!   owns (scanning its column of the slot [`Matrix`]),
+//! - a **client**, flushing outgoing request batches and dispatching
+//!   responses (its row of the matrix), and
+//! - a **fiber host**, running application fibers.
+//!
+//! *Dedicated* trustees (§6.1's "dedicated" configuration) are workers that
+//! host no application fibers — they spend all their time serving.
+//!
+//! The scheduler loop interleaves, in FIFO fashion like the paper's
+//! delegation fiber (§5.2): serve incoming requests → poll responses
+//! (resuming fibers / running `then`-callbacks) → flush pending outgoing
+//! requests → run one application fiber. Off the hot path, each worker also
+//! drains an injector queue (mutex-guarded) through which non-worker
+//! threads submit jobs — the paper's runtime has an equivalent start-up
+//! path for entrusting initial properties and spawning root fibers.
+
+pub mod xla_exec;
+
+use crate::channel::{ClientEndpoint, Matrix, TrusteeEndpoint};
+use crate::fiber::{self, Executor};
+use crate::util::affinity;
+use crate::util::cache::Backoff;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A job injected from outside the runtime (runs on the worker's scheduler
+/// stack, *not* in a fiber).
+pub type Job = Box<dyn FnOnce(&mut Worker) + Send + 'static>;
+
+/// State shared by all workers and the runtime handle.
+pub struct Shared {
+    pub(crate) matrix: Matrix,
+    n: usize,
+    dedicated: usize,
+    shutdown: AtomicBool,
+    stopped: AtomicBool,
+    finished: AtomicUsize,
+    injectors: Vec<Mutex<Vec<Job>>>,
+    injector_nonempty: Vec<AtomicBool>,
+}
+
+impl Shared {
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Workers `0..dedicated()` host no application fibers.
+    pub fn dedicated(&self) -> usize {
+        self.dedicated
+    }
+
+    /// True once the runtime has fully stopped (workers joined); Trust
+    /// handles outliving the runtime become inert.
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::Acquire)
+    }
+
+    /// Queue a job for `worker`. Panics if the runtime has stopped.
+    pub fn inject(&self, worker: usize, job: Job) {
+        assert!(
+            !self.is_stopped(),
+            "job injected into a stopped Trust<T> runtime"
+        );
+        self.injectors[worker].lock().unwrap().push(job);
+        self.injector_nonempty[worker].store(true, Ordering::Release);
+    }
+}
+
+/// Per-worker registry of entrusted properties (for cleanup at shutdown
+/// and refcount-zero reclamation).
+#[derive(Default)]
+pub struct Registry {
+    entries: Vec<Option<(usize, unsafe fn(*mut u8))>>,
+    free: Vec<usize>,
+    pub live: usize,
+}
+
+impl Registry {
+    pub fn register(&mut self, ptr: *mut u8, drop_fn: unsafe fn(*mut u8)) -> usize {
+        self.live += 1;
+        match self.free.pop() {
+            Some(i) => {
+                self.entries[i] = Some((ptr as usize, drop_fn));
+                i
+            }
+            None => {
+                self.entries.push(Some((ptr as usize, drop_fn)));
+                self.entries.len() - 1
+            }
+        }
+    }
+
+    /// Remove and drop the property at `idx`.
+    ///
+    /// # Safety
+    /// `idx` must have been returned by `register` on this registry and the
+    /// property must not be referenced afterwards.
+    pub unsafe fn reclaim(&mut self, idx: usize) {
+        let (ptr, drop_fn) = self.entries[idx].take().expect("double reclaim");
+        self.free.push(idx);
+        self.live -= 1;
+        unsafe { drop_fn(ptr as *mut u8) };
+    }
+
+    fn drain_all(&mut self) {
+        for e in self.entries.iter_mut() {
+            if let Some((ptr, drop_fn)) = e.take() {
+                self.live -= 1;
+                // SAFETY: shutdown — no more requests will touch this prop.
+                unsafe { drop_fn(ptr as *mut u8) };
+            }
+        }
+    }
+}
+
+/// Per-worker scheduler state. Accessible from fibers and thunks running on
+/// this worker's thread via [`with_worker`].
+pub struct Worker {
+    pub id: usize,
+    pub shared: Arc<Shared>,
+    pub exec: Box<Executor>,
+    clients: Vec<ClientEndpoint>,
+    trustees: Vec<TrusteeEndpoint>,
+    in_delegated: Cell<bool>,
+    pub registry: Registry,
+    /// Metrics.
+    pub loops: u64,
+    pub served_requests: u64,
+}
+
+thread_local! {
+    static WORKER: Cell<*mut Worker> = const { Cell::new(std::ptr::null_mut()) };
+}
+
+/// Run `f` with the current thread's worker. Panics off runtime threads.
+pub fn with_worker<R>(f: impl FnOnce(&mut Worker) -> R) -> R {
+    let p = WORKER.with(|c| c.get());
+    assert!(!p.is_null(), "not on a Trust<T> runtime worker thread");
+    // SAFETY: set for the worker's lifetime on this thread; crate-internal
+    // callers do not hold overlapping borrows across calls.
+    unsafe { f(&mut *p) }
+}
+
+/// Worker id of the current thread, if it is a runtime worker.
+pub fn try_worker_id() -> Option<usize> {
+    let p = WORKER.with(|c| c.get());
+    if p.is_null() {
+        None
+    } else {
+        Some(unsafe { (*p).id })
+    }
+}
+
+/// Is the calling thread currently in delegated context (§3.4)?
+pub fn in_delegated_context() -> bool {
+    let p = WORKER.with(|c| c.get());
+    !p.is_null() && unsafe { (*p).in_delegated.get() }
+}
+
+impl Worker {
+    /// The client endpoint toward `trustee`.
+    pub fn client_mut(&mut self, trustee: usize) -> &mut ClientEndpoint {
+        &mut self.clients[trustee]
+    }
+
+    /// Flush one client edge eagerly (used right after enqueue).
+    pub fn kick(&mut self, trustee: usize) {
+        let pair = self.shared.matrix.pair(self.id, trustee);
+        self.clients[trustee].try_flush(pair);
+    }
+
+    pub fn set_delegated(&self, v: bool) -> bool {
+        self.in_delegated.replace(v)
+    }
+
+    pub fn in_delegated(&self) -> bool {
+        self.in_delegated.get()
+    }
+
+    /// Serve every client's pending batch addressed to this trustee.
+    /// Delegated closures run inside, with the delegated-context flag set.
+    fn serve_all(&mut self) -> usize {
+        let n = self.shared.n();
+        let mut total = 0;
+        let shared = self.shared.clone();
+        let prev = self.in_delegated.replace(true);
+        for c in 0..n {
+            let pair = shared.matrix.pair(c, self.id);
+            // SAFETY: all records were framed by the trust layer with
+            // matching thunk/payload types; props are owned by this thread.
+            total += unsafe { self.trustees[c].serve(pair) };
+        }
+        self.in_delegated.set(prev);
+        self.served_requests += total as u64;
+        total
+    }
+
+    /// Poll every trustee's response slot; dispatch completions (which
+    /// resume fibers / run callbacks) and flush follow-up batches.
+    fn poll_all(&mut self) -> usize {
+        let n = self.shared.n();
+        let mut total = 0;
+        let shared = self.shared.clone();
+        for t in 0..n {
+            let pair = shared.matrix.pair(self.id, t);
+            total += self.clients[t].poll(pair);
+        }
+        total
+    }
+
+    fn drain_injector(&mut self) -> usize {
+        if !self.shared.injector_nonempty[self.id].load(Ordering::Acquire) {
+            return 0;
+        }
+        let jobs: Vec<Job> = {
+            let mut q = self.shared.injectors[self.id].lock().unwrap();
+            self.shared.injector_nonempty[self.id].store(false, Ordering::Release);
+            std::mem::take(&mut *q)
+        };
+        let count = jobs.len();
+        for job in jobs {
+            job(self);
+        }
+        count
+    }
+
+    /// Outstanding client work (unflushed or undispatched requests).
+    fn pending_client_work(&self) -> usize {
+        self.clients.iter().map(|c| c.pending()).sum()
+    }
+
+    /// One iteration of the scheduler loop; returns (useful, ran_fiber):
+    /// `useful` counts delegation work (requests served, responses
+    /// dispatched, jobs injected); `ran_fiber` whether a fiber slice ran.
+    pub fn tick(&mut self) -> (usize, bool) {
+        self.loops += 1;
+        let mut useful = 0;
+        useful += self.serve_all();
+        useful += self.poll_all();
+        useful += self.drain_injector();
+        let ran_fiber = self.exec.run_one();
+        (useful, ran_fiber)
+    }
+
+    fn main_loop(&mut self) {
+        let mut backoff = Backoff::new();
+        let mut announced_done = false;
+        // Single-core fairness (DESIGN.md substitution #1): a worker whose
+        // only activity is an idle-polling fiber (e.g. a socket fiber with
+        // nothing on the wire) must not monopolize the CPU, or trustees on
+        // other threads starve. After a few fiber-only ticks with zero
+        // delegation progress, offer the OS a reschedule point.
+        const FIBER_ONLY_YIELD: u32 = 4;
+        let mut fiber_only_ticks = 0u32;
+        loop {
+            let (useful, ran_fiber) = self.tick();
+            if useful > 0 {
+                backoff.reset();
+                fiber_only_ticks = 0;
+            } else if ran_fiber {
+                backoff.reset();
+                fiber_only_ticks += 1;
+                if fiber_only_ticks >= FIBER_ONLY_YIELD {
+                    fiber_only_ticks = 0;
+                    std::thread::yield_now();
+                }
+            } else {
+                backoff.snooze();
+            }
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                let quiescent = self.exec.live() == 0 && self.pending_client_work() == 0;
+                if quiescent && !announced_done {
+                    announced_done = true;
+                    self.shared.finished.fetch_add(1, Ordering::AcqRel);
+                } else if !quiescent && announced_done {
+                    // Late work arrived (e.g. injected refcount drop).
+                    announced_done = false;
+                    self.shared.finished.fetch_sub(1, Ordering::AcqRel);
+                }
+                // Keep serving until *everyone* is quiescent so cross-worker
+                // responses still flow during teardown.
+                if announced_done
+                    && self.shared.finished.load(Ordering::Acquire) == self.shared.n()
+                {
+                    break;
+                }
+            }
+        }
+        self.registry.drain_all();
+    }
+}
+
+/// Configuration for [`Runtime`].
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub workers: usize,
+    /// First `dedicated` workers host no application fibers (§6.1/§6.3's
+    /// dedicated-trustee configurations, e.g. Trust16/Trust24).
+    pub dedicated: usize,
+    pub stack_size: usize,
+    /// Pin worker threads to CPUs (no-op when CPUs are scarce).
+    pub pin: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: affinity::num_cpus().max(2),
+            dedicated: 0,
+            stack_size: fiber::DEFAULT_STACK_SIZE,
+            pin: false,
+        }
+    }
+}
+
+/// Builder for [`Runtime`].
+#[derive(Default)]
+pub struct Builder {
+    cfg: Config,
+}
+
+impl Builder {
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn dedicated_trustees(mut self, n: usize) -> Self {
+        self.cfg.dedicated = n;
+        self
+    }
+
+    pub fn stack_size(mut self, bytes: usize) -> Self {
+        self.cfg.stack_size = bytes;
+        self
+    }
+
+    pub fn pin_threads(mut self, pin: bool) -> Self {
+        self.cfg.pin = pin;
+        self
+    }
+
+    pub fn build(self) -> Runtime {
+        Runtime::new(self.cfg)
+    }
+}
+
+/// Handle to a running Trust\<T\> runtime.
+pub struct Runtime {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    pub fn builder() -> Builder {
+        Builder::default()
+    }
+
+    pub fn new(cfg: Config) -> Runtime {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        let n = cfg.workers;
+        let shared = Arc::new(Shared {
+            matrix: Matrix::new(n),
+            n,
+            dedicated: cfg.dedicated,
+            shutdown: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            finished: AtomicUsize::new(0),
+            injectors: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            injector_nonempty: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        });
+        let pin_plan = affinity::plan_pinning(n, cfg.dedicated);
+        let mut handles = Vec::with_capacity(n);
+        let started = Arc::new(AtomicUsize::new(0));
+        for id in 0..n {
+            let shared = shared.clone();
+            let started = started.clone();
+            let stack_size = cfg.stack_size;
+            let pin = cfg.pin.then_some(pin_plan[id]);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("trustee-w{id}"))
+                    .spawn(move || {
+                        if let Some(cpu) = pin {
+                            affinity::pin_to_cpu(cpu);
+                        }
+                        let mut exec = Executor::with_stack_size(stack_size);
+                        let _guard = exec.install();
+                        let mut worker = Box::new(Worker {
+                            id,
+                            shared: shared.clone(),
+                            exec,
+                            clients: (0..shared.n()).map(|_| ClientEndpoint::default()).collect(),
+                            trustees: (0..shared.n())
+                                .map(|_| TrusteeEndpoint::default())
+                                .collect(),
+                            in_delegated: Cell::new(false),
+                            registry: Registry::default(),
+                            loops: 0,
+                            served_requests: 0,
+                        });
+                        WORKER.with(|c| c.set(&mut *worker));
+                        started.fetch_add(1, Ordering::AcqRel);
+                        worker.main_loop();
+                        WORKER.with(|c| c.set(std::ptr::null_mut()));
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        // Wait for all workers to come up before handing out the handle.
+        while started.load(Ordering::Acquire) != n {
+            std::thread::yield_now();
+        }
+        Runtime { shared, handles }
+    }
+
+    pub fn shared(&self) -> &Arc<Shared> {
+        &self.shared
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shared.n()
+    }
+
+    /// A [`crate::trust::TrusteeRef`] for worker `id`.
+    pub fn trustee(&self, id: usize) -> crate::trust::TrusteeRef {
+        assert!(id < self.shared.n());
+        crate::trust::TrusteeRef::new(self.shared.clone(), id)
+    }
+
+    /// Spawn a fiber on `worker` (fire-and-forget).
+    pub fn spawn_on(&self, worker: usize, f: impl FnOnce() + Send + 'static) {
+        assert!(
+            worker >= self.shared.dedicated(),
+            "worker {worker} is a dedicated trustee; spawn application fibers elsewhere"
+        );
+        self.shared.inject(
+            worker,
+            Box::new(move |w| {
+                w.exec.spawn(f);
+            }),
+        );
+    }
+
+    /// Run `f` as a fiber on `worker` and block the calling (non-runtime)
+    /// thread until it completes, returning its result.
+    pub fn block_on<R: Send + 'static>(
+        &self,
+        worker: usize,
+        f: impl FnOnce() -> R + Send + 'static,
+    ) -> R {
+        let done = Arc::new((Mutex::new(None::<std::thread::Result<R>>), Condvar::new()));
+        let done2 = done.clone();
+        self.shared.inject(
+            worker,
+            Box::new(move |w| {
+                w.exec.spawn(move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                    let (m, cv) = &*done2;
+                    *m.lock().unwrap() = Some(r);
+                    cv.notify_all();
+                });
+            }),
+        );
+        let (m, cv) = &*done;
+        let mut guard = m.lock().unwrap();
+        while guard.is_none() {
+            guard = cv.wait(guard).unwrap();
+        }
+        match guard.take().unwrap() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+
+    /// Request shutdown and join all workers. Implied by `Drop`.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.stopped.store(true, Ordering::Release);
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_starts_and_stops() {
+        let rt = Runtime::builder().workers(2).build();
+        assert_eq!(rt.workers(), 2);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn block_on_returns_value() {
+        let rt = Runtime::builder().workers(2).build();
+        let v = rt.block_on(0, || 40 + 2);
+        assert_eq!(v, 42);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn block_on_runs_in_fiber_context() {
+        let rt = Runtime::builder().workers(1).build();
+        let (in_fib, wid) = rt.block_on(0, || (fiber::in_fiber(), try_worker_id()));
+        assert!(in_fib);
+        assert_eq!(wid, Some(0));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn block_on_propagates_panic() {
+        let rt = Runtime::builder().workers(1).build();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            rt.block_on(0, || panic!("fiber goes boom"));
+        }));
+        assert!(r.is_err());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn spawn_on_runs() {
+        let rt = Runtime::builder().workers(2).build();
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = flag.clone();
+        rt.spawn_on(1, move || f2.store(true, Ordering::Release));
+        // Synchronize via block_on on the same worker: FIFO fiber order
+        // means our fiber runs after the spawned one.
+        rt.block_on(1, || {});
+        assert!(flag.load(Ordering::Acquire));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn many_block_ons_across_workers() {
+        let rt = Runtime::builder().workers(3).build();
+        for i in 0..30u64 {
+            let w = (i % 3) as usize;
+            let v = rt.block_on(w, move || i * 2);
+            assert_eq!(v, i * 2);
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn worker_ids_cover_range() {
+        let rt = Runtime::builder().workers(3).build();
+        let mut ids: Vec<usize> = (0..3)
+            .map(|w| rt.block_on(w, move || try_worker_id().unwrap()))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        rt.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "dedicated trustee")]
+    fn spawn_on_dedicated_rejected() {
+        let rt = Runtime::builder().workers(2).dedicated_trustees(1).build();
+        rt.spawn_on(0, || {});
+    }
+
+    #[test]
+    fn yielding_fibers_interleave_with_runtime() {
+        let rt = Runtime::builder().workers(1).build();
+        let v = rt.block_on(0, || {
+            let mut acc = 0u64;
+            for i in 0..10 {
+                acc += i;
+                fiber::yield_now();
+            }
+            acc
+        });
+        assert_eq!(v, 45);
+        rt.shutdown();
+    }
+}

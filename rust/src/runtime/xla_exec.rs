@@ -1,0 +1,138 @@
+//! PJRT executor: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from trustee threads.
+//!
+//! This is the L3↔L2 bridge of the three-layer stack: Python/JAX (+ the
+//! Pallas batch-apply kernel) runs once at build time; at runtime the Rust
+//! coordinator loads `artifacts/*.hlo.txt`, compiles it on the PJRT CPU
+//! client, and executes it with concrete buffers. Python is never on the
+//! request path.
+//!
+//! Interchange is HLO *text*, not a serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled XLA executable plus its client.
+pub struct XlaExec {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+// SAFETY: the xla crate uses `Rc` and raw pointers internally, so its types
+// are !Send, but the *object graph is self-contained*: `client` and `exe`
+// hold the only Rc clones of the underlying PjRtClientInternal, and they
+// move together as one XlaExec. Entrusting an XlaExec/BatchEngine moves the
+// whole graph to the trustee thread, after which exactly one thread touches
+// it at a time — the same discipline Trust<T> enforces for every property.
+// (PJRT CPU itself is thread-safe; only the Rc refcounts require the
+// single-owner argument.)
+unsafe impl Send for XlaExec {}
+unsafe impl Send for BatchEngine {}
+
+impl XlaExec {
+    /// Load an HLO-text artifact and compile it for the CPU PJRT client.
+    pub fn load(path: impl AsRef<Path>) -> Result<XlaExec> {
+        let path = path.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile HLO")?;
+        Ok(XlaExec {
+            client,
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with literal inputs; returns the elements of the result
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(inputs).context("execute")?;
+        let result = out[0][0].to_literal_sync().context("fetch result")?;
+        let tuple = result.to_tuple().context("untuple result")?;
+        Ok(tuple)
+    }
+}
+
+/// The trustee-side batched-apply engine: owns a counter-table shard as an
+/// XLA literal and applies whole delegation batches through the compiled
+/// `engine_step` artifact (L2+L1) in one executable call.
+///
+/// This is the accelerator-era extension of the paper's trustee loop: where
+/// §5.2's trustee applies N closures sequentially, homogeneous batches
+/// (fetch-and-add and friends) are applied as one kernel launch; the
+/// returned `old` vector is the batch of responses.
+pub struct BatchEngine {
+    exec: XlaExec,
+    table: xla::Literal,
+    n: usize,
+    batch: usize,
+    /// Batches applied (metrics).
+    pub batches: u64,
+    /// Ops applied (metrics).
+    pub ops: u64,
+}
+
+impl BatchEngine {
+    /// `artifact` must be an `engine_step` lowering with static shapes
+    /// (table=n, batch=b) — see `python/compile/model.py::AOT_VARIANTS`.
+    pub fn new(artifact: impl AsRef<Path>, n: usize, batch: usize) -> Result<BatchEngine> {
+        let exec = XlaExec::load(artifact)?;
+        let table = xla::Literal::vec1(&vec![0i32; n]);
+        Ok(BatchEngine { exec, table, n, batch, batches: 0, ops: 0 })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Apply one batch of (key, delta) ops; pads short batches with no-op
+    /// (key 0, delta 0) entries. Returns the pre-increment values for the
+    /// real ops, in submission order.
+    pub fn apply_batch(&mut self, keys: &[i32], deltas: &[i32]) -> Result<Vec<i32>> {
+        assert_eq!(keys.len(), deltas.len());
+        assert!(keys.len() <= self.batch, "batch overflow");
+        let real = keys.len();
+        let mut k = keys.to_vec();
+        let mut d = deltas.to_vec();
+        k.resize(self.batch, 0);
+        d.resize(self.batch, 0);
+        let keys_l = xla::Literal::vec1(&k);
+        let deltas_l = xla::Literal::vec1(&d);
+        let table = std::mem::replace(&mut self.table, xla::Literal::vec1(&[0i32; 0]));
+        let mut out = self.exec.run(&[table, keys_l, deltas_l])?;
+        anyhow::ensure!(out.len() == 3, "engine_step returns (table, old, shard)");
+        let old = out.remove(1).to_vec::<i32>()?;
+        self.table = out.remove(0);
+        self.batches += 1;
+        self.ops += real as u64;
+        Ok(old[..real].to_vec())
+    }
+
+    /// Read the full table back (diagnostics / tests).
+    pub fn table(&self) -> Result<Vec<i32>> {
+        Ok(self.table.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Executable-level tests live in rust/tests/xla_artifacts.rs because
+    // they need `make artifacts` to have produced the HLO files.
+}

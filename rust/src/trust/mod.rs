@@ -1,0 +1,1214 @@
+//! `Trust<T>` — the paper's programming abstraction (§3, §4).
+//!
+//! A [`Trust<T>`] is a thread-safe reference-counting smart pointer to a
+//! *property* of type `T` owned by a *trustee* worker thread. The property
+//! is only accessible by applying closures through the trust:
+//!
+//! - [`Trust::apply`] — synchronous delegation (§4.1): suspends the calling
+//!   fiber until the closure has been applied, returns its value.
+//! - [`Trust::apply_then`] — non-blocking delegation (§4.2): returns
+//!   immediately; the `then` closure runs on the caller's worker with the
+//!   return value. Safe to call from delegated context.
+//! - [`Trust::apply_with`] / [`Trust::apply_with_then`] — variable-size and
+//!   heap-allocated arguments travel serialized over the channel (§4.3.3).
+//! - [`Trust::launch`] (on `Trust<Latch<T>>`) — apply in a trustee-side
+//!   fiber so the closure may block, including nested blocking delegation
+//!   (§4.3, Fig. 4), guarded by the no-atomics [`Latch`] (§4.3.1).
+//!
+//! Reference counting is itself delegated (§3.1): `clone`/`drop` post
+//! fire-and-forget refcount requests; the count is a plain non-atomic field
+//! only the trustee mutates. When the last trust drops, the trustee drops
+//! the property.
+//!
+//! ## Safety discipline (§4.3.2)
+//! Delegated closures must own their captures: the bounds are
+//! `C: FnOnce(&mut T) -> U + Send + 'static`, so captured borrows are
+//! rejected at compile time by the Rust borrow checker, exactly the
+//! property the paper leans on. (The paper additionally bans *owned*
+//! pointer types like `Box<T>` in captures to encourage locality; we keep
+//! the type-system-enforced part and document the convention.)
+
+use crate::channel::{read_response, RequestBuilder, ResponseWriter};
+use crate::codec::{to_bytes, Wire, WireReader};
+use crate::fiber::{self, FiberId};
+use crate::runtime::{in_delegated_context, try_worker_id, with_worker, Shared, Worker};
+use std::cell::{Cell, RefCell, UnsafeCell};
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::ptr::NonNull;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Header shared by all entrusted properties; must be the first field of
+/// [`PropBox`] so type-erased refcount thunks can operate on it.
+#[repr(C)]
+pub(crate) struct PropHeader {
+    /// Mutated only by the trustee thread — no atomics (§2).
+    refcount: Cell<u64>,
+    /// Index in the trustee worker's property registry.
+    reg_idx: Cell<usize>,
+}
+
+/// An entrusted property: header + value, allocated on the trustee thread
+/// for locality.
+#[repr(C)]
+pub(crate) struct PropBox<T> {
+    header: PropHeader,
+    value: UnsafeCell<T>,
+}
+
+unsafe fn drop_propbox<T>(p: *mut u8) {
+    // SAFETY: registry stored this pointer from Box::into_raw::<PropBox<T>>.
+    unsafe { drop(Box::from_raw(p as *mut PropBox<T>)) };
+}
+
+/// Allocate + register a property on the current worker (must be the
+/// trustee thread).
+fn alloc_propbox<T: 'static>(w: &mut Worker, value: T) -> *mut PropBox<T> {
+    let boxed = Box::new(PropBox {
+        header: PropHeader { refcount: Cell::new(1), reg_idx: Cell::new(usize::MAX) },
+        value: UnsafeCell::new(value),
+    });
+    let ptr = Box::into_raw(boxed);
+    let idx = w.registry.register(ptr as *mut u8, drop_propbox::<T>);
+    // SAFETY: just allocated, we own it.
+    unsafe { (*ptr).header.reg_idx.set(idx) };
+    ptr
+}
+
+// ---------------------------------------------------------------------
+// Thunks (run on the trustee thread, in delegated context)
+// ---------------------------------------------------------------------
+
+/// apply(): take the closure env by value, run it on the property, respond.
+unsafe fn apply_thunk<T, U, C>(env: *const u8, prop: *mut u8, _args: &[u8], out: &mut ResponseWriter)
+where
+    U: Wire,
+    C: FnOnce(&mut T) -> U,
+{
+    // SAFETY: env holds a forgotten C by value; prop is a live PropBox<T>.
+    unsafe {
+        let c = env.cast::<C>().read_unaligned();
+        let pb = prop as *mut PropBox<T>;
+        let u = c(&mut *(*pb).value.get());
+        out.write_value(&u);
+    }
+}
+
+/// apply() variant without a response (fire-and-forget).
+unsafe fn apply_noresp_thunk<T, C>(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter)
+where
+    C: FnOnce(&mut T),
+{
+    unsafe {
+        let c = env.cast::<C>().read_unaligned();
+        let pb = prop as *mut PropBox<T>;
+        c(&mut *(*pb).value.get());
+    }
+}
+
+/// apply_with(): also decode serialized args.
+unsafe fn apply_with_thunk<T, V, U, C>(
+    env: *const u8,
+    prop: *mut u8,
+    args: &[u8],
+    out: &mut ResponseWriter,
+) where
+    V: Wire,
+    U: Wire,
+    C: FnOnce(&mut T, V) -> U,
+{
+    unsafe {
+        let c = env.cast::<C>().read_unaligned();
+        let mut r = WireReader::new(args);
+        let v = V::read(&mut r).expect("apply_with argument decode");
+        let pb = prop as *mut PropBox<T>;
+        let u = c(&mut *(*pb).value.get(), v);
+        out.write_value(&u);
+    }
+}
+
+/// Type-erased refcount adjustment; reclaims the property at zero.
+unsafe fn rc_delta_thunk(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter) {
+    unsafe {
+        let delta = env.cast::<i64>().read_unaligned();
+        let h = &*(prop as *const PropHeader);
+        let rc = (h.refcount.get() as i64 + delta) as u64;
+        h.refcount.set(rc);
+        if rc == 0 {
+            let idx = h.reg_idx.get();
+            with_worker(|w| w.registry.reclaim(idx));
+        }
+    }
+}
+
+/// entrust(): move the value in, allocate the PropBox here, respond with
+/// its address.
+unsafe fn entrust_thunk<T: 'static>(
+    env: *const u8,
+    _prop: *mut u8,
+    _args: &[u8],
+    out: &mut ResponseWriter,
+) {
+    unsafe {
+        let v = env.cast::<T>().read_unaligned();
+        let ptr = with_worker(|w| alloc_propbox(w, v));
+        out.write_value(&(ptr as usize as u64));
+    }
+}
+
+/// launch(): spawn a trustee-side fiber running the closure under the
+/// latch; deliver the result via a second delegation call (Fig. 4).
+unsafe fn launch_thunk<T, U, C>(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter)
+where
+    T: 'static,
+    U: Send + 'static,
+    C: FnOnce(&mut T) -> U + Send + 'static,
+{
+    #[repr(C)]
+    struct LaunchEnv<C> {
+        c: C,
+        client: usize,
+        cell_addr: usize,
+    }
+    unsafe {
+        let LaunchEnv { c, client, cell_addr } = env.cast::<LaunchEnv<C>>().read_unaligned();
+        let latch_prop = prop as *mut PropBox<Latch<T>>;
+        // Creating the fiber is non-blocking — legal in delegated context.
+        with_worker(move |w| {
+            w.exec.spawn(move || {
+                // SAFETY: the client's Trust handle is borrowed for the whole
+                // launch, keeping the property alive.
+                let latch = unsafe { &*(*latch_prop).value.get() };
+                let u = latch.with_lock(|t| c(t));
+                // Second delegation call: fire-and-forget completion back to
+                // the client worker (we are a client of `client` here).
+                deliver_launch_result::<U>(client, cell_addr, u);
+            });
+        });
+    }
+}
+
+/// Cell the launching fiber sleeps on.
+struct LaunchCell<U> {
+    result: Option<U>,
+    fiber: FiberId,
+}
+
+fn deliver_launch_result<U: Send + 'static>(client: usize, cell_addr: usize, u: U) {
+    // Local fast path: the launch came from a fiber on this same worker.
+    if try_worker_id() == Some(client) {
+        // SAFETY: cell lives on the (parked) launching fiber's stack.
+        unsafe {
+            let cell = &mut *(cell_addr as *mut LaunchCell<U>);
+            cell.result = Some(u);
+            let fid = cell.fiber;
+            fiber::with_executor(|e| e.resume(fid));
+        }
+        return;
+    }
+    #[repr(C)]
+    struct DoneEnv<U> {
+        u: U,
+        cell_addr: usize,
+    }
+    unsafe fn launch_done_thunk<U: Send + 'static>(
+        env: *const u8,
+        _prop: *mut u8,
+        _args: &[u8],
+        _out: &mut ResponseWriter,
+    ) {
+        // Runs on the *client's* worker, in delegated context.
+        unsafe {
+            let DoneEnv { u, cell_addr } = env.cast::<DoneEnv<U>>().read_unaligned();
+            let cell = &mut *(cell_addr as *mut LaunchCell<U>);
+            cell.result = Some(u);
+            let fid = cell.fiber;
+            fiber::with_executor(|e| e.resume(fid));
+        }
+    }
+    let done = DoneEnv { u, cell_addr };
+    let env_bytes = unsafe {
+        std::slice::from_raw_parts(&done as *const DoneEnv<U> as *const u8, size_of::<DoneEnv<U>>())
+    };
+    with_worker(|w| {
+        let buf = w.client_mut(client).take_buf();
+        let req = RequestBuilder::build(
+            buf,
+            launch_done_thunk::<U>,
+            std::ptr::null_mut(),
+            env_bytes,
+            &[],
+            true,
+        );
+        std::mem::forget(done);
+        w.client_mut(client).enqueue(req, None);
+        w.kick(client);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Client-side plumbing
+// ---------------------------------------------------------------------
+
+/// Panic unless a *blocking* delegation call is legal right now (§3.4).
+#[track_caller]
+fn check_blocking_allowed(what: &str) {
+    assert!(
+        !in_delegated_context(),
+        "Trust<T>: blocking {what} in delegated context — \
+         use apply_then() or launch() instead (paper §4.3)"
+    );
+    assert!(
+        fiber::in_fiber(),
+        "Trust<T>: blocking {what} requires fiber context \
+         (call from a runtime fiber, or use Runtime::block_on)"
+    );
+}
+
+/// Enqueue a framed request on the current worker toward `trustee` and
+/// eagerly flush.
+fn enqueue_on_worker(trustee: usize, frame: impl FnOnce(Vec<u8>) -> crate::channel::PendingReq, completion: crate::channel::Completion) {
+    with_worker(|w| {
+        let buf = w.client_mut(trustee).take_buf();
+        let req = frame(buf);
+        w.client_mut(trustee).enqueue(req, completion);
+        w.kick(trustee);
+    });
+}
+
+/// Blocking wait for a response value: enqueue, suspend, decode.
+fn delegate_blocking<U: Wire + 'static>(
+    trustee: usize,
+    frame: impl FnOnce(Vec<u8>) -> crate::channel::PendingReq,
+) -> U {
+    struct WaitCell<U> {
+        result: Option<U>,
+        fiber: FiberId,
+    }
+    let mut cell = WaitCell::<U> { result: None, fiber: fiber::current_fiber().expect("fiber") };
+    let cell_ptr: *mut WaitCell<U> = &mut cell;
+    let completion: crate::channel::Completion = Some(Box::new(move |r| {
+        let u = read_response::<U>(r);
+        // SAFETY: the cell lives on the parked fiber's stack until resume.
+        unsafe {
+            (*cell_ptr).result = Some(u);
+            let fid = (*cell_ptr).fiber;
+            fiber::with_executor(|e| e.resume(fid));
+        }
+    }));
+    enqueue_on_worker(trustee, frame, completion);
+    fiber::suspend(|_| {});
+    cell.result.take().expect("resumed without response")
+}
+
+/// env bytes of a value to be moved through the channel. Caller must
+/// `mem::forget` the value after framing.
+unsafe fn env_bytes_of<C>(c: &C) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(c as *const C as *const u8, size_of::<C>()) }
+}
+
+// ---------------------------------------------------------------------
+// TrusteeRef
+// ---------------------------------------------------------------------
+
+/// A reference to a trustee worker — the manual property-placement API
+/// (§3.2): `entrust()` moves a value to that trustee and returns a
+/// [`Trust<T>`].
+#[derive(Clone)]
+pub struct TrusteeRef {
+    shared: Arc<Shared>,
+    worker: usize,
+}
+
+impl TrusteeRef {
+    pub(crate) fn new(shared: Arc<Shared>, worker: usize) -> TrusteeRef {
+        TrusteeRef { shared, worker }
+    }
+
+    /// The worker id this trustee runs on.
+    pub fn worker_id(&self) -> usize {
+        self.worker
+    }
+
+    /// Move `value` into the care of this trustee.
+    ///
+    /// Callable from: the trustee's own thread (direct), another worker's
+    /// fiber (delegated), or a non-runtime thread (injected).
+    pub fn entrust<T: Send + 'static>(&self, value: T) -> Trust<T> {
+        let ptr: *mut PropBox<T> = match try_worker_id() {
+            Some(id) if id == self.worker => with_worker(|w| alloc_propbox(w, value)),
+            Some(_) => {
+                check_blocking_allowed("entrust()");
+                let addr: u64 = delegate_blocking(self.worker, |buf| {
+                    let req = RequestBuilder::build(
+                        buf,
+                        entrust_thunk::<T>,
+                        std::ptr::null_mut(),
+                        unsafe { env_bytes_of(&value) },
+                        &[],
+                        false,
+                    );
+                    std::mem::forget(value);
+                    req
+                });
+                addr as usize as *mut PropBox<T>
+            }
+            None => {
+                // Injected job + condvar (start-up path).
+                let done = Arc::new((Mutex::new(None::<usize>), Condvar::new()));
+                let done2 = done.clone();
+                self.shared.inject(
+                    self.worker,
+                    Box::new(move |w| {
+                        let p = alloc_propbox(w, value) as usize;
+                        let (m, cv) = &*done2;
+                        *m.lock().unwrap() = Some(p);
+                        cv.notify_all();
+                    }),
+                );
+                let (m, cv) = &*done;
+                let mut g = m.lock().unwrap();
+                while g.is_none() {
+                    g = cv.wait(g).unwrap();
+                }
+                g.take().unwrap() as *mut PropBox<T>
+            }
+        };
+        Trust {
+            prop: NonNull::new(ptr).unwrap(),
+            trustee: self.worker,
+            shared: self.shared.clone(),
+            _t: PhantomData,
+        }
+    }
+}
+
+/// The trustee running on the current worker thread (§3.1's
+/// `local_trustee()`); panics off runtime threads.
+pub fn local_trustee() -> TrusteeRef {
+    with_worker(|w| TrusteeRef { shared: w.shared.clone(), worker: w.id })
+}
+
+// ---------------------------------------------------------------------
+// Trust<T>
+// ---------------------------------------------------------------------
+
+/// A thread-safe reference-counted handle to an entrusted property of type
+/// `T` (§3.1). See the module docs for the API tour.
+pub struct Trust<T: 'static> {
+    prop: NonNull<PropBox<T>>,
+    trustee: usize,
+    shared: Arc<Shared>,
+    _t: PhantomData<PropBox<T>>,
+}
+
+// SAFETY: the property itself is only ever touched by its trustee thread;
+// the handle merely routes requests. T: Send because entrust moved T to
+// another thread and drop may run it there.
+unsafe impl<T: Send + 'static> Send for Trust<T> {}
+unsafe impl<T: Send + 'static> Sync for Trust<T> {}
+
+impl<T: 'static> Trust<T> {
+    /// Worker id of this property's trustee.
+    pub fn trustee_id(&self) -> usize {
+        self.trustee
+    }
+
+    /// Is the current thread this property's trustee?
+    pub fn is_local(&self) -> bool {
+        try_worker_id() == Some(self.trustee)
+    }
+
+    #[inline]
+    fn prop_u8(&self) -> *mut u8 {
+        self.prop.as_ptr() as *mut u8
+    }
+
+    /// Apply `c` to the property synchronously and return its result
+    /// (§4.1). Suspends the calling fiber while the request is in flight.
+    ///
+    /// # Panics
+    /// In delegated context (blocking there would sleep the trustee —
+    /// §4.3), or outside fiber context on a runtime thread.
+    pub fn apply<U, C>(&self, c: C) -> U
+    where
+        U: Wire + Send + 'static,
+        C: FnOnce(&mut T) -> U + Send + 'static,
+    {
+        // Local-trustee shortcut (§5.2.1): applying directly is just as
+        // safe, because delegated closures cannot suspend this thread.
+        if self.is_local() {
+            return self.run_local(c);
+        }
+        match try_worker_id() {
+            Some(_) => {
+                check_blocking_allowed("apply()");
+                let prop = self.prop_u8();
+                delegate_blocking(self.trustee, move |buf| {
+                    let req = RequestBuilder::build(
+                        buf,
+                        apply_thunk::<T, U, C>,
+                        prop,
+                        unsafe { env_bytes_of(&c) },
+                        &[],
+                        false,
+                    );
+                    std::mem::forget(c);
+                    req
+                })
+            }
+            None => self.apply_injected(c),
+        }
+    }
+
+    /// Direct application on the trustee thread, with the delegated flag
+    /// set so nested blocking calls are caught.
+    fn run_local<U, C: FnOnce(&mut T) -> U>(&self, c: C) -> U {
+        with_worker(|w| {
+            let prev = w.set_delegated(true);
+            // SAFETY: we are the trustee thread; no other closure runs
+            // concurrently on this property.
+            let u = c(unsafe { &mut *(*self.prop.as_ptr()).value.get() });
+            w.set_delegated(prev);
+            u
+        })
+    }
+
+    /// Slow path for non-runtime threads: inject the closure to the
+    /// trustee and wait on a condvar. Keeps examples/tests ergonomic; the
+    /// hot path never goes here.
+    fn apply_injected<U, C>(&self, c: C) -> U
+    where
+        U: Send + 'static,
+        C: FnOnce(&mut T) -> U + Send + 'static,
+    {
+        let done = Arc::new((Mutex::new(None::<U>), Condvar::new()));
+        let done2 = done.clone();
+        let prop_addr = self.prop.as_ptr() as usize;
+        self.shared.inject(
+            self.trustee,
+            Box::new(move |w| {
+                let pb = prop_addr as *mut PropBox<T>;
+                let prev = w.set_delegated(true);
+                // SAFETY: trustee thread; property alive (we hold a ref).
+                let u = c(unsafe { &mut *(*pb).value.get() });
+                w.set_delegated(prev);
+                let (m, cv) = &*done2;
+                *m.lock().unwrap() = Some(u);
+                cv.notify_all();
+            }),
+        );
+        let (m, cv) = &*done;
+        let mut g = m.lock().unwrap();
+        while g.is_none() {
+            g = cv.wait(g).unwrap();
+        }
+        g.take().unwrap()
+    }
+
+    /// Non-blocking delegation (§4.2): returns immediately; `then` runs on
+    /// this worker with the closure's return value once the response
+    /// arrives. Safe to call from delegated context.
+    pub fn apply_then<U, C, F>(&self, c: C, then: F)
+    where
+        U: Wire + Send + 'static,
+        C: FnOnce(&mut T) -> U + Send + 'static,
+        F: FnOnce(U) + 'static,
+    {
+        if self.is_local() {
+            let u = self.run_local(c);
+            then(u);
+            return;
+        }
+        assert!(
+            try_worker_id().is_some(),
+            "apply_then requires a runtime worker thread"
+        );
+        let prop = self.prop_u8();
+        let completion: crate::channel::Completion = Some(Box::new(move |r| {
+            let u = read_response::<U>(r);
+            then(u);
+        }));
+        enqueue_on_worker(
+            self.trustee,
+            move |buf| {
+                let req = RequestBuilder::build(
+                    buf,
+                    apply_thunk::<T, U, C>,
+                    prop,
+                    unsafe { env_bytes_of(&c) },
+                    &[],
+                    false,
+                );
+                std::mem::forget(c);
+                req
+            },
+            completion,
+        );
+    }
+
+    /// Fire-and-forget delegation: no return value, no response bytes.
+    pub fn apply_forget<C>(&self, c: C)
+    where
+        C: FnOnce(&mut T) + Send + 'static,
+    {
+        if self.is_local() {
+            self.run_local(|t| c(t));
+            return;
+        }
+        assert!(
+            try_worker_id().is_some(),
+            "apply_forget requires a runtime worker thread"
+        );
+        let prop = self.prop_u8();
+        enqueue_on_worker(
+            self.trustee,
+            move |buf| {
+                let req = RequestBuilder::build(
+                    buf,
+                    apply_noresp_thunk::<T, C>,
+                    prop,
+                    unsafe { env_bytes_of(&c) },
+                    &[],
+                    true,
+                );
+                std::mem::forget(c);
+                req
+            },
+            None,
+        );
+    }
+
+    /// Synchronous delegation with serialized arguments (§4.3.3): `args`
+    /// may be any `Wire` type (tuples for multiple values); variable-size
+    /// payloads travel through the channel rather than the closure env.
+    pub fn apply_with<V, U, C>(&self, c: C, args: V) -> U
+    where
+        V: Wire + Send + 'static,
+        U: Wire + Send + 'static,
+        C: FnOnce(&mut T, V) -> U + Send + 'static,
+    {
+        if self.is_local() {
+            return self.run_local(move |t| c(t, args));
+        }
+        match try_worker_id() {
+            Some(_) => {
+                check_blocking_allowed("apply_with()");
+                let prop = self.prop_u8();
+                let ser = to_bytes(&args);
+                drop(args);
+                delegate_blocking(self.trustee, move |buf| {
+                    let req = RequestBuilder::build(
+                        buf,
+                        apply_with_thunk::<T, V, U, C>,
+                        prop,
+                        unsafe { env_bytes_of(&c) },
+                        &ser,
+                        false,
+                    );
+                    std::mem::forget(c);
+                    req
+                })
+            }
+            None => self.apply_injected(move |t| c(t, args)),
+        }
+    }
+
+    /// Non-blocking variant of [`Trust::apply_with`].
+    pub fn apply_with_then<V, U, C, F>(&self, c: C, args: V, then: F)
+    where
+        V: Wire + Send + 'static,
+        U: Wire + Send + 'static,
+        C: FnOnce(&mut T, V) -> U + Send + 'static,
+        F: FnOnce(U) + 'static,
+    {
+        if self.is_local() {
+            let u = self.run_local(move |t| c(t, args));
+            then(u);
+            return;
+        }
+        assert!(
+            try_worker_id().is_some(),
+            "apply_with_then requires a runtime worker thread"
+        );
+        let prop = self.prop_u8();
+        let ser = to_bytes(&args);
+        drop(args);
+        let completion: crate::channel::Completion = Some(Box::new(move |r| {
+            let u = read_response::<U>(r);
+            then(u);
+        }));
+        enqueue_on_worker(
+            self.trustee,
+            move |buf| {
+                let req = RequestBuilder::build(
+                    buf,
+                    apply_with_thunk::<T, V, U, C>,
+                    prop,
+                    unsafe { env_bytes_of(&c) },
+                    &ser,
+                    false,
+                );
+                std::mem::forget(c);
+                req
+            },
+            completion,
+        );
+    }
+
+    /// Adjust the refcount from whatever context we're in.
+    fn rc_delta(&self, delta: i64) {
+        match try_worker_id() {
+            Some(id) if id == self.trustee => {
+                // Direct: we are the trustee thread.
+                let h = unsafe { &(*self.prop.as_ptr()).header };
+                let rc = (h.refcount.get() as i64 + delta) as u64;
+                h.refcount.set(rc);
+                if rc == 0 {
+                    let idx = h.reg_idx.get();
+                    with_worker(|w| unsafe { w.registry.reclaim(idx) });
+                }
+            }
+            Some(_) => {
+                // Fire-and-forget request; legal even in delegated context.
+                let prop = self.prop_u8();
+                enqueue_on_worker(
+                    self.trustee,
+                    move |buf| {
+                        RequestBuilder::build(
+                            buf,
+                            rc_delta_thunk,
+                            prop,
+                            &delta.to_le_bytes(),
+                            &[],
+                            true,
+                        )
+                    },
+                    None,
+                );
+            }
+            None => {
+                if self.shared.is_stopped() {
+                    // Runtime already gone: property was reclaimed at
+                    // worker shutdown; nothing to do.
+                    return;
+                }
+                let prop_addr = self.prop.as_ptr() as usize;
+                self.shared.inject(
+                    self.trustee,
+                    Box::new(move |w| {
+                        let h = unsafe { &*(prop_addr as *const PropHeader) };
+                        let rc = (h.refcount.get() as i64 + delta) as u64;
+                        h.refcount.set(rc);
+                        if rc == 0 {
+                            let idx = h.reg_idx.get();
+                            unsafe { w.registry.reclaim(idx) };
+                        }
+                    }),
+                );
+            }
+        }
+    }
+}
+
+impl<T: 'static> Trust<Latch<T>> {
+    /// Apply `c` in a *trustee-side fiber* (§4.3, Fig. 4): unlike `apply`,
+    /// the closure may block — including nested blocking delegation —
+    /// because a suspension parks only the temporary fiber, not the
+    /// trustee. Property access is serialized by the [`Latch`].
+    ///
+    /// Costs one extra delegation round-trip versus `apply`.
+    pub fn launch<U, C>(&self, c: C) -> U
+    where
+        U: Send + 'static,
+        C: FnOnce(&mut T) -> U + Send + 'static,
+    {
+        check_blocking_allowed("launch()");
+        let client = try_worker_id().expect("launch requires a worker");
+        let mut cell = LaunchCell::<U> {
+            result: None,
+            fiber: fiber::current_fiber().expect("fiber"),
+        };
+        let cell_addr = &mut cell as *mut LaunchCell<U> as usize;
+
+        if self.is_local() {
+            // Local: no delegation needed, but the closure still runs in a
+            // *separate fiber* under the latch so it may block.
+            let prop = self.prop.as_ptr();
+            with_worker(|w| {
+                w.exec.spawn(move || {
+                    // SAFETY: our Trust handle keeps the property alive for
+                    // the duration (we're suspended, not dropped).
+                    let latch = unsafe { &*(*prop).value.get() };
+                    let u = latch.with_lock(|t| c(t));
+                    deliver_launch_result::<U>(client, cell_addr, u);
+                });
+            });
+        } else {
+            #[repr(C)]
+            struct LaunchEnv<C> {
+                c: C,
+                client: usize,
+                cell_addr: usize,
+            }
+            let env = LaunchEnv { c, client, cell_addr };
+            let prop = self.prop_u8();
+            enqueue_on_worker(
+                self.trustee,
+                move |buf| {
+                    let req = RequestBuilder::build(
+                        buf,
+                        launch_thunk::<T, U, C>,
+                        prop,
+                        unsafe { env_bytes_of(&env) },
+                        &[],
+                        true,
+                    );
+                    std::mem::forget(env);
+                    req
+                },
+                None,
+            );
+        }
+        fiber::suspend(|_| {});
+        cell.result.take().expect("launch resumed without result")
+    }
+}
+
+impl<T: 'static> Clone for Trust<T> {
+    fn clone(&self) -> Self {
+        self.rc_delta(1);
+        Trust {
+            prop: self.prop,
+            trustee: self.trustee,
+            shared: self.shared.clone(),
+            _t: PhantomData,
+        }
+    }
+}
+
+impl<T: 'static> Drop for Trust<T> {
+    fn drop(&mut self) {
+        self.rc_delta(-1);
+    }
+}
+
+impl<T: 'static> std::fmt::Debug for Trust<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trust")
+            .field("trustee", &self.trustee)
+            .field("prop", &self.prop.as_ptr())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Latch<T>
+// ---------------------------------------------------------------------
+
+/// Single-thread mutual exclusion with **no atomic instructions** (§4.3.1):
+/// analogous to `Mutex<T>`, except it may only be used by the fibers of one
+/// thread (it is deliberately `!Sync`). Waiting fibers queue FIFO.
+pub struct Latch<T> {
+    locked: Cell<bool>,
+    waiters: RefCell<VecDeque<FiberId>>,
+    value: UnsafeCell<T>,
+}
+
+// Latch is Send (can be entrusted/moved between threads while unused) but
+// intentionally NOT Sync — the compiler derives !Sync from Cell/RefCell,
+// which is exactly the paper's footnote 4.
+unsafe impl<T: Send> Send for Latch<T> {}
+
+impl<T> Latch<T> {
+    pub fn new(value: T) -> Latch<T> {
+        Latch {
+            locked: Cell::new(false),
+            waiters: RefCell::new(VecDeque::new()),
+            value: UnsafeCell::new(value),
+        }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value.into_inner()
+    }
+
+    /// Is the latch currently held?
+    pub fn is_locked(&self) -> bool {
+        self.locked.get()
+    }
+
+    /// Acquire the latch, suspending the current fiber while contended;
+    /// run `f` on the value; release and wake the next waiter.
+    pub fn with_lock<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        while self.locked.get() {
+            fiber::suspend(|id| self.waiters.borrow_mut().push_back(id));
+        }
+        self.locked.set(true);
+        // SAFETY: single-thread + locked: unique access.
+        let r = f(unsafe { &mut *self.value.get() });
+        self.locked.set(false);
+        if let Some(next) = self.waiters.borrow_mut().pop_front() {
+            fiber::with_executor(|e| e.resume(next));
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn minimal_example_figure_1() {
+        // Figure 1: entrust 17, increment, read back 18 (19 in Fig 2 after
+        // two increments).
+        let rt = Runtime::builder().workers(1).build();
+        rt.block_on(0, || {
+            let ct = local_trustee().entrust(17u64);
+            ct.apply(|c| *c += 1);
+            assert_eq!(ct.apply(|c| *c), 18);
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn multi_thread_example_figure_2() {
+        // Figure 2a: two workers increment the same entrusted counter.
+        let rt = Runtime::builder().workers(2).build();
+        let ct = rt.block_on(0, || local_trustee().entrust(17u64));
+        let ct2 = ct.clone();
+        let h = {
+            let rt_ref = &rt;
+            let done: u64 = rt_ref.block_on(1, move || {
+                ct2.apply(|c| *c += 1);
+                0u64
+            });
+            done
+        };
+        let _ = h;
+        ct.apply(|c| *c += 1); // injected slow path from the main thread
+        assert_eq!(ct.apply(|c| *c), 19);
+        drop(ct);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn cross_worker_delegation() {
+        let rt = Runtime::builder().workers(3).build();
+        // Property lives on worker 0; fibers on workers 1 and 2 hammer it.
+        let ct = rt.block_on(0, || local_trustee().entrust(0u64));
+        let mut handles = Vec::new();
+        for w in 1..3 {
+            let ct = ct.clone();
+            let rt_shared = rt.shared().clone();
+            let _ = rt_shared;
+            handles.push(std::thread::spawn({
+                let ct = ct.clone();
+                move || ct // keep a clone alive across threads
+            }));
+            let ctw = ct.clone();
+            rt.spawn_on(w, move || {
+                for _ in 0..100 {
+                    ctw.apply(|c| *c += 1);
+                }
+            });
+        }
+        for h in handles {
+            let _ = h.join().unwrap();
+        }
+        // Wait for the spawned fibers by doing our own 100 increments from
+        // each worker via block_on (runs after the spawned fibers finish
+        // enqueueing... not guaranteed), so instead poll the value.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            let v = {
+                let ct = ct.clone();
+                rt.block_on(1, move || ct.apply(|c| *c))
+            };
+            if v == 200 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "stuck at {v}/200");
+            std::thread::yield_now();
+        }
+        drop(ct);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn apply_then_async() {
+        // Figure 3: asynchronous increment + then-callback.
+        let rt = Runtime::builder().workers(2).build();
+        let got = Arc::new(AtomicU64::new(0));
+        let g = got.clone();
+        let ct = rt.block_on(0, || local_trustee().entrust(17u64));
+        let ct1 = ct.clone();
+        rt.block_on(1, move || {
+            let g2 = g.clone();
+            ct1.apply_then(
+                |c| {
+                    *c += 1;
+                    *c
+                },
+                move |v| g2.store(v, Ordering::Release),
+            );
+            // Wait for the callback by blocking on a second apply (in-order
+            // per client-trustee pair: response 1 arrives first).
+            let v = ct1.apply(|c| *c);
+            assert_eq!(v, 18);
+        });
+        assert_eq!(got.load(Ordering::Acquire), 18);
+        drop(ct);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn apply_with_serialized_args() {
+        let rt = Runtime::builder().workers(2).build();
+        let table = rt.block_on(0, || {
+            local_trustee().entrust(std::collections::HashMap::<String, String>::new())
+        });
+        let t1 = table.clone();
+        let len = rt.block_on(1, move || {
+            // Variable-size key/value travel serialized (§4.3.3).
+            t1.apply_with(
+                |table, (k, v): (String, String)| {
+                    table.insert(k, v);
+                    table.len() as u64
+                },
+                ("hello".to_string(), "world".to_string()),
+            )
+        });
+        assert_eq!(len, 1);
+        let t2 = table.clone();
+        let v = rt.block_on(1, move || {
+            t2.apply_with(|table, k: String| table.get(&k).cloned(), "hello".to_string())
+        });
+        assert_eq!(v.as_deref(), Some("world"));
+        drop(table);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn refcount_reclaims_property() {
+        // Drop both trusts; the property must be reclaimed (registry empty).
+        let rt = Runtime::builder().workers(2).build();
+        let ct = rt.block_on(0, || local_trustee().entrust(vec![1u8, 2, 3]));
+        let ct2 = ct.clone();
+        let v = rt.block_on(1, move || ct2.apply(|v| v.len() as u64));
+        assert_eq!(v, 3);
+        drop(ct);
+        // Give the refcount decs time to flow, then check via worker 0.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            let live = rt.block_on(0, || with_worker(|w| w.registry.live));
+            if live == 0 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "{live} props leaked");
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn local_shortcut_applies_inline() {
+        let rt = Runtime::builder().workers(1).build();
+        let hits = rt.block_on(0, || {
+            let ct = local_trustee().entrust(0u64);
+            // All local: each apply runs inline via the shortcut (§5.2.1).
+            for _ in 0..1000 {
+                ct.apply(|c| *c += 1);
+            }
+            ct.apply(|c| *c)
+        });
+        assert_eq!(hits, 1000);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn delegated_context_flag_visible() {
+        let rt = Runtime::builder().workers(1).build();
+        let (outside, inside) = rt.block_on(0, || {
+            let ct = local_trustee().entrust(0u64);
+            let outside = in_delegated_context();
+            let inside = ct.apply(|_| in_delegated_context());
+            (outside, inside)
+        });
+        assert!(!outside);
+        assert!(inside, "closure must run in delegated context");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn nested_blocking_apply_in_delegated_context_panics() {
+        // The paper's runtime assertion (§3.4/§4.3): blocking delegation
+        // inside a delegated closure must fail fast. We test the client-
+        // side check through the local shortcut (same flag, same assert,
+        // catchable because the panic fires on the caller's fiber).
+        let rt = Runtime::builder().workers(1).build();
+        let panicked = rt.block_on(0, || {
+            let ct = local_trustee().entrust(0u64);
+            let ct2 = ct.clone();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                ct.apply(move |_| {
+                    // Nested blocking apply to a *remote-looking* path:
+                    // local shortcut still asserts via run_local's
+                    // delegated flag when re-entering apply... the
+                    // local shortcut IS legal (runs inline), so force the
+                    // blocking check directly:
+                    check_blocking_allowed("apply()");
+                    let _ = ct2; // keep the clone captured
+                    0u64
+                })
+            }))
+            .is_err()
+        });
+        assert!(panicked, "blocking call in delegated context must assert");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn apply_then_legal_in_delegated_context() {
+        let rt = Runtime::builder().workers(2).build();
+        let a = rt.block_on(0, || local_trustee().entrust(0u64));
+        let b = rt.block_on(1, || local_trustee().entrust(0u64));
+        let a2 = a.clone();
+        let b2 = b.clone();
+        // From worker 1's fiber, delegate to a (worker 0); inside that
+        // delegated closure, issue a non-blocking apply_then to b (worker
+        // 1) — legal per §4.2.
+        let v = rt.block_on(1, move || {
+            a2.apply(move |x| {
+                *x += 1;
+                b2.apply_then(|y| *y += 10, |_| {});
+                *x
+            })
+        });
+        assert_eq!(v, 1);
+        // b eventually becomes 10.
+        let b3 = b.clone();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            let bv = {
+                let b3 = b3.clone();
+                rt.block_on(1, move || b3.apply(|y| *y))
+            };
+            if bv == 10 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline);
+        }
+        drop((a, b, b3));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn launch_allows_nested_blocking_delegation() {
+        // §4.3 / Fig. 4: a launched closure may perform blocking delegation.
+        let rt = Runtime::builder().workers(2).build();
+        let inner = rt.block_on(0, || local_trustee().entrust(5u64));
+        let outer = rt.block_on(0, || local_trustee().entrust(Latch::new(100u64)));
+        let inner2 = inner.clone();
+        let outer2 = outer.clone();
+        let v = rt.block_on(1, move || {
+            outer2.launch(move |x| {
+                // Blocking apply from within launched (trustee-side) fiber.
+                let add = inner2.apply(|i| *i);
+                *x += add;
+                *x
+            })
+        });
+        assert_eq!(v, 105);
+        drop((inner, outer));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn launch_serializes_via_latch() {
+        let rt = Runtime::builder().workers(3).build();
+        let prop = rt.block_on(0, || local_trustee().entrust(Latch::new(Vec::<u64>::new())));
+        // Two concurrent launches from different workers; each appends its
+        // tag twice with a yield between — the latch must keep the pairs
+        // contiguous (no interleaving on the shared Vec).
+        let done = Arc::new(AtomicU64::new(0));
+        for (w, tag) in [(1usize, 7u64), (2usize, 9u64)] {
+            let p = prop.clone();
+            let d = done.clone();
+            rt.spawn_on(w, move || {
+                p.launch(move |v| {
+                    v.push(tag);
+                    fiber::yield_now(); // suspend inside the critical section
+                    v.push(tag);
+                });
+                d.fetch_add(1, Ordering::AcqRel);
+            });
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while done.load(Ordering::Acquire) != 2 {
+            assert!(std::time::Instant::now() < deadline, "launches stuck");
+            std::thread::yield_now();
+        }
+        let p = prop.clone();
+        let v = rt.block_on(1, move || p.apply(|l| l.with_lock(|v| v.clone())));
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0], v[1], "latch must prevent interleaving");
+        assert_eq!(v[2], v[3]);
+        drop(prop);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn trust_is_send_and_sync() {
+        fn assert_send_sync<X: Send + Sync>() {}
+        assert_send_sync::<Trust<u64>>();
+        assert_send_sync::<Trust<Vec<String>>>();
+    }
+
+    #[test]
+    fn latch_is_not_sync() {
+        // Compile-time property (paper footnote 4); checked via trait
+        // presence using autoref specialization trick at runtime is
+        // overkill — static_assertions style negative impl test:
+        fn requires_sync<X: Sync>() -> bool {
+            true
+        }
+        let _ = requires_sync::<u64>;
+        // Latch<T> must not satisfy Sync: enforced by the compiler; this
+        // test documents it (uncommenting the next line fails to build).
+        // let _ = requires_sync::<Latch<u64>>;
+    }
+
+    #[test]
+    fn entrust_from_remote_worker_fiber() {
+        let rt = Runtime::builder().workers(2).build();
+        let shared = rt.shared().clone();
+        let tr = TrusteeRef::new(shared, 0);
+        let v = rt.block_on(1, move || {
+            // entrust from worker 1 onto trustee 0 — delegated entrust.
+            let ct = tr.entrust(vec![10u64, 20, 30]);
+            assert_eq!(ct.trustee_id(), 0);
+            ct.apply(|v| v.iter().sum::<u64>())
+        });
+        assert_eq!(v, 60);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn string_property_roundtrip() {
+        let rt = Runtime::builder().workers(2).build();
+        let ct = rt.block_on(0, || local_trustee().entrust(String::from("abc")));
+        let ct2 = ct.clone();
+        let s = rt.block_on(1, move || {
+            ct2.apply(|s| {
+                s.push_str("def");
+                s.clone()
+            })
+        });
+        assert_eq!(s, "abcdef");
+        drop(ct);
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,79 @@
+//! CPU topology discovery and thread pinning.
+//!
+//! The paper's experiments pin memcached/worker threads to hardware threads
+//! (§7.1) and distinguish *dedicated* trustee cores from *shared* ones
+//! (§6.1). On the single-core container this reproduction runs in, pinning
+//! degenerates to a no-op, but the module keeps the same code path the
+//! paper's testbed would use (`sched_setaffinity`), so the benches behave
+//! identically on a real multicore box.
+
+/// Number of CPUs available to this process.
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Pin the calling thread to a CPU (modulo the available count).
+/// Returns false if pinning was unavailable or failed (non-fatal).
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        let ncpu = num_cpus();
+        let target = cpu % ncpu;
+        unsafe {
+            let mut set: libc::cpu_set_t = std::mem::zeroed();
+            libc::CPU_ZERO(&mut set);
+            libc::CPU_SET(target, &mut set);
+            libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+/// Plan a worker→CPU assignment: first `dedicated` workers get the lowest
+/// CPUs (the paper's dedicated-trustee cores); remaining workers spread
+/// round-robin over the rest (or over everything if CPUs are scarce).
+pub fn plan_pinning(workers: usize, dedicated: usize) -> Vec<usize> {
+    let ncpu = num_cpus();
+    (0..workers)
+        .map(|w| {
+            if w < dedicated && ncpu > dedicated {
+                w % ncpu
+            } else if ncpu > dedicated {
+                dedicated + (w - dedicated.min(w)) % (ncpu - dedicated)
+            } else {
+                w % ncpu
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn pin_does_not_crash() {
+        // On a 1-CPU box this pins to CPU 0; either way it must not panic.
+        let _ = pin_to_cpu(0);
+        let _ = pin_to_cpu(1000);
+    }
+
+    #[test]
+    fn plan_covers_all_workers() {
+        for (w, d) in [(1, 0), (8, 2), (4, 4), (16, 0)] {
+            let plan = plan_pinning(w, d);
+            assert_eq!(plan.len(), w);
+            let ncpu = num_cpus();
+            assert!(plan.iter().all(|&c| c < ncpu));
+        }
+    }
+}

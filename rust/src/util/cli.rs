@@ -1,0 +1,158 @@
+//! A small `--key value` command-line parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean flags (`--flag`), and
+//! typed access with defaults. Bench binaries receive extra arguments from
+//! `cargo bench -- ...`; unknown keys starting with `--` that cargo's
+//! libtest harness would add (`--bench`) are tolerated.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator of tokens.
+    pub fn parse<I, S>(it: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let toks: Vec<String> = it.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.kv.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.kv.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Typed lookup with a default.
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.kv.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} {v:?}: parse error {e:?}")),
+            None => default,
+        }
+    }
+
+    /// String lookup with a default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional lookup.
+    pub fn opt<T: FromStr>(&self, key: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Debug,
+    {
+        self.kv.get(key).map(|v| {
+            v.parse()
+                .unwrap_or_else(|e| panic!("--{key} {v:?}: parse error {e:?}"))
+        })
+    }
+
+    /// Is a bare `--flag` present?
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of T (`--sizes 1,4,16`).
+    pub fn get_list<T: FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Debug,
+    {
+        match self.kv.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("--{key} item {s:?}: {e:?}"))
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kv_and_flags() {
+        // NB: bare flags must come last or use `--flag` followed by another
+        // `--` token — a bare flag followed by a positional is ambiguous and
+        // parses as key/value.
+        let a = Args::parse(["pos1", "--threads", "8", "--dist=zipf", "--verbose"]);
+        assert_eq!(a.get::<usize>("threads", 1), 8);
+        assert_eq!(a.get_str("dist", "uniform"), "zipf");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.get::<u64>("ops", 1000), 1000);
+        assert_eq!(a.get_str("dist", "uniform"), "uniform");
+        assert!(!a.flag("quick"));
+        assert_eq!(a.opt::<u64>("seed"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(["--quick", "--threads", "4"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.get::<usize>("threads", 1), 4);
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(["--sizes", "1,4,16"]);
+        assert_eq!(a.get_list::<u64>("sizes", &[]), vec![1, 4, 16]);
+        assert_eq!(a.get_list::<u64>("other", &[7]), vec![7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_parse_panics() {
+        let a = Args::parse(["--threads", "abc"]);
+        let _: usize = a.get("threads", 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Substrates built from scratch for the offline environment.
+//!
+//! The paper's artifact leans on crates.io (`rand`, `zipf`, `clap`,
+//! `criterion`, `proptest`, `serde`/`bincode`, `hdrhistogram`). None of
+//! those are available in this build environment, so this module provides
+//! the equivalents the rest of the crate needs:
+//!
+//! - [`rng`] — xoshiro256** PRNG + splitmix64 seeding
+//! - [`zipf`] — exact-head/analytic-tail zipfian sampler (YCSB-style
+//!   scrambled variant included)
+//! - [`stats`] — log-bucketed latency histogram with percentiles, Welford
+//!   mean/variance, throughput formatting
+//! - [`cli`] — a small `--key value` argument parser
+//! - [`affinity`] — CPU pinning via `sched_setaffinity` (no-op fallback)
+//! - [`quickcheck`] — a miniature property-testing harness with shrinking
+//! - [`cache`] — cache-line padding, `pause`, prefetch helpers
+
+pub mod affinity;
+pub mod cache;
+pub mod cli;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod zipf;
+
+pub use cache::{pause, pause_n, CachePadded};
+pub use rng::Rng;
+pub use zipf::{KeyDist, Zipf};

@@ -1,0 +1,349 @@
+//! A miniature property-testing harness (proptest/quickcheck are
+//! unavailable offline — DESIGN.md substitution #6).
+//!
+//! Provides [`Arbitrary`] generation from the crate PRNG, a [`check`]
+//! driver that runs N random cases, and greedy shrinking on failure so
+//! counterexamples are reported minimally. Used by the channel, codec,
+//! trust, and cmap test suites for their invariant properties.
+
+use super::rng::Rng;
+
+/// Types that can be generated randomly and shrunk toward smaller values.
+pub trait Arbitrary: Clone + std::fmt::Debug {
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self;
+    /// Candidate strictly-smaller values to try when shrinking.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+macro_rules! arb_uint {
+    ($($t:ty),*) => {$(
+        impl Arbitrary for $t {
+            fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+                // Mix small values (edge-case rich) with full-range ones.
+                match rng.below(4) {
+                    0 => (rng.below((size as u64).max(1) + 1)) as $t,
+                    1 => match rng.below(5) {
+                        0 => 0,
+                        1 => 1,
+                        2 => <$t>::MAX,
+                        3 => <$t>::MAX - 1,
+                        _ => (<$t>::MAX >> 1),
+                    },
+                    _ => rng.next_u64() as $t,
+                }
+            }
+            fn shrink(&self) -> Vec<Self> {
+                let mut out = Vec::new();
+                if *self > 0 { out.push(0); }
+                if *self > 1 { out.push(*self / 2); out.push(*self - 1); }
+                out
+            }
+        }
+    )*};
+}
+arb_uint!(u8, u16, u32, u64, usize);
+
+macro_rules! arb_int {
+    ($($t:ty),*) => {$(
+        impl Arbitrary for $t {
+            fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+                let mag = <u64 as Arbitrary>::arbitrary(rng, size) as $t;
+                if rng.chance(0.5) { mag } else { mag.wrapping_neg() }
+            }
+            fn shrink(&self) -> Vec<Self> {
+                let mut out = Vec::new();
+                if *self != 0 { out.push(0); out.push(*self / 2); }
+                if *self < 0 { out.push(-*self); }
+                out
+            }
+        }
+    )*};
+}
+arb_int!(i8, i16, i32, i64);
+
+impl Arbitrary for bool {
+    fn arbitrary(rng: &mut Rng, _size: usize) -> Self {
+        rng.chance(0.5)
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            vec![]
+        }
+    }
+}
+
+impl Arbitrary for f64 {
+    fn arbitrary(rng: &mut Rng, _size: usize) -> Self {
+        match rng.below(6) {
+            0 => 0.0,
+            1 => 1.0,
+            2 => -1.0,
+            3 => f64::from_bits(rng.next_u64() & !(0x7ff << 52)), // finite-ish subnormal mix
+            _ => (rng.unit_f64() - 0.5) * 1e12,
+        }
+    }
+}
+
+impl Arbitrary for String {
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+        let len = rng.below(size as u64 + 1) as usize;
+        (0..len)
+            .map(|_| {
+                // Mostly ASCII, sometimes multi-byte.
+                if rng.chance(0.9) {
+                    (b' ' + rng.below(95) as u8) as char
+                } else {
+                    char::from_u32(0x100 + rng.next_u32() % 0x500).unwrap_or('x')
+                }
+            })
+            .collect()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(String::new());
+            let mid: String = self.chars().take(self.chars().count() / 2).collect();
+            out.push(mid);
+        }
+        out
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+        let len = rng.below(size as u64 + 1) as usize;
+        (0..len).map(|_| T::arbitrary(rng, size)).collect()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(Vec::new());
+            out.push(self[..self.len() / 2].to_vec());
+            let mut tail = self.clone();
+            tail.remove(0);
+            out.push(tail);
+            // Also shrink one element.
+            if let Some(smaller) = self[0].shrink().into_iter().next() {
+                let mut v = self.clone();
+                v[0] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Option<T> {
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+        if rng.chance(0.2) {
+            None
+        } else {
+            Some(T::arbitrary(rng, size))
+        }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        match self {
+            None => vec![],
+            Some(x) => {
+                let mut out = vec![None];
+                out.extend(x.shrink().into_iter().map(Some));
+                out
+            }
+        }
+    }
+}
+
+// Tuple shrinking needs per-field access; implement the common arities by
+// hand rather than through a macro.
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+        (A::arbitrary(rng, size), B::arbitrary(rng, size))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary, C: Arbitrary> Arbitrary for (A, B, C) {
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+        (
+            A::arbitrary(rng, size),
+            B::arbitrary(rng, size),
+            C::arbitrary(rng, size),
+        )
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary, C: Arbitrary, D: Arbitrary> Arbitrary for (A, B, C, D) {
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+        (
+            A::arbitrary(rng, size),
+            B::arbitrary(rng, size),
+            C::arbitrary(rng, size),
+            D::arbitrary(rng, size),
+        )
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let (a, b, c, d) = self;
+        let mut out: Vec<Self> = a
+            .shrink()
+            .into_iter()
+            .map(|a| (a, b.clone(), c.clone(), d.clone()))
+            .collect();
+        out.extend(b.shrink().into_iter().map(|b| (a.clone(), b, c.clone(), d.clone())));
+        out.extend(c.shrink().into_iter().map(|c| (a.clone(), b.clone(), c, d.clone())));
+        out.extend(d.shrink().into_iter().map(|d| (a.clone(), b.clone(), c.clone(), d)));
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary, C: Arbitrary, D: Arbitrary, E: Arbitrary> Arbitrary
+    for (A, B, C, D, E)
+{
+    fn arbitrary(rng: &mut Rng, size: usize) -> Self {
+        (
+            A::arbitrary(rng, size),
+            B::arbitrary(rng, size),
+            C::arbitrary(rng, size),
+            D::arbitrary(rng, size),
+            E::arbitrary(rng, size),
+        )
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let (a, b, c, d, e) = self;
+        let mut out: Vec<Self> = a
+            .shrink()
+            .into_iter()
+            .map(|a| (a, b.clone(), c.clone(), d.clone(), e.clone()))
+            .collect();
+        out.extend(
+            e.shrink()
+                .into_iter()
+                .map(|e| (a.clone(), b.clone(), c.clone(), d.clone(), e)),
+        );
+        out
+    }
+}
+
+/// Run `cases` random checks of `prop`; on failure, shrink greedily and
+/// panic with the minimal counterexample found.
+pub fn check<T: Arbitrary>(name: &str, cases: usize, prop: impl Fn(&T) -> bool) {
+    check_seeded(name, 0xC0FFEE ^ name.len() as u64, cases, prop)
+}
+
+/// Like [`check`] with an explicit seed (for reproducing failures).
+pub fn check_seeded<T: Arbitrary>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        // Grow the size budget over the run: early cases are tiny.
+        let size = 1 + case * 64 / cases.max(1);
+        let input = T::arbitrary(&mut rng, size);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, case={case});\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Arbitrary>(mut failing: T, prop: &impl Fn(&T) -> bool) -> T {
+    // Greedy descent, bounded to avoid pathological shrink graphs.
+    'outer: for _ in 0..1000 {
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check::<u64>("reflexive-eq", 200, |x| x == x);
+        check::<(u32, u32)>("add-comm", 200, |(a, b)| {
+            a.wrapping_add(*b) == b.wrapping_add(*a)
+        });
+        check::<Vec<u8>>("rev-rev", 100, |v| {
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            r == *v
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let caught = std::panic::catch_unwind(|| {
+            check::<u64>("always-small", 500, |&x| x < 10);
+        });
+        let msg = match caught {
+            Ok(_) => panic!("property should have failed"),
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+        };
+        // Greedy shrink of (x >= 10) should land on exactly 10.
+        assert!(msg.contains("counterexample: 10"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinks_toward_empty() {
+        let caught = std::panic::catch_unwind(|| {
+            check::<Vec<u8>>("always-empty", 500, |v| v.is_empty());
+        });
+        let msg = match caught {
+            Ok(_) => panic!("property should have failed"),
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+        };
+        assert!(msg.contains("counterexample: [0]"), "got: {msg}");
+    }
+
+    #[test]
+    fn string_arbitrary_valid_utf8() {
+        check::<String>("string-len", 200, |s| s.chars().count() <= s.len());
+    }
+}

@@ -1,0 +1,273 @@
+//! Measurement substrates: latency histograms, running statistics, and
+//! human-readable throughput formatting for the benchmark harnesses.
+//!
+//! The latency histogram is an HDR-style log-bucketed design: values are
+//! bucketed by (exponent, 5-bit mantissa), giving ~3% relative error across
+//! the full u64 range in 64×32 fixed buckets — enough resolution for the
+//! paper's mean / p99.9 reporting (§6.2) without per-sample storage.
+
+/// Log-bucketed histogram of u64 samples (e.g. nanoseconds).
+#[derive(Clone)]
+pub struct LatencyHist {
+    /// buckets[exp][mantissa-top-5-bits]
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const MANTISSA_BITS: u32 = 5;
+const SUB: usize = 1 << MANTISSA_BITS; // 32 sub-buckets per power of two
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: vec![0; 64 * SUB],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize; // exact for tiny values
+        }
+        let exp = 63 - v.leading_zeros();
+        let mant = ((v >> (exp - MANTISSA_BITS)) & (SUB as u64 - 1)) as usize;
+        (exp as usize) * SUB + mant
+    }
+
+    /// Representative (upper-bound) value for a bucket index.
+    fn value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let exp = (idx / SUB) as u32;
+        let mant = (idx % SUB) as u64;
+        (1u64 << exp) + ((mant + 1) << (exp - MANTISSA_BITS)) - 1
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in [0, 1] (e.g. 0.999 for p99.9), with ~3%
+    /// relative bucket error.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::value(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Half-width of a ~95% confidence interval (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.stddev() / (self.n as f64).sqrt()
+    }
+}
+
+/// Format an operations-per-second figure the way the paper's plots do
+/// (MOPs with 2–3 significant digits).
+pub fn fmt_mops(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e6 {
+        format!("{:.2} MOPs", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.1} kOPs", ops_per_sec / 1e3)
+    } else {
+        format!("{ops_per_sec:.0} OPs")
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hist_exact_for_small_values() {
+        let mut h = LatencyHist::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 32);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 31);
+        // target rank ceil(0.5*32)=16 -> 16th smallest value is 15
+        assert_eq!(h.quantile(0.5), 15);
+    }
+
+    #[test]
+    fn hist_quantiles_within_relative_error() {
+        let mut h = LatencyHist::new();
+        let mut r = Rng::new(42);
+        let mut vals: Vec<u64> = (0..10_000).map(|_| r.below(1_000_000) + 1).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let want = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)];
+            let got = h.quantile(q);
+            let rel = (got as f64 - want as f64).abs() / want as f64;
+            assert!(rel < 0.05, "q={q}: got {got}, want {want}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn hist_mean_exact() {
+        let mut h = LatencyHist::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert!((h.mean() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hist_merge() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record(100);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 100);
+        assert_eq!(a.max(), 1_000_000);
+    }
+
+    #[test]
+    fn hist_empty_is_sane() {
+        let h = LatencyHist::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut w = Welford::default();
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample variance of the set is 32/7
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_mops(25_000_000.0), "25.00 MOPs");
+        assert_eq!(fmt_mops(2_500.0), "2.5 kOPs");
+        assert_eq!(fmt_ns(1_500.0), "1.50 us");
+    }
+}

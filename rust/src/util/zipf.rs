@@ -1,0 +1,316 @@
+//! Zipfian and uniform key-distribution samplers.
+//!
+//! The paper's workloads (§6.1, §6.3, §7) draw objects/keys either uniformly
+//! or from a zipfian distribution with α = 1 over up to 10⁸ keys. Sampling
+//! zipf at that scale needs care: the textbook inverse-CDF over a harmonic
+//! table is O(N) memory, and Gray's YCSB generator is specific to θ < 1.
+//!
+//! We use a hybrid that is exact where it matters and analytic where it
+//! doesn't: an exact cumulative table over the first `HEAD` ranks (where the
+//! bulk of the probability mass lives and the continuous approximation is
+//! worst), and a continuous inverse-CDF over the tail, valid for any α > 0
+//! including α = 1.
+//!
+//! A scrambled variant (à la YCSB `ScrambledZipfianGenerator`) hashes ranks
+//! into the key space so "popular" keys are spread across a table rather
+//! than clustered at low indices.
+
+use super::rng::{mix64, Rng};
+
+/// Number of head ranks sampled from an exact CDF table.
+const HEAD: usize = 4096;
+
+/// Zipfian sampler over ranks `0..n` with exponent `alpha`.
+///
+/// `sample()` returns a 0-based *rank*: rank 0 is the most popular item with
+/// probability ∝ 1, rank k with probability ∝ 1/(k+1)^α.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    /// Exact normalized CDF over ranks `0..head` (head = min(n, HEAD)).
+    head_cdf: Vec<f64>,
+    /// Total probability mass of the head region.
+    head_mass: f64,
+    /// Generalized harmonic H(n, alpha) — total unnormalized mass.
+    total: f64,
+    /// Unnormalized mass of head (= H(head, alpha)).
+    head_total: f64,
+}
+
+#[cfg_attr(not(test), allow(dead_code))]
+/// Generalized harmonic number H(n, a) = sum_{i=1..n} i^-a, computed exactly
+/// up to `HEAD` and by Euler–Maclaurin beyond.
+fn harmonic(n: u64, a: f64) -> f64 {
+    let exact_upto = (HEAD as u64).min(n);
+    let mut h = 0.0;
+    for i in 1..=exact_upto {
+        h += (i as f64).powf(-a);
+    }
+    if n > exact_upto {
+        h += harmonic_range(exact_upto as f64 + 0.5, n as f64 + 0.5, a);
+    }
+    h
+}
+
+/// Continuous approximation of sum_{i in (lo, hi]} i^-a via the integral of
+/// x^-a (midpoint-corrected: bounds at k±0.5 make this accurate to ~1e-6 for
+/// the tail ranks we use it on).
+fn harmonic_range(lo: f64, hi: f64, a: f64) -> f64 {
+    if (a - 1.0).abs() < 1e-9 {
+        (hi / lo).ln()
+    } else {
+        (hi.powf(1.0 - a) - lo.powf(1.0 - a)) / (1.0 - a)
+    }
+}
+
+/// Inverse of `harmonic_range(lo, ., a) = m`: returns `hi`.
+fn inv_harmonic_range(lo: f64, m: f64, a: f64) -> f64 {
+    if (a - 1.0).abs() < 1e-9 {
+        lo * m.exp()
+    } else {
+        (lo.powf(1.0 - a) + (1.0 - a) * m).powf(1.0 / (1.0 - a))
+    }
+}
+
+impl Zipf {
+    /// Build a sampler over `n` ranks with exponent `alpha` (paper: α = 1).
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n > 0, "Zipf over empty domain");
+        assert!(alpha > 0.0, "alpha must be positive");
+        let head = (HEAD as u64).min(n) as usize;
+        let mut head_cdf = Vec::with_capacity(head);
+        let mut acc = 0.0;
+        for i in 1..=head {
+            acc += (i as f64).powf(-alpha);
+            head_cdf.push(acc);
+        }
+        let head_total = acc;
+        let total = if n > head as u64 {
+            head_total + harmonic_range(head as f64 + 0.5, n as f64 + 0.5, alpha)
+        } else {
+            head_total
+        };
+        let head_mass = head_total / total;
+        // Normalize head CDF to [0, head_mass].
+        for c in &mut head_cdf {
+            *c /= total;
+        }
+        Zipf { n, alpha, head_cdf, head_mass, total, head_total }
+    }
+
+    /// Number of ranks.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Probability of a given 0-based rank.
+    pub fn prob(&self, rank: u64) -> f64 {
+        assert!(rank < self.n);
+        ((rank + 1) as f64).powf(-self.alpha) / self.total
+    }
+
+    /// Draw a 0-based rank.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.unit_f64();
+        if u < self.head_mass {
+            // Binary search the exact head CDF.
+            let mut lo = 0usize;
+            let mut hi = self.head_cdf.len();
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if self.head_cdf[mid] < u {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo as u64
+        } else {
+            // Invert the continuous tail CDF.
+            let m = u * self.total - self.head_total;
+            let lo = self.head_cdf.len() as f64 + 0.5;
+            let x = inv_harmonic_range(lo, m, self.alpha);
+            // x is a continuous "rank + 0.5" position; round and clamp.
+            let r = (x - 0.5).floor() as u64;
+            r.min(self.n - 1).max(self.head_cdf.len() as u64)
+        }
+    }
+}
+
+/// A key distribution over `0..n`: uniform, zipfian (rank order), or
+/// scrambled zipfian (popular ranks hashed across the key space).
+#[derive(Clone, Debug)]
+pub enum KeyDist {
+    Uniform { n: u64 },
+    Zipfian(Zipf),
+    ScrambledZipfian(Zipf),
+}
+
+impl KeyDist {
+    /// Parse from bench CLI notation: `uniform` or `zipf` / `zipfian`
+    /// (optionally `zipf:ALPHA`).
+    pub fn from_spec(spec: &str, n: u64) -> KeyDist {
+        let spec = spec.trim();
+        if spec.eq_ignore_ascii_case("uniform") {
+            KeyDist::Uniform { n }
+        } else if let Some(rest) = spec
+            .strip_prefix("zipf")
+            .map(|r| r.trim_start_matches("ian"))
+        {
+            let alpha = rest
+                .strip_prefix(':')
+                .map(|a| a.parse::<f64>().expect("bad zipf alpha"))
+                .unwrap_or(1.0);
+            KeyDist::ScrambledZipfian(Zipf::new(n, alpha))
+        } else {
+            panic!("unknown distribution spec {spec:?} (want uniform|zipf[:alpha])");
+        }
+    }
+
+    /// Domain size.
+    pub fn n(&self) -> u64 {
+        match self {
+            KeyDist::Uniform { n } => *n,
+            KeyDist::Zipfian(z) | KeyDist::ScrambledZipfian(z) => z.n(),
+        }
+    }
+
+    /// Draw a key in `0..n`.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            KeyDist::Uniform { n } => rng.below(*n),
+            KeyDist::Zipfian(z) => z.sample(rng),
+            KeyDist::ScrambledZipfian(z) => {
+                let rank = z.sample(rng);
+                // Spread ranks across the key space with a fixed bijective
+                // mix, reduced to the domain. Collisions merely merge the
+                // popularity of two ranks, as in YCSB.
+                mix64(rank) % z.n()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_frequencies_match_theory() {
+        let z = Zipf::new(1000, 1.0);
+        let mut rng = Rng::new(123);
+        let draws = 200_000;
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..draws {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for rank in [0usize, 1, 2, 9, 99] {
+            let want = z.prob(rank as u64);
+            let got = counts[rank] as f64 / draws as f64;
+            let tol = 0.15 * want + 2.0 / draws as f64;
+            assert!(
+                (got - want).abs() < tol,
+                "rank {rank}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn tail_mass_roughly_correct() {
+        // For n=1e6, alpha=1: P(rank >= 4096) = (H_n - H_4096)/H_n.
+        let n = 1_000_000u64;
+        let z = Zipf::new(n, 1.0);
+        let mut rng = Rng::new(77);
+        let draws = 100_000;
+        let tail = (0..draws)
+            .filter(|_| z.sample(&mut rng) >= HEAD as u64)
+            .count() as f64
+            / draws as f64;
+        let want = 1.0 - z.head_mass;
+        assert!(
+            (tail - want).abs() < 0.02,
+            "tail mass got {tail}, want {want}"
+        );
+    }
+
+    #[test]
+    fn samples_in_domain_various_n() {
+        let mut rng = Rng::new(5);
+        for n in [1u64, 2, 3, 100, 5000, 1_000_000] {
+            let z = Zipf::new(n, 1.0);
+            for _ in 0..2000 {
+                assert!(z.sample(&mut rng) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_sharper_concentrates_more() {
+        let mut rng = Rng::new(6);
+        let n = 100_000;
+        let draws = 50_000;
+        let top_share = |alpha: f64, rng: &mut Rng| {
+            let z = Zipf::new(n, alpha);
+            (0..draws).filter(|_| z.sample(rng) < 10).count() as f64 / draws as f64
+        };
+        let a1 = top_share(0.8, &mut rng);
+        let a2 = top_share(1.5, &mut rng);
+        assert!(a2 > a1 + 0.2, "alpha=1.5 share {a2} vs alpha=0.8 share {a1}");
+    }
+
+    #[test]
+    fn harmonic_exact_vs_approx_agree() {
+        // exact sum vs our hybrid for a mid-size n
+        let n = 20_000u64;
+        let exact: f64 = (1..=n).map(|i| 1.0 / i as f64).sum();
+        let approx = harmonic(n, 1.0);
+        assert!((exact - approx).abs() / exact < 1e-4);
+    }
+
+    #[test]
+    fn uniform_dist_covers() {
+        let d = KeyDist::Uniform { n: 10 };
+        let mut rng = Rng::new(8);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[d.sample(&mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn scrambled_zipf_spreads_hot_keys() {
+        let d = KeyDist::from_spec("zipf", 1_000_000);
+        let mut rng = Rng::new(9);
+        // Hot keys should NOT all be < HEAD after scrambling.
+        let low = (0..10_000)
+            .filter(|_| d.sample(&mut rng) < HEAD as u64)
+            .count();
+        assert!(low < 1000, "scrambling failed: {low} of 10000 in head range");
+    }
+
+    #[test]
+    fn from_spec_parses() {
+        assert!(matches!(
+            KeyDist::from_spec("uniform", 5),
+            KeyDist::Uniform { n: 5 }
+        ));
+        assert!(matches!(
+            KeyDist::from_spec("zipf", 5),
+            KeyDist::ScrambledZipfian(_)
+        ));
+        assert!(matches!(
+            KeyDist::from_spec("zipfian:0.99", 5),
+            KeyDist::ScrambledZipfian(_)
+        ));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_spec_rejects_garbage() {
+        KeyDist::from_spec("pareto", 5);
+    }
+}

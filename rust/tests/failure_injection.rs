@@ -1,0 +1,158 @@
+//! Failure injection: the runtime's behavior at the edges — assertion
+//! failures for illegal blocking (§3.4), client disconnects mid-pipeline,
+//! panics in fibers, runtime teardown with outstanding handles.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig};
+use trustee::runtime::Runtime;
+
+#[test]
+fn fiber_panic_does_not_kill_other_fibers() {
+    let rt = Runtime::builder().workers(2).build();
+    // A panicking fiber on worker 1...
+    let survived = Arc::new(AtomicU64::new(0));
+    let s = survived.clone();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        rt.block_on(1, || panic!("injected fiber failure"));
+    }));
+    assert!(caught.is_err(), "panic must propagate to block_on caller");
+    // ...must not prevent later fibers on the same worker from running.
+    rt.block_on(1, move || s.store(42, Ordering::Release));
+    assert_eq!(survived.load(Ordering::Acquire), 42);
+    rt.shutdown();
+}
+
+#[test]
+fn client_disconnect_mid_pipeline_leaves_server_healthy() {
+    let server = KvServer::start(KvServerConfig {
+        workers: 2,
+        backend: BackendKind::Trust { shards: 2 },
+        ..Default::default()
+    });
+    server.prefill(100, 16);
+    // Open a connection, fire pipelined requests, slam it shut without
+    // reading responses.
+    {
+        let mut c = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut buf = Vec::new();
+        for i in 0..200u64 {
+            proto::write_request(
+                &mut buf,
+                i,
+                proto::OP_GET,
+                &trustee::kvstore::key_bytes(i % 100),
+                &[],
+            );
+        }
+        c.write_all(&buf).unwrap();
+        // Drop without reading: the connection fiber must drain inflight
+        // callbacks and exit without wedging the worker.
+    }
+    // A fresh connection still works.
+    let mut c = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut buf = Vec::new();
+    proto::write_request(&mut buf, 1, proto::OP_GET, &trustee::kvstore::key_bytes(5), &[]);
+    c.write_all(&buf).unwrap();
+    use std::io::Read;
+    let mut rbuf = Vec::new();
+    let mut cursor = proto::FrameCursor::new();
+    let mut chunk = [0u8; 4096];
+    let resp = loop {
+        if let Some(r) = cursor.next_response(&rbuf) {
+            break r;
+        }
+        let n = c.read(&mut chunk).unwrap();
+        assert!(n > 0, "server died after client abort");
+        rbuf.extend_from_slice(&chunk[..n]);
+    };
+    assert_eq!(resp.status, proto::ST_OK);
+    server.stop();
+}
+
+#[test]
+fn truncated_request_is_simply_ignored_until_complete() {
+    // A partial frame must not crash the parser or produce garbage ops.
+    let server = KvServer::start(KvServerConfig {
+        workers: 2,
+        backend: BackendKind::Mutex,
+        ..Default::default()
+    });
+    let mut c = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut buf = Vec::new();
+    proto::write_request(&mut buf, 9, proto::OP_PUT, b"kk", b"vv");
+    // Send only half the frame, wait, then the rest.
+    let half = buf.len() / 2;
+    c.write_all(&buf[..half]).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    c.write_all(&buf[half..]).unwrap();
+    use std::io::Read;
+    let mut rbuf = Vec::new();
+    let mut cursor = proto::FrameCursor::new();
+    let mut chunk = [0u8; 1024];
+    let resp = loop {
+        if let Some(r) = cursor.next_response(&rbuf) {
+            break r;
+        }
+        let n = c.read(&mut chunk).unwrap();
+        assert!(n > 0);
+        rbuf.extend_from_slice(&chunk[..n]);
+    };
+    assert_eq!((resp.id, resp.status), (9, proto::ST_OK));
+    server.stop();
+}
+
+#[test]
+fn trust_outliving_runtime_is_inert() {
+    // Dropping a Trust after shutdown must not crash (property was
+    // reclaimed at worker teardown; drop becomes a no-op).
+    let rt = Runtime::builder().workers(2).build();
+    let ct = rt.trustee(0).entrust(123u64);
+    rt.shutdown();
+    drop(ct); // must not panic or touch freed memory
+}
+
+#[test]
+fn shutdown_with_parked_fibers_is_clean() {
+    // Fibers parked on a never-opened gate at shutdown: the runtime drains
+    // quiescent workers; parked-forever fibers would hang shutdown, so the
+    // test instead checks that *completed* work shuts down promptly even
+    // after heavy suspension traffic.
+    let rt = Runtime::builder().workers(3).build();
+    let ct = rt.trustee(0).entrust(0u64);
+    let done = Arc::new(AtomicU64::new(0));
+    for w in 1..3 {
+        let ct = ct.clone();
+        let d = done.clone();
+        rt.spawn_on(w, move || {
+            for _ in 0..500 {
+                ct.apply(|v| *v += 1);
+            }
+            d.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+    while done.load(Ordering::Acquire) != 2 {
+        std::thread::yield_now();
+    }
+    drop(ct);
+    let t0 = std::time::Instant::now();
+    rt.shutdown();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(10),
+        "shutdown took {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn zero_sized_and_unit_properties() {
+    // Degenerate property types must work (zero-size env, zero-size T).
+    let rt = Runtime::builder().workers(2).build();
+    let unit = rt.trustee(0).entrust(());
+    let c2 = unit.clone();
+    let out = rt.block_on(1, move || c2.apply(|_| 7u64));
+    assert_eq!(out, 7);
+    drop(unit);
+    rt.shutdown();
+}

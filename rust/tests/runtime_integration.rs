@@ -1,0 +1,210 @@
+//! Cross-module integration: Trust\<T\> + fibers + channel + runtime under
+//! realistic composition — many properties, many workers, mixed blocking /
+//! non-blocking traffic, nested structures, refcount churn.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use trustee::runtime::Runtime;
+use trustee::trust::{local_trustee, Latch, Trust};
+
+#[test]
+fn many_properties_many_workers_exact_counts() {
+    let rt = Runtime::builder().workers(4).build();
+    // 32 counters spread over all workers.
+    let counters: Vec<Trust<u64>> = (0..32)
+        .map(|i| rt.trustee(i % 4).entrust(0u64))
+        .collect();
+    let counters = Arc::new(counters);
+    let done = Arc::new(AtomicU64::new(0));
+    for w in 0..4 {
+        let counters = counters.clone();
+        let done = done.clone();
+        rt.spawn_on(w, move || {
+            // Each worker increments every counter 50 times.
+            for _round in 0..50 {
+                for c in counters.iter() {
+                    c.apply(|v| *v += 1);
+                }
+            }
+            done.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+    while done.load(Ordering::Acquire) != 4 {
+        std::thread::yield_now();
+    }
+    let counters2 = counters.clone();
+    let totals: Vec<u64> = rt.block_on(0, move || {
+        counters2.iter().map(|c| c.apply(|v| *v)).collect()
+    });
+    assert!(totals.iter().all(|&t| t == 200), "{totals:?}");
+    drop(counters);
+    rt.shutdown();
+}
+
+#[test]
+fn mixed_blocking_and_async_on_same_property() {
+    let rt = Runtime::builder().workers(3).build();
+    let acc = rt.block_on(0, || local_trustee().entrust(Vec::<u32>::new()));
+    let a2 = acc.clone();
+    rt.block_on(1, move || {
+        // Interleave apply and apply_then; per-pair ordering guarantees the
+        // final blocking apply sees everything this worker sent.
+        for i in 0..100u32 {
+            if i % 3 == 0 {
+                a2.apply(move |v| v.push(i));
+            } else {
+                a2.apply_then(move |v| v.push(i), |_| {});
+            }
+        }
+        let len = a2.apply(|v| v.len() as u64);
+        assert_eq!(len, 100);
+        // Per-pair in-order execution: the vector must be sorted.
+        let sorted = a2.apply(|v| v.windows(2).all(|w| w[0] < w[1]));
+        assert!(sorted, "per-pair requests must execute in order");
+    });
+    drop(acc);
+    rt.shutdown();
+}
+
+#[test]
+fn trust_inside_trust_composes() {
+    // A directory property holding Trusts to leaf properties: delegation
+    // requests routed through a delegated lookup (apply_then from within
+    // delegated context).
+    let rt = Runtime::builder().workers(3).build();
+    let leaf_a = rt.trustee(1).entrust(0u64);
+    let leaf_b = rt.trustee(2).entrust(0u64);
+    let dir = rt.trustee(0).entrust(vec![leaf_a.clone(), leaf_b.clone()]);
+
+    let d2 = dir.clone();
+    rt.block_on(1, move || {
+        for i in 0..20u64 {
+            let which = (i % 2) as usize;
+            // Look up the leaf inside the directory's trustee, then issue a
+            // non-blocking nested delegation from delegated context (§4.2).
+            d2.apply(move |leaves| {
+                leaves[which].apply_then(|v| *v += 1, |_| {});
+            });
+        }
+    });
+    // Poll until both leaves absorbed their increments.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let la = leaf_a.clone();
+        let lb = leaf_b.clone();
+        let (a, b) = rt.block_on(1, move || (la.apply(|v| *v), lb.apply(|v| *v)));
+        if a == 10 && b == 10 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "stuck at {a},{b}");
+    }
+    drop((dir, leaf_a, leaf_b));
+    rt.shutdown();
+}
+
+#[test]
+fn refcount_churn_many_clones() {
+    let rt = Runtime::builder().workers(3).build();
+    let ct = rt.trustee(0).entrust(String::from("x"));
+    // Clone/drop storm across threads.
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let ct = ct.clone();
+            std::thread::spawn(move || {
+                let mut clones = Vec::new();
+                for _ in 0..50 {
+                    clones.push(ct.clone());
+                }
+                drop(clones);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Still alive and correct.
+    let v = ct.apply(|s| s.clone());
+    assert_eq!(v, "x");
+    drop(ct);
+    // Property reclaimed after the last drop.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let live = rt.block_on(0, || trustee::runtime::with_worker(|w| w.registry.live));
+        if live == 0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "{live} props leaked");
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn latch_serializes_launches() {
+    let rt = Runtime::builder().workers(2).build();
+    let prop = rt.trustee(0).entrust(Latch::new(Vec::<usize>::new()));
+    let done = Arc::new(AtomicU64::new(0));
+    for tag in 0..4usize {
+        let p = prop.clone();
+        let d = done.clone();
+        rt.spawn_on(1, move || {
+            p.launch(move |v| {
+                v.push(tag);
+                trustee::fiber::yield_now();
+                v.push(tag);
+            });
+            d.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+    while done.load(Ordering::Acquire) != 4 {
+        std::thread::yield_now();
+    }
+    let p = prop.clone();
+    let v = rt.block_on(1, move || p.apply(|l| l.with_lock(|v| v.clone())));
+    assert_eq!(v.len(), 8);
+    for pair in v.chunks(2) {
+        assert_eq!(pair[0], pair[1], "critical sections interleaved: {v:?}");
+    }
+    drop(prop);
+    rt.shutdown();
+}
+
+#[test]
+fn large_values_through_channel() {
+    let rt = Runtime::builder().workers(2).build();
+    let store = rt.trustee(0).entrust(Vec::<Vec<u8>>::new());
+    let s2 = store.clone();
+    rt.block_on(1, move || {
+        // 8 KiB values exercise the heap/spill paths both directions.
+        let big = vec![0xCDu8; 8192];
+        s2.apply_with(|v, data: Vec<u8>| v.push(data), big.clone());
+        let back = s2.apply(|v| v[0].clone());
+        assert_eq!(back.len(), 8192);
+        assert!(back.iter().all(|&b| b == 0xCD));
+    });
+    drop(store);
+    rt.shutdown();
+}
+
+#[test]
+fn throughput_sanity_batching_wins() {
+    // Async (windowed) delegation must beat sequential blocking round
+    // trips between two workers — the transparent-batching claim (§1).
+    use trustee::bench::fadd::{run_async, run_trust, FaddConfig};
+    let cfg = FaddConfig {
+        threads: 1,
+        objects: 1,
+        ops_per_thread: 4_000,
+        dedicated: 1,
+        fibers: 1, // sequential blocking
+        window: 64,
+        ..Default::default()
+    };
+    let sync1 = run_trust(&cfg);
+    let asyncw = run_async(&cfg);
+    assert!(
+        asyncw.mops() > sync1.mops() * 2.0,
+        "windowed async {:.3} MOPs should dwarf sequential sync {:.3} MOPs",
+        asyncw.mops(),
+        sync1.mops()
+    );
+}

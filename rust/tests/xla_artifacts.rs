@@ -1,0 +1,93 @@
+//! Integration: the AOT bridge end to end — load `artifacts/*.hlo.txt`
+//! (produced by `make artifacts` from the JAX/Pallas layers), compile on
+//! the PJRT CPU client, and verify numerics against a Rust-side oracle.
+//!
+//! Skips (with a loud message) when artifacts have not been built, so
+//! `cargo test` works standalone; `make test` always builds them first.
+
+use trustee::runtime::xla_exec::{BatchEngine, XlaExec};
+
+fn artifact(name: &str) -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join(name);
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: {p:?} missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn load_and_run_small_engine() {
+    let Some(path) = artifact("batch_engine_small.hlo.txt") else { return };
+    let exec = XlaExec::load(&path).expect("load + compile HLO text");
+    assert!(exec.platform().to_lowercase().contains("host") || !exec.platform().is_empty());
+
+    // table = zeros(1024); ops: keys [5, 5, 9], deltas [2, 3, 7].
+    let table = xla::Literal::vec1(&vec![0i32; 1024]);
+    let mut keys = vec![0i32; 32];
+    let mut deltas = vec![0i32; 32];
+    keys[0] = 5;
+    keys[1] = 5;
+    keys[2] = 9;
+    deltas[0] = 2;
+    deltas[1] = 3;
+    deltas[2] = 7;
+    let out = exec
+        .run(&[table, xla::Literal::vec1(&keys), xla::Literal::vec1(&deltas)])
+        .expect("execute");
+    assert_eq!(out.len(), 3, "(new_table, old, shard)");
+    let new_table = out[0].to_vec::<i32>().unwrap();
+    let old = out[1].to_vec::<i32>().unwrap();
+    // In-order fetch-and-add semantics: second op on key 5 sees the first.
+    assert_eq!(old[0], 0);
+    assert_eq!(old[1], 2);
+    assert_eq!(old[2], 0);
+    assert_eq!(new_table[5], 5);
+    assert_eq!(new_table[9], 7);
+    let shard = out[2].to_vec::<i32>().unwrap();
+    assert!(shard.iter().all(|&s| (0..64).contains(&s)));
+}
+
+#[test]
+fn batch_engine_stateful_roundtrip() {
+    let Some(path) = artifact("batch_engine_small.hlo.txt") else { return };
+    let mut eng = BatchEngine::new(&path, 1024, 32).expect("engine");
+    // Apply three batches; mirror with a Rust-side oracle.
+    let mut oracle = vec![0i32; 1024];
+    let mut rng = 0x1234_5678_u64;
+    for _ in 0..3 {
+        let mut keys = Vec::new();
+        let mut deltas = Vec::new();
+        let mut want_old = Vec::new();
+        for _ in 0..20 {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let key = ((rng >> 33) % 1024) as i32;
+            let delta = ((rng >> 13) % 7) as i32;
+            want_old.push(oracle[key as usize]);
+            oracle[key as usize] += delta;
+            keys.push(key);
+            deltas.push(delta);
+        }
+        let old = eng.apply_batch(&keys, &deltas).expect("apply");
+        assert_eq!(old, want_old);
+    }
+    let table = eng.table().expect("table");
+    assert_eq!(&table[..], &oracle[..]);
+    assert_eq!(eng.batches, 3);
+    assert_eq!(eng.ops, 60);
+}
+
+#[test]
+fn large_engine_compiles_and_runs() {
+    let Some(path) = artifact("batch_engine.hlo.txt") else { return };
+    let mut eng = BatchEngine::new(&path, 65536, 256).expect("engine");
+    let keys: Vec<i32> = (0..256).collect();
+    let deltas = vec![1i32; 256];
+    let old = eng.apply_batch(&keys, &deltas).expect("apply");
+    assert!(old.iter().all(|&o| o == 0));
+    let old2 = eng.apply_batch(&keys, &deltas).expect("apply 2");
+    assert!(old2.iter().all(|&o| o == 1), "second round sees first");
+}
