@@ -6,12 +6,22 @@
 //! Measures: (1) single-pair round-trip latency (batch = 1),
 //! (2) single-trustee throughput under windowed async load from all
 //! clients, (3) single MCS lock and single Mutex throughput, and the
-//! resulting trustee/MCS capacity ratio.
+//! resulting trustee/MCS capacity ratio, plus (4) the batched-vs-eager
+//! flush-policy scenario behind §5.3's amortization claim: the same
+//! windowed fetch-add workload swept over worker count × async window
+//! under both [`FlushPolicy::Eager`] (publish per request, the
+//! pre-refactor behaviour) and [`FlushPolicy::Adaptive`] (outbox
+//! watermark + phase-end flush). Adaptive should win ≥ 1.5x at 4+
+//! workers, where per-request publishes leave most of each slot unused.
 //!
 //! Usage: cargo bench --bench channel_micro -- [--ops N] [--threads N]
+//!
+//! [`FlushPolicy::Eager`]: trustee::channel::FlushPolicy::Eager
+//! [`FlushPolicy::Adaptive`]: trustee::channel::FlushPolicy::Adaptive
 
 use trustee::bench::fadd::{run_async, run_lock_by_name, FaddConfig};
 use trustee::bench::print_table;
+use trustee::channel::FlushPolicy;
 use trustee::runtime::Runtime;
 use trustee::util::cli::Args;
 use trustee::util::stats::fmt_ns;
@@ -72,5 +82,42 @@ fn main() {
                 format!("{:.2}x", trustee_async.mops() / mcs.mops()),
             ],
         ],
+    );
+
+    batched_vs_eager(ops);
+}
+
+/// The §5.3 amortization scenario: windowed async fetch-add against a
+/// single trustee, swept over client-worker count × window (the natural
+/// batch-size ceiling), eager vs adaptive flushing.
+fn batched_vs_eager(ops: u64) {
+    let mut rows = Vec::new();
+    for workers in [2usize, 4, 6] {
+        for window in [16usize, 64, 256] {
+            let base = FaddConfig {
+                threads: workers,
+                objects: 1,
+                ops_per_thread: ops,
+                dedicated: 1,
+                window,
+                ..Default::default()
+            };
+            let eager = run_async(&FaddConfig { flush: FlushPolicy::Eager, ..base.clone() });
+            let adaptive =
+                run_async(&FaddConfig { flush: FlushPolicy::Adaptive, ..base.clone() });
+            rows.push(vec![
+                workers.to_string(),
+                window.to_string(),
+                format!("{:.3}", eager.mops()),
+                format!("{:.3}", adaptive.mops()),
+                format!("{:.2}x", adaptive.mops() / eager.mops()),
+            ]);
+            eprintln!("done workers={workers} window={window}");
+        }
+    }
+    print_table(
+        "E14: batched (adaptive flush) vs eager flush, async fetch-add, 1 dedicated trustee",
+        &["client-workers", "window", "eager MOPs", "adaptive MOPs", "adaptive/eager"],
+        &rows,
     );
 }

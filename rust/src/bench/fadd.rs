@@ -2,6 +2,7 @@
 //! std Mutex, spinlock, ticket, MCS, flat-combining (TCLocks stand-in),
 //! Trust (blocking fibers) and Async (non-blocking delegation).
 
+use crate::channel::FlushPolicy;
 use crate::locks::{FcLock, LockCell, McsLock, RawLock, SpinLock, TicketLock};
 use crate::runtime::Runtime;
 use crate::trust::Trust;
@@ -30,6 +31,10 @@ pub struct FaddConfig {
     pub fibers: usize,
     /// Async-specific: outstanding requests per client worker.
     pub window: usize,
+    /// Trust-specific: client-side flush policy (adaptive batching vs the
+    /// pre-refactor eager per-request flush) — the channel_micro
+    /// batched-vs-eager scenario sweeps this.
+    pub flush: FlushPolicy,
 }
 
 impl Default for FaddConfig {
@@ -43,6 +48,7 @@ impl Default for FaddConfig {
             dedicated: 0,
             fibers: 16,
             window: 64,
+            flush: FlushPolicy::Adaptive,
         }
     }
 }
@@ -178,6 +184,7 @@ fn setup_trust(cfg: &FaddConfig) -> (Runtime, Vec<Trust<u64>>, Vec<usize>) {
     let rt = Runtime::builder()
         .workers(workers)
         .dedicated_trustees(cfg.dedicated)
+        .flush_policy(cfg.flush)
         .build();
     let trustee_ids: Vec<usize> = if cfg.dedicated > 0 {
         (0..cfg.dedicated).collect()

@@ -27,6 +27,18 @@
 //! too large even for the overflow block travels out-of-line via a heap
 //! allocation (flags.HEAP), mirroring the paper's dynamic-allocation escape
 //! hatch for oversized responses.
+//!
+//! ## Batching discipline ([`FlushPolicy`])
+//!
+//! *Enqueued* and *visible to the trustee* are decoupled: requests
+//! accumulate in a per-(client, trustee) outbox and are published by an
+//! explicit **flush** — on the [`FLUSH_BYTES`]/[`FLUSH_RECORDS`]
+//! watermarks, at the end of the worker scheduler's client phase, when a
+//! blocking call needs its response, or under [`HEAP_BACKPRESSURE_BYTES`]
+//! pressure from queued out-of-line payloads. Per-pair FIFO survives the
+//! decoupling: the outbox is FIFO, `try_flush` packs front-to-back, the
+//! trustee applies records in batch order, and responses dispatch in the
+//! same order. See DESIGN.md ("Flush policy and ordering contract").
 
 pub mod slot;
 
@@ -52,10 +64,65 @@ pub const MAX_INLINE_PAYLOAD: usize = OVERFLOW_BYTES - RECORD_HEADER;
 /// `None` for fire-and-forget requests (no bytes on the wire).
 pub type Completion = Option<Box<dyn FnOnce(&mut WireReader<'_>)>>;
 
+// ---------------------------------------------------------------------
+// Flush policy (§5.3 batching discipline)
+// ---------------------------------------------------------------------
+
+/// Once an outbox holds a full slot's worth of framed bytes there is
+/// nothing left to gain from accumulating further — the next publish is
+/// already maximal — so the endpoint flushes at this watermark.
+pub const FLUSH_BYTES: usize = PRIMARY_BYTES + OVERFLOW_BYTES;
+
+/// Record-count watermark: minimal records are 32 bytes framed, so ~36 of
+/// them fill a slot; flushing by count as well keeps pathological streams
+/// of tiny records from scanning long outboxes on every enqueue.
+pub const FLUSH_RECORDS: usize = 48;
+
+/// Heap-record backpressure: out-of-line payloads are invisible to the
+/// byte watermark (the in-slot record is a fixed 40 bytes), so the outbox
+/// separately accounts queued heap bytes and flushes (and counts a
+/// backpressure hit) beyond this bound.
+pub const HEAP_BACKPRESSURE_BYTES: usize = 256 * 1024;
+
+/// When a client endpoint publishes its outbox (paper §5.3 batching).
+///
+/// * `Eager` — publish after every enqueue (the pre-refactor behaviour):
+///   lowest latency per request, but batches degenerate to size 1 whenever
+///   the trustee keeps up, forfeiting the paper's amortization win.
+/// * `Adaptive` — accumulate per (client, trustee) outbox and publish on
+///   (a) the byte/record watermarks above, (b) the end of the scheduler's
+///   client phase, or (c) a blocking call that needs the response.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FlushPolicy {
+    Eager,
+    #[default]
+    Adaptive,
+}
+
+impl FlushPolicy {
+    /// Parse a CLI spec (`eager` | `adaptive`).
+    pub fn from_spec(s: &str) -> FlushPolicy {
+        match s {
+            "eager" => FlushPolicy::Eager,
+            "adaptive" | "batched" => FlushPolicy::Adaptive,
+            other => panic!("unknown flush policy {other:?} (want eager|adaptive)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FlushPolicy::Eager => "eager",
+            FlushPolicy::Adaptive => "adaptive",
+        }
+    }
+}
+
 /// A fully framed request waiting in the outbox.
 pub struct PendingReq {
     bytes: Vec<u8>,
     flags: u32,
+    /// Bytes of the out-of-line heap payload (0 for inline records).
+    heap_len: usize,
     completion: Completion,
 }
 
@@ -138,25 +205,52 @@ impl RequestBuilder {
         while buf.len() % 8 != 0 {
             buf.push(0);
         }
-        PendingReq { bytes: buf, flags, completion: None }
+        let heap_len = if heap { payload + 8 } else { 0 };
+        PendingReq { bytes: buf, flags, heap_len, completion: None }
     }
 }
 
 /// Client side of one (client, trustee) edge: outbox, in-flight batch, and
 /// response dispatch.
+///
+/// *Enqueued* is decoupled from *visible to the trustee*: requests
+/// accumulate in the outbox until a flush publishes them into the slot
+/// (watermark / phase-end / blocking call — see [`FlushPolicy`]). Per-pair
+/// FIFO is preserved because the outbox is FIFO, batches pack front to
+/// back, and the trustee serves records in batch order.
 pub struct ClientEndpoint {
     /// Toggle of the last published batch.
     toggle: bool,
     /// A batch is in flight (published, response not yet consumed).
     awaiting: bool,
     inflight: VecDeque<Completion>,
+    /// Empty deque swapped with `inflight` during poll so completion
+    /// capacity is recycled.
+    spare_inflight: VecDeque<Completion>,
+    /// Response batches consumed from the slot but not yet dispatched:
+    /// spin-waiting callers ([`Self::poll_detach`]) park batches here so
+    /// the next regular poll dispatches them, in order, from a safe
+    /// context.
+    deferred: VecDeque<ResponseBatch>,
     outbox: VecDeque<PendingReq>,
+    /// Framed bytes queued in the outbox (watermark accounting).
+    outbox_bytes: usize,
+    /// Out-of-line heap payload bytes queued (backpressure accounting).
+    outbox_heap_bytes: usize,
     buf_pool: Vec<Vec<u8>>,
     scratch: Vec<u8>,
     /// Stats: requests enqueued / batches published / responses dispatched.
     pub sent: u64,
     pub batches: u64,
     pub completed: u64,
+    /// Requests carried by published batches (occupancy numerator; the
+    /// denominator is `batches`).
+    pub flushed_requests: u64,
+    /// Batches published while the queued heap-payload bytes were at or
+    /// past [`HEAP_BACKPRESSURE_BYTES`] (the bound is advisory — it forces
+    /// publishes, it cannot block a producer that keeps enqueueing while a
+    /// batch is in flight).
+    pub backpressure_hits: u64,
 }
 
 impl Default for ClientEndpoint {
@@ -165,12 +259,18 @@ impl Default for ClientEndpoint {
             toggle: false,
             awaiting: false,
             inflight: VecDeque::new(),
+            spare_inflight: VecDeque::new(),
+            deferred: VecDeque::new(),
             outbox: VecDeque::new(),
+            outbox_bytes: 0,
+            outbox_heap_bytes: 0,
             buf_pool: Vec::new(),
             scratch: Vec::new(),
             sent: 0,
             batches: 0,
             completed: 0,
+            flushed_requests: 0,
+            backpressure_hits: 0,
         }
     }
 }
@@ -181,7 +281,8 @@ impl ClientEndpoint {
         self.buf_pool.pop().unwrap_or_default()
     }
 
-    /// Enqueue a framed request with its completion.
+    /// Enqueue a framed request with its completion. The request is not
+    /// visible to the trustee until a flush publishes it.
     pub fn enqueue(&mut self, mut req: PendingReq, completion: Completion) {
         debug_assert_eq!(
             req.flags & FLAG_NO_RESPONSE != 0,
@@ -189,13 +290,37 @@ impl ClientEndpoint {
             "completion must be present iff the request expects a response"
         );
         req.completion = completion;
+        self.outbox_bytes += req.bytes.len();
+        self.outbox_heap_bytes += req.heap_len;
         self.outbox.push_back(req);
         self.sent += 1;
     }
 
-    /// Number of requests not yet responded to (outbox + in flight).
+    /// Should the adaptive policy publish now rather than wait for the
+    /// phase-end flush?
+    pub fn wants_flush(&self) -> bool {
+        self.outbox_bytes >= FLUSH_BYTES
+            || self.outbox.len() >= FLUSH_RECORDS
+            || self.over_heap_bound()
+    }
+
+    /// Are the queued out-of-line payload bytes at or past the (advisory)
+    /// backpressure bound?
+    pub fn over_heap_bound(&self) -> bool {
+        self.outbox_heap_bytes >= HEAP_BACKPRESSURE_BYTES
+    }
+
+    /// Number of requests not yet responded to (outbox + in flight +
+    /// detached-but-undispatched).
     pub fn pending(&self) -> usize {
-        self.outbox.len() + self.inflight.len()
+        self.outbox.len()
+            + self.inflight.len()
+            + self.deferred.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    /// Requests enqueued but not yet published to the trustee.
+    pub fn queued(&self) -> usize {
+        self.outbox.len()
     }
 
     pub fn has_inflight(&self) -> bool {
@@ -208,6 +333,7 @@ impl ClientEndpoint {
         if self.awaiting || self.outbox.is_empty() {
             return 0;
         }
+        let over_heap_at_entry = self.over_heap_bound();
         // SAFETY: we are the unique producer and no batch is in flight.
         let (primary, overflow) = unsafe { pair.request.payload_mut() };
         let mut pcur = 0usize;
@@ -232,6 +358,8 @@ impl ClientEndpoint {
                 break;
             }
             let req = self.outbox.pop_front().unwrap();
+            self.outbox_bytes -= req.bytes.len();
+            self.outbox_heap_bytes -= req.heap_len;
             self.inflight.push_back(req.completion);
             let mut buf = req.bytes;
             if self.buf_pool.len() < 64 {
@@ -241,49 +369,146 @@ impl ClientEndpoint {
             count += 1;
         }
         debug_assert!(count > 0, "outbox head must fit an empty overflow block");
+        if over_heap_at_entry {
+            // This publish was forced by (and relieves) heap-byte pressure.
+            self.backpressure_hits += 1;
+        }
         self.toggle = !self.toggle;
         pair.request
             .publish(Header::new(self.toggle, false, count, pcur, ocur));
         self.awaiting = true;
         self.batches += 1;
+        self.flushed_requests += count as u64;
         count
     }
 
-    /// Poll the response slot; if the in-flight batch completed, dispatch
-    /// all completions in order and flush the next batch. Returns
-    /// completions dispatched.
-    pub fn poll(&mut self, pair: &SlotPair) -> usize {
+    /// If the in-flight batch completed, detach its response bytes and
+    /// completions as a [`ResponseBatch`] and clear the in-flight state.
+    /// The caller dispatches the batch *without holding this endpoint* (so
+    /// completions may freely re-enter the worker and enqueue follow-up
+    /// requests) and then returns the buffers via [`Self::finish_poll`].
+    pub fn begin_poll(&mut self, pair: &SlotPair) -> Option<ResponseBatch> {
         if !self.awaiting {
-            self.try_flush(pair);
-            return 0;
+            return None;
         }
         let h = pair.response.header_acquire();
         if h.toggle() != self.toggle {
-            return 0;
+            return None;
         }
         // SAFETY: trustee published this batch's responses and will not
         // rewrite them until we publish the next request batch.
         let (p, o) = unsafe { pair.response.payload() };
         let plen = h.primary_len();
         let olen = h.overflow_len();
+        let mut bytes = std::mem::take(&mut self.scratch);
+        bytes.clear();
+        bytes.extend_from_slice(&p[..plen]);
+        bytes.extend_from_slice(&o[..olen]);
+        if h.spill() {
+            let spill = unsafe { pair.response.take_spill() };
+            bytes.extend_from_slice(&spill);
+        }
+        let completions =
+            std::mem::replace(&mut self.inflight, std::mem::take(&mut self.spare_inflight));
+        self.awaiting = false;
+        Some(ResponseBatch { bytes, completions })
+    }
+
+    /// Return the buffers from a dispatched [`ResponseBatch`], account the
+    /// completions, and publish the next batch if one is queued.
+    pub fn finish_poll(
+        &mut self,
+        pair: &SlotPair,
+        dispatched: usize,
+        scratch: Vec<u8>,
+        spare: VecDeque<Completion>,
+    ) {
+        self.completed += dispatched as u64;
+        self.scratch = scratch;
+        if self.spare_inflight.capacity() < spare.capacity() {
+            self.spare_inflight = spare;
+        }
+        self.try_flush(pair);
+    }
+
+    /// Consume a completed response batch **without dispatching its
+    /// completions**: the batch is parked on the deferred queue (drained,
+    /// in submission order, by the next regular poll) and the next request
+    /// batch is published. Spin-waiting callers (the clone ack) use this
+    /// so the edge keeps moving while no foreign completion — which could
+    /// re-enter user code from an unsafe context — ever runs under them.
+    /// Returns true if the edge made progress (batch consumed or batch
+    /// published).
+    pub fn poll_detach(&mut self, pair: &SlotPair) -> bool {
+        match self.begin_poll(pair) {
+            Some(batch) => {
+                self.deferred.push_back(batch);
+                self.try_flush(pair);
+                true
+            }
+            None => self.try_flush(pair) > 0,
+        }
+    }
+
+    /// Next parked batch awaiting dispatch, oldest first (see
+    /// [`Self::poll_detach`]). Callers must dispatch deferred batches
+    /// before any [`Self::begin_poll`] batch to keep FIFO dispatch order.
+    pub fn pop_deferred(&mut self) -> Option<ResponseBatch> {
+        self.deferred.pop_front()
+    }
+
+    /// Single-call convenience used by loopback tests and simple drivers:
+    /// poll, dispatch completions in order, flush the next batch. Returns
+    /// completions dispatched. The worker scheduler uses the split
+    /// [`Self::begin_poll`] / [`Self::finish_poll`] form instead so that
+    /// completions run outside any endpoint borrow.
+    pub fn poll(&mut self, pair: &SlotPair) -> usize {
+        let mut total = 0;
+        while let Some(batch) = self.deferred.pop_front() {
+            let (n, scratch, spare) = batch.dispatch();
+            self.finish_poll(pair, n, scratch, spare);
+            total += n;
+        }
+        match self.begin_poll(pair) {
+            None => {
+                self.try_flush(pair);
+            }
+            Some(batch) => {
+                let (n, scratch, spare) = batch.dispatch();
+                self.finish_poll(pair, n, scratch, spare);
+                total += n;
+            }
+        }
+        total
+    }
+}
+
+/// One completed batch's response bytes + completions, detached from the
+/// endpoint so dispatch can run without borrowing it.
+pub struct ResponseBatch {
+    bytes: Vec<u8>,
+    completions: VecDeque<Completion>,
+}
+
+impl ResponseBatch {
+    /// Number of requests this batch answers.
+    pub fn len(&self) -> usize {
+        self.completions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.completions.is_empty()
+    }
+
+    /// Run every completion in submission order over the response stream.
+    /// Returns (dispatched, scratch buffer, drained deque) for
+    /// [`ClientEndpoint::finish_poll`].
+    pub fn dispatch(self) -> (usize, Vec<u8>, VecDeque<Completion>) {
+        let ResponseBatch { bytes, mut completions } = self;
         let mut dispatched = 0;
         {
-            // Build a contiguous view (zero-copy when primary-only).
-            let mut scratch = std::mem::take(&mut self.scratch);
-            let bytes: &[u8] = if olen == 0 && !h.spill() {
-                &p[..plen]
-            } else {
-                scratch.clear();
-                scratch.extend_from_slice(&p[..plen]);
-                scratch.extend_from_slice(&o[..olen]);
-                if h.spill() {
-                    let spill = unsafe { pair.response.take_spill() };
-                    scratch.extend_from_slice(&spill);
-                }
-                &scratch
-            };
-            let mut reader = WireReader::new(bytes);
-            while let Some(completion) = self.inflight.pop_front() {
+            let mut reader = WireReader::new(&bytes);
+            while let Some(completion) = completions.pop_front() {
                 if let Some(f) = completion {
                     f(&mut reader);
                 }
@@ -294,12 +519,8 @@ impl ClientEndpoint {
                 "response bytes not fully consumed: {} left",
                 reader.remaining()
             );
-            self.scratch = scratch;
         }
-        self.awaiting = false;
-        self.completed += dispatched as u64;
-        self.try_flush(pair);
-        dispatched
+        (dispatched, bytes, completions)
     }
 }
 

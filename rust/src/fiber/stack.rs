@@ -2,6 +2,7 @@
 //! through a per-thread pool (stack allocation is on the `launch()` hot
 //! path — §4.3 creates a temporary fiber per launched closure).
 
+use crate::util::sys as libc;
 use std::ptr::NonNull;
 
 /// Default usable stack size. Virtual memory only — pages are faulted in

@@ -8,6 +8,13 @@
 //! table — clients receive a **copy** of the value, exactly like the
 //! paper's memcached port (§7: "instead of a pointer to a value in the
 //! table, clients receive a copy").
+//!
+//! Every `apply_with_then` here is a **non-urgent** delegation, so the
+//! Fig. 8/9 request paths inherit the adaptive flush policy for free: all
+//! the gets/puts a socket fiber parses out of one TCP read accumulate in
+//! the per-(worker, trustee) outbox and travel as one batch at the
+//! scheduler's phase-end flush (or earlier at the slot watermark), instead
+//! of paying a slot publish per key as the eager pre-refactor design did.
 
 use crate::cmap::{fxhash, ConcurrentMap, OaTable, ShardedMutexMap, ShardedRwMap, SwiftMap};
 use crate::trust::{Trust, TrusteeRef};

@@ -92,9 +92,11 @@ impl KvServer {
                                 let stop = stop.clone();
                                 shared.inject(
                                     worker,
-                                    Box::new(move |w| {
-                                        w.exec.spawn(move || {
-                                            connection_fiber(stream, backend, ops, stop)
+                                    Box::new(move || {
+                                        fiber::with_executor(|e| {
+                                            e.spawn(move || {
+                                                connection_fiber(stream, backend, ops, stop)
+                                            });
                                         });
                                     }),
                                 );

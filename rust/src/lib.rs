@@ -32,8 +32,10 @@
 //!   environment (PRNG, zipfian sampling, stats, CLI, affinity, a
 //!   property-test harness, and a bincode-style wire codec)
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index,
-//! and `EXPERIMENTS.md` for measured-vs-paper results.
+//! See `rust/DESIGN.md` for the full system inventory — including the
+//! adaptive flush policy and its FIFO/refcount ordering contracts — and
+//! `rust/EXPERIMENTS.md` for the experiment index and measured-vs-paper
+//! results.
 
 pub mod util;
 pub mod codec;

@@ -151,6 +151,7 @@ fn fadd(args: &Args) {
         dedicated: args.get("dedicated", 0),
         fibers: args.get("fibers", 8),
         window: args.get("window", 64),
+        flush: trustee::channel::FlushPolicy::from_spec(&args.get_str("flush", "adaptive")),
     };
     let r = match engine.as_str() {
         "trust" => run_trust(&cfg),

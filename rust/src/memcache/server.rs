@@ -156,9 +156,11 @@ impl McdServer {
                                 let stop = stop.clone();
                                 shared.inject(
                                     worker,
-                                    Box::new(move |w| {
-                                        w.exec.spawn(move || {
-                                            connection_fiber(stream, engine, ops, stop)
+                                    Box::new(move || {
+                                        fiber::with_executor(|e| {
+                                            e.spawn(move || {
+                                                connection_fiber(stream, engine, ops, stop)
+                                            });
                                         });
                                     }),
                                 );

@@ -12,17 +12,38 @@
 //! *Dedicated* trustees (§6.1's "dedicated" configuration) are workers that
 //! host no application fibers — they spend all their time serving.
 //!
-//! The scheduler loop interleaves, in FIFO fashion like the paper's
-//! delegation fiber (§5.2): serve incoming requests → poll responses
-//! (resuming fibers / running `then`-callbacks) → flush pending outgoing
-//! requests → run one application fiber. Off the hot path, each worker also
-//! drains an injector queue (mutex-guarded) through which non-worker
-//! threads submit jobs — the paper's runtime has an equivalent start-up
-//! path for entrusting initial properties and spawning root fibers.
+//! ## Scheduler phases
+//!
+//! Each loop iteration runs four phases in FIFO fashion like the paper's
+//! delegation fiber (§5.2):
+//!
+//! 1. **serve** — drain whole request batches from every client column,
+//!    repeating while batches keep arriving (bounded burst) so a hot
+//!    trustee amortizes the scan, then fall back to the adaptive
+//!    [`Backoff`] when idle;
+//! 2. **poll** — consume completed response batches, running completions
+//!    (fiber wake-ups / `then`-callbacks) *outside* any worker borrow;
+//! 3. **inject** — drain the mutex-guarded injector queue through which
+//!    non-worker threads submit jobs (start-up entrusting, root fibers);
+//! 4. **client** — run one application fiber slice, then **flush** every
+//!    dirty outbox (the end-of-client-phase hook of the adaptive
+//!    [`FlushPolicy`]).
+//!
+//! ## Borrow discipline (re-entrancy)
+//!
+//! Delegated thunks, response completions, injected jobs, and fiber code
+//! may all re-enter [`with_worker`]. The scheduler therefore never holds a
+//! `&mut Worker` across foreign code: endpoints are detached
+//! (`std::mem::take`) while thunks run, response batches are detached
+//! before completions run, injected jobs take no worker argument, and all
+//! phase bookkeeping happens in short `with_worker` bursts. `with_worker`
+//! itself hands out a fresh reborrow from the thread-local raw pointer at
+//! every call, so nested calls never alias a live long-lived borrow.
 
+#[cfg(feature = "xla")]
 pub mod xla_exec;
 
-use crate::channel::{ClientEndpoint, Matrix, TrusteeEndpoint};
+use crate::channel::{ClientEndpoint, Completion, FlushPolicy, Matrix, PendingReq, TrusteeEndpoint};
 use crate::fiber::{self, Executor};
 use crate::util::affinity;
 use crate::util::cache::Backoff;
@@ -30,15 +51,22 @@ use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// A job injected from outside the runtime (runs on the worker's scheduler
-/// stack, *not* in a fiber).
-pub type Job = Box<dyn FnOnce(&mut Worker) + Send + 'static>;
+/// A job injected from outside the runtime. It runs on the worker's
+/// scheduler stack (*not* in a fiber) with no worker borrow held — use
+/// [`with_worker`] / [`fiber::with_executor`] inside for short accesses.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// How many serve rounds a single scheduler tick may burst through while
+/// request batches keep arriving (keeps a hot trustee from starving its
+/// own fibers and clients).
+const SERVE_BURST: usize = 8;
 
 /// State shared by all workers and the runtime handle.
 pub struct Shared {
     pub(crate) matrix: Matrix,
     n: usize,
     dedicated: usize,
+    flush_policy: FlushPolicy,
     shutdown: AtomicBool,
     stopped: AtomicBool,
     finished: AtomicUsize,
@@ -55,6 +83,11 @@ impl Shared {
     /// Workers `0..dedicated()` host no application fibers.
     pub fn dedicated(&self) -> usize {
         self.dedicated
+    }
+
+    /// The client-side flush policy every worker runs with.
+    pub fn flush_policy(&self) -> FlushPolicy {
+        self.flush_policy
     }
 
     /// True once the runtime has fully stopped (workers joined); Trust
@@ -98,27 +131,43 @@ impl Registry {
         }
     }
 
-    /// Remove and drop the property at `idx`.
-    ///
-    /// # Safety
-    /// `idx` must have been returned by `register` on this registry and the
-    /// property must not be referenced afterwards.
-    pub unsafe fn reclaim(&mut self, idx: usize) {
-        let (ptr, drop_fn) = self.entries[idx].take().expect("double reclaim");
+    /// Remove the entry at `idx` and hand it to the caller, who must run
+    /// `drop_fn(ptr)` — *outside* any worker borrow, because dropping a
+    /// property may recursively clone/drop other trusts on this worker.
+    /// Panics on double reclaim.
+    pub fn take_entry(&mut self, idx: usize) -> (usize, unsafe fn(*mut u8)) {
+        let e = self.entries[idx].take().expect("double reclaim");
         self.free.push(idx);
         self.live -= 1;
-        unsafe { drop_fn(ptr as *mut u8) };
+        e
     }
 
-    fn drain_all(&mut self) {
-        for e in self.entries.iter_mut() {
-            if let Some((ptr, drop_fn)) = e.take() {
+    /// Detach the first remaining entry (shutdown path). One-at-a-time so
+    /// that a drop which recursively reclaims *other* entries (a property
+    /// holding trusts to same-worker properties) finds them still present.
+    fn take_next(&mut self) -> Option<(usize, unsafe fn(*mut u8))> {
+        for (idx, e) in self.entries.iter_mut().enumerate() {
+            if e.is_some() {
+                let entry = e.take().unwrap();
+                self.free.push(idx);
                 self.live -= 1;
-                // SAFETY: shutdown — no more requests will touch this prop.
-                unsafe { drop_fn(ptr as *mut u8) };
+                return Some(entry);
             }
         }
+        None
     }
+}
+
+/// Remove the property at `idx` from the current worker's registry and
+/// drop it with no worker borrow held.
+///
+/// # Safety
+/// `idx` must have been returned by `register` on this worker's registry
+/// and the property must not be referenced afterwards.
+pub(crate) unsafe fn reclaim_on_current_worker(idx: usize) {
+    let (ptr, drop_fn) = with_worker(|w| w.registry.take_entry(idx));
+    // SAFETY: per the function contract; the borrow above has ended.
+    unsafe { drop_fn(ptr as *mut u8) };
 }
 
 /// Per-worker scheduler state. Accessible from fibers and thunks running on
@@ -127,6 +176,7 @@ pub struct Worker {
     pub id: usize,
     pub shared: Arc<Shared>,
     pub exec: Box<Executor>,
+    flush_policy: FlushPolicy,
     clients: Vec<ClientEndpoint>,
     trustees: Vec<TrusteeEndpoint>,
     in_delegated: Cell<bool>,
@@ -134,6 +184,8 @@ pub struct Worker {
     /// Metrics.
     pub loops: u64,
     pub served_requests: u64,
+    /// Serve rounds executed (≥ loops; burst draining adds rounds).
+    pub serve_rounds: u64,
 }
 
 thread_local! {
@@ -141,11 +193,16 @@ thread_local! {
 }
 
 /// Run `f` with the current thread's worker. Panics off runtime threads.
+///
+/// Each call hands out a fresh short-lived reborrow from the thread-local
+/// raw pointer. Callers must not stash the reference, and crate code never
+/// holds one across foreign code (thunks, completions, fibers, jobs) — see
+/// the module docs' borrow discipline.
 pub fn with_worker<R>(f: impl FnOnce(&mut Worker) -> R) -> R {
     let p = WORKER.with(|c| c.get());
     assert!(!p.is_null(), "not on a Trust<T> runtime worker thread");
-    // SAFETY: set for the worker's lifetime on this thread; crate-internal
-    // callers do not hold overlapping borrows across calls.
+    // SAFETY: set for the worker's lifetime on this thread; the borrow
+    // discipline above keeps reborrows disjoint.
     unsafe { f(&mut *p) }
 }
 
@@ -171,10 +228,49 @@ impl Worker {
         &mut self.clients[trustee]
     }
 
-    /// Flush one client edge eagerly (used right after enqueue).
+    /// Enqueue a framed request toward `trustee` and apply the flush
+    /// policy: publish immediately when `urgent` (a blocking caller needs
+    /// the response), under [`FlushPolicy::Eager`], or past the outbox
+    /// watermarks; otherwise leave it for the end-of-phase flush.
+    pub fn enqueue_toward(
+        &mut self,
+        trustee: usize,
+        req: PendingReq,
+        completion: Completion,
+        urgent: bool,
+    ) {
+        let ep = &mut self.clients[trustee];
+        ep.enqueue(req, completion);
+        if urgent || self.flush_policy == FlushPolicy::Eager || ep.wants_flush() {
+            let pair = self.shared.matrix.pair(self.id, trustee);
+            self.clients[trustee].try_flush(pair);
+        }
+    }
+
+    /// Flush one client edge eagerly (used by blocking call sites).
     pub fn kick(&mut self, trustee: usize) {
         let pair = self.shared.matrix.pair(self.id, trustee);
         self.clients[trustee].try_flush(pair);
+    }
+
+    /// Drive one edge without dispatching completions (see
+    /// [`ClientEndpoint::poll_detach`]): consume a completed response
+    /// batch onto the deferred queue and publish the next batch. Used by
+    /// the clone-ack spin, which must not run foreign completions.
+    pub fn poll_detach(&mut self, trustee: usize) -> bool {
+        let pair = self.shared.matrix.pair(self.id, trustee);
+        self.clients[trustee].poll_detach(pair)
+    }
+
+    /// Flush every dirty outbox (the end-of-client-phase hook). Returns
+    /// requests published.
+    pub fn flush_all(&mut self) -> usize {
+        let mut flushed = 0;
+        for t in 0..self.shared.n() {
+            let pair = self.shared.matrix.pair(self.id, t);
+            flushed += self.clients[t].try_flush(pair);
+        }
+        flushed
     }
 
     pub fn set_delegated(&self, v: bool) -> bool {
@@ -185,117 +281,196 @@ impl Worker {
         self.in_delegated.get()
     }
 
-    /// Serve every client's pending batch addressed to this trustee.
-    /// Delegated closures run inside, with the delegated-context flag set.
-    fn serve_all(&mut self) -> usize {
-        let n = self.shared.n();
-        let mut total = 0;
-        let shared = self.shared.clone();
-        let prev = self.in_delegated.replace(true);
-        for c in 0..n {
-            let pair = shared.matrix.pair(c, self.id);
-            // SAFETY: all records were framed by the trust layer with
-            // matching thunk/payload types; props are owned by this thread.
-            total += unsafe { self.trustees[c].serve(pair) };
-        }
-        self.in_delegated.set(prev);
-        self.served_requests += total as u64;
-        total
-    }
-
-    /// Poll every trustee's response slot; dispatch completions (which
-    /// resume fibers / run callbacks) and flush follow-up batches.
-    fn poll_all(&mut self) -> usize {
-        let n = self.shared.n();
-        let mut total = 0;
-        let shared = self.shared.clone();
-        for t in 0..n {
-            let pair = shared.matrix.pair(self.id, t);
-            total += self.clients[t].poll(pair);
-        }
-        total
-    }
-
-    fn drain_injector(&mut self) -> usize {
-        if !self.shared.injector_nonempty[self.id].load(Ordering::Acquire) {
-            return 0;
-        }
-        let jobs: Vec<Job> = {
-            let mut q = self.shared.injectors[self.id].lock().unwrap();
-            self.shared.injector_nonempty[self.id].store(false, Ordering::Release);
-            std::mem::take(&mut *q)
-        };
-        let count = jobs.len();
-        for job in jobs {
-            job(self);
-        }
-        count
-    }
-
     /// Outstanding client work (unflushed or undispatched requests).
     fn pending_client_work(&self) -> usize {
         self.clients.iter().map(|c| c.pending()).sum()
     }
 
-    /// One iteration of the scheduler loop; returns (useful, ran_fiber):
-    /// `useful` counts delegation work (requests served, responses
-    /// dispatched, jobs injected); `ran_fiber` whether a fiber slice ran.
-    pub fn tick(&mut self) -> (usize, bool) {
-        self.loops += 1;
-        let mut useful = 0;
-        useful += self.serve_all();
-        useful += self.poll_all();
-        useful += self.drain_injector();
-        let ran_fiber = self.exec.run_one();
-        (useful, ran_fiber)
+    /// Batches this worker has published across all edges (metrics).
+    pub fn flushes(&self) -> u64 {
+        self.clients.iter().map(|c| c.batches).sum()
     }
 
-    fn main_loop(&mut self) {
-        let mut backoff = Backoff::new();
-        let mut announced_done = false;
-        // Single-core fairness (DESIGN.md substitution #1): a worker whose
-        // only activity is an idle-polling fiber (e.g. a socket fiber with
-        // nothing on the wire) must not monopolize the CPU, or trustees on
-        // other threads starve. After a few fiber-only ticks with zero
-        // delegation progress, offer the OS a reschedule point.
-        const FIBER_ONLY_YIELD: u32 = 4;
-        let mut fiber_only_ticks = 0u32;
-        loop {
-            let (useful, ran_fiber) = self.tick();
-            if useful > 0 {
-                backoff.reset();
-                fiber_only_ticks = 0;
-            } else if ran_fiber {
-                backoff.reset();
-                fiber_only_ticks += 1;
-                if fiber_only_ticks >= FIBER_ONLY_YIELD {
-                    fiber_only_ticks = 0;
-                    std::thread::yield_now();
-                }
-            } else {
-                backoff.snooze();
-            }
-            if self.shared.shutdown.load(Ordering::Acquire) {
-                let quiescent = self.exec.live() == 0 && self.pending_client_work() == 0;
-                if quiescent && !announced_done {
-                    announced_done = true;
-                    self.shared.finished.fetch_add(1, Ordering::AcqRel);
-                } else if !quiescent && announced_done {
-                    // Late work arrived (e.g. injected refcount drop).
-                    announced_done = false;
-                    self.shared.finished.fetch_sub(1, Ordering::AcqRel);
-                }
-                // Keep serving until *everyone* is quiescent so cross-worker
-                // responses still flow during teardown.
-                if announced_done
-                    && self.shared.finished.load(Ordering::Acquire) == self.shared.n()
-                {
-                    break;
-                }
+    /// Mean requests per published batch across all edges (metrics); 0.0
+    /// before the first flush.
+    pub fn batch_occupancy(&self) -> f64 {
+        let batches = self.flushes();
+        if batches == 0 {
+            return 0.0;
+        }
+        let reqs: u64 = self.clients.iter().map(|c| c.flushed_requests).sum();
+        reqs as f64 / batches as f64
+    }
+
+    /// Heap-byte backpressure flushes across all edges (metrics).
+    pub fn backpressure_hits(&self) -> u64 {
+        self.clients.iter().map(|c| c.backpressure_hits).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scheduler phases (free functions: no `&mut Worker` held across foreign
+// code — see the module docs' borrow discipline)
+// ---------------------------------------------------------------------
+
+/// Serve phase: drain whole batches from every client column, bursting up
+/// to [`SERVE_BURST`] rounds while requests keep arriving. Delegated
+/// closures run inside with the delegated-context flag set and with the
+/// column's endpoint detached from the worker.
+fn serve_phase() -> usize {
+    let (n, id, shared) = with_worker(|w| (w.shared.n(), w.id, w.shared.clone()));
+    let prev = with_worker(|w| w.set_delegated(true));
+    let mut total = 0;
+    let mut rounds = 0usize;
+    loop {
+        let mut round = 0;
+        for c in 0..n {
+            let mut ep = with_worker(|w| std::mem::take(&mut w.trustees[c]));
+            // SAFETY: all records were framed by the trust layer with
+            // matching thunk/payload types; props are owned by this thread.
+            round += unsafe { ep.serve(shared.matrix.pair(c, id)) };
+            with_worker(|w| w.trustees[c] = ep);
+        }
+        rounds += 1;
+        total += round;
+        if round == 0 || rounds >= SERVE_BURST {
+            break;
+        }
+    }
+    with_worker(|w| {
+        w.set_delegated(prev);
+        w.served_requests += total as u64;
+        w.serve_rounds += rounds as u64;
+    });
+    total
+}
+
+/// Poll one client edge: consume a completed response batch, dispatch its
+/// completions in order (no worker borrow held), publish the next batch.
+/// Batches parked by a spin-waiting clone ack ([`Worker::poll_detach`])
+/// are dispatched first so dispatch order always matches submission order.
+pub(crate) fn poll_client_edge(trustee: usize) -> usize {
+    let (id, shared) = with_worker(|w| (w.id, w.shared.clone()));
+    let pair = shared.matrix.pair(id, trustee);
+    let mut total = 0;
+    while let Some(batch) = with_worker(|w| w.clients[trustee].pop_deferred()) {
+        let (n, scratch, spare) = batch.dispatch();
+        with_worker(|w| w.clients[trustee].finish_poll(pair, n, scratch, spare));
+        total += n;
+    }
+    match with_worker(|w| w.clients[trustee].begin_poll(pair)) {
+        Some(batch) => {
+            let (n, scratch, spare) = batch.dispatch();
+            with_worker(|w| w.clients[trustee].finish_poll(pair, n, scratch, spare));
+            total += n;
+        }
+        None => {
+            if total == 0 {
+                // Nothing in flight: opportunistically publish queued
+                // requests so the edge keeps moving.
+                with_worker(|w| w.kick(trustee));
             }
         }
-        self.registry.drain_all();
     }
+    total
+}
+
+/// Poll phase: every trustee's response slot.
+fn poll_phase() -> usize {
+    let n = with_worker(|w| w.shared.n());
+    let mut total = 0;
+    for t in 0..n {
+        total += poll_client_edge(t);
+    }
+    total
+}
+
+/// Injector phase: drain jobs submitted by non-worker threads. Jobs run
+/// with no worker borrow held.
+fn injector_phase() -> usize {
+    let jobs: Vec<Job> = with_worker(|w| {
+        if !w.shared.injector_nonempty[w.id].load(Ordering::Acquire) {
+            return Vec::new();
+        }
+        let mut q = w.shared.injectors[w.id].lock().unwrap();
+        w.shared.injector_nonempty[w.id].store(false, Ordering::Release);
+        std::mem::take(&mut *q)
+    });
+    let count = jobs.len();
+    for job in jobs {
+        job();
+    }
+    count
+}
+
+/// Flush phase: the end-of-client-phase hook of the adaptive policy.
+fn flush_phase() -> usize {
+    with_worker(|w| w.flush_all())
+}
+
+/// Shutdown path: drop every property still registered on this worker,
+/// one at a time so recursive reclaims (and drops that entrust anew) stay
+/// coherent, each drop running with no worker borrow held.
+fn drain_registry() {
+    while let Some((ptr, drop_fn)) = with_worker(|w| w.registry.take_next()) {
+        // SAFETY: shutdown — no more requests will touch this prop.
+        unsafe { drop_fn(ptr as *mut u8) };
+    }
+}
+
+/// The per-worker scheduler loop. Runs on the worker's scheduler stack
+/// with the thread-local worker installed; holds no worker borrow across
+/// phases.
+fn worker_loop() {
+    let shared = with_worker(|w| w.shared.clone());
+    let mut backoff = Backoff::new();
+    let mut announced_done = false;
+    // Single-core fairness (DESIGN.md substitution #1): a worker whose
+    // only activity is an idle-polling fiber (e.g. a socket fiber with
+    // nothing on the wire) must not monopolize the CPU, or trustees on
+    // other threads starve. After a few fiber-only ticks with zero
+    // delegation progress, offer the OS a reschedule point.
+    const FIBER_ONLY_YIELD: u32 = 4;
+    let mut fiber_only_ticks = 0u32;
+    loop {
+        with_worker(|w| w.loops += 1);
+        let mut useful = serve_phase();
+        useful += poll_phase();
+        useful += injector_phase();
+        let ran_fiber = fiber::with_executor(|e| e.run_one());
+        flush_phase();
+        if useful > 0 {
+            backoff.reset();
+            fiber_only_ticks = 0;
+        } else if ran_fiber {
+            backoff.reset();
+            fiber_only_ticks += 1;
+            if fiber_only_ticks >= FIBER_ONLY_YIELD {
+                fiber_only_ticks = 0;
+                std::thread::yield_now();
+            }
+        } else {
+            backoff.snooze();
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            let quiescent =
+                with_worker(|w| w.exec.live() == 0 && w.pending_client_work() == 0);
+            if quiescent && !announced_done {
+                announced_done = true;
+                shared.finished.fetch_add(1, Ordering::AcqRel);
+            } else if !quiescent && announced_done {
+                // Late work arrived (e.g. injected refcount drop).
+                announced_done = false;
+                shared.finished.fetch_sub(1, Ordering::AcqRel);
+            }
+            // Keep serving until *everyone* is quiescent so cross-worker
+            // responses still flow during teardown.
+            if announced_done && shared.finished.load(Ordering::Acquire) == shared.n() {
+                break;
+            }
+        }
+    }
+    drain_registry();
 }
 
 /// Configuration for [`Runtime`].
@@ -308,6 +483,9 @@ pub struct Config {
     pub stack_size: usize,
     /// Pin worker threads to CPUs (no-op when CPUs are scarce).
     pub pin: bool,
+    /// Client-side batching discipline (default adaptive; eager reproduces
+    /// the pre-batching behaviour for comparison benchmarks).
+    pub flush_policy: FlushPolicy,
 }
 
 impl Default for Config {
@@ -317,6 +495,7 @@ impl Default for Config {
             dedicated: 0,
             stack_size: fiber::DEFAULT_STACK_SIZE,
             pin: false,
+            flush_policy: FlushPolicy::Adaptive,
         }
     }
 }
@@ -348,8 +527,42 @@ impl Builder {
         self
     }
 
+    pub fn flush_policy(mut self, policy: FlushPolicy) -> Self {
+        self.cfg.flush_policy = policy;
+        self
+    }
+
     pub fn build(self) -> Runtime {
         Runtime::new(self.cfg)
+    }
+}
+
+/// Handle to a fiber started with [`Runtime::spawn_on_handle`] /
+/// [`Runtime::block_on`]: lets a **non-runtime** thread wait for the
+/// fiber's completion and take its result (condvar-based; never call
+/// `join` from a worker thread or fiber — it would block the scheduler).
+pub struct JoinHandle<R> {
+    done: Arc<(Mutex<Option<std::thread::Result<R>>>, Condvar)>,
+}
+
+impl<R> JoinHandle<R> {
+    /// Has the fiber finished (without consuming the handle)?
+    pub fn is_finished(&self) -> bool {
+        self.done.0.lock().unwrap().is_some()
+    }
+
+    /// Block the calling (non-runtime) thread until the fiber completes;
+    /// returns its result, re-raising a fiber panic.
+    pub fn join(self) -> R {
+        let (m, cv) = &*self.done;
+        let mut g = m.lock().unwrap();
+        while g.is_none() {
+            g = cv.wait(g).unwrap();
+        }
+        match g.take().unwrap() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
     }
 }
 
@@ -371,6 +584,7 @@ impl Runtime {
             matrix: Matrix::new(n),
             n,
             dedicated: cfg.dedicated,
+            flush_policy: cfg.flush_policy,
             shutdown: AtomicBool::new(false),
             stopped: AtomicBool::new(false),
             finished: AtomicUsize::new(0),
@@ -384,6 +598,7 @@ impl Runtime {
             let shared = shared.clone();
             let started = started.clone();
             let stack_size = cfg.stack_size;
+            let flush_policy = cfg.flush_policy;
             let pin = cfg.pin.then_some(pin_plan[id]);
             handles.push(
                 std::thread::Builder::new()
@@ -398,6 +613,7 @@ impl Runtime {
                             id,
                             shared: shared.clone(),
                             exec,
+                            flush_policy,
                             clients: (0..shared.n()).map(|_| ClientEndpoint::default()).collect(),
                             trustees: (0..shared.n())
                                 .map(|_| TrusteeEndpoint::default())
@@ -406,10 +622,11 @@ impl Runtime {
                             registry: Registry::default(),
                             loops: 0,
                             served_requests: 0,
+                            serve_rounds: 0,
                         });
                         WORKER.with(|c| c.set(&mut *worker));
                         started.fetch_add(1, Ordering::AcqRel);
-                        worker.main_loop();
+                        worker_loop();
                         WORKER.with(|c| c.set(std::ptr::null_mut()));
                     })
                     .expect("spawn worker"),
@@ -444,10 +661,39 @@ impl Runtime {
         );
         self.shared.inject(
             worker,
-            Box::new(move |w| {
-                w.exec.spawn(f);
+            Box::new(move || {
+                fiber::with_executor(|e| {
+                    e.spawn(f);
+                });
             }),
         );
+    }
+
+    /// Spawn a fiber on `worker` and return a [`JoinHandle`] a non-runtime
+    /// thread can use as the fiber's completion signal. Unlike
+    /// [`Runtime::spawn_on`] this is also allowed on dedicated trustees
+    /// (driver/diagnostic fibers, like [`Runtime::block_on`]).
+    pub fn spawn_on_handle<R: Send + 'static>(
+        &self,
+        worker: usize,
+        f: impl FnOnce() -> R + Send + 'static,
+    ) -> JoinHandle<R> {
+        let done = Arc::new((Mutex::new(None::<std::thread::Result<R>>), Condvar::new()));
+        let done2 = done.clone();
+        self.shared.inject(
+            worker,
+            Box::new(move || {
+                fiber::with_executor(|e| {
+                    e.spawn(move || {
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                        let (m, cv) = &*done2;
+                        *m.lock().unwrap() = Some(r);
+                        cv.notify_all();
+                    });
+                });
+            }),
+        );
+        JoinHandle { done }
     }
 
     /// Run `f` as a fiber on `worker` and block the calling (non-runtime)
@@ -457,28 +703,7 @@ impl Runtime {
         worker: usize,
         f: impl FnOnce() -> R + Send + 'static,
     ) -> R {
-        let done = Arc::new((Mutex::new(None::<std::thread::Result<R>>), Condvar::new()));
-        let done2 = done.clone();
-        self.shared.inject(
-            worker,
-            Box::new(move |w| {
-                w.exec.spawn(move || {
-                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
-                    let (m, cv) = &*done2;
-                    *m.lock().unwrap() = Some(r);
-                    cv.notify_all();
-                });
-            }),
-        );
-        let (m, cv) = &*done;
-        let mut guard = m.lock().unwrap();
-        while guard.is_none() {
-            guard = cv.wait(guard).unwrap();
-        }
-        match guard.take().unwrap() {
-            Ok(r) => r,
-            Err(p) => std::panic::resume_unwind(p),
-        }
+        self.spawn_on_handle(worker, f).join()
     }
 
     /// Request shutdown and join all workers. Implied by `Drop`.
@@ -556,6 +781,28 @@ mod tests {
     }
 
     #[test]
+    fn spawn_on_handle_joins_with_result() {
+        let rt = Runtime::builder().workers(2).build();
+        let h = rt.spawn_on_handle(1, || 6 * 7);
+        assert_eq!(h.join(), 42);
+        let h = rt.spawn_on_handle(0, || "done".to_string());
+        while !h.is_finished() {
+            std::thread::yield_now();
+        }
+        assert_eq!(h.join(), "done");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn spawn_on_handle_propagates_panic() {
+        let rt = Runtime::builder().workers(1).build();
+        let h = rt.spawn_on_handle(0, || panic!("handled boom"));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.join()));
+        assert!(r.is_err());
+        rt.shutdown();
+    }
+
+    #[test]
     fn many_block_ons_across_workers() {
         let rt = Runtime::builder().workers(3).build();
         for i in 0..30u64 {
@@ -596,6 +843,38 @@ mod tests {
             acc
         });
         assert_eq!(v, 45);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn flush_policy_is_configurable() {
+        for policy in [FlushPolicy::Eager, FlushPolicy::Adaptive] {
+            let rt = Runtime::builder().workers(2).flush_policy(policy).build();
+            assert_eq!(rt.shared().flush_policy(), policy);
+            let v = rt.block_on(1, move || {
+                let ct = crate::trust::local_trustee().entrust(1u64);
+                ct.apply(|c| *c + 1)
+            });
+            assert_eq!(v, 2);
+            rt.shutdown();
+        }
+    }
+
+    #[test]
+    fn worker_metrics_accumulate() {
+        let rt = Runtime::builder().workers(2).build();
+        let ct = rt.block_on(0, || crate::trust::local_trustee().entrust(0u64));
+        let c2 = ct.clone();
+        rt.block_on(1, move || {
+            for _ in 0..64 {
+                c2.apply(|c| *c += 1);
+            }
+        });
+        let (flushes, occupancy) =
+            rt.block_on(1, || with_worker(|w| (w.flushes(), w.batch_occupancy())));
+        assert!(flushes > 0, "blocking applies must publish batches");
+        assert!(occupancy >= 1.0, "published batches carry >= 1 request");
+        drop(ct);
         rt.shutdown();
     }
 }

@@ -17,6 +17,7 @@ pub fn num_cpus() -> usize {
 pub fn pin_to_cpu(cpu: usize) -> bool {
     #[cfg(target_os = "linux")]
     {
+        use crate::util::sys as libc;
         let ncpu = num_cpus();
         let target = cpu % ncpu;
         unsafe {

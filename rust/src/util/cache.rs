@@ -5,7 +5,45 @@
 //! channel layout is explicitly designed around 64-byte cache lines and the
 //! cost of scanning ready flags (§5.3.1).
 
-pub use crossbeam_utils::CachePadded;
+/// Pads and aligns a value to 128 bytes (two cache lines, covering the
+/// adjacent-line prefetcher), so neighbouring values in an array never
+/// false-share. In-tree stand-in for `crossbeam_utils::CachePadded`,
+/// which is unavailable in the offline build environment.
+#[derive(Clone, Copy, Default, Debug)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> CachePadded<T> {
+        CachePadded::new(value)
+    }
+}
 
 /// One `pause` (x86) / spin-loop hint — the paper's stand-in for critical
 /// section work in the fetch-and-add benchmarks.

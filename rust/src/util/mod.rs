@@ -12,6 +12,8 @@
 //!   mean/variance, throughput formatting
 //! - [`cli`] — a small `--key value` argument parser
 //! - [`affinity`] — CPU pinning via `sched_setaffinity` (no-op fallback)
+//! - [`sys`] — raw C-library bindings (`mmap`, `sched_setaffinity`) so the
+//!   crate needs no external `libc` dependency
 //! - [`quickcheck`] — a miniature property-testing harness with shrinking
 //! - [`cache`] — cache-line padding, `pause`, prefetch helpers
 
@@ -21,6 +23,7 @@ pub mod cli;
 pub mod quickcheck;
 pub mod rng;
 pub mod stats;
+pub mod sys;
 pub mod zipf;
 
 pub use cache::{pause, pause_n, CachePadded};

@@ -1,0 +1,105 @@
+//! Minimal raw bindings to the platform C library for the few syscalls the
+//! crate needs (`mmap` fiber stacks, `sched_setaffinity` pinning).
+//!
+//! The offline build environment has no crates.io access, so instead of the
+//! `libc` crate we declare exactly the symbols we use. `std` already links
+//! against the C library, so these `extern "C"` declarations resolve with
+//! no extra build configuration. Linux-only, matching the fiber context
+//! switch (sysv64) this crate targets.
+
+#![allow(non_camel_case_types)]
+#![cfg(target_os = "linux")]
+
+pub use std::ffi::{c_int, c_long, c_void};
+
+pub type size_t = usize;
+pub type off_t = i64;
+pub type pid_t = i32;
+
+pub const PROT_NONE: c_int = 0x0;
+pub const PROT_READ: c_int = 0x1;
+pub const PROT_WRITE: c_int = 0x2;
+
+pub const MAP_PRIVATE: c_int = 0x02;
+pub const MAP_ANONYMOUS: c_int = 0x20;
+pub const MAP_STACK: c_int = 0x20000;
+
+pub const MAP_FAILED: *mut c_void = !0usize as *mut c_void;
+
+pub const _SC_PAGESIZE: c_int = 30;
+
+/// Linux `cpu_set_t`: a 1024-bit CPU mask.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct cpu_set_t {
+    bits: [u64; 16],
+}
+
+/// Clear every CPU in the set.
+#[allow(non_snake_case)]
+pub fn CPU_ZERO(set: &mut cpu_set_t) {
+    set.bits = [0; 16];
+}
+
+/// Add `cpu` to the set (out-of-range bits are ignored, like glibc).
+#[allow(non_snake_case)]
+pub fn CPU_SET(cpu: usize, set: &mut cpu_set_t) {
+    if cpu < 1024 {
+        set.bits[cpu / 64] |= 1u64 << (cpu % 64);
+    }
+}
+
+extern "C" {
+    pub fn mmap(
+        addr: *mut c_void,
+        len: size_t,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: off_t,
+    ) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+    pub fn mprotect(addr: *mut c_void, len: size_t, prot: c_int) -> c_int;
+    pub fn sysconf(name: c_int) -> c_long;
+    pub fn sched_setaffinity(pid: pid_t, cpusetsize: size_t, cpuset: *const cpu_set_t) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_size_sane() {
+        let sz = unsafe { sysconf(_SC_PAGESIZE) };
+        assert!(sz >= 4096, "page size {sz}");
+    }
+
+    #[test]
+    fn cpu_set_ops() {
+        let mut set: cpu_set_t = unsafe { std::mem::zeroed() };
+        CPU_ZERO(&mut set);
+        CPU_SET(0, &mut set);
+        CPU_SET(70, &mut set);
+        CPU_SET(4096, &mut set); // ignored, no panic
+        assert_eq!(set.bits[0], 1);
+        assert_eq!(set.bits[1], 1 << 6);
+    }
+
+    #[test]
+    fn mmap_roundtrip() {
+        unsafe {
+            let p = mmap(
+                std::ptr::null_mut(),
+                8192,
+                PROT_READ | PROT_WRITE,
+                MAP_PRIVATE | MAP_ANONYMOUS,
+                -1,
+                0,
+            );
+            assert!(p != MAP_FAILED);
+            *(p as *mut u8) = 0x5A;
+            assert_eq!(*(p as *const u8), 0x5A);
+            assert_eq!(munmap(p, 8192), 0);
+        }
+    }
+}

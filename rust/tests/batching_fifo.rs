@@ -1,0 +1,263 @@
+//! Deterministic interleaving tests for the adaptive-batching refactor:
+//! the ordering contract every layer above the slots relies on.
+//!
+//! The contract (DESIGN.md, "Flush policy and ordering contract"):
+//! *enqueued* is decoupled from *visible to the trustee*, but per-pair
+//! FIFO survives — the outbox is FIFO, `try_flush` packs front to back,
+//! the trustee applies records in batch order, and responses dispatch in
+//! the same order. The channel-level tests below drive client and trustee
+//! endpoints by hand on one thread, so every interleaving is exact and
+//! repeatable; the runtime-level tests check the same contract end to end
+//! under both flush policies.
+
+use std::rc::Rc;
+use trustee::channel::{
+    read_response, ClientEndpoint, FlushPolicy, RequestBuilder, ResponseWriter, SlotPair,
+    TrusteeEndpoint, FLUSH_RECORDS, HEAP_BACKPRESSURE_BYTES, MAX_INLINE_PAYLOAD,
+};
+use trustee::codec::{Wire, WireReader};
+use trustee::runtime::Runtime;
+use trustee::trust::local_trustee;
+
+/// Fetch-and-add thunk: add the env u64 to the property, respond with the
+/// pre-increment value (exposes service order on the response stream).
+unsafe fn fadd_thunk(env: *const u8, prop: *mut u8, _args: &[u8], out: &mut ResponseWriter) {
+    let delta = unsafe { env.cast::<u64>().read_unaligned() };
+    let p = prop.cast::<u64>();
+    let old = unsafe { *p };
+    unsafe { *p = old + delta };
+    out.write_value(&old);
+}
+
+/// Thunk with serialized args (drives the heap path when args are large).
+unsafe fn arg_len_thunk(_env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter) {
+    let mut r = WireReader::new(args);
+    let v = Vec::<u8>::read(&mut r).unwrap();
+    unsafe { *prop.cast::<u64>() += v.len() as u64 };
+    out.write_value(&(v.len() as u64));
+}
+
+fn frame_fadd(ep: &mut ClientEndpoint, prop: *mut u64, delta: u64) -> trustee::channel::PendingReq {
+    let buf = ep.take_buf();
+    RequestBuilder::build(buf, fadd_thunk, prop as *mut u8, &delta.to_le_bytes(), &[], false)
+}
+
+#[test]
+fn enqueued_is_not_visible_until_flush() {
+    // Interleaving: enqueue N -> serve (nothing) -> flush -> serve (all N).
+    let pair = SlotPair::default();
+    let mut client = ClientEndpoint::default();
+    let mut trustee = TrusteeEndpoint::default();
+    let mut counter: u64 = 0;
+
+    for _ in 0..5 {
+        let req = frame_fadd(&mut client, &mut counter, 1);
+        client.enqueue(req, Some(Box::new(|r| {
+            read_response::<u64>(r);
+        })));
+    }
+    assert_eq!(client.queued(), 5, "all five sit in the outbox");
+    // The trustee sees nothing before the flush: enqueued != visible.
+    assert_eq!(unsafe { trustee.serve(&pair) }, 0);
+    assert_eq!(counter, 0);
+
+    assert_eq!(client.try_flush(&pair), 5);
+    assert_eq!(unsafe { trustee.serve(&pair) }, 5);
+    assert_eq!(counter, 5);
+    assert_eq!(client.poll(&pair), 5);
+    assert_eq!(client.pending(), 0);
+}
+
+#[test]
+fn watermark_requests_flush_before_record_cap() {
+    // 32-byte fadd records hit the byte watermark (one slot's worth)
+    // before the record-count cap.
+    let mut client = ClientEndpoint::default();
+    let mut counter: u64 = 0;
+    let mut n = 0usize;
+    while !client.wants_flush() {
+        let req = frame_fadd(&mut client, &mut counter, 1);
+        client.enqueue(req, Some(Box::new(|r| {
+            read_response::<u64>(r);
+        })));
+        n += 1;
+        assert!(n <= FLUSH_RECORDS, "watermark never tripped");
+    }
+    assert!(n > 4, "watermark should allow meaningful accumulation, got {n}");
+    assert_eq!(client.backpressure_hits, 0, "byte watermark is not backpressure");
+
+    // Drain so the endpoint drops cleanly (completions are never run in
+    // this test; serve everything through a local pair).
+    let pair = SlotPair::default();
+    let mut trustee = TrusteeEndpoint::default();
+    while client.pending() > 0 {
+        client.try_flush(&pair);
+        unsafe { trustee.serve(&pair) };
+        client.poll(&pair);
+    }
+}
+
+#[test]
+fn heap_records_trigger_backpressure() {
+    // Records whose args exceed MAX_INLINE_PAYLOAD travel out-of-line;
+    // their in-slot footprint is fixed, so only the heap accounting can
+    // bound them.
+    let mut client = ClientEndpoint::default();
+    let mut acc: u64 = 0;
+    let args = trustee::codec::to_bytes(&vec![0xCDu8; MAX_INLINE_PAYLOAD + 1024]);
+    let mut n = 0usize;
+    while !client.wants_flush() {
+        let buf = client.take_buf();
+        let req = RequestBuilder::build(
+            buf,
+            arg_len_thunk,
+            &mut acc as *mut u64 as *mut u8,
+            &[],
+            &args,
+            false,
+        );
+        client.enqueue(req, Some(Box::new(|r| {
+            read_response::<u64>(r);
+        })));
+        n += 1;
+        assert!(n < 100_000, "backpressure never tripped");
+    }
+    assert!(client.over_heap_bound(), "only the heap bound can trip here");
+    assert_eq!(
+        client.backpressure_hits, 0,
+        "hits count forced publishes, not enqueues over the bound"
+    );
+    assert!(
+        n <= HEAP_BACKPRESSURE_BYTES / MAX_INLINE_PAYLOAD + 2,
+        "tripped far too late: {n} records"
+    );
+
+    let pair = SlotPair::default();
+    let mut trustee = TrusteeEndpoint::default();
+    while client.pending() > 0 {
+        client.try_flush(&pair);
+        unsafe { trustee.serve(&pair) };
+        client.poll(&pair);
+    }
+    assert!(
+        client.backpressure_hits >= 1,
+        "publishing while over the bound must count a backpressure hit"
+    );
+    assert_eq!(acc, (n as u64) * (MAX_INLINE_PAYLOAD as u64 + 1024));
+}
+
+#[test]
+fn fifo_preserved_across_lazy_batches() {
+    // 100 increments enqueued up front, published across several batches:
+    // responses (pre-increment values) must arrive in submission order —
+    // exactly 0,1,2,...,99 — proving both service order and dispatch
+    // order survive the decoupled flush.
+    let pair = SlotPair::default();
+    let mut client = ClientEndpoint::default();
+    let mut trustee = TrusteeEndpoint::default();
+    let mut counter: u64 = 0;
+
+    let order: Rc<std::cell::RefCell<Vec<u64>>> = Rc::new(std::cell::RefCell::new(Vec::new()));
+    for _ in 0..100 {
+        let o = order.clone();
+        let req = frame_fadd(&mut client, &mut counter, 1);
+        client.enqueue(
+            req,
+            Some(Box::new(move |r| o.borrow_mut().push(read_response::<u64>(r)))),
+        );
+    }
+    let mut batches = 0;
+    while client.pending() > 0 {
+        if client.try_flush(&pair) > 0 {
+            batches += 1;
+        }
+        unsafe { trustee.serve(&pair) };
+        client.poll(&pair);
+        assert!(batches < 1000, "no progress");
+    }
+    assert!(batches > 1, "100 records cannot fit one slot batch");
+    assert_eq!(*order.borrow(), (0..100).collect::<Vec<u64>>());
+    assert_eq!(counter, 100);
+}
+
+#[test]
+fn runtime_fifo_order_under_both_policies() {
+    // End-to-end: one client worker issues 300 apply_then increments with
+    // interleaved blocking applies; callback order must equal submission
+    // order under both the eager and the adaptive policy.
+    for policy in [FlushPolicy::Eager, FlushPolicy::Adaptive] {
+        let rt = Runtime::builder().workers(2).flush_policy(policy).build();
+        let prop = rt.block_on(0, || local_trustee().entrust(0u64));
+        let p2 = prop.clone();
+        let ordered = rt.block_on(1, move || {
+            let order: Rc<std::cell::RefCell<Vec<u64>>> =
+                Rc::new(std::cell::RefCell::new(Vec::new()));
+            for i in 0..300u64 {
+                let o = order.clone();
+                p2.apply_then(
+                    |c| {
+                        *c += 1;
+                        *c - 1 // pre-increment value == submission index
+                    },
+                    move |v| o.borrow_mut().push(v),
+                );
+                if i % 50 == 49 {
+                    // A blocking apply is a flush barrier: per-pair FIFO
+                    // means every response before it has dispatched.
+                    let seen = p2.apply(|c| *c);
+                    assert_eq!(seen, i + 1, "policy {policy:?}");
+                    assert_eq!(order.borrow().len() as u64, i + 1, "policy {policy:?}");
+                }
+            }
+            let final_order = order.borrow().clone();
+            final_order == (0..300).collect::<Vec<u64>>()
+        });
+        assert!(ordered, "responses out of order under {policy:?}");
+        drop(prop);
+        rt.shutdown();
+    }
+}
+
+#[test]
+fn adaptive_policy_batches_more_than_eager() {
+    // Deterministic single-thread model of one worker's scheduler: each
+    // "client phase" enqueues 8 requests; eager flushes (and the trustee,
+    // modelled as keeping up, serves) after every enqueue, adaptive
+    // flushes once at phase end. Every interleaving is explicit, so the
+    // occupancy numbers are exact: eager degenerates to 1 request/batch,
+    // adaptive packs the whole phase.
+    fn occupancy(eager: bool) -> f64 {
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut counter: u64 = 0;
+        let total = 256u64;
+        let mut enqueued = 0u64;
+        while enqueued < total || client.pending() > 0 {
+            for _ in 0..8 {
+                if enqueued == total {
+                    break;
+                }
+                let req = frame_fadd(&mut client, &mut counter, 1);
+                client.enqueue(req, Some(Box::new(|r| {
+                    read_response::<u64>(r);
+                })));
+                enqueued += 1;
+                if eager {
+                    client.try_flush(&pair);
+                    unsafe { trustee.serve(&pair) };
+                    client.poll(&pair);
+                }
+            }
+            client.try_flush(&pair); // the end-of-client-phase flush hook
+            unsafe { trustee.serve(&pair) };
+            client.poll(&pair);
+        }
+        assert_eq!(counter, total);
+        client.flushed_requests as f64 / client.batches as f64
+    }
+    let eager = occupancy(true);
+    let adaptive = occupancy(false);
+    assert!((eager - 1.0).abs() < f64::EPSILON, "eager occupancy {eager}");
+    assert!((adaptive - 8.0).abs() < f64::EPSILON, "adaptive occupancy {adaptive}");
+}

@@ -1,0 +1,144 @@
+//! Stress tests for the delegated-refcount ordering contract.
+//!
+//! The bug these provoke (fixed by the acked-clone protocol): `clone`'s
+//! `+1` used to travel fire-and-forget on the *cloner's* client→trustee
+//! slot pair, while the receiving thread's eventual `-1` travels on *its
+//! own* pair. Nothing ordered the two, so the `-1` could be served first,
+//! drive the count to zero, and reclaim the property while the cloned
+//! handle was alive — a use-after-free the moment the receiver touched it.
+//! The window was widest exactly when the cloner's edge already had a
+//! batch in flight (the `+1` then waited in the outbox), which the first
+//! test sets up on every round; under the adaptive flush policy a lazy
+//! `+1` would make it wider still. With acked clones the `+1` is applied
+//! before the handle can cross threads, so these runs are deterministic.
+
+use std::sync::mpsc;
+use trustee::channel::FlushPolicy;
+use trustee::runtime::{with_worker, Runtime};
+
+/// Receive from an mpsc channel inside a fiber without blocking the
+/// worker thread (yield lets the scheduler serve/poll between probes).
+fn fiber_recv<T>(rx: &mpsc::Receiver<T>) -> T {
+    loop {
+        match rx.try_recv() {
+            Ok(v) => return v,
+            Err(mpsc::TryRecvError::Empty) => trustee::fiber::yield_now(),
+            Err(mpsc::TryRecvError::Disconnected) => panic!("sender dropped"),
+        }
+    }
+}
+
+/// Wait until worker 0's registry is empty (decrements are asynchronous).
+fn wait_reclaimed(rt: &Runtime) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let live = rt.block_on(0, || with_worker(|w| w.registry.live));
+        if live == 0 {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "{live} properties leaked — a decrement overtook an increment"
+        );
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn increment_cannot_be_overtaken_by_remote_decrement() {
+    // The exact old interleaving, provoked every round:
+    //   worker 1: occupy the (1→0) edge, clone, hand off, drop original
+    //   worker 2: receive the clone, USE it, drop it
+    // Pre-fix, worker 2's -1 could be served while the +1 still sat
+    // behind the in-flight batch on worker 1's edge → count hit zero →
+    // reclaim → worker 2's apply touched freed memory.
+    let rt = Runtime::builder()
+        .workers(3)
+        .flush_policy(FlushPolicy::Adaptive)
+        .build();
+    for round in 0..200u64 {
+        let prop = rt.trustee(0).entrust(round);
+        let (tx, rx) = mpsc::channel();
+        let h1 = rt.spawn_on_handle(1, move || {
+            // Put a batch in flight on the (1→0) edge so an unacked +1
+            // would have to queue behind it.
+            prop.apply_forget(|_| {});
+            let handle = prop.clone(); // must be acked before the send
+            tx.send(handle).unwrap();
+            drop(prop); // -1 rides a later batch on this edge
+        });
+        let h2 = rt.spawn_on_handle(2, move || {
+            let handle = fiber_recv(&rx);
+            // Use-after-free detector: pre-fix this read raced reclaim.
+            let v = handle.apply(|x| *x);
+            assert_eq!(v, round);
+            drop(handle); // the final -1; the property reclaims cleanly
+        });
+        h1.join();
+        h2.join();
+    }
+    wait_reclaimed(&rt);
+    rt.shutdown();
+}
+
+#[test]
+fn clone_storm_across_workers_balances_exactly() {
+    // Many concurrent cloners and droppers of one property: every clone
+    // acked, every drop asynchronous, final count must return to zero
+    // exactly once the root handle drops.
+    let rt = Runtime::builder().workers(4).build();
+    let root = rt.trustee(0).entrust(0u64);
+    let mut handles = Vec::new();
+    for w in 1..4 {
+        let r = root.clone();
+        handles.push(rt.spawn_on_handle(w, move || {
+            for i in 0..100u64 {
+                let c = r.clone();
+                if i % 3 == 0 {
+                    c.apply(|x| *x += 1);
+                }
+                drop(c);
+            }
+            drop(r);
+        }));
+    }
+    for h in handles {
+        h.join();
+    }
+    let total = {
+        let r = root.clone();
+        rt.block_on(1, move || r.apply(|x| *x))
+    };
+    assert_eq!(total, 3 * 34, "every third clone incremented (i = 0,3,..,99)");
+    drop(root);
+    wait_reclaimed(&rt);
+    rt.shutdown();
+}
+
+#[test]
+fn handoff_chain_through_every_worker() {
+    // A single handle relayed 1 → 2 → 3 → 1 ... with the previous holder
+    // dropping right after each send: at every hop the acked +1 must beat
+    // the previous holder's -1, whatever edges they ride.
+    let rt = Runtime::builder().workers(4).build();
+    let prop = rt.trustee(0).entrust(7u64);
+    let mut current = prop.clone();
+    drop(prop);
+    for hop in 0..30usize {
+        let w = 1 + (hop % 3);
+        let (tx, rx) = mpsc::channel();
+        let moved = current;
+        let h = rt.spawn_on_handle(w, move || {
+            let mine = moved.clone();
+            drop(moved);
+            let v = mine.apply(|x| *x);
+            assert_eq!(v, 7);
+            tx.send(mine).unwrap();
+        });
+        h.join();
+        current = rx.recv().unwrap();
+    }
+    drop(current);
+    wait_reclaimed(&rt);
+    rt.shutdown();
+}

@@ -4,6 +4,10 @@
 //!
 //! Skips (with a loud message) when artifacts have not been built, so
 //! `cargo test` works standalone; `make test` always builds them first.
+//! The whole file is gated on the `xla` feature (the PJRT bridge needs the
+//! externally-vendored `xla` crate — see DESIGN.md).
+
+#![cfg(feature = "xla")]
 
 use trustee::runtime::xla_exec::{BatchEngine, XlaExec};
 
