@@ -37,6 +37,7 @@ fn main() {
             dedicated,
             backend,
             addr: "127.0.0.1:0".into(),
+            ..Default::default()
         });
         server.prefill(keys, 16);
         let stats = run_load(&LoadConfig {

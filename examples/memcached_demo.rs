@@ -26,6 +26,7 @@ fn main() {
             dedicated: 0,
             engine,
             addr: "127.0.0.1:0".into(),
+            ..Default::default()
         });
         server.prefill(keys, 16);
         let stats = run_memtier(&MemtierConfig {

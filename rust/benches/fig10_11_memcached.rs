@@ -17,6 +17,7 @@ fn run_one(engine: EngineKind, keys: u64, dist: &str, write_pct: u32, ops: u64) 
         dedicated: 0,
         engine,
         addr: "127.0.0.1:0".into(),
+        ..Default::default()
     });
     server.prefill(keys, 16);
     let stats = run_memtier(&MemtierConfig {

@@ -1,0 +1,108 @@
+//! E15 — idle-connection overhead: per-op latency on one active KV
+//! connection while N idle connections sit open.
+//!
+//! Under `NetPolicy::BusyPoll` every idle connection fiber is re-run (and
+//! re-`read()`s its socket) on every scheduler tick, so idle connections
+//! steal serve-phase capacity from the trustees and per-op latency
+//! degrades with connection count. Under `NetPolicy::Epoll` idle fibers
+//! are parked on fd readiness in the per-worker reactor — O(ready fds)
+//! per tick — so the active connection's latency should stay within ~2x
+//! of the 0-idle baseline regardless of how many connections sit idle.
+//!
+//! Usage: cargo bench --bench net_idle_conns -- [--ops N] [--idle N]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use trustee::bench::print_table;
+use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig, NetPolicy};
+use trustee::util::cli::Args;
+use trustee::util::stats::fmt_ns;
+
+/// Synchronous GET round trip on a blocking socket.
+fn sync_get(c: &mut TcpStream, id: u64, key: &[u8]) {
+    let mut buf = Vec::new();
+    proto::write_request(&mut buf, id, proto::OP_GET, key, &[]);
+    c.write_all(&buf).unwrap();
+    let mut cursor = proto::FrameCursor::new();
+    let mut rbuf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(r) = cursor.next_response(&rbuf).unwrap() {
+            assert_eq!(r.id, id);
+            return;
+        }
+        let n = c.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed");
+        rbuf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Mean per-op latency (ns) of one active connection with `idle`
+/// additional connections sitting open and silent.
+fn per_op_ns(net: NetPolicy, idle: usize, ops: u64) -> f64 {
+    let server = KvServer::start(KvServerConfig {
+        workers: 2,
+        backend: BackendKind::Trust { shards: 2 },
+        net,
+        ..Default::default()
+    });
+    server.prefill(64, 16);
+    let _idle_conns: Vec<TcpStream> = (0..idle)
+        .map(|_| TcpStream::connect(server.addr()).unwrap())
+        .collect();
+    let mut active = TcpStream::connect(server.addr()).unwrap();
+    active.set_nodelay(true).ok();
+    // Let the idle fibers spawn and reach their steady state (parked under
+    // Epoll, yield-looping under BusyPoll).
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    for i in 0..200u64 {
+        sync_get(&mut active, i, &trustee::kvstore::key_bytes(i % 64));
+    }
+    let t0 = std::time::Instant::now();
+    for i in 0..ops {
+        sync_get(&mut active, 1000 + i, &trustee::kvstore::key_bytes(i % 64));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    drop(active);
+    server.stop();
+    elapsed / ops as f64 * 1e9
+}
+
+fn main() {
+    let args = Args::from_env();
+    let ops: u64 = args.get("ops", 3_000);
+    let idle: usize = args.get("idle", 64);
+
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    for net in [NetPolicy::BusyPoll, NetPolicy::Epoll] {
+        let base = per_op_ns(net, 0, ops);
+        let loaded = per_op_ns(net, idle, ops);
+        let ratio = loaded / base;
+        ratios.push((net, ratio));
+        rows.push(vec![
+            net.label().into(),
+            "0".into(),
+            fmt_ns(base),
+            String::new(),
+        ]);
+        rows.push(vec![
+            net.label().into(),
+            idle.to_string(),
+            fmt_ns(loaded),
+            format!("{ratio:.2}x vs 0-idle"),
+        ]);
+        eprintln!("done {}", net.label());
+    }
+    print_table(
+        &format!(
+            "E15: per-op latency, 1 active + N idle connections (acceptance: \
+             epoll within 2x of its 0-idle baseline at {idle} idle; busy-poll degrades)"
+        ),
+        &["policy", "idle conns", "per-op latency", "degradation"],
+        &rows,
+    );
+    for (net, ratio) in ratios {
+        println!("{}: {idle}-idle/0-idle latency ratio = {ratio:.2}x", net.label());
+    }
+}

@@ -649,6 +649,69 @@ impl TrusteeEndpoint {
         served
     }
 
+    /// Serve a pending batch only if *every* record's thunk is admitted by
+    /// `admit`; otherwise apply nothing and return 0, leaving the batch for
+    /// a later unconditional [`TrusteeEndpoint::serve`].
+    ///
+    /// This is the clone-ack spin's cycle breaker: the trust layer admits
+    /// only its refcount-increment thunks, which touch nothing but the
+    /// property header, so such a batch is safe to apply re-entrantly while
+    /// a delegated closure is still on the stack (see
+    /// `runtime::serve_rc_increment_batches`). The pre-scan walks record
+    /// headers without taking ownership of anything — heap payloads stay
+    /// intact for the eventual real serve when the batch is rejected.
+    ///
+    /// # Safety
+    /// Same contract as [`TrusteeEndpoint::serve`].
+    pub unsafe fn serve_filtered(&mut self, pair: &SlotPair, admit: fn(u64) -> bool) -> usize {
+        let h = pair.request.header_acquire();
+        if h.toggle() == self.last_served {
+            return 0;
+        }
+        let count = h.count();
+        // SAFETY: client published this batch and won't touch the payload
+        // until we publish the response.
+        let (p, o) = unsafe { pair.request.payload() };
+        let mut region: &[u8] = &p[..h.primary_len()];
+        let mut cur = 0usize;
+        let mut in_overflow = false;
+        let mut seen = 0usize;
+        while seen < count {
+            if cur >= region.len() {
+                if in_overflow {
+                    // Malformed count: let the real serve's assert report it.
+                    break;
+                }
+                region = &o[..h.overflow_len()];
+                cur = 0;
+                in_overflow = true;
+                continue;
+            }
+            let rec = &region[cur..];
+            let thunk_raw = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+            if !admit(thunk_raw) {
+                return 0;
+            }
+            cur += Self::record_len(rec);
+            cur = (cur + 7) & !7;
+            seen += 1;
+        }
+        // Every record admitted: serve the batch for real.
+        unsafe { self.serve(pair) }
+    }
+
+    /// Unpadded length of the record starting at `rec[0]` (header inspection
+    /// only; takes no ownership).
+    fn record_len(rec: &[u8]) -> usize {
+        let flags = u32::from_le_bytes(rec[16..20].try_into().unwrap());
+        if flags & FLAG_HEAP != 0 {
+            return 40;
+        }
+        let env_len = u16::from_le_bytes(rec[20..22].try_into().unwrap()) as usize;
+        let arg_len = u16::from_le_bytes(rec[22..24].try_into().unwrap()) as usize;
+        RECORD_HEADER + env_len + arg_len
+    }
+
     /// Apply a single record starting at `rec[0]`; returns its unpadded
     /// length within the region.
     unsafe fn apply_record(rec: &[u8], rw: &mut ResponseWriter) -> usize {
@@ -769,6 +832,58 @@ mod tests {
         let got = order.borrow().clone();
         // Responses must arrive in submission order: old values 0..9.
         assert_eq!(got, (0..10).map(|i| (i, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serve_filtered_admits_all_or_nothing() {
+        fn admit_fadd(thunk_raw: u64) -> bool {
+            thunk_raw == (fadd_thunk as Thunk) as usize as u64
+        }
+        fn admit_none(_: u64) -> bool {
+            false
+        }
+
+        let pair = SlotPair::default();
+        let mut client = ClientEndpoint::default();
+        let mut trustee = TrusteeEndpoint::default();
+        let mut counter: u64 = 0;
+
+        // Batch 1: a mixed batch (fadd + fire-and-forget add) is rejected
+        // by a filter that admits only fadd, then served unconditionally.
+        let req = frame_fadd(&mut client, &mut counter, 1);
+        client.enqueue(req, Some(Box::new(|r| {
+            read_response::<u64>(r);
+        })));
+        let buf = client.take_buf();
+        let req = RequestBuilder::build(
+            buf,
+            add_thunk,
+            &mut counter as *mut u64 as *mut u8,
+            &2u64.to_le_bytes(),
+            &[],
+            true,
+        );
+        client.enqueue(req, None);
+        client.try_flush(&pair);
+        assert_eq!(unsafe { trustee.serve_filtered(&pair, admit_fadd) }, 0);
+        assert_eq!(counter, 0, "rejected batch must apply nothing");
+        assert_eq!(unsafe { trustee.serve(&pair) }, 2);
+        assert_eq!(counter, 3);
+        assert_eq!(client.poll(&pair), 2);
+
+        // Batch 2: a uniform fadd batch passes the filter and is served.
+        for _ in 0..3 {
+            let req = frame_fadd(&mut client, &mut counter, 10);
+            client.enqueue(req, Some(Box::new(|r| {
+                read_response::<u64>(r);
+            })));
+        }
+        client.try_flush(&pair);
+        assert_eq!(unsafe { trustee.serve_filtered(&pair, admit_none) }, 0);
+        assert_eq!(unsafe { trustee.serve_filtered(&pair, admit_fadd) }, 3);
+        assert_eq!(counter, 33);
+        assert_eq!(client.poll(&pair), 3);
+        assert_eq!(client.pending(), 0);
     }
 
     #[test]

@@ -241,6 +241,26 @@ impl Executor {
         self.ready.push_back(id);
     }
 
+    /// Make `id` runnable again if — and only if — it is currently parked;
+    /// returns whether a resume happened. Wake sources that may race with a
+    /// fiber's completion through id reuse (the fd reactor's shutdown
+    /// sweep) use this defensive variant instead of [`Executor::resume`].
+    pub fn resume_if_parked(&mut self, id: FiberId) -> bool {
+        match self.fibers.get_mut(id).and_then(|f| f.as_mut()) {
+            Some(f) if f.state == State::Parked => {
+                f.state = State::Ready;
+                self.ready.push_back(id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Fibers currently parked (live, but neither ready nor running).
+    pub fn parked(&self) -> usize {
+        self.live - self.ready.len() - usize::from(self.current.is_some())
+    }
+
     /// Run one ready fiber until it suspends, yields, or completes.
     /// Returns false if no fiber was ready. Must be called from the
     /// scheduler stack (never from inside a fiber).
@@ -393,6 +413,24 @@ mod tests {
             exec.run_until_idle();
             assert_eq!(steps.get(), 2);
             assert_eq!(exec.live(), 0);
+        });
+    }
+
+    #[test]
+    fn resume_if_parked_is_safe_on_any_id() {
+        with_exec(|exec| {
+            let parked: Rc<Cell<Option<FiberId>>> = Rc::new(Cell::new(None));
+            let p = parked.clone();
+            exec.spawn(move || suspend(|id| p.set(Some(id))));
+            exec.run_until_idle();
+            let id = parked.get().unwrap();
+            assert_eq!(exec.parked(), 1);
+            assert!(exec.resume_if_parked(id), "parked fiber resumes");
+            assert!(!exec.resume_if_parked(id), "already ready: no-op");
+            exec.run_until_idle();
+            assert!(!exec.resume_if_parked(id), "completed fiber: no-op");
+            assert!(!exec.resume_if_parked(9999), "unknown id: no-op");
+            assert_eq!(exec.parked(), 0);
         });
     }
 

@@ -130,7 +130,10 @@ fn run_one_connection(cfg: &LoadConfig, tid: u64) -> (u64, LatencyHist, u64, u64
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
             Err(e) => panic!("read: {e}"),
         }
-        while let Some(resp) = cursor.next_response(&inbuf) {
+        while let Some(resp) = cursor
+            .next_response(&inbuf)
+            .expect("malformed response from server")
+        {
             let t0 = in_flight.remove(&resp.id).expect("unexpected response id");
             hist.record(t0.elapsed().as_nanos() as u64);
             if resp.status == proto::ST_OK {

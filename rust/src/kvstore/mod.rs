@@ -17,4 +17,5 @@ pub mod server;
 
 pub use backend::{AsyncKv, BackendKind, TrustKv};
 pub use client::{key_bytes, run_load, LoadConfig, LoadStats};
+pub use netfiber::NetPolicy;
 pub use server::{KvServer, KvServerConfig};

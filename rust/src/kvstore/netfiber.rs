@@ -1,10 +1,73 @@
-//! Non-blocking socket helpers for fibers: a connection fiber reads and
-//! writes without ever blocking its worker thread, yielding to the fiber
-//! scheduler (which runs trustee work and other connections) whenever the
-//! socket has no progress to offer.
+//! Non-blocking socket helpers for fibers, shared by the KV and
+//! mini-memcached servers: a connection fiber reads and writes without
+//! ever blocking its worker thread. What happens when the socket has no
+//! progress to offer is the [`NetPolicy`]:
+//!
+//! - [`NetPolicy::BusyPoll`] — the original yield loop: the fiber yields
+//!   to the scheduler and is re-run every tick, re-`read()`ing its socket
+//!   each time. Idle connections cost O(connections) per tick.
+//! - [`NetPolicy::Epoll`] — the fiber parks on its fd in the worker's
+//!   readiness reactor ([`crate::runtime::reactor`]) and is woken only
+//!   when the fd becomes readable/writable. Idle connections cost
+//!   O(ready fds) per tick, so they no longer steal serve-phase capacity
+//!   from the trustees (paper §6.3/§7's saturation assumption).
 
+use crate::fiber;
+use crate::runtime::reactor;
 use std::io::{ErrorKind, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Cap on unparsed receive-buffer backlog: a connection stops reading
+/// (applies TCP backpressure) rather than buffering a hostile or runaway
+/// pipeline without bound. Must exceed `proto::MAX_FRAME_LEN` + one frame
+/// header so any single legal frame can always complete.
+pub const MAX_INBUF: usize = (1 << 20) + (1 << 16);
+
+/// How a connection fiber waits for socket progress.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NetPolicy {
+    /// Re-poll the socket every scheduler tick (pre-reactor behaviour,
+    /// kept for A/B comparison — bench E15).
+    BusyPoll,
+    /// Park on fd readiness in the per-worker epoll reactor.
+    #[default]
+    Epoll,
+}
+
+impl NetPolicy {
+    /// Parse a CLI spec (`busy` | `epoll`).
+    pub fn from_spec(s: &str) -> NetPolicy {
+        match s {
+            "busy" | "busypoll" | "busy-poll" => NetPolicy::BusyPoll,
+            "epoll" => NetPolicy::Epoll,
+            other => panic!("unknown net policy {other:?} (want busy|epoll)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetPolicy::BusyPoll => "busy-poll",
+            NetPolicy::Epoll => "epoll",
+        }
+    }
+}
+
+/// Wait until `fd` may have progress to offer: one scheduler yield under
+/// [`NetPolicy::BusyPoll`], a park on fd readiness (readable when
+/// `want_read`, writable when `want_write`) under [`NetPolicy::Epoll`].
+/// Wake-ups may be spurious either way — callers re-check their socket and
+/// loop. A connection that will no longer read (poisoned / half-closed)
+/// must pass `want_read: false` so stale inbound bytes cannot wake-storm
+/// it.
+pub fn net_wait(policy: NetPolicy, fd: i32, want_read: bool, want_write: bool) {
+    match policy {
+        NetPolicy::BusyPoll => fiber::yield_now(),
+        NetPolicy::Epoll => reactor::wait_fd(fd, want_read, want_write),
+    }
+}
 
 /// Outcome of one read attempt.
 pub enum ReadOutcome {
@@ -16,7 +79,7 @@ pub enum ReadOutcome {
     Closed,
 }
 
-/// Read whatever is available into `buf` (append).
+/// Read whatever is available into `buf` (append), one chunk.
 pub fn read_available(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
     let mut chunk = [0u8; 16 * 1024];
     match stream.read(&mut chunk) {
@@ -29,6 +92,36 @@ pub fn read_available(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome 
             ReadOutcome::WouldBlock
         }
         Err(_) => ReadOutcome::Closed,
+    }
+}
+
+/// Drain the socket into `buf` until it would block, the peer closes, or
+/// roughly `max_bytes` were read this burst (fairness bound: a firehose
+/// peer must not monopolize the fiber's worker). EOF/error after some data
+/// reports the data first; the sticky condition resurfaces on the next
+/// call.
+pub fn read_burst(stream: &mut TcpStream, buf: &mut Vec<u8>, max_bytes: usize) -> ReadOutcome {
+    let mut total = 0usize;
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return if total > 0 { ReadOutcome::Data(total) } else { ReadOutcome::Closed };
+            }
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                total += n;
+                if total >= max_bytes {
+                    return ReadOutcome::Data(total);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted => {
+                return if total > 0 { ReadOutcome::Data(total) } else { ReadOutcome::WouldBlock };
+            }
+            Err(_) => {
+                return if total > 0 { ReadOutcome::Data(total) } else { ReadOutcome::Closed };
+            }
+        }
     }
 }
 
@@ -53,10 +146,133 @@ pub fn write_pending(stream: &mut TcpStream, buf: &mut Vec<u8>, cursor: &mut usi
     true
 }
 
+/// Validate a server's worker topology before any runtime is built:
+/// misconfigurations that used to die on internal asserts after worker
+/// threads were already spawned report here as descriptive errors.
+pub fn validate_topology(workers: usize, dedicated: usize) -> Result<(), String> {
+    if workers == 0 {
+        return Err("workers must be >= 1".into());
+    }
+    if dedicated >= workers {
+        return Err(format!(
+            "dedicated trustees ({dedicated}) must be fewer than workers ({workers}): \
+             at least one non-dedicated socket worker is required to host connection fibers"
+        ));
+    }
+    Ok(())
+}
+
+/// Build the accepted-stream dispatcher shared by the KV and memcached
+/// servers: round-robin each new connection onto a socket worker and
+/// inject a job that spawns its connection fiber there. `make_fiber`
+/// turns the stream into the per-connection fiber body (where each server
+/// closes over its backend/engine, counters, stop flag, and net policy).
+pub fn round_robin_dispatch(
+    shared: Arc<crate::runtime::Shared>,
+    socket_workers: Vec<usize>,
+    mut make_fiber: impl FnMut(TcpStream) -> Box<dyn FnOnce() + Send + 'static> + Send + 'static,
+) -> impl FnMut(TcpStream) + Send + 'static {
+    let mut next = 0usize;
+    move |stream: TcpStream| {
+        let worker = socket_workers[next % socket_workers.len()];
+        next += 1;
+        let fiber_body = make_fiber(stream);
+        shared.inject(
+            worker,
+            Box::new(move || {
+                fiber::with_executor(|e| {
+                    e.spawn(fiber_body);
+                });
+            }),
+        );
+    }
+}
+
+/// Accept-loop *fiber* body (the [`NetPolicy::Epoll`] replacement for the
+/// dedicated 200 µs sleep-poll accept thread): accepts until the listener
+/// would block, hands each stream to `dispatch`, then parks on listener
+/// readability. Exits only when `stop` is set — the runtime's shutdown
+/// sweep wakes the park, so setting `stop` before `Runtime::shutdown()`
+/// is enough to terminate it. Transient accept errors (ECONNABORTED, fd
+/// exhaustion under a connection flood, EINTR) must NOT kill the
+/// acceptor: the listener would be dead forever once the flood passed, so
+/// every error path yields and retries.
+pub fn accept_fiber(
+    listener: TcpListener,
+    policy: NetPolicy,
+    stop: Arc<AtomicBool>,
+    mut dispatch: impl FnMut(TcpStream),
+) {
+    let fd = listener.as_raw_fd();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => dispatch(stream),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => net_wait(policy, fd, true, false),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            // EMFILE/ENFILE/ECONNABORTED/…: back off a fiber slice and
+            // retry. The pending backlog keeps the fd readable, so under
+            // Epoll a park would wake right back — yield instead.
+            Err(_) => fiber::yield_now(),
+        }
+    }
+}
+
+/// Start the accept loop for `policy`: an fd-parked fiber on `worker`
+/// under [`NetPolicy::Epoll`] (no thread), or the legacy dedicated
+/// 200 µs sleep-poll thread under [`NetPolicy::BusyPoll`] (returned for
+/// joining at stop). Shared by the KV and memcached servers.
+pub fn start_acceptor(
+    policy: NetPolicy,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    shared: &Arc<crate::runtime::Shared>,
+    worker: usize,
+    mut dispatch: impl FnMut(TcpStream) + Send + 'static,
+    thread_name: &str,
+) -> Result<Option<std::thread::JoinHandle<()>>, String> {
+    match policy {
+        NetPolicy::Epoll => {
+            shared.inject(
+                worker,
+                Box::new(move || {
+                    fiber::with_executor(|e| {
+                        e.spawn(move || accept_fiber(listener, policy, stop, dispatch));
+                    });
+                }),
+            );
+            Ok(None)
+        }
+        NetPolicy::BusyPoll => {
+            let handle = std::thread::Builder::new()
+                .name(thread_name.into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((stream, _peer)) => dispatch(stream),
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                                std::thread::sleep(std::time::Duration::from_micros(200));
+                            }
+                            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                            // Transient (fd exhaustion, aborted handshake):
+                            // never kill the acceptor; retry after a pause.
+                            Err(_) => {
+                                std::thread::sleep(std::time::Duration::from_millis(1));
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| format!("spawn acceptor: {e}"))?;
+            Ok(Some(handle))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::net::TcpListener;
 
     #[test]
     fn echo_over_nonblocking_pair() {
@@ -89,5 +305,53 @@ mod tests {
         assert_eq!(&back, b"hello fiber net");
         drop(c);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn read_burst_drains_until_wouldblock() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut c = TcpStream::connect(addr).unwrap();
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_nonblocking(true).unwrap();
+
+        let payload = vec![0x5Au8; 100_000];
+        c.write_all(&payload).unwrap();
+        c.flush().unwrap();
+        // Give loopback delivery a moment, then burst-read with a bound.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut buf = Vec::new();
+        let mut got = 0usize;
+        loop {
+            match read_burst(&mut s, &mut buf, 32 * 1024) {
+                ReadOutcome::Data(n) => {
+                    assert!(n >= 1);
+                    got += n;
+                    if got >= payload.len() {
+                        break;
+                    }
+                }
+                ReadOutcome::WouldBlock => std::thread::sleep(std::time::Duration::from_millis(1)),
+                ReadOutcome::Closed => panic!("peer still open"),
+            }
+        }
+        assert_eq!(buf, payload);
+        // Peer closes: burst now reports Closed.
+        drop(c);
+        loop {
+            match read_burst(&mut s, &mut buf, 1024) {
+                ReadOutcome::Closed => break,
+                ReadOutcome::WouldBlock => std::thread::sleep(std::time::Duration::from_millis(1)),
+                ReadOutcome::Data(_) => panic!("no more data expected"),
+            }
+        }
+    }
+
+    #[test]
+    fn net_policy_specs_parse() {
+        assert_eq!(NetPolicy::from_spec("busy"), NetPolicy::BusyPoll);
+        assert_eq!(NetPolicy::from_spec("epoll"), NetPolicy::Epoll);
+        assert_eq!(NetPolicy::default(), NetPolicy::Epoll);
+        assert_eq!(NetPolicy::BusyPoll.label(), "busy-poll");
     }
 }

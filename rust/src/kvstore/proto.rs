@@ -10,7 +10,12 @@
 //! ```
 //!
 //! `frame_len` counts the bytes after itself. Parsing is incremental over a
-//! growable buffer (sockets deliver partial frames).
+//! growable buffer (sockets deliver partial frames), and **total**: a
+//! malformed or hostile byte stream yields [`ProtoError`], never a panic —
+//! the server must survive arbitrary client bytes (ROADMAP's
+//! heavy-traffic north star). [`MAX_FRAME_LEN`] bounds the declared frame
+//! length up front so a hostile 4 GiB `frame_len` cannot balloon the
+//! receive buffer while the parser "waits" for the rest of the frame.
 
 pub const OP_GET: u8 = 0;
 pub const OP_PUT: u8 = 1;
@@ -18,6 +23,37 @@ pub const OP_DEL: u8 = 2;
 
 pub const ST_OK: u8 = 0;
 pub const ST_NOT_FOUND: u8 = 1;
+/// The request was syntactically valid framing but semantically bad
+/// (unknown op). The server answers with this status and closes.
+pub const ST_BAD_REQUEST: u8 = 2;
+
+/// Hard ceiling on `frame_len`. Generous for the workloads here (64 KiB
+/// keys + values up to ~1 MiB) while keeping a hostile length field from
+/// committing the server to gigabytes of buffering.
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+
+/// A malformed frame. The stream is not trustworthy past this point:
+/// servers respond/close, clients bail out.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Declared `frame_len` exceeds [`MAX_FRAME_LEN`].
+    FrameTooLarge { frame_len: usize },
+    /// Frame body does not match its declared lengths.
+    Malformed { reason: &'static str },
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::FrameTooLarge { frame_len } => {
+                write!(f, "frame_len {frame_len} exceeds MAX_FRAME_LEN {MAX_FRAME_LEN}")
+            }
+            ProtoError::Malformed { reason } => write!(f, "malformed frame: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
@@ -58,6 +94,12 @@ pub fn write_response(out: &mut Vec<u8>, id: u64, status: u8, val: &[u8]) {
 
 /// Incremental frame scanner over a receive buffer. `consumed` is advanced
 /// past fully parsed frames; callers compact the buffer when convenient.
+///
+/// Totality: `Ok(None)` means "wait for more bytes", `Err` means the
+/// stream is malformed. A [`ProtoError::Malformed`] frame *was* consumed,
+/// so a tolerant caller may keep scanning (re-sync at the next frame
+/// boundary); [`ProtoError::FrameTooLarge`] consumes nothing and repeats —
+/// the only safe continuation is closing the connection.
 pub struct FrameCursor {
     pub consumed: usize,
 }
@@ -67,43 +109,65 @@ impl FrameCursor {
         FrameCursor { consumed: 0 }
     }
 
-    fn next_frame<'a>(&mut self, buf: &'a [u8]) -> Option<&'a [u8]> {
+    fn next_frame<'a>(&mut self, buf: &'a [u8]) -> Result<Option<&'a [u8]>, ProtoError> {
         let rest = &buf[self.consumed..];
         if rest.len() < 4 {
-            return None;
+            return Ok(None);
         }
         let frame_len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+        if frame_len > MAX_FRAME_LEN {
+            // Reject *before* waiting for the body: a hostile length must
+            // not commit us to buffering it.
+            return Err(ProtoError::FrameTooLarge { frame_len });
+        }
         if rest.len() < 4 + frame_len {
-            return None;
+            return Ok(None);
         }
         let frame = &rest[4..4 + frame_len];
         self.consumed += 4 + frame_len;
-        Some(frame)
+        Ok(Some(frame))
     }
 
     /// Parse the next complete request, if any.
-    pub fn next_request(&mut self, buf: &[u8]) -> Option<Request> {
-        let f = self.next_frame(buf)?;
-        assert!(f.len() >= 15, "malformed request frame");
+    pub fn next_request(&mut self, buf: &[u8]) -> Result<Option<Request>, ProtoError> {
+        let Some(f) = self.next_frame(buf)? else {
+            return Ok(None);
+        };
+        if f.len() < 15 {
+            return Err(ProtoError::Malformed { reason: "request frame shorter than header" });
+        }
         let id = u64::from_le_bytes(f[0..8].try_into().unwrap());
         let op = f[8];
         let key_len = u16::from_le_bytes(f[9..11].try_into().unwrap()) as usize;
-        let key = f[11..11 + key_len].to_vec();
+        let Some(body_len) = f.len().checked_sub(15 + key_len) else {
+            return Err(ProtoError::Malformed { reason: "key_len exceeds frame body" });
+        };
         let off = 11 + key_len;
         let val_len = u32::from_le_bytes(f[off..off + 4].try_into().unwrap()) as usize;
-        let val = f[off + 4..off + 4 + val_len].to_vec();
-        Some(Request { id, op, key, val })
+        if val_len != body_len {
+            return Err(ProtoError::Malformed { reason: "val_len disagrees with frame_len" });
+        }
+        let key = f[11..off].to_vec();
+        let val = f[off + 4..].to_vec();
+        Ok(Some(Request { id, op, key, val }))
     }
 
     /// Parse the next complete response, if any.
-    pub fn next_response(&mut self, buf: &[u8]) -> Option<Response> {
-        let f = self.next_frame(buf)?;
-        assert!(f.len() >= 13, "malformed response frame");
+    pub fn next_response(&mut self, buf: &[u8]) -> Result<Option<Response>, ProtoError> {
+        let Some(f) = self.next_frame(buf)? else {
+            return Ok(None);
+        };
+        if f.len() < 13 {
+            return Err(ProtoError::Malformed { reason: "response frame shorter than header" });
+        }
         let id = u64::from_le_bytes(f[0..8].try_into().unwrap());
         let status = f[8];
         let val_len = u32::from_le_bytes(f[9..13].try_into().unwrap()) as usize;
-        let val = f[13..13 + val_len].to_vec();
-        Some(Response { id, status, val })
+        if val_len != f.len() - 13 {
+            return Err(ProtoError::Malformed { reason: "val_len disagrees with frame_len" });
+        }
+        let val = f[13..].to_vec();
+        Ok(Some(Response { id, status, val }))
     }
 }
 
@@ -131,10 +195,10 @@ mod tests {
         let mut buf = Vec::new();
         write_request(&mut buf, 7, OP_PUT, b"key1", b"value-bytes");
         let mut c = FrameCursor::new();
-        let r = c.next_request(&buf).unwrap();
+        let r = c.next_request(&buf).unwrap().unwrap();
         assert_eq!(r, Request { id: 7, op: OP_PUT, key: b"key1".to_vec(), val: b"value-bytes".to_vec() });
         assert_eq!(c.consumed, buf.len());
-        assert!(c.next_request(&buf).is_none());
+        assert!(c.next_request(&buf).unwrap().is_none());
     }
 
     #[test]
@@ -143,8 +207,8 @@ mod tests {
         write_response(&mut buf, 9, ST_OK, b"v");
         write_response(&mut buf, 10, ST_NOT_FOUND, b"");
         let mut c = FrameCursor::new();
-        assert_eq!(c.next_response(&buf).unwrap().id, 9);
-        let r2 = c.next_response(&buf).unwrap();
+        assert_eq!(c.next_response(&buf).unwrap().unwrap().id, 9);
+        let r2 = c.next_response(&buf).unwrap().unwrap();
         assert_eq!((r2.id, r2.status), (10, ST_NOT_FOUND));
     }
 
@@ -155,7 +219,7 @@ mod tests {
         let full = buf.clone();
         for cut in 0..full.len() {
             let mut c = FrameCursor::new();
-            assert!(c.next_request(&full[..cut]).is_none(), "cut={cut}");
+            assert!(c.next_request(&full[..cut]).unwrap().is_none(), "cut={cut}");
         }
     }
 
@@ -167,9 +231,9 @@ mod tests {
         }
         let mut c = FrameCursor::new();
         for i in 0..5u64 {
-            assert_eq!(c.next_request(&buf).unwrap().id, i);
+            assert_eq!(c.next_request(&buf).unwrap().unwrap().id, i);
         }
-        assert!(c.next_request(&buf).is_none());
+        assert!(c.next_request(&buf).unwrap().is_none());
     }
 
     #[test]
@@ -179,11 +243,65 @@ mod tests {
         let tail_start = buf.len();
         write_request(&mut buf, 2, OP_GET, b"k2", b"");
         let mut c = FrameCursor::new();
-        c.next_request(&buf).unwrap();
+        c.next_request(&buf).unwrap().unwrap();
         compact(&mut buf, &mut c);
         assert_eq!(c.consumed, 0);
         assert_eq!(buf.len(), tail_start + 1 /*k2 longer*/ + 0);
-        assert_eq!(c.next_request(&buf).unwrap().id, 2);
+        assert_eq!(c.next_request(&buf).unwrap().unwrap().id, 2);
+    }
+
+    #[test]
+    fn oversized_frame_len_is_rejected_up_front() {
+        // A hostile 4 GiB frame_len must be an error immediately — not an
+        // Ok(None) that leaves the server buffering forever.
+        let buf = u32::MAX.to_le_bytes().to_vec();
+        let mut c = FrameCursor::new();
+        match c.next_request(&buf) {
+            Err(ProtoError::FrameTooLarge { frame_len }) => {
+                assert_eq!(frame_len, u32::MAX as usize);
+            }
+            other => panic!("expected FrameTooLarge, got {other:?}"),
+        }
+        assert_eq!(c.consumed, 0, "nothing consumed: caller closes");
+    }
+
+    #[test]
+    fn truncated_and_lying_length_fields_are_errors_not_panics() {
+        // frame_len says 10 but the body is only a 9-byte header stub.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 10]);
+        let mut c = FrameCursor::new();
+        assert!(matches!(c.next_request(&buf), Err(ProtoError::Malformed { .. })));
+
+        // key_len pointing past the end of the frame.
+        let mut buf = Vec::new();
+        write_request(&mut buf, 1, OP_GET, b"abcd", b"");
+        buf[13] = 0xFF; // key_len low byte: 4 -> 0xFF
+        let mut c = FrameCursor::new();
+        assert!(matches!(c.next_request(&buf), Err(ProtoError::Malformed { .. })));
+
+        // val_len disagreeing with frame_len.
+        let mut buf = Vec::new();
+        write_request(&mut buf, 1, OP_PUT, b"k", b"vvvv");
+        let val_len_off = 4 + 8 + 1 + 2 + 1; // frame_len + id + op + key_len + key
+        buf[val_len_off] = 3; // claims 3, body carries 4
+        let mut c = FrameCursor::new();
+        assert!(matches!(c.next_request(&buf), Err(ProtoError::Malformed { .. })));
+    }
+
+    #[test]
+    fn malformed_frame_is_consumed_so_scanning_resyncs() {
+        // A bad frame followed by a good one: the error consumes the bad
+        // frame, so a tolerant scanner picks up the good frame next.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 5]); // too short for a request header
+        write_request(&mut buf, 77, OP_GET, b"k", b"");
+        let mut c = FrameCursor::new();
+        assert!(c.next_request(&buf).is_err());
+        let r = c.next_request(&buf).unwrap().unwrap();
+        assert_eq!(r.id, 77);
     }
 
     #[test]
@@ -196,9 +314,70 @@ mod tests {
             write_request(&mut buf, *id, OP_PUT, key, val);
             let mut c = FrameCursor::new();
             match c.next_request(&buf) {
-                Some(r) => r.id == *id && &r.key == key && &r.val == val,
-                None => false,
+                Ok(Some(r)) => r.id == *id && &r.key == key && &r.val == val,
+                _ => false,
             }
         });
+    }
+
+    /// Drive a cursor over `buf` until it stalls, errors terminally, or
+    /// parses everything; panics (the property under test) propagate.
+    fn scan_to_exhaustion(buf: &[u8]) {
+        let mut c = FrameCursor::new();
+        loop {
+            match c.next_request(buf) {
+                Ok(Some(_)) => continue,
+                Ok(None) => break,
+                Err(ProtoError::Malformed { .. }) => continue, // re-sync
+                Err(ProtoError::FrameTooLarge { .. }) => break, // reject
+            }
+        }
+        let mut c = FrameCursor::new();
+        loop {
+            match c.next_response(buf) {
+                Ok(Some(_)) => continue,
+                Ok(None) => break,
+                Err(ProtoError::Malformed { .. }) => continue,
+                Err(ProtoError::FrameTooLarge { .. }) => break,
+            }
+        }
+    }
+
+    #[test]
+    fn prop_cursor_total_on_arbitrary_bytes() {
+        // Feeding any byte stream through the cursor never panics: it
+        // parses, waits, re-syncs, or rejects.
+        check::<Vec<u8>>("kv-proto-garbage", 300, |bytes| {
+            scan_to_exhaustion(bytes);
+            true
+        });
+    }
+
+    #[test]
+    fn prop_cursor_total_on_corrupted_valid_streams() {
+        // Frame a few valid requests, then bit-flip one byte and truncate
+        // at an arbitrary point: still no panic, and the cursor never
+        // consumes past the end of the buffer.
+        check::<(u64, Vec<u8>, Vec<u8>, usize, usize)>(
+            "kv-proto-bitflip",
+            300,
+            |(id, key, val, flip_at, cut)| {
+                if key.len() > 60_000 {
+                    return true;
+                }
+                let mut buf = Vec::new();
+                write_request(&mut buf, *id, OP_GET, key, &[]);
+                write_request(&mut buf, id.wrapping_add(1), OP_PUT, key, val);
+                if !buf.is_empty() {
+                    let i = flip_at % buf.len();
+                    buf[i] ^= ((flip_at >> 8) as u8) | 1; // flip >= one bit
+                }
+                buf.truncate(cut % (buf.len() + 1));
+                scan_to_exhaustion(&buf);
+                let mut c = FrameCursor::new();
+                while let Ok(Some(_)) = c.next_request(&buf) {}
+                c.consumed <= buf.len()
+            },
+        );
     }
 }

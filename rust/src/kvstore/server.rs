@@ -9,12 +9,13 @@
 //! write buffer as they complete — hence naturally out of order.
 
 use super::backend::{AsyncKv, BackendKind};
-use super::netfiber::{read_available, write_pending, ReadOutcome};
+use super::netfiber::{self, net_wait, read_burst, write_pending, NetPolicy, ReadOutcome};
 use super::proto::{self, FrameCursor};
 use crate::fiber;
 use crate::runtime::Runtime;
 use std::cell::RefCell;
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -27,6 +28,8 @@ pub struct KvServerConfig {
     pub dedicated: usize,
     pub backend: BackendKind,
     pub addr: String,
+    /// How connection fibers wait for socket progress.
+    pub net: NetPolicy,
 }
 
 impl Default for KvServerConfig {
@@ -36,7 +39,17 @@ impl Default for KvServerConfig {
             dedicated: 0,
             backend: BackendKind::Trust { shards: 0 },
             addr: "127.0.0.1:0".into(),
+            net: NetPolicy::default(),
         }
+    }
+}
+
+impl KvServerConfig {
+    /// Check the topology *before* any runtime is built: every
+    /// misconfiguration that previously died on an internal assert after
+    /// worker threads were already spawned reports here instead.
+    pub fn validate(&self) -> Result<(), String> {
+        netfiber::validate_topology(self.workers, self.dedicated)
     }
 }
 
@@ -51,7 +64,23 @@ pub struct KvServer {
 }
 
 impl KvServer {
+    /// Start a server, panicking on an invalid configuration (see
+    /// [`KvServer::try_start`] for the fallible form).
     pub fn start(cfg: KvServerConfig) -> KvServer {
+        Self::try_start(cfg).unwrap_or_else(|e| panic!("invalid KvServerConfig: {e}"))
+    }
+
+    /// Start a server, reporting configuration/bind problems as a
+    /// descriptive error *before* any worker thread is spawned.
+    pub fn try_start(cfg: KvServerConfig) -> Result<KvServer, String> {
+        cfg.validate()?;
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking listener: {e}"))?;
+
         let rt = Runtime::builder()
             .workers(cfg.workers)
             .dedicated_trustees(cfg.dedicated)
@@ -63,62 +92,52 @@ impl KvServer {
             (0..cfg.workers).collect()
         };
         let backend = cfg.backend.build(&rt, &trustees);
-        let listener = TcpListener::bind(&cfg.addr).expect("bind kv server");
-        let local_addr = listener.local_addr().unwrap();
-        listener.set_nonblocking(true).expect("nonblocking listener");
         let stop = Arc::new(AtomicBool::new(false));
         let ops_served = Arc::new(AtomicU64::new(0));
 
-        // Socket workers: the non-dedicated ones.
+        // Socket workers: the non-dedicated ones (validate() guarantees at
+        // least one).
         let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
-        assert!(!socket_workers.is_empty(), "no socket workers left");
+        let policy = cfg.net;
 
-        let accept_handle = {
-            let stop = stop.clone();
+        // Round-robin dispatch of accepted streams onto socket workers.
+        let dispatch = {
             let backend = backend.clone();
-            let shared = rt.shared().clone();
             let ops = ops_served.clone();
-            std::thread::Builder::new()
-                .name("kv-accept".into())
-                .spawn(move || {
-                    let mut next = 0usize;
-                    while !stop.load(Ordering::Acquire) {
-                        match listener.accept() {
-                            Ok((stream, _peer)) => {
-                                let worker = socket_workers[next % socket_workers.len()];
-                                next += 1;
-                                let backend = backend.clone();
-                                let ops = ops.clone();
-                                let stop = stop.clone();
-                                shared.inject(
-                                    worker,
-                                    Box::new(move || {
-                                        fiber::with_executor(|e| {
-                                            e.spawn(move || {
-                                                connection_fiber(stream, backend, ops, stop)
-                                            });
-                                        });
-                                    }),
-                                );
-                            }
-                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(std::time::Duration::from_micros(200));
-                            }
-                            Err(_) => break,
-                        }
-                    }
-                })
-                .expect("spawn acceptor")
+            let stop = stop.clone();
+            netfiber::round_robin_dispatch(
+                rt.shared().clone(),
+                socket_workers.clone(),
+                move |stream| {
+                    let backend = backend.clone();
+                    let ops = ops.clone();
+                    let stop = stop.clone();
+                    Box::new(move || connection_fiber(stream, backend, ops, stop, policy))
+                },
+            )
         };
 
-        KvServer {
+        // Epoll: the acceptor is a fiber parked on listener readability in
+        // the first socket worker's reactor — no sleep-poll thread.
+        // BusyPoll: the legacy 200 µs accept thread (A/B baseline).
+        let accept_handle = netfiber::start_acceptor(
+            policy,
+            listener,
+            stop.clone(),
+            rt.shared(),
+            socket_workers[0],
+            dispatch,
+            "kv-accept",
+        )?;
+
+        Ok(KvServer {
             rt: Some(rt),
             backend,
             local_addr,
             stop,
-            accept_handle: Some(accept_handle),
+            accept_handle,
             ops_served,
-        }
+        })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -182,89 +201,160 @@ impl Drop for KvServer {
 
 /// Per-connection fiber: parse requests, dispatch to the backend, stream
 /// responses back out of order as their callbacks fire. Exits when the
-/// peer closes or the server stops.
+/// peer closes, the stream turns malformed, or the server stops.
+///
+/// Hardened against arbitrary client bytes: parse errors and unknown ops
+/// end the connection (unknown ops first answer [`proto::ST_BAD_REQUEST`]
+/// so well-meaning-but-buggy clients see *why*) — they never panic the
+/// worker, which would strand the whole runtime.
 fn connection_fiber(
     mut stream: TcpStream,
     backend: Arc<dyn AsyncKv>,
     ops: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
+    policy: NetPolicy,
 ) {
-    stream.set_nonblocking(true).expect("nonblocking conn");
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
     stream.set_nodelay(true).ok();
+    let fd = stream.as_raw_fd();
     let out = Rc::new(RefCell::new(Vec::<u8>::new()));
     let inflight = Rc::new(std::cell::Cell::new(0usize));
     let mut inbuf: Vec<u8> = Vec::with_capacity(32 * 1024);
     let mut cursor = FrameCursor::new();
     let mut wcursor = 0usize;
     let mut peer_gone = false;
+    // Malformed stream: stop reading/parsing, drain what's owed, close.
+    let mut poisoned = false;
+    // On server stop, drain buffered responses for a bounded grace period
+    // (acked work should reach the wire) without letting a peer that
+    // never reads hold shutdown hostage.
+    let mut stop_deadline: Option<std::time::Instant> = None;
 
     loop {
-        // 1. Ingest.
-        if !peer_gone {
-            match read_available(&mut stream, &mut inbuf) {
+        let mut progress = false;
+        // 1. Ingest ("reading requests is done in batches"): drain the
+        //    socket up to a fairness bound, and stop reading while the
+        //    unparsed backlog is past MAX_INBUF (TCP backpressure instead
+        //    of unbounded buffering).
+        if !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF {
+            match read_burst(&mut stream, &mut inbuf, 64 * 1024) {
+                ReadOutcome::Data(_) => progress = true,
                 ReadOutcome::Closed => peer_gone = true,
-                ReadOutcome::Data(_) | ReadOutcome::WouldBlock => {}
+                ReadOutcome::WouldBlock => {}
             }
         }
-        // 2. Parse + dispatch every complete request ("reading requests is
-        //    done in batches").
-        while let Some(req) = cursor.next_request(&inbuf) {
-            inflight.set(inflight.get() + 1);
-            let out = out.clone();
-            let infl = inflight.clone();
-            let ops = ops.clone();
-            let id = req.id;
-            match req.op {
-                proto::OP_GET => backend.get(
-                    req.key,
-                    Box::new(move |v| {
-                        let mut o = out.borrow_mut();
-                        match v {
-                            Some(val) => proto::write_response(&mut o, id, proto::ST_OK, &val),
-                            None => proto::write_response(&mut o, id, proto::ST_NOT_FOUND, &[]),
-                        }
-                        infl.set(infl.get() - 1);
-                        ops.fetch_add(1, Ordering::Relaxed);
-                    }),
-                ),
-                proto::OP_PUT => backend.put(
-                    req.key,
-                    req.val,
-                    Box::new(move |_| {
-                        proto::write_response(&mut out.borrow_mut(), id, proto::ST_OK, &[]);
-                        infl.set(infl.get() - 1);
-                        ops.fetch_add(1, Ordering::Relaxed);
-                    }),
-                ),
-                proto::OP_DEL => backend.del(
-                    req.key,
-                    Box::new(move |existed| {
-                        let st = if existed { proto::ST_OK } else { proto::ST_NOT_FOUND };
-                        proto::write_response(&mut out.borrow_mut(), id, st, &[]);
-                        infl.set(infl.get() - 1);
-                        ops.fetch_add(1, Ordering::Relaxed);
-                    }),
-                ),
-                other => panic!("unknown op {other}"),
+        // 2. Parse + dispatch every complete request.
+        if !poisoned {
+            loop {
+                let req = match cursor.next_request(&inbuf) {
+                    Ok(Some(req)) => req,
+                    Ok(None) => break,
+                    Err(_) => {
+                        // Framing is broken; no request id to answer to.
+                        poisoned = true;
+                        break;
+                    }
+                };
+                progress = true;
+                let id = req.id;
+                if !matches!(req.op, proto::OP_GET | proto::OP_PUT | proto::OP_DEL) {
+                    // One bad client must not kill the fiber mid-batch and
+                    // strand its inflight count: answer, then wind down.
+                    proto::write_response(
+                        &mut out.borrow_mut(),
+                        id,
+                        proto::ST_BAD_REQUEST,
+                        &[],
+                    );
+                    poisoned = true;
+                    break;
+                }
+                inflight.set(inflight.get() + 1);
+                let out = out.clone();
+                let infl = inflight.clone();
+                let ops = ops.clone();
+                match req.op {
+                    proto::OP_GET => backend.get(
+                        req.key,
+                        Box::new(move |v| {
+                            let mut o = out.borrow_mut();
+                            match v {
+                                Some(val) => {
+                                    proto::write_response(&mut o, id, proto::ST_OK, &val)
+                                }
+                                None => {
+                                    proto::write_response(&mut o, id, proto::ST_NOT_FOUND, &[])
+                                }
+                            }
+                            infl.set(infl.get() - 1);
+                            ops.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    ),
+                    proto::OP_PUT => backend.put(
+                        req.key,
+                        req.val,
+                        Box::new(move |_| {
+                            proto::write_response(&mut out.borrow_mut(), id, proto::ST_OK, &[]);
+                            infl.set(infl.get() - 1);
+                            ops.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    ),
+                    _ => backend.del(
+                        req.key,
+                        Box::new(move |existed| {
+                            let st = if existed { proto::ST_OK } else { proto::ST_NOT_FOUND };
+                            proto::write_response(&mut out.borrow_mut(), id, st, &[]);
+                            infl.set(infl.get() - 1);
+                            ops.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    ),
+                }
             }
+            proto::compact(&mut inbuf, &mut cursor);
         }
-        proto::compact(&mut inbuf, &mut cursor);
         // 3. Egress ("sending results is done in batches").
         {
             let mut o = out.borrow_mut();
+            let pending_before = o.len() - wcursor;
             if !write_pending(&mut stream, &mut o, &mut wcursor) {
                 break;
             }
+            let pending_after = o.len() - wcursor;
+            if pending_after < pending_before {
+                progress = true;
+            }
         }
-        if peer_gone && inflight.get() == 0 && out.borrow().is_empty() {
+        // 4. Exit conditions.
+        if (peer_gone || poisoned) && inflight.get() == 0 && out.borrow().is_empty() {
             break;
         }
-        // Server shutdown: stop accepting new work and drain what's left.
+        // Server shutdown: stop accepting new work, drain what's left (the
+        // responses in `out` are acknowledged work), break regardless once
+        // the grace period expires.
         if stop.load(Ordering::Acquire) && inflight.get() == 0 {
-            break;
+            if out.borrow().is_empty() {
+                break;
+            }
+            let deadline = *stop_deadline.get_or_insert_with(|| {
+                std::time::Instant::now() + std::time::Duration::from_millis(250)
+            });
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
         }
-        // 4. Let the scheduler serve trustee work / other connections.
-        fiber::yield_now();
+        // 5. Wait for more work. With responses in flight the wake comes
+        //    from the scheduler (backend completions), so yield; otherwise
+        //    the only possible wake is the socket — park on it (Epoll)
+        //    instead of re-polling every tick (BusyPoll).
+        if progress || inflight.get() > 0 || stop.load(Ordering::Acquire) {
+            fiber::yield_now();
+        } else {
+            let want_read = !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF;
+            let want_write = !out.borrow().is_empty();
+            net_wait(policy, fd, want_read, want_write);
+        }
     }
 }
 
@@ -292,7 +382,7 @@ mod tests {
         let mut cursor = FrameCursor::new();
         let mut chunk = [0u8; 4096];
         loop {
-            if let Some(r) = cursor.next_response(&buf) {
+            if let Some(r) = cursor.next_response(&buf).unwrap() {
                 return r;
             }
             let n = stream.read(&mut chunk).unwrap();
@@ -358,7 +448,7 @@ mod tests {
         let mut cursor = FrameCursor::new();
         let mut chunk = [0u8; 8192];
         while seen.len() < 50 {
-            if let Some(r) = cursor.next_response(&rbuf) {
+            if let Some(r) = cursor.next_response(&rbuf).unwrap() {
                 assert_eq!(r.status, proto::ST_OK);
                 assert!(seen.insert(r.id), "duplicate id {}", r.id);
                 assert!((1000..1050).contains(&r.id));
@@ -413,5 +503,55 @@ mod tests {
         assert_eq!(get(&mut c, 2, b"a").val, b"b");
         drop(c);
         server.stop();
+    }
+
+    #[test]
+    fn invalid_topology_is_a_descriptive_error_not_a_late_assert() {
+        // dedicated >= workers used to die on an internal assert after the
+        // runtime was already built; now it is a validation error up front.
+        let err = KvServer::try_start(KvServerConfig {
+            workers: 2,
+            dedicated: 2,
+            ..Default::default()
+        })
+        .err()
+        .expect("must be rejected");
+        assert!(err.contains("socket worker"), "unhelpful error: {err}");
+
+        let err = KvServer::try_start(KvServerConfig {
+            workers: 0,
+            ..Default::default()
+        })
+        .err()
+        .expect("must be rejected");
+        assert!(err.contains("workers"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn unknown_op_answers_bad_request_and_closes() {
+        for net in [NetPolicy::BusyPoll, NetPolicy::Epoll] {
+            let server = KvServer::start(KvServerConfig {
+                workers: 2,
+                backend: BackendKind::Trust { shards: 2 },
+                net,
+                ..Default::default()
+            });
+            let mut c = TcpStream::connect(server.addr()).unwrap();
+            // A valid request first, then one with an unknown op.
+            assert_eq!(put(&mut c, 1, b"k", b"v").status, proto::ST_OK);
+            let mut buf = Vec::new();
+            proto::write_request(&mut buf, 2, 0x7F, b"k", &[]);
+            c.write_all(&buf).unwrap();
+            let r = read_one_response(&mut c);
+            assert_eq!((r.id, r.status), (2, proto::ST_BAD_REQUEST));
+            // The server closes after answering; reads drain to EOF.
+            let mut sink = Vec::new();
+            c.read_to_end(&mut sink).unwrap();
+            // A fresh connection still works: the worker survived.
+            let mut c2 = TcpStream::connect(server.addr()).unwrap();
+            assert_eq!(get(&mut c2, 3, b"k").val, b"v");
+            drop(c2);
+            server.stop();
+        }
     }
 }

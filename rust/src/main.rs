@@ -5,6 +5,7 @@
 //! ```text
 //! trustee kv-server    --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
+//!                      [--net epoll|busy]
 //! trustee kv-load      --addr HOST:PORT --threads T --pipeline P --ops N
 //!                      --keys K --dist uniform|zipf --write-pct W
 //! trustee mcd-server   --engine stock|trust[:N] --workers W --addr HOST:PORT
@@ -45,6 +46,7 @@ fn kv_server(args: &Args) {
         dedicated: args.get("dedicated", 0),
         backend: BackendKind::from_spec(&args.get_str("backend", "trust")),
         addr: args.get_str("addr", "127.0.0.1:7878"),
+        net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {
@@ -102,6 +104,7 @@ fn mcd_server(args: &Args) {
         dedicated: args.get("dedicated", 0),
         engine,
         addr: args.get_str("addr", "127.0.0.1:11211"),
+        net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {

@@ -13,12 +13,15 @@
 //!   the responses before they are transmitted").
 
 use super::engine::McdEngine;
-use crate::kvstore::netfiber::{read_available, write_pending, ReadOutcome};
+use crate::kvstore::netfiber::{
+    self, net_wait, read_burst, write_pending, NetPolicy, ReadOutcome,
+};
 use crate::fiber;
 use crate::runtime::Runtime;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -30,37 +33,109 @@ pub enum Command {
     Set { key: Vec<u8>, flags: u32, data: Vec<u8> },
 }
 
-/// Incremental text-protocol parser. Returns (command, bytes_consumed).
-pub fn parse_command(buf: &[u8]) -> Option<(Command, usize)> {
-    let line_end = find_crlf(buf)?;
+/// Longest command line the parser will buffer before declaring the
+/// stream hostile (real memcached uses 2048; be a little generous).
+pub const MAX_LINE: usize = 8192;
+
+/// Largest `set` data block accepted (memcached's classic 1 MiB default).
+pub const MAX_DATA: usize = 1 << 20;
+
+/// Longest key accepted (real memcached's limit).
+pub const MAX_KEY: usize = 250;
+
+/// memcached key rules: 1..=[`MAX_KEY`] bytes, nothing at or below ASCII
+/// space and no DEL. A key is echoed verbatim into the line-oriented
+/// response stream (`VALUE <key> ...`), so a stray `\r`/`\n` smuggled
+/// inside one would inject protocol lines into the response and
+/// desynchronize line-based clients — reject it at parse time.
+fn valid_key(key: &[u8]) -> bool {
+    !key.is_empty() && key.len() <= MAX_KEY && key.iter().all(|&b| b > 0x20 && b != 0x7F)
+}
+
+/// Why a byte stream failed to parse. The server answers with a protocol
+/// error line and closes — it must never panic on client bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum McdParseError {
+    /// First token is not a command we speak.
+    UnknownCommand,
+    /// Wrong arity, non-numeric field, oversized or misterminated data.
+    BadArguments,
+    /// No CRLF within [`MAX_LINE`] bytes.
+    LineTooLong,
+}
+
+impl McdParseError {
+    /// The memcached-style error line the server sends back.
+    pub fn wire_line(&self) -> &'static [u8] {
+        match self {
+            McdParseError::UnknownCommand => b"ERROR\r\n",
+            McdParseError::BadArguments => b"CLIENT_ERROR bad command line format\r\n",
+            McdParseError::LineTooLong => b"CLIENT_ERROR line too long\r\n",
+        }
+    }
+}
+
+/// Incremental text-protocol parser: `Ok(Some((command, bytes_consumed)))`
+/// for a complete command, `Ok(None)` to wait for more bytes, `Err` for a
+/// stream that can never become valid (total — no panic on any input).
+pub fn parse_command(buf: &[u8]) -> Result<Option<(Command, usize)>, McdParseError> {
+    let Some(line_end) = find_crlf(buf) else {
+        // +1: a maximal legal line may momentarily sit in the buffer with
+        // its '\r' but not yet its '\n'.
+        return if buf.len() > MAX_LINE + 1 {
+            Err(McdParseError::LineTooLong)
+        } else {
+            Ok(None)
+        };
+    };
+    if line_end > MAX_LINE {
+        return Err(McdParseError::LineTooLong);
+    }
     let line = &buf[..line_end];
     let mut parts = line.split(|&b| b == b' ').filter(|p| !p.is_empty());
-    match parts.next()? {
-        b"get" => {
-            let key = parts.next()?.to_vec();
-            Some((Command::Get { key }, line_end + 2))
+    match parts.next() {
+        Some(b"get") => {
+            let key = parts.next().ok_or(McdParseError::BadArguments)?.to_vec();
+            if !valid_key(&key) {
+                return Err(McdParseError::BadArguments);
+            }
+            Ok(Some((Command::Get { key }, line_end + 2)))
         }
-        b"set" => {
-            let key = parts.next()?.to_vec();
-            let flags: u32 = parse_num(parts.next()?)?;
-            let _exptime: u64 = parse_num(parts.next()?)?;
-            let bytes: usize = parse_num(parts.next()?)?;
+        Some(b"set") => {
+            let key = parts.next().ok_or(McdParseError::BadArguments)?.to_vec();
+            if !valid_key(&key) {
+                return Err(McdParseError::BadArguments);
+            }
+            let flags: u32 = parse_num(parts.next().ok_or(McdParseError::BadArguments)?)
+                .ok_or(McdParseError::BadArguments)?;
+            let _exptime: u64 = parse_num(parts.next().ok_or(McdParseError::BadArguments)?)
+                .ok_or(McdParseError::BadArguments)?;
+            let bytes: usize = parse_num(parts.next().ok_or(McdParseError::BadArguments)?)
+                .ok_or(McdParseError::BadArguments)?;
+            if bytes > MAX_DATA {
+                return Err(McdParseError::BadArguments);
+            }
             let data_start = line_end + 2;
             if buf.len() < data_start + bytes + 2 {
-                return None; // waiting for the data block
+                return Ok(None); // waiting for the data block
+            }
+            if &buf[data_start + bytes..data_start + bytes + 2] != b"\r\n" {
+                return Err(McdParseError::BadArguments);
             }
             let data = buf[data_start..data_start + bytes].to_vec();
-            Some((Command::Set { key, flags, data }, data_start + bytes + 2))
+            Ok(Some((Command::Set { key, flags, data }, data_start + bytes + 2)))
         }
-        other => panic!(
-            "mini-memcached: unsupported command {:?}",
-            String::from_utf8_lossy(other)
-        ),
+        // Blank lines and unknown verbs alike: the stream is not speaking
+        // our protocol.
+        _ => Err(McdParseError::UnknownCommand),
     }
 }
 
 fn find_crlf(buf: &[u8]) -> Option<usize> {
-    buf.windows(2).position(|w| w == b"\r\n")
+    // Bound the scan: beyond MAX_LINE (+1 for a CR split across reads) the
+    // stream is hostile regardless of what follows.
+    let window = buf.len().min(MAX_LINE + 2);
+    buf[..window].windows(2).position(|w| w == b"\r\n")
 }
 
 fn parse_num<N: std::str::FromStr>(b: &[u8]) -> Option<N> {
@@ -89,6 +164,8 @@ pub struct McdServerConfig {
     pub dedicated: usize,
     pub engine: EngineKind,
     pub addr: String,
+    /// How connection fibers wait for socket progress.
+    pub net: NetPolicy,
 }
 
 impl Default for McdServerConfig {
@@ -98,7 +175,16 @@ impl Default for McdServerConfig {
             dedicated: 0,
             engine: EngineKind::Trust { shards: 4 },
             addr: "127.0.0.1:0".into(),
+            net: NetPolicy::default(),
         }
+    }
+}
+
+impl McdServerConfig {
+    /// Topology checks, before any runtime is built (mirrors
+    /// [`crate::kvstore::KvServerConfig::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        netfiber::validate_topology(self.workers, self.dedicated)
     }
 }
 
@@ -113,7 +199,23 @@ pub struct McdServer {
 }
 
 impl McdServer {
+    /// Start a server, panicking on an invalid configuration (see
+    /// [`McdServer::try_start`] for the fallible form).
     pub fn start(cfg: McdServerConfig) -> McdServer {
+        Self::try_start(cfg).unwrap_or_else(|e| panic!("invalid McdServerConfig: {e}"))
+    }
+
+    /// Start a server, reporting configuration/bind problems as a
+    /// descriptive error *before* any worker thread is spawned.
+    pub fn try_start(cfg: McdServerConfig) -> Result<McdServer, String> {
+        cfg.validate()?;
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking listener: {e}"))?;
+
         let rt = Runtime::builder()
             .workers(cfg.workers)
             .dedicated_trustees(cfg.dedicated)
@@ -129,60 +231,45 @@ impl McdServer {
                 super::engine::TrustEngine::new(&rt, &trustees, (*shards).max(1))
             }
         };
-        let listener = TcpListener::bind(&cfg.addr).expect("bind memcached");
-        let local_addr = listener.local_addr().unwrap();
-        listener.set_nonblocking(true).unwrap();
         let stop = Arc::new(AtomicBool::new(false));
         let ops_served = Arc::new(AtomicU64::new(0));
         let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
-        assert!(!socket_workers.is_empty());
+        let policy = cfg.net;
 
-        let accept_handle = {
-            let stop = stop.clone();
+        let dispatch = {
             let engine = engine.clone();
-            let shared = rt.shared().clone();
             let ops = ops_served.clone();
-            std::thread::Builder::new()
-                .name("mcd-accept".into())
-                .spawn(move || {
-                    let mut next = 0usize;
-                    while !stop.load(Ordering::Acquire) {
-                        match listener.accept() {
-                            Ok((stream, _)) => {
-                                let worker = socket_workers[next % socket_workers.len()];
-                                next += 1;
-                                let engine = engine.clone();
-                                let ops = ops.clone();
-                                let stop = stop.clone();
-                                shared.inject(
-                                    worker,
-                                    Box::new(move || {
-                                        fiber::with_executor(|e| {
-                                            e.spawn(move || {
-                                                connection_fiber(stream, engine, ops, stop)
-                                            });
-                                        });
-                                    }),
-                                );
-                            }
-                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(std::time::Duration::from_micros(200));
-                            }
-                            Err(_) => break,
-                        }
-                    }
-                })
-                .unwrap()
+            let stop = stop.clone();
+            netfiber::round_robin_dispatch(
+                rt.shared().clone(),
+                socket_workers.clone(),
+                move |stream| {
+                    let engine = engine.clone();
+                    let ops = ops.clone();
+                    let stop = stop.clone();
+                    Box::new(move || connection_fiber(stream, engine, ops, stop, policy))
+                },
+            )
         };
 
-        McdServer {
+        let accept_handle = netfiber::start_acceptor(
+            policy,
+            listener,
+            stop.clone(),
+            rt.shared(),
+            socket_workers[0],
+            dispatch,
+            "mcd-accept",
+        )?;
+
+        Ok(McdServer {
             rt: Some(rt),
             engine,
             local_addr,
             stop,
-            accept_handle: Some(accept_handle),
+            accept_handle,
             ops_served,
-        }
+        })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -256,9 +343,13 @@ fn connection_fiber(
     engine: Arc<dyn McdEngine>,
     ops: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
+    policy: NetPolicy,
 ) {
-    stream.set_nonblocking(true).unwrap();
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
     stream.set_nodelay(true).ok();
+    let fd = stream.as_raw_fd();
     let reorder = Rc::new(RefCell::new(Reorder {
         next_seq: 0,
         next_emit: 0,
@@ -268,18 +359,41 @@ fn connection_fiber(
     let mut out: Vec<u8> = Vec::with_capacity(32 * 1024);
     let mut wcur = 0usize;
     let mut peer_gone = false;
+    // Unparseable stream: answer with a protocol error line (in order,
+    // through the reorder buffer), drain, close — never panic the worker.
+    let mut poisoned = false;
+    // Bounded stop-drain, mirroring the KV server: flush acked responses
+    // on shutdown without letting a never-reading peer hold it hostage.
+    let mut stop_deadline: Option<std::time::Instant> = None;
 
     loop {
-        if !peer_gone {
-            match read_available(&mut stream, &mut inbuf) {
+        let mut progress = false;
+        if !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF {
+            match read_burst(&mut stream, &mut inbuf, 64 * 1024) {
+                ReadOutcome::Data(_) => progress = true,
                 ReadOutcome::Closed => peer_gone = true,
-                _ => {}
+                ReadOutcome::WouldBlock => {}
             }
         }
         // Parse + dispatch (state machine: receive → parse → process).
         let mut consumed = 0usize;
-        while let Some((cmd, used)) = parse_command(&inbuf[consumed..]) {
+        while !poisoned {
+            let (cmd, used) = match parse_command(&inbuf[consumed..]) {
+                Ok(Some(hit)) => hit,
+                Ok(None) => break,
+                Err(e) => {
+                    // Sequence the error line behind every completed
+                    // command, like any other response.
+                    let mut r = reorder.borrow_mut();
+                    let seq = r.next_seq;
+                    r.next_seq += 1;
+                    r.pending.insert(seq, e.wire_line().to_vec());
+                    poisoned = true;
+                    break;
+                }
+            };
             consumed += used;
+            progress = true;
             let seq = {
                 let mut r = reorder.borrow_mut();
                 let s = r.next_seq;
@@ -340,17 +454,39 @@ fn connection_fiber(
                 r.next_emit += 1;
             }
         }
-        if !write_pending(&mut stream, &mut out, &mut wcur) {
+        {
+            let before = out.len() - wcur;
+            if !write_pending(&mut stream, &mut out, &mut wcur) {
+                break;
+            }
+            let after = if out.is_empty() { 0 } else { out.len() - wcur };
+            if after < before {
+                progress = true;
+            }
+        }
+        let awaiting = {
+            let r = reorder.borrow();
+            r.next_emit != r.next_seq
+        };
+        if !awaiting && out.is_empty() && (peer_gone || poisoned || stop.load(Ordering::Acquire))
+        {
             break;
         }
-        {
-            let r = reorder.borrow();
-            let drained = r.next_emit == r.next_seq && out.is_empty();
-            if drained && (peer_gone || stop.load(Ordering::Acquire)) {
+        if !awaiting && stop.load(Ordering::Acquire) {
+            let deadline = *stop_deadline.get_or_insert_with(|| {
+                std::time::Instant::now() + std::time::Duration::from_millis(250)
+            });
+            if std::time::Instant::now() >= deadline {
                 break;
             }
         }
-        fiber::yield_now();
+        if progress || awaiting || stop.load(Ordering::Acquire) {
+            fiber::yield_now();
+        } else {
+            let want_read = !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF;
+            let want_write = !out.is_empty();
+            net_wait(policy, fd, want_read, want_write);
+        }
     }
 }
 
@@ -361,10 +497,12 @@ mod tests {
 
     #[test]
     fn parse_get_and_set() {
-        let (cmd, used) = parse_command(b"get foo\r\n").unwrap();
+        let (cmd, used) = parse_command(b"get foo\r\n").unwrap().unwrap();
         assert_eq!(cmd, Command::Get { key: b"foo".to_vec() });
         assert_eq!(used, 9);
-        let (cmd, used) = parse_command(b"set foo 7 0 5\r\nhello\r\nget x\r\n").unwrap();
+        let (cmd, used) = parse_command(b"set foo 7 0 5\r\nhello\r\nget x\r\n")
+            .unwrap()
+            .unwrap();
         assert_eq!(
             cmd,
             Command::Set { key: b"foo".to_vec(), flags: 7, data: b"hello".to_vec() }
@@ -374,9 +512,90 @@ mod tests {
 
     #[test]
     fn parse_waits_for_data_block() {
-        assert!(parse_command(b"set foo 0 0 5\r\nhel").is_none());
-        assert!(parse_command(b"set foo 0 0 5\r\n").is_none());
-        assert!(parse_command(b"get fo").is_none());
+        assert!(parse_command(b"set foo 0 0 5\r\nhel").unwrap().is_none());
+        assert!(parse_command(b"set foo 0 0 5\r\n").unwrap().is_none());
+        assert!(parse_command(b"get fo").unwrap().is_none());
+    }
+
+    #[test]
+    fn parse_is_total_on_hostile_input() {
+        // Unknown verb: an error, not a panic (this used to panic!).
+        assert_eq!(
+            parse_command(b"flush_all\r\n"),
+            Err(McdParseError::UnknownCommand)
+        );
+        assert_eq!(parse_command(b"\r\n"), Err(McdParseError::UnknownCommand));
+        // Bad arity / non-numeric fields: previously stuck forever (None).
+        assert_eq!(parse_command(b"get\r\n"), Err(McdParseError::BadArguments));
+        assert_eq!(
+            parse_command(b"set k x 0 5\r\nhello\r\n"),
+            Err(McdParseError::BadArguments)
+        );
+        // Data block not CRLF-terminated where it should be.
+        assert_eq!(
+            parse_command(b"set k 0 0 2\r\nabXY\r\n"),
+            Err(McdParseError::BadArguments)
+        );
+        // Oversized declared data block.
+        assert_eq!(
+            parse_command(format!("set k 0 0 {}\r\n", MAX_DATA + 1).as_bytes()),
+            Err(McdParseError::BadArguments)
+        );
+        // Keys that would inject lines into the echoed response stream
+        // (lone LF/CR survive the space-split and the CRLF scan).
+        assert_eq!(
+            parse_command(b"get k\niEND\r\n"),
+            Err(McdParseError::BadArguments)
+        );
+        assert_eq!(
+            parse_command(b"set k\rx 0 0 1\r\na\r\n"),
+            Err(McdParseError::BadArguments)
+        );
+        // Oversized key.
+        let mut cmd = b"get ".to_vec();
+        cmd.extend_from_slice(&vec![b'k'; MAX_KEY + 1]);
+        cmd.extend_from_slice(b"\r\n");
+        assert_eq!(parse_command(&cmd), Err(McdParseError::BadArguments));
+        // Endless line without CRLF.
+        let long = vec![b'a'; MAX_LINE + 16];
+        assert_eq!(parse_command(&long), Err(McdParseError::LineTooLong));
+        // Random bytes never panic.
+        crate::util::quickcheck::check::<Vec<u8>>("mcd-parse-garbage", 200, |bytes| {
+            let _ = parse_command(bytes);
+            true
+        });
+    }
+
+    #[test]
+    fn unknown_command_answers_error_line_and_closes() {
+        let server = McdServer::start(McdServerConfig {
+            workers: 2,
+            engine: EngineKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        // A valid set, then garbage: the error line must arrive *after*
+        // the STORED (in order), then the server closes.
+        c.write_all(b"set k 0 0 1\r\nv\r\nflush_all\r\n").unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "STORED\r\n");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "ERROR\r\n");
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "connection must close after ERROR");
+        // The worker survived: a new connection works.
+        let mut c2 = TcpStream::connect(server.addr()).unwrap();
+        c2.write_all(b"get k\r\n").unwrap();
+        let mut reader2 = BufReader::new(c2.try_clone().unwrap());
+        let mut l = String::new();
+        reader2.read_line(&mut l).unwrap();
+        assert_eq!(l, "VALUE k 0 1\r\n");
+        drop((c, reader, c2, reader2));
+        server.stop();
     }
 
     fn mcd_roundtrip(engine: EngineKind) {

@@ -14,7 +14,7 @@
 //!
 //! ## Scheduler phases
 //!
-//! Each loop iteration runs four phases in FIFO fashion like the paper's
+//! Each loop iteration runs five phases in FIFO fashion like the paper's
 //! delegation fiber (§5.2):
 //!
 //! 1. **serve** — drain whole request batches from every client column,
@@ -23,9 +23,14 @@
 //!    [`Backoff`] when idle;
 //! 2. **poll** — consume completed response batches, running completions
 //!    (fiber wake-ups / `then`-callbacks) *outside* any worker borrow;
-//! 3. **inject** — drain the mutex-guarded injector queue through which
+//! 3. **reactor** — wake fibers whose fds became ready ([`reactor`]);
+//!    when the worker has been fully idle for a while it *blocks* here in
+//!    `epoll_wait` (bounded by [`IDLE_EPOLL_TIMEOUT_MS`]) instead of
+//!    backoff-spinning;
+//! 4. **inject** — drain the mutex-guarded injector queue through which
 //!    non-worker threads submit jobs (start-up entrusting, root fibers);
-//! 4. **client** — run one application fiber slice, then **flush** every
+//!    injects also write the worker's wake eventfd to end an idle block;
+//! 5. **client** — run one application fiber slice, then **flush** every
 //!    dirty outbox (the end-of-client-phase hook of the adaptive
 //!    [`FlushPolicy`]).
 //!
@@ -40,6 +45,7 @@
 //! itself hands out a fresh reborrow from the thread-local raw pointer at
 //! every call, so nested calls never alias a live long-lived borrow.
 
+pub mod reactor;
 #[cfg(feature = "xla")]
 pub mod xla_exec;
 
@@ -47,6 +53,7 @@ use crate::channel::{ClientEndpoint, Completion, FlushPolicy, Matrix, PendingReq
 use crate::fiber::{self, Executor};
 use crate::util::affinity;
 use crate::util::cache::Backoff;
+use crate::util::sys;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -61,6 +68,18 @@ pub type Job = Box<dyn FnOnce() + Send + 'static>;
 /// own fibers and clients).
 const SERVE_BURST: usize = 8;
 
+/// Consecutive fully-idle ticks (no serve/poll/inject progress, no fiber
+/// ran) before a worker stops backoff-spinning and blocks in `epoll_wait`.
+/// High enough that request/response gaps in an active RPC exchange never
+/// trip it; an actually-idle worker reaches it in well under a millisecond.
+const IDLE_EPOLL_TICKS: u32 = 256;
+
+/// Upper bound on one idle block in `epoll_wait`. Delegation batches
+/// arriving over the slot matrix carry no fd signal, so this bounds the
+/// latency they can see from a sleeping trustee; injected jobs and fd
+/// readiness interrupt the block immediately (eventfd / epoll).
+pub(crate) const IDLE_EPOLL_TIMEOUT_MS: i32 = 1;
+
 /// State shared by all workers and the runtime handle.
 pub struct Shared {
     pub(crate) matrix: Matrix,
@@ -72,6 +91,10 @@ pub struct Shared {
     finished: AtomicUsize,
     injectors: Vec<Mutex<Vec<Job>>>,
     injector_nonempty: Vec<AtomicBool>,
+    /// Per-worker wake eventfds (-1 when unavailable): written by
+    /// [`Shared::inject`] and at shutdown so a worker blocked in its
+    /// reactor's `epoll_wait` wakes immediately.
+    wake_fds: Vec<sys::c_int>,
 }
 
 impl Shared {
@@ -96,6 +119,11 @@ impl Shared {
         self.stopped.load(Ordering::Acquire)
     }
 
+    /// Has shutdown been requested (workers may still be draining)?
+    pub fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
     /// Queue a job for `worker`. Panics if the runtime has stopped.
     pub fn inject(&self, worker: usize, job: Job) {
         assert!(
@@ -104,6 +132,26 @@ impl Shared {
         );
         self.injectors[worker].lock().unwrap().push(job);
         self.injector_nonempty[worker].store(true, Ordering::Release);
+        self.wake(worker);
+    }
+
+    /// Pop `worker` out of an idle `epoll_wait` block, if it is in one.
+    pub(crate) fn wake(&self, worker: usize) {
+        let fd = self.wake_fds[worker];
+        if fd >= 0 {
+            let one: u64 = 1;
+            unsafe { sys::write(fd, &one as *const u64 as *const sys::c_void, 8) };
+        }
+    }
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        for &fd in &self.wake_fds {
+            if fd >= 0 {
+                unsafe { sys::close(fd) };
+            }
+        }
     }
 }
 
@@ -180,6 +228,14 @@ pub struct Worker {
     clients: Vec<ClientEndpoint>,
     trustees: Vec<TrusteeEndpoint>,
     in_delegated: Cell<bool>,
+    /// Column whose endpoint the serve phase has detached right now
+    /// (`usize::MAX` when none): re-entrant serving — the clone-ack spin's
+    /// rc-increment sweep — must skip it, both because the placeholder
+    /// endpoint's toggle state is meaningless and because that column's
+    /// slot holds the very batch being served.
+    serving_column: Cell<usize>,
+    /// Readiness reactor (fd parking for socket fibers + idle blocking).
+    pub reactor: reactor::Reactor,
     pub registry: Registry,
     /// Metrics.
     pub loops: u64,
@@ -325,11 +381,17 @@ fn serve_phase() -> usize {
     loop {
         let mut round = 0;
         for c in 0..n {
-            let mut ep = with_worker(|w| std::mem::take(&mut w.trustees[c]));
+            let mut ep = with_worker(|w| {
+                w.serving_column.set(c);
+                std::mem::take(&mut w.trustees[c])
+            });
             // SAFETY: all records were framed by the trust layer with
             // matching thunk/payload types; props are owned by this thread.
             round += unsafe { ep.serve(shared.matrix.pair(c, id)) };
-            with_worker(|w| w.trustees[c] = ep);
+            with_worker(|w| {
+                w.trustees[c] = ep;
+                w.serving_column.set(usize::MAX);
+            });
         }
         rounds += 1;
         total += round;
@@ -343,6 +405,40 @@ fn serve_phase() -> usize {
         w.serve_rounds += rounds as u64;
     });
     total
+}
+
+/// Serve *refcount-increment-only* batches addressed to this trustee —
+/// the mutual-clone cycle breaker (DESIGN.md, refcount ordering contract).
+///
+/// Called from the clone-ack spin in [`crate::trust`]: two trustees that
+/// clone each other's properties inside delegated closures at the same
+/// instant both take the spin path, and each one's `+1` can only be
+/// applied by the other. While spinning, each serves incoming batches that
+/// consist *solely* of records admitted by `admit` (the trust layer passes
+/// its rc-increment thunks). Those thunks touch only the property header
+/// and never re-enter the runtime or run user code, so applying them while
+/// a delegated closure holds `&mut T` is sound — which is why, uniquely,
+/// this runs under a held worker borrow instead of detaching endpoints.
+/// The column currently being served (if any) is skipped: its slot holds
+/// the in-progress batch.
+pub(crate) fn serve_rc_increment_batches(admit: fn(u64) -> bool) -> usize {
+    with_worker(|w| {
+        let shared = w.shared.clone();
+        let id = w.id;
+        let skip = w.serving_column.get();
+        let mut total = 0;
+        for c in 0..shared.n() {
+            if c == skip {
+                continue;
+            }
+            // SAFETY: records were framed by the trust layer; the admit
+            // pre-scan rejects any batch holding a non-rc-increment record
+            // before a single thunk runs.
+            total += unsafe { w.trustees[c].serve_filtered(shared.matrix.pair(c, id), admit) };
+        }
+        w.served_requests += total as u64;
+        total
+    })
 }
 
 /// Poll one client edge: consume a completed response batch, dispatch its
@@ -408,6 +504,36 @@ fn flush_phase() -> usize {
     with_worker(|w| w.flush_all())
 }
 
+/// Reactor phase: wake fibers whose fds became ready. With `timeout_ms` 0
+/// this is the per-tick sweep (a no-op syscall-wise while nothing is
+/// parked); an idle worker passes [`IDLE_EPOLL_TIMEOUT_MS`] to *sleep* in
+/// `epoll_wait` instead of backoff-spinning. Returns fibers woken.
+fn reactor_phase(timeout_ms: i32) -> usize {
+    let ready = with_worker(|w| w.reactor.poll(timeout_ms));
+    let n = ready.len();
+    for id in ready {
+        // Resume outside the worker borrow; defensively, in case an id was
+        // recycled between the poll and this wake (it cannot be today —
+        // fd-parked fibers are woken only here — but resume_if_parked makes
+        // that a no-op rather than a panic).
+        fiber::with_executor(|e| {
+            e.resume_if_parked(id);
+        });
+    }
+    n
+}
+
+/// Shutdown sweep: resume every fd-parked fiber so it can re-check its
+/// exit conditions; parked-on-fd fibers would otherwise hang teardown.
+fn wake_all_fd_waiters() {
+    let waiters = with_worker(|w| w.reactor.take_all_waiters());
+    for id in waiters {
+        fiber::with_executor(|e| {
+            e.resume_if_parked(id);
+        });
+    }
+}
+
 /// Shutdown path: drop every property still registered on this worker,
 /// one at a time so recursive reclaims (and drops that entrust anew) stay
 /// coherent, each drop running with no worker borrow held.
@@ -432,27 +558,48 @@ fn worker_loop() {
     // delegation progress, offer the OS a reschedule point.
     const FIBER_ONLY_YIELD: u32 = 4;
     let mut fiber_only_ticks = 0u32;
+    let mut idle_ticks = 0u32;
     loop {
         with_worker(|w| w.loops += 1);
         let mut useful = serve_phase();
         useful += poll_phase();
+        useful += reactor_phase(0);
         useful += injector_phase();
         let ran_fiber = fiber::with_executor(|e| e.run_one());
         flush_phase();
+        let shutting_down = shared.shutdown.load(Ordering::Acquire);
+        if shutting_down {
+            // Fibers parked on fds must drain, not sleep, during teardown.
+            wake_all_fd_waiters();
+        }
         if useful > 0 {
             backoff.reset();
             fiber_only_ticks = 0;
+            idle_ticks = 0;
         } else if ran_fiber {
             backoff.reset();
+            idle_ticks = 0;
             fiber_only_ticks += 1;
             if fiber_only_ticks >= FIBER_ONLY_YIELD {
                 fiber_only_ticks = 0;
                 std::thread::yield_now();
             }
+        } else if !shutting_down
+            && idle_ticks >= IDLE_EPOLL_TICKS
+            && with_worker(|w| w.reactor.enabled())
+        {
+            // Idle worker: block in epoll_wait (bounded) instead of
+            // spinning. fd readiness and injected jobs (eventfd) end the
+            // block immediately; slot-matrix traffic waits out the bound.
+            if reactor_phase(IDLE_EPOLL_TIMEOUT_MS) > 0 {
+                backoff.reset();
+                idle_ticks = 0;
+            }
         } else {
+            idle_ticks += 1;
             backoff.snooze();
         }
-        if shared.shutdown.load(Ordering::Acquire) {
+        if shutting_down {
             let quiescent =
                 with_worker(|w| w.exec.live() == 0 && w.pending_client_work() == 0);
             if quiescent && !announced_done {
@@ -590,6 +737,9 @@ impl Runtime {
             finished: AtomicUsize::new(0),
             injectors: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
             injector_nonempty: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            wake_fds: (0..n)
+                .map(|_| unsafe { sys::eventfd(0, sys::EFD_NONBLOCK | sys::EFD_CLOEXEC) })
+                .collect(),
         });
         let pin_plan = affinity::plan_pinning(n, cfg.dedicated);
         let mut handles = Vec::with_capacity(n);
@@ -619,6 +769,8 @@ impl Runtime {
                                 .map(|_| TrusteeEndpoint::default())
                                 .collect(),
                             in_delegated: Cell::new(false),
+                            serving_column: Cell::new(usize::MAX),
+                            reactor: reactor::Reactor::new(shared.wake_fds[id]),
                             registry: Registry::default(),
                             loops: 0,
                             served_requests: 0,
@@ -716,6 +868,10 @@ impl Runtime {
             return;
         }
         self.shared.shutdown.store(true, Ordering::Release);
+        // Pop every worker out of an idle epoll block so teardown is prompt.
+        for w in 0..self.shared.n() {
+            self.shared.wake(w);
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }

@@ -193,6 +193,18 @@ unsafe fn rc_inc_spin_ack_thunk(
     }
 }
 
+/// Is `thunk_raw` (a framed record's thunk word) one of the refcount
+/// *increment* thunks? Passed to the channel's admission pre-scan by the
+/// clone-ack spin: increment thunks touch only the property header — no
+/// user code, no reclamation, no runtime re-entry — so a batch made solely
+/// of them is safe to serve while a delegated closure is still running.
+/// (Decrements are deliberately excluded: a `-1` can reclaim the property,
+/// which runs the value's `Drop` — foreign user code.)
+pub(crate) fn is_rc_increment_thunk(thunk_raw: u64) -> bool {
+    thunk_raw == (rc_inc_ack_thunk as crate::channel::Thunk) as usize as u64
+        || thunk_raw == (rc_inc_spin_ack_thunk as crate::channel::Thunk) as usize as u64
+}
+
 /// entrust(): move the value in, allocate the PropBox here, respond with
 /// its address.
 unsafe fn entrust_thunk<T: 'static>(
@@ -844,11 +856,19 @@ impl<T: 'static> Trust<T> {
                     // edge comes from poll_detach, which consumes/publishes
                     // batches but dispatches NO completions — foreign user
                     // code (then-callbacks) must not run re-entrantly
-                    // under an in-progress delegated closure. The trustee
-                    // never blocks, so it always makes progress; the one
-                    // theoretical cycle (two trustees cloning each other's
-                    // properties inside delegated closures simultaneously)
-                    // is documented in DESIGN.md.
+                    // under an in-progress delegated closure. While
+                    // spinning we also serve incoming refcount-increment
+                    // batches addressed to *us*: two trustees cloning each
+                    // other's properties inside delegated closures at the
+                    // same instant otherwise wait on each other forever
+                    // (DESIGN.md's former known caveat; regression test
+                    // tests/clone_cycle.rs).
+                    // Publish any queued records toward this trustee first
+                    // (slot permitting): the peer's rc-only spin serve can
+                    // admit the +1 only if it is not batched together with
+                    // foreign records, so give it its own batch whenever
+                    // the edge allows.
+                    with_worker(|w| w.kick(self.trustee));
                     let acked = AtomicBool::new(false);
                     let flag_addr = &acked as *const AtomicBool as usize;
                     enqueue_on_worker(
@@ -869,7 +889,9 @@ impl<T: 'static> Trust<T> {
                     let mut backoff = Backoff::new();
                     while !acked.load(AtomicOrdering::Acquire) {
                         let progressed = with_worker(|w| w.poll_detach(self.trustee));
-                        if !progressed {
+                        let served =
+                            crate::runtime::serve_rc_increment_batches(is_rc_increment_thunk);
+                        if !progressed && served == 0 {
                             backoff.snooze();
                         }
                     }

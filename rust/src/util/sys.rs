@@ -1,5 +1,6 @@
 //! Minimal raw bindings to the platform C library for the few syscalls the
-//! crate needs (`mmap` fiber stacks, `sched_setaffinity` pinning).
+//! crate needs (`mmap` fiber stacks, `sched_setaffinity` pinning, and the
+//! `epoll`/`eventfd` readiness primitives behind the network reactor).
 //!
 //! The offline build environment has no crates.io access, so instead of the
 //! `libc` crate we declare exactly the symbols we use. `std` already links
@@ -10,7 +11,7 @@
 #![allow(non_camel_case_types)]
 #![cfg(target_os = "linux")]
 
-pub use std::ffi::{c_int, c_long, c_void};
+pub use std::ffi::{c_int, c_long, c_uint, c_void};
 
 pub type size_t = usize;
 pub type off_t = i64;
@@ -49,6 +50,40 @@ pub fn CPU_SET(cpu: usize, set: &mut cpu_set_t) {
     }
 }
 
+// ---------------------------------------------------------------------
+// epoll / eventfd (the readiness reactor)
+// ---------------------------------------------------------------------
+
+pub const EPOLL_CLOEXEC: c_int = 0x80000;
+
+pub const EPOLL_CTL_ADD: c_int = 1;
+pub const EPOLL_CTL_DEL: c_int = 2;
+pub const EPOLL_CTL_MOD: c_int = 3;
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+pub const EPOLLONESHOT: u32 = 1 << 30;
+
+pub const EFD_CLOEXEC: c_int = 0x80000;
+pub const EFD_NONBLOCK: c_int = 0x800;
+
+/// Linux `struct epoll_event`. The kernel packs it **only on x86-64**
+/// (`__EPOLL_PACKED`: 12 bytes, data at offset 4); other architectures
+/// use natural alignment (16 bytes, data at offset 8). Mirror that with a
+/// conditional repr — the rest of the crate is x86-64-only today (sysv64
+/// fiber assembly), but the binding must not silently corrupt the stack
+/// if that ever changes. Read fields by copy, never by reference.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+pub struct epoll_event {
+    pub events: u32,
+    pub data: u64,
+}
+
 extern "C" {
     pub fn mmap(
         addr: *mut c_void,
@@ -62,6 +97,19 @@ extern "C" {
     pub fn mprotect(addr: *mut c_void, len: size_t, prot: c_int) -> c_int;
     pub fn sysconf(name: c_int) -> c_long;
     pub fn sched_setaffinity(pid: pid_t, cpusetsize: size_t, cpuset: *const cpu_set_t) -> c_int;
+
+    pub fn epoll_create1(flags: c_int) -> c_int;
+    pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut epoll_event) -> c_int;
+    pub fn epoll_wait(
+        epfd: c_int,
+        events: *mut epoll_event,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+    pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    pub fn read(fd: c_int, buf: *mut c_void, count: size_t) -> isize;
+    pub fn write(fd: c_int, buf: *const c_void, count: size_t) -> isize;
+    pub fn close(fd: c_int) -> c_int;
 }
 
 #[cfg(test)]
@@ -83,6 +131,39 @@ mod tests {
         CPU_SET(4096, &mut set); // ignored, no panic
         assert_eq!(set.bits[0], 1);
         assert_eq!(set.bits[1], 1 << 6);
+    }
+
+    #[test]
+    fn epoll_eventfd_roundtrip() {
+        unsafe {
+            let ep = epoll_create1(EPOLL_CLOEXEC);
+            assert!(ep >= 0, "epoll_create1 failed");
+            let efd = eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC);
+            assert!(efd >= 0, "eventfd failed");
+            let mut ev = epoll_event { events: EPOLLIN, data: 0xABCD };
+            assert_eq!(epoll_ctl(ep, EPOLL_CTL_ADD, efd, &mut ev), 0);
+
+            // Nothing written yet: zero-timeout wait sees nothing.
+            let mut out = [epoll_event { events: 0, data: 0 }; 4];
+            assert_eq!(epoll_wait(ep, out.as_mut_ptr(), 4, 0), 0);
+
+            // After a write, the eventfd is readable and carries our token.
+            let one: u64 = 1;
+            assert_eq!(write(efd, &one as *const u64 as *const c_void, 8), 8);
+            let n = epoll_wait(ep, out.as_mut_ptr(), 4, 100);
+            assert_eq!(n, 1);
+            let data = out[0].data;
+            assert_eq!(data, 0xABCD);
+
+            // Draining the counter clears readiness (level-triggered).
+            let mut val: u64 = 0;
+            assert_eq!(read(efd, &mut val as *mut u64 as *mut c_void, 8), 8);
+            assert_eq!(val, 1);
+            assert_eq!(epoll_wait(ep, out.as_mut_ptr(), 4, 0), 0);
+
+            assert_eq!(close(efd), 0);
+            assert_eq!(close(ep), 0);
+        }
     }
 
     #[test]

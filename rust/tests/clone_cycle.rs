@@ -1,0 +1,164 @@
+//! Regression test for the mutual-clone spin cycle that DESIGN.md used to
+//! carry as a *Known caveat*: two trustees that clone each other's
+//! properties inside delegated closures at the same instant both take the
+//! clone-ack spin path and wait on each other — each one's `+1` can only
+//! be applied by the other, and neither is serving.
+//!
+//! The fix: while spinning for its own ack, a trustee also serves incoming
+//! batches that consist solely of refcount-*increment* records
+//! (`TrusteeEndpoint::serve_filtered` + `serve_rc_increment_batches`).
+//! Those records touch only the property header — no user code, no
+//! reclamation — so applying them re-entrantly under the in-progress
+//! delegated closure is sound, and it is exactly what breaks the cycle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use trustee::runtime::{with_worker, Runtime};
+use trustee::trust::local_trustee;
+
+#[test]
+fn mutual_clone_in_delegated_contexts_resolves() {
+    let rt = Runtime::builder().workers(2).build();
+    let a = rt.block_on(0, || local_trustee().entrust(1u64));
+    let b = rt.block_on(1, || local_trustee().entrust(2u64));
+
+    // Rendezvous gate: both closures wait until the *other* trustee is
+    // also inside its delegated closure before cloning, so the two spin
+    // paths reliably overlap (the deadline keeps a broken build from
+    // turning into a silent non-test).
+    let gate = Arc::new(AtomicU64::new(0));
+
+    let a1 = a.clone();
+    let b1 = b.clone();
+    let g1 = gate.clone();
+    let h1 = rt.spawn_on_handle(0, move || {
+        // Local apply on trustee 0: the closure runs in delegated context.
+        a1.apply(move |x| {
+            g1.fetch_add(1, Ordering::AcqRel);
+            let entered = Instant::now();
+            while g1.load(Ordering::Acquire) < 2
+                && entered.elapsed() < Duration::from_secs(5)
+            {
+                // OS yield: on a 1-CPU container the peer worker needs the
+                // core to reach its side of the rendezvous.
+                std::thread::yield_now();
+            }
+            // Clone a property trusteed by worker 1 → spin-ack path.
+            let extra = b1.clone();
+            drop(extra);
+            *x
+        })
+    });
+
+    let a2 = a.clone();
+    let b2 = b.clone();
+    let g2 = gate.clone();
+    let h2 = rt.spawn_on_handle(1, move || {
+        b2.apply(move |y| {
+            g2.fetch_add(1, Ordering::AcqRel);
+            let entered = Instant::now();
+            while g2.load(Ordering::Acquire) < 2
+                && entered.elapsed() < Duration::from_secs(5)
+            {
+                // OS yield: on a 1-CPU container the peer worker needs the
+                // core to reach its side of the rendezvous.
+                std::thread::yield_now();
+            }
+            // Clone a property trusteed by worker 0 → spin-ack path.
+            let extra = a2.clone();
+            drop(extra);
+            *y
+        })
+    });
+
+    // A regression here deadlocks; fail loudly instead of hanging the
+    // whole suite.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !(h1.is_finished() && h2.is_finished()) {
+        assert!(
+            Instant::now() < deadline,
+            "mutual-clone spin cycle did not resolve: both trustees are \
+             waiting for each other's refcount ack"
+        );
+        std::thread::yield_now();
+    }
+    assert_eq!(h1.join(), 1);
+    assert_eq!(h2.join(), 2);
+
+    // Both properties survived with coherent counts: the in-closure
+    // clones were acked (+1) and their drops (-1) balance out.
+    let a3 = a.clone();
+    let b3 = b.clone();
+    assert_eq!(rt.block_on(1, move || a3.apply(|x| *x)), 1);
+    assert_eq!(rt.block_on(0, move || b3.apply(|y| *y)), 2);
+
+    // Dropping the last handles reclaims both properties (no leaked or
+    // double-freed refcounts after the cycle dance).
+    drop((a, b));
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let live0 = rt.block_on(0, || with_worker(|w| w.registry.live));
+        let live1 = rt.block_on(1, || with_worker(|w| w.registry.live));
+        if live0 == 0 && live1 == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "properties leaked after mutual-clone cycle: {live0} on w0, {live1} on w1"
+        );
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn repeated_mutual_clones_stay_coherent() {
+    // Hammer the cycle breaker: many rounds of simultaneous cross-clones,
+    // each round re-entering the spin path, must neither deadlock nor
+    // corrupt a refcount.
+    let rt = Runtime::builder().workers(2).build();
+    let a = rt.block_on(0, || local_trustee().entrust(0u64));
+    let b = rt.block_on(1, || local_trustee().entrust(0u64));
+
+    for _round in 0..25 {
+        let gate = Arc::new(AtomicU64::new(0));
+        let (a1, b1, g1) = (a.clone(), b.clone(), gate.clone());
+        let h1 = rt.spawn_on_handle(0, move || {
+            a1.apply(move |x| {
+                g1.fetch_add(1, Ordering::AcqRel);
+                let t0 = Instant::now();
+                while g1.load(Ordering::Acquire) < 2 && t0.elapsed() < Duration::from_secs(2) {
+                    std::thread::yield_now();
+                }
+                drop(b1.clone());
+                *x += 1;
+            })
+        });
+        let (a2, b2, g2) = (a.clone(), b.clone(), gate.clone());
+        let h2 = rt.spawn_on_handle(1, move || {
+            b2.apply(move |y| {
+                g2.fetch_add(1, Ordering::AcqRel);
+                let t0 = Instant::now();
+                while g2.load(Ordering::Acquire) < 2 && t0.elapsed() < Duration::from_secs(2) {
+                    std::thread::yield_now();
+                }
+                drop(a2.clone());
+                *y += 1;
+            })
+        });
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !(h1.is_finished() && h2.is_finished()) {
+            assert!(Instant::now() < deadline, "cycle breaker wedged mid-round");
+            std::thread::yield_now();
+        }
+        h1.join();
+        h2.join();
+    }
+
+    let a4 = a.clone();
+    let b4 = b.clone();
+    assert_eq!(rt.block_on(1, move || a4.apply(|x| *x)), 25);
+    assert_eq!(rt.block_on(0, move || b4.apply(|y| *y)), 25);
+    drop((a, b));
+    rt.shutdown();
+}

@@ -60,7 +60,7 @@ fn client_disconnect_mid_pipeline_leaves_server_healthy() {
     let mut cursor = proto::FrameCursor::new();
     let mut chunk = [0u8; 4096];
     let resp = loop {
-        if let Some(r) = cursor.next_response(&rbuf) {
+        if let Some(r) = cursor.next_response(&rbuf).unwrap() {
             break r;
         }
         let n = c.read(&mut chunk).unwrap();
@@ -92,7 +92,7 @@ fn truncated_request_is_simply_ignored_until_complete() {
     let mut cursor = proto::FrameCursor::new();
     let mut chunk = [0u8; 1024];
     let resp = loop {
-        if let Some(r) = cursor.next_response(&rbuf) {
+        if let Some(r) = cursor.next_response(&rbuf).unwrap() {
             break r;
         }
         let n = c.read(&mut chunk).unwrap();
