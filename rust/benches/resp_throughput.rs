@@ -1,0 +1,76 @@
+//! E16: RESP (Redis-protocol) front end throughput — trust vs mutex
+//! backends under a fig-9-style write-percentage sweep, plus the response
+//! buffer pool hit rate (the shared engine recycles per-response buffers
+//! instead of allocating one per completion).
+//!
+//! Usage: cargo bench --bench resp_throughput -- \
+//!            [--dist uniform|zipf] [--keys N] [--pcts 0,5,25,...] [--quick]
+
+use trustee::bench::print_table;
+use trustee::kvstore::BackendKind;
+use trustee::server::{run_resp_load, RespLoadConfig, RespServer, RespServerConfig};
+use trustee::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let dist = args.get_str("dist", "uniform");
+    let keys: u64 = args.get("keys", 1_000);
+    let default_pcts: &[u32] = if quick { &[5, 50] } else { &[0, 5, 25, 50, 75, 100] };
+    let pcts = args.get_list::<u32>("pcts", default_pcts);
+    let ops: u64 = args.get("ops", if quick { 2_000 } else { 5_000 });
+    let client_threads: usize = args.get("client-threads", 2);
+
+    println!(
+        "# E16: RESP front end, kOPs vs write % ({keys} keys, {dist}); \
+         cell = kOPs (response-buffer pool hit rate)"
+    );
+
+    let header = vec!["write_pct", "TrustD2", "TrustS", "Mutex"];
+    let mut rows = Vec::new();
+    for &pct in &pcts {
+        let mut row = vec![pct.to_string()];
+        for (backend, ded) in [
+            (BackendKind::Trust { shards: 8 }, 2usize),
+            (BackendKind::Trust { shards: 8 }, 0),
+            (BackendKind::Mutex, 0),
+        ] {
+            let server = RespServer::start(RespServerConfig {
+                workers: 4,
+                dedicated: ded,
+                backend,
+                addr: "127.0.0.1:0".into(),
+                ..Default::default()
+            });
+            server.prefill(keys, 16);
+            let stats = run_resp_load(&RespLoadConfig {
+                addr: server.addr(),
+                threads: client_threads,
+                pipeline: 32,
+                ops_per_thread: ops,
+                keys,
+                dist: dist.clone(),
+                write_pct: pct,
+                val_len: 16,
+                seed: 0xE16,
+            });
+            if !stats.ok() {
+                eprintln!("client errors: {:?}", stats.errors);
+            }
+            // Connection fibers flush their pool counters on exit; give
+            // them a beat after the load threads dropped their sockets.
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            let t = server.metrics().totals();
+            let hit_rate = t.pool_hits as f64 / ((t.pool_hits + t.pool_misses).max(1)) as f64;
+            row.push(format!(
+                "{:.1} ({:.0}%)",
+                stats.throughput() / 1e3,
+                hit_rate * 100.0
+            ));
+            server.stop();
+        }
+        eprintln!("done write_pct={pct}");
+        rows.push(row);
+    }
+    print_table(&format!("E16 {dist}: RESP kOPs vs write %"), &header, &rows);
+}

@@ -26,12 +26,23 @@ pub trait ConcurrentMap<K, V>: Send + Sync {
     fn get(&self, k: &K) -> Option<V>;
     fn insert(&self, k: K, v: V) -> Option<V>;
     fn remove(&self, k: &K) -> Option<V>;
+    /// Presence check without cloning the value out — and, on the
+    /// RwLock-based maps, without taking the write lock (RESP `EXISTS`
+    /// is read-only and must scale like one).
+    fn contains(&self, k: &K) -> bool;
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
     /// Read-modify-write (used by fetch-and-add style workloads).
     fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R;
+    /// Read-modify-write that can also **insert or remove**: `f` receives
+    /// the entry slot (`None` when absent) under the shard's write lock;
+    /// leaving `Some` (re)inserts, leaving `None` removes. Used by the
+    /// RESP front end's atomic `INCR`.
+    fn entry_update<R>(&self, k: K, f: &mut dyn FnMut(&mut Option<V>) -> R) -> R;
+    /// Remove every entry (RESP `FLUSHALL`).
+    fn clear(&self);
 }
 
 #[inline]
@@ -87,6 +98,11 @@ macro_rules! sharded_map {
                 shard.$write().unwrap().remove(k)
             }
 
+            fn contains(&self, k: &K) -> bool {
+                let shard = &self.shards[shard_of(k, self.shards.len())];
+                shard.$read().unwrap().contains_key(k)
+            }
+
             fn len(&self) -> usize {
                 self.shards.iter().map(|s| s.$read().unwrap().len()).sum()
             }
@@ -94,6 +110,23 @@ macro_rules! sharded_map {
             fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R {
                 let shard = &self.shards[shard_of(k, self.shards.len())];
                 f(shard.$write().unwrap().get_mut(k))
+            }
+
+            fn entry_update<R>(&self, k: K, f: &mut dyn FnMut(&mut Option<V>) -> R) -> R {
+                let shard = &self.shards[shard_of(&k, self.shards.len())];
+                let mut g = shard.$write().unwrap();
+                let mut slot = g.remove(&k);
+                let r = f(&mut slot);
+                if let Some(v) = slot {
+                    g.insert(k, v);
+                }
+                r
+            }
+
+            fn clear(&self) {
+                for s in &self.shards {
+                    s.$write().unwrap().clear();
+                }
             }
         }
     };
@@ -168,6 +201,11 @@ where
         shard.write().unwrap().remove(k)
     }
 
+    fn contains(&self, k: &K) -> bool {
+        let shard = &self.shards[shard_of(k, self.shards.len())];
+        shard.read().unwrap().contains_key(k)
+    }
+
     fn len(&self) -> usize {
         self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
@@ -175,6 +213,23 @@ where
     fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R {
         let shard = &self.shards[shard_of(k, self.shards.len())];
         f(shard.write().unwrap().get_mut(k))
+    }
+
+    fn entry_update<R>(&self, k: K, f: &mut dyn FnMut(&mut Option<V>) -> R) -> R {
+        let shard = &self.shards[shard_of(&k, self.shards.len())];
+        let mut g = shard.write().unwrap();
+        let mut slot = g.remove(&k);
+        let r = f(&mut slot);
+        if let Some(v) = slot {
+            g.insert(k, v);
+        }
+        r
+    }
+
+    fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
     }
 }
 
@@ -238,6 +293,67 @@ mod tests {
         assert_eq!(m.get(&1), Some(11));
         let missing = m.update(&99, &mut |v| v.is_none());
         assert!(missing);
+    }
+
+    #[test]
+    fn entry_update_inserts_and_removes() {
+        fn exercise<M: ConcurrentMap<u64, u64>>(m: &M) {
+            // Insert through the slot.
+            let r = m.entry_update(1, &mut |slot| {
+                assert!(slot.is_none());
+                *slot = Some(10);
+                "inserted"
+            });
+            assert_eq!(r, "inserted");
+            assert_eq!(m.get(&1), Some(10));
+            // In-place RMW through the slot.
+            m.entry_update(1, &mut |slot| {
+                *slot.as_mut().unwrap() += 5;
+            });
+            assert_eq!(m.get(&1), Some(15));
+            // Remove by leaving None.
+            m.entry_update(1, &mut |slot| {
+                assert_eq!(slot.take(), Some(15));
+            });
+            assert_eq!(m.get(&1), None);
+            assert_eq!(m.len(), 0);
+        }
+        exercise(&ShardedMutexMap::new(8));
+        exercise(&ShardedRwMap::new(8));
+        exercise(&SwiftMap::new(8));
+    }
+
+    #[test]
+    fn contains_tracks_membership() {
+        fn exercise<M: ConcurrentMap<u64, u64>>(m: &M) {
+            assert!(!m.contains(&1));
+            m.insert(1, 10);
+            assert!(m.contains(&1));
+            m.remove(&1);
+            assert!(!m.contains(&1));
+        }
+        exercise(&ShardedMutexMap::new(8));
+        exercise(&ShardedRwMap::new(8));
+        exercise(&SwiftMap::new(8));
+    }
+
+    #[test]
+    fn clear_empties_every_shard() {
+        fn exercise<M: ConcurrentMap<u64, u64>>(m: &M) {
+            for i in 0..100 {
+                m.insert(i, i);
+            }
+            assert_eq!(m.len(), 100);
+            m.clear();
+            assert_eq!(m.len(), 0);
+            assert_eq!(m.get(&7), None);
+            // Still usable after clear.
+            m.insert(7, 7);
+            assert_eq!(m.get(&7), Some(7));
+        }
+        exercise(&ShardedMutexMap::new(8));
+        exercise(&ShardedRwMap::new(8));
+        exercise(&SwiftMap::new(8));
     }
 
     #[test]

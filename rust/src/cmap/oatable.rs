@@ -89,6 +89,14 @@ impl<K: Eq + std::hash::Hash, V> OaTable<K, V> {
         self.slots.len()
     }
 
+    /// Remove every entry, keeping the allocated slot array.
+    pub fn clear(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.len = 0;
+    }
+
     #[inline]
     fn distance(&self, hash: u64, slot: usize) -> usize {
         let home = (hash as usize) & self.mask;

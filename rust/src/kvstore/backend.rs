@@ -19,12 +19,19 @@
 use crate::cmap::{fxhash, ConcurrentMap, OaTable, ShardedMutexMap, ShardedRwMap, SwiftMap};
 use crate::trust::{Trust, TrusteeRef};
 use crate::runtime::Runtime;
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
 use std::sync::Arc;
 
 /// Completion callback for a get (owned copy of the value, or None).
 pub type GetCb = Box<dyn FnOnce(Option<Vec<u8>>) + 'static>;
-/// Completion callback for put/del (true = key existed before).
+/// Completion callback for put/del/exists (true = key existed before).
 pub type AckCb = Box<dyn FnOnce(bool) + 'static>;
+/// Completion for incr: `Ok(new_value)` or `Err(())` when the stored
+/// value is not an ASCII integer (or the increment overflows).
+pub type IncrCb = Box<dyn FnOnce(Result<i64, ()>) + 'static>;
+/// Completion for flush_all.
+pub type FlushCb = Box<dyn FnOnce() + 'static>;
 
 /// Callback-style KV interface. Lock backends complete inline; the Trust
 /// backend completes when the delegation response arrives.
@@ -32,9 +39,35 @@ pub trait AsyncKv: Send + Sync + 'static {
     fn get(&self, key: Vec<u8>, cb: GetCb);
     fn put(&self, key: Vec<u8>, val: Vec<u8>, cb: AckCb);
     fn del(&self, key: Vec<u8>, cb: AckCb);
+    /// Key-presence check (RESP `EXISTS`). Backends override to avoid
+    /// copying the value out.
+    fn exists(&self, key: Vec<u8>, cb: AckCb) {
+        self.get(key, Box::new(move |v| cb(v.is_some())));
+    }
+    /// Atomic ASCII-decimal increment with Redis `INCR` semantics: a
+    /// missing key counts as 0, a non-integer value (or overflow) is an
+    /// error and leaves the entry untouched. Atomic per key — delegated
+    /// to the owning trustee for Trust, under the shard's write lock for
+    /// the lock backends.
+    fn incr(&self, key: Vec<u8>, delta: i64, cb: IncrCb);
+    /// Remove every entry (RESP `FLUSHALL`).
+    fn flush_all(&self, cb: FlushCb);
     /// Total entries (diagnostic; may take locks).
     fn len(&self) -> usize;
     fn name(&self) -> &'static str;
+}
+
+/// Redis `INCR` semantics on an entry slot: missing = 0, value must be
+/// an ASCII `i64`, overflow errors out. On success the slot holds the
+/// new value's decimal encoding; on error it is left untouched.
+fn incr_slot(slot: &mut Option<Vec<u8>>, delta: i64) -> Result<i64, ()> {
+    let cur: i64 = match slot {
+        None => 0,
+        Some(v) => std::str::from_utf8(v).map_err(|_| ())?.parse().map_err(|_| ())?,
+    };
+    let next = cur.checked_add(delta).ok_or(())?;
+    *slot = Some(next.to_string().into_bytes());
+    Ok(next)
 }
 
 /// Any [`ConcurrentMap`] is an inline-completing [`AsyncKv`].
@@ -60,6 +93,23 @@ impl<M: ConcurrentMap<Vec<u8>, Vec<u8>> + 'static> AsyncKv for LockedKv<M> {
 
     fn del(&self, key: Vec<u8>, cb: AckCb) {
         cb(self.map.remove(&key).is_some());
+    }
+
+    fn exists(&self, key: Vec<u8>, cb: AckCb) {
+        // Presence check without cloning the value out and — on the
+        // RwLock-based baselines — without the write lock a read-modify-
+        // write path would take (EXISTS is read-only and must scale like
+        // the read it is).
+        cb(self.map.contains(&key));
+    }
+
+    fn incr(&self, key: Vec<u8>, delta: i64, cb: IncrCb) {
+        cb(self.map.entry_update(key, &mut |slot| incr_slot(slot, delta)));
+    }
+
+    fn flush_all(&self, cb: FlushCb) {
+        self.map.clear();
+        cb();
     }
 
     fn len(&self) -> usize {
@@ -125,6 +175,52 @@ impl AsyncKv for TrustKv {
     fn del(&self, key: Vec<u8>, cb: AckCb) {
         self.shard(&key)
             .apply_with_then(|t, k: Vec<u8>| t.remove(&k).is_some(), key, move |e| cb(e));
+    }
+
+    fn exists(&self, key: Vec<u8>, cb: AckCb) {
+        // Trustee-local presence check: no value copy travels back.
+        self.shard(&key)
+            .apply_with_then(|t, k: Vec<u8>| t.contains_key(&k), key, move |e| cb(e));
+    }
+
+    fn incr(&self, key: Vec<u8>, delta: i64, cb: IncrCb) {
+        // The read-modify-write runs entirely on the owning trustee, so
+        // it is atomic per key with zero synchronization (the paper's
+        // core claim applied to a compound operation).
+        self.shard(&key).apply_with_then(
+            move |t, k: Vec<u8>| {
+                let mut slot = t.remove(&k);
+                let r = incr_slot(&mut slot, delta);
+                if let Some(v) = slot {
+                    t.insert(k, v);
+                }
+                r
+            },
+            key,
+            move |r| cb(r),
+        );
+    }
+
+    fn flush_all(&self, cb: FlushCb) {
+        // Fan one clear out to every shard's trustee; answer when the
+        // last completion lands (all completions run on this worker).
+        let remaining = Rc::new(Cell::new(self.shards.len()));
+        let done = Rc::new(RefCell::new(Some(cb)));
+        for s in &self.shards {
+            let remaining = remaining.clone();
+            let done = done.clone();
+            s.apply_then(
+                |t| t.clear(),
+                move |_| {
+                    remaining.set(remaining.get() - 1);
+                    if remaining.get() == 0 {
+                        if let Some(cb) = done.borrow_mut().take() {
+                            cb();
+                        }
+                    }
+                },
+            );
+        }
     }
 
     fn len(&self) -> usize {
@@ -268,6 +364,136 @@ mod tests {
             exercise_backend(kv, &rt);
         }
         rt.shutdown();
+    }
+
+    fn exercise_redis_ops(kv: Arc<dyn AsyncKv>, rt: &Runtime) {
+        let kv2 = kv.clone();
+        let worker = rt.workers() - 1;
+        rt.block_on(worker, move || {
+            let steps = Arc::new(AtomicUsize::new(0));
+            // INCR on a missing key starts from 0.
+            let s = steps.clone();
+            kv2.incr(
+                b"ctr".to_vec(),
+                5,
+                Box::new(move |r| {
+                    assert_eq!(r, Ok(5));
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 1 {
+                crate::fiber::yield_now();
+            }
+            // INCR again: reads the stored ASCII value back.
+            let s = steps.clone();
+            kv2.incr(
+                b"ctr".to_vec(),
+                2,
+                Box::new(move |r| {
+                    assert_eq!(r, Ok(7));
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 2 {
+                crate::fiber::yield_now();
+            }
+            // Non-integer value: an error, and the entry is untouched.
+            let s = steps.clone();
+            kv2.put(
+                b"text".to_vec(),
+                b"not-a-number".to_vec(),
+                Box::new(move |_| {
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 3 {
+                crate::fiber::yield_now();
+            }
+            let s = steps.clone();
+            kv2.incr(
+                b"text".to_vec(),
+                1,
+                Box::new(move |r| {
+                    assert_eq!(r, Err(()));
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 4 {
+                crate::fiber::yield_now();
+            }
+            let s = steps.clone();
+            kv2.get(
+                b"text".to_vec(),
+                Box::new(move |v| {
+                    assert_eq!(v.as_deref(), Some(&b"not-a-number"[..]));
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 5 {
+                crate::fiber::yield_now();
+            }
+            // EXISTS without copying: hit then miss.
+            let s = steps.clone();
+            kv2.exists(
+                b"ctr".to_vec(),
+                Box::new(move |e| {
+                    assert!(e);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            let s = steps.clone();
+            kv2.exists(
+                b"nope".to_vec(),
+                Box::new(move |e| {
+                    assert!(!e);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 7 {
+                crate::fiber::yield_now();
+            }
+            // FLUSHALL empties every shard.
+            let s = steps.clone();
+            kv2.flush_all(Box::new(move || {
+                s.fetch_add(1, Ordering::Relaxed);
+            }));
+            while steps.load(Ordering::Relaxed) != 8 {
+                crate::fiber::yield_now();
+            }
+        });
+        assert_eq!(kv.len(), 0, "flush_all must empty the store");
+    }
+
+    #[test]
+    fn trust_backend_redis_ops() {
+        let rt = Runtime::builder().workers(3).build();
+        let kv = BackendKind::Trust { shards: 4 }.build(&rt, &[0, 1]);
+        exercise_redis_ops(kv, &rt);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn lock_backends_redis_ops() {
+        let rt = Runtime::builder().workers(2).build();
+        for kind in [BackendKind::Mutex, BackendKind::RwLock, BackendKind::Swift] {
+            let kv = kind.build(&rt, &[]);
+            exercise_redis_ops(kv, &rt);
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn incr_slot_semantics() {
+        let mut slot = None;
+        assert_eq!(incr_slot(&mut slot, 1), Ok(1));
+        assert_eq!(slot.as_deref(), Some(&b"1"[..]));
+        assert_eq!(incr_slot(&mut slot, 41), Ok(42));
+        assert_eq!(slot.as_deref(), Some(&b"42"[..]));
+        let mut bad = Some(b"xyz".to_vec());
+        assert_eq!(incr_slot(&mut bad, 1), Err(()));
+        assert_eq!(bad.as_deref(), Some(&b"xyz"[..]), "error leaves slot untouched");
+        let mut max = Some(i64::MAX.to_string().into_bytes());
+        assert_eq!(incr_slot(&mut max, 1), Err(()), "overflow is an error");
     }
 
     #[test]

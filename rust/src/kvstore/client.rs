@@ -2,12 +2,17 @@
 //! client continuously maintains a queue of parallel queries over the
 //! socket, such that the server always has new requests to serve", with
 //! out-of-order response acceptance and per-request latency tracking.
+//!
+//! I/O failures (a server dropping the connection mid-run, malformed
+//! response frames) are surfaced in [`LoadStats::errors`] with the thread
+//! and progress context, instead of panicking the client thread: a bench
+//! or test run fails descriptively, never by aborting.
 
 use super::proto::{self, FrameCursor};
 use crate::util::stats::LatencyHist;
 use crate::util::{KeyDist, Rng};
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
@@ -36,22 +41,40 @@ pub struct LoadConfig {
     pub seed: u64,
 }
 
-/// Aggregated results.
+/// Aggregated results. `errors` holds one descriptive entry per client
+/// thread that failed; operations completed before the failure still
+/// count toward `ops`/`hist`.
 pub struct LoadStats {
     pub ops: u64,
     pub elapsed: std::time::Duration,
     pub hist: LatencyHist,
     pub hits: u64,
     pub misses: u64,
+    pub errors: Vec<String>,
 }
 
 impl LoadStats {
     pub fn throughput(&self) -> f64 {
         self.ops as f64 / self.elapsed.as_secs_f64()
     }
+
+    /// True when every client thread ran to completion.
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
 }
 
-/// Run the workload; returns aggregate stats.
+/// Per-thread result: stats so far plus the error that ended the run
+/// early, if any.
+struct ThreadResult {
+    ops: u64,
+    hist: LatencyHist,
+    hits: u64,
+    misses: u64,
+    error: Option<String>,
+}
+
+/// Run the workload; returns aggregate stats (never panics on I/O).
 pub fn run_load(cfg: &LoadConfig) -> LoadStats {
     let start = Instant::now();
     let handles: Vec<_> = (0..cfg.threads)
@@ -64,28 +87,61 @@ pub fn run_load(cfg: &LoadConfig) -> LoadStats {
     let mut ops = 0;
     let mut hits = 0;
     let mut misses = 0;
-    for h in handles {
-        let (h_ops, h_hist, h_hits, h_misses) = h.join().expect("client thread");
-        ops += h_ops;
-        hits += h_hits;
-        misses += h_misses;
-        hist.merge(&h_hist);
+    let mut errors = Vec::new();
+    for (t, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(r) => {
+                ops += r.ops;
+                hits += r.hits;
+                misses += r.misses;
+                hist.merge(&r.hist);
+                if let Some(e) = r.error {
+                    errors.push(format!("client thread {t}: {e}"));
+                }
+            }
+            Err(_) => errors.push(format!("client thread {t} panicked")),
+        }
     }
-    LoadStats { ops, elapsed: start.elapsed(), hist, hits, misses }
+    LoadStats { ops, elapsed: start.elapsed(), hist, hits, misses, errors }
 }
 
-fn run_one_connection(cfg: &LoadConfig, tid: u64) -> (u64, LatencyHist, u64, u64) {
+fn run_one_connection(cfg: &LoadConfig, tid: u64) -> ThreadResult {
     let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0x9E37_79B9)));
     let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
-    let mut stream = TcpStream::connect(cfg.addr).expect("connect");
-    stream.set_nodelay(true).ok();
-    stream.set_nonblocking(true).expect("nonblocking");
 
     let mut hist = LatencyHist::new();
-    let mut sent = 0u64;
     let mut done = 0u64;
     let mut hits = 0u64;
     let mut misses = 0u64;
+
+    // One macro instead of `.unwrap()`: bail out with the stats gathered
+    // so far and a message carrying thread progress.
+    macro_rules! fail {
+        ($($arg:tt)*) => {
+            return ThreadResult {
+                ops: done,
+                hist,
+                hits,
+                misses,
+                error: Some(format!(
+                    "after {done}/{} ops: {}",
+                    cfg.ops_per_thread,
+                    format!($($arg)*)
+                )),
+            }
+        };
+    }
+
+    let mut stream = match TcpStream::connect(cfg.addr) {
+        Ok(s) => s,
+        Err(e) => fail!("connect {}: {e}", cfg.addr),
+    };
+    stream.set_nodelay(true).ok();
+    if let Err(e) = stream.set_nonblocking(true) {
+        fail!("nonblocking: {e}");
+    }
+
+    let mut sent = 0u64;
     let mut next_id = 0u64;
     let mut in_flight: HashMap<u64, Instant> = HashMap::new();
     let mut out = Vec::with_capacity(64 * 1024);
@@ -116,25 +172,31 @@ fn run_one_connection(cfg: &LoadConfig, tid: u64) -> (u64, LatencyHist, u64, u64
                 break;
             }
             match stream.write(&out[wcur..]) {
-                Ok(0) => panic!("server closed"),
+                Ok(0) => fail!("server closed connection mid-write"),
                 Ok(n) => wcur += n,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) => panic!("write: {e}"),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => fail!("write: {e}"),
             }
         }
         // Drain responses.
         let mut chunk = [0u8; 32 * 1024];
         match stream.read(&mut chunk) {
-            Ok(0) => panic!("server closed"),
+            Ok(0) => fail!("server closed connection mid-run"),
             Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
-            Err(e) => panic!("read: {e}"),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => fail!("read: {e}"),
         }
-        while let Some(resp) = cursor
-            .next_response(&inbuf)
-            .expect("malformed response from server")
-        {
-            let t0 = in_flight.remove(&resp.id).expect("unexpected response id");
+        loop {
+            let resp = match cursor.next_response(&inbuf) {
+                Ok(Some(r)) => r,
+                Ok(None) => break,
+                Err(e) => fail!("malformed response from server: {e}"),
+            };
+            let Some(t0) = in_flight.remove(&resp.id) else {
+                fail!("response for unknown request id {}", resp.id);
+            };
             hist.record(t0.elapsed().as_nanos() as u64);
             if resp.status == proto::ST_OK {
                 hits += 1;
@@ -145,7 +207,7 @@ fn run_one_connection(cfg: &LoadConfig, tid: u64) -> (u64, LatencyHist, u64, u64
         }
         proto::compact(&mut inbuf, &mut cursor);
     }
-    (done, hist, hits, misses)
+    ThreadResult { ops: done, hist, hits, misses, error: None }
 }
 
 #[cfg(test)]
@@ -173,6 +235,7 @@ mod tests {
             val_len: 16,
             seed: 42,
         });
+        assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 1000);
         // Table was prefilled: reads must hit.
         assert_eq!(stats.misses, 0, "prefilled keys must not miss");
@@ -200,8 +263,70 @@ mod tests {
             val_len: 16,
             seed: 7,
         });
+        assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 600);
         assert_eq!(stats.misses, 0);
         server.stop();
+    }
+
+    #[test]
+    fn connection_refused_is_an_error_not_a_panic() {
+        // Nothing listens here: the run must come back with a descriptive
+        // error for every thread instead of aborting the process.
+        let stats = run_load(&LoadConfig {
+            addr: "127.0.0.1:1".parse().unwrap(),
+            threads: 2,
+            pipeline: 4,
+            ops_per_thread: 10,
+            keys: 10,
+            dist: "uniform".into(),
+            write_pct: 0,
+            val_len: 8,
+            seed: 1,
+        });
+        assert_eq!(stats.ops, 0);
+        assert_eq!(stats.errors.len(), 2);
+        for e in &stats.errors {
+            assert!(e.contains("connect"), "unhelpful error: {e}");
+            assert!(e.contains("0/10 ops"), "missing progress context: {e}");
+        }
+    }
+
+    #[test]
+    fn server_dropping_mid_run_fails_descriptively() {
+        // Start a real server, run a long load, stop the server under it:
+        // threads must report the dropped connection, not abort.
+        let server = KvServer::start(KvServerConfig {
+            workers: 2,
+            backend: BackendKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        server.prefill(10, 16);
+        let addr = server.addr();
+        let loader = std::thread::spawn(move || {
+            run_load(&LoadConfig {
+                addr,
+                threads: 1,
+                pipeline: 8,
+                ops_per_thread: u64::MAX / 2, // effectively endless
+                keys: 10,
+                dist: "uniform".into(),
+                write_pct: 5,
+                val_len: 16,
+                seed: 3,
+            })
+        });
+        // Let it get going, then yank the server.
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        server.stop();
+        let stats = loader.join().unwrap();
+        assert_eq!(stats.errors.len(), 1, "expected one failed thread");
+        assert!(
+            stats.errors[0].contains("server closed")
+                || stats.errors[0].contains("read:")
+                || stats.errors[0].contains("write:"),
+            "unhelpful error: {}",
+            stats.errors[0]
+        );
     }
 }

@@ -11,11 +11,14 @@
 
 pub mod backend;
 pub mod client;
-pub mod netfiber;
 pub mod proto;
 pub mod server;
+
+/// The socket helpers moved into the protocol-agnostic server core; this
+/// re-export keeps the historical `kvstore::netfiber` path working.
+pub use crate::server::netfiber;
 
 pub use backend::{AsyncKv, BackendKind, TrustKv};
 pub use client::{key_bytes, run_load, LoadConfig, LoadStats};
 pub use netfiber::NetPolicy;
-pub use server::{KvServer, KvServerConfig};
+pub use server::{KvProtocol, KvServer, KvServerConfig};

@@ -1,23 +1,25 @@
-//! The multi-threaded TCP key-value server (§6.3).
+//! The multi-threaded TCP key-value server (§6.3), as a [`Protocol`]
+//! front end on the shared delegated server core
+//! ([`crate::server::engine`]).
 //!
 //! "Each worker-thread receives GET or PUT queries from one or more
 //! connections, and applies these to the backend hashmap. Both reading
 //! requests and sending results is done in batches ... the client accepts
-//! responses out-of-order." Each accepted connection becomes a fiber on a
-//! socket worker; requests are dispatched to the backend via callbacks
-//! that append responses (tagged with the request id) to the connection's
-//! write buffer as they complete — hence naturally out of order.
+//! responses out-of-order." The engine owns the connection loop (ingest,
+//! backpressure, spooling, drain-on-stop); this module contributes only
+//! the wire protocol: id-tagged binary frames parsed by
+//! [`proto::FrameCursor`], dispatched to an [`AsyncKv`] backend, completed
+//! **out of order** as their delegations finish
+//! ([`ResponseOrder::OutOfOrder`]).
 
 use super::backend::{AsyncKv, BackendKind};
-use super::netfiber::{self, net_wait, read_burst, write_pending, NetPolicy, ReadOutcome};
-use super::proto::{self, FrameCursor};
-use crate::fiber;
+use super::proto::{self, FrameCursor, ProtoError};
 use crate::runtime::Runtime;
-use std::cell::RefCell;
-use std::net::{TcpListener, TcpStream};
-use std::os::unix::io::AsRawFd;
-use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::server::engine::{
+    Completion, ConnMetrics, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore,
+};
+use crate::server::netfiber::{self, NetPolicy};
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 
 /// Server configuration.
@@ -53,13 +55,106 @@ impl KvServerConfig {
     }
 }
 
-/// A running KV server (owns its runtime and accept thread).
-pub struct KvServer {
-    rt: Option<Runtime>,
+/// Why a KV byte stream turned bad. Rendered by
+/// [`KvProtocol::render_error`] as an [`proto::ST_BAD_REQUEST`] response
+/// (so well-meaning-but-buggy clients see *why*) before the engine drains
+/// and closes the connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvFault {
+    /// Framing is broken; there is no trustworthy request id to answer
+    /// to, so the response carries id `u64::MAX` and the reason text.
+    Frame(ProtoError),
+    /// Syntactically valid frame with an op we do not speak.
+    UnknownOp { id: u64 },
+}
+
+/// The binary KV wire protocol on the shared engine.
+pub struct KvProtocol {
     backend: Arc<dyn AsyncKv>,
-    local_addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl KvProtocol {
+    pub fn new(backend: Arc<dyn AsyncKv>) -> KvProtocol {
+        KvProtocol { backend }
+    }
+}
+
+impl Protocol for KvProtocol {
+    type Request = proto::Request;
+    type Error = KvFault;
+
+    /// Requests carry 64-bit ids; the client matches responses, so each
+    /// one ships as soon as its delegation completes.
+    const ORDER: ResponseOrder = ResponseOrder::OutOfOrder;
+
+    fn parse(&mut self, inbuf: &mut Inbuf) -> Result<Option<proto::Request>, KvFault> {
+        let mut cursor = FrameCursor::new();
+        match cursor.next_request(inbuf.unparsed()) {
+            Ok(Some(req)) => {
+                inbuf.advance(cursor.consumed);
+                if !matches!(req.op, proto::OP_GET | proto::OP_PUT | proto::OP_DEL) {
+                    return Err(KvFault::UnknownOp { id: req.id });
+                }
+                Ok(Some(req))
+            }
+            Ok(None) => Ok(None),
+            Err(e) => Err(KvFault::Frame(e)),
+        }
+    }
+
+    fn render_error(&mut self, err: &KvFault, out: &mut Vec<u8>) {
+        match err {
+            KvFault::UnknownOp { id } => {
+                proto::write_response(out, *id, proto::ST_BAD_REQUEST, &[]);
+            }
+            KvFault::Frame(e) => {
+                let reason = e.to_string();
+                proto::write_response(out, u64::MAX, proto::ST_BAD_REQUEST, reason.as_bytes());
+            }
+        }
+    }
+
+    fn dispatch(&mut self, req: proto::Request, done: Completion) {
+        let id = req.id;
+        match req.op {
+            proto::OP_GET => self.backend.get(
+                req.key,
+                Box::new(move |v| {
+                    let mut b = done.checkout();
+                    match v {
+                        Some(val) => proto::write_response(&mut b, id, proto::ST_OK, &val),
+                        None => proto::write_response(&mut b, id, proto::ST_NOT_FOUND, &[]),
+                    }
+                    done.complete(b);
+                }),
+            ),
+            proto::OP_PUT => self.backend.put(
+                req.key,
+                req.val,
+                Box::new(move |_| {
+                    let mut b = done.checkout();
+                    proto::write_response(&mut b, id, proto::ST_OK, &[]);
+                    done.complete(b);
+                }),
+            ),
+            _ => self.backend.del(
+                req.key,
+                Box::new(move |existed| {
+                    let st = if existed { proto::ST_OK } else { proto::ST_NOT_FOUND };
+                    let mut b = done.checkout();
+                    proto::write_response(&mut b, id, st, &[]);
+                    done.complete(b);
+                }),
+            ),
+        }
+    }
+}
+
+/// A running KV server (owns its runtime and accept path via the shared
+/// [`ServerCore`]).
+pub struct KvServer {
+    core: ServerCore,
+    backend: Arc<dyn AsyncKv>,
     pub ops_served: Arc<AtomicU64>,
 }
 
@@ -73,75 +168,27 @@ impl KvServer {
     /// Start a server, reporting configuration/bind problems as a
     /// descriptive error *before* any worker thread is spawned.
     pub fn try_start(cfg: KvServerConfig) -> Result<KvServer, String> {
-        cfg.validate()?;
-        let listener =
-            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
-        let local_addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
-        listener
-            .set_nonblocking(true)
-            .map_err(|e| format!("nonblocking listener: {e}"))?;
-
-        let rt = Runtime::builder()
-            .workers(cfg.workers)
-            .dedicated_trustees(cfg.dedicated)
-            .build();
-        // Shard trustees: the dedicated workers if any, else all workers.
-        let trustees: Vec<usize> = if cfg.dedicated > 0 {
-            (0..cfg.dedicated).collect()
-        } else {
-            (0..cfg.workers).collect()
-        };
-        let backend = cfg.backend.build(&rt, &trustees);
-        let stop = Arc::new(AtomicBool::new(false));
-        let ops_served = Arc::new(AtomicU64::new(0));
-
-        // Socket workers: the non-dedicated ones (validate() guarantees at
-        // least one).
-        let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
-        let policy = cfg.net;
-
-        // Round-robin dispatch of accepted streams onto socket workers.
-        let dispatch = {
-            let backend = backend.clone();
-            let ops = ops_served.clone();
-            let stop = stop.clone();
-            netfiber::round_robin_dispatch(
-                rt.shared().clone(),
-                socket_workers.clone(),
-                move |stream| {
-                    let backend = backend.clone();
-                    let ops = ops.clone();
-                    let stop = stop.clone();
-                    Box::new(move || connection_fiber(stream, backend, ops, stop, policy))
-                },
-            )
-        };
-
-        // Epoll: the acceptor is a fiber parked on listener readability in
-        // the first socket worker's reactor — no sleep-poll thread.
-        // BusyPoll: the legacy 200 µs accept thread (A/B baseline).
-        let accept_handle = netfiber::start_acceptor(
-            policy,
-            listener,
-            stop.clone(),
-            rt.shared(),
-            socket_workers[0],
-            dispatch,
+        let mut backend_out: Option<Arc<dyn AsyncKv>> = None;
+        let core = ServerCore::try_start(
+            CoreConfig {
+                workers: cfg.workers,
+                dedicated: cfg.dedicated,
+                addr: cfg.addr.clone(),
+                net: cfg.net,
+            },
             "kv-accept",
+            |rt, trustees| {
+                let backend = cfg.backend.build(rt, trustees);
+                backend_out = Some(backend.clone());
+                move || KvProtocol::new(backend.clone())
+            },
         )?;
-
-        Ok(KvServer {
-            rt: Some(rt),
-            backend,
-            local_addr,
-            stop,
-            accept_handle,
-            ops_served,
-        })
+        let ops_served = core.ops_served().clone();
+        Ok(KvServer { core, backend: backend_out.unwrap(), ops_served })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.local_addr
+        self.core.addr()
     }
 
     pub fn backend(&self) -> &Arc<dyn AsyncKv> {
@@ -149,212 +196,29 @@ impl KvServer {
     }
 
     pub fn runtime(&self) -> &Runtime {
-        self.rt.as_ref().unwrap()
+        self.core.runtime()
+    }
+
+    /// Per-worker connection metrics (accepted/closed/requests/pool).
+    pub fn metrics(&self) -> &Arc<ConnMetrics> {
+        self.core.metrics()
     }
 
     /// Pre-fill the table with `n` keys ("Prior to each run, we pre-fill
     /// the table"). Key format matches the load generator's.
     pub fn prefill(&self, n: u64, val_len: usize) {
-        let worker = self.runtime().workers() - 1;
         let backend = self.backend.clone();
-        self.runtime().block_on(worker, move || {
-            let done = Arc::new(AtomicU64::new(0));
-            let mut issued = 0u64;
-            while issued < n || done.load(Ordering::Relaxed) < n {
-                // Keep a bounded window in flight so outboxes stay small.
-                while issued < n && issued - done.load(Ordering::Relaxed) < 256 {
-                    let d = done.clone();
-                    backend.put(
-                        super::client::key_bytes(issued),
-                        vec![b'x'; val_len],
-                        Box::new(move |_| {
-                            d.fetch_add(1, Ordering::Relaxed);
-                        }),
-                    );
-                    issued += 1;
-                }
-                fiber::yield_now();
-            }
+        self.core.prefill(n, move |i, on_done| {
+            backend.put(
+                super::client::key_bytes(i),
+                vec![b'x'; val_len],
+                Box::new(move |_| on_done()),
+            );
         });
     }
 
     pub fn stop(mut self) {
-        self.stop_impl();
-    }
-
-    fn stop_impl(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept_handle.take() {
-            let _ = h.join();
-        }
-        if let Some(rt) = self.rt.take() {
-            rt.shutdown();
-        }
-    }
-}
-
-impl Drop for KvServer {
-    fn drop(&mut self) {
-        self.stop_impl();
-    }
-}
-
-/// Per-connection fiber: parse requests, dispatch to the backend, stream
-/// responses back out of order as their callbacks fire. Exits when the
-/// peer closes, the stream turns malformed, or the server stops.
-///
-/// Hardened against arbitrary client bytes: parse errors and unknown ops
-/// end the connection (unknown ops first answer [`proto::ST_BAD_REQUEST`]
-/// so well-meaning-but-buggy clients see *why*) — they never panic the
-/// worker, which would strand the whole runtime.
-fn connection_fiber(
-    mut stream: TcpStream,
-    backend: Arc<dyn AsyncKv>,
-    ops: Arc<AtomicU64>,
-    stop: Arc<AtomicBool>,
-    policy: NetPolicy,
-) {
-    if stream.set_nonblocking(true).is_err() {
-        return;
-    }
-    stream.set_nodelay(true).ok();
-    let fd = stream.as_raw_fd();
-    let out = Rc::new(RefCell::new(Vec::<u8>::new()));
-    let inflight = Rc::new(std::cell::Cell::new(0usize));
-    let mut inbuf: Vec<u8> = Vec::with_capacity(32 * 1024);
-    let mut cursor = FrameCursor::new();
-    let mut wcursor = 0usize;
-    let mut peer_gone = false;
-    // Malformed stream: stop reading/parsing, drain what's owed, close.
-    let mut poisoned = false;
-    // On server stop, drain buffered responses for a bounded grace period
-    // (acked work should reach the wire) without letting a peer that
-    // never reads hold shutdown hostage.
-    let mut stop_deadline: Option<std::time::Instant> = None;
-
-    loop {
-        let mut progress = false;
-        // 1. Ingest ("reading requests is done in batches"): drain the
-        //    socket up to a fairness bound, and stop reading while the
-        //    unparsed backlog is past MAX_INBUF (TCP backpressure instead
-        //    of unbounded buffering).
-        if !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF {
-            match read_burst(&mut stream, &mut inbuf, 64 * 1024) {
-                ReadOutcome::Data(_) => progress = true,
-                ReadOutcome::Closed => peer_gone = true,
-                ReadOutcome::WouldBlock => {}
-            }
-        }
-        // 2. Parse + dispatch every complete request.
-        if !poisoned {
-            loop {
-                let req = match cursor.next_request(&inbuf) {
-                    Ok(Some(req)) => req,
-                    Ok(None) => break,
-                    Err(_) => {
-                        // Framing is broken; no request id to answer to.
-                        poisoned = true;
-                        break;
-                    }
-                };
-                progress = true;
-                let id = req.id;
-                if !matches!(req.op, proto::OP_GET | proto::OP_PUT | proto::OP_DEL) {
-                    // One bad client must not kill the fiber mid-batch and
-                    // strand its inflight count: answer, then wind down.
-                    proto::write_response(
-                        &mut out.borrow_mut(),
-                        id,
-                        proto::ST_BAD_REQUEST,
-                        &[],
-                    );
-                    poisoned = true;
-                    break;
-                }
-                inflight.set(inflight.get() + 1);
-                let out = out.clone();
-                let infl = inflight.clone();
-                let ops = ops.clone();
-                match req.op {
-                    proto::OP_GET => backend.get(
-                        req.key,
-                        Box::new(move |v| {
-                            let mut o = out.borrow_mut();
-                            match v {
-                                Some(val) => {
-                                    proto::write_response(&mut o, id, proto::ST_OK, &val)
-                                }
-                                None => {
-                                    proto::write_response(&mut o, id, proto::ST_NOT_FOUND, &[])
-                                }
-                            }
-                            infl.set(infl.get() - 1);
-                            ops.fetch_add(1, Ordering::Relaxed);
-                        }),
-                    ),
-                    proto::OP_PUT => backend.put(
-                        req.key,
-                        req.val,
-                        Box::new(move |_| {
-                            proto::write_response(&mut out.borrow_mut(), id, proto::ST_OK, &[]);
-                            infl.set(infl.get() - 1);
-                            ops.fetch_add(1, Ordering::Relaxed);
-                        }),
-                    ),
-                    _ => backend.del(
-                        req.key,
-                        Box::new(move |existed| {
-                            let st = if existed { proto::ST_OK } else { proto::ST_NOT_FOUND };
-                            proto::write_response(&mut out.borrow_mut(), id, st, &[]);
-                            infl.set(infl.get() - 1);
-                            ops.fetch_add(1, Ordering::Relaxed);
-                        }),
-                    ),
-                }
-            }
-            proto::compact(&mut inbuf, &mut cursor);
-        }
-        // 3. Egress ("sending results is done in batches").
-        {
-            let mut o = out.borrow_mut();
-            let pending_before = o.len() - wcursor;
-            if !write_pending(&mut stream, &mut o, &mut wcursor) {
-                break;
-            }
-            let pending_after = o.len() - wcursor;
-            if pending_after < pending_before {
-                progress = true;
-            }
-        }
-        // 4. Exit conditions.
-        if (peer_gone || poisoned) && inflight.get() == 0 && out.borrow().is_empty() {
-            break;
-        }
-        // Server shutdown: stop accepting new work, drain what's left (the
-        // responses in `out` are acknowledged work), break regardless once
-        // the grace period expires.
-        if stop.load(Ordering::Acquire) && inflight.get() == 0 {
-            if out.borrow().is_empty() {
-                break;
-            }
-            let deadline = *stop_deadline.get_or_insert_with(|| {
-                std::time::Instant::now() + std::time::Duration::from_millis(250)
-            });
-            if std::time::Instant::now() >= deadline {
-                break;
-            }
-        }
-        // 5. Wait for more work. With responses in flight the wake comes
-        //    from the scheduler (backend completions), so yield; otherwise
-        //    the only possible wake is the socket — park on it (Epoll)
-        //    instead of re-polling every tick (BusyPoll).
-        if progress || inflight.get() > 0 || stop.load(Ordering::Acquire) {
-            fiber::yield_now();
-        } else {
-            let want_read = !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF;
-            let want_write = !out.borrow().is_empty();
-            net_wait(policy, fd, want_read, want_write);
-        }
+        self.core.stop();
     }
 }
 
@@ -362,6 +226,8 @@ fn connection_fiber(
 mod tests {
     use super::*;
     use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::Ordering;
 
     fn get(stream: &mut TcpStream, id: u64, key: &[u8]) -> proto::Response {
         let mut buf = Vec::new();
@@ -397,6 +263,7 @@ mod tests {
             dedicated: 0,
             backend,
             addr: "127.0.0.1:0".into(),
+            ..Default::default()
         });
         let mut c = TcpStream::connect(server.addr()).unwrap();
         // miss, put, hit, overwrite, delete
@@ -553,5 +420,56 @@ mod tests {
             drop(c2);
             server.stop();
         }
+    }
+
+    #[test]
+    fn broken_framing_answers_bad_request_with_reason() {
+        // A hostile frame_len used to close the connection silently; the
+        // engine's render_error hook now answers ST_BAD_REQUEST (id MAX)
+        // with the reason text before closing.
+        let server = KvServer::start(KvServerConfig {
+            workers: 2,
+            backend: BackendKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        c.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let r = read_one_response(&mut c);
+        assert_eq!((r.id, r.status), (u64::MAX, proto::ST_BAD_REQUEST));
+        assert!(
+            String::from_utf8_lossy(&r.val).contains("frame_len"),
+            "reason text missing: {:?}",
+            r.val
+        );
+        let mut sink = Vec::new();
+        c.read_to_end(&mut sink).unwrap();
+        server.stop();
+    }
+
+    #[test]
+    fn per_worker_metrics_count_connections_and_requests() {
+        let server = KvServer::start(KvServerConfig {
+            workers: 2,
+            backend: BackendKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        assert_eq!(put(&mut c, 1, b"m", b"v").status, proto::ST_OK);
+        assert_eq!(get(&mut c, 2, b"m").val, b"v");
+        drop(c);
+        // The connection fiber exits asynchronously after the drop.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let t = server.metrics().totals();
+            if t.closed >= 1 || std::time::Instant::now() >= deadline {
+                assert_eq!(t.accepted, 1);
+                assert_eq!(t.closed, 1, "connection fiber must record its exit");
+                assert_eq!(t.requests, 2);
+                assert_eq!(t.parse_errors, 0);
+                break;
+            }
+            std::thread::yield_now();
+        }
+        server.stop();
     }
 }

@@ -25,6 +25,10 @@
 //!   PJRT/XLA executor for AOT-compiled batch-apply artifacts (§5.2)
 //! - [`locks`] — the lock baselines the paper evaluates against (§6)
 //! - [`cmap`] — sharded and dashmap-style concurrent hash maps (§6.3)
+//! - [`server`] — the protocol-agnostic delegated server core: one
+//!   connection engine (ingest, backpressure, both response-ordering
+//!   disciplines, drain-on-stop) parameterised by a `Protocol` trait,
+//!   plus the RESP (Redis) front end
 //! - [`kvstore`] — the TCP key-value store application (§6.3)
 //! - [`memcache`] — mini-memcached, stock (locks) vs delegated shards (§7)
 //! - [`bench`] — workload generators and the figure-regeneration harnesses
@@ -45,6 +49,7 @@ pub mod trust;
 pub mod runtime;
 pub mod locks;
 pub mod cmap;
+pub mod server;
 pub mod kvstore;
 pub mod memcache;
 pub mod bench;

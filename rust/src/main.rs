@@ -5,20 +5,33 @@
 //! ```text
 //! trustee kv-server    --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
-//!                      [--net epoll|busy]
+//!                      [--val-len L] [--net epoll|busy]
 //! trustee kv-load      --addr HOST:PORT --threads T --pipeline P --ops N
 //!                      --keys K --dist uniform|zipf --write-pct W
-//! trustee mcd-server   --engine stock|trust[:N] --workers W --addr HOST:PORT
-//!                      [--prefill N]
+//!                      [--val-len L] [--seed S]
+//! trustee mcd-server   --engine stock|trust[:N] --workers W --dedicated D
+//!                      --addr HOST:PORT [--prefill N] [--val-len L]
+//!                      [--net epoll|busy]
 //! trustee mcd-load     --addr HOST:PORT ... (same knobs as kv-load)
+//! trustee resp-server  --backend trust[:N]|mutex|rwlock|swift --workers W
+//!                      --dedicated D --addr HOST:PORT [--prefill N]
+//!                      [--val-len L] [--net epoll|busy]
+//!                      (RESP2 — point redis-cli or any Redis client at it:
+//!                       PING, GET, SET, DEL, EXISTS, MGET, INCR, FLUSHALL)
+//! trustee resp-load    --addr HOST:PORT ... (same knobs as kv-load)
 //! trustee fadd         --engine mutex|spin|ticket|mcs|fc|trust|async
 //!                      --threads T --objects O --ops N --dist D
 //! trustee demo         quick in-process tour (Figure 1)
 //! ```
+//!
+//! All three servers ride the shared delegated connection engine
+//! (`trustee::server::engine`); the load generators report client-side
+//! I/O failures descriptively and exit nonzero instead of panicking.
 
 use trustee::bench::fadd::{run_async, run_lock_by_name, run_trust, FaddConfig};
 use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
 use trustee::memcache::{run_memtier, EngineKind, McdServer, McdServerConfig, MemtierConfig};
+use trustee::server::{run_resp_load, RespLoadConfig, RespServer, RespServerConfig};
 use trustee::util::cli::Args;
 use trustee::util::stats::{fmt_mops, fmt_ns};
 
@@ -31,12 +44,31 @@ fn main() {
         "kv-load" => kv_load(&args),
         "mcd-server" => mcd_server(&args),
         "mcd-load" => mcd_load(&args),
+        "resp-server" => resp_server(&args),
+        "resp-load" => resp_load(&args),
         "fadd" => fadd(&args),
         "demo" => demo(),
         _ => {
-            println!("usage: trustee <kv-server|kv-load|mcd-server|mcd-load|fadd|demo> [--flags]");
+            println!(
+                "usage: trustee <kv-server|kv-load|mcd-server|mcd-load|resp-server|resp-load|\
+                 fadd|demo> [--flags]"
+            );
+            println!("  kv-server / kv-load     binary KV protocol (out-of-order responses)");
+            println!("  mcd-server / mcd-load   memcached text protocol (in-order)");
+            println!("  resp-server / resp-load RESP2 (Redis) protocol (in-order)");
+            println!("  fadd                    fetch-and-add microbench, demo: Figure 1 tour");
             println!("see the module docs in rust/src/main.rs for every knob");
         }
+    }
+}
+
+/// Exit nonzero with every client-thread error when a load run failed.
+fn bail_on_client_errors(errors: &[String]) {
+    if !errors.is_empty() {
+        for e in errors {
+            eprintln!("client error: {e}");
+        }
+        std::process::exit(1);
     }
 }
 
@@ -75,6 +107,7 @@ fn kv_load(args: &Args) {
         val_len: args.get("val-len", 16),
         seed: args.get("seed", 42),
     });
+    bail_on_client_errors(&stats.errors);
     println!(
         "{} ops in {:.2}s = {} | mean {} p99.9 {} | hits {} misses {}",
         stats.ops,
@@ -133,6 +166,56 @@ fn mcd_load(args: &Args) {
         val_len: args.get("val-len", 16),
         seed: args.get("seed", 42),
     });
+    bail_on_client_errors(&stats.errors);
+    println!(
+        "{} ops in {:.2}s = {} | hits {} misses {}",
+        stats.ops,
+        stats.elapsed.as_secs_f64(),
+        fmt_mops(stats.throughput()),
+        stats.hits,
+        stats.misses
+    );
+}
+
+fn resp_server(args: &Args) {
+    let server = RespServer::start(RespServerConfig {
+        workers: args.get("workers", 4),
+        dedicated: args.get("dedicated", 0),
+        backend: BackendKind::from_spec(&args.get_str("backend", "trust")),
+        addr: args.get_str("addr", "127.0.0.1:6379"),
+        net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
+    });
+    let prefill: u64 = args.get("prefill", 0);
+    if prefill > 0 {
+        server.prefill(prefill, args.get("val-len", 16));
+        println!("prefilled {prefill} keys");
+    }
+    println!(
+        "resp (redis-protocol) server listening on {} (ctrl-c to stop)",
+        server.addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn resp_load(args: &Args) {
+    let addr: std::net::SocketAddr = args
+        .get_str("addr", "127.0.0.1:6379")
+        .parse()
+        .expect("bad --addr");
+    let stats = run_resp_load(&RespLoadConfig {
+        addr,
+        threads: args.get("threads", 2),
+        pipeline: args.get("pipeline", 32),
+        ops_per_thread: args.get("ops", 10_000),
+        keys: args.get("keys", 1_000),
+        dist: args.get_str("dist", "uniform"),
+        write_pct: args.get("write-pct", 5),
+        val_len: args.get("val-len", 16),
+        seed: args.get("seed", 42),
+    });
+    bail_on_client_errors(&stats.errors);
     println!(
         "{} ops in {:.2}s = {} | hits {} misses {}",
         stats.ops,

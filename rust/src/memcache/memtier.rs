@@ -2,9 +2,13 @@
 //! generator with per-thread connections, configurable pipelining, key
 //! distribution, and write percentage — reporting aggregate throughput the
 //! way `memtier_benchmark` does.
+//!
+//! I/O failures and protocol desyncs are surfaced in
+//! [`MemtierStats::errors`] (a server dropping a connection mid-run fails
+//! the run descriptively) instead of panicking the client thread.
 
 use crate::util::{KeyDist, Rng};
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
@@ -27,16 +31,24 @@ pub struct MemtierConfig {
     pub seed: u64,
 }
 
+/// Aggregated results. `errors` holds one descriptive entry per client
+/// thread that failed; completed operations still count toward `ops`.
 pub struct MemtierStats {
     pub ops: u64,
     pub elapsed: std::time::Duration,
     pub hits: u64,
     pub misses: u64,
+    pub errors: Vec<String>,
 }
 
 impl MemtierStats {
     pub fn throughput(&self) -> f64 {
         self.ops as f64 / self.elapsed.as_secs_f64()
+    }
+
+    /// True when every client thread ran to completion.
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
     }
 }
 
@@ -51,13 +63,21 @@ pub fn run_memtier(cfg: &MemtierConfig) -> MemtierStats {
     let mut ops = 0;
     let mut hits = 0;
     let mut misses = 0;
-    for h in handles {
-        let (o, hi, mi) = h.join().expect("memtier thread");
-        ops += o;
-        hits += hi;
-        misses += mi;
+    let mut errors = Vec::new();
+    for (t, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok((o, hi, mi, err)) => {
+                ops += o;
+                hits += hi;
+                misses += mi;
+                if let Some(e) = err {
+                    errors.push(format!("client thread {t}: {e}"));
+                }
+            }
+            Err(_) => errors.push(format!("client thread {t} panicked")),
+        }
     }
-    MemtierStats { ops, elapsed: start.elapsed(), hits, misses }
+    MemtierStats { ops, elapsed: start.elapsed(), hits, misses, errors }
 }
 
 /// What we expect back for each sent command (text protocol is in-order).
@@ -66,12 +86,34 @@ enum Expect {
     Value,
 }
 
-fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
+fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64, Option<String>) {
     let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0xA24B_AED4)));
     let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
-    let mut stream = TcpStream::connect(cfg.addr).expect("connect memtier");
+    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
+
+    macro_rules! fail {
+        ($($arg:tt)*) => {
+            return (
+                done,
+                hits,
+                misses,
+                Some(format!(
+                    "after {done}/{} ops: {}",
+                    cfg.ops_per_thread,
+                    format!($($arg)*)
+                )),
+            )
+        };
+    }
+
+    let mut stream = match TcpStream::connect(cfg.addr) {
+        Ok(s) => s,
+        Err(e) => fail!("connect {}: {e}", cfg.addr),
+    };
     stream.set_nodelay(true).ok();
-    stream.set_nonblocking(true).unwrap();
+    if let Err(e) = stream.set_nonblocking(true) {
+        fail!("nonblocking: {e}");
+    }
 
     let val: Vec<u8> = vec![b'm'; cfg.val_len];
     let mut expect: std::collections::VecDeque<Expect> =
@@ -80,7 +122,6 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
     let mut wcur = 0usize;
     let mut inbuf: Vec<u8> = Vec::with_capacity(64 * 1024);
     let mut parsed = 0usize; // consumed prefix of inbuf
-    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
 
     while done < cfg.ops_per_thread {
         while sent < cfg.ops_per_thread && expect.len() < cfg.pipeline {
@@ -109,19 +150,21 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
                 break;
             }
             match stream.write(&out[wcur..]) {
-                Ok(0) => panic!("server closed"),
+                Ok(0) => fail!("server closed connection mid-write"),
                 Ok(n) => wcur += n,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) => panic!("write: {e}"),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => fail!("write: {e}"),
             }
         }
         // Read.
         let mut chunk = [0u8; 32 * 1024];
         match stream.read(&mut chunk) {
-            Ok(0) => panic!("server closed"),
+            Ok(0) => fail!("server closed connection mid-run"),
             Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
-            Err(e) => panic!("read: {e}"),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => fail!("read: {e}"),
         }
         // Parse responses in order.
         loop {
@@ -129,7 +172,13 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
             match front {
                 Expect::Stored => {
                     let Some(end) = find_crlf(&inbuf[parsed..]) else { break };
-                    debug_assert_eq!(&inbuf[parsed..parsed + end], b"STORED");
+                    let line = &inbuf[parsed..parsed + end];
+                    if line != b"STORED" {
+                        fail!(
+                            "expected STORED, got {:?}",
+                            String::from_utf8_lossy(line)
+                        );
+                    }
                     parsed += end + 2;
                     expect.pop_front();
                     done += 1;
@@ -138,7 +187,7 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
                 Expect::Value => {
                     // Either "END\r\n" (miss) or VALUE header + data + END.
                     match try_parse_get(&inbuf[parsed..]) {
-                        Some((used, hit)) => {
+                        Ok(Some((used, hit))) => {
                             parsed += used;
                             expect.pop_front();
                             done += 1;
@@ -148,7 +197,8 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
                                 misses += 1;
                             }
                         }
-                        None => break,
+                        Ok(None) => break,
+                        Err(e) => fail!("{e}"),
                     }
                 }
             }
@@ -158,33 +208,50 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64) {
             parsed = 0;
         }
     }
-    (done, hits, misses)
+    (done, hits, misses, None)
 }
 
 fn find_crlf(buf: &[u8]) -> Option<usize> {
     buf.windows(2).position(|w| w == b"\r\n")
 }
 
-/// Parse a full GET response; returns (bytes_used, was_hit).
-fn try_parse_get(buf: &[u8]) -> Option<(usize, bool)> {
-    let line_end = find_crlf(buf)?;
+/// Parse a full GET response: `Ok(Some((bytes_used, was_hit)))`,
+/// `Ok(None)` to wait for more bytes, `Err` when the server answered
+/// something that is not a GET response (protocol desync).
+fn try_parse_get(buf: &[u8]) -> Result<Option<(usize, bool)>, String> {
+    let Some(line_end) = find_crlf(buf) else { return Ok(None) };
     let line = &buf[..line_end];
     if line == b"END" {
-        return Some((line_end + 2, false));
+        return Ok(Some((line_end + 2, false)));
     }
-    assert!(line.starts_with(b"VALUE "), "unexpected reply {:?}", String::from_utf8_lossy(line));
+    if !line.starts_with(b"VALUE ") {
+        return Err(format!(
+            "unexpected reply {:?}",
+            String::from_utf8_lossy(line)
+        ));
+    }
     // VALUE <key> <flags> <bytes>
-    let bytes: usize = std::str::from_utf8(line.rsplit(|&b| b == b' ').next()?)
-        .ok()?
-        .parse()
-        .ok()?;
+    let bytes: usize = line
+        .rsplit(|&b| b == b' ')
+        .next()
+        .and_then(|f| std::str::from_utf8(f).ok())
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad VALUE header {:?}", String::from_utf8_lossy(line)))?;
+    // A size past the server's own data cap means the stream is desynced:
+    // fail descriptively instead of waiting forever for bytes that will
+    // never come.
+    if bytes > crate::memcache::server::MAX_DATA {
+        return Err(format!("VALUE size {bytes} exceeds MAX_DATA (desync?)"));
+    }
     let data_start = line_end + 2;
     let end_start = data_start + bytes + 2;
     if buf.len() < end_start + 5 {
-        return None;
+        return Ok(None);
     }
-    debug_assert_eq!(&buf[end_start..end_start + 5], b"END\r\n");
-    Some((end_start + 5, true))
+    if &buf[end_start..end_start + 5] != b"END\r\n" {
+        return Err("data block not END-terminated".into());
+    }
+    Ok(Some((end_start + 5, true)))
 }
 
 #[cfg(test)]
@@ -217,6 +284,7 @@ mod tests {
     #[test]
     fn memtier_against_trust_engine() {
         let stats = smoke(EngineKind::Trust { shards: 4 });
+        assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 800);
         assert_eq!(stats.misses, 0, "prefilled keys must hit");
     }
@@ -224,6 +292,7 @@ mod tests {
     #[test]
     fn memtier_against_stock_engine() {
         let stats = smoke(EngineKind::Stock);
+        assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 800);
         assert_eq!(stats.misses, 0);
     }
@@ -232,9 +301,30 @@ mod tests {
     fn get_parser_handles_partials() {
         let full = b"VALUE k 0 5\r\nhello\r\nEND\r\n";
         for cut in 0..full.len() {
-            assert!(try_parse_get(&full[..cut]).is_none(), "cut={cut}");
+            assert!(try_parse_get(&full[..cut]).unwrap().is_none(), "cut={cut}");
         }
-        assert_eq!(try_parse_get(full), Some((full.len(), true)));
-        assert_eq!(try_parse_get(b"END\r\nmore"), Some((5, false)));
+        assert_eq!(try_parse_get(full).unwrap(), Some((full.len(), true)));
+        assert_eq!(try_parse_get(b"END\r\nmore").unwrap(), Some((5, false)));
+        assert!(try_parse_get(b"CLIENT_ERROR nope\r\n").is_err());
+        // Desync guard: absurd declared sizes error instead of hanging.
+        assert!(try_parse_get(b"VALUE k 0 99999999\r\n").is_err());
+    }
+
+    #[test]
+    fn memtier_connect_failure_is_an_error_not_a_panic() {
+        let stats = run_memtier(&MemtierConfig {
+            addr: "127.0.0.1:1".parse().unwrap(),
+            threads: 1,
+            pipeline: 4,
+            ops_per_thread: 10,
+            keys: 10,
+            dist: "uniform".into(),
+            write_pct: 0,
+            val_len: 8,
+            seed: 5,
+        });
+        assert_eq!(stats.ops, 0);
+        assert_eq!(stats.errors.len(), 1);
+        assert!(stats.errors[0].contains("connect"), "unhelpful: {:?}", stats.errors);
     }
 }

@@ -15,4 +15,4 @@ pub mod server;
 
 pub use engine::{Item, McdEngine, McdShard, StockEngine, TrustEngine};
 pub use memtier::{run_memtier, MemtierConfig, MemtierStats};
-pub use server::{EngineKind, McdParseError, McdServer, McdServerConfig};
+pub use server::{EngineKind, McdParseError, McdProtocol, McdServer, McdServerConfig};

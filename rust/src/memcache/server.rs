@@ -1,8 +1,10 @@
 //! Mini-memcached TCP server speaking the memcached **text protocol**
-//! (get/set subset), structured like the paper's port (§7):
+//! (get/set subset), structured like the paper's port (§7), as a
+//! [`Protocol`] front end on the shared delegated server core
+//! ([`crate::server::engine`]):
 //!
-//! - Socket worker fibers follow the original state-machine order:
-//!   receive → parse → process → enqueue result → transmit.
+//! - The engine's connection fibers follow the original state-machine
+//!   order: receive → parse → process → enqueue result → transmit.
 //! - With the [`TrustEngine`](super::engine::TrustEngine), each request is
 //!   dispatched with asynchronous delegation (`apply_then`) and the worker
 //!   "moves on to the next request without waiting".
@@ -10,20 +12,16 @@
 //!   connection must be transmitted **in order** even though shard
 //!   responses may complete out of order — exactly the reordering buffer
 //!   the paper describes ("the memcached socket worker thread must order
-//!   the responses before they are transmitted").
+//!   the responses before they are transmitted"). That buffer is the
+//!   engine's [`ResponseOrder::InOrder`] spool.
 
 use super::engine::McdEngine;
-use crate::kvstore::netfiber::{
-    self, net_wait, read_burst, write_pending, NetPolicy, ReadOutcome,
-};
-use crate::fiber;
 use crate::runtime::Runtime;
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::net::{TcpListener, TcpStream};
-use std::os::unix::io::AsRawFd;
-use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::server::engine::{
+    Completion, ConnMetrics, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore,
+};
+use crate::server::netfiber::{self, NetPolicy};
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 
 /// One parsed text-protocol command.
@@ -188,13 +186,85 @@ impl McdServerConfig {
     }
 }
 
+/// The memcached text protocol on the shared engine.
+pub struct McdProtocol {
+    engine: Arc<dyn McdEngine>,
+}
+
+impl McdProtocol {
+    pub fn new(engine: Arc<dyn McdEngine>) -> McdProtocol {
+        McdProtocol { engine }
+    }
+}
+
+impl Protocol for McdProtocol {
+    type Request = Command;
+    type Error = McdParseError;
+
+    /// No request ids on the wire: strict in-order responses via the
+    /// engine's reorder spool.
+    const ORDER: ResponseOrder = ResponseOrder::InOrder;
+
+    fn parse(&mut self, inbuf: &mut Inbuf) -> Result<Option<Command>, McdParseError> {
+        match parse_command(inbuf.unparsed())? {
+            Some((cmd, used)) => {
+                inbuf.advance(used);
+                Ok(Some(cmd))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn render_error(&mut self, err: &McdParseError, out: &mut Vec<u8>) {
+        out.extend_from_slice(err.wire_line());
+    }
+
+    fn dispatch(&mut self, cmd: Command, done: Completion) {
+        match cmd {
+            Command::Get { key } => {
+                let echo_key = key.clone();
+                self.engine.get(
+                    key,
+                    Box::new(move |item| {
+                        let mut b = done.checkout();
+                        if let Some(item) = item {
+                            b.extend_from_slice(
+                                format!(
+                                    "VALUE {} {} {}\r\n",
+                                    String::from_utf8_lossy(&echo_key),
+                                    item.flags,
+                                    item.data.len()
+                                )
+                                .as_bytes(),
+                            );
+                            b.extend_from_slice(&item.data);
+                            b.extend_from_slice(b"\r\n");
+                        }
+                        b.extend_from_slice(b"END\r\n");
+                        done.complete(b);
+                    }),
+                );
+            }
+            Command::Set { key, flags, data } => {
+                self.engine.set(
+                    key,
+                    flags,
+                    data,
+                    Box::new(move |_| {
+                        let mut b = done.checkout();
+                        b.extend_from_slice(b"STORED\r\n");
+                        done.complete(b);
+                    }),
+                );
+            }
+        }
+    }
+}
+
 /// A running mini-memcached instance.
 pub struct McdServer {
-    rt: Option<Runtime>,
+    core: ServerCore,
     engine: Arc<dyn McdEngine>,
-    local_addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
     pub ops_served: Arc<AtomicU64>,
 }
 
@@ -208,72 +278,32 @@ impl McdServer {
     /// Start a server, reporting configuration/bind problems as a
     /// descriptive error *before* any worker thread is spawned.
     pub fn try_start(cfg: McdServerConfig) -> Result<McdServer, String> {
-        cfg.validate()?;
-        let listener =
-            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
-        let local_addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
-        listener
-            .set_nonblocking(true)
-            .map_err(|e| format!("nonblocking listener: {e}"))?;
-
-        let rt = Runtime::builder()
-            .workers(cfg.workers)
-            .dedicated_trustees(cfg.dedicated)
-            .build();
-        let trustees: Vec<usize> = if cfg.dedicated > 0 {
-            (0..cfg.dedicated).collect()
-        } else {
-            (0..cfg.workers).collect()
-        };
-        let engine: Arc<dyn McdEngine> = match &cfg.engine {
-            EngineKind::Stock => super::engine::StockEngine::new(1 << 16),
-            EngineKind::Trust { shards } => {
-                super::engine::TrustEngine::new(&rt, &trustees, (*shards).max(1))
-            }
-        };
-        let stop = Arc::new(AtomicBool::new(false));
-        let ops_served = Arc::new(AtomicU64::new(0));
-        let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
-        let policy = cfg.net;
-
-        let dispatch = {
-            let engine = engine.clone();
-            let ops = ops_served.clone();
-            let stop = stop.clone();
-            netfiber::round_robin_dispatch(
-                rt.shared().clone(),
-                socket_workers.clone(),
-                move |stream| {
-                    let engine = engine.clone();
-                    let ops = ops.clone();
-                    let stop = stop.clone();
-                    Box::new(move || connection_fiber(stream, engine, ops, stop, policy))
-                },
-            )
-        };
-
-        let accept_handle = netfiber::start_acceptor(
-            policy,
-            listener,
-            stop.clone(),
-            rt.shared(),
-            socket_workers[0],
-            dispatch,
+        let mut engine_out: Option<Arc<dyn McdEngine>> = None;
+        let core = ServerCore::try_start(
+            CoreConfig {
+                workers: cfg.workers,
+                dedicated: cfg.dedicated,
+                addr: cfg.addr.clone(),
+                net: cfg.net,
+            },
             "mcd-accept",
+            |rt, trustees| {
+                let engine: Arc<dyn McdEngine> = match &cfg.engine {
+                    EngineKind::Stock => super::engine::StockEngine::new(1 << 16),
+                    EngineKind::Trust { shards } => {
+                        super::engine::TrustEngine::new(rt, trustees, (*shards).max(1))
+                    }
+                };
+                engine_out = Some(engine.clone());
+                move || McdProtocol::new(engine.clone())
+            },
         )?;
-
-        Ok(McdServer {
-            rt: Some(rt),
-            engine,
-            local_addr,
-            stop,
-            accept_handle,
-            ops_served,
-        })
+        let ops_served = core.ops_served().clone();
+        Ok(McdServer { core, engine: engine_out.unwrap(), ops_served })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.local_addr
+        self.core.addr()
     }
 
     pub fn engine(&self) -> &Arc<dyn McdEngine> {
@@ -281,212 +311,29 @@ impl McdServer {
     }
 
     pub fn runtime(&self) -> &Runtime {
-        self.rt.as_ref().unwrap()
+        self.core.runtime()
+    }
+
+    /// Per-worker connection metrics (accepted/closed/requests/pool).
+    pub fn metrics(&self) -> &Arc<ConnMetrics> {
+        self.core.metrics()
     }
 
     /// Populate the table with `n` items of `val_len` bytes.
     pub fn prefill(&self, n: u64, val_len: usize) {
-        let worker = self.runtime().workers() - 1;
         let engine = self.engine.clone();
-        self.runtime().block_on(worker, move || {
-            let done = Arc::new(AtomicU64::new(0));
-            let mut issued = 0u64;
-            while issued < n || done.load(Ordering::Relaxed) < n {
-                while issued < n && issued - done.load(Ordering::Relaxed) < 256 {
-                    let d = done.clone();
-                    engine.set(
-                        super::memtier::key_bytes(issued),
-                        0,
-                        vec![b'v'; val_len],
-                        Box::new(move |_| {
-                            d.fetch_add(1, Ordering::Relaxed);
-                        }),
-                    );
-                    issued += 1;
-                }
-                fiber::yield_now();
-            }
+        self.core.prefill(n, move |i, on_done| {
+            engine.set(
+                super::memtier::key_bytes(i),
+                0,
+                vec![b'v'; val_len],
+                Box::new(move |_| on_done()),
+            );
         });
     }
 
     pub fn stop(mut self) {
-        self.stop_impl();
-    }
-
-    fn stop_impl(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept_handle.take() {
-            let _ = h.join();
-        }
-        if let Some(rt) = self.rt.take() {
-            rt.shutdown();
-        }
-    }
-}
-
-impl Drop for McdServer {
-    fn drop(&mut self) {
-        self.stop_impl();
-    }
-}
-
-/// Ordered response buffer: completions arrive out of order from the
-/// shards; the wire needs them in request order.
-struct Reorder {
-    next_seq: u64,
-    next_emit: u64,
-    pending: HashMap<u64, Vec<u8>>,
-}
-
-fn connection_fiber(
-    mut stream: TcpStream,
-    engine: Arc<dyn McdEngine>,
-    ops: Arc<AtomicU64>,
-    stop: Arc<AtomicBool>,
-    policy: NetPolicy,
-) {
-    if stream.set_nonblocking(true).is_err() {
-        return;
-    }
-    stream.set_nodelay(true).ok();
-    let fd = stream.as_raw_fd();
-    let reorder = Rc::new(RefCell::new(Reorder {
-        next_seq: 0,
-        next_emit: 0,
-        pending: HashMap::new(),
-    }));
-    let mut inbuf: Vec<u8> = Vec::with_capacity(32 * 1024);
-    let mut out: Vec<u8> = Vec::with_capacity(32 * 1024);
-    let mut wcur = 0usize;
-    let mut peer_gone = false;
-    // Unparseable stream: answer with a protocol error line (in order,
-    // through the reorder buffer), drain, close — never panic the worker.
-    let mut poisoned = false;
-    // Bounded stop-drain, mirroring the KV server: flush acked responses
-    // on shutdown without letting a never-reading peer hold it hostage.
-    let mut stop_deadline: Option<std::time::Instant> = None;
-
-    loop {
-        let mut progress = false;
-        if !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF {
-            match read_burst(&mut stream, &mut inbuf, 64 * 1024) {
-                ReadOutcome::Data(_) => progress = true,
-                ReadOutcome::Closed => peer_gone = true,
-                ReadOutcome::WouldBlock => {}
-            }
-        }
-        // Parse + dispatch (state machine: receive → parse → process).
-        let mut consumed = 0usize;
-        while !poisoned {
-            let (cmd, used) = match parse_command(&inbuf[consumed..]) {
-                Ok(Some(hit)) => hit,
-                Ok(None) => break,
-                Err(e) => {
-                    // Sequence the error line behind every completed
-                    // command, like any other response.
-                    let mut r = reorder.borrow_mut();
-                    let seq = r.next_seq;
-                    r.next_seq += 1;
-                    r.pending.insert(seq, e.wire_line().to_vec());
-                    poisoned = true;
-                    break;
-                }
-            };
-            consumed += used;
-            progress = true;
-            let seq = {
-                let mut r = reorder.borrow_mut();
-                let s = r.next_seq;
-                r.next_seq += 1;
-                s
-            };
-            let ro = reorder.clone();
-            let ops = ops.clone();
-            match cmd {
-                Command::Get { key } => {
-                    let echo_key = key.clone();
-                    engine.get(
-                        key,
-                        Box::new(move |item| {
-                            let mut resp = Vec::new();
-                            if let Some(item) = item {
-                                resp.extend_from_slice(
-                                    format!(
-                                        "VALUE {} {} {}\r\n",
-                                        String::from_utf8_lossy(&echo_key),
-                                        item.flags,
-                                        item.data.len()
-                                    )
-                                    .as_bytes(),
-                                );
-                                resp.extend_from_slice(&item.data);
-                                resp.extend_from_slice(b"\r\n");
-                            }
-                            resp.extend_from_slice(b"END\r\n");
-                            ro.borrow_mut().pending.insert(seq, resp);
-                            ops.fetch_add(1, Ordering::Relaxed);
-                        }),
-                    );
-                }
-                Command::Set { key, flags, data } => {
-                    engine.set(
-                        key,
-                        flags,
-                        data,
-                        Box::new(move |_| {
-                            ro.borrow_mut().pending.insert(seq, b"STORED\r\n".to_vec());
-                            ops.fetch_add(1, Ordering::Relaxed);
-                        }),
-                    );
-                }
-            }
-        }
-        if consumed > 0 {
-            inbuf.drain(..consumed);
-        }
-        // Emit the contiguous prefix of completed responses, in order.
-        {
-            let mut r = reorder.borrow_mut();
-            loop {
-                let seq = r.next_emit;
-                let Some(resp) = r.pending.remove(&seq) else { break };
-                out.extend_from_slice(&resp);
-                r.next_emit += 1;
-            }
-        }
-        {
-            let before = out.len() - wcur;
-            if !write_pending(&mut stream, &mut out, &mut wcur) {
-                break;
-            }
-            let after = if out.is_empty() { 0 } else { out.len() - wcur };
-            if after < before {
-                progress = true;
-            }
-        }
-        let awaiting = {
-            let r = reorder.borrow();
-            r.next_emit != r.next_seq
-        };
-        if !awaiting && out.is_empty() && (peer_gone || poisoned || stop.load(Ordering::Acquire))
-        {
-            break;
-        }
-        if !awaiting && stop.load(Ordering::Acquire) {
-            let deadline = *stop_deadline.get_or_insert_with(|| {
-                std::time::Instant::now() + std::time::Duration::from_millis(250)
-            });
-            if std::time::Instant::now() >= deadline {
-                break;
-            }
-        }
-        if progress || awaiting || stop.load(Ordering::Acquire) {
-            fiber::yield_now();
-        } else {
-            let want_read = !peer_gone && !poisoned && inbuf.len() < netfiber::MAX_INBUF;
-            let want_write = !out.is_empty();
-            net_wait(policy, fd, want_read, want_write);
-        }
+        self.core.stop();
     }
 }
 
@@ -494,6 +341,7 @@ fn connection_fiber(
 mod tests {
     use super::*;
     use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
 
     #[test]
     fn parse_get_and_set() {

@@ -1,0 +1,875 @@
+//! The protocol-agnostic delegated connection engine.
+//!
+//! Before this module existed, `kvstore::server` and `memcache::server`
+//! were two hand-rolled copies of the same connection-fiber loop
+//! (read_burst → parse → delegate → spool responses → write_pending →
+//! net_wait → drain-on-stop). Every new wire protocol cost a third copy,
+//! and every hot-path improvement had to land twice. The engine owns that
+//! loop once, parameterised by a [`Protocol`]:
+//!
+//! - **Ingest**: per-connection [`Inbuf`] with [`netfiber::MAX_INBUF`]
+//!   backpressure and the `read_burst` fairness bound.
+//! - **Parse + dispatch**: the protocol turns bytes into requests and
+//!   hands each one to its backend with a [`Completion`] ticket; parse
+//!   failures are *answered* (via [`Protocol::render_error`] —
+//!   `ST_BAD_REQUEST`, `CLIENT_ERROR …`, `-ERR …`) before the connection
+//!   winds down, never silently dropped and never a worker panic.
+//! - **Response spooling** ([`Spool`]): both ordering disciplines —
+//!   [`ResponseOrder::OutOfOrder`] for id-tagged protocols (the binary KV
+//!   proto) appends each response as its delegation completes;
+//!   [`ResponseOrder::InOrder`] for id-less protocols (memcached text,
+//!   RESP) sequences completions through a reorder buffer so the wire
+//!   sees request order even though shard completions arrive out of
+//!   order. Response buffers are pooled and recycled per connection
+//!   instead of allocated per response.
+//! - **Egress** with partial-write cursors, the bounded stop-drain grace
+//!   period (acked work reaches the wire; a never-reading peer cannot
+//!   hold shutdown hostage), and [`NetPolicy`]-driven waiting (fd-park
+//!   under epoll, yield under busy-poll).
+//! - **Metrics**: per-worker connection counters ([`ConnMetrics`]).
+//!
+//! [`ServerCore`] wraps the engine with everything a TCP front end needs:
+//! runtime construction, trustee topology, acceptor startup (fiber or
+//! thread per [`NetPolicy`]), prefill, and teardown.
+
+use super::netfiber::{self, net_wait, read_burst, write_pending, NetPolicy, ReadOutcome};
+use crate::fiber;
+use crate::runtime::Runtime;
+use crate::util::cache::CachePadded;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// Protocol trait
+// ---------------------------------------------------------------------
+
+/// How a protocol's responses must hit the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseOrder {
+    /// Responses carry a request id; the client matches them, so each one
+    /// is transmitted as soon as its delegation completes (paper §6.3:
+    /// "the client accepts responses out-of-order").
+    OutOfOrder,
+    /// The protocol has no request ids; responses to one connection must
+    /// be transmitted in request order even though shard completions
+    /// arrive out of order (paper §7: "the memcached socket worker thread
+    /// must order the responses before they are transmitted").
+    InOrder,
+}
+
+/// One wire protocol on top of the connection engine. Implementations are
+/// per-connection (created by the factory passed to
+/// [`ServerCore::try_start`]) and may keep parse state across calls.
+///
+/// Contract: `parse` must be **total** — arbitrary client bytes yield
+/// `Err`, never a panic (a panicking fiber unwinds onto the worker's
+/// scheduler stack and kills the thread). `dispatch` must eventually call
+/// [`Completion::complete`] exactly once per request, from the same
+/// worker (backend completion callbacks satisfy this).
+pub trait Protocol: 'static {
+    /// One parsed request.
+    type Request;
+    /// Why a byte stream failed to parse (protocol-specific).
+    type Error;
+
+    /// This protocol's response ordering discipline.
+    const ORDER: ResponseOrder;
+
+    /// Parse the next complete request out of `inbuf.unparsed()`,
+    /// advancing the buffer past consumed bytes. `Ok(None)` means "wait
+    /// for more bytes"; `Err` poisons the connection (it is answered via
+    /// [`Protocol::render_error`], drained, and closed).
+    fn parse(&mut self, inbuf: &mut Inbuf) -> Result<Option<Self::Request>, Self::Error>;
+
+    /// Render the on-wire answer to a parse failure (e.g.
+    /// `ST_BAD_REQUEST`, `CLIENT_ERROR bad command line format\r\n`,
+    /// `-ERR Protocol error…\r\n`). May leave `out` empty to close
+    /// without answering.
+    fn render_error(&mut self, err: &Self::Error, out: &mut Vec<u8>);
+
+    /// How many units of the connection's [`MAX_CONN_INFLIGHT`] budget
+    /// this request consumes while outstanding. Default 1; protocols
+    /// whose single request fans out into many backend operations (RESP
+    /// `MGET k k k …`) report the fan-out so one compound request cannot
+    /// amplify its way past the egress bound.
+    fn cost(&self, _req: &Self::Request) -> u64 {
+        1
+    }
+
+    /// Dispatch a parsed request toward the backend. The rendered
+    /// response is handed back through `done` (see [`Completion`]).
+    fn dispatch(&mut self, req: Self::Request, done: Completion);
+}
+
+// ---------------------------------------------------------------------
+// Inbuf
+// ---------------------------------------------------------------------
+
+/// Per-connection receive buffer with a consumed cursor. The engine
+/// appends socket bytes; the protocol consumes whole requests via
+/// [`Inbuf::advance`]; the engine compacts once per loop.
+pub struct Inbuf {
+    buf: Vec<u8>,
+    consumed: usize,
+}
+
+impl Inbuf {
+    pub fn with_capacity(n: usize) -> Inbuf {
+        Inbuf { buf: Vec::with_capacity(n), consumed: 0 }
+    }
+
+    /// The not-yet-consumed bytes.
+    pub fn unparsed(&self) -> &[u8] {
+        &self.buf[self.consumed..]
+    }
+
+    /// Mark `n` bytes of [`Inbuf::unparsed`] as consumed.
+    pub fn advance(&mut self, n: usize) {
+        debug_assert!(self.consumed + n <= self.buf.len());
+        self.consumed += n;
+    }
+
+    /// Unparsed backlog in bytes (what [`netfiber::MAX_INBUF`] bounds).
+    pub fn backlog(&self) -> usize {
+        self.buf.len() - self.consumed
+    }
+
+    pub(crate) fn buf_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+
+    fn compact(&mut self) {
+        if self.consumed > 0 {
+            self.buf.drain(..self.consumed);
+            self.consumed = 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spool
+// ---------------------------------------------------------------------
+
+/// Response buffers kept for reuse per connection (beyond this, excess
+/// buffers are dropped).
+const POOL_MAX: usize = 32;
+/// A pooled buffer that grew past this capacity is dropped instead of
+/// recycled, so one huge response cannot pin memory forever.
+const POOL_BUF_MAX: usize = 64 * 1024;
+
+/// Egress backpressure: most *cost units* ([`Protocol::cost`] — backend
+/// operations, not just requests) one connection may have dispatched but
+/// uncompleted. Together with [`MAX_OUTBUF`] this bounds what a client
+/// that pipelines requests while never reading responses can make the
+/// server buffer (`MAX_INBUF` alone only bounds *input* — parsed
+/// requests would otherwise fan out into unboundedly many buffered
+/// responses). Comfortably above every load generator's pipeline depth.
+pub const MAX_CONN_INFLIGHT: u64 = 128;
+/// Egress backpressure: once this many response bytes sit rendered or
+/// reorder-parked but unsent, the connection stops parsing (and therefore
+/// dispatching) until the peer drains its socket.
+pub const MAX_OUTBUF: usize = 4 << 20;
+
+/// Per-connection response spool: sequence allocation, completion
+/// buffering under either [`ResponseOrder`], the wire-out buffer with its
+/// partial-write cursor, and the response-buffer pool.
+pub struct Spool {
+    order: ResponseOrder,
+    /// Next sequence number to hand out ([`Spool::begin`]).
+    next_seq: u64,
+    /// Completions received so far (either order).
+    completed: u64,
+    /// Outstanding [`Protocol::cost`] units (what [`MAX_CONN_INFLIGHT`]
+    /// bounds).
+    inflight_cost: u64,
+    /// In-order only: next sequence to emit onto the wire.
+    next_emit: u64,
+    /// In-order only: completed-but-not-yet-emittable responses.
+    pending: HashMap<u64, Vec<u8>>,
+    /// Total bytes parked in `pending` (kept in sync for O(1) egress
+    /// accounting).
+    pending_bytes: usize,
+    /// Bytes ready for (or partially on) the wire.
+    out: Vec<u8>,
+    /// How much of `out` is already written.
+    wcursor: usize,
+    pool: Vec<Vec<u8>>,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+}
+
+impl Spool {
+    pub fn new(order: ResponseOrder) -> Spool {
+        Spool {
+            order,
+            next_seq: 0,
+            completed: 0,
+            inflight_cost: 0,
+            next_emit: 0,
+            pending: HashMap::new(),
+            pending_bytes: 0,
+            out: Vec::with_capacity(32 * 1024),
+            wcursor: 0,
+            pool: Vec::new(),
+            pool_hits: 0,
+            pool_misses: 0,
+        }
+    }
+
+    /// Allocate the next response slot, charging `cost` units against the
+    /// [`MAX_CONN_INFLIGHT`] budget until completion. Under
+    /// [`ResponseOrder::InOrder`] the wire emits slots strictly in
+    /// `begin` order.
+    pub fn begin(&mut self, cost: u64) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        self.inflight_cost += cost;
+        s
+    }
+
+    /// Check a (cleared) response buffer out of the pool.
+    pub fn checkout(&mut self) -> Vec<u8> {
+        match self.pool.pop() {
+            Some(b) => {
+                self.pool_hits += 1;
+                b
+            }
+            None => {
+                self.pool_misses += 1;
+                Vec::with_capacity(256)
+            }
+        }
+    }
+
+    /// Hand back the rendered response for slot `seq`, releasing its
+    /// `cost` charge. Out-of-order mode emits immediately; in-order mode
+    /// emits the contiguous prefix of completed slots.
+    pub fn complete(&mut self, seq: u64, cost: u64, buf: Vec<u8>) {
+        self.completed += 1;
+        self.inflight_cost -= cost;
+        match self.order {
+            ResponseOrder::OutOfOrder => self.emit(buf),
+            ResponseOrder::InOrder => {
+                if seq == self.next_emit {
+                    self.emit(buf);
+                    self.next_emit += 1;
+                    while let Some(b) = self.pending.remove(&self.next_emit) {
+                        self.pending_bytes -= b.len();
+                        self.emit(b);
+                        self.next_emit += 1;
+                    }
+                } else {
+                    self.pending_bytes += buf.len();
+                    self.pending.insert(seq, buf);
+                }
+            }
+        }
+    }
+
+    fn emit(&mut self, b: Vec<u8>) {
+        self.out.extend_from_slice(&b);
+        self.recycle(b);
+    }
+
+    fn recycle(&mut self, mut b: Vec<u8>) {
+        if self.pool.len() < POOL_MAX && b.capacity() <= POOL_BUF_MAX {
+            b.clear();
+            self.pool.push(b);
+        }
+    }
+
+    /// Requests dispatched but not yet completed.
+    pub fn inflight(&self) -> u64 {
+        self.next_seq - self.completed
+    }
+
+    /// Bytes rendered (or sequenced) but not yet on the wire.
+    pub fn unsent(&self) -> usize {
+        self.out.len() - self.wcursor
+    }
+
+    /// Everything buffered on the response side: unsent wire bytes plus
+    /// reorder-parked completions (what [`MAX_OUTBUF`] bounds).
+    pub fn egress_bytes(&self) -> usize {
+        self.unsent() + self.pending_bytes
+    }
+
+    /// Whether the engine may parse + dispatch another request on this
+    /// connection, or must let the peer drain responses first.
+    pub fn admits_dispatch(&self) -> bool {
+        self.inflight_cost < MAX_CONN_INFLIGHT && self.egress_bytes() < MAX_OUTBUF
+    }
+
+    /// In-order only: completed responses still waiting behind an
+    /// incomplete earlier slot.
+    pub fn reordering(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Flush as much of the out-buffer as the socket accepts; false if
+    /// the connection died.
+    pub fn write_to(&mut self, stream: &mut TcpStream) -> bool {
+        write_pending(stream, &mut self.out, &mut self.wcursor)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Completion
+// ---------------------------------------------------------------------
+
+/// The ticket a [`Protocol::dispatch`] implementation threads through its
+/// backend callback: check a pooled buffer out, render the response into
+/// it, and [`Completion::complete`]. Dropping a `Completion` without
+/// completing it would wedge the in-order spool — always complete, even
+/// for error responses.
+pub struct Completion {
+    spool: Rc<RefCell<Spool>>,
+    seq: u64,
+    cost: u64,
+    ops: Arc<AtomicU64>,
+}
+
+impl Completion {
+    /// Check a (cleared, pooled) response buffer out of the connection's
+    /// spool.
+    pub fn checkout(&self) -> Vec<u8> {
+        self.spool.borrow_mut().checkout()
+    }
+
+    /// Deliver the rendered response and count the op served.
+    pub fn complete(self, buf: Vec<u8>) {
+        self.spool.borrow_mut().complete(self.seq, self.cost, buf);
+        self.ops.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------
+
+/// Per-worker connection counters (one cache-padded slot per worker, no
+/// cross-worker contention on the hot path).
+#[derive(Default)]
+pub struct WorkerConnStats {
+    /// Connection fibers started on this worker.
+    pub accepted: AtomicU64,
+    /// Connection fibers exited on this worker.
+    pub closed: AtomicU64,
+    /// Requests parsed + dispatched.
+    pub requests: AtomicU64,
+    /// Connections poisoned by a parse error.
+    pub parse_errors: AtomicU64,
+    /// Response buffers served from the spool pool vs freshly allocated.
+    pub pool_hits: AtomicU64,
+    pub pool_misses: AtomicU64,
+}
+
+pub struct ConnMetrics {
+    per_worker: Vec<CachePadded<WorkerConnStats>>,
+}
+
+/// Aggregated [`ConnMetrics`] snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConnTotals {
+    pub accepted: u64,
+    pub closed: u64,
+    pub requests: u64,
+    pub parse_errors: u64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+}
+
+impl ConnMetrics {
+    pub fn new(workers: usize) -> Arc<ConnMetrics> {
+        let mut per_worker = Vec::with_capacity(workers.max(1));
+        per_worker.resize_with(workers.max(1), || CachePadded::new(WorkerConnStats::default()));
+        Arc::new(ConnMetrics { per_worker })
+    }
+
+    /// The calling worker's slot (slot 0 off-runtime — accept thread).
+    pub fn slot(&self) -> &WorkerConnStats {
+        let w = crate::runtime::try_worker_id().unwrap_or(0);
+        &self.per_worker[w % self.per_worker.len()]
+    }
+
+    pub fn worker(&self, w: usize) -> &WorkerConnStats {
+        &self.per_worker[w % self.per_worker.len()]
+    }
+
+    pub fn totals(&self) -> ConnTotals {
+        let mut t = ConnTotals::default();
+        for s in &self.per_worker {
+            t.accepted += s.accepted.load(Ordering::Relaxed);
+            t.closed += s.closed.load(Ordering::Relaxed);
+            t.requests += s.requests.load(Ordering::Relaxed);
+            t.parse_errors += s.parse_errors.load(Ordering::Relaxed);
+            t.pool_hits += s.pool_hits.load(Ordering::Relaxed);
+            t.pool_misses += s.pool_misses.load(Ordering::Relaxed);
+        }
+        t
+    }
+}
+
+// ---------------------------------------------------------------------
+// The connection fiber
+// ---------------------------------------------------------------------
+
+/// How long a stopping server keeps draining acked-but-unsent responses
+/// before giving up on a peer that never reads.
+const STOP_DRAIN_GRACE: std::time::Duration = std::time::Duration::from_millis(250);
+
+/// The shared connection loop: ingest → parse/dispatch → spool → egress →
+/// exit checks → wait. One fiber per accepted connection.
+fn connection_fiber<P: Protocol>(
+    mut stream: TcpStream,
+    mut proto: P,
+    ops: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    policy: NetPolicy,
+    metrics: Arc<ConnMetrics>,
+) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    stream.set_nodelay(true).ok();
+    let stats = metrics.slot();
+    stats.accepted.fetch_add(1, Ordering::Relaxed);
+    let fd = stream.as_raw_fd();
+    let spool = Rc::new(RefCell::new(Spool::new(P::ORDER)));
+    let mut inbuf = Inbuf::with_capacity(32 * 1024);
+    let mut peer_gone = false;
+    // Malformed stream: answer (render_error), stop reading/parsing,
+    // drain what's owed, close — never panic the worker.
+    let mut poisoned = false;
+    // On server stop, drain buffered responses for a bounded grace period
+    // (acked work should reach the wire) without letting a peer that
+    // never reads hold shutdown hostage.
+    let mut stop_deadline: Option<std::time::Instant> = None;
+
+    loop {
+        let mut progress = false;
+        // 1. Ingest ("reading requests is done in batches"): drain the
+        //    socket up to a fairness bound, and stop reading while the
+        //    unparsed backlog is past MAX_INBUF (TCP backpressure instead
+        //    of unbounded buffering).
+        if !peer_gone && !poisoned && inbuf.backlog() < netfiber::MAX_INBUF {
+            match read_burst(&mut stream, inbuf.buf_mut(), 64 * 1024) {
+                ReadOutcome::Data(_) => progress = true,
+                ReadOutcome::Closed => peer_gone = true,
+                ReadOutcome::WouldBlock => {}
+            }
+        }
+        // 2. Parse + dispatch every complete request — bounded by the
+        //    egress gate: a client that pipelines requests while never
+        //    reading responses must stall here (its inbuf then fills to
+        //    MAX_INBUF and TCP backpressure takes over) instead of
+        //    ballooning the response spool without bound.
+        while !poisoned && spool.borrow().admits_dispatch() {
+            match proto.parse(&mut inbuf) {
+                Ok(Some(req)) => {
+                    progress = true;
+                    metrics.slot().requests.fetch_add(1, Ordering::Relaxed);
+                    let cost = proto.cost(&req).max(1);
+                    let seq = spool.borrow_mut().begin(cost);
+                    let done =
+                        Completion { spool: spool.clone(), seq, cost, ops: ops.clone() };
+                    proto.dispatch(req, done);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // Answer the failure (sequenced behind every earlier
+                    // command, like any other response), then wind down.
+                    progress = true;
+                    metrics.slot().parse_errors.fetch_add(1, Ordering::Relaxed);
+                    let (seq, mut b) = {
+                        let mut sp = spool.borrow_mut();
+                        let seq = sp.begin(1);
+                        let b = sp.checkout();
+                        (seq, b)
+                    };
+                    proto.render_error(&e, &mut b);
+                    spool.borrow_mut().complete(seq, 1, b);
+                    poisoned = true;
+                    break;
+                }
+            }
+        }
+        inbuf.compact();
+        // 3. Egress ("sending results is done in batches").
+        {
+            let mut sp = spool.borrow_mut();
+            let before = sp.unsent();
+            if !sp.write_to(&mut stream) {
+                break;
+            }
+            if sp.unsent() < before {
+                progress = true;
+            }
+        }
+        // 4. Exit conditions.
+        let (inflight, unsent) = {
+            let sp = spool.borrow();
+            (sp.inflight(), sp.unsent())
+        };
+        if (peer_gone || poisoned) && inflight == 0 && unsent == 0 {
+            break;
+        }
+        if stop.load(Ordering::Acquire) && inflight == 0 {
+            if unsent == 0 {
+                break;
+            }
+            let deadline = *stop_deadline
+                .get_or_insert_with(|| std::time::Instant::now() + STOP_DRAIN_GRACE);
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
+        }
+        // 5. Wait for more work. With responses in flight the wake comes
+        //    from the scheduler (backend completions), so yield; otherwise
+        //    the only possible wake is the socket — park on it (Epoll)
+        //    instead of re-polling every tick (BusyPoll).
+        if progress || inflight > 0 || stop.load(Ordering::Acquire) {
+            fiber::yield_now();
+        } else {
+            let want_read = !peer_gone && !poisoned && inbuf.backlog() < netfiber::MAX_INBUF;
+            let want_write = unsent > 0;
+            net_wait(policy, fd, want_read, want_write);
+        }
+    }
+    let stats = metrics.slot();
+    stats.closed.fetch_add(1, Ordering::Relaxed);
+    let sp = spool.borrow();
+    stats.pool_hits.fetch_add(sp.pool_hits, Ordering::Relaxed);
+    stats.pool_misses.fetch_add(sp.pool_misses, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// ServerCore
+// ---------------------------------------------------------------------
+
+/// Topology + socket configuration shared by every front end.
+#[derive(Clone, Debug)]
+pub struct CoreConfig {
+    pub workers: usize,
+    /// Dedicated trustee workers (shards live there; no socket fibers).
+    pub dedicated: usize,
+    pub addr: String,
+    /// How connection fibers wait for socket progress.
+    pub net: NetPolicy,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        CoreConfig {
+            workers: 4,
+            dedicated: 0,
+            addr: "127.0.0.1:0".into(),
+            net: NetPolicy::default(),
+        }
+    }
+}
+
+/// A running delegated TCP server: runtime, acceptor, connection engine.
+/// Front ends ([`crate::kvstore::KvServer`], [`crate::memcache::McdServer`],
+/// [`crate::server::resp::RespServer`]) wrap one of these plus their
+/// backend handle.
+pub struct ServerCore {
+    rt: Option<Runtime>,
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    ops_served: Arc<AtomicU64>,
+    metrics: Arc<ConnMetrics>,
+}
+
+impl ServerCore {
+    /// Start the engine. `build` runs once after the runtime exists —
+    /// with the runtime and the trustee worker ids — and returns the
+    /// per-connection protocol factory (where front ends construct their
+    /// backend and close over it). Configuration and bind problems are
+    /// reported as descriptive errors *before* any worker thread spawns.
+    pub fn try_start<P, F, B>(
+        cfg: CoreConfig,
+        accept_name: &str,
+        build: B,
+    ) -> Result<ServerCore, String>
+    where
+        P: Protocol + Send,
+        F: FnMut() -> P + Send + 'static,
+        B: FnOnce(&Runtime, &[usize]) -> F,
+    {
+        netfiber::validate_topology(cfg.workers, cfg.dedicated)?;
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking listener: {e}"))?;
+
+        let rt = Runtime::builder()
+            .workers(cfg.workers)
+            .dedicated_trustees(cfg.dedicated)
+            .build();
+        // Shard trustees: the dedicated workers if any, else all workers.
+        let trustees: Vec<usize> = if cfg.dedicated > 0 {
+            (0..cfg.dedicated).collect()
+        } else {
+            (0..cfg.workers).collect()
+        };
+        let mut factory = build(&rt, &trustees);
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let ops_served = Arc::new(AtomicU64::new(0));
+        let metrics = ConnMetrics::new(cfg.workers);
+
+        // Socket workers: the non-dedicated ones (validate_topology
+        // guarantees at least one).
+        let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
+        let policy = cfg.net;
+
+        // Round-robin dispatch of accepted streams onto socket workers.
+        let dispatch = {
+            let ops = ops_served.clone();
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            netfiber::round_robin_dispatch(
+                rt.shared().clone(),
+                socket_workers.clone(),
+                move |stream| {
+                    let proto = factory();
+                    let ops = ops.clone();
+                    let stop = stop.clone();
+                    let metrics = metrics.clone();
+                    Box::new(move || {
+                        connection_fiber(stream, proto, ops, stop, policy, metrics)
+                    })
+                },
+            )
+        };
+
+        // Epoll: the acceptor is a fiber parked on listener readability in
+        // the first socket worker's reactor — no sleep-poll thread.
+        // BusyPoll: the legacy 200 µs accept thread (A/B baseline).
+        let accept_handle = netfiber::start_acceptor(
+            policy,
+            listener,
+            stop.clone(),
+            rt.shared(),
+            socket_workers[0],
+            dispatch,
+            accept_name,
+        )?;
+
+        Ok(ServerCore {
+            rt: Some(rt),
+            local_addr,
+            stop,
+            accept_handle,
+            ops_served,
+            metrics,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt.as_ref().unwrap()
+    }
+
+    /// Completed requests across all connections (bumped by
+    /// [`Completion::complete`]).
+    pub fn ops_served(&self) -> &Arc<AtomicU64> {
+        &self.ops_served
+    }
+
+    pub fn metrics(&self) -> &Arc<ConnMetrics> {
+        &self.metrics
+    }
+
+    /// Issue `n` backend operations from a worker fiber with a bounded
+    /// in-flight window ("Prior to each run, we pre-fill the table").
+    /// `issue(i, on_done)` must arrange for `on_done()` when operation
+    /// `i` completes.
+    pub fn prefill(
+        &self,
+        n: u64,
+        issue: impl Fn(u64, Box<dyn FnOnce() + 'static>) + Send + 'static,
+    ) {
+        let worker = self.runtime().workers() - 1;
+        self.runtime().block_on(worker, move || {
+            let done = Arc::new(AtomicU64::new(0));
+            let mut issued = 0u64;
+            while issued < n || done.load(Ordering::Relaxed) < n {
+                // Keep a bounded window in flight so outboxes stay small.
+                while issued < n && issued - done.load(Ordering::Relaxed) < 256 {
+                    let d = done.clone();
+                    issue(
+                        issued,
+                        Box::new(move || {
+                            d.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    );
+                    issued += 1;
+                }
+                fiber::yield_now();
+            }
+        });
+    }
+
+    /// Stop accepting, drain connections (bounded), tear the runtime
+    /// down. Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(rt) = self.rt.take() {
+            rt.shutdown();
+        }
+    }
+}
+
+impl Drop for ServerCore {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rendered(bytes: &[u8], sp: &mut Spool) -> Vec<u8> {
+        let mut b = sp.checkout();
+        b.extend_from_slice(bytes);
+        b
+    }
+
+    #[test]
+    fn in_order_spool_delivers_in_sequence_despite_out_of_order_completions() {
+        // Three requests dispatched in order A, B, C; shard completions
+        // arrive C, A, B. The wire must still see A B C.
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        let (a, b, c) = (sp.begin(1), sp.begin(1), sp.begin(1));
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(sp.inflight(), 3);
+
+        let buf = rendered(b"C;", &mut sp);
+        sp.complete(c, 1, buf);
+        assert_eq!(sp.unsent(), 0, "C must wait for A and B");
+        assert_eq!(sp.reordering(), 1);
+
+        let buf = rendered(b"A;", &mut sp);
+        sp.complete(a, 1, buf);
+        assert_eq!(&sp.out[..], b"A;", "A emits alone; B still missing");
+
+        let buf = rendered(b"B;", &mut sp);
+        sp.complete(b, 1, buf);
+        assert_eq!(&sp.out[..], b"A;B;C;", "B unlocks the parked C");
+        assert_eq!(sp.inflight(), 0);
+        assert_eq!(sp.reordering(), 0);
+    }
+
+    #[test]
+    fn out_of_order_spool_emits_on_completion() {
+        let mut sp = Spool::new(ResponseOrder::OutOfOrder);
+        let (a, b) = (sp.begin(1), sp.begin(1));
+        let buf = rendered(b"B;", &mut sp);
+        sp.complete(b, 1, buf);
+        assert_eq!(&sp.out[..], b"B;", "no reordering for id-tagged protocols");
+        let buf = rendered(b"A;", &mut sp);
+        sp.complete(a, 1, buf);
+        assert_eq!(&sp.out[..], b"B;A;");
+        assert_eq!(sp.inflight(), 0);
+    }
+
+    #[test]
+    fn spool_pools_and_reuses_response_buffers() {
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        for round in 0..10u64 {
+            let seq = sp.begin(1);
+            let mut b = sp.checkout();
+            b.extend_from_slice(b"xxxxxxxx");
+            sp.complete(seq, 1, b);
+            if round == 0 {
+                assert_eq!(sp.pool_misses, 1, "first checkout allocates");
+            }
+        }
+        // After the first allocation every checkout was served by reuse.
+        assert_eq!(sp.pool_misses, 1);
+        assert_eq!(sp.pool_hits, 9);
+        // Oversized buffers are not retained: the single pooled buffer is
+        // checked out, grown past the cap, and dropped on recycle.
+        assert_eq!(sp.pool.len(), 1);
+        let seq = sp.begin(1);
+        let mut b = sp.checkout();
+        b.reserve(POOL_BUF_MAX + 1);
+        sp.complete(seq, 1, b);
+        assert_eq!(sp.pool.len(), 0, "grown buffer must not be retained");
+    }
+
+    #[test]
+    fn egress_gate_closes_on_inflight_and_buffered_bytes() {
+        // Inflight cap: a pipelining client stalls at MAX_CONN_INFLIGHT
+        // outstanding requests.
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        for _ in 0..MAX_CONN_INFLIGHT {
+            sp.begin(1);
+        }
+        assert!(!sp.admits_dispatch(), "inflight cap must close the gate");
+
+        // Unsent-bytes cap: rendered responses the peer never reads.
+        let mut sp = Spool::new(ResponseOrder::OutOfOrder);
+        let seq = sp.begin(1);
+        let mut b = sp.checkout();
+        b.resize(MAX_OUTBUF + 1, 0);
+        sp.complete(seq, 1, b);
+        assert_eq!(sp.egress_bytes(), MAX_OUTBUF + 1);
+        assert!(!sp.admits_dispatch(), "unsent bytes must close the gate");
+
+        // In-order: reorder-parked completions count toward the cap too.
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        let _head = sp.begin(1);
+        let tail = sp.begin(1);
+        let mut b = sp.checkout();
+        b.resize(MAX_OUTBUF + 1, 0);
+        sp.complete(tail, 1, b);
+        assert_eq!(sp.unsent(), 0, "tail must be parked behind the head");
+        assert!(!sp.admits_dispatch(), "parked bytes must close the gate");
+
+        // Cost weighting: one compound request (e.g. a many-key MGET) can
+        // consume the whole budget, and releases it on completion.
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        let seq = sp.begin(MAX_CONN_INFLIGHT);
+        assert!(!sp.admits_dispatch(), "one expensive request fills the budget");
+        let b = sp.checkout();
+        sp.complete(seq, MAX_CONN_INFLIGHT, b);
+        assert!(sp.admits_dispatch(), "completion releases the charge");
+    }
+
+    #[test]
+    fn in_order_spool_handles_interleaved_begin_complete() {
+        // begin/complete interleavings (a pipeline that keeps flowing):
+        // emit order must match begin order at every step.
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        let a = sp.begin(1);
+        let b = sp.begin(1);
+        let buf = rendered(b"b", &mut sp);
+        sp.complete(b, 1, buf);
+        let c = sp.begin(1);
+        let buf = rendered(b"c", &mut sp);
+        sp.complete(c, 1, buf);
+        assert_eq!(sp.unsent(), 0);
+        let buf = rendered(b"a", &mut sp);
+        sp.complete(a, 1, buf);
+        assert_eq!(&sp.out[..], b"abc");
+        assert_eq!(sp.inflight(), 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! The protocol-agnostic delegated server core.
+//!
+//! One connection engine ([`engine`]) owns the accept path, per-connection
+//! buffers, backpressure, response spooling under both ordering
+//! disciplines, stop/drain semantics, and per-worker metrics — so a wire
+//! protocol is just a [`Protocol`] implementation (parse / error-render /
+//! dispatch) plus backend wiring. Three front ends ride it:
+//!
+//! - the binary KV protocol (paper §6.3) — [`crate::kvstore::KvServer`],
+//!   out-of-order completion (id-tagged frames);
+//! - the memcached text protocol (paper §7) —
+//!   [`crate::memcache::McdServer`], in-order via the reorder spool;
+//! - RESP2, the Redis wire format — [`resp::RespServer`], in-order, so
+//!   stock Redis clients can drive the delegated backends.
+//!
+//! [`netfiber`] carries the shared non-blocking socket helpers and the
+//! [`netfiber::NetPolicy`] waiting disciplines (busy-poll vs epoll park).
+
+pub mod engine;
+pub mod netfiber;
+pub mod resp;
+pub mod resp_load;
+
+pub use engine::{
+    Completion, ConnMetrics, ConnTotals, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore,
+    Spool,
+};
+pub use netfiber::NetPolicy;
+pub use resp::{RespParseError, RespProtocol, RespRequest, RespServer, RespServerConfig};
+pub use resp_load::{run_resp_load, RespLoadConfig, RespLoadStats};

@@ -1,7 +1,7 @@
-//! Non-blocking socket helpers for fibers, shared by the KV and
-//! mini-memcached servers: a connection fiber reads and writes without
-//! ever blocking its worker thread. What happens when the socket has no
-//! progress to offer is the [`NetPolicy`]:
+//! Non-blocking socket helpers for fibers, shared by every front end of
+//! the delegated server core ([`crate::server::engine`]): a connection
+//! fiber reads and writes without ever blocking its worker thread. What
+//! happens when the socket has no progress to offer is the [`NetPolicy`]:
 //!
 //! - [`NetPolicy::BusyPoll`] — the original yield loop: the fiber yields
 //!   to the scheduler and is re-run every tick, re-`read()`ing its socket

@@ -1,0 +1,750 @@
+//! RESP2 (the Redis wire format) front end for the delegated server core.
+//!
+//! The paper's claim is that delegation scales *any* service whose
+//! critical sections become delegated closures; this module is the third
+//! protocol ported onto the shared engine (after the binary KV proto and
+//! memcached text), mapping a Redis command subset onto the existing
+//! [`AsyncKv`] backends so stock Redis clients can drive
+//! `--backend trust|mutex|rwlock|swift`.
+//!
+//! Commands: `PING`, `GET`, `SET`, `DEL`, `EXISTS`, `MGET`, `INCR`,
+//! `FLUSHALL` — accepted both as RESP arrays (`*2\r\n$3\r\nGET\r\n…`) and
+//! as inline commands (`GET key\r\n`). RESP has no request ids, so the
+//! engine runs the [`ResponseOrder::InOrder`] reorder spool: responses
+//! hit the wire in request order even though shard completions arrive
+//! out of order. Parsing is **total**: hostile bytes answer
+//! `-ERR Protocol error: …` and close, never a worker panic.
+
+use super::engine::{Completion, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore};
+use super::netfiber::{self, NetPolicy};
+use crate::kvstore::backend::{AsyncKv, BackendKind};
+use crate::runtime::Runtime;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+/// Longest inline command line accepted (mirrors redis'
+/// `PROTO_INLINE_MAX_SIZE` spirit at a smaller bound).
+pub const MAX_INLINE: usize = 8192;
+/// Largest single bulk string (keys and values) accepted.
+pub const MAX_BULK: usize = 1 << 20;
+/// Most arguments per command.
+pub const MAX_MULTIBULK: usize = 1024;
+/// Total on-wire size of one command (headers + every bulk). Must stay
+/// **below** [`netfiber::MAX_INBUF`]: the engine stops reading once the
+/// unparsed backlog reaches `MAX_INBUF`, so a command that legally needed
+/// more bytes than that could never finish parsing and would wedge its
+/// connection (the invariant `MAX_INBUF`'s own docs demand of every
+/// protocol). Leaves a [`MAX_BULK`]-sized value plus framing inside the
+/// bound; anything larger is rejected *before* waiting for its bytes.
+pub const MAX_COMMAND: usize = netfiber::MAX_INBUF - (1 << 15);
+
+/// Why a byte stream failed to parse as RESP. Answered on the wire as
+/// `-ERR Protocol error: <message>` and the connection closes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RespParseError {
+    Protocol(&'static str),
+}
+
+impl RespParseError {
+    pub fn message(&self) -> &'static str {
+        match self {
+            RespParseError::Protocol(m) => m,
+        }
+    }
+}
+
+/// One client command; `args[0]` is the case-insensitive command name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RespRequest {
+    pub args: Vec<Vec<u8>>,
+}
+
+// ---------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------
+
+/// Find the `\r\n` terminating the line starting at `from`: `Ok(Some)` =
+/// offset of the `\r`, `Ok(None)` = wait for more bytes, `Err(())` = no
+/// terminator within `limit` bytes (the stream is hostile).
+fn line_end(buf: &[u8], from: usize, limit: usize) -> Result<Option<usize>, ()> {
+    let window = &buf[from..buf.len().min(from + limit + 2)];
+    match window.windows(2).position(|w| w == b"\r\n") {
+        Some(p) => Ok(Some(from + p)),
+        None if window.len() >= limit + 2 => Err(()),
+        None => Ok(None),
+    }
+}
+
+fn parse_i64(b: &[u8]) -> Option<i64> {
+    if b.is_empty() {
+        return None;
+    }
+    std::str::from_utf8(b).ok()?.parse().ok()
+}
+
+/// Incremental RESP2 request parser over a receive buffer:
+/// `Ok(Some((args, bytes_consumed)))` for a complete command (`args` may
+/// be empty for a whitespace-only inline line, which callers skip),
+/// `Ok(None)` to wait for more bytes, `Err` for a stream that can never
+/// become valid. Total on arbitrary input — never panics.
+pub fn parse_request(buf: &[u8]) -> Result<Option<(Vec<Vec<u8>>, usize)>, RespParseError> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf[0] == b'*' {
+        parse_multibulk(buf)
+    } else {
+        parse_inline(buf)
+    }
+}
+
+fn parse_multibulk(buf: &[u8]) -> Result<Option<(Vec<Vec<u8>>, usize)>, RespParseError> {
+    const E_MB: RespParseError = RespParseError::Protocol("invalid multibulk length");
+    const E_BULK: RespParseError = RespParseError::Protocol("invalid bulk length");
+    const E_SIZE: RespParseError = RespParseError::Protocol("multibulk command too large");
+    let end = match line_end(buf, 1, 32) {
+        Ok(Some(e)) => e,
+        Ok(None) => return Ok(None),
+        Err(()) => return Err(E_MB),
+    };
+    let n = match parse_i64(&buf[1..end]) {
+        Some(n) => n,
+        None => return Err(E_MB),
+    };
+    // A hostile count must be rejected before any buffering is committed;
+    // *0 / *-1 carry no command to answer, so they are protocol errors
+    // here rather than silent skips.
+    if n < 1 || n as usize > MAX_MULTIBULK {
+        return Err(E_MB);
+    }
+    let n = n as usize;
+    // Size-only pre-scan: locate every bulk (range, not copy) first. A
+    // partially-arrived command is re-scanned on the next read burst
+    // without re-allocating or re-copying completed args, so large
+    // commands ingest linearly rather than quadratically.
+    let mut pos = end + 2;
+    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(n);
+    for _ in 0..n {
+        if pos >= buf.len() {
+            return Ok(None);
+        }
+        if buf[pos] != b'$' {
+            return Err(RespParseError::Protocol("expected '$' bulk header"));
+        }
+        let hend = match line_end(buf, pos + 1, 32) {
+            Ok(Some(e)) => e,
+            Ok(None) => return Ok(None),
+            Err(()) => return Err(E_BULK),
+        };
+        let len = match parse_i64(&buf[pos + 1..hend]) {
+            Some(l) => l,
+            None => return Err(E_BULK),
+        };
+        if len < 0 || len as usize > MAX_BULK {
+            return Err(E_BULK);
+        }
+        let len = len as usize;
+        let data_start = hend + 2;
+        let next = data_start + len + 2;
+        // Reject an over-MAX_COMMAND command *before* waiting for bytes
+        // the engine's MAX_INBUF read gate would never let arrive.
+        if next > MAX_COMMAND {
+            return Err(E_SIZE);
+        }
+        if buf.len() < next {
+            return Ok(None);
+        }
+        if &buf[data_start + len..next] != b"\r\n" {
+            return Err(RespParseError::Protocol("bulk string not CRLF-terminated"));
+        }
+        ranges.push((data_start, len));
+        pos = next;
+    }
+    // The whole command is present: materialize the args exactly once.
+    let args = ranges
+        .into_iter()
+        .map(|(start, len)| buf[start..start + len].to_vec())
+        .collect();
+    Ok(Some((args, pos)))
+}
+
+fn parse_inline(buf: &[u8]) -> Result<Option<(Vec<Vec<u8>>, usize)>, RespParseError> {
+    // Inline commands terminate on LF (redis accepts a bare LF here).
+    let window = buf.len().min(MAX_INLINE + 2);
+    let Some(nl) = buf[..window].iter().position(|&b| b == b'\n') else {
+        // +1: a maximal legal line may momentarily sit in the buffer with
+        // its '\r' but not yet its '\n' (TCP segmentation must not change
+        // accept/reject).
+        return if buf.len() > MAX_INLINE + 1 {
+            Err(RespParseError::Protocol("too big inline request"))
+        } else {
+            Ok(None)
+        };
+    };
+    let mut line = &buf[..nl];
+    if line.last() == Some(&b'\r') {
+        line = &line[..line.len() - 1];
+    }
+    let args: Vec<Vec<u8>> = line
+        .split(|&b| b == b' ' || b == b'\t')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.to_vec())
+        .collect();
+    Ok(Some((args, nl + 1)))
+}
+
+// ---------------------------------------------------------------------
+// Reply serialisation
+// ---------------------------------------------------------------------
+
+pub fn write_simple(out: &mut Vec<u8>, s: &str) {
+    out.push(b'+');
+    out.extend_from_slice(s.as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn write_error(out: &mut Vec<u8>, msg: &str) {
+    out.push(b'-');
+    out.extend_from_slice(msg.as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn write_int(out: &mut Vec<u8>, n: i64) {
+    out.push(b':');
+    out.extend_from_slice(n.to_string().as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn write_bulk(out: &mut Vec<u8>, v: &[u8]) {
+    out.push(b'$');
+    out.extend_from_slice(v.len().to_string().as_bytes());
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(v);
+    out.extend_from_slice(b"\r\n");
+}
+
+/// The RESP2 null bulk string (a missing key).
+pub fn write_null(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"$-1\r\n");
+}
+
+pub fn write_array_header(out: &mut Vec<u8>, n: usize) {
+    out.push(b'*');
+    out.extend_from_slice(n.to_string().as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+// ---------------------------------------------------------------------
+// Protocol impl
+// ---------------------------------------------------------------------
+
+/// RESP2 on the shared engine, over any [`AsyncKv`] backend.
+pub struct RespProtocol {
+    backend: Arc<dyn AsyncKv>,
+}
+
+impl RespProtocol {
+    pub fn new(backend: Arc<dyn AsyncKv>) -> RespProtocol {
+        RespProtocol { backend }
+    }
+}
+
+impl Protocol for RespProtocol {
+    type Request = RespRequest;
+    type Error = RespParseError;
+
+    /// RESP has no request ids: strict in-order responses.
+    const ORDER: ResponseOrder = ResponseOrder::InOrder;
+
+    fn parse(&mut self, inbuf: &mut Inbuf) -> Result<Option<RespRequest>, RespParseError> {
+        loop {
+            // Skip stray newlines between commands (redis tolerates them);
+            // each iteration below consumes at least one byte, so this
+            // loop terminates.
+            let skip = inbuf
+                .unparsed()
+                .iter()
+                .take_while(|&&b| b == b'\r' || b == b'\n')
+                .count();
+            if skip > 0 {
+                inbuf.advance(skip);
+            }
+            match parse_request(inbuf.unparsed())? {
+                Some((args, used)) => {
+                    inbuf.advance(used);
+                    if args.is_empty() {
+                        continue; // whitespace-only inline line
+                    }
+                    return Ok(Some(RespRequest { args }));
+                }
+                None => return Ok(None),
+            }
+        }
+    }
+
+    fn render_error(&mut self, err: &RespParseError, out: &mut Vec<u8>) {
+        write_error(out, &format!("ERR Protocol error: {}", err.message()));
+    }
+
+    /// Multi-key commands fan out into one backend operation per key and
+    /// can render arbitrarily large replies, so they charge the inflight
+    /// budget per key — `MGET k k k …` cannot amplify past the engine's
+    /// egress bound the way a cost-1 accounting would allow.
+    fn cost(&self, req: &RespRequest) -> u64 {
+        let name = &req.args[0];
+        if name.eq_ignore_ascii_case(b"MGET")
+            || name.eq_ignore_ascii_case(b"DEL")
+            || name.eq_ignore_ascii_case(b"EXISTS")
+        {
+            (req.args.len() as u64).saturating_sub(1).max(1)
+        } else {
+            1
+        }
+    }
+
+    fn dispatch(&mut self, req: RespRequest, done: Completion) {
+        dispatch_command(&self.backend, req.args, done);
+    }
+}
+
+fn reply_now(done: Completion, render: impl FnOnce(&mut Vec<u8>)) {
+    let mut b = done.checkout();
+    render(&mut b);
+    done.complete(b);
+}
+
+fn wrong_arity(done: Completion, cmd: &str) {
+    let msg = format!("ERR wrong number of arguments for '{cmd}' command");
+    reply_now(done, |b| write_error(b, &msg));
+}
+
+#[derive(Clone, Copy)]
+enum CountOp {
+    Del,
+    Exists,
+}
+
+/// `DEL`/`EXISTS` over N keys: issue every backend op at once, count the
+/// hits, answer one integer when the last completion lands (all
+/// completions run on this connection's worker, so plain `Rc` state).
+fn gather_count(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Completion, op: CountOp) {
+    let keys = args.split_off(1);
+    let n = keys.len();
+    let state = Rc::new(RefCell::new((0i64, n, Some(done))));
+    for key in keys {
+        let st = state.clone();
+        let cb: crate::kvstore::backend::AckCb = Box::new(move |hit| {
+            let mut s = st.borrow_mut();
+            if hit {
+                s.0 += 1;
+            }
+            s.1 -= 1;
+            if s.1 == 0 {
+                let done = s.2.take().unwrap();
+                let count = s.0;
+                drop(s);
+                let mut b = done.checkout();
+                write_int(&mut b, count);
+                done.complete(b);
+            }
+        });
+        match op {
+            CountOp::Del => backend.del(key, cb),
+            CountOp::Exists => backend.exists(key, cb),
+        }
+    }
+}
+
+/// `MGET`: one array reply holding every value (null for misses) in key
+/// order, assembled as the per-key delegations complete in any order.
+fn mget(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Completion) {
+    let keys = args.split_off(1);
+    let n = keys.len();
+    struct Gather {
+        slots: Vec<Option<Option<Vec<u8>>>>,
+        remaining: usize,
+        done: Option<Completion>,
+    }
+    let g = Rc::new(RefCell::new(Gather { slots: vec![None; n], remaining: n, done: Some(done) }));
+    for (i, key) in keys.into_iter().enumerate() {
+        let g = g.clone();
+        backend.get(
+            key,
+            Box::new(move |v| {
+                let mut st = g.borrow_mut();
+                st.slots[i] = Some(v);
+                st.remaining -= 1;
+                if st.remaining == 0 {
+                    let done = st.done.take().unwrap();
+                    let mut b = done.checkout();
+                    write_array_header(&mut b, st.slots.len());
+                    for s in &st.slots {
+                        match s.as_ref().unwrap() {
+                            Some(val) => write_bulk(&mut b, val),
+                            None => write_null(&mut b),
+                        }
+                    }
+                    drop(st);
+                    done.complete(b);
+                }
+            }),
+        );
+    }
+}
+
+fn dispatch_command(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Completion) {
+    let name = args[0].to_ascii_uppercase();
+    match name.as_slice() {
+        b"PING" => match args.len() {
+            1 => reply_now(done, |b| write_simple(b, "PONG")),
+            2 => {
+                let msg = args.pop().unwrap();
+                reply_now(done, |b| write_bulk(b, &msg));
+            }
+            _ => wrong_arity(done, "ping"),
+        },
+        b"GET" => {
+            if args.len() != 2 {
+                return wrong_arity(done, "get");
+            }
+            let key = args.swap_remove(1);
+            backend.get(
+                key,
+                Box::new(move |v| {
+                    let mut b = done.checkout();
+                    match v {
+                        Some(val) => write_bulk(&mut b, &val),
+                        None => write_null(&mut b),
+                    }
+                    done.complete(b);
+                }),
+            );
+        }
+        b"SET" => {
+            if args.len() != 3 {
+                return wrong_arity(done, "set");
+            }
+            let val = args.pop().unwrap();
+            let key = args.pop().unwrap();
+            backend.put(
+                key,
+                val,
+                Box::new(move |_| {
+                    let mut b = done.checkout();
+                    write_simple(&mut b, "OK");
+                    done.complete(b);
+                }),
+            );
+        }
+        b"DEL" => {
+            if args.len() < 2 {
+                return wrong_arity(done, "del");
+            }
+            gather_count(backend, args, done, CountOp::Del);
+        }
+        b"EXISTS" => {
+            if args.len() < 2 {
+                return wrong_arity(done, "exists");
+            }
+            gather_count(backend, args, done, CountOp::Exists);
+        }
+        b"MGET" => {
+            if args.len() < 2 {
+                return wrong_arity(done, "mget");
+            }
+            mget(backend, args, done);
+        }
+        b"INCR" => {
+            if args.len() != 2 {
+                return wrong_arity(done, "incr");
+            }
+            let key = args.swap_remove(1);
+            backend.incr(
+                key,
+                1,
+                Box::new(move |r| {
+                    let mut b = done.checkout();
+                    match r {
+                        Ok(n) => write_int(&mut b, n),
+                        Err(()) => {
+                            write_error(&mut b, "ERR value is not an integer or out of range")
+                        }
+                    }
+                    done.complete(b);
+                }),
+            );
+        }
+        b"FLUSHALL" => {
+            if args.len() != 1 {
+                return wrong_arity(done, "flushall");
+            }
+            backend.flush_all(Box::new(move || {
+                let mut b = done.checkout();
+                write_simple(&mut b, "OK");
+                done.complete(b);
+            }));
+        }
+        _ => {
+            let msg = format!(
+                "ERR unknown command '{}'",
+                String::from_utf8_lossy(&args[0]).escape_default()
+            );
+            reply_now(done, |b| write_error(b, &msg));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// RESP server configuration (same shape as the KV/memcached configs).
+#[derive(Clone, Debug)]
+pub struct RespServerConfig {
+    pub workers: usize,
+    /// Dedicated trustee workers (shards live there; no socket fibers).
+    pub dedicated: usize,
+    pub backend: BackendKind,
+    pub addr: String,
+    /// How connection fibers wait for socket progress.
+    pub net: NetPolicy,
+}
+
+impl Default for RespServerConfig {
+    fn default() -> Self {
+        RespServerConfig {
+            workers: 4,
+            dedicated: 0,
+            backend: BackendKind::Trust { shards: 0 },
+            addr: "127.0.0.1:0".into(),
+            net: NetPolicy::default(),
+        }
+    }
+}
+
+impl RespServerConfig {
+    /// Topology checks, before any runtime is built.
+    pub fn validate(&self) -> Result<(), String> {
+        netfiber::validate_topology(self.workers, self.dedicated)
+    }
+}
+
+/// A running RESP (Redis-protocol) server over a delegated or lock-based
+/// [`AsyncKv`] backend.
+pub struct RespServer {
+    core: ServerCore,
+    backend: Arc<dyn AsyncKv>,
+    pub ops_served: Arc<AtomicU64>,
+}
+
+impl RespServer {
+    /// Start a server, panicking on an invalid configuration (see
+    /// [`RespServer::try_start`] for the fallible form).
+    pub fn start(cfg: RespServerConfig) -> RespServer {
+        Self::try_start(cfg).unwrap_or_else(|e| panic!("invalid RespServerConfig: {e}"))
+    }
+
+    /// Start a server, reporting configuration/bind problems as a
+    /// descriptive error *before* any worker thread is spawned.
+    pub fn try_start(cfg: RespServerConfig) -> Result<RespServer, String> {
+        let mut backend_out: Option<Arc<dyn AsyncKv>> = None;
+        let core = ServerCore::try_start(
+            CoreConfig {
+                workers: cfg.workers,
+                dedicated: cfg.dedicated,
+                addr: cfg.addr.clone(),
+                net: cfg.net,
+            },
+            "resp-accept",
+            |rt, trustees| {
+                let backend = cfg.backend.build(rt, trustees);
+                backend_out = Some(backend.clone());
+                move || RespProtocol::new(backend.clone())
+            },
+        )?;
+        let ops_served = core.ops_served().clone();
+        Ok(RespServer { core, backend: backend_out.unwrap(), ops_served })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.core.addr()
+    }
+
+    pub fn backend(&self) -> &Arc<dyn AsyncKv> {
+        &self.backend
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.core.runtime()
+    }
+
+    pub fn metrics(&self) -> &Arc<super::engine::ConnMetrics> {
+        self.core.metrics()
+    }
+
+    /// Pre-fill the store with `n` keys in the load generator's format.
+    pub fn prefill(&self, n: u64, val_len: usize) {
+        let backend = self.backend.clone();
+        self.core.prefill(n, move |i, on_done| {
+            backend.put(
+                super::resp_load::key_bytes(i),
+                vec![b'r'; val_len],
+                Box::new(move |_| on_done()),
+            );
+        });
+    }
+
+    pub fn stop(mut self) {
+        self.core.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_one(bytes: &[u8]) -> Option<(Vec<Vec<u8>>, usize)> {
+        parse_request(bytes).unwrap()
+    }
+
+    #[test]
+    fn multibulk_roundtrip() {
+        let (args, used) = parse_one(b"*2\r\n$3\r\nGET\r\n$5\r\nhello\r\n").unwrap();
+        assert_eq!(args, vec![b"GET".to_vec(), b"hello".to_vec()]);
+        assert_eq!(used, 24);
+        // Empty bulk strings are legal.
+        let (args, _) = parse_one(b"*2\r\n$3\r\nSET\r\n$0\r\n\r\n").unwrap();
+        assert_eq!(args[1], b"");
+    }
+
+    #[test]
+    fn inline_commands_parse() {
+        let (args, used) = parse_one(b"PING\r\n").unwrap();
+        assert_eq!(args, vec![b"PING".to_vec()]);
+        assert_eq!(used, 6);
+        // Bare LF and extra whitespace are tolerated.
+        let (args, used) = parse_one(b"SET  key   value\n").unwrap();
+        assert_eq!(args, vec![b"SET".to_vec(), b"key".to_vec(), b"value".to_vec()]);
+        assert_eq!(used, 17);
+        // Whitespace-only line: consumed, no args (caller skips).
+        let (args, used) = parse_one(b"   \r\n").unwrap();
+        assert!(args.is_empty());
+        assert_eq!(used, 5);
+    }
+
+    #[test]
+    fn partial_frames_wait() {
+        let full = b"*2\r\n$3\r\nGET\r\n$5\r\nhello\r\n";
+        for cut in 0..full.len() {
+            assert!(
+                parse_request(&full[..cut]).unwrap().is_none(),
+                "cut={cut} must wait for more bytes"
+            );
+        }
+        assert!(parse_request(b"GET key").unwrap().is_none(), "no LF yet");
+        // Boundary: a maximal inline line whose CRLF is split across reads
+        // must wait, then parse — TCP segmentation must not flip the
+        // verdict on identical bytes.
+        let mut line = vec![b'p'; MAX_INLINE];
+        assert!(parse_request(&line).unwrap().is_none());
+        line.push(b'\r');
+        assert!(parse_request(&line).unwrap().is_none(), "awaiting the LF");
+        line.push(b'\n');
+        let (args, used) = parse_request(&line).unwrap().unwrap();
+        assert_eq!((args.len(), args[0].len(), used), (1, MAX_INLINE, MAX_INLINE + 2));
+    }
+
+    #[test]
+    fn hostile_streams_error_instead_of_panicking_or_wedging() {
+        // Bad multibulk counts.
+        assert!(parse_request(b"*0\r\n").is_err());
+        assert!(parse_request(b"*-1\r\n").is_err());
+        assert!(parse_request(b"*abc\r\n").is_err());
+        assert!(parse_request(format!("*{}\r\n", MAX_MULTIBULK + 1).as_bytes()).is_err());
+        // Bad bulk headers.
+        assert!(parse_request(b"*1\r\n:3\r\nfoo\r\n").is_err());
+        assert!(parse_request(b"*1\r\n$-2\r\n\r\n").is_err());
+        assert!(parse_request(format!("*1\r\n${}\r\n", MAX_BULK + 1).as_bytes()).is_err());
+        // Data block not CRLF-terminated where declared.
+        assert!(parse_request(b"*1\r\n$3\r\nfooXY").is_err());
+        // Endless inline line.
+        let long = vec![b'a'; MAX_INLINE + 16];
+        assert!(parse_request(&long).is_err());
+        // A command whose *total* size exceeds MAX_COMMAND is rejected at
+        // header time — waiting for its bytes would wedge the connection,
+        // because the engine stops reading at MAX_INBUF backlog.
+        let mut big = Vec::new();
+        big.extend_from_slice(b"*3\r\n$3\r\nSET\r\n$600000\r\n");
+        big.extend_from_slice(&vec![b'k'; 600_000]);
+        big.extend_from_slice(b"\r\n$600000\r\n");
+        assert_eq!(
+            parse_request(&big),
+            Err(RespParseError::Protocol("multibulk command too large"))
+        );
+        // ...while a single maximal bulk still fits within the gate.
+        let mut maximal = Vec::new();
+        maximal.extend_from_slice(format!("*1\r\n${MAX_BULK}\r\n").as_bytes());
+        maximal.extend_from_slice(&vec![b'v'; MAX_BULK]);
+        maximal.extend_from_slice(b"\r\n");
+        let (args, used) = parse_request(&maximal).unwrap().unwrap();
+        assert_eq!((args.len(), args[0].len(), used), (1, MAX_BULK, maximal.len()));
+        // A multibulk count line that never terminates.
+        let mut evil = b"*1".to_vec();
+        evil.extend_from_slice(&[b'9'; 64]);
+        assert!(parse_request(&evil).is_err());
+        // Arbitrary bytes never panic.
+        crate::util::quickcheck::check::<Vec<u8>>("resp-parse-garbage", 300, |bytes| {
+            let _ = parse_request(bytes);
+            true
+        });
+    }
+
+    #[test]
+    fn bitflipped_valid_streams_never_panic() {
+        crate::util::quickcheck::check::<(Vec<u8>, Vec<u8>, usize, usize)>(
+            "resp-parse-bitflip",
+            300,
+            |(key, val, flip_at, cut)| {
+                if key.len() > 4096 || val.len() > 4096 {
+                    return true;
+                }
+                let mut buf = Vec::new();
+                write_array_header(&mut buf, 3);
+                write_bulk(&mut buf, b"SET");
+                write_bulk(&mut buf, key);
+                write_bulk(&mut buf, val);
+                let i = flip_at % buf.len();
+                buf[i] ^= ((flip_at >> 8) as u8) | 1;
+                buf.truncate(cut % (buf.len() + 1));
+                // Parse to exhaustion: every outcome is fine except panic.
+                let mut off = 0usize;
+                loop {
+                    match parse_request(&buf[off..]) {
+                        Ok(Some((_, used))) => {
+                            off += used.max(1);
+                            if off >= buf.len() {
+                                break;
+                            }
+                        }
+                        Ok(None) | Err(_) => break,
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn reply_writers_encode_resp2() {
+        let mut b = Vec::new();
+        write_simple(&mut b, "OK");
+        write_error(&mut b, "ERR nope");
+        write_int(&mut b, -7);
+        write_bulk(&mut b, b"hi");
+        write_null(&mut b);
+        write_array_header(&mut b, 2);
+        assert_eq!(&b[..], &b"+OK\r\n-ERR nope\r\n:-7\r\n$2\r\nhi\r\n$-1\r\n*2\r\n"[..]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Load-generating RESP client for the E16 bench and the `resp-load`
+//! subcommand: multi-threaded, per-thread connections, configurable
+//! pipelining, key distribution and write percentage — the same knobs as
+//! the KV and memtier loaders, speaking the Redis wire format.
+//!
+//! I/O failures are surfaced in [`RespLoadStats::errors`] (a server
+//! dropping a connection mid-run fails the run descriptively) instead of
+//! panicking the client thread.
+
+use super::resp::{write_array_header, write_bulk};
+use crate::util::{KeyDist, Rng};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Key encoding shared by prefill and load (`key:<n>`).
+pub fn key_bytes(k: u64) -> Vec<u8> {
+    format!("key:{k}").into_bytes()
+}
+
+#[derive(Clone, Debug)]
+pub struct RespLoadConfig {
+    pub addr: std::net::SocketAddr,
+    /// Concurrent client threads (each with its own connection).
+    pub threads: usize,
+    /// Outstanding requests per connection.
+    pub pipeline: usize,
+    /// Total operations per thread.
+    pub ops_per_thread: u64,
+    /// Key space size and distribution spec ("uniform" | "zipf[:a]").
+    pub keys: u64,
+    pub dist: String,
+    /// Percentage of SETs (rest are GETs).
+    pub write_pct: u32,
+    pub val_len: usize,
+    pub seed: u64,
+}
+
+/// Aggregated results. `errors` holds one descriptive entry per client
+/// thread that failed; completed operations from failed threads still
+/// count toward `ops`.
+pub struct RespLoadStats {
+    pub ops: u64,
+    pub elapsed: std::time::Duration,
+    pub hits: u64,
+    pub misses: u64,
+    pub errors: Vec<String>,
+}
+
+impl RespLoadStats {
+    pub fn throughput(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64()
+    }
+
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Run the workload; returns aggregate stats (never panics on I/O).
+pub fn run_resp_load(cfg: &RespLoadConfig) -> RespLoadStats {
+    let start = Instant::now();
+    let handles: Vec<_> = (0..cfg.threads)
+        .map(|t| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_connection(&cfg, t as u64))
+        })
+        .collect();
+    let mut ops = 0;
+    let mut hits = 0;
+    let mut misses = 0;
+    let mut errors = Vec::new();
+    for (t, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok((o, hi, mi, err)) => {
+                ops += o;
+                hits += hi;
+                misses += mi;
+                if let Some(e) = err {
+                    errors.push(format!("client thread {t}: {e}"));
+                }
+            }
+            Err(_) => errors.push(format!("client thread {t} panicked")),
+        }
+    }
+    RespLoadStats { ops, elapsed: start.elapsed(), hits, misses, errors }
+}
+
+/// Parse one complete RESP reply: `Ok(Some((bytes_used, is_hit)))` where
+/// `is_hit` is false only for a null bulk (missing key), `Ok(None)` =
+/// wait for more bytes, `Err` = the server answered an error or the
+/// stream is broken.
+fn parse_reply(buf: &[u8]) -> Result<Option<(usize, bool)>, String> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    let Some(le) = buf.windows(2).position(|w| w == b"\r\n") else {
+        if buf.len() > 64 * 1024 {
+            return Err("reply line longer than 64 KiB".into());
+        }
+        return Ok(None);
+    };
+    match buf[0] {
+        b'+' | b':' => Ok(Some((le + 2, true))),
+        b'-' => Err(format!(
+            "server error reply: {}",
+            String::from_utf8_lossy(&buf[1..le])
+        )),
+        b'$' => {
+            let n: i64 = std::str::from_utf8(&buf[1..le])
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .ok_or("malformed bulk length in reply")?;
+            if n < 0 {
+                return Ok(Some((le + 2, false)));
+            }
+            // A length past the server's own bulk cap means the stream is
+            // desynced: fail descriptively instead of waiting forever for
+            // bytes that will never come.
+            if n as usize > super::resp::MAX_BULK {
+                return Err(format!("bulk length {n} in reply exceeds MAX_BULK (desync?)"));
+            }
+            let need = le + 2 + n as usize + 2;
+            if buf.len() < need {
+                return Ok(None);
+            }
+            Ok(Some((need, true)))
+        }
+        other => Err(format!("unexpected reply type byte {other:#04x}")),
+    }
+}
+
+fn encode_get(out: &mut Vec<u8>, key: &[u8]) {
+    write_array_header(out, 2);
+    write_bulk(out, b"GET");
+    write_bulk(out, key);
+}
+
+fn encode_set(out: &mut Vec<u8>, key: &[u8], val: &[u8]) {
+    write_array_header(out, 3);
+    write_bulk(out, b"SET");
+    write_bulk(out, key);
+    write_bulk(out, val);
+}
+
+/// Whether a pipelined slot was a GET (miss accounting applies).
+enum Expect {
+    Set,
+    Get,
+}
+
+fn run_connection(cfg: &RespLoadConfig, tid: u64) -> (u64, u64, u64, Option<String>) {
+    let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0xC2B2_AE35)));
+    let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
+    let mut stream = match TcpStream::connect(cfg.addr) {
+        Ok(s) => s,
+        Err(e) => return (0, 0, 0, Some(format!("connect {}: {e}", cfg.addr))),
+    };
+    stream.set_nodelay(true).ok();
+    if let Err(e) = stream.set_nonblocking(true) {
+        return (0, 0, 0, Some(format!("nonblocking: {e}")));
+    }
+
+    let val = vec![b'r'; cfg.val_len];
+    let mut expect: VecDeque<Expect> = VecDeque::with_capacity(cfg.pipeline);
+    let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
+    let mut wcur = 0usize;
+    let mut inbuf: Vec<u8> = Vec::with_capacity(64 * 1024);
+    let mut parsed = 0usize;
+    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
+
+    macro_rules! fail {
+        ($($arg:tt)*) => {
+            return (
+                done,
+                hits,
+                misses,
+                Some(format!(
+                    "after {done}/{} ops: {}",
+                    cfg.ops_per_thread,
+                    format!($($arg)*)
+                )),
+            )
+        };
+    }
+
+    while done < cfg.ops_per_thread {
+        while sent < cfg.ops_per_thread && expect.len() < cfg.pipeline {
+            let key = key_bytes(dist.sample(&mut rng));
+            if rng.pct(cfg.write_pct) {
+                encode_set(&mut out, &key, &val);
+                expect.push_back(Expect::Set);
+            } else {
+                encode_get(&mut out, &key);
+                expect.push_back(Expect::Get);
+            }
+            sent += 1;
+        }
+        // Flush writes (partial ok).
+        loop {
+            if wcur >= out.len() {
+                out.clear();
+                wcur = 0;
+                break;
+            }
+            match stream.write(&out[wcur..]) {
+                Ok(0) => fail!("server closed connection mid-write"),
+                Ok(n) => wcur += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => fail!("write: {e}"),
+            }
+        }
+        // Drain replies.
+        let mut chunk = [0u8; 32 * 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => fail!("server closed connection mid-run"),
+            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => fail!("read: {e}"),
+        }
+        loop {
+            if expect.is_empty() {
+                break;
+            }
+            match parse_reply(&inbuf[parsed..]) {
+                Ok(Some((used, hit))) => {
+                    parsed += used;
+                    let was_get = matches!(expect.pop_front(), Some(Expect::Get));
+                    done += 1;
+                    if hit || !was_get {
+                        hits += 1;
+                    } else {
+                        misses += 1;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => fail!("{e}"),
+            }
+        }
+        if parsed > 0 {
+            inbuf.drain(..parsed);
+            parsed = 0;
+        }
+    }
+    (done, hits, misses, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_parser_handles_each_type_and_partials() {
+        assert_eq!(parse_reply(b"+OK\r\n").unwrap(), Some((5, true)));
+        assert_eq!(parse_reply(b":42\r\n").unwrap(), Some((5, true)));
+        assert_eq!(parse_reply(b"$-1\r\n").unwrap(), Some((5, false)));
+        assert_eq!(parse_reply(b"$5\r\nhello\r\nrest").unwrap(), Some((11, true)));
+        let full = b"$5\r\nhello\r\n";
+        for cut in 0..full.len() {
+            assert_eq!(parse_reply(&full[..cut]).unwrap(), None, "cut={cut}");
+        }
+        assert!(parse_reply(b"-ERR nope\r\n").is_err());
+        assert!(parse_reply(b"?junk\r\n").is_err());
+        // Desync guard: absurd declared lengths error instead of hanging.
+        assert!(parse_reply(b"$99999999\r\n").is_err());
+        assert!(parse_reply(b"$999999999999999999999\r\n").is_err());
+    }
+}

@@ -11,6 +11,7 @@ use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig, NetPolicy};
 use trustee::memcache::{EngineKind, McdServer, McdServerConfig};
+use trustee::server::{RespServer, RespServerConfig};
 
 fn kv_server(net: NetPolicy, workers: usize, dedicated: usize) -> KvServer {
     KvServer::start(KvServerConfig {
@@ -146,6 +147,31 @@ fn memcache_under_epoll_roundtrips() {
     reader.read_line(&mut line).unwrap();
     assert_eq!(line, "VALUE greeting 5 5\r\n");
     drop((c, reader));
+    server.stop();
+}
+
+#[test]
+fn resp_under_epoll_roundtrips() {
+    // Third protocol on the shared core: the RESP front end must obey the
+    // same park/wake contract as the KV and memcached servers.
+    let server = RespServer::start(RespServerConfig {
+        workers: 2,
+        backend: BackendKind::Trust { shards: 2 },
+        net: NetPolicy::Epoll,
+        ..Default::default()
+    });
+    let mut c = TcpStream::connect(server.addr()).unwrap();
+    // Idle a moment first: the fiber parks, then must wake on our bytes.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    c.write_all(b"SET greeting hello\r\n").unwrap();
+    let mut got = vec![0u8; 5];
+    c.read_exact(&mut got).unwrap();
+    assert_eq!(&got, b"+OK\r\n");
+    c.write_all(b"GET greeting\r\n").unwrap();
+    let mut got = vec![0u8; 11];
+    c.read_exact(&mut got).unwrap();
+    assert_eq!(&got[..], &b"$5\r\nhello\r\n"[..]);
+    drop(c);
     server.stop();
 }
 
