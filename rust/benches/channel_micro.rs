@@ -1,31 +1,39 @@
-//! E13 — channel microbenchmarks behind the paper's §6.1.2 capacity claim:
-//! "even MCSLocks ... offer at best 2.5 MOPs. By comparison, a single
-//! Trust<T> trustee will reliably offer 25 MOPs" — a ~10× single-object
-//! capacity ratio.
+//! E13/E14/E17 — channel microbenchmarks behind the paper's §6.1.2
+//! capacity claim: "even MCSLocks ... offer at best 2.5 MOPs. By
+//! comparison, a single Trust<T> trustee will reliably offer 25 MOPs" — a
+//! ~10× single-object capacity ratio.
 //!
 //! Measures: (1) single-pair round-trip latency (batch = 1),
 //! (2) single-trustee throughput under windowed async load from all
 //! clients, (3) single MCS lock and single Mutex throughput, and the
-//! resulting trustee/MCS capacity ratio, plus (4) the batched-vs-eager
-//! flush-policy scenario behind §5.3's amortization claim: the same
-//! windowed fetch-add workload swept over worker count × async window
-//! under both [`FlushPolicy::Eager`] (publish per request, the
-//! pre-refactor behaviour) and [`FlushPolicy::Adaptive`] (outbox
-//! watermark + phase-end flush). Adaptive should win ≥ 1.5x at 4+
-//! workers, where per-request publishes leave most of each slot unused.
+//! resulting trustee/MCS capacity ratio, (4) the batched-vs-eager
+//! flush-policy scenario behind §5.3's amortization claim, and
+//! (5) **steady-state allocations per delegated op** (E17): this binary
+//! installs the counting allocator and differences two async runs of
+//! different lengths, so fixed setup/teardown costs cancel and the
+//! reported allocs/op isolates the hot path (expected: 0.00 after the
+//! allocation-free refactor; the hard guarantee is
+//! `tests/alloc_regression.rs`).
 //!
 //! Usage: cargo bench --bench channel_micro -- [--ops N] [--threads N]
+//!        [--json]
 //!
-//! [`FlushPolicy::Eager`]: trustee::channel::FlushPolicy::Eager
-//! [`FlushPolicy::Adaptive`]: trustee::channel::FlushPolicy::Adaptive
+//! With `--json`, a single machine-readable object is printed to stdout
+//! (progress goes to stderr) — `scripts/bench_smoke.sh` captures it as
+//! `BENCH_channel_micro.json` so future changes have a perf baseline to
+//! compare against.
 
+use std::time::Instant;
 use trustee::bench::fadd::{run_async, run_lock_by_name, FaddConfig};
 use trustee::bench::print_table;
 use trustee::channel::FlushPolicy;
 use trustee::runtime::Runtime;
 use trustee::util::cli::Args;
+use trustee::util::count_alloc::{self, CountingAlloc};
 use trustee::util::stats::fmt_ns;
-use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn round_trip_latency(ops: u64) -> f64 {
     let rt = Runtime::builder().workers(2).build();
@@ -47,10 +55,30 @@ fn round_trip_latency(ops: u64) -> f64 {
     secs / ops as f64 * 1e9
 }
 
+/// Steady-state allocations per async delegated op: difference two runs
+/// whose op counts differ by `extra` — fixed runtime setup/teardown
+/// allocations cancel, leaving only the per-op cost.
+fn allocs_per_op(base: &FaddConfig) -> (f64, f64) {
+    let short = FaddConfig { ops_per_thread: base.ops_per_thread, ..base.clone() };
+    let long = FaddConfig { ops_per_thread: base.ops_per_thread * 2, ..base.clone() };
+    let a0 = count_alloc::snapshot();
+    run_async(&short);
+    let a1 = count_alloc::snapshot();
+    run_async(&long);
+    let a2 = count_alloc::snapshot();
+    let first = a1.since(&a0);
+    let second = a2.since(&a1);
+    let extra_ops = (base.ops_per_thread * base.threads as u64) as f64;
+    let allocs = second.allocs.saturating_sub(first.allocs) as f64 / extra_ops;
+    let bytes = second.bytes.saturating_sub(first.bytes) as f64 / extra_ops;
+    (allocs, bytes)
+}
+
 fn main() {
     let args = Args::from_env();
     let ops: u64 = args.get("ops", 20_000);
     let threads: usize = args.get("threads", 4);
+    let json = args.flag("json");
 
     let rtt = round_trip_latency(ops.min(20_000));
 
@@ -65,6 +93,37 @@ fn main() {
     let mcs = run_lock_by_name("mcs", &cfg);
     let mutex = run_lock_by_name("mutex", &cfg);
     let trustee_async = run_async(&FaddConfig { dedicated: 1, ..cfg.clone() });
+    eprintln!("done capacity comparison");
+
+    let (aop, bop) = allocs_per_op(&FaddConfig { dedicated: 1, ..cfg.clone() });
+    eprintln!("done allocs/op");
+
+    let scenarios = batched_vs_eager(ops, json);
+
+    if json {
+        let rows: Vec<String> = scenarios
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"workers\":{},\"window\":{},\"eager_mops\":{:.4},\"adaptive_mops\":{:.4}}}",
+                    s.0, s.1, s.2, s.3
+                )
+            })
+            .collect();
+        println!(
+            "{{\"bench\":\"channel_micro\",\"ops\":{ops},\"threads\":{threads},\
+             \"rtt_ns\":{rtt:.1},\"mcs_mops\":{:.4},\"mutex_mops\":{:.4},\
+             \"trustee_async_mops\":{:.4},\"trustee_mcs_ratio\":{:.3},\
+             \"allocs_per_op\":{aop:.3},\"alloc_bytes_per_op\":{bop:.1},\
+             \"batched_vs_eager\":[{}]}}",
+            mcs.mops(),
+            mutex.mops(),
+            trustee_async.mops(),
+            trustee_async.mops() / mcs.mops(),
+            rows.join(",")
+        );
+        return;
+    }
 
     print_table(
         "E13: single-object capacity (paper: MCS ~2.5 MOPs vs trustee ~25 MOPs, ~10x)",
@@ -81,16 +140,36 @@ fn main() {
                 "trustee/MCS capacity ratio".into(),
                 format!("{:.2}x", trustee_async.mops() / mcs.mops()),
             ],
+            vec![
+                "steady-state allocs/op (async)".into(),
+                format!("{aop:.3} ({bop:.1} B/op)"),
+            ],
         ],
     );
 
-    batched_vs_eager(ops);
+    print_table(
+        "E14: batched (adaptive flush) vs eager flush, async fetch-add, 1 dedicated trustee",
+        &["client-workers", "window", "eager MOPs", "adaptive MOPs", "adaptive/eager"],
+        &scenarios
+            .iter()
+            .map(|s| {
+                vec![
+                    s.0.to_string(),
+                    s.1.to_string(),
+                    format!("{:.3}", s.2),
+                    format!("{:.3}", s.3),
+                    format!("{:.2}x", s.3 / s.2),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
 }
 
 /// The §5.3 amortization scenario: windowed async fetch-add against a
 /// single trustee, swept over client-worker count × window (the natural
-/// batch-size ceiling), eager vs adaptive flushing.
-fn batched_vs_eager(ops: u64) {
+/// batch-size ceiling), eager vs adaptive flushing. Returns
+/// (workers, window, eager MOPs, adaptive MOPs) rows.
+fn batched_vs_eager(ops: u64, quiet: bool) -> Vec<(usize, usize, f64, f64)> {
     let mut rows = Vec::new();
     for workers in [2usize, 4, 6] {
         for window in [16usize, 64, 256] {
@@ -105,19 +184,11 @@ fn batched_vs_eager(ops: u64) {
             let eager = run_async(&FaddConfig { flush: FlushPolicy::Eager, ..base.clone() });
             let adaptive =
                 run_async(&FaddConfig { flush: FlushPolicy::Adaptive, ..base.clone() });
-            rows.push(vec![
-                workers.to_string(),
-                window.to_string(),
-                format!("{:.3}", eager.mops()),
-                format!("{:.3}", adaptive.mops()),
-                format!("{:.2}x", adaptive.mops() / eager.mops()),
-            ]);
-            eprintln!("done workers={workers} window={window}");
+            rows.push((workers, window, eager.mops(), adaptive.mops()));
+            if !quiet {
+                eprintln!("done workers={workers} window={window}");
+            }
         }
     }
-    print_table(
-        "E14: batched (adaptive flush) vs eager flush, async fetch-add, 1 dedicated trustee",
-        &["client-workers", "window", "eager MOPs", "adaptive MOPs", "adaptive/eager"],
-        &rows,
-    );
+    rows
 }

@@ -4,7 +4,12 @@
 //! sizes where lock-based approaches hold an advantage in Fig. 8".
 //!
 //! Usage: cargo bench --bench fig9_kv_write_pct -- \
-//!            [--dist uniform|zipf] [--keys N] [--pcts 0,5,25,...] [--quick]
+//!            [--dist uniform|zipf] [--keys N] [--pcts 0,5,25,...]
+//!            [--quick] [--json]
+//!
+//! With `--json`, one machine-readable object (all dists, all rows) is
+//! printed to stdout — `scripts/bench_smoke.sh` captures it as
+//! `BENCH_fig9_kv_write_pct.json` for cross-PR comparison.
 
 use trustee::bench::print_table;
 use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
@@ -14,57 +19,79 @@ fn main() {
     let args = Args::from_env();
     let dist_arg = args.get_str("dist", "both");
     let quick = args.flag("quick");
+    let json = args.flag("json");
     let dists: Vec<String> = if dist_arg == "both" {
         vec!["uniform".into(), "zipf".into()]
     } else {
         vec![dist_arg]
     };
+    let mut json_rows: Vec<String> = Vec::new();
     for dist in dists {
-    let keys: u64 = args.get("keys", if dist == "uniform" { 1_000 } else { 100_000 });
-    let default_pcts: &[u32] = if quick { &[5, 50] } else { &[0, 5, 25, 50, 75, 100] };
-    let pcts = args.get_list::<u32>("pcts", default_pcts);
-    let ops: u64 = args.get("ops", if quick { 2_000 } else { 5_000 });
-    let client_threads: usize = args.get("client-threads", 2);
+        let keys: u64 = args.get("keys", if dist == "uniform" { 1_000 } else { 100_000 });
+        let default_pcts: &[u32] = if quick { &[5, 50] } else { &[0, 5, 25, 50, 75, 100] };
+        let pcts = args.get_list::<u32>("pcts", default_pcts);
+        let ops: u64 = args.get("ops", if quick { 2_000 } else { 5_000 });
+        let client_threads: usize = args.get("client-threads", 2);
 
-    println!("# Figure 9{} reproduction: KV store throughput (kOPs) vs write %, {keys} keys",
-             if dist == "uniform" { "a (uniform)" } else { "b (zipfian)" });
-
-    let header = vec!["write_pct", "TrustD2", "TrustS", "Dashmap-like", "Mutex", "RwLock"];
-    let mut rows = Vec::new();
-    for &pct in &pcts {
-        let mut row = vec![pct.to_string()];
-        for (backend, ded) in [
-            (BackendKind::Trust { shards: 8 }, 2usize),
-            (BackendKind::Trust { shards: 8 }, 0),
-            (BackendKind::Swift, 0),
-            (BackendKind::Mutex, 0),
-            (BackendKind::RwLock, 0),
-        ] {
-            let server = KvServer::start(KvServerConfig {
-                workers: 4,
-                dedicated: ded,
-                backend,
-                addr: "127.0.0.1:0".into(),
-                ..Default::default()
-            });
-            server.prefill(keys, 16);
-            let stats = run_load(&LoadConfig {
-                addr: server.addr(),
-                threads: client_threads,
-                pipeline: 32,
-                ops_per_thread: ops,
-                keys,
-                dist: dist.clone(),
-                write_pct: pct,
-                val_len: 16,
-                seed: 0xF19,
-            });
-            row.push(format!("{:.1}", stats.throughput() / 1e3));
-            server.stop();
+        if !json {
+            println!(
+                "# Figure 9{} reproduction: KV store throughput (kOPs) vs write %, {keys} keys",
+                if dist == "uniform" { "a (uniform)" } else { "b (zipfian)" }
+            );
         }
-        eprintln!("done write_pct={pct}");
-        rows.push(row);
+
+        let configs = [
+            ("TrustD2", BackendKind::Trust { shards: 8 }, 2usize),
+            ("TrustS", BackendKind::Trust { shards: 8 }, 0),
+            ("Dashmap-like", BackendKind::Swift, 0),
+            ("Mutex", BackendKind::Mutex, 0),
+            ("RwLock", BackendKind::RwLock, 0),
+        ];
+        let header = vec!["write_pct", "TrustD2", "TrustS", "Dashmap-like", "Mutex", "RwLock"];
+        let mut rows = Vec::new();
+        for &pct in &pcts {
+            let mut row = vec![pct.to_string()];
+            let mut cells: Vec<String> = Vec::new();
+            for (label, backend, ded) in configs.clone() {
+                let server = KvServer::start(KvServerConfig {
+                    workers: 4,
+                    dedicated: ded,
+                    backend,
+                    addr: "127.0.0.1:0".into(),
+                    ..Default::default()
+                });
+                server.prefill(keys, 16);
+                let stats = run_load(&LoadConfig {
+                    addr: server.addr(),
+                    threads: client_threads,
+                    pipeline: 32,
+                    ops_per_thread: ops,
+                    keys,
+                    dist: dist.clone(),
+                    write_pct: pct,
+                    val_len: 16,
+                    seed: 0xF19,
+                });
+                let kops = stats.throughput() / 1e3;
+                row.push(format!("{kops:.1}"));
+                cells.push(format!("\"{label}\":{kops:.2}"));
+                server.stop();
+            }
+            eprintln!("done dist={dist} write_pct={pct}");
+            json_rows.push(format!(
+                "{{\"dist\":\"{dist}\",\"keys\":{keys},\"write_pct\":{pct},{}}}",
+                cells.join(",")
+            ));
+            rows.push(row);
+        }
+        if !json {
+            print_table(&format!("fig9 {dist}: kOPs vs write %"), &header, &rows);
+        }
     }
-    print_table(&format!("fig9 {dist}: kOPs vs write %"), &header, &rows);
+    if json {
+        println!(
+            "{{\"bench\":\"fig9_kv_write_pct\",\"unit\":\"kOPs\",\"rows\":[{}]}}",
+            json_rows.join(",")
+        );
     }
 }

@@ -1,10 +1,16 @@
 //! E16: RESP (Redis-protocol) front end throughput — trust vs mutex
 //! backends under a fig-9-style write-percentage sweep, plus the response
-//! buffer pool hit rate (the shared engine recycles per-response buffers
-//! instead of allocating one per completion).
+//! buffer pool hit rate and the delegation-layer hot-path counters
+//! (inline-completion spills, heap records, heap-pool hit rate) from the
+//! allocation-free refactor (E17).
 //!
 //! Usage: cargo bench --bench resp_throughput -- \
-//!            [--dist uniform|zipf] [--keys N] [--pcts 0,5,25,...] [--quick]
+//!            [--dist uniform|zipf] [--keys N] [--pcts 0,5,25,...]
+//!            [--quick] [--json]
+//!
+//! With `--json`, one machine-readable object is printed to stdout —
+//! `scripts/bench_smoke.sh` captures it as `BENCH_resp_throughput.json`
+//! for cross-PR comparison.
 
 use trustee::bench::print_table;
 use trustee::kvstore::BackendKind;
@@ -14,6 +20,7 @@ use trustee::util::cli::Args;
 fn main() {
     let args = Args::from_env();
     let quick = args.flag("quick");
+    let json = args.flag("json");
     let dist = args.get_str("dist", "uniform");
     let keys: u64 = args.get("keys", 1_000);
     let default_pcts: &[u32] = if quick { &[5, 50] } else { &[0, 5, 25, 50, 75, 100] };
@@ -21,20 +28,25 @@ fn main() {
     let ops: u64 = args.get("ops", if quick { 2_000 } else { 5_000 });
     let client_threads: usize = args.get("client-threads", 2);
 
-    println!(
-        "# E16: RESP front end, kOPs vs write % ({keys} keys, {dist}); \
-         cell = kOPs (response-buffer pool hit rate)"
-    );
+    if !json {
+        println!(
+            "# E16: RESP front end, kOPs vs write % ({keys} keys, {dist}); \
+             cell = kOPs (response-buffer pool hit rate)"
+        );
+    }
 
+    let configs = [
+        ("TrustD2", BackendKind::Trust { shards: 8 }, 2usize),
+        ("TrustS", BackendKind::Trust { shards: 8 }, 0),
+        ("Mutex", BackendKind::Mutex, 0),
+    ];
     let header = vec!["write_pct", "TrustD2", "TrustS", "Mutex"];
     let mut rows = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
     for &pct in &pcts {
         let mut row = vec![pct.to_string()];
-        for (backend, ded) in [
-            (BackendKind::Trust { shards: 8 }, 2usize),
-            (BackendKind::Trust { shards: 8 }, 0),
-            (BackendKind::Mutex, 0),
-        ] {
+        let mut cells: Vec<String> = Vec::new();
+        for (label, backend, ded) in configs.clone() {
             let server = RespServer::start(RespServerConfig {
                 workers: 4,
                 dedicated: ded,
@@ -62,15 +74,28 @@ fn main() {
             std::thread::sleep(std::time::Duration::from_millis(100));
             let t = server.metrics().totals();
             let hit_rate = t.pool_hits as f64 / ((t.pool_hits + t.pool_misses).max(1)) as f64;
-            row.push(format!(
-                "{:.1} ({:.0}%)",
-                stats.throughput() / 1e3,
-                hit_rate * 100.0
+            let hp = server.hot_path_stats();
+            let kops = stats.throughput() / 1e3;
+            row.push(format!("{kops:.1} ({:.0}%)", hit_rate * 100.0));
+            cells.push(format!(
+                "\"{label}\":{{\"kops\":{kops:.2},\"pool_hit_rate\":{hit_rate:.3},\
+                 \"completion_heap_spills\":{},\"heap_records\":{},\
+                 \"slot_bytes_copied\":{},\"resp_bytes\":{}}}",
+                hp.completion_heap_spills, hp.heap_records, hp.slot_bytes_copied, t.resp_bytes
             ));
             server.stop();
         }
         eprintln!("done write_pct={pct}");
+        json_rows.push(format!("{{\"write_pct\":{pct},{}}}", cells.join(",")));
         rows.push(row);
     }
-    print_table(&format!("E16 {dist}: RESP kOPs vs write %"), &header, &rows);
+    if json {
+        println!(
+            "{{\"bench\":\"resp_throughput\",\"dist\":\"{dist}\",\"keys\":{keys},\
+             \"rows\":[{}]}}",
+            json_rows.join(",")
+        );
+    } else {
+        print_table(&format!("E16 {dist}: RESP kOPs vs write %"), &header, &rows);
+    }
 }

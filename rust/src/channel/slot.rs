@@ -94,8 +94,13 @@ pub struct Slot {
     /// Heap spill escape hatch: oversized payloads travel out-of-line.
     /// Written by the producer before the header Release-store, consumed by
     /// the receiver after the Acquire-load — same ordering as the blocks.
+    /// Carried as disassembled `Vec` parts (ptr, len, **capacity**) so the
+    /// receiving side can reassemble the exact allocation and recycle it
+    /// in its spill free list instead of freeing it (DESIGN.md,
+    /// "Allocation discipline").
     spill_ptr: UnsafeCell<*mut u8>,
     spill_len: UnsafeCell<usize>,
+    spill_cap: UnsafeCell<usize>,
 }
 
 // SAFETY: the single-writer/single-reader protocol above; all cross-thread
@@ -111,6 +116,7 @@ impl Default for Slot {
             overflow: UnsafeCell::new([0; OVERFLOW_BYTES]),
             spill_ptr: UnsafeCell::new(std::ptr::null_mut()),
             spill_len: UnsafeCell::new(0),
+            spill_cap: UnsafeCell::new(0),
         }
     }
 }
@@ -156,32 +162,39 @@ impl Slot {
         unsafe { (&*self.primary.get(), &*self.overflow.get()) }
     }
 
-    /// Producer: stash a heap spill buffer (leaked Box<[u8]>); receiver
-    /// takes ownership via [`Slot::take_spill`].
+    /// Producer: stash a heap spill buffer (a leaked `Vec<u8>`, capacity
+    /// preserved); receiver takes ownership via [`Slot::take_spill`] and
+    /// may recycle the allocation.
     ///
     /// # Safety
     /// Producer-only, pre-publish.
-    pub unsafe fn set_spill(&self, buf: Box<[u8]>) {
+    pub unsafe fn set_spill(&self, mut buf: Vec<u8>) {
+        let ptr = buf.as_mut_ptr();
         let len = buf.len();
-        let ptr = Box::into_raw(buf) as *mut u8;
+        let cap = buf.capacity();
+        std::mem::forget(buf);
         unsafe {
             *self.spill_ptr.get() = ptr;
             *self.spill_len.get() = len;
+            *self.spill_cap.get() = cap;
         }
     }
 
-    /// Consumer: take ownership of the spill buffer.
+    /// Consumer: take ownership of the spill buffer (the producer's exact
+    /// allocation — reuse it).
     ///
     /// # Safety
     /// Consumer-only, post-acquire of a header with the spill bit set.
-    pub unsafe fn take_spill(&self) -> Box<[u8]> {
+    pub unsafe fn take_spill(&self) -> Vec<u8> {
         unsafe {
             let ptr = *self.spill_ptr.get();
             let len = *self.spill_len.get();
+            let cap = *self.spill_cap.get();
             *self.spill_ptr.get() = std::ptr::null_mut();
             *self.spill_len.get() = 0;
+            *self.spill_cap.get() = 0;
             assert!(!ptr.is_null(), "spill flag set but no spill buffer");
-            Box::from_raw(std::ptr::slice_from_raw_parts_mut(ptr, len))
+            Vec::from_raw_parts(ptr, len, cap)
         }
     }
 }
@@ -251,12 +264,14 @@ mod tests {
     #[test]
     fn spill_ownership_transfer() {
         let slot = Slot::default();
-        let data: Box<[u8]> = vec![7u8; 5000].into_boxed_slice();
+        let mut data = Vec::with_capacity(8192);
+        data.resize(5000, 7u8);
         unsafe { slot.set_spill(data) };
         slot.publish(Header::new(true, true, 1, 0, 0));
         assert!(slot.header_acquire().spill());
         let back = unsafe { slot.take_spill() };
         assert_eq!(back.len(), 5000);
+        assert_eq!(back.capacity(), 8192, "capacity travels for recycling");
         assert!(back.iter().all(|&b| b == 7));
     }
 

@@ -16,26 +16,53 @@ pub mod oatable;
 
 pub use oatable::{fxhash, FxHasher, OaTable};
 
+use std::borrow::Borrow;
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::{Mutex, RwLock};
 
-/// The operations the KV store and benches need, object-safe enough to be
-/// generic over the backend.
+/// The operations the KV store and benches need, generic over the
+/// backend. Lookup entry points are **borrow-keyed** (`Q: Borrow`-style,
+/// like `HashMap`): callers holding a `&[u8]` key probe a
+/// `Vec<u8>`-keyed map without allocating an owned key first — the
+/// lock-baseline half of the one-copy GET contract (DESIGN.md,
+/// "Allocation discipline").
 pub trait ConcurrentMap<K, V>: Send + Sync {
-    fn get(&self, k: &K) -> Option<V>;
+    /// Owned-copy lookup.
+    fn get<Q>(&self, k: &Q) -> Option<V>
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized;
+    /// Borrow-based lookup: run `f` on the value **in place** (under the
+    /// shard's read lock) without copying it out. `f` must not touch the
+    /// map. This is how `AsyncKv::get` renders a value straight into the
+    /// wire buffer with exactly one copy.
+    fn with_get<Q, R, F>(&self, k: &Q, f: F) -> R
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+        F: FnOnce(Option<&V>) -> R;
     fn insert(&self, k: K, v: V) -> Option<V>;
-    fn remove(&self, k: &K) -> Option<V>;
+    fn remove<Q>(&self, k: &Q) -> Option<V>
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized;
     /// Presence check without cloning the value out — and, on the
     /// RwLock-based maps, without taking the write lock (RESP `EXISTS`
     /// is read-only and must scale like one).
-    fn contains(&self, k: &K) -> bool;
+    fn contains<Q>(&self, k: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized;
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
     /// Read-modify-write (used by fetch-and-add style workloads).
-    fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R;
+    fn update<Q, R>(&self, k: &Q, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized;
     /// Read-modify-write that can also **insert or remove**: `f` receives
     /// the entry slot (`None` when absent) under the shard's write lock;
     /// leaving `Some` (re)inserts, leaving `None` removes. Used by the
@@ -83,9 +110,24 @@ macro_rules! sharded_map {
             K: Eq + Hash + Send + Sync,
             V: Clone + Send + Sync,
         {
-            fn get(&self, k: &K) -> Option<V> {
+            fn get<Q>(&self, k: &Q) -> Option<V>
+            where
+                K: Borrow<Q>,
+                Q: Eq + Hash + ?Sized,
+            {
                 let shard = &self.shards[shard_of(k, self.shards.len())];
                 shard.$read().unwrap().get(k).cloned()
+            }
+
+            fn with_get<Q, R, F>(&self, k: &Q, f: F) -> R
+            where
+                K: Borrow<Q>,
+                Q: Eq + Hash + ?Sized,
+                F: FnOnce(Option<&V>) -> R,
+            {
+                let shard = &self.shards[shard_of(k, self.shards.len())];
+                let g = shard.$read().unwrap();
+                f(g.get(k))
             }
 
             fn insert(&self, k: K, v: V) -> Option<V> {
@@ -93,12 +135,20 @@ macro_rules! sharded_map {
                 shard.$write().unwrap().insert(k, v)
             }
 
-            fn remove(&self, k: &K) -> Option<V> {
+            fn remove<Q>(&self, k: &Q) -> Option<V>
+            where
+                K: Borrow<Q>,
+                Q: Eq + Hash + ?Sized,
+            {
                 let shard = &self.shards[shard_of(k, self.shards.len())];
                 shard.$write().unwrap().remove(k)
             }
 
-            fn contains(&self, k: &K) -> bool {
+            fn contains<Q>(&self, k: &Q) -> bool
+            where
+                K: Borrow<Q>,
+                Q: Eq + Hash + ?Sized,
+            {
                 let shard = &self.shards[shard_of(k, self.shards.len())];
                 shard.$read().unwrap().contains_key(k)
             }
@@ -107,7 +157,11 @@ macro_rules! sharded_map {
                 self.shards.iter().map(|s| s.$read().unwrap().len()).sum()
             }
 
-            fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R {
+            fn update<Q, R>(&self, k: &Q, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R
+            where
+                K: Borrow<Q>,
+                Q: Eq + Hash + ?Sized,
+            {
                 let shard = &self.shards[shard_of(k, self.shards.len())];
                 f(shard.$write().unwrap().get_mut(k))
             }
@@ -186,9 +240,24 @@ where
     K: Eq + Hash + Send + Sync,
     V: Clone + Send + Sync,
 {
-    fn get(&self, k: &K) -> Option<V> {
+    fn get<Q>(&self, k: &Q) -> Option<V>
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+    {
         let shard = &self.shards[shard_of(k, self.shards.len())];
         shard.read().unwrap().get(k).cloned()
+    }
+
+    fn with_get<Q, R, F>(&self, k: &Q, f: F) -> R
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+        F: FnOnce(Option<&V>) -> R,
+    {
+        let shard = &self.shards[shard_of(k, self.shards.len())];
+        let g = shard.read().unwrap();
+        f(g.get(k))
     }
 
     fn insert(&self, k: K, v: V) -> Option<V> {
@@ -196,12 +265,20 @@ where
         shard.write().unwrap().insert(k, v)
     }
 
-    fn remove(&self, k: &K) -> Option<V> {
+    fn remove<Q>(&self, k: &Q) -> Option<V>
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+    {
         let shard = &self.shards[shard_of(k, self.shards.len())];
         shard.write().unwrap().remove(k)
     }
 
-    fn contains(&self, k: &K) -> bool {
+    fn contains<Q>(&self, k: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+    {
         let shard = &self.shards[shard_of(k, self.shards.len())];
         shard.read().unwrap().contains_key(k)
     }
@@ -210,7 +287,11 @@ where
         self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
-    fn update<R>(&self, k: &K, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R {
+    fn update<Q, R>(&self, k: &Q, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+    {
         let shard = &self.shards[shard_of(k, self.shards.len())];
         f(shard.write().unwrap().get_mut(k))
     }
@@ -350,6 +431,36 @@ mod tests {
             // Still usable after clear.
             m.insert(7, 7);
             assert_eq!(m.get(&7), Some(7));
+        }
+        exercise(&ShardedMutexMap::new(8));
+        exercise(&ShardedRwMap::new(8));
+        exercise(&SwiftMap::new(8));
+    }
+
+    #[test]
+    fn borrowed_key_lookups_and_with_get() {
+        // Byte-keyed maps must answer &[u8] probes without an owned key,
+        // and with_get must expose the value in place (one-copy GET).
+        fn exercise<M: ConcurrentMap<Vec<u8>, Vec<u8>>>(m: &M) {
+            m.insert(b"alpha".to_vec(), b"one".to_vec());
+            assert_eq!(m.get::<[u8]>(b"alpha"), Some(b"one".to_vec()));
+            assert!(m.contains::<[u8]>(b"alpha"));
+            assert!(!m.contains::<[u8]>(b"beta"));
+            let len = m.with_get::<[u8], _, _>(b"alpha", |v| v.map_or(0, |v| v.len()));
+            assert_eq!(len, 3);
+            let miss = m.with_get::<[u8], _, _>(b"beta", |v| v.is_none());
+            assert!(miss);
+            let bumped = m.update::<[u8], _>(b"alpha", &mut |v| {
+                if let Some(v) = v {
+                    v.push(b'!');
+                    true
+                } else {
+                    false
+                }
+            });
+            assert!(bumped);
+            assert_eq!(m.remove::<[u8]>(b"alpha"), Some(b"one!".to_vec()));
+            assert_eq!(m.len(), 0);
         }
         exercise(&ShardedMutexMap::new(8));
         exercise(&ShardedRwMap::new(8));

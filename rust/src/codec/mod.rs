@@ -20,7 +20,7 @@
 
 mod wire;
 
-pub use wire::{Wire, WireError, WireReader, WireWriter};
+pub use wire::{varint_len, Wire, WireError, WireReader, WireWriter};
 
 /// Serialize a value to a fresh byte vector.
 pub fn to_bytes<T: Wire>(v: &T) -> Vec<u8> {

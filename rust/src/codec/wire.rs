@@ -65,6 +65,13 @@ impl WireWriter {
         WireWriter { buf }
     }
 
+    /// Continue appending to an existing buffer **without clearing it** —
+    /// the channel's reserve/commit framing serializes `apply_with`
+    /// arguments directly into the outbox arena this way.
+    pub fn append(buf: Vec<u8>) -> Self {
+        WireWriter { buf }
+    }
+
     #[inline]
     pub fn put_bytes(&mut self, b: &[u8]) {
         self.buf.extend_from_slice(b);
@@ -107,6 +114,16 @@ impl WireWriter {
     pub fn clear(&mut self) {
         self.buf.clear();
     }
+}
+
+/// Encoded size of `v` as a LEB128 varint (1–10 bytes).
+pub fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
 }
 
 /// Byte source for decoding.
@@ -394,6 +411,7 @@ mod tests {
             let mut w = WireWriter::new();
             w.put_varint(v);
             assert_eq!(w.len(), len, "varint({v})");
+            assert_eq!(varint_len(v), len, "varint_len({v})");
         }
     }
 

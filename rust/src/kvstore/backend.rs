@@ -4,52 +4,108 @@
 //!
 //! The Trust backend shards the table across trustees ("16 and 24 cores to
 //! run trustees, each hosting a shard of the table"); socket workers
-//! *delegate* all accesses with `apply_with_then` and never touch the
-//! table — clients receive a **copy** of the value, exactly like the
-//! paper's memcached port (§7: "instead of a pointer to a value in the
-//! table, clients receive a copy").
+//! *delegate* all accesses and never touch the table — clients receive a
+//! **copy** of the value, exactly like the paper's memcached port (§7:
+//! "instead of a pointer to a value in the table, clients receive a
+//! copy").
 //!
-//! Every `apply_with_then` here is a **non-urgent** delegation, so the
-//! Fig. 8/9 request paths inherit the adaptive flush policy for free: all
-//! the gets/puts a socket fiber parses out of one TCP read accumulate in
-//! the per-(worker, trustee) outbox and travel as one batch at the
-//! scheduler's phase-end flush (or earlier at the slot watermark), instead
-//! of paying a slot publish per key as the eager pre-refactor design did.
+//! ## Allocation discipline (the one-copy GET contract)
+//!
+//! The interface is built so the steady state performs **zero per-op
+//! allocations** and each value is copied exactly once per channel hop
+//! (DESIGN.md, "Allocation discipline"):
+//!
+//! - Keys travel **borrowed** (`&[u8]`): the Trust backend serializes
+//!   them straight into the delegation slot ([`Trust::apply_raw_then`])
+//!   and the trustee looks them up as a borrowed slice; the lock
+//!   backends probe their maps through the borrow-keyed
+//!   [`ConcurrentMap`] entry points. No owned key is ever built.
+//! - GET completions ([`GetCb`]) receive the value **borrowed** — from
+//!   the delegation response stream (Trust) or in place under the shard
+//!   read lock (locks) — so the front end copies it once, directly into
+//!   its pooled wire buffer.
+//! - Callbacks ([`GetCb`]/[`AckCb`]/[`IncrCb`]/[`FlushCb`]) store their
+//!   captures inline (40 bytes) instead of one `Box<dyn FnOnce>` per op.
+//! - Trust PUTs that overwrite an existing key reuse the entry's `Vec`
+//!   allocation in place.
+//!
+//! Every Trust delegation here is **non-urgent**, so the Fig. 8/9 request
+//! paths inherit the adaptive flush policy for free: all the gets/puts a
+//! socket fiber parses out of one TCP read accumulate in the
+//! per-(worker, trustee) outbox and travel as one batch at the
+//! scheduler's phase-end flush (or earlier at the slot watermark).
 
+use crate::channel::{read_opt_bytes, read_response, ResponseWriter};
 use crate::cmap::{fxhash, ConcurrentMap, OaTable, ShardedMutexMap, ShardedRwMap, SwiftMap};
-use crate::trust::{Trust, TrusteeRef};
 use crate::runtime::Runtime;
+use crate::trust::{Trust, TrusteeRef};
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 use std::sync::Arc;
 
-/// Completion callback for a get (owned copy of the value, or None).
-pub type GetCb = Box<dyn FnOnce(Option<Vec<u8>>) + 'static>;
-/// Completion callback for put/del/exists (true = key existed before).
-pub type AckCb = Box<dyn FnOnce(bool) + 'static>;
-/// Completion for incr: `Ok(new_value)` or `Err(())` when the stored
-/// value is not an ASCII integer (or the increment overflows).
-pub type IncrCb = Box<dyn FnOnce(Result<i64, ()>) + 'static>;
-/// Completion for flush_all.
-pub type FlushCb = Box<dyn FnOnce() + 'static>;
+crate::define_inline_fn_once! {
+    /// Completion callback for a get. The value arrives **borrowed**
+    /// (from the response stream or the shard) and only for the duration
+    /// of the call — copy it where it needs to go, typically straight
+    /// into a pooled wire buffer (the one-copy GET). `None` for a miss.
+    pub struct GetCb(v: Option<&[u8]>);
+    inline_bytes = 40;
+}
+
+crate::define_inline_fn_once! {
+    /// Completion callback for put/del/exists (true = key existed before).
+    pub struct AckCb(existed: bool);
+    inline_bytes = 40;
+}
+
+crate::define_inline_fn_once! {
+    /// Completion for incr: `Ok(new_value)` or `Err(())` when the stored
+    /// value is not an ASCII integer (or the increment overflows).
+    pub struct IncrCb(r: Result<i64, ()>);
+    inline_bytes = 40;
+}
+
+crate::define_inline_fn_once! {
+    /// Completion for flush_all.
+    pub struct FlushCb();
+    inline_bytes = 40;
+}
 
 /// Callback-style KV interface. Lock backends complete inline; the Trust
-/// backend completes when the delegation response arrives.
+/// backend completes when the delegation response arrives. Keys are
+/// borrowed (`&[u8]`) — backends copy them only where ownership is truly
+/// needed (into the delegation slot, or into the table on a fresh
+/// insert).
 pub trait AsyncKv: Send + Sync + 'static {
-    fn get(&self, key: Vec<u8>, cb: GetCb);
-    fn put(&self, key: Vec<u8>, val: Vec<u8>, cb: AckCb);
-    fn del(&self, key: Vec<u8>, cb: AckCb);
-    /// Key-presence check (RESP `EXISTS`). Backends override to avoid
-    /// copying the value out.
-    fn exists(&self, key: Vec<u8>, cb: AckCb) {
-        self.get(key, Box::new(move |v| cb(v.is_some())));
+    /// Look `key` up; `cb` receives the value borrowed (one-copy GET).
+    ///
+    /// **Contract:** `cb` must only *render* — it must not call back
+    /// into this backend synchronously. Lock backends run it while
+    /// holding the shard's read lock (that is what makes the borrowed
+    /// value possible without a copy), so a re-entrant `get`/`put` from
+    /// inside `cb` can self-deadlock on the same shard. The engine's
+    /// completion callbacks comply by construction (they render into a
+    /// connection-local spool); chained follow-up operations belong
+    /// after the callback returns, not inside it.
+    fn get(&self, key: &[u8], cb: GetCb);
+    fn put(&self, key: &[u8], val: &[u8], cb: AckCb);
+    fn del(&self, key: &[u8], cb: AckCb);
+    /// Key-presence check (RESP `EXISTS`). With the borrowed [`GetCb`]
+    /// the default no longer copies the value anywhere. It does still
+    /// pay one heap box per call (the wrapper closure captures the
+    /// 64-byte `AckCb`, which exceeds `GetCb`'s 40-byte inline budget),
+    /// so hot-path backends override it — both to skip shipping value
+    /// bytes and to stay allocation-free; this default is a convenience
+    /// for cold or experimental backends only.
+    fn exists(&self, key: &[u8], cb: AckCb) {
+        self.get(key, GetCb::new(move |v: Option<&[u8]>| cb.call(v.is_some())));
     }
     /// Atomic ASCII-decimal increment with Redis `INCR` semantics: a
     /// missing key counts as 0, a non-integer value (or overflow) is an
     /// error and leaves the entry untouched. Atomic per key — delegated
     /// to the owning trustee for Trust, under the shard's write lock for
     /// the lock backends.
-    fn incr(&self, key: Vec<u8>, delta: i64, cb: IncrCb);
+    fn incr(&self, key: &[u8], delta: i64, cb: IncrCb);
     /// Remove every entry (RESP `FLUSHALL`).
     fn flush_all(&self, cb: FlushCb);
     /// Total entries (diagnostic; may take locks).
@@ -83,33 +139,37 @@ impl<M: ConcurrentMap<Vec<u8>, Vec<u8>> + 'static> LockedKv<M> {
 }
 
 impl<M: ConcurrentMap<Vec<u8>, Vec<u8>> + 'static> AsyncKv for LockedKv<M> {
-    fn get(&self, key: Vec<u8>, cb: GetCb) {
-        cb(self.map.get(&key));
+    fn get(&self, key: &[u8], cb: GetCb) {
+        // Borrow-based: the callback renders under the shard's read lock,
+        // so the value is copied exactly once, shard → wire buffer, with
+        // no owned intermediate. The callback must not touch the map
+        // (engine completions render into a connection-local spool).
+        self.map.with_get::<[u8], _, _>(key, |v| cb.call(v.map(|v| &v[..])));
     }
 
-    fn put(&self, key: Vec<u8>, val: Vec<u8>, cb: AckCb) {
-        cb(self.map.insert(key, val).is_some());
+    fn put(&self, key: &[u8], val: &[u8], cb: AckCb) {
+        cb.call(self.map.insert(key.to_vec(), val.to_vec()).is_some());
     }
 
-    fn del(&self, key: Vec<u8>, cb: AckCb) {
-        cb(self.map.remove(&key).is_some());
+    fn del(&self, key: &[u8], cb: AckCb) {
+        cb.call(self.map.remove::<[u8]>(key).is_some());
     }
 
-    fn exists(&self, key: Vec<u8>, cb: AckCb) {
+    fn exists(&self, key: &[u8], cb: AckCb) {
         // Presence check without cloning the value out and — on the
         // RwLock-based baselines — without the write lock a read-modify-
         // write path would take (EXISTS is read-only and must scale like
         // the read it is).
-        cb(self.map.contains(&key));
+        cb.call(self.map.contains::<[u8]>(key));
     }
 
-    fn incr(&self, key: Vec<u8>, delta: i64, cb: IncrCb) {
-        cb(self.map.entry_update(key, &mut |slot| incr_slot(slot, delta)));
+    fn incr(&self, key: &[u8], delta: i64, cb: IncrCb) {
+        cb.call(self.map.entry_update(key.to_vec(), &mut |slot| incr_slot(slot, delta)));
     }
 
     fn flush_all(&self, cb: FlushCb) {
         self.map.clear();
-        cb();
+        cb.call();
     }
 
     fn len(&self) -> usize {
@@ -159,45 +219,85 @@ fn entrust_shard(tr: &TrusteeRef) -> Trust<KvShard> {
 }
 
 impl AsyncKv for TrustKv {
-    fn get(&self, key: Vec<u8>, cb: GetCb) {
-        self.shard(&key)
-            .apply_with_then(|t, k: Vec<u8>| t.get(&k).cloned(), key, move |v| cb(v));
-    }
-
-    fn put(&self, key: Vec<u8>, val: Vec<u8>, cb: AckCb) {
-        self.shard(&key).apply_with_then(
-            |t, (k, v): (Vec<u8>, Vec<u8>)| t.insert(k, v).is_some(),
-            (key, val),
-            move |existed| cb(existed),
+    fn get(&self, key: &[u8], cb: GetCb) {
+        // One-copy GET: the key is copied once (caller → delegation
+        // slot), looked up borrowed on the trustee, and the value is
+        // written borrowed into the response stream; `cb` sees it
+        // borrowed from that stream and copies it straight into the wire
+        // buffer. No owned key, no owned value, no per-op allocation.
+        self.shard(key).apply_raw_then(
+            |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_opt_bytes(t.get(k).map(|v| &v[..]))
+            },
+            key,
+            move |r| cb.call(read_opt_bytes(r)),
         );
     }
 
-    fn del(&self, key: Vec<u8>, cb: AckCb) {
-        self.shard(&key)
-            .apply_with_then(|t, k: Vec<u8>| t.remove(&k).is_some(), key, move |e| cb(e));
+    fn put(&self, key: &[u8], val: &[u8], cb: AckCb) {
+        // Key and value travel as adjacent raw parts (one copy into the
+        // slot, no concatenation buffer); the closure re-splits at the
+        // captured key length. Overwrites reuse the entry's existing
+        // allocation — steady-state PUT traffic allocates nothing.
+        let klen = key.len();
+        self.shard(key).apply_raw_parts_then(
+            move |t: &mut KvShard, args: &[u8], out: &mut ResponseWriter| {
+                let (k, v) = args.split_at(klen);
+                let existed = match t.get_mut(k) {
+                    Some(slot) => {
+                        slot.clear();
+                        slot.extend_from_slice(v);
+                        true
+                    }
+                    None => {
+                        t.insert(k.to_vec(), v.to_vec());
+                        false
+                    }
+                };
+                out.write_value(&existed);
+            },
+            &[key, val],
+            move |r| cb.call(read_response::<bool>(r)),
+        );
     }
 
-    fn exists(&self, key: Vec<u8>, cb: AckCb) {
-        // Trustee-local presence check: no value copy travels back.
-        self.shard(&key)
-            .apply_with_then(|t, k: Vec<u8>| t.contains_key(&k), key, move |e| cb(e));
-    }
-
-    fn incr(&self, key: Vec<u8>, delta: i64, cb: IncrCb) {
-        // The read-modify-write runs entirely on the owning trustee, so
-        // it is atomic per key with zero synchronization (the paper's
-        // core claim applied to a compound operation).
-        self.shard(&key).apply_with_then(
-            move |t, k: Vec<u8>| {
-                let mut slot = t.remove(&k);
-                let r = incr_slot(&mut slot, delta);
-                if let Some(v) = slot {
-                    t.insert(k, v);
-                }
-                r
+    fn del(&self, key: &[u8], cb: AckCb) {
+        self.shard(key).apply_raw_then(
+            |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.remove(k).is_some())
             },
             key,
-            move |r| cb(r),
+            move |r| cb.call(read_response::<bool>(r)),
+        );
+    }
+
+    fn exists(&self, key: &[u8], cb: AckCb) {
+        // Trustee-local presence check: no value copy travels back.
+        self.shard(key).apply_raw_then(
+            |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.contains_key(k))
+            },
+            key,
+            move |r| cb.call(read_response::<bool>(r)),
+        );
+    }
+
+    fn incr(&self, key: &[u8], delta: i64, cb: IncrCb) {
+        // The read-modify-write runs entirely on the owning trustee, so
+        // it is atomic per key with zero synchronization (the paper's
+        // core claim applied to a compound operation). INCR rewrites the
+        // stored value, so the re-insert owns fresh bytes by design.
+        self.shard(key).apply_raw_then(
+            move |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
+                let mut slot = t.remove(k);
+                let r = incr_slot(&mut slot, delta);
+                if let Some(v) = slot {
+                    t.insert(k.to_vec(), v);
+                }
+                out.write_value(&r);
+            },
+            key,
+            move |r| cb.call(read_response::<Result<i64, ()>>(r)),
         );
     }
 
@@ -215,7 +315,7 @@ impl AsyncKv for TrustKv {
                     remaining.set(remaining.get() - 1);
                     if remaining.get() == 0 {
                         if let Some(cb) = done.borrow_mut().take() {
-                            cb();
+                            cb.call();
                         }
                     }
                 },
@@ -302,9 +402,9 @@ mod tests {
             for i in 0..50u64 {
                 let d = done.clone();
                 kv2.put(
-                    format!("k{i}").into_bytes(),
-                    format!("v{i}").into_bytes(),
-                    Box::new(move |existed| {
+                    &format!("k{i}").into_bytes(),
+                    &format!("v{i}").into_bytes(),
+                    AckCb::new(move |existed| {
                         assert!(!existed);
                         d.fetch_add(1, Ordering::Relaxed);
                     }),
@@ -314,14 +414,35 @@ mod tests {
             while done.load(Ordering::Relaxed) != 50 {
                 crate::fiber::yield_now();
             }
+            // Overwrites must report the existing key (and, on Trust,
+            // reuse the entry in place).
+            let over = Arc::new(AtomicUsize::new(0));
+            for i in 0..10u64 {
+                let o = over.clone();
+                kv2.put(
+                    &format!("k{i}").into_bytes(),
+                    &format!("V{i}").into_bytes(),
+                    AckCb::new(move |existed| {
+                        assert!(existed);
+                        o.fetch_add(1, Ordering::Relaxed);
+                    }),
+                );
+            }
+            while over.load(Ordering::Relaxed) != 10 {
+                crate::fiber::yield_now();
+            }
             let got = Arc::new(AtomicUsize::new(0));
             for i in 0..50u64 {
                 let g = got.clone();
-                let want = format!("v{i}").into_bytes();
+                let want = if i < 10 {
+                    format!("V{i}").into_bytes()
+                } else {
+                    format!("v{i}").into_bytes()
+                };
                 kv2.get(
-                    format!("k{i}").into_bytes(),
-                    Box::new(move |v| {
-                        assert_eq!(v.as_ref(), Some(&want));
+                    &format!("k{i}").into_bytes(),
+                    GetCb::new(move |v: Option<&[u8]>| {
+                        assert_eq!(v, Some(&want[..]));
                         g.fetch_add(1, Ordering::Relaxed);
                     }),
                 );
@@ -333,8 +454,8 @@ mod tests {
             for i in 0..25u64 {
                 let d = deleted.clone();
                 kv2.del(
-                    format!("k{i}").into_bytes(),
-                    Box::new(move |e| {
+                    &format!("k{i}").into_bytes(),
+                    AckCb::new(move |e| {
                         assert!(e);
                         d.fetch_add(1, Ordering::Relaxed);
                     }),
@@ -374,9 +495,9 @@ mod tests {
             // INCR on a missing key starts from 0.
             let s = steps.clone();
             kv2.incr(
-                b"ctr".to_vec(),
+                b"ctr",
                 5,
-                Box::new(move |r| {
+                IncrCb::new(move |r| {
                     assert_eq!(r, Ok(5));
                     s.fetch_add(1, Ordering::Relaxed);
                 }),
@@ -387,9 +508,9 @@ mod tests {
             // INCR again: reads the stored ASCII value back.
             let s = steps.clone();
             kv2.incr(
-                b"ctr".to_vec(),
+                b"ctr",
                 2,
-                Box::new(move |r| {
+                IncrCb::new(move |r| {
                     assert_eq!(r, Ok(7));
                     s.fetch_add(1, Ordering::Relaxed);
                 }),
@@ -400,9 +521,9 @@ mod tests {
             // Non-integer value: an error, and the entry is untouched.
             let s = steps.clone();
             kv2.put(
-                b"text".to_vec(),
-                b"not-a-number".to_vec(),
-                Box::new(move |_| {
+                b"text",
+                b"not-a-number",
+                AckCb::new(move |_| {
                     s.fetch_add(1, Ordering::Relaxed);
                 }),
             );
@@ -411,9 +532,9 @@ mod tests {
             }
             let s = steps.clone();
             kv2.incr(
-                b"text".to_vec(),
+                b"text",
                 1,
-                Box::new(move |r| {
+                IncrCb::new(move |r| {
                     assert_eq!(r, Err(()));
                     s.fetch_add(1, Ordering::Relaxed);
                 }),
@@ -423,9 +544,9 @@ mod tests {
             }
             let s = steps.clone();
             kv2.get(
-                b"text".to_vec(),
-                Box::new(move |v| {
-                    assert_eq!(v.as_deref(), Some(&b"not-a-number"[..]));
+                b"text",
+                GetCb::new(move |v: Option<&[u8]>| {
+                    assert_eq!(v, Some(&b"not-a-number"[..]));
                     s.fetch_add(1, Ordering::Relaxed);
                 }),
             );
@@ -435,16 +556,16 @@ mod tests {
             // EXISTS without copying: hit then miss.
             let s = steps.clone();
             kv2.exists(
-                b"ctr".to_vec(),
-                Box::new(move |e| {
+                b"ctr",
+                AckCb::new(move |e| {
                     assert!(e);
                     s.fetch_add(1, Ordering::Relaxed);
                 }),
             );
             let s = steps.clone();
             kv2.exists(
-                b"nope".to_vec(),
-                Box::new(move |e| {
+                b"nope",
+                AckCb::new(move |e| {
                     assert!(!e);
                     s.fetch_add(1, Ordering::Relaxed);
                 }),
@@ -454,7 +575,7 @@ mod tests {
             }
             // FLUSHALL empties every shard.
             let s = steps.clone();
-            kv2.flush_all(Box::new(move || {
+            kv2.flush_all(FlushCb::new(move || {
                 s.fetch_add(1, Ordering::Relaxed);
             }));
             while steps.load(Ordering::Relaxed) != 8 {
@@ -480,6 +601,69 @@ mod tests {
             exercise_redis_ops(kv, &rt);
         }
         rt.shutdown();
+    }
+
+    #[test]
+    fn default_exists_works_through_borrowed_get() {
+        // A backend that does not override exists still answers presence
+        // through the borrowed GetCb default (no value copy involved).
+        struct GetOnly(LockedKv<SwiftMap<Vec<u8>, Vec<u8>>>);
+        impl AsyncKv for GetOnly {
+            fn get(&self, key: &[u8], cb: GetCb) {
+                self.0.get(key, cb)
+            }
+            fn put(&self, key: &[u8], val: &[u8], cb: AckCb) {
+                self.0.put(key, val, cb)
+            }
+            fn del(&self, key: &[u8], cb: AckCb) {
+                self.0.del(key, cb)
+            }
+            fn incr(&self, key: &[u8], delta: i64, cb: IncrCb) {
+                self.0.incr(key, delta, cb)
+            }
+            fn flush_all(&self, cb: FlushCb) {
+                self.0.flush_all(cb)
+            }
+            fn len(&self) -> usize {
+                self.0.len()
+            }
+            fn name(&self) -> &'static str {
+                "get-only"
+            }
+        }
+        let kv = GetOnly(LockedKv::new(SwiftMap::new(4), "inner"));
+        kv.put(b"k", b"v", AckCb::new(|_| {}));
+        let hit = std::rc::Rc::new(Cell::new(false));
+        let h = hit.clone();
+        kv.exists(b"k", AckCb::new(move |e| h.set(e)));
+        assert!(hit.get());
+        let h = hit.clone();
+        kv.exists(b"missing", AckCb::new(move |e| h.set(e)));
+        assert!(!hit.get());
+    }
+
+    #[test]
+    fn callback_sizes_nest_inside_channel_completions() {
+        use crate::channel::{read_opt_bytes, Completion, COMPLETION_INLINE_BYTES};
+        // The allocation-free chain depends on sizes nesting: a backend
+        // callback (40-byte inline) must be exactly 64 bytes so the
+        // channel completion that captures one (64-byte inline) still
+        // stores it inline. If a field is added to the generated structs,
+        // this test catches the silent heap fallback it would cause.
+        assert_eq!(std::mem::size_of::<GetCb>(), 64);
+        assert_eq!(std::mem::size_of::<AckCb>(), 64);
+        assert_eq!(std::mem::size_of::<IncrCb>(), 64);
+        assert!(std::mem::size_of::<GetCb>() <= COMPLETION_INLINE_BYTES);
+        let cb = GetCb::new(|_: Option<&[u8]>| {});
+        assert!(!cb.was_boxed());
+        let c = Completion::new(move |r: &mut crate::codec::WireReader<'_>| {
+            cb.call(read_opt_bytes(r))
+        });
+        assert!(
+            !c.was_boxed(),
+            "a completion capturing one backend callback must store inline"
+        );
+        drop(c);
     }
 
     #[test]

@@ -3,17 +3,18 @@
 //! socket, such that the server always has new requests to serve", with
 //! out-of-order response acceptance and per-request latency tracking.
 //!
-//! I/O failures (a server dropping the connection mid-run, malformed
-//! response frames) are surfaced in [`LoadStats::errors`] with the thread
-//! and progress context, instead of panicking the client thread: a bench
-//! or test run fails descriptively, never by aborting.
+//! The connection loop is the shared [`crate::loadgen`] skeleton; this
+//! module contributes only the binary-KV [`LoadDriver`] (id-tagged frames
+//! matched out of order, per-request latency recorded by id). I/O
+//! failures (a server dropping the connection mid-run, malformed response
+//! frames) are surfaced in [`LoadStats::errors`] with the thread and
+//! progress context, instead of panicking the client thread.
 
 use super::proto::{self, FrameCursor};
+use crate::loadgen::{run_pipelined_loader, LoadDriver, Reply};
 use crate::util::stats::LatencyHist;
 use crate::util::{KeyDist, Rng};
 use std::collections::HashMap;
-use std::io::{ErrorKind, Read, Write};
-use std::net::TcpStream;
 use std::time::Instant;
 
 /// 8-byte key encoding shared by client and prefill (paper: "The key size
@@ -105,109 +106,65 @@ pub fn run_load(cfg: &LoadConfig) -> LoadStats {
     LoadStats { ops, elapsed: start.elapsed(), hist, hits, misses, errors }
 }
 
-fn run_one_connection(cfg: &LoadConfig, tid: u64) -> ThreadResult {
-    let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0x9E37_79B9)));
-    let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
+/// The binary-KV wire format plugged into the shared loader skeleton:
+/// id-tagged frames, responses matched (and latency recorded) by id in
+/// whatever order the server answers.
+struct KvDriver {
+    rng: Rng,
+    dist: KeyDist,
+    write_pct: u32,
+    val: Vec<u8>,
+    next_id: u64,
+    in_flight: HashMap<u64, Instant>,
+    hist: LatencyHist,
+}
 
-    let mut hist = LatencyHist::new();
-    let mut done = 0u64;
-    let mut hits = 0u64;
-    let mut misses = 0u64;
+impl LoadDriver for KvDriver {
+    fn encode_next(&mut self, out: &mut Vec<u8>) {
+        let key = key_bytes(self.dist.sample(&mut self.rng));
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.rng.pct(self.write_pct) {
+            proto::write_request(out, id, proto::OP_PUT, &key, &self.val);
+        } else {
+            proto::write_request(out, id, proto::OP_GET, &key, &[]);
+        }
+        self.in_flight.insert(id, Instant::now());
+    }
 
-    // One macro instead of `.unwrap()`: bail out with the stats gathered
-    // so far and a message carrying thread progress.
-    macro_rules! fail {
-        ($($arg:tt)*) => {
-            return ThreadResult {
-                ops: done,
-                hist,
-                hits,
-                misses,
-                error: Some(format!(
-                    "after {done}/{} ops: {}",
-                    cfg.ops_per_thread,
-                    format!($($arg)*)
-                )),
-            }
+    fn parse_reply(&mut self, buf: &[u8]) -> Result<Option<Reply>, String> {
+        let mut cursor = FrameCursor::new();
+        let resp = match cursor.next_response(buf) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(None),
+            Err(e) => return Err(format!("malformed response from server: {e}")),
         };
+        let Some(t0) = self.in_flight.remove(&resp.id) else {
+            return Err(format!("response for unknown request id {}", resp.id));
+        };
+        self.hist.record(t0.elapsed().as_nanos() as u64);
+        Ok(Some(Reply { used: cursor.consumed, hit: resp.status == proto::ST_OK }))
     }
+}
 
-    let mut stream = match TcpStream::connect(cfg.addr) {
-        Ok(s) => s,
-        Err(e) => fail!("connect {}: {e}", cfg.addr),
+fn run_one_connection(cfg: &LoadConfig, tid: u64) -> ThreadResult {
+    let mut driver = KvDriver {
+        rng: Rng::new(cfg.seed ^ (tid.wrapping_mul(0x9E37_79B9))),
+        dist: KeyDist::from_spec(&cfg.dist, cfg.keys),
+        write_pct: cfg.write_pct,
+        val: vec![b'x'; cfg.val_len],
+        next_id: 0,
+        in_flight: HashMap::new(),
+        hist: LatencyHist::new(),
     };
-    stream.set_nodelay(true).ok();
-    if let Err(e) = stream.set_nonblocking(true) {
-        fail!("nonblocking: {e}");
+    let r = run_pipelined_loader(cfg.addr, cfg.pipeline, cfg.ops_per_thread, &mut driver);
+    ThreadResult {
+        ops: r.done,
+        hist: driver.hist,
+        hits: r.hits,
+        misses: r.misses,
+        error: r.error,
     }
-
-    let mut sent = 0u64;
-    let mut next_id = 0u64;
-    let mut in_flight: HashMap<u64, Instant> = HashMap::new();
-    let mut out = Vec::with_capacity(64 * 1024);
-    let mut wcur = 0usize;
-    let mut inbuf = Vec::with_capacity(64 * 1024);
-    let mut cursor = FrameCursor::new();
-    let val = vec![b'x'; cfg.val_len];
-
-    while done < cfg.ops_per_thread {
-        // Top up the pipeline.
-        while sent < cfg.ops_per_thread && in_flight.len() < cfg.pipeline {
-            let key = key_bytes(dist.sample(&mut rng));
-            let id = next_id;
-            next_id += 1;
-            if rng.pct(cfg.write_pct) {
-                proto::write_request(&mut out, id, proto::OP_PUT, &key, &val);
-            } else {
-                proto::write_request(&mut out, id, proto::OP_GET, &key, &[]);
-            }
-            in_flight.insert(id, Instant::now());
-            sent += 1;
-        }
-        // Flush writes (partial ok).
-        loop {
-            if wcur >= out.len() {
-                out.clear();
-                wcur = 0;
-                break;
-            }
-            match stream.write(&out[wcur..]) {
-                Ok(0) => fail!("server closed connection mid-write"),
-                Ok(n) => wcur += n,
-                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => fail!("write: {e}"),
-            }
-        }
-        // Drain responses.
-        let mut chunk = [0u8; 32 * 1024];
-        match stream.read(&mut chunk) {
-            Ok(0) => fail!("server closed connection mid-run"),
-            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => fail!("read: {e}"),
-        }
-        loop {
-            let resp = match cursor.next_response(&inbuf) {
-                Ok(Some(r)) => r,
-                Ok(None) => break,
-                Err(e) => fail!("malformed response from server: {e}"),
-            };
-            let Some(t0) = in_flight.remove(&resp.id) else {
-                fail!("response for unknown request id {}", resp.id);
-            };
-            hist.record(t0.elapsed().as_nanos() as u64);
-            if resp.status == proto::ST_OK {
-                hits += 1;
-            } else {
-                misses += 1;
-            }
-            done += 1;
-        }
-        proto::compact(&mut inbuf, &mut cursor);
-    }
-    ThreadResult { ops: done, hist, hits, misses, error: None }
 }
 
 #[cfg(test)]

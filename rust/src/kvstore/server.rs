@@ -115,31 +115,35 @@ impl Protocol for KvProtocol {
     }
 
     fn dispatch(&mut self, req: proto::Request, done: Completion) {
+        use crate::kvstore::backend::{AckCb, GetCb};
         let id = req.id;
         match req.op {
             proto::OP_GET => self.backend.get(
-                req.key,
-                Box::new(move |v| {
+                // Key borrowed from the parsed request; the value arrives
+                // borrowed from the backend and is copied exactly once,
+                // straight into the pooled wire buffer (one-copy GET).
+                &req.key,
+                GetCb::new(move |v: Option<&[u8]>| {
                     let mut b = done.checkout();
                     match v {
-                        Some(val) => proto::write_response(&mut b, id, proto::ST_OK, &val),
+                        Some(val) => proto::write_response(&mut b, id, proto::ST_OK, val),
                         None => proto::write_response(&mut b, id, proto::ST_NOT_FOUND, &[]),
                     }
                     done.complete(b);
                 }),
             ),
             proto::OP_PUT => self.backend.put(
-                req.key,
-                req.val,
-                Box::new(move |_| {
+                &req.key,
+                &req.val,
+                AckCb::new(move |_| {
                     let mut b = done.checkout();
                     proto::write_response(&mut b, id, proto::ST_OK, &[]);
                     done.complete(b);
                 }),
             ),
             _ => self.backend.del(
-                req.key,
-                Box::new(move |existed| {
+                &req.key,
+                AckCb::new(move |existed| {
                     let st = if existed { proto::ST_OK } else { proto::ST_NOT_FOUND };
                     let mut b = done.checkout();
                     proto::write_response(&mut b, id, st, &[]);
@@ -204,15 +208,20 @@ impl KvServer {
         self.core.metrics()
     }
 
+    /// Delegation-layer hot-path allocation/copy counters (diagnostic).
+    pub fn hot_path_stats(&self) -> crate::runtime::HotPathStats {
+        self.core.hot_path_stats()
+    }
+
     /// Pre-fill the table with `n` keys ("Prior to each run, we pre-fill
     /// the table"). Key format matches the load generator's.
     pub fn prefill(&self, n: u64, val_len: usize) {
         let backend = self.backend.clone();
         self.core.prefill(n, move |i, on_done| {
             backend.put(
-                super::client::key_bytes(i),
-                vec![b'x'; val_len],
-                Box::new(move |_| on_done()),
+                &super::client::key_bytes(i),
+                &vec![b'x'; val_len],
+                crate::kvstore::backend::AckCb::new(move |_| on_done()),
             );
         });
     }

@@ -30,6 +30,8 @@
 //!   disciplines, drain-on-stop) parameterised by a `Protocol` trait,
 //!   plus the RESP (Redis) front end
 //! - [`kvstore`] — the TCP key-value store application (§6.3)
+//! - [`loadgen`] — the shared pipelined-loader skeleton behind all three
+//!   protocol load generators
 //! - [`memcache`] — mini-memcached, stock (locks) vs delegated shards (§7)
 //! - [`bench`] — workload generators and the figure-regeneration harnesses
 //! - [`util`], [`codec`] — substrates built from scratch for the offline
@@ -51,6 +53,7 @@ pub mod locks;
 pub mod cmap;
 pub mod server;
 pub mod kvstore;
+pub mod loadgen;
 pub mod memcache;
 pub mod bench;
 

@@ -1,0 +1,239 @@
+//! The shared pipelined-loader skeleton (ROADMAP item: client-side dedup).
+//!
+//! `kvstore::client`, `memcache::memtier`, and `server::resp_load` were
+//! three near-identical copies of the same per-connection loop:
+//! connect + nonblocking preamble, `fail!`-style error macro with
+//! progress context, pipeline top-up, partial-write flush, read drain,
+//! and in-order/by-id reply parsing. [`run_pipelined_loader`] owns that
+//! loop once — the client-side mirror of the `server::engine` refactor —
+//! parameterised by a [`LoadDriver`] that encodes requests and parses
+//! replies in its own wire format.
+//!
+//! The skeleton guarantees the loaders' shared error contract: every I/O
+//! failure or protocol desync comes back as a **descriptive
+//! [`LoaderResult::error`]** carrying `after <done>/<ops> ops:` progress
+//! context (never a panic), and operations completed before the failure
+//! still count.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// One parsed reply: how many bytes it consumed from the receive buffer
+/// and whether it counts as a hit (protocol-defined; writes usually
+/// report `hit = true`).
+pub struct Reply {
+    pub used: usize,
+    pub hit: bool,
+}
+
+/// A wire protocol plugged into [`run_pipelined_loader`]. Implementations
+/// keep their own per-connection state (RNG, key distribution, id→issue
+/// time maps, in-order expectation queues, latency histograms).
+pub trait LoadDriver {
+    /// Append the next request's bytes to `out` and record whatever
+    /// bookkeeping its reply will need. Called while the pipeline has
+    /// room; exactly one reply must eventually answer it.
+    fn encode_next(&mut self, out: &mut Vec<u8>);
+
+    /// Parse one complete reply from the front of `buf`:
+    /// `Ok(Some(reply))` consumes `reply.used` bytes, `Ok(None)` waits
+    /// for more bytes, `Err` reports a protocol desync (ends the run
+    /// descriptively).
+    fn parse_reply(&mut self, buf: &[u8]) -> Result<Option<Reply>, String>;
+}
+
+/// Outcome of one connection's run. `error` is `None` when all `ops`
+/// completed; otherwise it carries the failure with progress context and
+/// `done`/`hits`/`misses` report the work finished before it.
+pub struct LoaderResult {
+    pub done: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub error: Option<String>,
+}
+
+/// Drive one nonblocking connection until `ops` requests completed (or a
+/// failure ends the run): top up a `pipeline`-deep window via
+/// [`LoadDriver::encode_next`], flush partial writes, drain the socket,
+/// and parse replies via [`LoadDriver::parse_reply`].
+pub fn run_pipelined_loader<D: LoadDriver>(
+    addr: SocketAddr,
+    pipeline: usize,
+    ops: u64,
+    driver: &mut D,
+) -> LoaderResult {
+    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
+    let mut inflight = 0usize;
+
+    // One macro instead of `.unwrap()`: bail out with the stats gathered
+    // so far and a message carrying progress context.
+    macro_rules! fail {
+        ($($arg:tt)*) => {
+            return LoaderResult {
+                done,
+                hits,
+                misses,
+                error: Some(format!("after {done}/{ops} ops: {}", format!($($arg)*))),
+            }
+        };
+    }
+
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => fail!("connect {addr}: {e}"),
+    };
+    stream.set_nodelay(true).ok();
+    if let Err(e) = stream.set_nonblocking(true) {
+        fail!("nonblocking: {e}");
+    }
+
+    let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
+    let mut wcur = 0usize;
+    let mut inbuf: Vec<u8> = Vec::with_capacity(64 * 1024);
+    let mut parsed = 0usize; // consumed prefix of inbuf
+
+    while done < ops {
+        // Top up the pipeline.
+        while sent < ops && inflight < pipeline {
+            driver.encode_next(&mut out);
+            sent += 1;
+            inflight += 1;
+        }
+        // Flush writes (partial ok).
+        loop {
+            if wcur >= out.len() {
+                out.clear();
+                wcur = 0;
+                break;
+            }
+            match stream.write(&out[wcur..]) {
+                Ok(0) => fail!("server closed connection mid-write"),
+                Ok(n) => wcur += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => fail!("write: {e}"),
+            }
+        }
+        // Drain the socket.
+        let mut chunk = [0u8; 32 * 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => fail!("server closed connection mid-run"),
+            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => fail!("read: {e}"),
+        }
+        // Parse replies.
+        while inflight > 0 {
+            match driver.parse_reply(&inbuf[parsed..]) {
+                Ok(Some(reply)) => {
+                    parsed += reply.used;
+                    inflight -= 1;
+                    done += 1;
+                    if reply.hit {
+                        hits += 1;
+                    } else {
+                        misses += 1;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => fail!("{e}"),
+            }
+        }
+        if parsed > 0 {
+            inbuf.drain(..parsed);
+            parsed = 0;
+        }
+    }
+    LoaderResult { done, hits, misses, error: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Line-echo driver over a trivial protocol: request "ping\n",
+    /// reply "pong\n" (hit) or "miss\n".
+    struct EchoDriver {
+        sent: u64,
+    }
+
+    impl LoadDriver for EchoDriver {
+        fn encode_next(&mut self, out: &mut Vec<u8>) {
+            self.sent += 1;
+            out.extend_from_slice(b"ping\n");
+        }
+
+        fn parse_reply(&mut self, buf: &[u8]) -> Result<Option<Reply>, String> {
+            let Some(nl) = buf.iter().position(|&b| b == b'\n') else {
+                return Ok(None);
+            };
+            match &buf[..nl] {
+                b"pong" => Ok(Some(Reply { used: nl + 1, hit: true })),
+                b"miss" => Ok(Some(Reply { used: nl + 1, hit: false })),
+                other => Err(format!(
+                    "unexpected reply {:?}",
+                    String::from_utf8_lossy(other)
+                )),
+            }
+        }
+    }
+
+    fn echo_server(
+        replies: &'static [u8],
+    ) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 4096];
+            let mut served = 0usize;
+            loop {
+                let n = match s.read(&mut buf) {
+                    Ok(0) | Err(_) => return,
+                    Ok(n) => n,
+                };
+                for _ in buf[..n].iter().filter(|&&b| b == b'\n') {
+                    let reply = &replies[(served % (replies.len() / 5)) * 5..][..5];
+                    if s.write_all(reply).is_err() {
+                        return;
+                    }
+                    served += 1;
+                }
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn loader_completes_and_counts_hits_and_misses() {
+        // Server alternates pong/miss; 10 ops → 5 hits, 5 misses.
+        let (addr, h) = echo_server(b"pong\nmiss\n");
+        let mut driver = EchoDriver { sent: 0 };
+        let r = run_pipelined_loader(addr, 4, 10, &mut driver);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!((r.done, r.hits, r.misses), (10, 5, 5));
+        assert_eq!(driver.sent, 10);
+        drop(h);
+    }
+
+    #[test]
+    fn loader_connect_failure_has_progress_context() {
+        let mut driver = EchoDriver { sent: 0 };
+        let r = run_pipelined_loader("127.0.0.1:1".parse().unwrap(), 4, 10, &mut driver);
+        let e = r.error.expect("must fail");
+        assert!(e.contains("connect"), "unhelpful: {e}");
+        assert!(e.contains("0/10 ops"), "missing progress context: {e}");
+        assert_eq!(r.done, 0);
+    }
+
+    #[test]
+    fn loader_desync_reports_driver_error() {
+        let (addr, h) = echo_server(b"what\nwhat\n");
+        let mut driver = EchoDriver { sent: 0 };
+        let r = run_pipelined_loader(addr, 2, 4, &mut driver);
+        let e = r.error.expect("desync must fail");
+        assert!(e.contains("unexpected reply"), "unhelpful: {e}");
+        drop(h);
+    }
+}

@@ -3,13 +3,16 @@
 //! distribution, and write percentage — reporting aggregate throughput the
 //! way `memtier_benchmark` does.
 //!
-//! I/O failures and protocol desyncs are surfaced in
-//! [`MemtierStats::errors`] (a server dropping a connection mid-run fails
-//! the run descriptively) instead of panicking the client thread.
+//! The connection loop is the shared [`crate::loadgen`] skeleton; this
+//! module contributes only the memcached-text [`LoadDriver`] (in-order
+//! replies matched against an expectation queue). I/O failures and
+//! protocol desyncs are surfaced in [`MemtierStats::errors`] (a server
+//! dropping a connection mid-run fails the run descriptively) instead of
+//! panicking the client thread.
 
+use crate::loadgen::{run_pipelined_loader, LoadDriver, Reply};
 use crate::util::{KeyDist, Rng};
-use std::io::{ErrorKind, Read, Write};
-use std::net::TcpStream;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 /// Key encoding shared by prefill and load ("memtier-<n>" style).
@@ -86,129 +89,80 @@ enum Expect {
     Value,
 }
 
-fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64, Option<String>) {
-    let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0xA24B_AED4)));
-    let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
-    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
+/// The memcached text protocol plugged into the shared loader skeleton:
+/// replies arrive strictly in request order, matched against `expect`.
+struct McdDriver {
+    rng: Rng,
+    dist: KeyDist,
+    write_pct: u32,
+    val: Vec<u8>,
+    expect: VecDeque<Expect>,
+}
 
-    macro_rules! fail {
-        ($($arg:tt)*) => {
-            return (
-                done,
-                hits,
-                misses,
-                Some(format!(
-                    "after {done}/{} ops: {}",
-                    cfg.ops_per_thread,
-                    format!($($arg)*)
-                )),
-            )
+impl LoadDriver for McdDriver {
+    fn encode_next(&mut self, out: &mut Vec<u8>) {
+        let key = key_bytes(self.dist.sample(&mut self.rng));
+        if self.rng.pct(self.write_pct) {
+            out.extend_from_slice(
+                format!(
+                    "set {} 0 0 {}\r\n",
+                    String::from_utf8_lossy(&key),
+                    self.val.len()
+                )
+                .as_bytes(),
+            );
+            out.extend_from_slice(&self.val);
+            out.extend_from_slice(b"\r\n");
+            self.expect.push_back(Expect::Stored);
+        } else {
+            out.extend_from_slice(
+                format!("get {}\r\n", String::from_utf8_lossy(&key)).as_bytes(),
+            );
+            self.expect.push_back(Expect::Value);
+        }
+    }
+
+    fn parse_reply(&mut self, buf: &[u8]) -> Result<Option<Reply>, String> {
+        let Some(front) = self.expect.front() else {
+            return Ok(None);
         };
+        match front {
+            Expect::Stored => {
+                let Some(end) = find_crlf(buf) else { return Ok(None) };
+                let line = &buf[..end];
+                if line != b"STORED" {
+                    return Err(format!(
+                        "expected STORED, got {:?}",
+                        String::from_utf8_lossy(line)
+                    ));
+                }
+                self.expect.pop_front();
+                Ok(Some(Reply { used: end + 2, hit: true }))
+            }
+            Expect::Value => {
+                // Either "END\r\n" (miss) or VALUE header + data + END.
+                match try_parse_get(buf)? {
+                    Some((used, hit)) => {
+                        self.expect.pop_front();
+                        Ok(Some(Reply { used, hit }))
+                    }
+                    None => Ok(None),
+                }
+            }
+        }
     }
+}
 
-    let mut stream = match TcpStream::connect(cfg.addr) {
-        Ok(s) => s,
-        Err(e) => fail!("connect {}: {e}", cfg.addr),
+fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64, Option<String>) {
+    let mut driver = McdDriver {
+        rng: Rng::new(cfg.seed ^ (tid.wrapping_mul(0xA24B_AED4))),
+        dist: KeyDist::from_spec(&cfg.dist, cfg.keys),
+        write_pct: cfg.write_pct,
+        val: vec![b'm'; cfg.val_len],
+        expect: VecDeque::with_capacity(cfg.pipeline),
     };
-    stream.set_nodelay(true).ok();
-    if let Err(e) = stream.set_nonblocking(true) {
-        fail!("nonblocking: {e}");
-    }
-
-    let val: Vec<u8> = vec![b'm'; cfg.val_len];
-    let mut expect: std::collections::VecDeque<Expect> =
-        std::collections::VecDeque::with_capacity(cfg.pipeline);
-    let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
-    let mut wcur = 0usize;
-    let mut inbuf: Vec<u8> = Vec::with_capacity(64 * 1024);
-    let mut parsed = 0usize; // consumed prefix of inbuf
-
-    while done < cfg.ops_per_thread {
-        while sent < cfg.ops_per_thread && expect.len() < cfg.pipeline {
-            let key = key_bytes(dist.sample(&mut rng));
-            if rng.pct(cfg.write_pct) {
-                out.extend_from_slice(
-                    format!("set {} 0 0 {}\r\n", String::from_utf8_lossy(&key), val.len())
-                        .as_bytes(),
-                );
-                out.extend_from_slice(&val);
-                out.extend_from_slice(b"\r\n");
-                expect.push_back(Expect::Stored);
-            } else {
-                out.extend_from_slice(
-                    format!("get {}\r\n", String::from_utf8_lossy(&key)).as_bytes(),
-                );
-                expect.push_back(Expect::Value);
-            }
-            sent += 1;
-        }
-        // Flush.
-        loop {
-            if wcur >= out.len() {
-                out.clear();
-                wcur = 0;
-                break;
-            }
-            match stream.write(&out[wcur..]) {
-                Ok(0) => fail!("server closed connection mid-write"),
-                Ok(n) => wcur += n,
-                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => fail!("write: {e}"),
-            }
-        }
-        // Read.
-        let mut chunk = [0u8; 32 * 1024];
-        match stream.read(&mut chunk) {
-            Ok(0) => fail!("server closed connection mid-run"),
-            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => fail!("read: {e}"),
-        }
-        // Parse responses in order.
-        loop {
-            let Some(front) = expect.front() else { break };
-            match front {
-                Expect::Stored => {
-                    let Some(end) = find_crlf(&inbuf[parsed..]) else { break };
-                    let line = &inbuf[parsed..parsed + end];
-                    if line != b"STORED" {
-                        fail!(
-                            "expected STORED, got {:?}",
-                            String::from_utf8_lossy(line)
-                        );
-                    }
-                    parsed += end + 2;
-                    expect.pop_front();
-                    done += 1;
-                    hits += 1;
-                }
-                Expect::Value => {
-                    // Either "END\r\n" (miss) or VALUE header + data + END.
-                    match try_parse_get(&inbuf[parsed..]) {
-                        Ok(Some((used, hit))) => {
-                            parsed += used;
-                            expect.pop_front();
-                            done += 1;
-                            if hit {
-                                hits += 1;
-                            } else {
-                                misses += 1;
-                            }
-                        }
-                        Ok(None) => break,
-                        Err(e) => fail!("{e}"),
-                    }
-                }
-            }
-        }
-        if parsed > 0 {
-            inbuf.drain(..parsed);
-            parsed = 0;
-        }
-    }
-    (done, hits, misses, None)
+    let r = run_pipelined_loader(cfg.addr, cfg.pipeline, cfg.ops_per_thread, &mut driver);
+    (r.done, r.hits, r.misses, r.error)
 }
 
 fn find_crlf(buf: &[u8]) -> Option<usize> {

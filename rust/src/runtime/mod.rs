@@ -49,7 +49,8 @@ pub mod reactor;
 #[cfg(feature = "xla")]
 pub mod xla_exec;
 
-use crate::channel::{ClientEndpoint, Completion, FlushPolicy, Matrix, PendingReq, TrusteeEndpoint};
+use crate::channel::{ClientEndpoint, Completion, FlushPolicy, Matrix, Thunk, TrusteeEndpoint};
+use crate::codec::WireWriter;
 use crate::fiber::{self, Executor};
 use crate::util::affinity;
 use crate::util::cache::Backoff;
@@ -284,19 +285,25 @@ impl Worker {
         &mut self.clients[trustee]
     }
 
-    /// Enqueue a framed request toward `trustee` and apply the flush
-    /// policy: publish immediately when `urgent` (a blocking caller needs
-    /// the response), under [`FlushPolicy::Eager`], or past the outbox
-    /// watermarks; otherwise leave it for the end-of-phase flush.
-    pub fn enqueue_toward(
+    /// Frame a request directly into the outbox arena toward `trustee`
+    /// (see [`ClientEndpoint::enqueue_framed`] — reserve/commit, no temp
+    /// framing buffer) and apply the flush policy: publish immediately
+    /// when `urgent` (a blocking caller needs the response), under
+    /// [`FlushPolicy::Eager`], or past the outbox watermarks; otherwise
+    /// leave it for the end-of-phase flush.
+    #[allow(clippy::too_many_arguments)]
+    pub fn enqueue_framed(
         &mut self,
         trustee: usize,
-        req: PendingReq,
+        thunk: Thunk,
+        prop: *mut u8,
+        env: &[u8],
         completion: Completion,
         urgent: bool,
+        write_args: impl FnOnce(&mut WireWriter),
     ) {
         let ep = &mut self.clients[trustee];
-        ep.enqueue(req, completion);
+        ep.enqueue_framed(thunk, prop, env, completion, write_args);
         if urgent || self.flush_policy == FlushPolicy::Eager || ep.wants_flush() {
             let pair = self.shared.matrix.pair(self.id, trustee);
             self.clients[trustee].try_flush(pair);
@@ -361,6 +368,56 @@ impl Worker {
     /// Heap-byte backpressure flushes across all edges (metrics).
     pub fn backpressure_hits(&self) -> u64 {
         self.clients.iter().map(|c| c.backpressure_hits).sum()
+    }
+
+    /// Hot-path allocation/copy counters aggregated over this worker's
+    /// client and trustee endpoints (DESIGN.md, "Allocation discipline").
+    /// Each worker owns its endpoints, so the underlying counters are
+    /// plain (non-atomic) fields bumped on the hot path and summed here
+    /// on demand.
+    pub fn hot_path_stats(&self) -> HotPathStats {
+        let mut s = HotPathStats::default();
+        for c in &self.clients {
+            s.completion_heap_spills += c.completion_heap_spills;
+            s.heap_records += c.heap_records;
+            s.heap_pool_hits += c.heap_pool.hits;
+            s.heap_pool_misses += c.heap_pool.misses;
+            s.slot_bytes_copied += c.slot_bytes_copied;
+        }
+        for t in &self.trustees {
+            s.heap_pool_hits += t.heap_pool.hits;
+            s.heap_pool_misses += t.heap_pool.misses;
+            s.slot_bytes_copied += t.slot_bytes_copied;
+        }
+        s
+    }
+}
+
+/// Per-worker hot-path allocation and copy counters (see
+/// [`Worker::hot_path_stats`]); `merge` folds workers into totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HotPathStats {
+    /// Completions whose captures exceeded the inline budget and fell
+    /// back to a heap box (should be ~0 at steady state).
+    pub completion_heap_spills: u64,
+    /// Requests whose payload took the out-of-line heap escape hatch.
+    pub heap_records: u64,
+    /// Heap free-list hits/misses (out-of-line payloads + response
+    /// spills) across all endpoints.
+    pub heap_pool_hits: u64,
+    pub heap_pool_misses: u64,
+    /// Bytes memcpy'd into request/response slots — the one copy each
+    /// direction of a delegation pays.
+    pub slot_bytes_copied: u64,
+}
+
+impl HotPathStats {
+    pub fn merge(&mut self, other: &HotPathStats) {
+        self.completion_heap_spills += other.completion_heap_spills;
+        self.heap_records += other.heap_records;
+        self.heap_pool_hits += other.heap_pool_hits;
+        self.heap_pool_misses += other.heap_pool_misses;
+        self.slot_bytes_copied += other.slot_bytes_copied;
     }
 }
 
@@ -846,6 +903,18 @@ impl Runtime {
             }),
         );
         JoinHandle { done }
+    }
+
+    /// Aggregate [`HotPathStats`] across all workers. Runs a short fiber
+    /// on each worker to read its endpoint counters — a diagnostic, not a
+    /// hot-path call. Must be called from a non-runtime thread.
+    pub fn hot_path_totals(&self) -> HotPathStats {
+        let mut total = HotPathStats::default();
+        for w in 0..self.shared.n() {
+            let s = self.block_on(w, || with_worker(|wk| wk.hot_path_stats()));
+            total.merge(&s);
+        }
+        total
     }
 
     /// Run `f` as a fiber on `worker` and block the calling (non-runtime)

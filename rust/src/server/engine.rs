@@ -201,6 +201,9 @@ pub struct Spool {
     pool: Vec<Vec<u8>>,
     pub pool_hits: u64,
     pub pool_misses: u64,
+    /// Response bytes rendered through this spool (bytes-copied metric:
+    /// one response-buffer → wire-buffer copy per completion).
+    pub resp_bytes: u64,
 }
 
 impl Spool {
@@ -218,6 +221,7 @@ impl Spool {
             pool: Vec::new(),
             pool_hits: 0,
             pool_misses: 0,
+            resp_bytes: 0,
         }
     }
 
@@ -252,6 +256,7 @@ impl Spool {
     pub fn complete(&mut self, seq: u64, cost: u64, buf: Vec<u8>) {
         self.completed += 1;
         self.inflight_cost -= cost;
+        self.resp_bytes += buf.len() as u64;
         match self.order {
             ResponseOrder::OutOfOrder => self.emit(buf),
             ResponseOrder::InOrder => {
@@ -367,6 +372,8 @@ pub struct WorkerConnStats {
     /// Response buffers served from the spool pool vs freshly allocated.
     pub pool_hits: AtomicU64,
     pub pool_misses: AtomicU64,
+    /// Response bytes rendered into wire buffers (bytes-copied metric).
+    pub resp_bytes: AtomicU64,
 }
 
 pub struct ConnMetrics {
@@ -382,6 +389,7 @@ pub struct ConnTotals {
     pub parse_errors: u64,
     pub pool_hits: u64,
     pub pool_misses: u64,
+    pub resp_bytes: u64,
 }
 
 impl ConnMetrics {
@@ -410,6 +418,7 @@ impl ConnMetrics {
             t.parse_errors += s.parse_errors.load(Ordering::Relaxed);
             t.pool_hits += s.pool_hits.load(Ordering::Relaxed);
             t.pool_misses += s.pool_misses.load(Ordering::Relaxed);
+            t.resp_bytes += s.resp_bytes.load(Ordering::Relaxed);
         }
         t
     }
@@ -546,6 +555,7 @@ fn connection_fiber<P: Protocol>(
     let sp = spool.borrow();
     stats.pool_hits.fetch_add(sp.pool_hits, Ordering::Relaxed);
     stats.pool_misses.fetch_add(sp.pool_misses, Ordering::Relaxed);
+    stats.resp_bytes.fetch_add(sp.resp_bytes, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------
@@ -693,6 +703,15 @@ impl ServerCore {
         &self.metrics
     }
 
+    /// Channel-layer hot-path allocation/copy counters aggregated across
+    /// the runtime's workers — surfaced next to [`ConnMetrics`] so a
+    /// server driver can report delegation-layer allocations (inline-
+    /// completion spills, heap records, slot bytes) alongside connection
+    /// counters. Diagnostic: runs a short fiber per worker.
+    pub fn hot_path_stats(&self) -> crate::runtime::HotPathStats {
+        self.runtime().hot_path_totals()
+    }
+
     /// Issue `n` backend operations from a worker fiber with a bounded
     /// in-flight window ("Prior to each run, we pre-fill the table").
     /// `issue(i, on_done)` must arrange for `on_done()` when operation
@@ -805,6 +824,7 @@ mod tests {
         // After the first allocation every checkout was served by reuse.
         assert_eq!(sp.pool_misses, 1);
         assert_eq!(sp.pool_hits, 9);
+        assert_eq!(sp.resp_bytes, 80, "10 responses x 8 bytes counted");
         // Oversized buffers are not retained: the single pooled buffer is
         // checked out, grown past the cap, and dropped on recycle.
         assert_eq!(sp.pool.len(), 1);

@@ -17,7 +17,7 @@
 
 use super::engine::{Completion, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore};
 use super::netfiber::{self, NetPolicy};
-use crate::kvstore::backend::{AsyncKv, BackendKind};
+use crate::kvstore::backend::{AckCb, AsyncKv, BackendKind, FlushCb, GetCb, IncrCb};
 use crate::runtime::Runtime;
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -335,7 +335,7 @@ fn gather_count(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Comple
     let state = Rc::new(RefCell::new((0i64, n, Some(done))));
     for key in keys {
         let st = state.clone();
-        let cb: crate::kvstore::backend::AckCb = Box::new(move |hit| {
+        let cb = AckCb::new(move |hit| {
             let mut s = st.borrow_mut();
             if hit {
                 s.0 += 1;
@@ -351,8 +351,8 @@ fn gather_count(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Comple
             }
         });
         match op {
-            CountOp::Del => backend.del(key, cb),
-            CountOp::Exists => backend.exists(key, cb),
+            CountOp::Del => backend.del(&key, cb),
+            CountOp::Exists => backend.exists(&key, cb),
         }
     }
 }
@@ -371,10 +371,14 @@ fn mget(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Completion) {
     for (i, key) in keys.into_iter().enumerate() {
         let g = g.clone();
         backend.get(
-            key,
-            Box::new(move |v| {
+            &key,
+            // MGET assembles values arriving in any order into one array
+            // reply, so each value is copied into its slot here (the
+            // multi-key gather is the one place that buffers values;
+            // single-key GET stays one-copy).
+            GetCb::new(move |v: Option<&[u8]>| {
                 let mut st = g.borrow_mut();
-                st.slots[i] = Some(v);
+                st.slots[i] = Some(v.map(|val| val.to_vec()));
                 st.remaining -= 1;
                 if st.remaining == 0 {
                     let done = st.done.take().unwrap();
@@ -411,11 +415,13 @@ fn dispatch_command(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Co
             }
             let key = args.swap_remove(1);
             backend.get(
-                key,
-                Box::new(move |v| {
+                &key,
+                // One-copy GET: the borrowed value is written straight
+                // into the pooled wire buffer.
+                GetCb::new(move |v: Option<&[u8]>| {
                     let mut b = done.checkout();
                     match v {
-                        Some(val) => write_bulk(&mut b, &val),
+                        Some(val) => write_bulk(&mut b, val),
                         None => write_null(&mut b),
                     }
                     done.complete(b);
@@ -429,9 +435,9 @@ fn dispatch_command(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Co
             let val = args.pop().unwrap();
             let key = args.pop().unwrap();
             backend.put(
-                key,
-                val,
-                Box::new(move |_| {
+                &key,
+                &val,
+                AckCb::new(move |_| {
                     let mut b = done.checkout();
                     write_simple(&mut b, "OK");
                     done.complete(b);
@@ -462,9 +468,9 @@ fn dispatch_command(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Co
             }
             let key = args.swap_remove(1);
             backend.incr(
-                key,
+                &key,
                 1,
-                Box::new(move |r| {
+                IncrCb::new(move |r| {
                     let mut b = done.checkout();
                     match r {
                         Ok(n) => write_int(&mut b, n),
@@ -480,7 +486,7 @@ fn dispatch_command(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Co
             if args.len() != 1 {
                 return wrong_arity(done, "flushall");
             }
-            backend.flush_all(Box::new(move || {
+            backend.flush_all(FlushCb::new(move || {
                 let mut b = done.checkout();
                 write_simple(&mut b, "OK");
                 done.complete(b);
@@ -584,14 +590,19 @@ impl RespServer {
         self.core.metrics()
     }
 
+    /// Delegation-layer hot-path allocation/copy counters (diagnostic).
+    pub fn hot_path_stats(&self) -> crate::runtime::HotPathStats {
+        self.core.hot_path_stats()
+    }
+
     /// Pre-fill the store with `n` keys in the load generator's format.
     pub fn prefill(&self, n: u64, val_len: usize) {
         let backend = self.backend.clone();
         self.core.prefill(n, move |i, on_done| {
             backend.put(
-                super::resp_load::key_bytes(i),
-                vec![b'r'; val_len],
-                Box::new(move |_| on_done()),
+                &super::resp_load::key_bytes(i),
+                &vec![b'r'; val_len],
+                AckCb::new(move |_| on_done()),
             );
         });
     }

@@ -3,15 +3,16 @@
 //! pipelining, key distribution and write percentage — the same knobs as
 //! the KV and memtier loaders, speaking the Redis wire format.
 //!
-//! I/O failures are surfaced in [`RespLoadStats::errors`] (a server
-//! dropping a connection mid-run fails the run descriptively) instead of
-//! panicking the client thread.
+//! The connection loop is the shared [`crate::loadgen`] skeleton; this
+//! module contributes only the RESP [`LoadDriver`] (in-order replies,
+//! null bulk = miss). I/O failures are surfaced in
+//! [`RespLoadStats::errors`] (a server dropping a connection mid-run
+//! fails the run descriptively) instead of panicking the client thread.
 
 use super::resp::{write_array_header, write_bulk};
+use crate::loadgen::{run_pipelined_loader, LoadDriver, Reply};
 use crate::util::{KeyDist, Rng};
 use std::collections::VecDeque;
-use std::io::{ErrorKind, Read, Write};
-use std::net::TcpStream;
 use std::time::Instant;
 
 /// Key encoding shared by prefill and load (`key:<n>`).
@@ -150,102 +151,53 @@ enum Expect {
     Get,
 }
 
+/// The RESP wire format plugged into the shared loader skeleton: replies
+/// arrive strictly in request order; only a GET answered with a null
+/// bulk counts as a miss.
+struct RespDriver {
+    rng: Rng,
+    dist: KeyDist,
+    write_pct: u32,
+    val: Vec<u8>,
+    expect: VecDeque<Expect>,
+}
+
+impl LoadDriver for RespDriver {
+    fn encode_next(&mut self, out: &mut Vec<u8>) {
+        let key = key_bytes(self.dist.sample(&mut self.rng));
+        if self.rng.pct(self.write_pct) {
+            encode_set(out, &key, &self.val);
+            self.expect.push_back(Expect::Set);
+        } else {
+            encode_get(out, &key);
+            self.expect.push_back(Expect::Get);
+        }
+    }
+
+    fn parse_reply(&mut self, buf: &[u8]) -> Result<Option<Reply>, String> {
+        if self.expect.is_empty() {
+            return Ok(None);
+        }
+        match parse_reply(buf)? {
+            Some((used, hit)) => {
+                let was_get = matches!(self.expect.pop_front(), Some(Expect::Get));
+                Ok(Some(Reply { used, hit: hit || !was_get }))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
 fn run_connection(cfg: &RespLoadConfig, tid: u64) -> (u64, u64, u64, Option<String>) {
-    let mut rng = Rng::new(cfg.seed ^ (tid.wrapping_mul(0xC2B2_AE35)));
-    let dist = KeyDist::from_spec(&cfg.dist, cfg.keys);
-    let mut stream = match TcpStream::connect(cfg.addr) {
-        Ok(s) => s,
-        Err(e) => return (0, 0, 0, Some(format!("connect {}: {e}", cfg.addr))),
+    let mut driver = RespDriver {
+        rng: Rng::new(cfg.seed ^ (tid.wrapping_mul(0xC2B2_AE35))),
+        dist: KeyDist::from_spec(&cfg.dist, cfg.keys),
+        write_pct: cfg.write_pct,
+        val: vec![b'r'; cfg.val_len],
+        expect: VecDeque::with_capacity(cfg.pipeline),
     };
-    stream.set_nodelay(true).ok();
-    if let Err(e) = stream.set_nonblocking(true) {
-        return (0, 0, 0, Some(format!("nonblocking: {e}")));
-    }
-
-    let val = vec![b'r'; cfg.val_len];
-    let mut expect: VecDeque<Expect> = VecDeque::with_capacity(cfg.pipeline);
-    let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
-    let mut wcur = 0usize;
-    let mut inbuf: Vec<u8> = Vec::with_capacity(64 * 1024);
-    let mut parsed = 0usize;
-    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
-
-    macro_rules! fail {
-        ($($arg:tt)*) => {
-            return (
-                done,
-                hits,
-                misses,
-                Some(format!(
-                    "after {done}/{} ops: {}",
-                    cfg.ops_per_thread,
-                    format!($($arg)*)
-                )),
-            )
-        };
-    }
-
-    while done < cfg.ops_per_thread {
-        while sent < cfg.ops_per_thread && expect.len() < cfg.pipeline {
-            let key = key_bytes(dist.sample(&mut rng));
-            if rng.pct(cfg.write_pct) {
-                encode_set(&mut out, &key, &val);
-                expect.push_back(Expect::Set);
-            } else {
-                encode_get(&mut out, &key);
-                expect.push_back(Expect::Get);
-            }
-            sent += 1;
-        }
-        // Flush writes (partial ok).
-        loop {
-            if wcur >= out.len() {
-                out.clear();
-                wcur = 0;
-                break;
-            }
-            match stream.write(&out[wcur..]) {
-                Ok(0) => fail!("server closed connection mid-write"),
-                Ok(n) => wcur += n,
-                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => fail!("write: {e}"),
-            }
-        }
-        // Drain replies.
-        let mut chunk = [0u8; 32 * 1024];
-        match stream.read(&mut chunk) {
-            Ok(0) => fail!("server closed connection mid-run"),
-            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => fail!("read: {e}"),
-        }
-        loop {
-            if expect.is_empty() {
-                break;
-            }
-            match parse_reply(&inbuf[parsed..]) {
-                Ok(Some((used, hit))) => {
-                    parsed += used;
-                    let was_get = matches!(expect.pop_front(), Some(Expect::Get));
-                    done += 1;
-                    if hit || !was_get {
-                        hits += 1;
-                    } else {
-                        misses += 1;
-                    }
-                }
-                Ok(None) => break,
-                Err(e) => fail!("{e}"),
-            }
-        }
-        if parsed > 0 {
-            inbuf.drain(..parsed);
-            parsed = 0;
-        }
-    }
-    (done, hits, misses, None)
+    let r = run_pipelined_loader(cfg.addr, cfg.pipeline, cfg.ops_per_thread, &mut driver);
+    (r.done, r.hits, r.misses, r.error)
 }
 
 #[cfg(test)]

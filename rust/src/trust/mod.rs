@@ -32,8 +32,8 @@
 //! pointer types like `Box<T>` in captures to encourage locality; we keep
 //! the type-system-enforced part and document the convention.)
 
-use crate::channel::{read_response, RequestBuilder, ResponseWriter};
-use crate::codec::{to_bytes, Wire, WireReader};
+use crate::channel::{read_response, Completion, ResponseWriter, Thunk};
+use crate::codec::{Wire, WireReader, WireWriter};
 use crate::fiber::{self, FiberId};
 use crate::runtime::{
     in_delegated_context, reclaim_on_current_worker, try_worker_id, with_worker, Shared, Worker,
@@ -133,6 +133,21 @@ unsafe fn apply_with_thunk<T, V, U, C>(
         let pb = prop as *mut PropBox<T>;
         let u = c(&mut *(*pb).value.get(), v);
         out.write_value(&u);
+    }
+}
+
+/// apply_raw(): the closure receives the framed argument bytes as a
+/// borrowed slice (no decode allocation) and writes its response directly
+/// into the channel's response writer — the allocation-free data path
+/// behind the KV backends (one-copy GET).
+unsafe fn apply_raw_thunk<T, C>(env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter)
+where
+    C: FnOnce(&mut T, &[u8], &mut ResponseWriter),
+{
+    unsafe {
+        let c = env.cast::<C>().read_unaligned();
+        let pb = prop as *mut PropBox<T>;
+        c(&mut *(*pb).value.get(), args, out);
     }
 }
 
@@ -319,19 +334,18 @@ fn deliver_launch_result<U: Send + 'static>(client: usize, cell_addr: usize, u: 
         std::slice::from_raw_parts(&done as *const DoneEnv<U> as *const u8, size_of::<DoneEnv<U>>())
     };
     with_worker(|w| {
-        let buf = w.client_mut(client).take_buf();
-        let req = RequestBuilder::build(
-            buf,
+        // Urgent: the launching fiber is parked on this completion.
+        w.enqueue_framed(
+            client,
             launch_done_thunk::<U>,
             std::ptr::null_mut(),
             env_bytes,
-            &[],
+            Completion::none(),
             true,
+            |_| {},
         );
-        std::mem::forget(done);
-        // Urgent: the launching fiber is parked on this completion.
-        w.enqueue_toward(client, req, None, true);
     });
+    std::mem::forget(done);
 }
 
 // ---------------------------------------------------------------------
@@ -353,37 +367,42 @@ fn check_blocking_allowed(what: &str) {
     );
 }
 
-/// Enqueue a framed request on the current worker toward `trustee`.
-/// `urgent` requests flush immediately (a caller is about to suspend on
-/// the response); the rest follow the worker's [`FlushPolicy`] — outbox
-/// watermarks or the end-of-client-phase flush.
+/// Frame a request directly into the current worker's outbox arena toward
+/// `trustee` (reserve/commit — no temp framing buffer). `urgent` requests
+/// flush immediately (a caller is about to suspend on the response); the
+/// rest follow the worker's [`FlushPolicy`] — outbox watermarks or the
+/// end-of-client-phase flush.
+///
+/// Callers pass the closure environment as raw bytes and `mem::forget`
+/// the original **after** this returns (the bytes were copied by value
+/// into the arena); `write_args` serializes `apply_with` arguments
+/// straight into the arena.
 ///
 /// [`FlushPolicy`]: crate::channel::FlushPolicy
 fn enqueue_on_worker(
     trustee: usize,
-    frame: impl FnOnce(Vec<u8>) -> crate::channel::PendingReq,
-    completion: crate::channel::Completion,
+    thunk: Thunk,
+    prop: *mut u8,
+    env: &[u8],
+    completion: Completion,
     urgent: bool,
+    write_args: impl FnOnce(&mut WireWriter),
 ) {
-    with_worker(|w| {
-        let buf = w.client_mut(trustee).take_buf();
-        let req = frame(buf);
-        w.enqueue_toward(trustee, req, completion, urgent);
-    });
+    with_worker(|w| w.enqueue_framed(trustee, thunk, prop, env, completion, urgent, write_args));
 }
 
-/// Blocking wait for a response value: enqueue, suspend, decode.
-fn delegate_blocking<U: Wire + 'static>(
-    trustee: usize,
-    frame: impl FnOnce(Vec<u8>) -> crate::channel::PendingReq,
-) -> U {
+/// Blocking wait for a response value: enqueue (via `enqueue`, which
+/// receives the completion to attach), suspend, decode. The completion
+/// captures one raw pointer, so it always stores inline — a blocking
+/// apply performs zero allocations at steady state.
+fn delegate_blocking<U: Wire + 'static>(enqueue: impl FnOnce(Completion)) -> U {
     struct WaitCell<U> {
         result: Option<U>,
         fiber: FiberId,
     }
     let mut cell = WaitCell::<U> { result: None, fiber: fiber::current_fiber().expect("fiber") };
     let cell_ptr: *mut WaitCell<U> = &mut cell;
-    let completion: crate::channel::Completion = Some(Box::new(move |r| {
+    let completion = Completion::new(move |r: &mut WireReader<'_>| {
         let u = read_response::<U>(r);
         // SAFETY: the cell lives on the parked fiber's stack until resume.
         unsafe {
@@ -391,9 +410,9 @@ fn delegate_blocking<U: Wire + 'static>(
             let fid = (*cell_ptr).fiber;
             fiber::with_executor(|e| e.resume(fid));
         }
-    }));
+    });
     // Urgent: we suspend on the response right away.
-    enqueue_on_worker(trustee, frame, completion, true);
+    enqueue(completion);
     fiber::suspend(|_| {});
     cell.result.take().expect("resumed without response")
 }
@@ -402,6 +421,30 @@ fn delegate_blocking<U: Wire + 'static>(
 /// `mem::forget` the value after framing.
 unsafe fn env_bytes_of<C>(c: &C) -> &[u8] {
     unsafe { std::slice::from_raw_parts(c as *const C as *const u8, size_of::<C>()) }
+}
+
+thread_local! {
+    /// Recycled scratch buffers for the trustee-local shortcut of
+    /// [`Trust::apply_raw_then`]: the closure's response bytes bounce
+    /// through one of these (same wire format as the remote path) without
+    /// allocating per call. A small stack because the closure / `then`
+    /// may re-enter nested local raw applies.
+    static LOCAL_RAW_BUFS: RefCell<Vec<Vec<u8>>> = const { RefCell::new(Vec::new()) };
+}
+
+fn take_local_raw_buf() -> Vec<u8> {
+    let mut b = LOCAL_RAW_BUFS.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    b.clear();
+    b
+}
+
+fn put_local_raw_buf(b: Vec<u8>) {
+    LOCAL_RAW_BUFS.with(|p| {
+        let mut pool = p.borrow_mut();
+        if pool.len() < 8 && b.capacity() <= (1 << 20) {
+            pool.push(b);
+        }
+    });
 }
 
 // ---------------------------------------------------------------------
@@ -436,17 +479,18 @@ impl TrusteeRef {
             Some(id) if id == self.worker => with_worker(|w| alloc_propbox(w, value)),
             Some(_) => {
                 check_blocking_allowed("entrust()");
-                let addr: u64 = delegate_blocking(self.worker, |buf| {
-                    let req = RequestBuilder::build(
-                        buf,
+                let worker = self.worker;
+                let addr: u64 = delegate_blocking(move |completion| {
+                    enqueue_on_worker(
+                        worker,
                         entrust_thunk::<T>,
                         std::ptr::null_mut(),
                         unsafe { env_bytes_of(&value) },
-                        &[],
-                        false,
+                        completion,
+                        true,
+                        |_| {},
                     );
                     std::mem::forget(value);
-                    req
                 });
                 addr as usize as *mut PropBox<T>
             }
@@ -541,17 +585,18 @@ impl<T: 'static> Trust<T> {
             Some(_) => {
                 check_blocking_allowed("apply()");
                 let prop = self.prop_u8();
-                delegate_blocking(self.trustee, move |buf| {
-                    let req = RequestBuilder::build(
-                        buf,
+                let trustee = self.trustee;
+                delegate_blocking(move |completion| {
+                    enqueue_on_worker(
+                        trustee,
                         apply_thunk::<T, U, C>,
                         prop,
                         unsafe { env_bytes_of(&c) },
-                        &[],
-                        false,
+                        completion,
+                        true,
+                        |_| {},
                     );
                     std::mem::forget(c);
-                    req
                 })
             }
             None => self.apply_injected(c),
@@ -625,27 +670,22 @@ impl<T: 'static> Trust<T> {
             "apply_then requires a runtime worker thread"
         );
         let prop = self.prop_u8();
-        let completion: crate::channel::Completion = Some(Box::new(move |r| {
+        // Inline-stored when `then`'s captures fit the completion budget
+        // (the common case) — no per-request box.
+        let completion = Completion::new(move |r: &mut WireReader<'_>| {
             let u = read_response::<U>(r);
             then(u);
-        }));
+        });
         enqueue_on_worker(
             self.trustee,
-            move |buf| {
-                let req = RequestBuilder::build(
-                    buf,
-                    apply_thunk::<T, U, C>,
-                    prop,
-                    unsafe { env_bytes_of(&c) },
-                    &[],
-                    false,
-                );
-                std::mem::forget(c);
-                req
-            },
+            apply_thunk::<T, U, C>,
+            prop,
+            unsafe { env_bytes_of(&c) },
             completion,
             false,
+            |_| {},
         );
+        std::mem::forget(c);
     }
 
     /// Fire-and-forget delegation: no return value, no response bytes.
@@ -664,21 +704,14 @@ impl<T: 'static> Trust<T> {
         let prop = self.prop_u8();
         enqueue_on_worker(
             self.trustee,
-            move |buf| {
-                let req = RequestBuilder::build(
-                    buf,
-                    apply_noresp_thunk::<T, C>,
-                    prop,
-                    unsafe { env_bytes_of(&c) },
-                    &[],
-                    true,
-                );
-                std::mem::forget(c);
-                req
-            },
-            None,
+            apply_noresp_thunk::<T, C>,
+            prop,
+            unsafe { env_bytes_of(&c) },
+            Completion::none(),
             false,
+            |_| {},
         );
+        std::mem::forget(c);
     }
 
     /// Synchronous delegation with serialized arguments (§4.3.3): `args`
@@ -697,19 +730,20 @@ impl<T: 'static> Trust<T> {
             Some(_) => {
                 check_blocking_allowed("apply_with()");
                 let prop = self.prop_u8();
-                let ser = to_bytes(&args);
-                drop(args);
-                delegate_blocking(self.trustee, move |buf| {
-                    let req = RequestBuilder::build(
-                        buf,
+                let trustee = self.trustee;
+                delegate_blocking(move |completion| {
+                    enqueue_on_worker(
+                        trustee,
                         apply_with_thunk::<T, V, U, C>,
                         prop,
                         unsafe { env_bytes_of(&c) },
-                        &ser,
-                        false,
+                        completion,
+                        true,
+                        // Serialized straight into the outbox arena — no
+                        // temp `to_bytes` vector.
+                        |w| args.write(w),
                     );
                     std::mem::forget(c);
-                    req
                 })
             }
             None => self.apply_injected(move |t| c(t, args)),
@@ -734,29 +768,103 @@ impl<T: 'static> Trust<T> {
             "apply_with_then requires a runtime worker thread"
         );
         let prop = self.prop_u8();
-        let ser = to_bytes(&args);
-        drop(args);
-        let completion: crate::channel::Completion = Some(Box::new(move |r| {
+        let completion = Completion::new(move |r: &mut WireReader<'_>| {
             let u = read_response::<U>(r);
             then(u);
-        }));
+        });
         enqueue_on_worker(
             self.trustee,
-            move |buf| {
-                let req = RequestBuilder::build(
-                    buf,
-                    apply_with_thunk::<T, V, U, C>,
-                    prop,
-                    unsafe { env_bytes_of(&c) },
-                    &ser,
-                    false,
-                );
-                std::mem::forget(c);
-                req
-            },
+            apply_with_thunk::<T, V, U, C>,
+            prop,
+            unsafe { env_bytes_of(&c) },
             completion,
             false,
+            // Serialized straight into the outbox arena — no temp
+            // `to_bytes` vector.
+            |w| args.write(w),
         );
+        std::mem::forget(c);
+    }
+
+    /// Non-blocking delegation with **raw argument bytes and a raw
+    /// response stream** — the allocation-free data path behind the KV
+    /// backends (DESIGN.md, "Allocation discipline"). `args` is copied
+    /// exactly once, caller → delegation slot; the closure receives it as
+    /// a borrowed slice on the trustee (no decode, no key allocation) and
+    /// writes its response directly into the channel's [`ResponseWriter`]
+    /// (e.g. [`ResponseWriter::write_opt_bytes`] to send a borrowed value
+    /// — the one-copy GET). `then` runs on this worker with the raw
+    /// [`WireReader`] positioned at this request's response and must
+    /// consume exactly what the closure wrote (pair it with
+    /// [`crate::channel::read_opt_bytes`] / [`read_response`]).
+    pub fn apply_raw_then<C, F>(&self, c: C, args: &[u8], then: F)
+    where
+        C: FnOnce(&mut T, &[u8], &mut ResponseWriter) + Send + 'static,
+        F: FnOnce(&mut WireReader<'_>) + 'static,
+    {
+        self.apply_raw_parts_then(c, &[args], then);
+    }
+
+    /// [`Trust::apply_raw_then`] over several argument slices: the parts
+    /// are serialized back to back into the delegation slot (still one
+    /// copy total, no temp concatenation buffer) and the closure receives
+    /// the concatenation. Callers that need the part boundaries capture
+    /// the lengths in the closure (e.g. the KV PUT captures `key.len()`
+    /// and splits). This is how multi-part payloads (key + value) travel
+    /// without an owned scratch vector.
+    pub fn apply_raw_parts_then<C, F>(&self, c: C, parts: &[&[u8]], then: F)
+    where
+        C: FnOnce(&mut T, &[u8], &mut ResponseWriter) + Send + 'static,
+        F: FnOnce(&mut WireReader<'_>) + 'static,
+    {
+        if self.is_local() {
+            // Local shortcut: run under the delegated flag, bouncing args
+            // and response through recycled scratch buffers so the
+            // closure and `then` see the same shapes as the remote path.
+            let mut argbuf = take_local_raw_buf();
+            for p in parts {
+                argbuf.extend_from_slice(p);
+            }
+            let mut rw = ResponseWriter::reuse(take_local_raw_buf());
+            {
+                let _guard = DelegatedGuard::enter();
+                // SAFETY: we are the trustee thread; no other closure runs
+                // concurrently on this property.
+                c(unsafe { &mut *(*self.prop.as_ptr()).value.get() }, &argbuf, &mut rw);
+            }
+            let bytes = rw.into_inner();
+            {
+                let mut reader = WireReader::new(&bytes);
+                then(&mut reader);
+                debug_assert!(
+                    reader.is_empty(),
+                    "apply_raw response not fully consumed"
+                );
+            }
+            put_local_raw_buf(bytes);
+            put_local_raw_buf(argbuf);
+            return;
+        }
+        assert!(
+            try_worker_id().is_some(),
+            "apply_raw_parts_then requires a runtime worker thread"
+        );
+        let prop = self.prop_u8();
+        let completion = Completion::new(then);
+        enqueue_on_worker(
+            self.trustee,
+            apply_raw_thunk::<T, C>,
+            prop,
+            unsafe { env_bytes_of(&c) },
+            completion,
+            false,
+            |w| {
+                for p in parts {
+                    w.put_bytes(p);
+                }
+            },
+        );
+        std::mem::forget(c);
     }
 
     /// Apply a refcount *decrement* (or a trustee-local adjustment) from
@@ -786,18 +894,12 @@ impl<T: 'static> Trust<T> {
                 let prop = self.prop_u8();
                 enqueue_on_worker(
                     self.trustee,
-                    move |buf| {
-                        RequestBuilder::build(
-                            buf,
-                            rc_delta_thunk,
-                            prop,
-                            &delta.to_le_bytes(),
-                            &[],
-                            true,
-                        )
-                    },
-                    None,
+                    rc_delta_thunk,
+                    prop,
+                    &delta.to_le_bytes(),
+                    Completion::none(),
                     false,
+                    |_| {},
                 );
             }
             None => {
@@ -846,8 +948,17 @@ impl<T: 'static> Trust<T> {
                 if fiber::in_fiber() && !in_delegated_context() {
                     // Blocking ack: park the fiber until the trustee
                     // responded with the post-increment count.
-                    let _count: u64 = delegate_blocking(self.trustee, move |buf| {
-                        RequestBuilder::build(buf, rc_inc_ack_thunk, prop, &[], &[], false)
+                    let trustee = self.trustee;
+                    let _count: u64 = delegate_blocking(move |completion| {
+                        enqueue_on_worker(
+                            trustee,
+                            rc_inc_ack_thunk,
+                            prop,
+                            &[],
+                            completion,
+                            true,
+                            |_| {},
+                        );
                     });
                 } else {
                     // Scheduler stack or delegated context: suspension is
@@ -873,18 +984,12 @@ impl<T: 'static> Trust<T> {
                     let flag_addr = &acked as *const AtomicBool as usize;
                     enqueue_on_worker(
                         self.trustee,
-                        move |buf| {
-                            RequestBuilder::build(
-                                buf,
-                                rc_inc_spin_ack_thunk,
-                                prop,
-                                &flag_addr.to_le_bytes(),
-                                &[],
-                                true,
-                            )
-                        },
-                        None,
+                        rc_inc_spin_ack_thunk,
+                        prop,
+                        &flag_addr.to_le_bytes(),
+                        Completion::none(),
                         true,
+                        |_| {},
                     );
                     let mut backoff = Backoff::new();
                     while !acked.load(AtomicOrdering::Acquire) {
@@ -974,21 +1079,14 @@ impl<T: 'static> Trust<Latch<T>> {
             // Urgent: we suspend on the launch result immediately below.
             enqueue_on_worker(
                 self.trustee,
-                move |buf| {
-                    let req = RequestBuilder::build(
-                        buf,
-                        launch_thunk::<T, U, C>,
-                        prop,
-                        unsafe { env_bytes_of(&env) },
-                        &[],
-                        true,
-                    );
-                    std::mem::forget(env);
-                    req
-                },
-                None,
+                launch_thunk::<T, U, C>,
+                prop,
+                unsafe { env_bytes_of(&env) },
+                Completion::none(),
                 true,
+                |_| {},
             );
+            std::mem::forget(env);
         }
         fiber::suspend(|_| {});
         cell.result.take().expect("launch resumed without result")
@@ -1083,6 +1181,7 @@ impl<T> Latch<T> {
 mod tests {
     use super::*;
     use crate::runtime::Runtime;
+    use std::rc::Rc;
     use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
@@ -1475,6 +1574,124 @@ mod tests {
         let v = rt.block_on(0, move || b4.apply(|y| *y));
         assert_eq!(v, 100);
         drop((a, b));
+        rt.shutdown();
+    }
+
+    /// Raw-apply test property: a tiny byte-keyed table.
+    type RawTbl = crate::cmap::OaTable<Vec<u8>, Vec<u8>>;
+
+    #[test]
+    fn apply_raw_then_remote_borrows_args_and_response() {
+        use crate::channel::read_opt_bytes;
+        // Raw path end to end: args arrive on the trustee as a borrowed
+        // slice, the response is written with write_opt_bytes, and the
+        // completion reads it borrowed (one-copy GET shape).
+        let rt = Runtime::builder().workers(2).build();
+        let table = rt.block_on(0, || local_trustee().entrust(RawTbl::with_capacity(16)));
+        let t1 = table.clone();
+        rt.block_on(1, move || {
+            t1.apply_raw_then(
+                |t: &mut RawTbl, k: &[u8], out: &mut ResponseWriter| {
+                    t.insert(k.to_vec(), b"world".to_vec());
+                    out.write_value(&0u8);
+                },
+                b"hello",
+                |r| {
+                    read_response::<u8>(r);
+                },
+            );
+            let hit = Rc::new(std::cell::RefCell::new(Vec::new()));
+            let h = hit.clone();
+            t1.apply_raw_then(
+                |t: &mut RawTbl, k: &[u8], out: &mut ResponseWriter| {
+                    out.write_opt_bytes(t.get(k).map(|v| &v[..]))
+                },
+                b"hello",
+                move |r| {
+                    if let Some(v) = read_opt_bytes(r) {
+                        h.borrow_mut().extend_from_slice(v);
+                    }
+                },
+            );
+            let missed = Rc::new(Cell::new(false));
+            let m = missed.clone();
+            t1.apply_raw_then(
+                |t: &mut RawTbl, k: &[u8], out: &mut ResponseWriter| {
+                    out.write_opt_bytes(t.get(k).map(|v| &v[..]))
+                },
+                b"nope",
+                move |r| m.set(read_opt_bytes(r).is_none()),
+            );
+            // Multi-part args: key and value as adjacent slices, split at
+            // the captured key length (the PUT shape).
+            let klen = 3usize;
+            t1.apply_raw_parts_then(
+                move |t: &mut RawTbl, args: &[u8], out: &mut ResponseWriter| {
+                    let (k, v) = args.split_at(klen);
+                    t.insert(k.to_vec(), v.to_vec());
+                    out.write_value(&0u8);
+                },
+                &[&b"abc"[..], &b"defgh"[..]],
+                |r| {
+                    read_response::<u8>(r);
+                },
+            );
+            // A blocking apply flushes and sequences behind the raw ops.
+            let len = t1.apply(|t| t.len() as u64);
+            assert_eq!(len, 2);
+            assert_eq!(&*hit.borrow(), b"world");
+            assert!(missed.get());
+            let v = t1.apply(|t| t.get(&b"abc"[..]).cloned());
+            assert_eq!(v.as_deref(), Some(&b"defgh"[..]));
+        });
+        drop(table);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn apply_raw_then_local_shortcut() {
+        use crate::channel::read_opt_bytes;
+        // On the trustee's own worker the raw path runs inline through the
+        // recycled scratch writer — same wire format, no delegation.
+        let rt = Runtime::builder().workers(1).build();
+        rt.block_on(0, || {
+            let t = local_trustee().entrust(RawTbl::with_capacity(16));
+            t.apply_raw_then(
+                |t: &mut RawTbl, k: &[u8], out: &mut ResponseWriter| {
+                    t.insert(k.to_vec(), b"local".to_vec());
+                    out.write_value(&0u8);
+                },
+                b"k",
+                |r| {
+                    read_response::<u8>(r);
+                },
+            );
+            let got = Rc::new(std::cell::RefCell::new(Vec::new()));
+            let g = got.clone();
+            t.apply_raw_then(
+                |t: &mut RawTbl, k: &[u8], out: &mut ResponseWriter| {
+                    out.write_opt_bytes(t.get(k).map(|v| &v[..]))
+                },
+                b"k",
+                move |r| {
+                    if let Some(v) = read_opt_bytes(r) {
+                        g.borrow_mut().extend_from_slice(v);
+                    }
+                },
+            );
+            assert_eq!(&*got.borrow(), b"local");
+            // Delegated-context flag must cover the local raw closure.
+            let flagged = Rc::new(Cell::new(false));
+            let f = flagged.clone();
+            t.apply_raw_then(
+                move |_t: &mut RawTbl, _k: &[u8], out: &mut ResponseWriter| {
+                    out.write_value(&in_delegated_context());
+                },
+                &[],
+                move |r| f.set(read_response::<bool>(r)),
+            );
+            assert!(flagged.get());
+        });
         rt.shutdown();
     }
 

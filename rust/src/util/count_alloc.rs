@@ -1,0 +1,79 @@
+//! A counting `GlobalAlloc` wrapper — the measurement side of the
+//! allocation-free hot-path contract (DESIGN.md, "Allocation discipline").
+//!
+//! The library never installs it; a test or bench binary opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: trustee::util::count_alloc::CountingAlloc =
+//!     trustee::util::count_alloc::CountingAlloc;
+//! ```
+//!
+//! and then brackets a measured region with [`snapshot`] — the
+//! steady-state regression test (`tests/alloc_regression.rs`) asserts a
+//! **zero** delta across thousands of delegated ops, and
+//! `benches/channel_micro --json` reports allocs/op alongside MOPs.
+//!
+//! Counting is two relaxed atomic adds per allocation on top of the
+//! system allocator. That overhead is irrelevant precisely when the
+//! assertion holds (the hot path performs no allocations to count), and
+//! the wrapper is never linked into builds that do not opt in.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through to [`System`] that counts every `alloc`/`realloc`
+/// (process-wide, all threads).
+pub struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`; the counters do not affect layout
+// or pointer validity.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A growth realloc is an allocation event for the contract: the
+        // hot path must not grow buffers at steady state either.
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+/// Counter snapshot: allocation events and bytes requested since process
+/// start. Subtract two snapshots to measure a region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub allocs: u64,
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Events/bytes between `earlier` and `self`.
+    pub fn since(&self, earlier: &AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocs: self.allocs - earlier.allocs,
+            bytes: self.bytes - earlier.bytes,
+        }
+    }
+}
+
+/// Read the process-wide counters. Zeros (trivially) unless the binary
+/// installed [`CountingAlloc`] as its `#[global_allocator]`.
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+    }
+}

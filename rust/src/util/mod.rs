@@ -16,12 +16,18 @@
 //!   crate needs no external `libc` dependency
 //! - [`quickcheck`] — a miniature property-testing harness with shrinking
 //! - [`cache`] — cache-line padding, `pause`, prefetch helpers
+//! - [`smallfn`] — inline-storage erased `FnOnce` types (the
+//!   allocation-free replacement for boxed completions/callbacks)
+//! - [`count_alloc`] — opt-in counting global allocator behind the
+//!   zero-allocation hot-path regression test
 
 pub mod affinity;
 pub mod cache;
 pub mod cli;
+pub mod count_alloc;
 pub mod quickcheck;
 pub mod rng;
+pub mod smallfn;
 pub mod stats;
 pub mod sys;
 pub mod zipf;

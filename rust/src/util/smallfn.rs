@@ -1,0 +1,274 @@
+//! Inline-storage one-shot closures — the allocation-free alternative to
+//! `Box<dyn FnOnce(..)>` on the delegation hot path.
+//!
+//! A boxed completion costs one heap allocation per response-bearing
+//! request; the paper's channel is allocation-free by construction (fixed
+//! slot pairs, pass-by-value records), so per-op boxes were the single
+//! largest remaining allocation source. [`define_inline_fn_once!`]
+//! generates a concrete erased-`FnOnce` type that stores the closure's
+//! captures **inline** in a fixed buffer when they fit (the common case:
+//! a couple of pointers/`Rc`s) and falls back to a heap box only for
+//! oversized or over-aligned captures. Callers can observe the fallback
+//! (`was_boxed()`) so endpoints can count hot-path allocations.
+//!
+//! Layout per generated type (`N` = inline capacity in bytes):
+//!
+//! ```text
+//! data      [u8; N] storage, 8-byte aligned (inline captures, or the
+//!           thin `*mut C` of the heap fallback in its first 8 bytes)
+//! call      Option<unsafe fn(*mut u8, bool, args..)> — None when empty
+//!           (a fire-and-forget marker) or already consumed
+//! drop_fn   unsafe fn(*mut u8, bool) — drops an uncalled closure
+//! heap      bool — which representation `data` holds
+//! ```
+//!
+//! The generated type is deliberately **not** `Send`/`Sync` (it may hold
+//! `Rc`s and raw pointers); completions only ever run on the worker that
+//! created them, matching the old `Box<dyn FnOnce>` (also non-`Send`).
+
+/// Fixed inline backing store. 8-byte alignment covers every capture the
+/// hot paths use (pointers, `Rc`/`Arc`, `u64` ids); closures with larger
+/// alignment (`u128`, SIMD) take the heap fallback. Deliberately **not**
+/// 16-aligned: `repr(align(16))` would round every buffer size up to a
+/// multiple of 16, bloating the generated structs past the nesting
+/// budget (a 40-byte-inline callback must be exactly 64 bytes so that a
+/// channel `Completion` capturing one still stores inline).
+#[repr(align(8))]
+pub struct InlineData<const N: usize>(pub [std::mem::MaybeUninit<u8>; N]);
+
+impl<const N: usize> InlineData<N> {
+    pub const fn uninit() -> Self {
+        InlineData([std::mem::MaybeUninit::uninit(); N])
+    }
+
+    #[inline]
+    pub fn as_mut_ptr(&mut self) -> *mut u8 {
+        self.0.as_mut_ptr() as *mut u8
+    }
+}
+
+/// Generate an inline-storage erased `FnOnce($($argty),*)` named `$name`
+/// with `$bytes` bytes of inline capture storage.
+///
+/// The argument types may use elided lifetimes (e.g. `Option<&[u8]>`,
+/// `&mut WireReader<'_>`): both the stored bound and the internal fn
+/// pointers become higher-ranked over them, exactly like
+/// `Box<dyn FnOnce(Option<&[u8]>)>` would.
+#[macro_export]
+macro_rules! define_inline_fn_once {
+    (
+        $(#[$meta:meta])*
+        $vis:vis struct $name:ident($($arg:ident: $argty:ty),* $(,)?);
+        inline_bytes = $bytes:expr;
+    ) => {
+        $(#[$meta])*
+        $vis struct $name {
+            data: $crate::util::smallfn::InlineData<{ $bytes }>,
+            call_fn: Option<unsafe fn(*mut u8, bool $(, $argty)*)>,
+            drop_fn: unsafe fn(*mut u8, bool),
+            heap: bool,
+        }
+
+        impl $name {
+            /// Bytes of inline capture storage before the heap fallback.
+            pub const INLINE_BYTES: usize = $bytes;
+
+            /// The empty value (a fire-and-forget marker): calling it is
+            /// a no-op, dropping it is a no-op.
+            pub const fn none() -> $name {
+                unsafe fn drop_nothing(_p: *mut u8, _heap: bool) {}
+                $name {
+                    data: $crate::util::smallfn::InlineData::uninit(),
+                    call_fn: None,
+                    drop_fn: drop_nothing,
+                    heap: false,
+                }
+            }
+
+            /// Erase `c`, storing its captures inline when they fit.
+            pub fn new<C>(c: C) -> $name
+            where
+                C: FnOnce($($argty),*) + 'static,
+            {
+                unsafe fn call_c<C: FnOnce($($argty),*)>(
+                    p: *mut u8,
+                    heap: bool
+                    $(, $arg: $argty)*
+                ) {
+                    if heap {
+                        // SAFETY: `p` holds the thin pointer of a leaked
+                        // `Box<C>`; ownership returns here exactly once.
+                        let c = unsafe { Box::from_raw(p.cast::<*mut C>().read()) };
+                        (*c)($($arg),*);
+                    } else {
+                        // SAFETY: `p` is 8-byte-aligned storage holding a
+                        // by-value `C`; ownership moves out exactly once.
+                        let c = unsafe { p.cast::<C>().read() };
+                        c($($arg),*);
+                    }
+                }
+                unsafe fn drop_c<C>(p: *mut u8, heap: bool) {
+                    if heap {
+                        // SAFETY: as in `call_c`'s heap arm.
+                        drop(unsafe { Box::from_raw(p.cast::<*mut C>().read()) });
+                    } else {
+                        // SAFETY: as in `call_c`'s inline arm.
+                        unsafe { p.cast::<C>().drop_in_place() };
+                    }
+                }
+                let mut data = $crate::util::smallfn::InlineData::uninit();
+                let p = data.as_mut_ptr();
+                let heap = std::mem::size_of::<C>() > $bytes
+                    || std::mem::align_of::<C>() > 8;
+                if heap {
+                    let boxed = Box::into_raw(Box::new(c));
+                    // SAFETY: first 8 bytes of 8-aligned storage hold the
+                    // thin pointer.
+                    unsafe { p.cast::<*mut C>().write(boxed) };
+                } else {
+                    // SAFETY: size/align checked above; storage is fresh.
+                    unsafe { p.cast::<C>().write(c) };
+                }
+                $name { data, call_fn: Some(call_c::<C>), drop_fn: drop_c::<C>, heap }
+            }
+
+            /// Is this the empty ([`Self::none`]) value?
+            pub fn is_none(&self) -> bool {
+                self.call_fn.is_none()
+            }
+
+            pub fn is_some(&self) -> bool {
+                self.call_fn.is_some()
+            }
+
+            /// Did construction fall back to a heap box (metrics)?
+            pub fn was_boxed(&self) -> bool {
+                self.heap
+            }
+
+            /// Consume and invoke the closure; a no-op for
+            /// [`Self::none`].
+            #[inline]
+            pub fn call(mut self $(, $arg: $argty)*) {
+                if let Some(f) = self.call_fn.take() {
+                    // SAFETY: `call` was Some, so the storage holds a live
+                    // closure; taking it first makes Drop a no-op.
+                    unsafe { f(self.data.as_mut_ptr(), self.heap $(, $arg)*) };
+                }
+            }
+        }
+
+        impl Drop for $name {
+            fn drop(&mut self) {
+                if self.call_fn.take().is_some() {
+                    // SAFETY: an uncalled closure still lives in `data`.
+                    unsafe { (self.drop_fn)(self.data.as_mut_ptr(), self.heap) };
+                }
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                f.debug_struct(stringify!($name))
+                    .field("some", &self.is_some())
+                    .field("boxed", &self.heap)
+                    .finish()
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    define_inline_fn_once! {
+        /// Test subject: FnOnce(u64).
+        pub struct TestCb(v: u64);
+        inline_bytes = 24;
+    }
+
+    define_inline_fn_once! {
+        /// Borrowed-argument subject: elided lifetimes must be accepted.
+        pub struct SliceCb(v: Option<&[u8]>);
+        inline_bytes = 24;
+    }
+
+    #[test]
+    fn inline_closure_runs_once() {
+        let hit = Rc::new(Cell::new(0u64));
+        let h = hit.clone();
+        let cb = TestCb::new(move |v| h.set(h.get() + v));
+        assert!(cb.is_some());
+        assert!(!cb.was_boxed(), "one Rc must fit inline");
+        cb.call(41);
+        assert_eq!(hit.get(), 41);
+    }
+
+    #[test]
+    fn oversized_capture_falls_back_to_heap_and_still_runs() {
+        let big = [7u8; 200];
+        let hit = Rc::new(Cell::new(0u64));
+        let h = hit.clone();
+        let cb = TestCb::new(move |v| {
+            h.set(v + big.iter().map(|&b| b as u64).sum::<u64>())
+        });
+        assert!(cb.was_boxed(), "200-byte capture cannot fit inline");
+        cb.call(1);
+        assert_eq!(hit.get(), 1 + 200 * 7);
+    }
+
+    #[test]
+    fn none_is_inert() {
+        let cb = TestCb::none();
+        assert!(cb.is_none());
+        cb.call(9); // no-op
+        let cb2 = TestCb::none();
+        drop(cb2); // no-op
+    }
+
+    #[test]
+    fn dropping_uncalled_closure_drops_captures_exactly_once() {
+        struct Canary(Rc<Cell<u32>>);
+        impl Drop for Canary {
+            fn drop(&mut self) {
+                self.0.set(self.0.get() + 1);
+            }
+        }
+        let drops = Rc::new(Cell::new(0u32));
+        // Inline representation.
+        let c = Canary(drops.clone());
+        let cb = TestCb::new(move |_| {
+            let _keep = &c;
+        });
+        drop(cb);
+        assert_eq!(drops.get(), 1);
+        // Heap representation.
+        let c = Canary(drops.clone());
+        let pad = [0u8; 100];
+        let cb = TestCb::new(move |_| {
+            let _keep = (&c, &pad);
+        });
+        assert!(cb.was_boxed());
+        drop(cb);
+        assert_eq!(drops.get(), 2);
+        // Calling also consumes exactly once.
+        let c = Canary(drops.clone());
+        let cb = TestCb::new(move |_| drop(c));
+        cb.call(0);
+        assert_eq!(drops.get(), 3);
+    }
+
+    #[test]
+    fn borrowed_arguments_work_with_any_lifetime() {
+        let got = Rc::new(Cell::new(0usize));
+        let g = got.clone();
+        let cb = SliceCb::new(move |v: Option<&[u8]>| g.set(v.map_or(0, |s| s.len())));
+        {
+            let local = vec![1u8, 2, 3];
+            cb.call(Some(&local));
+        }
+        assert_eq!(got.get(), 3);
+    }
+}

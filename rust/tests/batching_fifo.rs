@@ -12,7 +12,7 @@
 
 use std::rc::Rc;
 use trustee::channel::{
-    read_response, ClientEndpoint, FlushPolicy, RequestBuilder, ResponseWriter, SlotPair,
+    read_response, ClientEndpoint, Completion, FlushPolicy, ResponseWriter, SlotPair,
     TrusteeEndpoint, FLUSH_RECORDS, HEAP_BACKPRESSURE_BYTES, MAX_INLINE_PAYLOAD,
 };
 use trustee::codec::{Wire, WireReader};
@@ -37,9 +37,14 @@ unsafe fn arg_len_thunk(_env: *const u8, prop: *mut u8, args: &[u8], out: &mut R
     out.write_value(&(v.len() as u64));
 }
 
-fn frame_fadd(ep: &mut ClientEndpoint, prop: *mut u64, delta: u64) -> trustee::channel::PendingReq {
-    let buf = ep.take_buf();
-    RequestBuilder::build(buf, fadd_thunk, prop as *mut u8, &delta.to_le_bytes(), &[], false)
+fn enqueue_fadd(ep: &mut ClientEndpoint, prop: *mut u64, delta: u64, completion: Completion) {
+    ep.enqueue_framed(
+        fadd_thunk,
+        prop as *mut u8,
+        &delta.to_le_bytes(),
+        completion,
+        |_| {},
+    );
 }
 
 #[test]
@@ -51,10 +56,14 @@ fn enqueued_is_not_visible_until_flush() {
     let mut counter: u64 = 0;
 
     for _ in 0..5 {
-        let req = frame_fadd(&mut client, &mut counter, 1);
-        client.enqueue(req, Some(Box::new(|r| {
-            read_response::<u64>(r);
-        })));
+        enqueue_fadd(
+            &mut client,
+            &mut counter,
+            1,
+            Completion::new(|r| {
+                read_response::<u64>(r);
+            }),
+        );
     }
     assert_eq!(client.queued(), 5, "all five sit in the outbox");
     // The trustee sees nothing before the flush: enqueued != visible.
@@ -76,10 +85,14 @@ fn watermark_requests_flush_before_record_cap() {
     let mut counter: u64 = 0;
     let mut n = 0usize;
     while !client.wants_flush() {
-        let req = frame_fadd(&mut client, &mut counter, 1);
-        client.enqueue(req, Some(Box::new(|r| {
-            read_response::<u64>(r);
-        })));
+        enqueue_fadd(
+            &mut client,
+            &mut counter,
+            1,
+            Completion::new(|r| {
+                read_response::<u64>(r);
+            }),
+        );
         n += 1;
         assert!(n <= FLUSH_RECORDS, "watermark never tripped");
     }
@@ -104,21 +117,18 @@ fn heap_records_trigger_backpressure() {
     // bound them.
     let mut client = ClientEndpoint::default();
     let mut acc: u64 = 0;
-    let args = trustee::codec::to_bytes(&vec![0xCDu8; MAX_INLINE_PAYLOAD + 1024]);
+    let big = vec![0xCDu8; MAX_INLINE_PAYLOAD + 1024];
     let mut n = 0usize;
     while !client.wants_flush() {
-        let buf = client.take_buf();
-        let req = RequestBuilder::build(
-            buf,
+        client.enqueue_framed(
             arg_len_thunk,
             &mut acc as *mut u64 as *mut u8,
             &[],
-            &args,
-            false,
+            Completion::new(|r| {
+                read_response::<u64>(r);
+            }),
+            |w| big.write(w),
         );
-        client.enqueue(req, Some(Box::new(|r| {
-            read_response::<u64>(r);
-        })));
         n += 1;
         assert!(n < 100_000, "backpressure never tripped");
     }
@@ -160,10 +170,11 @@ fn fifo_preserved_across_lazy_batches() {
     let order: Rc<std::cell::RefCell<Vec<u64>>> = Rc::new(std::cell::RefCell::new(Vec::new()));
     for _ in 0..100 {
         let o = order.clone();
-        let req = frame_fadd(&mut client, &mut counter, 1);
-        client.enqueue(
-            req,
-            Some(Box::new(move |r| o.borrow_mut().push(read_response::<u64>(r)))),
+        enqueue_fadd(
+            &mut client,
+            &mut counter,
+            1,
+            Completion::new(move |r| o.borrow_mut().push(read_response::<u64>(r))),
         );
     }
     let mut batches = 0;
@@ -238,10 +249,14 @@ fn adaptive_policy_batches_more_than_eager() {
                 if enqueued == total {
                     break;
                 }
-                let req = frame_fadd(&mut client, &mut counter, 1);
-                client.enqueue(req, Some(Box::new(|r| {
-                    read_response::<u64>(r);
-                })));
+                enqueue_fadd(
+                    &mut client,
+                    &mut counter,
+                    1,
+                    Completion::new(|r| {
+                        read_response::<u64>(r);
+                    }),
+                );
                 enqueued += 1;
                 if eager {
                     client.try_flush(&pair);

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Bench smoke: run the three JSON-mode benches with small, CI-sized
+# parameters and write BENCH_<name>.json next to the repo root (or into
+# $1 if given). These files are the cross-PR perf baseline: record one
+# set before a perf change and one after, then compare the MOPs/kOPs and
+# allocs-per-op fields. CI uploads them as a workflow artifact.
+#
+# Absolute numbers from a 1-2 vCPU container are noisy; ratios within
+# one file (trustee/MCS, adaptive/eager, trust/mutex) and the
+# allocs_per_op field are the stable signals.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+OUT_DIR="${1:-$(cd .. && pwd)}"
+mkdir -p "$OUT_DIR"
+
+echo "bench smoke -> $OUT_DIR" >&2
+
+cargo bench --bench channel_micro -- --json --ops 4000 --threads 2 \
+    > "$OUT_DIR/BENCH_channel_micro.json"
+echo "wrote BENCH_channel_micro.json" >&2
+
+cargo bench --bench fig9_kv_write_pct -- --json --quick --dist uniform --ops 1500 \
+    > "$OUT_DIR/BENCH_fig9_kv_write_pct.json"
+echo "wrote BENCH_fig9_kv_write_pct.json" >&2
+
+cargo bench --bench resp_throughput -- --json --quick --ops 1500 \
+    > "$OUT_DIR/BENCH_resp_throughput.json"
+echo "wrote BENCH_resp_throughput.json" >&2
+
+# Sanity: every file must be non-empty JSON (first byte '{').
+for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json; do
+    head -c 1 "$OUT_DIR/$f" | grep -q '{' || { echo "bad JSON in $f" >&2; exit 1; }
+done
+echo "bench smoke OK" >&2
