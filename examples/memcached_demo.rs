@@ -1,10 +1,17 @@
-//! Mini-memcached demo (§7): start the stock and delegated engines side by
-//! side, drive both with the memtier-style client, and print the speedup.
+//! Mini-memcached demo (§7): run the lock-based baseline and the
+//! delegated Trust<T> backend of the **unified item store** side by side,
+//! drive both with the memtier-style client, and print the speedup.
 //!
 //!     cargo run --release --example memcached_demo -- \
-//!         [--keys 10000] [--ops 20000] [--dist zipf] [--write-pct 5]
+//!         [--keys 10000] [--ops 20000] [--dist zipf] [--write-pct 5] \
+//!         [--ttl-pct 0] [--budget-mb 0]
+//!
+//! `--ttl-pct` makes that share of the sets carry `exptime 1`, exercising
+//! the store's expiry machinery end to end (expired keys then miss);
+//! `--budget-mb` caps the store and triggers per-shard LRU eviction.
 
-use trustee::memcache::{run_memtier, EngineKind, McdServer, McdServerConfig, MemtierConfig};
+use trustee::kvstore::BackendKind;
+use trustee::memcache::{run_memtier, McdServer, McdServerConfig, MemtierConfig};
 use trustee::util::cli::Args;
 use trustee::util::stats::fmt_mops;
 
@@ -14,17 +21,23 @@ fn main() {
     let ops: u64 = args.get("ops", 20_000);
     let dist = args.get_str("dist", "zipf");
     let write_pct: u32 = args.get("write-pct", 5);
+    let ttl_pct: u32 = args.get("ttl-pct", 0);
+    let budget_bytes: u64 = args.get::<u64>("budget-mb", 0) << 20;
 
-    println!("== mini-memcached: stock (locks) vs Trust<T> (delegated shards) ==");
-    println!("keys={keys} ops={ops} dist={dist} writes={write_pct}% pipeline=48");
+    println!("== mini-memcached: lock baseline vs Trust<T> (unified item store) ==");
+    println!(
+        "keys={keys} ops={ops} dist={dist} writes={write_pct}% ttl={ttl_pct}% \
+         budget={budget_bytes}B pipeline=48"
+    );
 
     let mut tputs = Vec::new();
-    for engine in [EngineKind::Stock, EngineKind::Trust { shards: 8 }] {
-        let label = engine.label();
+    for backend in [BackendKind::Mutex, BackendKind::Trust { shards: 8 }] {
+        let label = backend.label();
         let server = McdServer::start(McdServerConfig {
             workers: 4,
             dedicated: 0,
-            engine,
+            backend,
+            budget_bytes,
             addr: "127.0.0.1:0".into(),
             ..Default::default()
         });
@@ -37,16 +50,28 @@ fn main() {
             keys,
             dist: dist.clone(),
             write_pct,
+            ttl_pct,
             val_len: 16,
             seed: 0xDEC0,
         });
-        assert_eq!(stats.misses, 0, "prefilled keys must not miss");
-        println!("{label:<12} {:>14}  ({} ops in {:.2}s)",
-                 fmt_mops(stats.throughput()), stats.ops,
-                 stats.elapsed.as_secs_f64());
+        if ttl_pct == 0 && budget_bytes == 0 {
+            assert_eq!(stats.misses, 0, "prefilled keys must not miss");
+        }
+        let store = server.store_stats();
+        println!(
+            "{label:<12} {:>14}  ({} ops in {:.2}s | misses {} | evictions {} expired {})",
+            fmt_mops(stats.throughput()),
+            stats.ops,
+            stats.elapsed.as_secs_f64(),
+            stats.misses,
+            store.evictions,
+            store.expired_keys,
+        );
         tputs.push(stats.throughput());
         server.stop();
     }
-    println!("\ndelegated/stock speedup: {:.2}x (paper fig 10/11: up to 5-9x under contention)",
-             tputs[1] / tputs[0]);
+    println!(
+        "\ndelegated/lock speedup: {:.2}x (paper fig 10/11: up to 5-9x under contention)",
+        tputs[1] / tputs[0]
+    );
 }

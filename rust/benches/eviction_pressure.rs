@@ -1,0 +1,125 @@
+//! E18: eviction under memory pressure — the unified item store's byte
+//! budget + per-shard LRU, Trust vs the lock baselines, at varying
+//! budget-to-working-set ratios.
+//!
+//! Each cell boots a RESP server with `budget_bytes` set to a fraction
+//! of the prefilled working set and drives a write-heavy load: every
+//! over-budget SET pays a victim scan + reclamation on the owning shard
+//! (trustee-local for Trust, lock-scoped for the baselines). Reported
+//! per cell: kOPs, evictions, and final store bytes — the ratio across
+//! backends is the signal (absolute numbers are box-dependent).
+//!
+//! Usage: cargo bench --bench eviction_pressure -- \
+//!            [--keys N] [--val-len L] [--ops N] [--write-pct P]
+//!            [--ratios 100,50,25] [--quick] [--json]
+//!
+//! With `--json`, one machine-readable object is printed to stdout —
+//! `scripts/bench_smoke.sh` captures it as `BENCH_eviction_pressure.json`
+//! for cross-PR comparison.
+
+use trustee::bench::print_table;
+use trustee::kvstore::store::ITEM_OVERHEAD;
+use trustee::kvstore::BackendKind;
+use trustee::server::{run_resp_load, RespLoadConfig, RespServer, RespServerConfig};
+use trustee::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let json = args.flag("json");
+    // Working set sized so the *smallest* ratio still leaves the
+    // 512-shard lock baselines several entries of budget per shard —
+    // otherwise a SET evicts its own key and the cell measures an empty
+    // store instead of eviction cost (see the degeneracy guard below).
+    let keys: u64 = args.get("keys", if quick { 8_000 } else { 16_000 });
+    let val_len: usize = args.get("val-len", 64);
+    let ops: u64 = args.get("ops", if quick { 1_500 } else { 5_000 });
+    let write_pct: u32 = args.get("write-pct", 50);
+    // Budget as a percentage of the prefilled working set; 100 barely
+    // evicts (steady churn), 25 keeps the store under heavy pressure.
+    let ratios = args.get_list::<u64>("ratios", if quick { &[100, 25] } else { &[100, 50, 25] });
+    // `key:<n>` keys run ~8 bytes at these sizes.
+    let entry_cost = 8 + val_len as u64 + ITEM_OVERHEAD;
+    let working_set = keys * entry_cost;
+
+    if !json {
+        println!(
+            "# E18: eviction under memory pressure ({keys} keys x {val_len}B, \
+             working set ~{working_set}B, {write_pct}% writes); \
+             cell = kOPs (evictions)"
+        );
+    }
+
+    let configs = [
+        ("TrustS", BackendKind::Trust { shards: 8 }),
+        ("Mutex", BackendKind::Mutex),
+        ("RwLock", BackendKind::RwLock),
+    ];
+    let header = vec!["budget_pct", "TrustS", "Mutex", "RwLock"];
+    let mut rows = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+    for &ratio in &ratios {
+        let budget = working_set * ratio / 100;
+        // Degeneracy guard: the budget splits per shard, and the lock
+        // baselines run 512 shards. If a shard's slice cannot hold a
+        // couple of entries, every SET self-evicts and the cell is
+        // meaningless — flag it rather than report it silently.
+        if budget > 0 && budget / 512 < 2 * entry_cost {
+            eprintln!(
+                "WARNING: budget_pct={ratio} gives {}B/shard on the 512-shard \
+                 baselines (< 2 entries of {entry_cost}B) — raise --keys/--val-len",
+                budget / 512
+            );
+        }
+        let mut row = vec![ratio.to_string()];
+        let mut cells: Vec<String> = Vec::new();
+        for (label, backend) in configs.clone() {
+            let server = RespServer::start(RespServerConfig {
+                workers: 4,
+                dedicated: 0,
+                backend,
+                budget_bytes: budget,
+                addr: "127.0.0.1:0".into(),
+                ..Default::default()
+            });
+            server.prefill(keys, val_len);
+            let stats = run_resp_load(&RespLoadConfig {
+                addr: server.addr(),
+                threads: 2,
+                pipeline: 32,
+                ops_per_thread: ops,
+                keys,
+                dist: "uniform".into(),
+                write_pct,
+                ttl_pct: 0,
+                val_len,
+                seed: 0xE18,
+            });
+            if !stats.ok() {
+                eprintln!("client errors: {:?}", stats.errors);
+            }
+            let store = server.store_stats();
+            let kops = stats.throughput() / 1e3;
+            row.push(format!("{kops:.1} ({})", store.evictions));
+            cells.push(format!(
+                "\"{label}\":{{\"kops\":{kops:.2},\"evictions\":{},\
+                 \"expired_keys\":{},\"store_bytes\":{},\"items\":{}}}",
+                store.evictions, store.expired_keys, store.store_bytes, store.items
+            ));
+            server.stop();
+        }
+        eprintln!("done budget_pct={ratio}");
+        json_rows.push(format!("{{\"budget_pct\":{ratio},{}}}", cells.join(",")));
+        rows.push(row);
+    }
+    if json {
+        println!(
+            "{{\"bench\":\"eviction_pressure\",\"keys\":{keys},\"val_len\":{val_len},\
+             \"write_pct\":{write_pct},\"working_set_bytes\":{working_set},\
+             \"rows\":[{}]}}",
+            json_rows.join(",")
+        );
+    } else {
+        print_table("E18: kOPs (evictions) vs budget ratio", &header, &rows);
+    }
+}

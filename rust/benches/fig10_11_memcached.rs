@@ -8,14 +8,15 @@
 //!            [--quick]
 
 use trustee::bench::print_table;
-use trustee::memcache::{run_memtier, EngineKind, McdServer, McdServerConfig, MemtierConfig};
+use trustee::kvstore::BackendKind;
+use trustee::memcache::{run_memtier, McdServer, McdServerConfig, MemtierConfig};
 use trustee::util::cli::Args;
 
-fn run_one(engine: EngineKind, keys: u64, dist: &str, write_pct: u32, ops: u64) -> f64 {
+fn run_one(backend: BackendKind, keys: u64, dist: &str, write_pct: u32, ops: u64) -> f64 {
     let server = McdServer::start(McdServerConfig {
         workers: 4,
         dedicated: 0,
-        engine,
+        backend,
         addr: "127.0.0.1:0".into(),
         ..Default::default()
     });
@@ -28,6 +29,7 @@ fn run_one(engine: EngineKind, keys: u64, dist: &str, write_pct: u32, ops: u64) 
         keys,
         dist: dist.into(),
         write_pct,
+        ttl_pct: 0,
         val_len: 16,
         seed: 0x3E3C,
     });
@@ -57,7 +59,9 @@ fn main() {
 
     println!("# Figure {} reproduction: mini-memcached throughput (kOPs) vs table size",
              if dist == "uniform" { "10 (uniform)" } else { "11 (zipfian)" });
-    println!("# S = stock (locks), T = Trust<T> delegated shards; paper pipeline=48");
+    println!("# S = lock baseline (unified store, 512 Mutex shards — less contended than");
+    println!("#     true stock memcached's global LRU, so speedups read conservative),");
+    println!("# T = Trust<T> delegated shards; paper pipeline=48");
 
     let mut header = vec!["keys".to_string()];
     for &p in &pcts {
@@ -69,8 +73,8 @@ fn main() {
     for &keys in &sizes {
         let mut row = vec![keys.to_string()];
         for &pct in &pcts {
-            let s = run_one(EngineKind::Stock, keys, &dist, pct, ops);
-            let t = run_one(EngineKind::Trust { shards: 8 }, keys, &dist, pct, ops);
+            let s = run_one(BackendKind::Mutex, keys, &dist, pct, ops);
+            let t = run_one(BackendKind::Trust { shards: 8 }, keys, &dist, pct, ops);
             row.push(format!("{:.1}", s / 1e3));
             row.push(format!("{:.1}", t / 1e3));
             row.push(format!("{:.2}x", t / s));

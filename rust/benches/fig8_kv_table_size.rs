@@ -1,7 +1,7 @@
 //! Figure 8a/8b: key-value store throughput vs. table size (5% writes).
 //!
 //! Series: TrustD (dedicated trustees, the paper's Trust16/Trust24 scaled
-//! to this box), TrustS (shared), Dashmap-like (SwiftMap), sharded Mutex,
+//! to this box), TrustS (shared), Dashmap-like (64-shard RwLock), sharded Mutex,
 //! sharded RwLock.
 //!
 //! Usage: cargo bench --bench fig8_kv_table_size -- \

@@ -63,6 +63,7 @@ fn main() {
                 keys,
                 dist: dist.clone(),
                 write_pct: pct,
+                ttl_pct: 0,
                 val_len: 16,
                 seed: 0xE16,
             });

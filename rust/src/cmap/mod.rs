@@ -1,485 +1,19 @@
-//! Concurrent map substrates for the key-value store evaluation (§6.3):
+//! Map substrate for the storage layer: the from-scratch open-addressing
+//! robin-hood table ([`OaTable`]) and its FxHash hasher.
 //!
-//! - [`ShardedMutexMap`] — the paper's "naïvely sharded HashMap" with
-//!   `std::sync::Mutex` per shard (512 shards by default, "many more locks
-//!   than threads").
-//! - [`ShardedRwMap`] — same, with readers-writer locks.
-//! - [`SwiftMap`] — the Dashmap stand-in: sharded `RwLock` over our
-//!   open-addressing robin-hood [`OaTable`] (Dashmap's own design), with a
-//!   lower-overhead fixed-shard layout and FxHash.
+//! The storage unification (PR 5) collapsed the former zoo here — a
+//! generic `ConcurrentMap` trait with sharded `Mutex`/`RwLock` `HashMap`s
+//! and a Dashmap stand-in — into one shard type built on [`OaTable`]:
+//! [`crate::kvstore::store::ItemShard`]. The lock baselines now wrap that
+//! shard directly (`kvstore::backend::LockedItemKv`), so the generic
+//! concurrent-map machinery had no remaining users and was deleted
+//! rather than kept as unreachable pub API.
 //!
-//! All three expose the same minimal interface the KV store needs
-//! (`get` → owned value, `insert`, `remove`, `len`), so the bench harness
-//! is generic via [`ConcurrentMap`].
+//! [`OaTable`] exposes slot-addressed entry points
+//! ([`OaTable::index_of`]/[`OaTable::entry_at`]/[`OaTable::remove_at`])
+//! so LRU victim scans and the incremental expiry sweep can address
+//! entries without building owned keys.
 
 pub mod oatable;
 
 pub use oatable::{fxhash, FxHasher, OaTable};
-
-use std::borrow::Borrow;
-use std::collections::HashMap;
-use std::hash::Hash;
-use std::sync::{Mutex, RwLock};
-
-/// The operations the KV store and benches need, generic over the
-/// backend. Lookup entry points are **borrow-keyed** (`Q: Borrow`-style,
-/// like `HashMap`): callers holding a `&[u8]` key probe a
-/// `Vec<u8>`-keyed map without allocating an owned key first — the
-/// lock-baseline half of the one-copy GET contract (DESIGN.md,
-/// "Allocation discipline").
-pub trait ConcurrentMap<K, V>: Send + Sync {
-    /// Owned-copy lookup.
-    fn get<Q>(&self, k: &Q) -> Option<V>
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized;
-    /// Borrow-based lookup: run `f` on the value **in place** (under the
-    /// shard's read lock) without copying it out. `f` must not touch the
-    /// map. This is how `AsyncKv::get` renders a value straight into the
-    /// wire buffer with exactly one copy.
-    fn with_get<Q, R, F>(&self, k: &Q, f: F) -> R
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized,
-        F: FnOnce(Option<&V>) -> R;
-    fn insert(&self, k: K, v: V) -> Option<V>;
-    fn remove<Q>(&self, k: &Q) -> Option<V>
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized;
-    /// Presence check without cloning the value out — and, on the
-    /// RwLock-based maps, without taking the write lock (RESP `EXISTS`
-    /// is read-only and must scale like one).
-    fn contains<Q>(&self, k: &Q) -> bool
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized;
-    fn len(&self) -> usize;
-    fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-    /// Read-modify-write (used by fetch-and-add style workloads).
-    fn update<Q, R>(&self, k: &Q, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized;
-    /// Read-modify-write that can also **insert or remove**: `f` receives
-    /// the entry slot (`None` when absent) under the shard's write lock;
-    /// leaving `Some` (re)inserts, leaving `None` removes. Used by the
-    /// RESP front end's atomic `INCR`.
-    fn entry_update<R>(&self, k: K, f: &mut dyn FnMut(&mut Option<V>) -> R) -> R;
-    /// Remove every entry (RESP `FLUSHALL`).
-    fn clear(&self);
-}
-
-#[inline]
-fn shard_of<K: Hash + ?Sized>(k: &K, n_shards: usize) -> usize {
-    (fxhash(k) as usize >> 7) & (n_shards - 1)
-}
-
-macro_rules! sharded_map {
-    ($name:ident, $lock:ident, $read:ident, $write:ident, $doc:literal) => {
-        #[doc = $doc]
-        pub struct $name<K, V> {
-            shards: Vec<$lock<HashMap<K, V>>>,
-        }
-
-        impl<K: Eq + Hash, V> $name<K, V> {
-            /// `n_shards` is rounded up to a power of two (default 512,
-            /// the paper's §6.3 configuration).
-            pub fn new(n_shards: usize) -> Self {
-                let n = n_shards.next_power_of_two().max(1);
-                let mut shards = Vec::with_capacity(n);
-                shards.resize_with(n, || $lock::new(HashMap::new()));
-                Self { shards }
-            }
-
-            pub fn n_shards(&self) -> usize {
-                self.shards.len()
-            }
-        }
-
-        impl<K: Eq + Hash, V> Default for $name<K, V> {
-            fn default() -> Self {
-                Self::new(512)
-            }
-        }
-
-        impl<K, V> ConcurrentMap<K, V> for $name<K, V>
-        where
-            K: Eq + Hash + Send + Sync,
-            V: Clone + Send + Sync,
-        {
-            fn get<Q>(&self, k: &Q) -> Option<V>
-            where
-                K: Borrow<Q>,
-                Q: Eq + Hash + ?Sized,
-            {
-                let shard = &self.shards[shard_of(k, self.shards.len())];
-                shard.$read().unwrap().get(k).cloned()
-            }
-
-            fn with_get<Q, R, F>(&self, k: &Q, f: F) -> R
-            where
-                K: Borrow<Q>,
-                Q: Eq + Hash + ?Sized,
-                F: FnOnce(Option<&V>) -> R,
-            {
-                let shard = &self.shards[shard_of(k, self.shards.len())];
-                let g = shard.$read().unwrap();
-                f(g.get(k))
-            }
-
-            fn insert(&self, k: K, v: V) -> Option<V> {
-                let shard = &self.shards[shard_of(&k, self.shards.len())];
-                shard.$write().unwrap().insert(k, v)
-            }
-
-            fn remove<Q>(&self, k: &Q) -> Option<V>
-            where
-                K: Borrow<Q>,
-                Q: Eq + Hash + ?Sized,
-            {
-                let shard = &self.shards[shard_of(k, self.shards.len())];
-                shard.$write().unwrap().remove(k)
-            }
-
-            fn contains<Q>(&self, k: &Q) -> bool
-            where
-                K: Borrow<Q>,
-                Q: Eq + Hash + ?Sized,
-            {
-                let shard = &self.shards[shard_of(k, self.shards.len())];
-                shard.$read().unwrap().contains_key(k)
-            }
-
-            fn len(&self) -> usize {
-                self.shards.iter().map(|s| s.$read().unwrap().len()).sum()
-            }
-
-            fn update<Q, R>(&self, k: &Q, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R
-            where
-                K: Borrow<Q>,
-                Q: Eq + Hash + ?Sized,
-            {
-                let shard = &self.shards[shard_of(k, self.shards.len())];
-                f(shard.$write().unwrap().get_mut(k))
-            }
-
-            fn entry_update<R>(&self, k: K, f: &mut dyn FnMut(&mut Option<V>) -> R) -> R {
-                let shard = &self.shards[shard_of(&k, self.shards.len())];
-                let mut g = shard.$write().unwrap();
-                let mut slot = g.remove(&k);
-                let r = f(&mut slot);
-                if let Some(v) = slot {
-                    g.insert(k, v);
-                }
-                r
-            }
-
-            fn clear(&self) {
-                for s in &self.shards {
-                    s.$write().unwrap().clear();
-                }
-            }
-        }
-    };
-}
-
-sharded_map!(
-    ShardedMutexMap,
-    Mutex,
-    lock,
-    lock,
-    "Sharded `HashMap` with one `Mutex` per shard (paper §6.3 \"Mutex\")."
-);
-sharded_map!(
-    ShardedRwMap,
-    RwLock,
-    read,
-    write,
-    "Sharded `HashMap` with one `RwLock` per shard (paper §6.3 \"RwLock\")."
-);
-
-/// Dashmap stand-in: fixed power-of-two shards, each an
-/// `RwLock<OaTable<K, V>>` — structurally what Dashmap 5.x does, built on
-/// our own robin-hood table.
-pub struct SwiftMap<K, V> {
-    shards: Vec<RwLock<OaTable<K, V>>>,
-}
-
-impl<K: Eq + Hash, V> SwiftMap<K, V> {
-    pub fn new(n_shards: usize) -> Self {
-        let n = n_shards.next_power_of_two().max(1);
-        let mut shards = Vec::with_capacity(n);
-        shards.resize_with(n, || RwLock::new(OaTable::default()));
-        SwiftMap { shards }
-    }
-
-    pub fn with_capacity(n_shards: usize, cap: usize) -> Self {
-        let n = n_shards.next_power_of_two().max(1);
-        let per = (cap / n).max(8);
-        let mut shards = Vec::with_capacity(n);
-        shards.resize_with(n, || RwLock::new(OaTable::with_capacity(per)));
-        SwiftMap { shards }
-    }
-
-    pub fn n_shards(&self) -> usize {
-        self.shards.len()
-    }
-}
-
-impl<K: Eq + Hash, V> Default for SwiftMap<K, V> {
-    fn default() -> Self {
-        SwiftMap::new(64) // dashmap defaults to 4*ncpu, rounded up
-    }
-}
-
-impl<K, V> ConcurrentMap<K, V> for SwiftMap<K, V>
-where
-    K: Eq + Hash + Send + Sync,
-    V: Clone + Send + Sync,
-{
-    fn get<Q>(&self, k: &Q) -> Option<V>
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized,
-    {
-        let shard = &self.shards[shard_of(k, self.shards.len())];
-        shard.read().unwrap().get(k).cloned()
-    }
-
-    fn with_get<Q, R, F>(&self, k: &Q, f: F) -> R
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized,
-        F: FnOnce(Option<&V>) -> R,
-    {
-        let shard = &self.shards[shard_of(k, self.shards.len())];
-        let g = shard.read().unwrap();
-        f(g.get(k))
-    }
-
-    fn insert(&self, k: K, v: V) -> Option<V> {
-        let shard = &self.shards[shard_of(&k, self.shards.len())];
-        shard.write().unwrap().insert(k, v)
-    }
-
-    fn remove<Q>(&self, k: &Q) -> Option<V>
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized,
-    {
-        let shard = &self.shards[shard_of(k, self.shards.len())];
-        shard.write().unwrap().remove(k)
-    }
-
-    fn contains<Q>(&self, k: &Q) -> bool
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized,
-    {
-        let shard = &self.shards[shard_of(k, self.shards.len())];
-        shard.read().unwrap().contains_key(k)
-    }
-
-    fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
-    }
-
-    fn update<Q, R>(&self, k: &Q, f: &mut dyn FnMut(Option<&mut V>) -> R) -> R
-    where
-        K: Borrow<Q>,
-        Q: Eq + Hash + ?Sized,
-    {
-        let shard = &self.shards[shard_of(k, self.shards.len())];
-        f(shard.write().unwrap().get_mut(k))
-    }
-
-    fn entry_update<R>(&self, k: K, f: &mut dyn FnMut(&mut Option<V>) -> R) -> R {
-        let shard = &self.shards[shard_of(&k, self.shards.len())];
-        let mut g = shard.write().unwrap();
-        let mut slot = g.remove(&k);
-        let r = f(&mut slot);
-        if let Some(v) = slot {
-            g.insert(k, v);
-        }
-        r
-    }
-
-    fn clear(&self) {
-        for s in &self.shards {
-            s.write().unwrap().clear();
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::sync::Arc;
-
-    fn exercise<M: ConcurrentMap<u64, u64> + 'static>(map: Arc<M>) {
-        let threads = 4;
-        let per = 1000u64;
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
-                let map = map.clone();
-                std::thread::spawn(move || {
-                    let base = t as u64 * per;
-                    for i in 0..per {
-                        map.insert(base + i, i);
-                    }
-                    for i in 0..per {
-                        assert_eq!(map.get(&(base + i)), Some(i));
-                    }
-                    for i in (0..per).step_by(2) {
-                        assert_eq!(map.remove(&(base + i)), Some(i));
-                    }
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
-        assert_eq!(map.len(), threads as usize * (per as usize) / 2);
-    }
-
-    #[test]
-    fn sharded_mutex_map_concurrent() {
-        exercise(Arc::new(ShardedMutexMap::new(64)));
-    }
-
-    #[test]
-    fn sharded_rw_map_concurrent() {
-        exercise(Arc::new(ShardedRwMap::new(64)));
-    }
-
-    #[test]
-    fn swift_map_concurrent() {
-        exercise(Arc::new(SwiftMap::new(64)));
-    }
-
-    #[test]
-    fn update_read_modify_write() {
-        let m = SwiftMap::new(4);
-        m.insert(1u64, 10u64);
-        let old = m.update(&1, &mut |v| {
-            let v = v.unwrap();
-            let o = *v;
-            *v += 1;
-            o
-        });
-        assert_eq!(old, 10);
-        assert_eq!(m.get(&1), Some(11));
-        let missing = m.update(&99, &mut |v| v.is_none());
-        assert!(missing);
-    }
-
-    #[test]
-    fn entry_update_inserts_and_removes() {
-        fn exercise<M: ConcurrentMap<u64, u64>>(m: &M) {
-            // Insert through the slot.
-            let r = m.entry_update(1, &mut |slot| {
-                assert!(slot.is_none());
-                *slot = Some(10);
-                "inserted"
-            });
-            assert_eq!(r, "inserted");
-            assert_eq!(m.get(&1), Some(10));
-            // In-place RMW through the slot.
-            m.entry_update(1, &mut |slot| {
-                *slot.as_mut().unwrap() += 5;
-            });
-            assert_eq!(m.get(&1), Some(15));
-            // Remove by leaving None.
-            m.entry_update(1, &mut |slot| {
-                assert_eq!(slot.take(), Some(15));
-            });
-            assert_eq!(m.get(&1), None);
-            assert_eq!(m.len(), 0);
-        }
-        exercise(&ShardedMutexMap::new(8));
-        exercise(&ShardedRwMap::new(8));
-        exercise(&SwiftMap::new(8));
-    }
-
-    #[test]
-    fn contains_tracks_membership() {
-        fn exercise<M: ConcurrentMap<u64, u64>>(m: &M) {
-            assert!(!m.contains(&1));
-            m.insert(1, 10);
-            assert!(m.contains(&1));
-            m.remove(&1);
-            assert!(!m.contains(&1));
-        }
-        exercise(&ShardedMutexMap::new(8));
-        exercise(&ShardedRwMap::new(8));
-        exercise(&SwiftMap::new(8));
-    }
-
-    #[test]
-    fn clear_empties_every_shard() {
-        fn exercise<M: ConcurrentMap<u64, u64>>(m: &M) {
-            for i in 0..100 {
-                m.insert(i, i);
-            }
-            assert_eq!(m.len(), 100);
-            m.clear();
-            assert_eq!(m.len(), 0);
-            assert_eq!(m.get(&7), None);
-            // Still usable after clear.
-            m.insert(7, 7);
-            assert_eq!(m.get(&7), Some(7));
-        }
-        exercise(&ShardedMutexMap::new(8));
-        exercise(&ShardedRwMap::new(8));
-        exercise(&SwiftMap::new(8));
-    }
-
-    #[test]
-    fn borrowed_key_lookups_and_with_get() {
-        // Byte-keyed maps must answer &[u8] probes without an owned key,
-        // and with_get must expose the value in place (one-copy GET).
-        fn exercise<M: ConcurrentMap<Vec<u8>, Vec<u8>>>(m: &M) {
-            m.insert(b"alpha".to_vec(), b"one".to_vec());
-            assert_eq!(m.get::<[u8]>(b"alpha"), Some(b"one".to_vec()));
-            assert!(m.contains::<[u8]>(b"alpha"));
-            assert!(!m.contains::<[u8]>(b"beta"));
-            let len = m.with_get::<[u8], _, _>(b"alpha", |v| v.map_or(0, |v| v.len()));
-            assert_eq!(len, 3);
-            let miss = m.with_get::<[u8], _, _>(b"beta", |v| v.is_none());
-            assert!(miss);
-            let bumped = m.update::<[u8], _>(b"alpha", &mut |v| {
-                if let Some(v) = v {
-                    v.push(b'!');
-                    true
-                } else {
-                    false
-                }
-            });
-            assert!(bumped);
-            assert_eq!(m.remove::<[u8]>(b"alpha"), Some(b"one!".to_vec()));
-            assert_eq!(m.len(), 0);
-        }
-        exercise(&ShardedMutexMap::new(8));
-        exercise(&ShardedRwMap::new(8));
-        exercise(&SwiftMap::new(8));
-    }
-
-    #[test]
-    fn shard_counts_power_of_two() {
-        assert_eq!(ShardedMutexMap::<u64, u64>::new(500).n_shards(), 512);
-        assert_eq!(SwiftMap::<u64, u64>::new(3).n_shards(), 4);
-    }
-
-    #[test]
-    fn string_keys_work() {
-        let m = SwiftMap::default();
-        m.insert("alpha".to_string(), 1u32);
-        m.insert("beta".to_string(), 2);
-        assert_eq!(m.get(&"alpha".to_string()), Some(1));
-        assert_eq!(m.remove(&"beta".to_string()), Some(2));
-        assert_eq!(m.len(), 1);
-    }
-}

@@ -1,6 +1,7 @@
 //! Open-addressing robin-hood hash table — the from-scratch table behind
-//! [`SwiftMap`](super::SwiftMap) (the Dashmap stand-in) and the delegated
-//! KV-store shards.
+//! every shard of the unified item store
+//! ([`ItemShard`](crate::kvstore::store::ItemShard)), delegated and
+//! lock-wrapped alike.
 //!
 //! Robin-hood insertion with backward-shift deletion (no tombstones) keeps
 //! probe sequences short under churn, which matters for the write-heavy
@@ -210,8 +211,44 @@ impl<K: Eq + std::hash::Hash, V> OaTable<K, V> {
         K: std::borrow::Borrow<Q>,
         Q: Eq + std::hash::Hash + ?Sized,
     {
-        let mut idx = self.find_slot(key)?;
-        let removed = self.slots[idx].take().unwrap();
+        let idx = self.find_slot(key)?;
+        self.remove_at(idx).map(|(_, v)| v)
+    }
+
+    /// Slot index holding `key`, for the slot-addressed entry points
+    /// below (LRU victim scans and the incremental expiry sweep address
+    /// entries by slot so they never build an owned key).
+    pub fn index_of<Q>(&self, key: &Q) -> Option<usize>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        self.find_slot(key)
+    }
+
+    /// The entry in slot `idx` (`None` for an empty slot). Slot indices
+    /// are only stable until the next insert/remove — they are scan
+    /// cursors, not handles.
+    pub fn entry_at(&self, idx: usize) -> Option<(&K, &V)> {
+        self.slots
+            .get(idx)
+            .and_then(|s| s.as_ref().map(|e| (&e.key, &e.value)))
+    }
+
+    /// Mutable view of the entry in slot `idx` (the key stays shared —
+    /// mutating it would corrupt the probe sequence).
+    pub fn entry_at_mut(&mut self, idx: usize) -> Option<(&K, &mut V)> {
+        self.slots
+            .get_mut(idx)
+            .and_then(|s| s.as_mut().map(|e| (&e.key, &mut e.value)))
+    }
+
+    /// Remove the entry in slot `idx`, returning it. Backward-shift
+    /// deletion runs from `idx`, so after removal the *same* slot may
+    /// hold a shifted-in successor — sweep loops must re-examine `idx`
+    /// before advancing.
+    pub fn remove_at(&mut self, mut idx: usize) -> Option<(K, V)> {
+        let removed = self.slots.get_mut(idx)?.take()?;
         self.len -= 1;
         // Backward-shift deletion: pull successors left until a hole or a
         // home-positioned entry.
@@ -227,7 +264,7 @@ impl<K: Eq + std::hash::Hash, V> OaTable<K, V> {
             self.slots[idx] = self.slots[next].take();
             idx = next;
         }
-        Some(removed.value)
+        Some((removed.key, removed.value))
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
@@ -325,6 +362,52 @@ mod tests {
             }
             m.iter().all(|(k, v)| t.get(k) == Some(v))
         });
+    }
+
+    #[test]
+    fn slot_addressed_entry_points_agree_with_keyed_ones() {
+        let mut t = OaTable::with_capacity(16);
+        for i in 0..50u64 {
+            t.insert(i, i * 3);
+        }
+        // index_of + entry_at match get.
+        for i in 0..50u64 {
+            let idx = t.index_of(&i).unwrap();
+            let (k, v) = t.entry_at(idx).unwrap();
+            assert_eq!((*k, *v), (i, i * 3));
+        }
+        assert!(t.index_of(&99).is_none());
+        // entry_at_mut mutates in place.
+        let idx = t.index_of(&7).unwrap();
+        *t.entry_at_mut(idx).unwrap().1 += 1;
+        assert_eq!(t.get(&7), Some(&22));
+        // remove_at removes exactly the addressed entry and preserves the
+        // rest (backward shift may refill the slot).
+        let idx = t.index_of(&7).unwrap();
+        let (k, v) = t.remove_at(idx).unwrap();
+        assert_eq!((k, v), (7, 22));
+        assert_eq!(t.len(), 49);
+        for i in 0..50u64 {
+            if i == 7 {
+                assert_eq!(t.get(&i), None);
+            } else {
+                assert!(t.get(&i).is_some(), "key {i} lost by remove_at");
+            }
+        }
+        // Sweep-style removal by slot: drain everything by re-examining
+        // the same slot after each removal (backward shift only moves
+        // entries toward the slot being drained, never behind the scan).
+        let mut removed = 0;
+        let mut idx = 0;
+        while idx < t.capacity() {
+            if t.remove_at(idx).is_some() {
+                removed += 1; // same idx may have shifted in a successor
+            } else {
+                idx += 1;
+            }
+        }
+        assert_eq!(t.len(), 0);
+        assert_eq!(removed, 49);
     }
 
     #[test]

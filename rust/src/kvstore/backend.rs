@@ -1,13 +1,25 @@
-//! KV-store backends (§6.3): the delegated Trust\<T\> design vs. the lock
-//! baselines, behind one callback-style interface so the server code is
-//! identical for all of them.
+//! KV-store backends (§6.3, §7): the delegated Trust\<T\> design vs. the
+//! lock baselines, behind one callback-style interface so every front
+//! end (binary KV, memcached text, RESP) is identical over all of them.
 //!
-//! The Trust backend shards the table across trustees ("16 and 24 cores to
-//! run trustees, each hosting a shard of the table"); socket workers
-//! *delegate* all accesses and never touch the table — clients receive a
-//! **copy** of the value, exactly like the paper's memcached port (§7:
-//! "instead of a pointer to a value in the table, clients receive a
-//! copy").
+//! Since the storage unification all four backends share **one shard
+//! type** — [`ItemShard`](super::store::ItemShard), the unified item
+//! store with flags, TTL, a per-shard byte budget and LRU eviction:
+//!
+//! - [`TrustKv`] entrusts one shard per trustee ("16 and 24 cores to run
+//!   trustees, each hosting a shard of the table"); socket workers
+//!   *delegate* all accesses — including the LRU bump, expiry check and
+//!   eviction every access implies — and never touch the table. Clients
+//!   receive a **copy** of the value, exactly like the paper's memcached
+//!   port (§7).
+//! - [`LockedItemKv`] puts the same shard behind `Mutex`/`RwLock` locks
+//!   (the `mutex`/`rwlock`/`swift` baselines). Because a cache GET
+//!   mutates (LRU stamp, lazy expiry), even the readers-writer variants
+//!   take the exclusive lock on the read path — stock memcached's
+//!   synchronization profile ("memory allocation, LRU updates as well as
+//!   table writes, all of which involve synchronization in a lock-based
+//!   design"). Only genuinely read-only probes (EXISTS, TTL) stay on the
+//!   read lock.
 //!
 //! ## Allocation discipline (the one-copy GET contract)
 //!
@@ -18,30 +30,32 @@
 //! - Keys travel **borrowed** (`&[u8]`): the Trust backend serializes
 //!   them straight into the delegation slot ([`Trust::apply_raw_then`])
 //!   and the trustee looks them up as a borrowed slice; the lock
-//!   backends probe their maps through the borrow-keyed
-//!   [`ConcurrentMap`] entry points. No owned key is ever built.
-//! - GET completions ([`GetCb`]) receive the value **borrowed** — from
-//!   the delegation response stream (Trust) or in place under the shard
-//!   read lock (locks) — so the front end copies it once, directly into
-//!   its pooled wire buffer.
-//! - Callbacks ([`GetCb`]/[`AckCb`]/[`IncrCb`]/[`FlushCb`]) store their
-//!   captures inline (40 bytes) instead of one `Box<dyn FnOnce>` per op.
-//! - Trust PUTs that overwrite an existing key reuse the entry's `Vec`
-//!   allocation in place.
+//!   backends probe their shards in place under the lock.
+//! - GET completions ([`GetCb`]/[`GetItemCb`]) receive the value
+//!   **borrowed** — from the delegation response stream (Trust) or in
+//!   place under the shard lock (locks) — so the front end copies it
+//!   once, directly into its pooled wire buffer. [`GetItemCb`]
+//!   additionally receives the **key echoed borrowed** (from the
+//!   delegation slot / the caller's slice), so the memcached front end
+//!   renders `VALUE <key> …` without owning a key copy in its
+//!   completion.
+//! - Callbacks store their captures inline (40 bytes) instead of one
+//!   `Box<dyn FnOnce>` per op.
+//! - Overwriting SETs reuse the entry's `Vec` allocation in place.
 //!
-//! Every Trust delegation here is **non-urgent**, so the Fig. 8/9 request
-//! paths inherit the adaptive flush policy for free: all the gets/puts a
-//! socket fiber parses out of one TCP read accumulate in the
-//! per-(worker, trustee) outbox and travel as one batch at the
-//! scheduler's phase-end flush (or earlier at the slot watermark).
+//! Every Trust delegation here is **non-urgent**, so the request paths
+//! inherit the adaptive flush policy: all the ops a socket fiber parses
+//! out of one TCP read accumulate in the per-(worker, trustee) outbox
+//! and travel as one batch.
 
+use super::store::{ItemShard, ShardLock, StoreConfig, StoreStats, SWEEP_SLOTS};
 use crate::channel::{read_opt_bytes, read_response, ResponseWriter};
-use crate::cmap::{fxhash, ConcurrentMap, OaTable, ShardedMutexMap, ShardedRwMap, SwiftMap};
+use crate::cmap::fxhash;
 use crate::runtime::Runtime;
-use crate::trust::{Trust, TrusteeRef};
+use crate::trust::Trust;
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 
 crate::define_inline_fn_once! {
     /// Completion callback for a get. The value arrives **borrowed**
@@ -53,7 +67,17 @@ crate::define_inline_fn_once! {
 }
 
 crate::define_inline_fn_once! {
-    /// Completion callback for put/del/exists (true = key existed before).
+    /// Completion callback for an item-aware get: the key (echoed
+    /// borrowed, so a line-protocol front end can render `VALUE <key>`
+    /// without owning a copy) and, on a hit, the item's flags plus the
+    /// value borrowed.
+    pub struct GetItemCb(key: &[u8], item: Option<(u32, &[u8])>);
+    inline_bytes = 40;
+}
+
+crate::define_inline_fn_once! {
+    /// Completion callback for put/del/exists/touch/persist
+    /// (true = the key existed / the operation applied).
     pub struct AckCb(existed: bool);
     inline_bytes = 40;
 }
@@ -66,114 +90,295 @@ crate::define_inline_fn_once! {
 }
 
 crate::define_inline_fn_once! {
+    /// Completion for a TTL query: [`super::store::TTL_MISSING`],
+    /// [`super::store::TTL_NO_EXPIRY`], or the remaining milliseconds.
+    pub struct TtlCb(r: i64);
+    inline_bytes = 40;
+}
+
+crate::define_inline_fn_once! {
     /// Completion for flush_all.
     pub struct FlushCb();
     inline_bytes = 40;
 }
 
-/// Callback-style KV interface. Lock backends complete inline; the Trust
-/// backend completes when the delegation response arrives. Keys are
-/// borrowed (`&[u8]`) — backends copy them only where ownership is truly
-/// needed (into the delegation slot, or into the table on a fresh
-/// insert).
+/// Callback-style KV interface over the unified item store. Lock
+/// backends complete inline; the Trust backend completes when the
+/// delegation response arrives. Keys are borrowed (`&[u8]`) — backends
+/// copy them only where ownership is truly needed (into the delegation
+/// slot, or into the table on a fresh insert).
 pub trait AsyncKv: Send + Sync + 'static {
     /// Look `key` up; `cb` receives the value borrowed (one-copy GET).
+    /// A GET carries full cache semantics: it bumps the item's LRU
+    /// stamp and lazily reclaims an expired entry (reported as a miss).
     ///
     /// **Contract:** `cb` must only *render* — it must not call back
     /// into this backend synchronously. Lock backends run it while
-    /// holding the shard's read lock (that is what makes the borrowed
-    /// value possible without a copy), so a re-entrant `get`/`put` from
-    /// inside `cb` can self-deadlock on the same shard. The engine's
-    /// completion callbacks comply by construction (they render into a
+    /// holding the shard lock (that is what makes the borrowed value
+    /// possible without a copy), so a re-entrant `get`/`put` from inside
+    /// `cb` can self-deadlock on the same shard. The engine's completion
+    /// callbacks comply by construction (they render into a
     /// connection-local spool); chained follow-up operations belong
     /// after the callback returns, not inside it.
     fn get(&self, key: &[u8], cb: GetCb);
-    fn put(&self, key: &[u8], val: &[u8], cb: AckCb);
+
+    /// Item-aware GET: like [`AsyncKv::get`] but the callback also
+    /// receives the item's flags and the key echoed borrowed (the
+    /// memcached `VALUE <key> <flags> <bytes>` shape). The default goes
+    /// through [`AsyncKv::get`] with flags 0 and an owned key copy —
+    /// cold/experimental backends only; the real backends override.
+    fn get_item(&self, key: &[u8], cb: GetItemCb) {
+        let k = key.to_vec();
+        self.get(
+            key,
+            GetCb::new(move |v: Option<&[u8]>| cb.call(&k, v.map(|v| (0, v)))),
+        );
+    }
+
+    /// Plain store: flags 0, no expiry (clears any previous deadline,
+    /// like Redis `SET`).
+    fn put(&self, key: &[u8], val: &[u8], cb: AckCb) {
+        self.set_item(key, val, 0, 0, cb);
+    }
+
+    /// Full item store: value plus flags and a relative TTL in ms
+    /// (0 = no expiry). `cb` receives whether a live entry was
+    /// overwritten. May evict LRU items to honor the shard's byte
+    /// budget before completing.
+    fn set_item(&self, key: &[u8], val: &[u8], flags: u32, ttl_ms: u64, cb: AckCb);
+
     fn del(&self, key: &[u8], cb: AckCb);
-    /// Key-presence check (RESP `EXISTS`). With the borrowed [`GetCb`]
-    /// the default no longer copies the value anywhere. It does still
-    /// pay one heap box per call (the wrapper closure captures the
-    /// 64-byte `AckCb`, which exceeds `GetCb`'s 40-byte inline budget),
-    /// so hot-path backends override it — both to skip shipping value
-    /// bytes and to stay allocation-free; this default is a convenience
-    /// for cold or experimental backends only.
+
+    /// Key-presence check (RESP `EXISTS`). Read-only: no LRU bump, no
+    /// lazy reclamation — the read-lock-scaling path on the RwLock
+    /// baselines. The default goes through the borrowed [`GetCb`]
+    /// (which *does* bump); hot backends override with a true peek.
     fn exists(&self, key: &[u8], cb: AckCb) {
         self.get(key, GetCb::new(move |v: Option<&[u8]>| cb.call(v.is_some())));
     }
+
+    /// Reset (or, with `ttl_ms` 0, clear) a live entry's deadline —
+    /// memcached `touch` / Redis `EXPIRE`. `cb(true)` when the key was
+    /// live. Default: TTLs unsupported, always false.
+    fn touch(&self, key: &[u8], ttl_ms: u64, cb: AckCb) {
+        let _ = (key, ttl_ms);
+        cb.call(false);
+    }
+
+    /// Clear a live entry's deadline (Redis `PERSIST`): `cb(true)` only
+    /// when the entry existed and had a deadline. Default: false.
+    fn persist(&self, key: &[u8], cb: AckCb) {
+        let _ = key;
+        cb.call(false);
+    }
+
+    /// Remaining lifetime in ms ([`TtlCb`] semantics). The default
+    /// answers through `exists` (no TTL support: live keys never
+    /// expire).
+    fn ttl(&self, key: &[u8], cb: TtlCb) {
+        self.exists(
+            key,
+            AckCb::new(move |e| {
+                cb.call(if e {
+                    super::store::TTL_NO_EXPIRY
+                } else {
+                    super::store::TTL_MISSING
+                })
+            }),
+        );
+    }
+
     /// Atomic ASCII-decimal increment with Redis `INCR` semantics: a
-    /// missing key counts as 0, a non-integer value (or overflow) is an
-    /// error and leaves the entry untouched. Atomic per key — delegated
-    /// to the owning trustee for Trust, under the shard's write lock for
-    /// the lock backends.
+    /// missing (or expired) key counts as 0, a non-integer value (or
+    /// overflow) is an error and leaves the entry untouched. Atomic per
+    /// key — delegated to the owning trustee for Trust, under the shard
+    /// lock for the lock backends.
     fn incr(&self, key: &[u8], delta: i64, cb: IncrCb);
+
     /// Remove every entry (RESP `FLUSHALL`).
     fn flush_all(&self, cb: FlushCb);
-    /// Total entries (diagnostic; may take locks).
+
+    /// Total entries (diagnostic; may take locks). Expired-but-unswept
+    /// entries still count — they occupy memory until reclaimed.
     fn len(&self) -> usize;
+
+    /// Run a bounded expiry sweep over every shard *now* (`max_slots`
+    /// table slots per shard), returning entries reclaimed. Diagnostic /
+    /// test entry point; production reclamation runs incrementally via
+    /// [`AsyncKv::maintenance_tick`].
+    fn sweep_now(&self, max_slots: usize) -> u64 {
+        let _ = max_slots;
+        0
+    }
+
+    /// Aggregated store counters (items, bytes, evictions, expirations).
+    /// Diagnostic; may take locks / delegate per shard.
+    fn store_stats(&self) -> StoreStats {
+        StoreStats { items: self.len() as u64, ..Default::default() }
+    }
+
+    /// One bounded maintenance quantum, called from worker `worker`'s
+    /// scheduler loop every few ticks (see
+    /// [`install_store_maintenance`]). `workers` is the runtime size and
+    /// `tick` a per-worker call counter, so implementations can stripe
+    /// their shards. Returns entries reclaimed (useful-work signal for
+    /// the scheduler's backoff).
+    fn maintenance_tick(&self, worker: usize, workers: usize, tick: u64) -> u64 {
+        let _ = (worker, workers, tick);
+        0
+    }
+
     fn name(&self) -> &'static str;
 }
 
-/// Redis `INCR` semantics on an entry slot: missing = 0, value must be
-/// an ASCII `i64`, overflow errors out. On success the slot holds the
-/// new value's decimal encoding; on error it is left untouched.
-fn incr_slot(slot: &mut Option<Vec<u8>>, delta: i64) -> Result<i64, ()> {
-    let cur: i64 = match slot {
-        None => 0,
-        Some(v) => std::str::from_utf8(v).map_err(|_| ())?.parse().map_err(|_| ())?,
-    };
-    let next = cur.checked_add(delta).ok_or(())?;
-    *slot = Some(next.to_string().into_bytes());
-    Ok(next)
+/// Register the store's incremental expiry sweep with every worker's
+/// scheduler maintenance hook: each worker calls
+/// [`AsyncKv::maintenance_tick`] every few scheduler ticks. On the Trust
+/// backend each trustee sweeps **its own shards** through the local
+/// delegation shortcut — expiry reclamation stays synchronization-free;
+/// the lock backends stripe their shards over the workers and sweep
+/// lock-scoped. Called by [`BackendKind::build_with`]; harmless to call
+/// more than once (the sweep is idempotent).
+pub fn install_store_maintenance(rt: &Runtime, kv: &Arc<dyn AsyncKv>) {
+    let workers = rt.workers();
+    for w in 0..workers {
+        let kv = kv.clone();
+        rt.shared().inject(
+            w,
+            Box::new(move || {
+                let mut tick = 0u64;
+                crate::runtime::with_worker(|wk| {
+                    wk.register_maintenance(Box::new(move || {
+                        tick = tick.wrapping_add(1);
+                        kv.maintenance_tick(w, workers, tick) as usize
+                    }));
+                });
+            }),
+        );
+    }
 }
 
-/// Any [`ConcurrentMap`] is an inline-completing [`AsyncKv`].
-pub struct LockedKv<M> {
-    map: M,
+// ---------------------------------------------------------------------
+// Lock baselines
+// ---------------------------------------------------------------------
+
+/// The unified item store behind per-shard locks — the `mutex`,
+/// `rwlock` and `swift` baselines (the latter is the Dashmap-style
+/// fixed-64-shard RwLock layout). See the module docs for why GETs take
+/// the write side.
+pub struct LockedItemKv<L> {
+    shards: Vec<L>,
     name: &'static str,
 }
 
-impl<M: ConcurrentMap<Vec<u8>, Vec<u8>> + 'static> LockedKv<M> {
-    pub fn new(map: M, name: &'static str) -> Self {
-        LockedKv { map, name }
+impl<L: ShardLock> LockedItemKv<L> {
+    /// `n_shards` is rounded up to a power of two (512 for the sharded
+    /// baselines, 64 for the Dashmap-like layout).
+    pub fn new(n_shards: usize, name: &'static str, cfg: &StoreConfig) -> LockedItemKv<L> {
+        let n = n_shards.next_power_of_two().max(1);
+        let budget = cfg.shard_budget(n);
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(L::new(ItemShard::with_budget(cfg.clock.clone(), budget)));
+        }
+        LockedItemKv { shards, name }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard(&self, key: &[u8]) -> &L {
+        &self.shards[(fxhash(key) as usize >> 7) & (self.shards.len() - 1)]
     }
 }
 
-impl<M: ConcurrentMap<Vec<u8>, Vec<u8>> + 'static> AsyncKv for LockedKv<M> {
+impl<L: ShardLock> AsyncKv for LockedItemKv<L> {
     fn get(&self, key: &[u8], cb: GetCb) {
-        // Borrow-based: the callback renders under the shard's read lock,
-        // so the value is copied exactly once, shard → wire buffer, with
-        // no owned intermediate. The callback must not touch the map
-        // (engine completions render into a connection-local spool).
-        self.map.with_get::<[u8], _, _>(key, |v| cb.call(v.map(|v| &v[..])));
+        // The callback renders under the shard lock, so the value is
+        // copied exactly once, shard → wire buffer. Write side: the LRU
+        // bump and lazy expiry are mutations (module docs).
+        self.shard(key).write(|s| cb.call(s.get(key).map(|(_, v)| v)));
     }
 
-    fn put(&self, key: &[u8], val: &[u8], cb: AckCb) {
-        cb.call(self.map.insert(key.to_vec(), val.to_vec()).is_some());
+    fn get_item(&self, key: &[u8], cb: GetItemCb) {
+        self.shard(key).write(|s| cb.call(key, s.get(key)));
+    }
+
+    fn set_item(&self, key: &[u8], val: &[u8], flags: u32, ttl_ms: u64, cb: AckCb) {
+        cb.call(self.shard(key).write(|s| s.set(key, val, flags, ttl_ms)));
     }
 
     fn del(&self, key: &[u8], cb: AckCb) {
-        cb.call(self.map.remove::<[u8]>(key).is_some());
+        cb.call(self.shard(key).write(|s| s.del(key)));
     }
 
     fn exists(&self, key: &[u8], cb: AckCb) {
-        // Presence check without cloning the value out and — on the
-        // RwLock-based baselines — without the write lock a read-modify-
-        // write path would take (EXISTS is read-only and must scale like
-        // the read it is).
-        cb.call(self.map.contains::<[u8]>(key));
+        // True peek: read lock, no LRU bump, no reclamation — EXISTS is
+        // read-only and must scale like the read it is.
+        cb.call(self.shard(key).read(|s| s.peek(key).is_some()));
+    }
+
+    fn touch(&self, key: &[u8], ttl_ms: u64, cb: AckCb) {
+        cb.call(self.shard(key).write(|s| s.touch(key, ttl_ms)));
+    }
+
+    fn persist(&self, key: &[u8], cb: AckCb) {
+        cb.call(self.shard(key).write(|s| s.persist(key)));
+    }
+
+    fn ttl(&self, key: &[u8], cb: TtlCb) {
+        cb.call(self.shard(key).read(|s| s.ttl_ms(key)));
     }
 
     fn incr(&self, key: &[u8], delta: i64, cb: IncrCb) {
-        cb.call(self.map.entry_update(key.to_vec(), &mut |slot| incr_slot(slot, delta)));
+        cb.call(self.shard(key).write(|s| s.incr(key, delta)));
     }
 
     fn flush_all(&self, cb: FlushCb) {
-        self.map.clear();
+        for s in &self.shards {
+            s.write(|s| s.clear());
+        }
         cb.call();
     }
 
     fn len(&self) -> usize {
-        self.map.len()
+        self.shards.iter().map(|s| s.read(|s| s.len())).sum()
+    }
+
+    fn sweep_now(&self, max_slots: usize) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.write(|s| s.sweep(max_slots)))
+            .sum()
+    }
+
+    fn store_stats(&self) -> StoreStats {
+        let mut total = StoreStats::default();
+        for s in &self.shards {
+            let st = s.read(|s| s.stats());
+            total.merge(&st);
+        }
+        total
+    }
+
+    fn maintenance_tick(&self, worker: usize, workers: usize, tick: u64) -> u64 {
+        // Stripe shards over workers, sweep a few per tick round-robin:
+        // bounded, lock-scoped work per quantum.
+        const SHARDS_PER_TICK: u64 = 4;
+        let n = self.shards.len() as u64;
+        let workers = workers.max(1) as u64;
+        let stripe_len = n.div_ceil(workers).max(1);
+        let mut reclaimed = 0;
+        for j in 0..SHARDS_PER_TICK {
+            let pos = (tick.wrapping_mul(SHARDS_PER_TICK) + j) % stripe_len;
+            let idx = worker as u64 + pos * workers;
+            if idx < n {
+                reclaimed += self.shards[idx as usize].write(|s| s.sweep(SWEEP_SLOTS));
+            }
+        }
+        reclaimed
     }
 
     fn name(&self) -> &'static str {
@@ -181,30 +386,43 @@ impl<M: ConcurrentMap<Vec<u8>, Vec<u8>> + 'static> AsyncKv for LockedKv<M> {
     }
 }
 
-/// One shard of the delegated table.
-pub type KvShard = OaTable<Vec<u8>, Vec<u8>>;
+// ---------------------------------------------------------------------
+// Delegated backend (Trust<T>)
+// ---------------------------------------------------------------------
 
-/// The Trust\<T\>-backed store: one entrusted [`KvShard`] per trustee.
+/// The Trust\<T\>-backed store: one entrusted [`ItemShard`] per trustee.
+/// Every cache mutation — table write, LRU stamp, expiry reclamation,
+/// budget eviction — is trustee-local, with zero synchronization.
 pub struct TrustKv {
-    shards: Vec<Trust<KvShard>>,
+    shards: Vec<Trust<ItemShard>>,
 }
 
 impl TrustKv {
-    /// Entrust `n_shards` table shards round-robin over `trustees`.
+    /// Entrust `n_shards` shards round-robin over `trustees` with the
+    /// default (unbudgeted, real-clock) store config.
     pub fn new(rt: &Runtime, trustees: &[usize], n_shards: usize) -> Arc<TrustKv> {
+        Self::with_config(rt, trustees, n_shards, &StoreConfig::default())
+    }
+
+    pub fn with_config(
+        rt: &Runtime,
+        trustees: &[usize],
+        n_shards: usize,
+        cfg: &StoreConfig,
+    ) -> Arc<TrustKv> {
         assert!(!trustees.is_empty());
+        let budget = cfg.shard_budget(n_shards);
         let mut shards = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
-            let w = trustees[s % trustees.len()];
-            let tr = rt.trustee(w);
+            let tr = rt.trustee(trustees[s % trustees.len()]);
             // Entrust from this (non-worker) thread via the injected path.
-            shards.push(entrust_shard(&tr));
+            shards.push(tr.entrust(ItemShard::with_budget(cfg.clock.clone(), budget)));
         }
         Arc::new(TrustKv { shards })
     }
 
     #[inline]
-    fn shard(&self, key: &[u8]) -> &Trust<KvShard> {
+    fn shard(&self, key: &[u8]) -> &Trust<ItemShard> {
         let h = fxhash(key) as usize;
         &self.shards[(h >> 8) % self.shards.len()]
     }
@@ -214,47 +432,62 @@ impl TrustKv {
     }
 }
 
-fn entrust_shard(tr: &TrusteeRef) -> Trust<KvShard> {
-    tr.entrust(OaTable::with_capacity(1024))
-}
-
 impl AsyncKv for TrustKv {
     fn get(&self, key: &[u8], cb: GetCb) {
         // One-copy GET: the key is copied once (caller → delegation
-        // slot), looked up borrowed on the trustee, and the value is
-        // written borrowed into the response stream; `cb` sees it
-        // borrowed from that stream and copies it straight into the wire
-        // buffer. No owned key, no owned value, no per-op allocation.
+        // slot), looked up borrowed on the trustee — LRU bump and lazy
+        // expiry applied right there — and the value is written borrowed
+        // into the response stream; `cb` sees it borrowed from that
+        // stream and copies it straight into the wire buffer.
         self.shard(key).apply_raw_then(
-            |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
-                out.write_opt_bytes(t.get(k).map(|v| &v[..]))
+            |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_opt_bytes(t.get(k).map(|(_, v)| v))
             },
             key,
             move |r| cb.call(read_opt_bytes(r)),
         );
     }
 
-    fn put(&self, key: &[u8], val: &[u8], cb: AckCb) {
+    fn get_item(&self, key: &[u8], cb: GetItemCb) {
+        self.shard(key).apply_raw_then(
+            |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                // Echo the key first (borrowed from the delegation slot →
+                // one copy into the response stream) so the completion can
+                // render `VALUE <key> …` without owning a key.
+                out.write_opt_bytes(Some(k));
+                match t.get(k) {
+                    Some((f, v)) => {
+                        out.write_value(&true);
+                        out.write_value(&f);
+                        out.write_opt_bytes(Some(v));
+                    }
+                    None => out.write_value(&false),
+                }
+            },
+            key,
+            move |r| {
+                let k = read_opt_bytes(r).expect("key echo");
+                if read_response::<bool>(r) {
+                    let f = read_response::<u32>(r);
+                    let v = read_opt_bytes(r).expect("item value");
+                    cb.call(k, Some((f, v)));
+                } else {
+                    cb.call(k, None);
+                }
+            },
+        );
+    }
+
+    fn set_item(&self, key: &[u8], val: &[u8], flags: u32, ttl_ms: u64, cb: AckCb) {
         // Key and value travel as adjacent raw parts (one copy into the
         // slot, no concatenation buffer); the closure re-splits at the
         // captured key length. Overwrites reuse the entry's existing
-        // allocation — steady-state PUT traffic allocates nothing.
+        // allocation — steady-state SET traffic allocates nothing.
         let klen = key.len();
         self.shard(key).apply_raw_parts_then(
-            move |t: &mut KvShard, args: &[u8], out: &mut ResponseWriter| {
+            move |t: &mut ItemShard, args: &[u8], out: &mut ResponseWriter| {
                 let (k, v) = args.split_at(klen);
-                let existed = match t.get_mut(k) {
-                    Some(slot) => {
-                        slot.clear();
-                        slot.extend_from_slice(v);
-                        true
-                    }
-                    None => {
-                        t.insert(k.to_vec(), v.to_vec());
-                        false
-                    }
-                };
-                out.write_value(&existed);
+                out.write_value(&t.set(k, v, flags, ttl_ms));
             },
             &[key, val],
             move |r| cb.call(read_response::<bool>(r)),
@@ -263,8 +496,8 @@ impl AsyncKv for TrustKv {
 
     fn del(&self, key: &[u8], cb: AckCb) {
         self.shard(key).apply_raw_then(
-            |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
-                out.write_value(&t.remove(k).is_some())
+            |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.del(k))
             },
             key,
             move |r| cb.call(read_response::<bool>(r)),
@@ -272,29 +505,54 @@ impl AsyncKv for TrustKv {
     }
 
     fn exists(&self, key: &[u8], cb: AckCb) {
-        // Trustee-local presence check: no value copy travels back.
+        // Trustee-local read-only peek: no value copy travels back, no
+        // LRU bump.
         self.shard(key).apply_raw_then(
-            |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
-                out.write_value(&t.contains_key(k))
+            |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.peek(k).is_some())
             },
             key,
             move |r| cb.call(read_response::<bool>(r)),
         );
     }
 
+    fn touch(&self, key: &[u8], ttl_ms: u64, cb: AckCb) {
+        self.shard(key).apply_raw_then(
+            move |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.touch(k, ttl_ms))
+            },
+            key,
+            move |r| cb.call(read_response::<bool>(r)),
+        );
+    }
+
+    fn persist(&self, key: &[u8], cb: AckCb) {
+        self.shard(key).apply_raw_then(
+            |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.persist(k))
+            },
+            key,
+            move |r| cb.call(read_response::<bool>(r)),
+        );
+    }
+
+    fn ttl(&self, key: &[u8], cb: TtlCb) {
+        self.shard(key).apply_raw_then(
+            |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.ttl_ms(k))
+            },
+            key,
+            move |r| cb.call(read_response::<i64>(r)),
+        );
+    }
+
     fn incr(&self, key: &[u8], delta: i64, cb: IncrCb) {
         // The read-modify-write runs entirely on the owning trustee, so
         // it is atomic per key with zero synchronization (the paper's
-        // core claim applied to a compound operation). INCR rewrites the
-        // stored value, so the re-insert owns fresh bytes by design.
+        // core claim applied to a compound operation).
         self.shard(key).apply_raw_then(
-            move |t: &mut KvShard, k: &[u8], out: &mut ResponseWriter| {
-                let mut slot = t.remove(k);
-                let r = incr_slot(&mut slot, delta);
-                if let Some(v) = slot {
-                    t.insert(k.to_vec(), v);
-                }
-                out.write_value(&r);
+            move |t: &mut ItemShard, k: &[u8], out: &mut ResponseWriter| {
+                out.write_value(&t.incr(k, delta))
             },
             key,
             move |r| cb.call(read_response::<Result<i64, ()>>(r)),
@@ -329,22 +587,56 @@ impl AsyncKv for TrustKv {
         self.shards.iter().map(|s| s.apply(|t| t.len() as u64) as usize).sum()
     }
 
+    fn sweep_now(&self, max_slots: usize) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.apply(move |t| t.sweep(max_slots)))
+            .sum()
+    }
+
+    fn store_stats(&self) -> StoreStats {
+        let mut total = StoreStats::default();
+        for s in &self.shards {
+            let t = s.apply(|t| t.stats().to_tuple());
+            total.merge(&StoreStats::from_tuple(t));
+        }
+        total
+    }
+
+    fn maintenance_tick(&self, worker: usize, _workers: usize, _tick: u64) -> u64 {
+        // Sweep only the shards entrusted to *this* worker, through the
+        // local delegation shortcut: plain single-threaded mutation, no
+        // channel traffic, no locks — expiry stays synchronization-free.
+        let mut reclaimed = 0;
+        for s in &self.shards {
+            if s.trustee_id() == worker {
+                reclaimed += s.apply(|t| t.sweep(SWEEP_SLOTS));
+            }
+        }
+        reclaimed
+    }
+
     fn name(&self) -> &'static str {
         "trust"
     }
 }
 
-/// Backend selector used by the server config and the benches.
+// ---------------------------------------------------------------------
+// Backend selector
+// ---------------------------------------------------------------------
+
+/// Backend selector used by the server configs and the benches.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum BackendKind {
     /// Trust<T>-delegated shards; `shards` tables spread over the
     /// runtime's trustee workers.
     Trust { shards: usize },
-    /// Sharded HashMap + Mutex (512 shards).
+    /// The unified item store behind 512 `Mutex` shards.
     Mutex,
-    /// Sharded HashMap + RwLock (512 shards).
+    /// The unified item store behind 512 `RwLock` shards.
     RwLock,
-    /// SwiftMap (the Dashmap stand-in).
+    /// The unified item store in the Dashmap-like layout (64 `RwLock`
+    /// shards).
     Swift,
 }
 
@@ -374,24 +666,80 @@ impl BackendKind {
         }
     }
 
-    /// Instantiate. `trustees` lists worker ids hosting shards (Trust only).
-    pub fn build(&self, rt: &Runtime, trustees: &[usize]) -> Arc<dyn AsyncKv> {
+    /// Shard count this kind will split a store budget over (lower
+    /// bound for `Trust { shards: 0 }`, which resolves to the trustee
+    /// count at build time).
+    pub fn shard_count(&self) -> usize {
         match self {
+            BackendKind::Trust { shards } => (*shards).max(1),
+            BackendKind::Mutex | BackendKind::RwLock => 512,
+            BackendKind::Swift => 64,
+        }
+    }
+
+    /// Reject a byte budget that is degenerate for this backend's shard
+    /// granularity: the budget splits per shard, and a slice that cannot
+    /// hold even two entries' fixed overhead means every SET evicts its
+    /// own key — the server would answer STORED/+OK while retaining
+    /// nothing. Entry *values* make real entries bigger still, so this
+    /// floor only catches configs that are wrong for every workload.
+    pub fn validate_budget(&self, budget_bytes: u64) -> Result<(), String> {
+        let n = self.shard_count() as u64;
+        let floor = n * 2 * super::store::ITEM_OVERHEAD;
+        if budget_bytes > 0 && budget_bytes < floor {
+            return Err(format!(
+                "budget_bytes {budget_bytes} splits to {} B over {n} {} shards — \
+                 below two entries' fixed overhead ({}B each); every SET would \
+                 immediately evict its own key. Use at least {floor} bytes (or 0 \
+                 for unlimited)",
+                budget_bytes / n,
+                self.label(),
+                super::store::ITEM_OVERHEAD,
+            ));
+        }
+        Ok(())
+    }
+
+    /// Instantiate with the default store config. `trustees` lists
+    /// worker ids hosting shards (Trust only).
+    pub fn build(&self, rt: &Runtime, trustees: &[usize]) -> Arc<dyn AsyncKv> {
+        self.build_with(rt, trustees, &StoreConfig::default())
+    }
+
+    /// Instantiate with an explicit store config (byte budget, clock)
+    /// and register the incremental expiry sweep with the runtime's
+    /// maintenance hook.
+    pub fn build_with(
+        &self,
+        rt: &Runtime,
+        trustees: &[usize],
+        cfg: &StoreConfig,
+    ) -> Arc<dyn AsyncKv> {
+        let kv: Arc<dyn AsyncKv> = match self {
             BackendKind::Trust { shards } => {
                 let n = if *shards == 0 { trustees.len() } else { *shards };
-                TrustKv::new(rt, trustees, n)
+                TrustKv::with_config(rt, trustees, n, cfg)
             }
-            BackendKind::Mutex => Arc::new(LockedKv::new(ShardedMutexMap::new(512), "mutex")),
-            BackendKind::RwLock => Arc::new(LockedKv::new(ShardedRwMap::new(512), "rwlock")),
-            BackendKind::Swift => Arc::new(LockedKv::new(SwiftMap::new(64), "swift")),
-        }
+            BackendKind::Mutex => {
+                Arc::new(LockedItemKv::<Mutex<ItemShard>>::new(512, "mutex", cfg))
+            }
+            BackendKind::RwLock => {
+                Arc::new(LockedItemKv::<RwLock<ItemShard>>::new(512, "rwlock", cfg))
+            }
+            BackendKind::Swift => {
+                Arc::new(LockedItemKv::<RwLock<ItemShard>>::new(64, "swift", cfg))
+            }
+        };
+        install_store_maintenance(rt, &kv);
+        kv
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::kvstore::store::{StoreClock, TTL_MISSING, TTL_NO_EXPIRY};
+    use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
 
     fn exercise_backend(kv: Arc<dyn AsyncKv>, rt: &Runtime) {
         // Run ops from a worker fiber so Trust completions can flow.
@@ -603,17 +951,155 @@ mod tests {
         rt.shutdown();
     }
 
+    fn exercise_item_ops(kv: Arc<dyn AsyncKv>, rt: &Runtime, clock: Arc<StoreClock>) {
+        let kv2 = kv.clone();
+        let worker = rt.workers() - 1;
+        rt.block_on(worker, move || {
+            let steps = Arc::new(AtomicUsize::new(0));
+            // set_item with flags + TTL; get_item echoes key and flags.
+            let s = steps.clone();
+            kv2.set_item(
+                b"it",
+                b"payload",
+                42,
+                500,
+                AckCb::new(move |existed| {
+                    assert!(!existed);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 1 {
+                crate::fiber::yield_now();
+            }
+            let s = steps.clone();
+            kv2.get_item(
+                b"it",
+                GetItemCb::new(move |k: &[u8], item: Option<(u32, &[u8])>| {
+                    assert_eq!(k, b"it", "key must be echoed");
+                    let (flags, v) = item.expect("live item");
+                    assert_eq!(flags, 42);
+                    assert_eq!(v, b"payload");
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 2 {
+                crate::fiber::yield_now();
+            }
+            // TTL is visible, EXPIRE-style touch resets it, PERSIST
+            // clears it.
+            let remaining = Arc::new(AtomicI64::new(0));
+            let s = steps.clone();
+            let r2 = remaining.clone();
+            kv2.ttl(
+                b"it",
+                TtlCb::new(move |ms| {
+                    r2.store(ms, Ordering::Relaxed);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 3 {
+                crate::fiber::yield_now();
+            }
+            let ms = remaining.load(Ordering::Relaxed);
+            assert!((1..=500).contains(&ms), "remaining ttl {ms}");
+            let s = steps.clone();
+            kv2.touch(
+                b"it",
+                10_000,
+                AckCb::new(move |live| {
+                    assert!(live);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            let s = steps.clone();
+            kv2.persist(
+                b"it",
+                AckCb::new(move |had_ttl| {
+                    assert!(had_ttl);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            let s = steps.clone();
+            kv2.ttl(
+                b"it",
+                TtlCb::new(move |ms| {
+                    assert_eq!(ms, TTL_NO_EXPIRY);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 6 {
+                crate::fiber::yield_now();
+            }
+            // Expire it for real (manual clock) and observe the miss.
+            let s = steps.clone();
+            kv2.touch(
+                b"it",
+                100,
+                AckCb::new(move |live| {
+                    assert!(live);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 7 {
+                crate::fiber::yield_now();
+            }
+            clock.advance(100);
+            let s = steps.clone();
+            kv2.get_item(
+                b"it",
+                GetItemCb::new(move |k: &[u8], item: Option<(u32, &[u8])>| {
+                    assert_eq!(k, b"it");
+                    assert!(item.is_none(), "expired item must miss");
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            let s = steps.clone();
+            kv2.ttl(
+                b"it",
+                TtlCb::new(move |ms| {
+                    assert_eq!(ms, TTL_MISSING);
+                    s.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            while steps.load(Ordering::Relaxed) != 9 {
+                crate::fiber::yield_now();
+            }
+        });
+        let stats = kv.store_stats();
+        assert_eq!(stats.items, 0, "lazy expiry reclaimed on access");
+        assert_eq!(stats.expired_keys, 1);
+        assert_eq!(stats.store_bytes, 0);
+    }
+
     #[test]
-    fn default_exists_works_through_borrowed_get() {
-        // A backend that does not override exists still answers presence
-        // through the borrowed GetCb default (no value copy involved).
-        struct GetOnly(LockedKv<SwiftMap<Vec<u8>, Vec<u8>>>);
+    fn item_ops_across_all_backends() {
+        for kind in [
+            BackendKind::Trust { shards: 2 },
+            BackendKind::Mutex,
+            BackendKind::RwLock,
+            BackendKind::Swift,
+        ] {
+            let rt = Runtime::builder().workers(2).build();
+            let clock = StoreClock::manual();
+            let cfg = StoreConfig { budget_bytes: 0, clock: clock.clone() };
+            let kv = kind.build_with(&rt, &[0], &cfg);
+            exercise_item_ops(kv, &rt, clock);
+            rt.shutdown();
+        }
+    }
+
+    #[test]
+    fn default_item_ops_work_through_plain_get() {
+        // A backend that only implements the plain ops still answers the
+        // item-aware entry points through the defaults (flags lost, TTLs
+        // unsupported).
+        struct GetOnly(LockedItemKv<Mutex<ItemShard>>);
         impl AsyncKv for GetOnly {
             fn get(&self, key: &[u8], cb: GetCb) {
                 self.0.get(key, cb)
             }
-            fn put(&self, key: &[u8], val: &[u8], cb: AckCb) {
-                self.0.put(key, val, cb)
+            fn set_item(&self, key: &[u8], val: &[u8], _f: u32, _ttl: u64, cb: AckCb) {
+                self.0.set_item(key, val, 0, 0, cb)
             }
             fn del(&self, key: &[u8], cb: AckCb) {
                 self.0.del(key, cb)
@@ -631,15 +1117,43 @@ mod tests {
                 "get-only"
             }
         }
-        let kv = GetOnly(LockedKv::new(SwiftMap::new(4), "inner"));
+        let kv = GetOnly(LockedItemKv::new(4, "inner", &StoreConfig::default()));
         kv.put(b"k", b"v", AckCb::new(|_| {}));
-        let hit = std::rc::Rc::new(Cell::new(false));
+        let hit = Rc::new(Cell::new(false));
         let h = hit.clone();
         kv.exists(b"k", AckCb::new(move |e| h.set(e)));
         assert!(hit.get());
         let h = hit.clone();
         kv.exists(b"missing", AckCb::new(move |e| h.set(e)));
         assert!(!hit.get());
+        // Default get_item echoes the key and reports flags 0.
+        let seen = Rc::new(Cell::new(false));
+        let s = seen.clone();
+        kv.get_item(
+            b"k",
+            GetItemCb::new(move |k: &[u8], item: Option<(u32, &[u8])>| {
+                assert_eq!(k, b"k");
+                assert_eq!(item, Some((0, &b"v"[..])));
+                s.set(true);
+            }),
+        );
+        assert!(seen.get());
+        // Default TTL: live keys report no expiry, missing report missing.
+        let ttl = Rc::new(Cell::new(0i64));
+        let t = ttl.clone();
+        kv.ttl(b"k", TtlCb::new(move |ms| t.set(ms)));
+        assert_eq!(ttl.get(), TTL_NO_EXPIRY);
+        let t = ttl.clone();
+        kv.ttl(b"missing", TtlCb::new(move |ms| t.set(ms)));
+        assert_eq!(ttl.get(), TTL_MISSING);
+        // Default touch/persist: unsupported, false.
+        let ack = Rc::new(Cell::new(true));
+        let a = ack.clone();
+        kv.touch(b"k", 100, AckCb::new(move |r| a.set(r)));
+        assert!(!ack.get());
+        let a = ack.clone();
+        kv.persist(b"k", AckCb::new(move |r| a.set(r)));
+        assert!(!ack.get());
     }
 
     #[test]
@@ -651,8 +1165,10 @@ mod tests {
         // stores it inline. If a field is added to the generated structs,
         // this test catches the silent heap fallback it would cause.
         assert_eq!(std::mem::size_of::<GetCb>(), 64);
+        assert_eq!(std::mem::size_of::<GetItemCb>(), 64);
         assert_eq!(std::mem::size_of::<AckCb>(), 64);
         assert_eq!(std::mem::size_of::<IncrCb>(), 64);
+        assert_eq!(std::mem::size_of::<TtlCb>(), 64);
         assert!(std::mem::size_of::<GetCb>() <= COMPLETION_INLINE_BYTES);
         let cb = GetCb::new(|_: Option<&[u8]>| {});
         assert!(!cb.was_boxed());
@@ -664,20 +1180,29 @@ mod tests {
             "a completion capturing one backend callback must store inline"
         );
         drop(c);
+        // Same for the item-aware GET (the mcd hot path).
+        let icb = GetItemCb::new(|_: &[u8], _: Option<(u32, &[u8])>| {});
+        assert!(!icb.was_boxed());
+        let c = Completion::new(move |r: &mut crate::codec::WireReader<'_>| {
+            let k = read_opt_bytes(r).unwrap();
+            icb.call(k, None);
+        });
+        assert!(!c.was_boxed());
+        drop(c);
     }
 
     #[test]
-    fn incr_slot_semantics() {
-        let mut slot = None;
-        assert_eq!(incr_slot(&mut slot, 1), Ok(1));
-        assert_eq!(slot.as_deref(), Some(&b"1"[..]));
-        assert_eq!(incr_slot(&mut slot, 41), Ok(42));
-        assert_eq!(slot.as_deref(), Some(&b"42"[..]));
-        let mut bad = Some(b"xyz".to_vec());
-        assert_eq!(incr_slot(&mut bad, 1), Err(()));
-        assert_eq!(bad.as_deref(), Some(&b"xyz"[..]), "error leaves slot untouched");
-        let mut max = Some(i64::MAX.to_string().into_bytes());
-        assert_eq!(incr_slot(&mut max, 1), Err(()), "overflow is an error");
+    fn degenerate_budgets_are_rejected_per_shard_granularity() {
+        // 10 KB over 512 Mutex shards is < 2 entries' overhead per
+        // shard: every SET would self-evict. The same budget over one
+        // Trust shard is fine, and 0 always means unlimited.
+        assert!(BackendKind::Mutex.validate_budget(10_000).is_err());
+        assert!(BackendKind::RwLock.validate_budget(10_000).is_err());
+        assert!(BackendKind::Swift.validate_budget(2_000).is_err());
+        assert!(BackendKind::Mutex.validate_budget(0).is_ok());
+        assert!(BackendKind::Mutex.validate_budget(1 << 20).is_ok());
+        assert!(BackendKind::Trust { shards: 1 }.validate_budget(10_000).is_ok());
+        assert!(BackendKind::Trust { shards: 256 }.validate_budget(10_000).is_err());
     }
 
     #[test]
@@ -687,5 +1212,50 @@ mod tests {
         assert_eq!(BackendKind::from_spec("swift"), BackendKind::Swift);
         assert_eq!(BackendKind::from_spec("trust:16"), BackendKind::Trust { shards: 16 });
         assert_eq!(BackendKind::from_spec("trust"), BackendKind::Trust { shards: 0 });
+    }
+
+    #[test]
+    fn maintenance_sweep_reclaims_without_access() {
+        // Items with a short real TTL must disappear via the runtime's
+        // maintenance hook alone — nobody touches the keys after the
+        // writes, so only the incremental trustee-side sweep can reclaim
+        // them.
+        let rt = Runtime::builder().workers(2).build();
+        let kv = BackendKind::Trust { shards: 2 }.build(&rt, &[0]);
+        let kv2 = kv.clone();
+        rt.block_on(1, move || {
+            let done = Arc::new(AtomicUsize::new(0));
+            for i in 0..64u64 {
+                let d = done.clone();
+                kv2.set_item(
+                    &format!("s{i}").into_bytes(),
+                    b"v",
+                    0,
+                    40, // 40 ms
+                    AckCb::new(move |_| {
+                        d.fetch_add(1, Ordering::Relaxed);
+                    }),
+                );
+            }
+            while done.load(Ordering::Relaxed) != 64 {
+                crate::fiber::yield_now();
+            }
+        });
+        assert_eq!(kv.store_stats().items, 64);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            let stats = kv.store_stats();
+            if stats.items == 0 {
+                assert_eq!(stats.expired_keys, 64);
+                assert_eq!(stats.store_bytes, 0);
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "sweep never reclaimed: {stats:?}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        rt.shutdown();
     }
 }

@@ -13,12 +13,14 @@ pub mod backend;
 pub mod client;
 pub mod proto;
 pub mod server;
+pub mod store;
 
 /// The socket helpers moved into the protocol-agnostic server core; this
 /// re-export keeps the historical `kvstore::netfiber` path working.
 pub use crate::server::netfiber;
 
-pub use backend::{AsyncKv, BackendKind, TrustKv};
+pub use backend::{install_store_maintenance, AsyncKv, BackendKind, LockedItemKv, TrustKv};
 pub use client::{key_bytes, run_load, LoadConfig, LoadStats};
 pub use netfiber::NetPolicy;
 pub use server::{KvProtocol, KvServer, KvServerConfig};
+pub use store::{ItemShard, StoreClock, StoreConfig, StoreStats};

@@ -213,6 +213,11 @@ impl KvServer {
         self.core.hot_path_stats()
     }
 
+    /// Item-store counters (items, bytes, evictions, expirations).
+    pub fn store_stats(&self) -> crate::kvstore::store::StoreStats {
+        self.backend.store_stats()
+    }
+
     /// Pre-fill the table with `n` keys ("Prior to each run, we pre-fill
     /// the table"). Key format matches the load generator's.
     pub fn prefill(&self, n: u64, val_len: usize) {

@@ -1,0 +1,800 @@
+//! The unified item store: one shard type with real cache semantics —
+//! item metadata (flags, expiry deadline, recency stamp), a per-shard
+//! byte budget with LRU eviction, lazy-on-access expiry, and an
+//! incremental expiry sweep — shared by **all four** KV backends.
+//!
+//! This is the storage half of the paper's memcached argument (§7):
+//! "memory allocation, LRU updates as well as table writes, all of which
+//! involve synchronization in a lock-based design" become trustee-local
+//! when a shard is entrusted. [`ItemShard`] keeps every auxiliary
+//! structure (recency clock, byte accounting, expiry bookkeeping) *next
+//! to* the table it describes, so:
+//!
+//! - on the Trust backend each shard lives on its owning trustee and all
+//!   of this is plain single-threaded mutation — zero synchronization,
+//!   zero atomics;
+//! - on the `mutex`/`rwlock`/`swift` baselines the same shard sits
+//!   behind a lock, and every GET now pays the write-side lock for its
+//!   LRU bump and lazy expiry — exactly the synchronization profile the
+//!   paper ascribes to stock memcached.
+//!
+//! Recency is a **shard-local clock** (`access` counter stamped onto
+//! items), not an intrusive list: the open-addressing table relocates
+//! entries on insert/remove (robin hood + backward shift), so stable
+//! links would need a separate slab. Eviction scans for the minimum
+//! stamp — O(capacity) per victim, paid only when over budget (the E18
+//! bench records that cost). Expiry is enforced three ways, all
+//! deterministic: lazily on access (a hit on an expired item reclaims it
+//! and reports a miss), on overwrite, and by [`ItemShard::sweep`] — a
+//! cursor-carrying incremental scan driven from the runtime's
+//! maintenance hook with bounded work per call.
+
+use crate::cmap::OaTable;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Fixed per-entry accounting overhead (table slot + Item header +
+/// allocator slack), charged against the shard budget alongside the key
+/// and value bytes.
+pub const ITEM_OVERHEAD: u64 = 64;
+
+/// Table slots one [`ItemShard::sweep`] call examines — the bounded work
+/// quantum of the incremental expiry sweep.
+pub const SWEEP_SLOTS: usize = 64;
+
+/// `ttl_ms` query result: the key does not exist (or is expired).
+pub const TTL_MISSING: i64 = -2;
+/// `ttl_ms` query result: the key exists but carries no expiry.
+pub const TTL_NO_EXPIRY: i64 = -1;
+
+// ---------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------
+
+/// The store's time source, in milliseconds. Real stores measure elapsed
+/// time from creation; tests freeze time with [`StoreClock::manual`] and
+/// drive it with [`StoreClock::advance`] so expiry and eviction runs are
+/// fully deterministic across backends.
+pub struct StoreClock {
+    epoch: Instant,
+    /// `u64::MAX` = real (epoch-elapsed) time; anything else is the
+    /// manual clock's current reading.
+    manual: AtomicU64,
+}
+
+const REAL_CLOCK: u64 = u64::MAX;
+
+impl StoreClock {
+    /// Wall-clock store time (milliseconds since store creation).
+    pub fn real() -> Arc<StoreClock> {
+        Arc::new(StoreClock { epoch: Instant::now(), manual: AtomicU64::new(REAL_CLOCK) })
+    }
+
+    /// A frozen, manually-advanced clock (starts at 1 ms so `now + ttl`
+    /// can never collide with the "no expiry" sentinel 0).
+    pub fn manual() -> Arc<StoreClock> {
+        Arc::new(StoreClock { epoch: Instant::now(), manual: AtomicU64::new(1) })
+    }
+
+    #[inline]
+    pub fn now_ms(&self) -> u64 {
+        let m = self.manual.load(Ordering::Relaxed);
+        if m == REAL_CLOCK {
+            self.epoch.elapsed().as_millis() as u64
+        } else {
+            m
+        }
+    }
+
+    /// Advance a manual clock. Panics on a real clock.
+    pub fn advance(&self, ms: u64) {
+        let prev = self.manual.fetch_add(ms, Ordering::Relaxed);
+        assert_ne!(prev, REAL_CLOCK, "StoreClock::advance on a real clock");
+    }
+
+    pub fn is_manual(&self) -> bool {
+        self.manual.load(Ordering::Relaxed) != REAL_CLOCK
+    }
+}
+
+// ---------------------------------------------------------------------
+// Config + stats
+// ---------------------------------------------------------------------
+
+/// Store-wide knobs shared by every backend flavor.
+#[derive(Clone)]
+pub struct StoreConfig {
+    /// Total byte budget for the store (key + value + [`ITEM_OVERHEAD`]
+    /// per entry); 0 = unlimited. Backends split it evenly over their
+    /// shards ([`StoreConfig::shard_budget`]); a shard exceeding its
+    /// slice evicts least-recently-used items until back under.
+    pub budget_bytes: u64,
+    /// Time source (shared by every shard of the store).
+    pub clock: Arc<StoreClock>,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { budget_bytes: 0, clock: StoreClock::real() }
+    }
+}
+
+impl StoreConfig {
+    pub fn with_budget(budget_bytes: u64) -> StoreConfig {
+        StoreConfig { budget_bytes, ..Default::default() }
+    }
+
+    /// This store's per-shard budget when split over `n_shards` (0 stays
+    /// unlimited; a nonzero budget never rounds down to unlimited).
+    pub fn shard_budget(&self, n_shards: usize) -> u64 {
+        if self.budget_bytes == 0 {
+            0
+        } else {
+            (self.budget_bytes / n_shards.max(1) as u64).max(1)
+        }
+    }
+}
+
+/// Aggregated store counters (per shard, summed by the backends).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Live entries (expired-but-unswept entries still count until
+    /// reclaimed — they occupy memory).
+    pub items: u64,
+    /// Bytes charged against shard budgets.
+    pub store_bytes: u64,
+    /// Entries reclaimed to enforce a byte budget.
+    pub evictions: u64,
+    /// Entries reclaimed because their deadline passed (lazily on
+    /// access/overwrite, or by the sweep).
+    pub expired_keys: u64,
+}
+
+impl StoreStats {
+    pub fn merge(&mut self, other: &StoreStats) {
+        self.items += other.items;
+        self.store_bytes += other.store_bytes;
+        self.evictions += other.evictions;
+        self.expired_keys += other.expired_keys;
+    }
+
+    /// Wire-friendly tuple (for delegated stat reads).
+    pub fn to_tuple(self) -> (u64, u64, u64, u64) {
+        (self.items, self.store_bytes, self.evictions, self.expired_keys)
+    }
+
+    pub fn from_tuple(t: (u64, u64, u64, u64)) -> StoreStats {
+        StoreStats { items: t.0, store_bytes: t.1, evictions: t.2, expired_keys: t.3 }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Item + shard
+// ---------------------------------------------------------------------
+
+/// One stored item: value bytes plus the metadata the cache semantics
+/// need. Everything is plain data mutated under the shard's exclusive
+/// access (trustee-local or lock-scoped) — no atomics.
+#[derive(Debug)]
+pub struct Item {
+    pub flags: u32,
+    /// Absolute deadline on the store clock (ms); 0 = never expires.
+    expires_at_ms: u64,
+    /// Recency stamp from the shard's access counter (higher = more
+    /// recently used).
+    stamp: u64,
+    pub data: Vec<u8>,
+}
+
+impl Item {
+    #[inline]
+    fn is_expired(&self, now_ms: u64) -> bool {
+        self.expires_at_ms != 0 && self.expires_at_ms <= now_ms
+    }
+}
+
+/// One shard of the unified item store. All mutating entry points take
+/// `&mut self`: the Trust backend entrusts a shard per trustee (plain
+/// single-threaded mutation), the lock backends wrap one per lock shard.
+pub struct ItemShard {
+    table: OaTable<Vec<u8>, Item>,
+    clock: Arc<StoreClock>,
+    /// Byte budget (0 = unlimited).
+    budget: u64,
+    /// Shard-local access clock for LRU stamps.
+    access: u64,
+    bytes: u64,
+    evictions: u64,
+    expired: u64,
+    sweep_cursor: usize,
+}
+
+impl ItemShard {
+    /// A single shard carrying the whole config budget (single-shard
+    /// stores and tests); multi-shard backends use
+    /// [`ItemShard::with_budget`] with their [`StoreConfig::shard_budget`]
+    /// slice.
+    pub fn new(cfg: &StoreConfig) -> ItemShard {
+        Self::with_budget(cfg.clock.clone(), cfg.budget_bytes)
+    }
+
+    pub fn with_budget(clock: Arc<StoreClock>, budget: u64) -> ItemShard {
+        ItemShard {
+            table: OaTable::with_capacity(1024),
+            clock,
+            budget,
+            access: 0,
+            bytes: 0,
+            evictions: 0,
+            expired: 0,
+            sweep_cursor: 0,
+        }
+    }
+
+    #[inline]
+    fn now(&self) -> u64 {
+        self.clock.now_ms()
+    }
+
+    #[inline]
+    fn entry_cost(key_len: usize, val_len: usize) -> u64 {
+        key_len as u64 + val_len as u64 + ITEM_OVERHEAD
+    }
+
+    /// Remove the entry in slot `idx` and release its budget charge.
+    /// Callers account the *reason* (eviction / expiry / delete).
+    fn remove_entry(&mut self, idx: usize) -> Option<(Vec<u8>, Item)> {
+        let (k, it) = self.table.remove_at(idx)?;
+        self.bytes = self
+            .bytes
+            .saturating_sub(Self::entry_cost(k.len(), it.data.len()));
+        Some((k, it))
+    }
+
+    /// Lookup with full cache semantics: bump the LRU stamp on a hit;
+    /// reclaim (and miss) on a lazily-discovered expired entry.
+    pub fn get(&mut self, key: &[u8]) -> Option<(u32, &[u8])> {
+        let now = self.now();
+        let idx = self.table.index_of(key)?;
+        if self.table.entry_at(idx).unwrap().1.is_expired(now) {
+            self.remove_entry(idx);
+            self.expired += 1;
+            return None;
+        }
+        self.access += 1;
+        let stamp = self.access;
+        let (_, it) = self.table.entry_at_mut(idx).unwrap();
+        it.stamp = stamp;
+        Some((it.flags, &*it.data))
+    }
+
+    /// Read-only probe: no LRU bump, no reclamation (EXISTS / TTL — the
+    /// read-scaling path on the RwLock baselines). Expired entries are
+    /// invisible but stay until a mutating access or the sweep reclaims
+    /// them.
+    pub fn peek(&self, key: &[u8]) -> Option<(u32, &[u8])> {
+        let now = self.now();
+        let it = self.table.get(key)?;
+        if it.is_expired(now) {
+            return None;
+        }
+        Some((it.flags, &*it.data))
+    }
+
+    /// Store `key = val` with `flags` and a relative TTL (`0` = no
+    /// expiry, which also *clears* any previous deadline — memcached
+    /// `exptime 0` / Redis plain `SET`). Returns whether a live entry
+    /// was overwritten. Overwrites reuse the entry's allocation in
+    /// place; going over budget evicts LRU victims before returning.
+    pub fn set(&mut self, key: &[u8], val: &[u8], flags: u32, ttl_ms: u64) -> bool {
+        let now = self.now();
+        // Saturating: a hostile wire-supplied TTL must not wrap past the
+        // 0 = never sentinel (or panic a trustee in debug builds).
+        let expires = if ttl_ms == 0 { 0 } else { now.saturating_add(ttl_ms) };
+        self.access += 1;
+        let stamp = self.access;
+        let existed = match self.table.index_of(key) {
+            Some(idx) => {
+                let was_expired = self.table.entry_at(idx).unwrap().1.is_expired(now);
+                if was_expired {
+                    // The old value died of expiry, not replacement.
+                    self.expired += 1;
+                }
+                let old_len;
+                {
+                    let (_, it) = self.table.entry_at_mut(idx).unwrap();
+                    old_len = it.data.len();
+                    it.data.clear();
+                    it.data.extend_from_slice(val);
+                    it.flags = flags;
+                    it.expires_at_ms = expires;
+                    it.stamp = stamp;
+                }
+                self.bytes = self.bytes - old_len as u64 + val.len() as u64;
+                !was_expired
+            }
+            None => {
+                self.bytes += Self::entry_cost(key.len(), val.len());
+                self.table.insert(
+                    key.to_vec(),
+                    Item { flags, expires_at_ms: expires, stamp, data: val.to_vec() },
+                );
+                false
+            }
+        };
+        self.evict_to_budget(now);
+        existed
+    }
+
+    /// Remove `key`; true only when a *live* entry was removed (an
+    /// expired one is reclaimed but reported missing, like a GET).
+    pub fn del(&mut self, key: &[u8]) -> bool {
+        let now = self.now();
+        let Some(idx) = self.table.index_of(key) else {
+            return false;
+        };
+        let was_expired = self.table.entry_at(idx).unwrap().1.is_expired(now);
+        self.remove_entry(idx);
+        if was_expired {
+            self.expired += 1;
+            false
+        } else {
+            true
+        }
+    }
+
+    /// Reset the deadline of a live entry (`ttl_ms` 0 clears it —
+    /// memcached `touch 0`). True when the key was live.
+    pub fn touch(&mut self, key: &[u8], ttl_ms: u64) -> bool {
+        let now = self.now();
+        let Some(idx) = self.table.index_of(key) else {
+            return false;
+        };
+        if self.table.entry_at(idx).unwrap().1.is_expired(now) {
+            self.remove_entry(idx);
+            self.expired += 1;
+            return false;
+        }
+        self.access += 1;
+        let stamp = self.access;
+        let (_, it) = self.table.entry_at_mut(idx).unwrap();
+        it.expires_at_ms = if ttl_ms == 0 { 0 } else { now.saturating_add(ttl_ms) };
+        it.stamp = stamp;
+        true
+    }
+
+    /// Clear the deadline of a live entry (Redis `PERSIST`): true only
+    /// when the entry existed *and* had a deadline to clear.
+    pub fn persist(&mut self, key: &[u8]) -> bool {
+        let now = self.now();
+        let Some(idx) = self.table.index_of(key) else {
+            return false;
+        };
+        if self.table.entry_at(idx).unwrap().1.is_expired(now) {
+            self.remove_entry(idx);
+            self.expired += 1;
+            return false;
+        }
+        let (_, it) = self.table.entry_at_mut(idx).unwrap();
+        let had = it.expires_at_ms != 0;
+        it.expires_at_ms = 0;
+        had
+    }
+
+    /// Remaining lifetime in ms: [`TTL_MISSING`] (missing or expired),
+    /// [`TTL_NO_EXPIRY`], or the remaining ms (> 0). Read-only.
+    pub fn ttl_ms(&self, key: &[u8]) -> i64 {
+        let now = self.now();
+        match self.table.get(key) {
+            None => TTL_MISSING,
+            Some(it) if it.is_expired(now) => TTL_MISSING,
+            Some(it) if it.expires_at_ms == 0 => TTL_NO_EXPIRY,
+            // Clamp: an absurd-but-accepted deadline must not wrap into
+            // the negative range (where the sentinels live).
+            Some(it) => (it.expires_at_ms - now).min(i64::MAX as u64) as i64,
+        }
+    }
+
+    /// Redis `INCR` semantics on the item's value: missing (or expired)
+    /// counts as 0, a non-integer value or overflow is an error leaving
+    /// the entry untouched. Preserves flags and deadline on success.
+    pub fn incr(&mut self, key: &[u8], delta: i64) -> Result<i64, ()> {
+        use std::io::Write;
+        let now = self.now();
+        self.access += 1;
+        let stamp = self.access;
+        let live_idx = match self.table.index_of(key) {
+            Some(idx) if self.table.entry_at(idx).unwrap().1.is_expired(now) => {
+                self.remove_entry(idx);
+                self.expired += 1;
+                None
+            }
+            other => other,
+        };
+        let next = match live_idx {
+            Some(idx) => {
+                let (_, it) = self.table.entry_at_mut(idx).unwrap();
+                let cur: i64 = std::str::from_utf8(&it.data)
+                    .map_err(|_| ())?
+                    .parse()
+                    .map_err(|_| ())?;
+                let next = cur.checked_add(delta).ok_or(())?;
+                let old_len = it.data.len();
+                it.data.clear();
+                write!(it.data, "{next}").expect("write into Vec");
+                it.stamp = stamp;
+                let new_len = it.data.len();
+                self.bytes = self.bytes - old_len as u64 + new_len as u64;
+                next
+            }
+            None => {
+                let data = delta.to_string().into_bytes();
+                self.bytes += Self::entry_cost(key.len(), data.len());
+                self.table.insert(
+                    key.to_vec(),
+                    Item { flags: 0, expires_at_ms: 0, stamp, data },
+                );
+                delta
+            }
+        };
+        self.evict_to_budget(now);
+        Ok(next)
+    }
+
+    /// Enforce the byte budget: reclaim expired entries first, then
+    /// least-recently-stamped live ones, until back under. The scan is
+    /// O(capacity) per victim — eviction is the deliberate slow path
+    /// (EXPERIMENTS.md E18 records its cost under memory pressure).
+    fn evict_to_budget(&mut self, now: u64) {
+        if self.budget == 0 {
+            return;
+        }
+        while self.bytes > self.budget && !self.table.is_empty() {
+            let mut victim: Option<(usize, bool, u64)> = None; // (slot, expired, stamp)
+            for idx in 0..self.table.capacity() {
+                if let Some((_, it)) = self.table.entry_at(idx) {
+                    let expired = it.is_expired(now);
+                    let better = match victim {
+                        None => true,
+                        Some((_, v_expired, v_stamp)) => {
+                            (expired && !v_expired)
+                                || (expired == v_expired && it.stamp < v_stamp)
+                        }
+                    };
+                    if better {
+                        victim = Some((idx, expired, it.stamp));
+                    }
+                }
+            }
+            let Some((idx, expired, _)) = victim else { break };
+            self.remove_entry(idx);
+            if expired {
+                self.expired += 1;
+            } else {
+                self.evictions += 1;
+            }
+        }
+    }
+
+    /// Incremental expiry sweep: advance the shard's cursor over up to
+    /// `max_slots` table slots, reclaiming expired entries along the
+    /// way. Bounded work per call — the runtime maintenance hook calls
+    /// this every few scheduler ticks so unaccessed items still get
+    /// reclaimed. Removals re-examine their slot (backward shift may
+    /// pull a successor in) and do **not** consume the advance budget,
+    /// so `sweep(capacity())` is always one full pass over the table,
+    /// however many entries it reclaims. Returns entries reclaimed.
+    pub fn sweep(&mut self, max_slots: usize) -> u64 {
+        if self.table.is_empty() {
+            return 0;
+        }
+        let now = self.now();
+        let cap = self.table.capacity();
+        if self.sweep_cursor >= cap {
+            self.sweep_cursor = 0;
+        }
+        let mut reclaimed = 0u64;
+        let mut advanced = 0usize;
+        while advanced < max_slots.min(cap) {
+            let idx = self.sweep_cursor;
+            let expired = matches!(
+                self.table.entry_at(idx),
+                Some((_, it)) if it.is_expired(now)
+            );
+            if expired {
+                self.remove_entry(idx);
+                self.expired += 1;
+                reclaimed += 1;
+                // Backward-shift deletion may have pulled a successor
+                // into this slot: re-examine it before advancing.
+            } else {
+                self.sweep_cursor = (idx + 1) % cap;
+                advanced += 1;
+            }
+        }
+        reclaimed
+    }
+
+    pub fn clear(&mut self) {
+        self.table.clear();
+        self.bytes = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.len() == 0
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            items: self.table.len() as u64,
+            store_bytes: self.bytes,
+            evictions: self.evictions,
+            expired_keys: self.expired,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lock adapters (the baselines' shard wrapper)
+// ---------------------------------------------------------------------
+
+/// The lock discipline a baseline wraps around each [`ItemShard`]. GETs
+/// go through [`ShardLock::write`]: the LRU bump and lazy expiry are
+/// mutations, so even the readers-writer baselines pay the exclusive
+/// lock on the read path — the synchronization the paper's delegated
+/// design removes. Only genuinely read-only probes (EXISTS, TTL) use
+/// [`ShardLock::read`].
+pub trait ShardLock: Send + Sync + 'static {
+    fn new(shard: ItemShard) -> Self;
+    fn write<R>(&self, f: impl FnOnce(&mut ItemShard) -> R) -> R;
+    fn read<R>(&self, f: impl FnOnce(&ItemShard) -> R) -> R;
+}
+
+impl ShardLock for Mutex<ItemShard> {
+    fn new(shard: ItemShard) -> Self {
+        Mutex::new(shard)
+    }
+
+    fn write<R>(&self, f: impl FnOnce(&mut ItemShard) -> R) -> R {
+        f(&mut self.lock().unwrap())
+    }
+
+    fn read<R>(&self, f: impl FnOnce(&ItemShard) -> R) -> R {
+        f(&self.lock().unwrap())
+    }
+}
+
+impl ShardLock for RwLock<ItemShard> {
+    fn new(shard: ItemShard) -> Self {
+        RwLock::new(shard)
+    }
+
+    fn write<R>(&self, f: impl FnOnce(&mut ItemShard) -> R) -> R {
+        f(&mut self.write().unwrap())
+    }
+
+    fn read<R>(&self, f: impl FnOnce(&ItemShard) -> R) -> R {
+        f(&self.read().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manual_shard(budget: u64) -> (ItemShard, Arc<StoreClock>) {
+        let clock = StoreClock::manual();
+        let cfg = StoreConfig { budget_bytes: budget, clock: clock.clone() };
+        (ItemShard::new(&cfg), clock)
+    }
+
+    #[test]
+    fn set_get_del_roundtrip_with_flags() {
+        let (mut s, _clock) = manual_shard(0);
+        assert!(!s.set(b"k", b"hello", 7, 0));
+        assert_eq!(s.get(b"k"), Some((7, &b"hello"[..])));
+        assert!(s.set(b"k", b"world!", 9, 0), "overwrite reports existed");
+        assert_eq!(s.get(b"k"), Some((9, &b"world!"[..])));
+        assert!(s.del(b"k"));
+        assert_eq!(s.get(b"k"), None);
+        assert!(!s.del(b"k"));
+        assert_eq!(s.stats().items, 0);
+        assert_eq!(s.stats().store_bytes, 0, "bytes must return to zero");
+    }
+
+    #[test]
+    fn lazy_expiry_on_access() {
+        let (mut s, clock) = manual_shard(0);
+        s.set(b"k", b"v", 0, 500);
+        assert_eq!(s.get(b"k"), Some((0, &b"v"[..])));
+        clock.advance(499);
+        assert!(s.get(b"k").is_some(), "1 ms before the deadline");
+        clock.advance(1);
+        assert_eq!(s.get(b"k"), None, "deadline reached");
+        assert_eq!(s.stats().expired_keys, 1);
+        assert_eq!(s.stats().items, 0, "lazy access reclaims");
+        assert_eq!(s.stats().store_bytes, 0);
+    }
+
+    #[test]
+    fn peek_is_read_only() {
+        let (mut s, clock) = manual_shard(0);
+        s.set(b"k", b"v", 3, 100);
+        assert_eq!(s.peek(b"k"), Some((3, &b"v"[..])));
+        clock.advance(100);
+        assert_eq!(s.peek(b"k"), None, "expired entries are invisible");
+        assert_eq!(s.stats().items, 1, "peek must not reclaim");
+        assert_eq!(s.sweep(SWEEP_SLOTS.max(2048)), 1, "sweep reclaims it");
+        assert_eq!(s.stats().items, 0);
+    }
+
+    #[test]
+    fn overwrite_of_expired_entry_counts_expiry_not_overwrite() {
+        let (mut s, clock) = manual_shard(0);
+        s.set(b"k", b"v", 0, 10);
+        clock.advance(10);
+        assert!(!s.set(b"k", b"w", 0, 0), "expired overwrite = fresh store");
+        assert_eq!(s.stats().expired_keys, 1);
+        assert_eq!(s.get(b"k"), Some((0, &b"w"[..])));
+    }
+
+    #[test]
+    fn lru_eviction_in_stamp_order() {
+        // Budget fits 4 entries of this shape; each entry costs
+        // 1 (key) + 8 (val) + OVERHEAD.
+        let cost = ITEM_OVERHEAD + 1 + 8;
+        let (mut s, _clock) = manual_shard(4 * cost);
+        for k in [b"a", b"b", b"c", b"d"] {
+            s.set(k, b"00000000", 0, 0);
+        }
+        assert_eq!(s.stats().items, 4);
+        assert_eq!(s.stats().evictions, 0);
+        // Bump "a" so "b" becomes the LRU victim.
+        assert!(s.get(b"a").is_some());
+        s.set(b"e", b"00000000", 0, 0);
+        assert_eq!(s.stats().evictions, 1);
+        assert_eq!(s.get(b"b"), None, "b was least recently used");
+        assert!(s.get(b"a").is_some());
+        // Another insert evicts "c" (next oldest).
+        s.set(b"f", b"00000000", 0, 0);
+        assert_eq!(s.get(b"c"), None);
+        assert!(s.get(b"d").is_some());
+        assert!(s.get(b"e").is_some());
+        assert!(s.get(b"f").is_some());
+        assert_eq!(s.stats().evictions, 2);
+        assert!(s.stats().store_bytes <= 4 * cost);
+    }
+
+    #[test]
+    fn eviction_prefers_expired_over_live_lru() {
+        let cost = ITEM_OVERHEAD + 1 + 8;
+        let (mut s, clock) = manual_shard(3 * cost);
+        s.set(b"x", b"00000000", 0, 5); // will be expired
+        s.set(b"a", b"00000000", 0, 0);
+        s.set(b"b", b"00000000", 0, 0);
+        clock.advance(5);
+        s.set(b"c", b"00000000", 0, 0);
+        // "x" (expired) went first, counted as expiry, not eviction.
+        assert_eq!(s.stats().expired_keys, 1);
+        assert_eq!(s.stats().evictions, 0);
+        assert!(s.get(b"a").is_some());
+        assert!(s.get(b"b").is_some());
+        assert!(s.get(b"c").is_some());
+    }
+
+    #[test]
+    fn touch_persist_and_ttl() {
+        let (mut s, clock) = manual_shard(0);
+        assert_eq!(s.ttl_ms(b"k"), TTL_MISSING);
+        s.set(b"k", b"v", 0, 0);
+        assert_eq!(s.ttl_ms(b"k"), TTL_NO_EXPIRY);
+        assert!(s.touch(b"k", 250));
+        assert_eq!(s.ttl_ms(b"k"), 250);
+        clock.advance(100);
+        assert_eq!(s.ttl_ms(b"k"), 150);
+        assert!(s.persist(b"k"), "persist clears a live deadline");
+        assert_eq!(s.ttl_ms(b"k"), TTL_NO_EXPIRY);
+        assert!(!s.persist(b"k"), "nothing left to clear");
+        assert!(s.touch(b"k", 50));
+        clock.advance(50);
+        assert!(!s.touch(b"k", 50), "touching an expired key misses");
+        assert_eq!(s.ttl_ms(b"k"), TTL_MISSING);
+        assert!(!s.persist(b"missing"));
+    }
+
+    #[test]
+    fn incr_semantics_with_expiry() {
+        let (mut s, clock) = manual_shard(0);
+        assert_eq!(s.incr(b"ctr", 5), Ok(5));
+        assert_eq!(s.incr(b"ctr", 2), Ok(7));
+        assert_eq!(s.get(b"ctr"), Some((0, &b"7"[..])));
+        s.set(b"txt", b"abc", 0, 0);
+        assert_eq!(s.incr(b"txt", 1), Err(()));
+        assert_eq!(s.get(b"txt"), Some((0, &b"abc"[..])), "error leaves value");
+        // INCR preserves an existing deadline...
+        s.set(b"t", b"1", 0, 100);
+        assert_eq!(s.incr(b"t", 1), Ok(2));
+        assert_eq!(s.ttl_ms(b"t"), 100);
+        // ...and an expired counter restarts from zero.
+        clock.advance(100);
+        assert_eq!(s.incr(b"t", 3), Ok(3));
+        assert_eq!(s.ttl_ms(b"t"), TTL_NO_EXPIRY);
+    }
+
+    #[test]
+    fn sweep_is_incremental_and_complete() {
+        let (mut s, clock) = manual_shard(0);
+        for i in 0..200u64 {
+            let key = format!("k{i}");
+            s.set(key.as_bytes(), b"v", 0, if i % 2 == 0 { 50 } else { 0 });
+        }
+        clock.advance(50);
+        assert_eq!(s.stats().items, 200, "nothing reclaimed yet");
+        // Bounded calls make progress and eventually reclaim every
+        // expired entry; live entries survive.
+        let mut reclaimed = 0;
+        for _ in 0..1000 {
+            reclaimed += s.sweep(16);
+            if reclaimed == 100 {
+                break;
+            }
+        }
+        assert_eq!(reclaimed, 100);
+        assert_eq!(s.stats().items, 100);
+        assert_eq!(s.stats().expired_keys, 100);
+        for i in (1..200u64).step_by(2) {
+            let key = format!("k{i}");
+            assert!(s.get(key.as_bytes()).is_some(), "live key {i} swept");
+        }
+    }
+
+    #[test]
+    fn hostile_ttls_neither_wrap_nor_panic() {
+        // Wire-supplied TTLs are attacker-controlled (memcached exptime,
+        // RESP EX/PX): the deadline math must saturate, not wrap past
+        // the 0 = never sentinel (or overflow-panic a trustee in debug
+        // builds), and the TTL query must clamp instead of going
+        // negative into sentinel territory.
+        let (mut s, clock) = manual_shard(0);
+        s.set(b"k", b"v", 0, u64::MAX);
+        assert!(s.get(b"k").is_some(), "saturated deadline is 'far future'");
+        let ttl = s.ttl_ms(b"k");
+        assert_eq!(ttl, i64::MAX, "clamped, not negative: {ttl}");
+        clock.advance(10_000);
+        assert!(s.get(b"k").is_some());
+        assert!(s.touch(b"k", u64::MAX), "touch saturates too");
+        assert!(s.ttl_ms(b"k") > 0);
+    }
+
+    #[test]
+    fn sweep_budgeted_by_advances_is_a_full_pass_despite_removals() {
+        // Removals re-examine their slot without consuming the advance
+        // budget, so sweep(capacity) reclaims *every* expired entry in
+        // one call no matter how many there are (the old iteration
+        // budget fell short by one slot per removal).
+        let (mut s, clock) = manual_shard(0);
+        for i in 0..500u64 {
+            s.set(format!("k{i}").as_bytes(), b"v", 0, 10);
+        }
+        clock.advance(10);
+        let swept = s.sweep(1 << 16);
+        assert_eq!(swept, 500, "one bounded call must finish the pass");
+        assert_eq!(s.stats().items, 0);
+    }
+
+    #[test]
+    fn manual_clock_is_deterministic() {
+        let c = StoreClock::manual();
+        assert!(c.is_manual());
+        let t0 = c.now_ms();
+        c.advance(41);
+        assert_eq!(c.now_ms(), t0 + 41);
+        let real = StoreClock::real();
+        assert!(!real.is_manual());
+    }
+}

@@ -24,15 +24,19 @@
 //! - [`runtime`] — worker topology (shared / dedicated trustees), the
 //!   PJRT/XLA executor for AOT-compiled batch-apply artifacts (§5.2)
 //! - [`locks`] — the lock baselines the paper evaluates against (§6)
-//! - [`cmap`] — sharded and dashmap-style concurrent hash maps (§6.3)
+//! - [`cmap`] — the open-addressing robin-hood table behind every shard
+//!   (§6.3)
 //! - [`server`] — the protocol-agnostic delegated server core: one
 //!   connection engine (ingest, backpressure, both response-ordering
 //!   disciplines, drain-on-stop) parameterised by a `Protocol` trait,
 //!   plus the RESP (Redis) front end
-//! - [`kvstore`] — the TCP key-value store application (§6.3)
+//! - [`kvstore`] — the TCP key-value store application (§6.3) and the
+//!   **unified item store** (`kvstore::store`): one shard type with
+//!   flags/TTL/LRU-budget semantics behind all four backends
 //! - [`loadgen`] — the shared pipelined-loader skeleton behind all three
 //!   protocol load generators
-//! - [`memcache`] — mini-memcached, stock (locks) vs delegated shards (§7)
+//! - [`memcache`] — mini-memcached on the unified store: lock baselines
+//!   vs delegated shards, real `exptime` (§7)
 //! - [`bench`] — workload generators and the figure-regeneration harnesses
 //! - [`util`], [`codec`] — substrates built from scratch for the offline
 //!   environment (PRNG, zipfian sampling, stats, CLI, affinity, a

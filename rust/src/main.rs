@@ -9,16 +9,21 @@
 //! trustee kv-load      --addr HOST:PORT --threads T --pipeline P --ops N
 //!                      --keys K --dist uniform|zipf --write-pct W
 //!                      [--val-len L] [--seed S]
-//! trustee mcd-server   --engine stock|trust[:N] --workers W --dedicated D
-//!                      --addr HOST:PORT [--prefill N] [--val-len L]
-//!                      [--net epoll|busy]
-//! trustee mcd-load     --addr HOST:PORT ... (same knobs as kv-load)
+//! trustee mcd-server   --backend trust[:N]|mutex|rwlock|swift --workers W
+//!                      --dedicated D --addr HOST:PORT [--prefill N]
+//!                      [--val-len L] [--budget-mb M] [--net epoll|busy]
+//!                      (--engine stock is accepted as an alias for
+//!                       --backend mutex; exptime is honored)
+//! trustee mcd-load     --addr HOST:PORT ... (same knobs as kv-load, plus
+//!                      [--ttl-pct P]: % of sets carrying exptime 1)
 //! trustee resp-server  --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
-//!                      [--val-len L] [--net epoll|busy]
+//!                      [--val-len L] [--budget-mb M] [--net epoll|busy]
 //!                      (RESP2 — point redis-cli or any Redis client at it:
-//!                       PING, GET, SET, DEL, EXISTS, MGET, INCR, FLUSHALL)
-//! trustee resp-load    --addr HOST:PORT ... (same knobs as kv-load)
+//!                       PING, GET, SET [EX|PX], DEL, EXISTS, MGET, INCR,
+//!                       EXPIRE, PEXPIRE, TTL, PTTL, PERSIST, FLUSHALL)
+//! trustee resp-load    --addr HOST:PORT ... (same knobs as kv-load, plus
+//!                      [--ttl-pct P]: % of sets carrying EX 1)
 //! trustee fadd         --engine mutex|spin|ticket|mcs|fc|trust|async
 //!                      --threads T --objects O --ops N --dist D
 //! trustee demo         quick in-process tour (Figure 1)
@@ -30,7 +35,7 @@
 
 use trustee::bench::fadd::{run_async, run_lock_by_name, run_trust, FaddConfig};
 use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
-use trustee::memcache::{run_memtier, EngineKind, McdServer, McdServerConfig, MemtierConfig};
+use trustee::memcache::{run_memtier, McdServer, McdServerConfig, MemtierConfig};
 use trustee::server::{run_resp_load, RespLoadConfig, RespServer, RespServerConfig};
 use trustee::util::cli::Args;
 use trustee::util::stats::{fmt_mops, fmt_ns};
@@ -121,21 +126,19 @@ fn kv_load(args: &Args) {
 }
 
 fn mcd_server(args: &Args) {
-    let spec = args.get_str("engine", "trust:8");
-    let engine = if spec == "stock" {
-        EngineKind::Stock
+    // --backend is the canonical selector; --engine stock remains as a
+    // compatibility alias for the lock baseline.
+    let spec = args.get_str("backend", &args.get_str("engine", "trust:8"));
+    let backend = if spec == "stock" {
+        BackendKind::Mutex
     } else {
-        let shards = spec
-            .strip_prefix("trust")
-            .map(|r| r.trim_start_matches(':'))
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(8);
-        EngineKind::Trust { shards }
+        BackendKind::from_spec(&spec)
     };
     let server = McdServer::start(McdServerConfig {
         workers: args.get("workers", 4),
         dedicated: args.get("dedicated", 0),
-        engine,
+        backend,
+        budget_bytes: args.get::<u64>("budget-mb", 0) << 20,
         addr: args.get_str("addr", "127.0.0.1:11211"),
         net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
     });
@@ -163,6 +166,7 @@ fn mcd_load(args: &Args) {
         keys: args.get("keys", 10_000),
         dist: args.get_str("dist", "uniform"),
         write_pct: args.get("write-pct", 5),
+        ttl_pct: args.get("ttl-pct", 0),
         val_len: args.get("val-len", 16),
         seed: args.get("seed", 42),
     });
@@ -182,6 +186,7 @@ fn resp_server(args: &Args) {
         workers: args.get("workers", 4),
         dedicated: args.get("dedicated", 0),
         backend: BackendKind::from_spec(&args.get_str("backend", "trust")),
+        budget_bytes: args.get::<u64>("budget-mb", 0) << 20,
         addr: args.get_str("addr", "127.0.0.1:6379"),
         net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
     });
@@ -212,6 +217,7 @@ fn resp_load(args: &Args) {
         keys: args.get("keys", 1_000),
         dist: args.get_str("dist", "uniform"),
         write_pct: args.get("write-pct", 5),
+        ttl_pct: args.get("ttl-pct", 0),
         val_len: args.get("val-len", 16),
         seed: args.get("seed", 42),
     });

@@ -20,6 +20,11 @@ pub fn key_bytes(k: u64) -> Vec<u8> {
     format!("memtier-{k}").into_bytes()
 }
 
+/// TTL the loader attaches to its TTL-carrying sets (seconds). Small on
+/// purpose: a run longer than a second starts taking real misses, which
+/// is the point of the expiry workload.
+pub const LOAD_TTL_SECS: u64 = 1;
+
 #[derive(Clone, Debug)]
 pub struct MemtierConfig {
     pub addr: std::net::SocketAddr,
@@ -30,6 +35,11 @@ pub struct MemtierConfig {
     pub keys: u64,
     pub dist: String,
     pub write_pct: u32,
+    /// Percentage of sets that carry `exptime` [`LOAD_TTL_SECS`] (the
+    /// rest store without expiry) — the TTL-mix knob that drives the
+    /// store's expiry/sweep machinery end to end. GETs of expired keys
+    /// then count as misses.
+    pub ttl_pct: u32,
     pub val_len: usize,
     pub seed: u64,
 }
@@ -95,6 +105,7 @@ struct McdDriver {
     rng: Rng,
     dist: KeyDist,
     write_pct: u32,
+    ttl_pct: u32,
     val: Vec<u8>,
     expect: VecDeque<Expect>,
 }
@@ -103,9 +114,14 @@ impl LoadDriver for McdDriver {
     fn encode_next(&mut self, out: &mut Vec<u8>) {
         let key = key_bytes(self.dist.sample(&mut self.rng));
         if self.rng.pct(self.write_pct) {
+            let exptime = if self.ttl_pct > 0 && self.rng.pct(self.ttl_pct) {
+                LOAD_TTL_SECS
+            } else {
+                0
+            };
             out.extend_from_slice(
                 format!(
-                    "set {} 0 0 {}\r\n",
+                    "set {} 0 {exptime} {}\r\n",
                     String::from_utf8_lossy(&key),
                     self.val.len()
                 )
@@ -158,6 +174,7 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64, Option<Strin
         rng: Rng::new(cfg.seed ^ (tid.wrapping_mul(0xA24B_AED4))),
         dist: KeyDist::from_spec(&cfg.dist, cfg.keys),
         write_pct: cfg.write_pct,
+        ttl_pct: cfg.ttl_pct,
         val: vec![b'm'; cfg.val_len],
         expect: VecDeque::with_capacity(cfg.pipeline),
     };
@@ -211,12 +228,13 @@ fn try_parse_get(buf: &[u8]) -> Result<Option<(usize, bool)>, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::memcache::server::{EngineKind, McdServer, McdServerConfig};
+    use crate::kvstore::backend::BackendKind;
+    use crate::memcache::server::{McdServer, McdServerConfig};
 
-    fn smoke(engine: EngineKind) -> MemtierStats {
+    fn smoke(backend: BackendKind, ttl_pct: u32) -> MemtierStats {
         let server = McdServer::start(McdServerConfig {
             workers: 3,
-            engine,
+            backend,
             ..Default::default()
         });
         server.prefill(200, 16);
@@ -228,6 +246,7 @@ mod tests {
             keys: 200,
             dist: "uniform".into(),
             write_pct: 10,
+            ttl_pct,
             val_len: 16,
             seed: 99,
         });
@@ -236,19 +255,29 @@ mod tests {
     }
 
     #[test]
-    fn memtier_against_trust_engine() {
-        let stats = smoke(EngineKind::Trust { shards: 4 });
+    fn memtier_against_trust_backend() {
+        let stats = smoke(BackendKind::Trust { shards: 4 }, 0);
         assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 800);
         assert_eq!(stats.misses, 0, "prefilled keys must hit");
     }
 
     #[test]
-    fn memtier_against_stock_engine() {
-        let stats = smoke(EngineKind::Stock);
+    fn memtier_against_lock_backend() {
+        let stats = smoke(BackendKind::Mutex, 0);
         assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 800);
         assert_eq!(stats.misses, 0);
+    }
+
+    #[test]
+    fn memtier_ttl_mix_speaks_exptime() {
+        // Every set carries exptime LOAD_TTL_SECS: the run must still
+        // complete (STOREDs all parse); misses are legal once keys
+        // start expiring under the run.
+        let stats = smoke(BackendKind::Trust { shards: 4 }, 100);
+        assert!(stats.ok(), "client errors: {:?}", stats.errors);
+        assert_eq!(stats.ops, 800);
     }
 
     #[test]
@@ -274,6 +303,7 @@ mod tests {
             keys: 10,
             dist: "uniform".into(),
             write_pct: 0,
+            ttl_pct: 0,
             val_len: 8,
             seed: 5,
         });

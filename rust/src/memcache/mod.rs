@@ -1,18 +1,27 @@
 //! Mini-memcached (paper §7): a faithful miniature of the memcached port —
-//! text protocol, the stock lock-based engine vs. delegated Trust<T>
-//! shards, and a memtier-benchmark-style load generator.
+//! text protocol with real `exptime` support, served from the **unified
+//! item store** ([`crate::kvstore::store`]) over all four backends
+//! (`trust`/`mutex`/`rwlock`/`swift`), plus a memtier-benchmark-style
+//! load generator.
+//!
+//! The old parallel `memcache::engine` (boxed-callback `McdEngine` with
+//! its own `StockEngine`/`TrustEngine` tables) is gone: [`McdProtocol`]
+//! dispatches onto [`crate::kvstore::AsyncKv`]'s item-aware ops, so the
+//! memcached front end inherits the allocation-free delegation hot path,
+//! TTL expiry, and per-shard LRU eviction the KV/RESP front ends share.
 //!
 //! Substitution note (DESIGN.md #3): we cannot link the C memcached here;
 //! this Rust miniature reproduces the *structural* change of the paper's
 //! port — critical sections become delegated closures on sharded state,
-//! socket workers use asynchronous delegation and reorder responses — and
-//! the synchronization profile of stock memcached (per-item locks, global
-//! LRU + slab locks).
+//! socket workers use asynchronous delegation and reorder responses.
+//! The lock backends keep the lock-based synchronization *class* (every
+//! GET takes a shard's exclusive lock for its LRU bump and lazy expiry),
+//! but per shard rather than behind stock memcached's global LRU/slab
+//! mutexes — a stronger baseline, so measured speedups are conservative
+//! (DESIGN.md, "Unified item store").
 
-pub mod engine;
 pub mod memtier;
 pub mod server;
 
-pub use engine::{Item, McdEngine, McdShard, StockEngine, TrustEngine};
 pub use memtier::{run_memtier, MemtierConfig, MemtierStats};
-pub use server::{EngineKind, McdParseError, McdProtocol, McdServer, McdServerConfig};
+pub use server::{McdParseError, McdProtocol, McdServer, McdServerConfig};

@@ -1,21 +1,37 @@
 //! Mini-memcached TCP server speaking the memcached **text protocol**
-//! (get/set subset), structured like the paper's port (§7), as a
-//! [`Protocol`] front end on the shared delegated server core
-//! ([`crate::server::engine`]):
+//! (get/set subset, with real `exptime` support), structured like the
+//! paper's port (§7), as a [`Protocol`] front end on the shared
+//! delegated server core ([`crate::server::engine`]) over the unified
+//! item store:
 //!
 //! - The engine's connection fibers follow the original state-machine
 //!   order: receive → parse → process → enqueue result → transmit.
-//! - With the [`TrustEngine`](super::engine::TrustEngine), each request is
-//!   dispatched with asynchronous delegation (`apply_then`) and the worker
-//!   "moves on to the next request without waiting".
+//! - [`McdProtocol`] dispatches onto [`AsyncKv`]'s item-aware ops
+//!   (`get_item`/`set_item`), so all four backends
+//!   (`trust`/`mutex`/`rwlock`/`swift`) serve memcached traffic with
+//!   flags, TTL expiry and per-shard LRU eviction — the boxed-callback
+//!   `McdEngine` duplicate this module used to carry is gone.
+//! - With the Trust backend each request is dispatched with asynchronous
+//!   delegation and the worker "moves on to the next request without
+//!   waiting"; the GET completion receives key, flags and value
+//!   **borrowed** (key echoed through the delegation slot), so the
+//!   steady-state store path allocates nothing.
 //! - The memcached protocol has no request ids, so responses to one
 //!   connection must be transmitted **in order** even though shard
 //!   responses may complete out of order — exactly the reordering buffer
-//!   the paper describes ("the memcached socket worker thread must order
-//!   the responses before they are transmitted"). That buffer is the
-//!   engine's [`ResponseOrder::InOrder`] spool.
+//!   the paper describes. That buffer is the engine's
+//!   [`ResponseOrder::InOrder`] spool.
+//!
+//! `exptime` simplifications (both client-visible, both deliberate):
+//! memcached treats values > 30 days as absolute unix timestamps — the
+//! store clock starts at server boot, so we treat every positive
+//! `exptime` as relative seconds (0 = never); and a **negative**
+//! `exptime` (memcached's "expire immediately") stores the item with a
+//! 1 ms deadline — any real client observes the same immediate miss,
+//! minus the sub-millisecond window.
 
-use super::engine::McdEngine;
+use crate::kvstore::backend::{AckCb, AsyncKv, BackendKind, GetItemCb};
+use crate::kvstore::store::{StoreConfig, StoreStats};
 use crate::runtime::Runtime;
 use crate::server::engine::{
     Completion, ConnMetrics, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore,
@@ -28,7 +44,9 @@ use std::sync::Arc;
 #[derive(Debug, PartialEq, Eq)]
 pub enum Command {
     Get { key: Vec<u8> },
-    Set { key: Vec<u8>, flags: u32, data: Vec<u8> },
+    /// `exptime` keeps memcached's sign convention: 0 = never, positive
+    /// = relative seconds, negative = expire immediately.
+    Set { key: Vec<u8>, flags: u32, exptime: i64, data: Vec<u8> },
 }
 
 /// Longest command line the parser will buffer before declaring the
@@ -106,7 +124,9 @@ pub fn parse_command(buf: &[u8]) -> Result<Option<(Command, usize)>, McdParseErr
             }
             let flags: u32 = parse_num(parts.next().ok_or(McdParseError::BadArguments)?)
                 .ok_or(McdParseError::BadArguments)?;
-            let _exptime: u64 = parse_num(parts.next().ok_or(McdParseError::BadArguments)?)
+            // i64: a negative exptime is legal memcached ("expire
+            // immediately", e.g. libmemcached's -1).
+            let exptime: i64 = parse_num(parts.next().ok_or(McdParseError::BadArguments)?)
                 .ok_or(McdParseError::BadArguments)?;
             let bytes: usize = parse_num(parts.next().ok_or(McdParseError::BadArguments)?)
                 .ok_or(McdParseError::BadArguments)?;
@@ -121,7 +141,10 @@ pub fn parse_command(buf: &[u8]) -> Result<Option<(Command, usize)>, McdParseErr
                 return Err(McdParseError::BadArguments);
             }
             let data = buf[data_start..data_start + bytes].to_vec();
-            Ok(Some((Command::Set { key, flags, data }, data_start + bytes + 2)))
+            Ok(Some((
+                Command::Set { key, flags, exptime, data },
+                data_start + bytes + 2,
+            )))
         }
         // Blank lines and unknown verbs alike: the stream is not speaking
         // our protocol.
@@ -140,27 +163,15 @@ fn parse_num<N: std::str::FromStr>(b: &[u8]) -> Option<N> {
     std::str::from_utf8(b).ok()?.parse().ok()
 }
 
-/// Engine selector.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub enum EngineKind {
-    Stock,
-    Trust { shards: usize },
-}
-
-impl EngineKind {
-    pub fn label(&self) -> String {
-        match self {
-            EngineKind::Stock => "S (stock)".into(),
-            EngineKind::Trust { shards } => format!("Trust{shards}"),
-        }
-    }
-}
-
 #[derive(Clone, Debug)]
 pub struct McdServerConfig {
     pub workers: usize,
     pub dedicated: usize,
-    pub engine: EngineKind,
+    /// Storage backend (the same four the KV and RESP servers accept).
+    pub backend: BackendKind,
+    /// Total store byte budget (split per shard; 0 = unlimited). Going
+    /// over evicts per-shard LRU victims.
+    pub budget_bytes: u64,
     pub addr: String,
     /// How connection fibers wait for socket progress.
     pub net: NetPolicy,
@@ -171,7 +182,8 @@ impl Default for McdServerConfig {
         McdServerConfig {
             workers: 4,
             dedicated: 0,
-            engine: EngineKind::Trust { shards: 4 },
+            backend: BackendKind::Trust { shards: 4 },
+            budget_bytes: 0,
             addr: "127.0.0.1:0".into(),
             net: NetPolicy::default(),
         }
@@ -179,21 +191,23 @@ impl Default for McdServerConfig {
 }
 
 impl McdServerConfig {
-    /// Topology checks, before any runtime is built (mirrors
-    /// [`crate::kvstore::KvServerConfig::validate`]).
+    /// Topology + budget sanity checks, before any runtime is built
+    /// (mirrors [`crate::kvstore::KvServerConfig::validate`]).
     pub fn validate(&self) -> Result<(), String> {
-        netfiber::validate_topology(self.workers, self.dedicated)
+        netfiber::validate_topology(self.workers, self.dedicated)?;
+        self.backend.validate_budget(self.budget_bytes)
     }
 }
 
-/// The memcached text protocol on the shared engine.
+/// The memcached text protocol on the shared engine, over any
+/// [`AsyncKv`] backend.
 pub struct McdProtocol {
-    engine: Arc<dyn McdEngine>,
+    kv: Arc<dyn AsyncKv>,
 }
 
 impl McdProtocol {
-    pub fn new(engine: Arc<dyn McdEngine>) -> McdProtocol {
-        McdProtocol { engine }
+    pub fn new(kv: Arc<dyn AsyncKv>) -> McdProtocol {
+        McdProtocol { kv }
     }
 }
 
@@ -222,22 +236,20 @@ impl Protocol for McdProtocol {
     fn dispatch(&mut self, cmd: Command, done: Completion) {
         match cmd {
             Command::Get { key } => {
-                let echo_key = key.clone();
-                self.engine.get(
-                    key,
-                    Box::new(move |item| {
+                // The completion captures only the Completion ticket (32
+                // bytes — stores inline); the key is echoed back borrowed
+                // by the backend, so no owned key copy rides the
+                // callback.
+                self.kv.get_item(
+                    &key,
+                    GetItemCb::new(move |k: &[u8], item: Option<(u32, &[u8])>| {
+                        use std::io::Write;
                         let mut b = done.checkout();
-                        if let Some(item) = item {
-                            b.extend_from_slice(
-                                format!(
-                                    "VALUE {} {} {}\r\n",
-                                    String::from_utf8_lossy(&echo_key),
-                                    item.flags,
-                                    item.data.len()
-                                )
-                                .as_bytes(),
-                            );
-                            b.extend_from_slice(&item.data);
+                        if let Some((flags, data)) = item {
+                            b.extend_from_slice(b"VALUE ");
+                            b.extend_from_slice(k);
+                            let _ = write!(b, " {flags} {}\r\n", data.len());
+                            b.extend_from_slice(data);
                             b.extend_from_slice(b"\r\n");
                         }
                         b.extend_from_slice(b"END\r\n");
@@ -245,12 +257,20 @@ impl Protocol for McdProtocol {
                     }),
                 );
             }
-            Command::Set { key, flags, data } => {
-                self.engine.set(
-                    key,
+            Command::Set { key, flags, exptime, data } => {
+                // Negative exptime = memcached "expire immediately":
+                // stored with a 1 ms deadline (module docs).
+                let ttl_ms = if exptime < 0 {
+                    1
+                } else {
+                    (exptime as u64).saturating_mul(1000)
+                };
+                self.kv.set_item(
+                    &key,
+                    &data,
                     flags,
-                    data,
-                    Box::new(move |_| {
+                    ttl_ms,
+                    AckCb::new(move |_| {
                         let mut b = done.checkout();
                         b.extend_from_slice(b"STORED\r\n");
                         done.complete(b);
@@ -264,7 +284,7 @@ impl Protocol for McdProtocol {
 /// A running mini-memcached instance.
 pub struct McdServer {
     core: ServerCore,
-    engine: Arc<dyn McdEngine>,
+    backend: Arc<dyn AsyncKv>,
     pub ops_served: Arc<AtomicU64>,
 }
 
@@ -278,7 +298,9 @@ impl McdServer {
     /// Start a server, reporting configuration/bind problems as a
     /// descriptive error *before* any worker thread is spawned.
     pub fn try_start(cfg: McdServerConfig) -> Result<McdServer, String> {
-        let mut engine_out: Option<Arc<dyn McdEngine>> = None;
+        cfg.backend.validate_budget(cfg.budget_bytes)?;
+        let mut backend_out: Option<Arc<dyn AsyncKv>> = None;
+        let store_cfg = StoreConfig::with_budget(cfg.budget_bytes);
         let core = ServerCore::try_start(
             CoreConfig {
                 workers: cfg.workers,
@@ -288,26 +310,21 @@ impl McdServer {
             },
             "mcd-accept",
             |rt, trustees| {
-                let engine: Arc<dyn McdEngine> = match &cfg.engine {
-                    EngineKind::Stock => super::engine::StockEngine::new(1 << 16),
-                    EngineKind::Trust { shards } => {
-                        super::engine::TrustEngine::new(rt, trustees, (*shards).max(1))
-                    }
-                };
-                engine_out = Some(engine.clone());
-                move || McdProtocol::new(engine.clone())
+                let kv = cfg.backend.build_with(rt, trustees, &store_cfg);
+                backend_out = Some(kv.clone());
+                move || McdProtocol::new(kv.clone())
             },
         )?;
         let ops_served = core.ops_served().clone();
-        Ok(McdServer { core, engine: engine_out.unwrap(), ops_served })
+        Ok(McdServer { core, backend: backend_out.unwrap(), ops_served })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.core.addr()
     }
 
-    pub fn engine(&self) -> &Arc<dyn McdEngine> {
-        &self.engine
+    pub fn backend(&self) -> &Arc<dyn AsyncKv> {
+        &self.backend
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -319,15 +336,26 @@ impl McdServer {
         self.core.metrics()
     }
 
+    /// Item-store counters (items, bytes, evictions, expirations).
+    pub fn store_stats(&self) -> StoreStats {
+        self.backend.store_stats()
+    }
+
+    /// Delegation-layer hot-path allocation/copy counters (diagnostic).
+    pub fn hot_path_stats(&self) -> crate::runtime::HotPathStats {
+        self.core.hot_path_stats()
+    }
+
     /// Populate the table with `n` items of `val_len` bytes.
     pub fn prefill(&self, n: u64, val_len: usize) {
-        let engine = self.engine.clone();
+        let kv = self.backend.clone();
         self.core.prefill(n, move |i, on_done| {
-            engine.set(
-                super::memtier::key_bytes(i),
+            kv.set_item(
+                &super::memtier::key_bytes(i),
+                &vec![b'v'; val_len],
                 0,
-                vec![b'v'; val_len],
-                Box::new(move |_| on_done()),
+                0,
+                AckCb::new(move |_| on_done()),
             );
         });
     }
@@ -353,9 +381,26 @@ mod tests {
             .unwrap();
         assert_eq!(
             cmd,
-            Command::Set { key: b"foo".to_vec(), flags: 7, data: b"hello".to_vec() }
+            Command::Set {
+                key: b"foo".to_vec(),
+                flags: 7,
+                exptime: 0,
+                data: b"hello".to_vec()
+            }
         );
         assert_eq!(used, 22);
+        // exptime is parsed, not elided.
+        let (cmd, _) = parse_command(b"set k 1 300 2\r\nhi\r\n").unwrap().unwrap();
+        assert_eq!(
+            cmd,
+            Command::Set { key: b"k".to_vec(), flags: 1, exptime: 300, data: b"hi".to_vec() }
+        );
+        // Negative exptime (memcached "expire immediately") is legal.
+        let (cmd, _) = parse_command(b"set k 0 -1 2\r\nhi\r\n").unwrap().unwrap();
+        assert_eq!(
+            cmd,
+            Command::Set { key: b"k".to_vec(), flags: 0, exptime: -1, data: b"hi".to_vec() }
+        );
     }
 
     #[test]
@@ -377,6 +422,11 @@ mod tests {
         assert_eq!(parse_command(b"get\r\n"), Err(McdParseError::BadArguments));
         assert_eq!(
             parse_command(b"set k x 0 5\r\nhello\r\n"),
+            Err(McdParseError::BadArguments)
+        );
+        // Non-numeric exptime.
+        assert_eq!(
+            parse_command(b"set k 0 never 5\r\nhello\r\n"),
             Err(McdParseError::BadArguments)
         );
         // Data block not CRLF-terminated where it should be.
@@ -418,13 +468,13 @@ mod tests {
     fn unknown_command_answers_error_line_and_closes() {
         let server = McdServer::start(McdServerConfig {
             workers: 2,
-            engine: EngineKind::Trust { shards: 2 },
+            backend: BackendKind::Trust { shards: 2 },
             ..Default::default()
         });
         let mut c = TcpStream::connect(server.addr()).unwrap();
         // A valid set, then garbage: the error line must arrive *after*
         // the STORED (in order), then the server closes.
-        c.write_all(b"set k 0 0 1\r\nv\r\nflush_all\r\n").unwrap();
+        c.write_all(b"set k 0 0 1\r\nv\r\nbogus_verb\r\n").unwrap();
         let mut reader = BufReader::new(c.try_clone().unwrap());
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
@@ -446,10 +496,10 @@ mod tests {
         server.stop();
     }
 
-    fn mcd_roundtrip(engine: EngineKind) {
+    fn mcd_roundtrip(backend: BackendKind) {
         let server = McdServer::start(McdServerConfig {
             workers: 2,
-            engine,
+            backend,
             ..Default::default()
         });
         let mut c = TcpStream::connect(server.addr()).unwrap();
@@ -479,23 +529,26 @@ mod tests {
     }
 
     #[test]
-    fn stock_server_roundtrip() {
-        mcd_roundtrip(EngineKind::Stock);
+    fn trust_server_roundtrip() {
+        mcd_roundtrip(BackendKind::Trust { shards: 2 });
     }
 
     #[test]
-    fn trust_server_roundtrip() {
-        mcd_roundtrip(EngineKind::Trust { shards: 2 });
+    fn lock_server_roundtrips() {
+        // The unified path serves memcached over every lock baseline too.
+        mcd_roundtrip(BackendKind::Mutex);
+        mcd_roundtrip(BackendKind::RwLock);
+        mcd_roundtrip(BackendKind::Swift);
     }
 
     #[test]
     fn pipelined_responses_stay_ordered() {
-        // The delegated engine completes out of order across shards; the
+        // The delegated backend completes out of order across shards; the
         // text protocol demands in-order responses. Hammer with a
         // pipelined mix and verify strict ordering by echoing keys.
         let server = McdServer::start(McdServerConfig {
             workers: 3,
-            engine: EngineKind::Trust { shards: 8 },
+            backend: BackendKind::Trust { shards: 8 },
             ..Default::default()
         });
         server.prefill(64, 8);

@@ -69,6 +69,15 @@ pub type Job = Box<dyn FnOnce() + Send + 'static>;
 /// own fibers and clients).
 const SERVE_BURST: usize = 8;
 
+/// How many scheduler loops pass between runs of the **maintenance
+/// phase** (registered [`Worker::register_maintenance`] callbacks — the
+/// item store's incremental expiry sweep). Each callback bounds its own
+/// work per call; this bounds how often the scheduler pays for it. An
+/// active worker reaches it in microseconds; a fully idle one (1 ms
+/// epoll blocks) still runs maintenance every few tens of ms, which
+/// bounds the reclamation latency of expired-but-unaccessed items.
+const MAINTENANCE_EVERY: u64 = 64;
+
 /// Consecutive fully-idle ticks (no serve/poll/inject progress, no fiber
 /// ran) before a worker stops backoff-spinning and blocks in `epoll_wait`.
 /// High enough that request/response gaps in an active RPC exchange never
@@ -238,6 +247,12 @@ pub struct Worker {
     /// Readiness reactor (fd parking for socket fibers + idle blocking).
     pub reactor: reactor::Reactor,
     pub registry: Registry,
+    /// Maintenance callbacks run every [`MAINTENANCE_EVERY`] scheduler
+    /// loops (see [`Worker::register_maintenance`]). Dropped at the
+    /// *start* of shutdown — before quiescence — so callbacks holding
+    /// `Trust` handles release their refcounts while every worker is
+    /// still serving.
+    maintenance: Vec<Box<dyn FnMut() -> usize>>,
     /// Metrics.
     pub loops: u64,
     pub served_requests: u64,
@@ -334,6 +349,19 @@ impl Worker {
             flushed += self.clients[t].try_flush(pair);
         }
         flushed
+    }
+
+    /// Register a periodic maintenance callback on this worker: called
+    /// from the scheduler loop every [`MAINTENANCE_EVERY`] ticks, on the
+    /// scheduler stack with **no worker borrow held** (callbacks may
+    /// re-enter [`with_worker`], e.g. through the local delegation
+    /// shortcut). Each callback must bound its own work per call and
+    /// return a useful-work count (nonzero resets the idle backoff).
+    /// Callbacks live until shutdown; they are dropped — with no borrow
+    /// held — when shutdown begins, so captured `Trust` handles release
+    /// cleanly while peers still serve.
+    pub fn register_maintenance(&mut self, f: Box<dyn FnMut() -> usize>) {
+        self.maintenance.push(f);
     }
 
     pub fn set_delegated(&self, v: bool) -> bool {
@@ -561,6 +589,43 @@ fn flush_phase() -> usize {
     with_worker(|w| w.flush_all())
 }
 
+/// Maintenance phase: run the registered per-worker callbacks (the item
+/// store's incremental expiry sweep). The vector is detached while the
+/// callbacks run — they are foreign code that may re-enter
+/// [`with_worker`] (local delegation shortcut) — and re-attached after,
+/// preserving any callbacks registered re-entrantly in the meantime.
+fn maintenance_phase() -> usize {
+    let mut cbs = with_worker(|w| std::mem::take(&mut w.maintenance));
+    if cbs.is_empty() {
+        return 0;
+    }
+    let mut useful = 0;
+    for f in cbs.iter_mut() {
+        useful += f();
+    }
+    with_worker(|w| {
+        if w.maintenance.is_empty() {
+            w.maintenance = cbs;
+        } else {
+            // Callbacks registered while we ran: keep both.
+            let newer = std::mem::take(&mut w.maintenance);
+            cbs.extend(newer);
+            w.maintenance = cbs;
+        }
+    });
+    useful
+}
+
+/// Shutdown: drop the maintenance callbacks with no worker borrow held.
+/// Their captures may hold `Trust` handles whose drop re-enters the
+/// runtime (refcount decrements toward other workers), so this runs at
+/// the *start* of shutdown — while every worker still serves — not after
+/// the registry drain.
+fn drop_maintenance() {
+    let cbs = with_worker(|w| std::mem::take(&mut w.maintenance));
+    drop(cbs);
+}
+
 /// Reactor phase: wake fibers whose fds became ready. With `timeout_ms` 0
 /// this is the per-tick sweep (a no-op syscall-wise while nothing is
 /// parked); an idle worker passes [`IDLE_EPOLL_TIMEOUT_MS`] to *sleep* in
@@ -616,8 +681,12 @@ fn worker_loop() {
     const FIBER_ONLY_YIELD: u32 = 4;
     let mut fiber_only_ticks = 0u32;
     let mut idle_ticks = 0u32;
+    let mut maintenance_live = true;
     loop {
-        with_worker(|w| w.loops += 1);
+        let loops = with_worker(|w| {
+            w.loops += 1;
+            w.loops
+        });
         let mut useful = serve_phase();
         useful += poll_phase();
         useful += reactor_phase(0);
@@ -625,9 +694,16 @@ fn worker_loop() {
         let ran_fiber = fiber::with_executor(|e| e.run_one());
         flush_phase();
         let shutting_down = shared.shutdown.load(Ordering::Acquire);
+        if maintenance_live && !shutting_down && loops % MAINTENANCE_EVERY == 0 {
+            useful += maintenance_phase();
+        }
         if shutting_down {
             // Fibers parked on fds must drain, not sleep, during teardown.
             wake_all_fd_waiters();
+            if maintenance_live {
+                maintenance_live = false;
+                drop_maintenance();
+            }
         }
         if useful > 0 {
             backoff.reset();
@@ -829,6 +905,7 @@ impl Runtime {
                             serving_column: Cell::new(usize::MAX),
                             reactor: reactor::Reactor::new(shared.wake_fds[id]),
                             registry: Registry::default(),
+                            maintenance: Vec::new(),
                             loops: 0,
                             served_requests: 0,
                             serve_rounds: 0,
@@ -1083,6 +1160,44 @@ mod tests {
             assert_eq!(v, 2);
             rt.shutdown();
         }
+    }
+
+    #[test]
+    fn maintenance_callbacks_run_periodically_and_drop_at_shutdown() {
+        let rt = Runtime::builder().workers(1).build();
+        let count = Arc::new(AtomicUsize::new(0));
+        let dropped = Arc::new(AtomicBool::new(false));
+        struct DropFlag(Arc<AtomicBool>);
+        impl Drop for DropFlag {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::Release);
+            }
+        }
+        let flag = DropFlag(dropped.clone());
+        let c = count.clone();
+        rt.shared().inject(
+            0,
+            Box::new(move || {
+                with_worker(|w| {
+                    w.register_maintenance(Box::new(move || {
+                        let _keep = &flag;
+                        c.fetch_add(1, Ordering::Relaxed);
+                        0
+                    }));
+                });
+            }),
+        );
+        // The scheduler must call it repeatedly without any other work.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        while count.load(Ordering::Relaxed) < 3 {
+            assert!(std::time::Instant::now() < deadline, "maintenance never ran");
+            std::thread::yield_now();
+        }
+        rt.shutdown();
+        assert!(
+            dropped.load(Ordering::Acquire),
+            "maintenance closure must drop during shutdown"
+        );
     }
 
     #[test]

@@ -7,9 +7,13 @@
 //! [`AsyncKv`] backends so stock Redis clients can drive
 //! `--backend trust|mutex|rwlock|swift`.
 //!
-//! Commands: `PING`, `GET`, `SET`, `DEL`, `EXISTS`, `MGET`, `INCR`,
-//! `FLUSHALL` — accepted both as RESP arrays (`*2\r\n$3\r\nGET\r\n…`) and
-//! as inline commands (`GET key\r\n`). RESP has no request ids, so the
+//! Commands: `PING`, `GET`, `SET` (with `EX`/`PX` expiry options),
+//! `DEL`, `EXISTS`, `MGET`, `INCR`, `EXPIRE`, `PEXPIRE`, `TTL`, `PTTL`,
+//! `PERSIST`, `FLUSHALL` — accepted both as RESP arrays
+//! (`*2\r\n$3\r\nGET\r\n…`) and as inline commands (`GET key\r\n`). The
+//! expiry commands ride the unified item store's TTL machinery (lazy
+//! expiry + incremental sweep), shared with the memcached front end.
+//! RESP has no request ids, so the
 //! engine runs the [`ResponseOrder::InOrder`] reorder spool: responses
 //! hit the wire in request order even though shard completions arrive
 //! out of order. Parsing is **total**: hostile bytes answer
@@ -17,7 +21,8 @@
 
 use super::engine::{Completion, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore};
 use super::netfiber::{self, NetPolicy};
-use crate::kvstore::backend::{AckCb, AsyncKv, BackendKind, FlushCb, GetCb, IncrCb};
+use crate::kvstore::backend::{AckCb, AsyncKv, BackendKind, FlushCb, GetCb, IncrCb, TtlCb};
+use crate::kvstore::store::{StoreConfig, StoreStats, TTL_MISSING, TTL_NO_EXPIRY};
 use crate::runtime::Runtime;
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -429,14 +434,35 @@ fn dispatch_command(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Co
             );
         }
         b"SET" => {
-            if args.len() != 3 {
+            // SET key value [EX seconds | PX milliseconds]; a plain SET
+            // clears any existing deadline (Redis semantics).
+            if args.len() != 3 && args.len() != 5 {
                 return wrong_arity(done, "set");
             }
-            let val = args.pop().unwrap();
-            let key = args.pop().unwrap();
-            backend.put(
+            let mut ttl_ms = 0u64;
+            if args.len() == 5 {
+                let amount = match parse_i64(&args[4]) {
+                    Some(n) if n > 0 => n as u64,
+                    _ => {
+                        return reply_now(done, |b| {
+                            write_error(b, "ERR invalid expire time in 'set' command")
+                        })
+                    }
+                };
+                let opt = args[3].to_ascii_uppercase();
+                ttl_ms = match opt.as_slice() {
+                    b"EX" => amount.saturating_mul(1000),
+                    b"PX" => amount,
+                    _ => return reply_now(done, |b| write_error(b, "ERR syntax error")),
+                };
+            }
+            let val = std::mem::take(&mut args[2]);
+            let key = std::mem::take(&mut args[1]);
+            backend.set_item(
                 &key,
                 &val,
+                0,
+                ttl_ms,
                 AckCb::new(move |_| {
                     let mut b = done.checkout();
                     write_simple(&mut b, "OK");
@@ -482,6 +508,74 @@ fn dispatch_command(backend: &Arc<dyn AsyncKv>, mut args: Vec<Vec<u8>>, done: Co
                 }),
             );
         }
+        b"EXPIRE" | b"PEXPIRE" => {
+            // EXPIRE key seconds / PEXPIRE key ms → :1 (deadline set) or
+            // :0 (no such live key). Rides AsyncKv::touch.
+            if args.len() != 3 {
+                return wrong_arity(done, if name == b"EXPIRE" { "expire" } else { "pexpire" });
+            }
+            let amount = match parse_i64(&args[2]) {
+                Some(n) if n > 0 => n as u64,
+                // Redis deletes on a non-positive expire; we keep the
+                // subset simple and reject it like a bad argument.
+                _ => {
+                    return reply_now(done, |b| {
+                        write_error(b, "ERR invalid expire time in 'expire' command")
+                    })
+                }
+            };
+            let ttl_ms = if name == b"EXPIRE" {
+                amount.saturating_mul(1000)
+            } else {
+                amount
+            };
+            let key = args.swap_remove(1);
+            backend.touch(
+                &key,
+                ttl_ms,
+                AckCb::new(move |live| {
+                    let mut b = done.checkout();
+                    write_int(&mut b, i64::from(live));
+                    done.complete(b);
+                }),
+            );
+        }
+        b"TTL" | b"PTTL" => {
+            if args.len() != 2 {
+                return wrong_arity(done, if name == b"TTL" { "ttl" } else { "pttl" });
+            }
+            let seconds = name == b"TTL";
+            let key = args.swap_remove(1);
+            backend.ttl(
+                &key,
+                TtlCb::new(move |ms| {
+                    let mut b = done.checkout();
+                    let v = match ms {
+                        TTL_MISSING | TTL_NO_EXPIRY => ms,
+                        // Remaining time; TTL rounds up like Redis (a key
+                        // with 1 ms left still reports 1 s).
+                        ms if seconds => ms.div_ceil(1000),
+                        ms => ms,
+                    };
+                    write_int(&mut b, v);
+                    done.complete(b);
+                }),
+            );
+        }
+        b"PERSIST" => {
+            if args.len() != 2 {
+                return wrong_arity(done, "persist");
+            }
+            let key = args.swap_remove(1);
+            backend.persist(
+                &key,
+                AckCb::new(move |cleared| {
+                    let mut b = done.checkout();
+                    write_int(&mut b, i64::from(cleared));
+                    done.complete(b);
+                }),
+            );
+        }
         b"FLUSHALL" => {
             if args.len() != 1 {
                 return wrong_arity(done, "flushall");
@@ -513,6 +607,9 @@ pub struct RespServerConfig {
     /// Dedicated trustee workers (shards live there; no socket fibers).
     pub dedicated: usize,
     pub backend: BackendKind,
+    /// Total store byte budget (split per shard; 0 = unlimited). Going
+    /// over evicts per-shard LRU victims.
+    pub budget_bytes: u64,
     pub addr: String,
     /// How connection fibers wait for socket progress.
     pub net: NetPolicy,
@@ -524,6 +621,7 @@ impl Default for RespServerConfig {
             workers: 4,
             dedicated: 0,
             backend: BackendKind::Trust { shards: 0 },
+            budget_bytes: 0,
             addr: "127.0.0.1:0".into(),
             net: NetPolicy::default(),
         }
@@ -531,9 +629,10 @@ impl Default for RespServerConfig {
 }
 
 impl RespServerConfig {
-    /// Topology checks, before any runtime is built.
+    /// Topology + budget sanity checks, before any runtime is built.
     pub fn validate(&self) -> Result<(), String> {
-        netfiber::validate_topology(self.workers, self.dedicated)
+        netfiber::validate_topology(self.workers, self.dedicated)?;
+        self.backend.validate_budget(self.budget_bytes)
     }
 }
 
@@ -555,7 +654,9 @@ impl RespServer {
     /// Start a server, reporting configuration/bind problems as a
     /// descriptive error *before* any worker thread is spawned.
     pub fn try_start(cfg: RespServerConfig) -> Result<RespServer, String> {
+        cfg.backend.validate_budget(cfg.budget_bytes)?;
         let mut backend_out: Option<Arc<dyn AsyncKv>> = None;
+        let store_cfg = StoreConfig::with_budget(cfg.budget_bytes);
         let core = ServerCore::try_start(
             CoreConfig {
                 workers: cfg.workers,
@@ -565,7 +666,7 @@ impl RespServer {
             },
             "resp-accept",
             |rt, trustees| {
-                let backend = cfg.backend.build(rt, trustees);
+                let backend = cfg.backend.build_with(rt, trustees, &store_cfg);
                 backend_out = Some(backend.clone());
                 move || RespProtocol::new(backend.clone())
             },
@@ -593,6 +694,11 @@ impl RespServer {
     /// Delegation-layer hot-path allocation/copy counters (diagnostic).
     pub fn hot_path_stats(&self) -> crate::runtime::HotPathStats {
         self.core.hot_path_stats()
+    }
+
+    /// Item-store counters (items, bytes, evictions, expirations).
+    pub fn store_stats(&self) -> StoreStats {
+        self.backend.store_stats()
     }
 
     /// Pre-fill the store with `n` keys in the load generator's format.

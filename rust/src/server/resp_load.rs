@@ -34,6 +34,10 @@ pub struct RespLoadConfig {
     pub dist: String,
     /// Percentage of SETs (rest are GETs).
     pub write_pct: u32,
+    /// Percentage of SETs that carry `EX 1` (the TTL-mix knob driving
+    /// the store's expiry machinery; GETs of expired keys then count as
+    /// misses).
+    pub ttl_pct: u32,
     pub val_len: usize,
     pub seed: u64,
 }
@@ -138,11 +142,20 @@ fn encode_get(out: &mut Vec<u8>, key: &[u8]) {
     write_bulk(out, key);
 }
 
-fn encode_set(out: &mut Vec<u8>, key: &[u8], val: &[u8]) {
-    write_array_header(out, 3);
-    write_bulk(out, b"SET");
-    write_bulk(out, key);
-    write_bulk(out, val);
+fn encode_set(out: &mut Vec<u8>, key: &[u8], val: &[u8], ttl_secs: u64) {
+    if ttl_secs == 0 {
+        write_array_header(out, 3);
+        write_bulk(out, b"SET");
+        write_bulk(out, key);
+        write_bulk(out, val);
+    } else {
+        write_array_header(out, 5);
+        write_bulk(out, b"SET");
+        write_bulk(out, key);
+        write_bulk(out, val);
+        write_bulk(out, b"EX");
+        write_bulk(out, ttl_secs.to_string().as_bytes());
+    }
 }
 
 /// Whether a pipelined slot was a GET (miss accounting applies).
@@ -158,6 +171,7 @@ struct RespDriver {
     rng: Rng,
     dist: KeyDist,
     write_pct: u32,
+    ttl_pct: u32,
     val: Vec<u8>,
     expect: VecDeque<Expect>,
 }
@@ -166,7 +180,12 @@ impl LoadDriver for RespDriver {
     fn encode_next(&mut self, out: &mut Vec<u8>) {
         let key = key_bytes(self.dist.sample(&mut self.rng));
         if self.rng.pct(self.write_pct) {
-            encode_set(out, &key, &self.val);
+            let ttl = if self.ttl_pct > 0 && self.rng.pct(self.ttl_pct) {
+                crate::memcache::memtier::LOAD_TTL_SECS
+            } else {
+                0
+            };
+            encode_set(out, &key, &self.val, ttl);
             self.expect.push_back(Expect::Set);
         } else {
             encode_get(out, &key);
@@ -193,6 +212,7 @@ fn run_connection(cfg: &RespLoadConfig, tid: u64) -> (u64, u64, u64, Option<Stri
         rng: Rng::new(cfg.seed ^ (tid.wrapping_mul(0xC2B2_AE35))),
         dist: KeyDist::from_spec(&cfg.dist, cfg.keys),
         write_pct: cfg.write_pct,
+        ttl_pct: cfg.ttl_pct,
         val: vec![b'r'; cfg.val_len],
         expect: VecDeque::with_capacity(cfg.pipeline),
     };

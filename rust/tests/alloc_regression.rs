@@ -4,8 +4,11 @@
 //! This binary installs the counting global allocator and asserts **zero
 //! allocation events** across thousands of steady-state delegated
 //! operations — for windowed async fetch-add delegation (the paper's
-//! §6.1 microworkload) and for a KV GET/PUT round trip over the Trust
-//! backend (the §6.3 data path). Warmup rounds let every recycled buffer
+//! §6.1 microworkload), for a KV GET/PUT round trip over the Trust
+//! backend (the §6.3 data path), and for the memcached-shaped
+//! `set_item`/`get_item` round trip (flags + TTL + LRU stamping on the
+//! unified item store, the §7 data path). Warmup rounds let every
+//! recycled buffer
 //! (outbox arena, completion deques, response scratch, table entry)
 //! reach its high-water mark first; after that, a single allocation
 //! anywhere in the measured window — any worker thread, any layer — is
@@ -18,7 +21,7 @@
 
 use std::cell::Cell;
 use std::rc::Rc;
-use trustee::kvstore::backend::{AckCb, AsyncKv, GetCb, TrustKv};
+use trustee::kvstore::backend::{AckCb, AsyncKv, GetCb, GetItemCb, TrustKv};
 use trustee::runtime::Runtime;
 use trustee::trust::local_trustee;
 use trustee::util::count_alloc::{snapshot, CountingAlloc};
@@ -68,6 +71,7 @@ fn hot_paths_are_allocation_free_at_steady_state() {
     counting_allocator_counts();
     fetch_add_phase();
     kv_get_put_phase();
+    mcd_item_phase();
 }
 
 fn fetch_add_phase() {
@@ -157,6 +161,108 @@ fn kv_get_put_phase() {
     assert_eq!(
         delta.allocs, 0,
         "steady-state KV GET/PUT round trips must not allocate \
+         ({} allocs / {} bytes across 1000 ops)",
+        delta.allocs, delta.bytes
+    );
+    drop(kv);
+    rt.shutdown();
+}
+
+/// The memcached-shaped round trip on the unified item store: one
+/// `set_item` (flags + TTL) + one `get_item` (key echo, flags, borrowed
+/// value) against a fixed key, window 1. The TTL is far enough out that
+/// this key never expires mid-test; each overwrite re-stamps the
+/// deadline, the LRU stamp, and the byte accounting — all of which must
+/// stay allocation-free.
+fn mcd_rounds(kv: &Arc<dyn AsyncKv>, rounds: u64) -> u64 {
+    const TTL_MS: u64 = 60 * 60 * 1000;
+    let key: &[u8] = b"alloc-regression-mcd-key";
+    let val = [b'm'; 16];
+    let done = Rc::new(Cell::new(0u64));
+    let parked: Rc<Cell<Option<fiber::FiberId>>> = Rc::new(Cell::new(None));
+    let mut completed = 0u64;
+    for i in 0..rounds {
+        let d = done.clone();
+        let p = parked.clone();
+        if i % 2 == 0 {
+            kv.set_item(
+                key,
+                &val,
+                7,
+                TTL_MS,
+                AckCb::new(move |_existed| {
+                    d.set(d.get() + 1);
+                    if let Some(id) = p.take() {
+                        fiber::with_executor(|e| e.resume(id));
+                    }
+                }),
+            );
+        } else {
+            kv.get_item(
+                key,
+                GetItemCb::new(move |k: &[u8], item: Option<(u32, &[u8])>| {
+                    assert_eq!(k.len(), 24);
+                    let (flags, v) = item.expect("live item");
+                    assert_eq!((flags, v.len()), (7, 16));
+                    d.set(d.get() + 1);
+                    if let Some(id) = p.take() {
+                        fiber::with_executor(|e| e.resume(id));
+                    }
+                }),
+            );
+        }
+        completed += 1;
+        while done.get() < completed {
+            fiber::suspend(|id| parked.set(Some(id)));
+        }
+    }
+    done.get()
+}
+
+fn mcd_item_phase() {
+    use trustee::kvstore::BackendKind;
+    let rt = Runtime::builder().workers(2).build();
+    // Shards on worker 0; the measuring fiber runs as a client on 1.
+    // build_with (unlike the bare TrustKv constructor) also installs the
+    // maintenance-hook sweep on every worker, so the incremental expiry
+    // sweep runs *inside* the measured window and is held to the same
+    // zero-alloc bar.
+    let kv = BackendKind::Trust { shards: 2 }.build_with(
+        &rt,
+        &[0],
+        &trustee::kvstore::StoreConfig::default(),
+    );
+    let kv2 = kv.clone();
+    let delta = rt.block_on(1, move || {
+        // Warmup inserts the measured key and grows every recycled
+        // buffer — plus a batch of short-TTL keys that expire under the
+        // measured window, so the sweep does real reclamation work in
+        // it (reclamation frees; it must never allocate).
+        for i in 0..64u64 {
+            let done = Rc::new(Cell::new(false));
+            let d = done.clone();
+            kv2.set_item(
+                &[b'x', i as u8],
+                b"short-ttl",
+                0,
+                30, // expires while the measured rounds run
+                AckCb::new(move |_| d.set(true)),
+            );
+            while !done.get() {
+                fiber::yield_now();
+            }
+        }
+        mcd_rounds(&kv2, 500);
+        let before = snapshot();
+        let done = mcd_rounds(&kv2, 1_000);
+        let after = snapshot();
+        assert_eq!(done, 1_000);
+        after.since(&before)
+    });
+    assert_eq!(
+        delta.allocs, 0,
+        "steady-state mcd set_item/get_item round trips (with the \
+         maintenance sweep active) must not allocate \
          ({} allocs / {} bytes across 1000 ops)",
         delta.allocs, delta.bytes
     );

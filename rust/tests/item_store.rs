@@ -1,0 +1,307 @@
+//! The unified item store's cache semantics, pinned **identically across
+//! all four backends** (trust / mutex / rwlock / swift):
+//!
+//! - deterministic LRU victim order under a byte budget (seeded: one
+//!   shard, a manual clock, a scripted access sequence);
+//! - lazy-on-access expiry vs sweep expiry equivalence (same misses,
+//!   same final counters, whichever path reclaims);
+//! - the TTL surface end to end over both wire protocols: memcached
+//!   `set <exptime>` and RESP `SET EX/PX` / `EXPIRE` / `TTL` / `PTTL` /
+//!   `PERSIST`.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex, RwLock};
+use trustee::fiber;
+use trustee::kvstore::backend::{AckCb, AsyncKv, GetItemCb, TtlCb};
+use trustee::kvstore::store::{StoreClock, StoreConfig, ITEM_OVERHEAD, TTL_MISSING, TTL_NO_EXPIRY};
+use trustee::kvstore::{ItemShard, LockedItemKv, StoreStats, TrustKv};
+use trustee::runtime::Runtime;
+
+// ---------------------------------------------------------------------
+// Synchronous op helpers (run inside a runtime fiber so Trust
+// completions can flow; lock backends complete inline).
+// ---------------------------------------------------------------------
+
+fn set_sync(kv: &Arc<dyn AsyncKv>, key: &[u8], val: &[u8], flags: u32, ttl_ms: u64) -> bool {
+    let r: Rc<Cell<Option<bool>>> = Rc::new(Cell::new(None));
+    let r2 = r.clone();
+    kv.set_item(key, val, flags, ttl_ms, AckCb::new(move |e| r2.set(Some(e))));
+    while r.get().is_none() {
+        fiber::yield_now();
+    }
+    r.get().unwrap()
+}
+
+fn get_sync(kv: &Arc<dyn AsyncKv>, key: &[u8]) -> Option<(u32, Vec<u8>)> {
+    let r: Rc<Cell<bool>> = Rc::new(Cell::new(false));
+    let out: Rc<std::cell::RefCell<Option<(u32, Vec<u8>)>>> =
+        Rc::new(std::cell::RefCell::new(None));
+    let (r2, o2) = (r.clone(), out.clone());
+    kv.get_item(
+        key,
+        GetItemCb::new(move |_k: &[u8], item: Option<(u32, &[u8])>| {
+            *o2.borrow_mut() = item.map(|(f, v)| (f, v.to_vec()));
+            r2.set(true);
+        }),
+    );
+    while !r.get() {
+        fiber::yield_now();
+    }
+    out.borrow_mut().take()
+}
+
+fn ttl_sync(kv: &Arc<dyn AsyncKv>, key: &[u8]) -> i64 {
+    let r: Rc<Cell<Option<i64>>> = Rc::new(Cell::new(None));
+    let r2 = r.clone();
+    kv.ttl(key, TtlCb::new(move |ms| r2.set(Some(ms))));
+    while r.get().is_none() {
+        fiber::yield_now();
+    }
+    r.get().unwrap()
+}
+
+/// Build each backend flavor with one shard (so every key contends for
+/// the same budget) over the given store config.
+fn backends_one_shard(rt: &Runtime, cfg: &StoreConfig) -> Vec<(&'static str, Arc<dyn AsyncKv>)> {
+    vec![
+        ("trust", TrustKv::with_config(rt, &[0], 1, cfg) as Arc<dyn AsyncKv>),
+        (
+            "mutex",
+            Arc::new(LockedItemKv::<Mutex<ItemShard>>::new(1, "mutex", cfg)),
+        ),
+        (
+            "rwlock",
+            Arc::new(LockedItemKv::<RwLock<ItemShard>>::new(1, "rwlock", cfg)),
+        ),
+        (
+            "swift",
+            Arc::new(LockedItemKv::<RwLock<ItemShard>>::new(1, "swift", cfg)),
+        ),
+    ]
+}
+
+#[test]
+fn lru_victim_order_is_deterministic_across_backends() {
+    // One shard, budget for exactly 4 entries of this shape.
+    let entry_cost = 2 + 100 + ITEM_OVERHEAD; // "k0" + 100-byte value
+    let val = vec![b'x'; 100];
+    let rt = Runtime::builder().workers(2).build();
+    let mut outcomes: Vec<(&'static str, Vec<bool>, StoreStats)> = Vec::new();
+    for (name, kv) in backends_one_shard(&rt, &StoreConfig::with_budget(4 * entry_cost)) {
+        let kv2 = kv.clone();
+        let val = val.clone();
+        let hits = rt.block_on(1, move || {
+            for k in [b"k0", b"k1", b"k2", b"k3"] {
+                assert!(!set_sync(&kv2, k, &val, 0, 0));
+            }
+            // Recency script: bump k0 and k2, leaving k1 then k3 as the
+            // LRU victims for the next two inserts.
+            assert!(get_sync(&kv2, b"k0").is_some());
+            assert!(get_sync(&kv2, b"k2").is_some());
+            assert!(!set_sync(&kv2, b"k4", &val, 0, 0)); // evicts k1
+            assert!(!set_sync(&kv2, b"k5", &val, 0, 0)); // evicts k3
+            [b"k0", b"k1", b"k2", b"k3", b"k4", b"k5"]
+                .iter()
+                .map(|k| get_sync(&kv2, *k).is_some())
+                .collect::<Vec<bool>>()
+        });
+        outcomes.push((name, hits, kv.store_stats()));
+    }
+    let want = vec![true, false, true, false, true, true];
+    for (name, hits, stats) in &outcomes {
+        assert_eq!(hits, &want, "{name}: LRU victim order diverged");
+        assert_eq!(stats.evictions, 2, "{name}: eviction count");
+        assert_eq!(stats.items, 4, "{name}: live items");
+        assert!(
+            stats.store_bytes <= 4 * entry_cost,
+            "{name}: budget exceeded ({} > {})",
+            stats.store_bytes,
+            4 * entry_cost
+        );
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn lazy_and_sweep_expiry_agree_across_backends() {
+    // Three keys: `a` expires and is reclaimed lazily (a GET touches
+    // it), `c` expires and is reclaimed by the sweep (nobody touches
+    // it), `b` never expires. Every backend must report the same misses
+    // and converge to the same counters.
+    let rt = Runtime::builder().workers(2).build();
+    let clock = StoreClock::manual();
+    let cfg = StoreConfig { budget_bytes: 0, clock: clock.clone() };
+    for (name, kv) in backends_one_shard(&rt, &cfg) {
+        let kv2 = kv.clone();
+        let clock2 = clock.clone();
+        rt.block_on(1, move || {
+            set_sync(&kv2, b"a", b"v", 1, 100);
+            set_sync(&kv2, b"b", b"v", 2, 0);
+            set_sync(&kv2, b"c", b"v", 3, 100);
+            assert_eq!(ttl_sync(&kv2, b"a"), 100, "{name}");
+            assert_eq!(ttl_sync(&kv2, b"b"), TTL_NO_EXPIRY, "{name}");
+            clock2.advance(100);
+            // Lazy path: the GET discovers and reclaims `a`.
+            assert!(get_sync(&kv2, b"a").is_none(), "{name}: a must expire");
+            assert_eq!(ttl_sync(&kv2, b"a"), TTL_MISSING, "{name}");
+            // `c` is expired but untouched: invisible, not yet reclaimed.
+            assert_eq!(ttl_sync(&kv2, b"c"), TTL_MISSING, "{name}");
+            // `b` lives on.
+            assert_eq!(get_sync(&kv2, b"b"), Some((2, b"v".to_vec())), "{name}");
+        });
+        // Sweep path: reclaim `c` without any access.
+        let swept = kv.sweep_now(1 << 16);
+        assert_eq!(swept, 1, "{name}: sweep must reclaim exactly c");
+        let stats = kv.store_stats();
+        assert_eq!(stats.items, 1, "{name}: only b survives");
+        assert_eq!(stats.expired_keys, 2, "{name}: a (lazy) + c (sweep)");
+        assert_eq!(stats.evictions, 0, "{name}");
+        assert_eq!(stats.store_bytes, 1 + 1 + ITEM_OVERHEAD, "{name}");
+        // The clock is shared across backends in this loop; rewind is
+        // impossible, so later backends just see a larger `now` — the
+        // relative script stays identical.
+    }
+    rt.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Wire-level TTL coverage
+// ---------------------------------------------------------------------
+
+mod wire {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    use trustee::kvstore::BackendKind;
+    use trustee::memcache::{McdServer, McdServerConfig};
+    use trustee::server::{RespServer, RespServerConfig};
+
+    fn read_line(r: &mut impl BufRead) -> String {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        line
+    }
+
+    #[test]
+    fn mcd_exptime_expires_over_the_socket() {
+        let server = McdServer::start(McdServerConfig {
+            workers: 2,
+            backend: BackendKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        // exptime 1: relative seconds.
+        c.write_all(b"set ttl-key 9 1 5\r\nhello\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), "STORED\r\n");
+        c.write_all(b"get ttl-key\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), "VALUE ttl-key 9 5\r\n");
+        let mut data = vec![0u8; 7];
+        reader.read_exact(&mut data).unwrap(); // "hello\r\n"
+        assert_eq!(read_line(&mut reader), "END\r\n");
+        // A key without exptime survives alongside.
+        c.write_all(b"set keeper 0 0 2\r\nok\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), "STORED\r\n");
+        // Negative exptime: memcached's "expire immediately".
+        c.write_all(b"set gone 0 -1 2\r\nxx\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), "STORED\r\n");
+        std::thread::sleep(std::time::Duration::from_millis(1200));
+        c.write_all(b"get gone\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), "END\r\n", "negative exptime misses");
+        c.write_all(b"get ttl-key\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), "END\r\n", "expired key must miss");
+        c.write_all(b"get keeper\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), "VALUE keeper 0 2\r\n");
+        let mut data = vec![0u8; 4];
+        reader.read_exact(&mut data).unwrap(); // "ok\r\n"
+        assert_eq!(read_line(&mut reader), "END\r\n");
+        let stats = server.store_stats();
+        assert!(
+            stats.expired_keys >= 1,
+            "lazy/sweep expiry must have reclaimed: {stats:?}"
+        );
+        drop((c, reader));
+        server.stop();
+    }
+
+    #[test]
+    fn resp_ttl_command_surface() {
+        let server = RespServer::start(RespServerConfig {
+            workers: 2,
+            backend: BackendKind::Trust { shards: 2 },
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let mut ask = |cmd: &str| -> String {
+            c.write_all(cmd.as_bytes()).unwrap();
+            read_line(&mut reader)
+        };
+        assert_eq!(ask("SET k v PX 60000\r\n"), "+OK\r\n");
+        // PTTL: remaining ms in (0, 60000]; TTL rounds up to seconds.
+        let pttl: i64 = ask("PTTL k\r\n").trim_start_matches(':').trim().parse().unwrap();
+        assert!((1..=60_000).contains(&pttl), "pttl {pttl}");
+        let ttl: i64 = ask("TTL k\r\n").trim_start_matches(':').trim().parse().unwrap();
+        assert!((1..=60).contains(&ttl), "ttl {ttl}");
+        assert_eq!(ask("PERSIST k\r\n"), ":1\r\n");
+        assert_eq!(ask("TTL k\r\n"), ":-1\r\n");
+        assert_eq!(ask("PERSIST k\r\n"), ":0\r\n", "no deadline left to clear");
+        assert_eq!(ask("EXPIRE k 30\r\n"), ":1\r\n");
+        let ttl: i64 = ask("TTL k\r\n").trim_start_matches(':').trim().parse().unwrap();
+        assert!((1..=30).contains(&ttl));
+        // Expire it for real.
+        assert_eq!(ask("PEXPIRE k 60\r\n"), ":1\r\n");
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        assert_eq!(ask("GET k\r\n"), "$-1\r\n", "expired key must be gone");
+        assert_eq!(ask("TTL k\r\n"), ":-2\r\n");
+        assert_eq!(ask("EXPIRE k 10\r\n"), ":0\r\n", "expire on missing key");
+        assert_eq!(ask("EXPIRE missing 10\r\n"), ":0\r\n");
+        // SET EX sets a deadline too; bad options are syntax errors.
+        assert_eq!(ask("SET e v EX 40\r\n"), "+OK\r\n");
+        let ttl: i64 = ask("TTL e\r\n").trim_start_matches(':').trim().parse().unwrap();
+        assert!((1..=40).contains(&ttl));
+        // A plain SET clears the deadline (Redis semantics).
+        assert_eq!(ask("SET e v2\r\n"), "+OK\r\n");
+        assert_eq!(ask("TTL e\r\n"), ":-1\r\n");
+        assert!(ask("SET b v BOGUS 1\r\n").starts_with("-ERR syntax error"));
+        assert!(ask("SET b v EX 0\r\n").starts_with("-ERR invalid expire"));
+        assert!(ask("EXPIRE e abc\r\n").starts_with("-ERR invalid expire"));
+        drop((c, reader));
+        server.stop();
+    }
+
+    #[test]
+    fn eviction_under_budget_over_the_wire() {
+        // A tiny budget: pipelined sets must keep the server under it,
+        // with evictions visible in the stats and the survivors the
+        // most recently written keys.
+        let budget = 16 * 1024;
+        let server = RespServer::start(RespServerConfig {
+            workers: 2,
+            backend: BackendKind::Trust { shards: 1 },
+            budget_bytes: budget,
+            ..Default::default()
+        });
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let val = "v".repeat(512);
+        for i in 0..128 {
+            c.write_all(format!("SET evict:{i} {val}\r\n").as_bytes()).unwrap();
+            assert_eq!(read_line(&mut reader), "+OK\r\n");
+        }
+        let stats = server.store_stats();
+        assert!(stats.evictions > 0, "budget must have evicted: {stats:?}");
+        assert!(
+            stats.store_bytes <= budget,
+            "store over budget: {} > {budget}",
+            stats.store_bytes
+        );
+        // The most recent key must have survived; the very first is gone.
+        c.write_all(b"EXISTS evict:127\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), ":1\r\n");
+        c.write_all(b"EXISTS evict:0\r\n").unwrap();
+        assert_eq!(read_line(&mut reader), ":0\r\n");
+        drop((c, reader));
+        server.stop();
+    }
+}

@@ -10,7 +10,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig, NetPolicy};
-use trustee::memcache::{EngineKind, McdServer, McdServerConfig};
+use trustee::memcache::{McdServer, McdServerConfig};
 use trustee::server::{RespServer, RespServerConfig};
 
 fn kv_server(net: NetPolicy, workers: usize, dedicated: usize) -> KvServer {
@@ -130,7 +130,7 @@ fn busy_poll_policy_still_works() {
 fn memcache_under_epoll_roundtrips() {
     let server = McdServer::start(McdServerConfig {
         workers: 2,
-        engine: EngineKind::Trust { shards: 2 },
+        backend: BackendKind::Trust { shards: 2 },
         net: NetPolicy::Epoll,
         ..Default::default()
     });

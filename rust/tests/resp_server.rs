@@ -17,6 +17,7 @@ fn start(backend: BackendKind, net: NetPolicy, workers: usize, dedicated: usize)
         workers,
         dedicated,
         backend,
+        budget_bytes: 0,
         net,
         addr: "127.0.0.1:0".into(),
     })

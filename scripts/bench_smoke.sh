@@ -28,8 +28,12 @@ cargo bench --bench resp_throughput -- --json --quick --ops 1500 \
     > "$OUT_DIR/BENCH_resp_throughput.json"
 echo "wrote BENCH_resp_throughput.json" >&2
 
+cargo bench --bench eviction_pressure -- --json --quick --ops 1500 \
+    > "$OUT_DIR/BENCH_eviction_pressure.json"
+echo "wrote BENCH_eviction_pressure.json" >&2
+
 # Sanity: every file must be non-empty JSON (first byte '{').
-for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json; do
+for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json BENCH_eviction_pressure.json; do
     head -c 1 "$OUT_DIR/$f" | grep -q '{' || { echo "bad JSON in $f" >&2; exit 1; }
 done
 echo "bench smoke OK" >&2
