@@ -891,6 +891,8 @@ impl TrusteeEndpoint {
                 in_overflow = true;
                 continue;
             }
+            // SAFETY: serve()'s contract covers the whole batch — every record
+            // was framed by a client endpoint with matching thunk/env/prop.
             cur += unsafe { Self::apply_record(&region[cur..], &mut rw, &mut self.heap_pool) };
             cur = (cur + 7) & !7;
             served += 1;
@@ -951,6 +953,8 @@ impl TrusteeEndpoint {
             seen += 1;
         }
         // Every record admitted: serve the batch for real.
+        // SAFETY: forwarded from serve_filtered's own contract — same batch,
+        // same framing invariants.
         unsafe { self.serve(pair) }
     }
 
@@ -968,6 +972,12 @@ impl TrusteeEndpoint {
 
     /// Apply a single record starting at `rec[0]`; returns its unpadded
     /// length within the region.
+    ///
+    /// # Safety
+    ///
+    /// `rec` must start a record framed by a client endpoint: the thunk
+    /// word is a real [`Thunk`], env/prop satisfy that thunk's contract,
+    /// and heap records carry the parts of a live `Vec`.
     unsafe fn apply_record(rec: &[u8], rw: &mut ResponseWriter, pool: &mut HeapPool) -> usize {
         let thunk_raw = u64::from_le_bytes(rec[0..8].try_into().unwrap());
         let prop = u64::from_le_bytes(rec[8..16].try_into().unwrap()) as usize as *mut u8;
@@ -986,6 +996,8 @@ impl TrusteeEndpoint {
             let args_len = u64::from_le_bytes(heap[0..8].try_into().unwrap()) as usize;
             let env = &heap[8..8 + env_len];
             let args = &heap[8 + env_len..8 + env_len + args_len];
+            // SAFETY: thunk/env/prop come from the framed record; the framer
+            // guarantees they satisfy the thunk's contract (see # Safety).
             unsafe { thunk(env.as_ptr(), prop, args, rw) };
             // The client's allocation refills our spill pool.
             pool.recycle(heap);
@@ -993,6 +1005,8 @@ impl TrusteeEndpoint {
         }
         let env = &rec[RECORD_HEADER..RECORD_HEADER + env_len];
         let args = &rec[RECORD_HEADER + env_len..RECORD_HEADER + env_len + arg_len];
+        // SAFETY: thunk/env/prop come from the framed record; the framer
+        // guarantees they satisfy the thunk's contract (see # Safety).
         unsafe { thunk(env.as_ptr(), prop, args, rw) };
         RECORD_HEADER + env_len + arg_len
     }
@@ -1006,24 +1020,41 @@ mod tests {
 
     /// Thunk: increment a u64 property by the u64 captured in env, respond
     /// with the pre-increment value (fetch-and-add).
+    ///
+    /// # Safety
+    /// `env` holds a framed `u64` delta; `prop` points at the test's live
+    /// `u64` accumulator.
     unsafe fn fadd_thunk(env: *const u8, prop: *mut u8, _args: &[u8], out: &mut ResponseWriter) {
+        // SAFETY: env is the framed u64 delta.
         let delta = unsafe { env.cast::<u64>().read_unaligned() };
         let p = prop.cast::<u64>();
+        // SAFETY: prop is the test's live u64; thunks run serially.
         let old = unsafe { *p };
+        // SAFETY: same pointer as the read above.
         unsafe { *p = old + delta };
         out.write_value(&old);
     }
 
     /// Fire-and-forget thunk: add without responding.
+    ///
+    /// # Safety
+    /// `env` holds a framed `u64` delta; `prop` points at the test's live
+    /// `u64` accumulator.
     unsafe fn add_thunk(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter) {
+        // SAFETY: env is the framed u64 delta.
         let delta = unsafe { env.cast::<u64>().read_unaligned() };
+        // SAFETY: prop is the test's live u64 accumulator.
         unsafe { *prop.cast::<u64>() += delta };
     }
 
     /// Thunk with serialized args: append a string length.
+    ///
+    /// # Safety
+    /// `prop` points at the test's live `u64`; `args` carry a wire string.
     unsafe fn arg_thunk(_env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter) {
         let mut r = WireReader::new(args);
         let s = String::read(&mut r).unwrap();
+        // SAFETY: prop is the test's live u64 accumulator.
         unsafe { *prop.cast::<u64>() += s.len() as u64 };
         out.write_value(&s.to_uppercase());
     }
@@ -1054,6 +1085,7 @@ mod tests {
             Completion::new(move |r| g.set(read_response::<u64>(r))),
         );
         assert_eq!(client.try_flush(&pair), 1);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         assert_eq!(unsafe { trustee.serve(&pair) }, 1);
         assert_eq!(client.poll(&pair), 1);
         assert_eq!(got.get(), 100);
@@ -1087,6 +1119,7 @@ mod tests {
         // 10 records × 32 bytes: fills primary (3 recs) then overflow
         // (7 recs) in one batch.
         client.try_flush(&pair);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         assert_eq!(unsafe { trustee.serve(&pair) }, 10);
         assert_eq!(client.poll(&pair), 10);
         assert_eq!(counter, 10);
@@ -1127,8 +1160,10 @@ mod tests {
             |_| {},
         );
         client.try_flush(&pair);
+        // SAFETY: same contract as serve — records framed above.
         assert_eq!(unsafe { trustee.serve_filtered(&pair, admit_fadd) }, 0);
         assert_eq!(counter, 0, "rejected batch must apply nothing");
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         assert_eq!(unsafe { trustee.serve(&pair) }, 2);
         assert_eq!(counter, 3);
         assert_eq!(client.poll(&pair), 2);
@@ -1145,7 +1180,9 @@ mod tests {
             );
         }
         client.try_flush(&pair);
+        // SAFETY: same contract as serve — records framed above.
         assert_eq!(unsafe { trustee.serve_filtered(&pair, admit_none) }, 0);
+        // SAFETY: same contract as serve — records framed above.
         assert_eq!(unsafe { trustee.serve_filtered(&pair, admit_fadd) }, 3);
         assert_eq!(counter, 33);
         assert_eq!(client.poll(&pair), 3);
@@ -1169,6 +1206,7 @@ mod tests {
             );
         }
         client.try_flush(&pair);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         assert_eq!(unsafe { trustee.serve(&pair) }, 3);
         let h = pair.response.header_acquire();
         assert_eq!(h.primary_len(), 0, "no response bytes for fire-and-forget");
@@ -1194,6 +1232,7 @@ mod tests {
             |w| "hello".to_string().write(w),
         );
         client.try_flush(&pair);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         client.poll(&pair);
         assert_eq!(&*got.borrow(), "HELLO");
@@ -1228,9 +1267,11 @@ mod tests {
         assert_eq!(client.try_flush(&pair), 0, "slot busy");
         assert_eq!(client.pending(), 2);
 
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         // poll dispatches batch 1 AND flushes batch 2.
         assert_eq!(client.poll(&pair), 1);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         assert_eq!(client.poll(&pair), 1);
         assert_eq!(counter, 3);
@@ -1245,6 +1286,9 @@ mod tests {
         let mut acc: u64 = 0;
 
         // args larger than the overflow block force FLAG_HEAP.
+        ///
+        /// # Safety
+        /// `prop` points at the test's live `u64`.
         unsafe fn count_thunk(
             _env: *const u8,
             prop: *mut u8,
@@ -1253,6 +1297,7 @@ mod tests {
         ) {
             let mut r = WireReader::new(args);
             let v = Vec::<u8>::read(&mut r).unwrap();
+            // SAFETY: prop is the test's live u64 accumulator.
             unsafe { *prop.cast::<u64>() = v.len() as u64 };
             out.write_value(&(v.len() as u64));
         }
@@ -1268,6 +1313,7 @@ mod tests {
                 |w| big_args.write(w),
             );
             client.try_flush(&pair);
+            // SAFETY: every record was framed above with matching thunk/env/prop.
             unsafe { trustee.serve(&pair) };
             client.poll(&pair);
             assert_eq!(got.get(), 4000);
@@ -1284,6 +1330,9 @@ mod tests {
         assert_eq!(client.heap_records, 3);
         // Cross-feeding: the banked payload buffers now serve a response
         // spill without a fresh allocation.
+        ///
+        /// # Safety
+        /// Dereferences nothing; `unsafe` only to match the `Thunk` signature.
         unsafe fn big_resp_thunk(
             _env: *const u8,
             _prop: *mut u8,
@@ -1302,6 +1351,7 @@ mod tests {
             |_| {},
         );
         client.try_flush(&pair);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         client.poll(&pair);
         assert_eq!(trustee.heap_pool.hits, 1, "spill must reuse a banked buffer");
@@ -1314,12 +1364,16 @@ mod tests {
         let mut trustee = TrusteeEndpoint::default();
         let mut acc: u64 = 0;
 
+        ///
+        /// # Safety
+        /// `env` holds a framed `u64` response length.
         unsafe fn big_resp_thunk(
             env: *const u8,
             _prop: *mut u8,
             _args: &[u8],
             out: &mut ResponseWriter,
         ) {
+            // SAFETY: env is the framed u64 length.
             let n = unsafe { env.cast::<u64>().read_unaligned() };
             out.write_value(&vec![0xABu8; n as usize]);
         }
@@ -1338,6 +1392,7 @@ mod tests {
                 |_| {},
             );
             client.try_flush(&pair);
+            // SAFETY: every record was framed above with matching thunk/env/prop.
             unsafe { trustee.serve(&pair) };
             client.poll(&pair);
             assert_eq!(got.get(), 5000);
@@ -1353,7 +1408,11 @@ mod tests {
         // out-of-line request payload without a fresh allocation (payload
         // sized below the banked spill buffer's capacity, so the take is
         // a genuine hit under the capacity-honest accounting).
+        ///
+        /// # Safety
+        /// `prop` points at the test's live `u64`.
         unsafe fn len_thunk(_e: *const u8, prop: *mut u8, args: &[u8], _o: &mut ResponseWriter) {
+            // SAFETY: prop is the test's live u64 accumulator.
             unsafe { *prop.cast::<u64>() = args.len() as u64 };
         }
         let big = vec![9u8; 3000];
@@ -1365,6 +1424,7 @@ mod tests {
             |w| w.put_bytes(&big),
         );
         client.try_flush(&pair);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         client.poll(&pair);
         assert_eq!(acc, 3000);
@@ -1413,6 +1473,8 @@ mod tests {
             COUNTER_ADDR.store(&mut counter as *mut u64 as usize, Ordering::Release);
             let mut ep = TrusteeEndpoint::default();
             while !stop2.load(Ordering::Acquire) {
+                // SAFETY: records on this mesh pair were framed with add_thunk and a
+                // live counter pointer published via COUNTER_ADDR.
                 unsafe { ep.serve(m2.pair(0, 1)) };
                 std::thread::yield_now();
             }
@@ -1464,8 +1526,14 @@ mod tests {
         // Frame then serve records with arbitrary env/args sizes; the
         // summing thunk checks payload integrity end-to-end. The property
         // pointer carries the env length so the thunk can slice the env.
+        ///
+        /// # Safety
+        /// `prop` points at a live `u16` holding the env length; `env` is that
+        /// many readable bytes.
         unsafe fn sum_thunk(env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter) {
+            // SAFETY: prop is the test's u16 env-length cell.
             let env_len = unsafe { *prop.cast::<u16>() } as usize;
+            // SAFETY: the framer wrote exactly env_len bytes at env.
             let env_bytes = unsafe { std::slice::from_raw_parts(env, env_len) };
             let s: u64 = env_bytes.iter().map(|&b| b as u64).sum::<u64>()
                 + args.iter().map(|&b| b as u64).sum::<u64>();
@@ -1491,6 +1559,7 @@ mod tests {
                 |w| w.put_bytes(args),
             );
             client.try_flush(&pair);
+            // SAFETY: every record was framed above with matching thunk/env/prop.
             unsafe { trustee.serve(&pair) };
             client.poll(&pair);
             got.get() == want
@@ -1538,6 +1607,7 @@ mod tests {
         for _ in 0..4 {
             enqueue_add(&mut client, &mut counter, 1);
             client.try_flush(&pair);
+            // SAFETY: every record was framed above with matching thunk/env/prop.
             unsafe { trustee.serve(&pair) };
             client.poll(&pair);
         }
@@ -1546,6 +1616,7 @@ mod tests {
         for _ in 0..64 {
             enqueue_add(&mut client, &mut counter, 1);
             client.try_flush(&pair);
+            // SAFETY: every record was framed above with matching thunk/env/prop.
             unsafe { trustee.serve(&pair) };
             client.poll(&pair);
         }

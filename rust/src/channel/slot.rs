@@ -15,8 +15,9 @@
 //! on x86-64 — no `lock` prefix, no fence. This matches the paper's machine
 //! code while staying sound (DESIGN.md substitution #7).
 
+use crate::util::vatomic::VAtomicU64;
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 
 /// Bytes in the primary block following the header word. The paper uses a
 /// 128-byte primary block; 8 bytes of it are the header.
@@ -42,10 +43,15 @@ pub const MAX_BATCH: usize = 1 << 14;
 pub struct Header(pub u64);
 
 impl Header {
+    /// Pack a header. Bounds are hard errors (not `debug_assert`): a
+    /// count/length that overflows its field would silently corrupt the
+    /// neighbouring fields in a release build, and lengths can originate
+    /// from wire-derived sizes. The three asserts cost a couple of
+    /// predictable branches on a path that writes a cache line anyway.
     pub fn new(toggle: bool, spill: bool, count: usize, plen: usize, olen: usize) -> Header {
-        debug_assert!(count < MAX_BATCH);
-        debug_assert!(plen <= PRIMARY_BYTES);
-        debug_assert!(olen <= OVERFLOW_BYTES);
+        assert!(count < MAX_BATCH, "batch count {count} overflows header field (max {})", MAX_BATCH - 1);
+        assert!(plen <= PRIMARY_BYTES, "primary payload length {plen} exceeds {PRIMARY_BYTES}");
+        assert!(olen <= OVERFLOW_BYTES, "overflow payload length {olen} exceeds {OVERFLOW_BYTES}");
         Header(
             toggle as u64
                 | (spill as u64) << 1
@@ -88,7 +94,10 @@ impl Header {
 /// idle clients touches only the primary lines (§5.3.1).
 #[repr(C, align(64))]
 pub struct Slot {
-    header: AtomicU64,
+    /// Virtual atomic: a plain `AtomicU64` in production builds; under
+    /// `--features model` the interleaving explorer can schedule around
+    /// every load/store (see `util::vatomic`).
+    header: VAtomicU64,
     primary: UnsafeCell<[u8; PRIMARY_BYTES]>,
     overflow: UnsafeCell<[u8; OVERFLOW_BYTES]>,
     /// Heap spill escape hatch: oversized payloads travel out-of-line.
@@ -106,12 +115,14 @@ pub struct Slot {
 // SAFETY: the single-writer/single-reader protocol above; all cross-thread
 // publication goes through `header` with Release/Acquire ordering.
 unsafe impl Sync for Slot {}
+// SAFETY: plain memory plus a leaked-Vec spill pointer whose ownership
+// moves with the slot; nothing is thread-affine.
 unsafe impl Send for Slot {}
 
 impl Default for Slot {
     fn default() -> Self {
         Slot {
-            header: AtomicU64::new(Header::new(false, false, 0, 0, 0).0),
+            header: VAtomicU64::new(Header::new(false, false, 0, 0, 0).0),
             primary: UnsafeCell::new([0; PRIMARY_BYTES]),
             overflow: UnsafeCell::new([0; OVERFLOW_BYTES]),
             spill_ptr: UnsafeCell::new(std::ptr::null_mut()),
@@ -149,6 +160,8 @@ impl Slot {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn payload_mut(&self) -> (&mut [u8; PRIMARY_BYTES], &mut [u8; OVERFLOW_BYTES]) {
+        // SAFETY: caller contract (unique producer, no unconsumed batch)
+        // makes these the only live references to the blocks.
         unsafe { (&mut *self.primary.get(), &mut *self.overflow.get()) }
     }
 
@@ -159,6 +172,9 @@ impl Slot {
     /// the producer must not republish until the consumer is done.
     #[inline]
     pub unsafe fn payload(&self) -> (&[u8; PRIMARY_BYTES], &[u8; OVERFLOW_BYTES]) {
+        // SAFETY: caller contract — the acquire-load of the publishing
+        // header ordered these bytes, and the producer will not write
+        // again until the consumer is done.
         unsafe { (&*self.primary.get(), &*self.overflow.get()) }
     }
 
@@ -173,6 +189,9 @@ impl Slot {
         let len = buf.len();
         let cap = buf.capacity();
         std::mem::forget(buf);
+        // SAFETY: caller contract (unique producer, pre-publish) — no
+        // other reference to the spill fields exists until the header
+        // Release-store publishes them.
         unsafe {
             *self.spill_ptr.get() = ptr;
             *self.spill_len.get() = len;
@@ -186,6 +205,9 @@ impl Slot {
     /// # Safety
     /// Consumer-only, post-acquire of a header with the spill bit set.
     pub unsafe fn take_spill(&self) -> Vec<u8> {
+        // SAFETY: caller contract — the acquire-load of a spill-flagged
+        // header ordered these fields; ptr/len/cap are the disassembled
+        // parts of exactly one leaked `Vec` (set_spill), reclaimed once.
         unsafe {
             let ptr = *self.spill_ptr.get();
             let len = *self.spill_len.get();
@@ -247,8 +269,39 @@ mod tests {
     }
 
     #[test]
+    fn header_new_accepts_exact_bounds() {
+        // The largest legal value in every field must pack and unpack.
+        let h = Header::new(true, true, MAX_BATCH - 1, PRIMARY_BYTES, OVERFLOW_BYTES);
+        assert!(h.toggle());
+        assert!(h.spill());
+        assert_eq!(h.count(), MAX_BATCH - 1);
+        assert_eq!(h.primary_len(), PRIMARY_BYTES);
+        assert_eq!(h.overflow_len(), OVERFLOW_BYTES);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch count")]
+    fn header_new_rejects_count_overflow() {
+        let _ = Header::new(false, false, MAX_BATCH, 0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "primary payload length")]
+    fn header_new_rejects_primary_overflow() {
+        let _ = Header::new(false, false, 0, PRIMARY_BYTES + 1, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow payload length")]
+    fn header_new_rejects_overflow_overflow() {
+        let _ = Header::new(false, false, 0, 0, OVERFLOW_BYTES + 1);
+    }
+
+    #[test]
     fn publish_and_consume() {
         let slot = Slot::default();
+        // SAFETY: single-threaded test — this thread is the unique
+        // producer and nothing has been published yet.
         unsafe {
             let (p, _o) = slot.payload_mut();
             p[..4].copy_from_slice(&[1, 2, 3, 4]);
@@ -257,6 +310,7 @@ mod tests {
         let h = slot.header_acquire();
         assert!(h.toggle());
         assert_eq!(h.count(), 1);
+        // SAFETY: the batch was published above and nothing republishes.
         let (p, _) = unsafe { slot.payload() };
         assert_eq!(&p[..4], &[1, 2, 3, 4]);
     }
@@ -266,9 +320,11 @@ mod tests {
         let slot = Slot::default();
         let mut data = Vec::with_capacity(8192);
         data.resize(5000, 7u8);
+        // SAFETY: unique producer, pre-publish (single-threaded test).
         unsafe { slot.set_spill(data) };
         slot.publish(Header::new(true, true, 1, 0, 0));
         assert!(slot.header_acquire().spill());
+        // SAFETY: spill-flagged header observed just above; taken once.
         let back = unsafe { slot.take_spill() };
         assert_eq!(back.len(), 5000);
         assert_eq!(back.capacity(), 8192, "capacity travels for recycling");
@@ -287,7 +343,10 @@ mod tests {
                 let h = p2.request.header_acquire();
                 if h.toggle() != served {
                     let n = h.primary_len();
+                    // SAFETY: new toggle acquire-observed; the client will
+                    // not republish until it sees our response toggle.
                     let bytes = unsafe { p2.request.payload().0[..n].to_vec() };
+                    // SAFETY: this thread is the unique response producer.
                     unsafe {
                         p2.response.payload_mut().0[..n].copy_from_slice(&bytes);
                     }
@@ -305,6 +364,8 @@ mod tests {
         let mut toggle = false;
         for msg in [&[1u8, 2, 3][..], &[9, 8][..], &[0xFF][..]] {
             toggle = !toggle;
+            // SAFETY: unique request producer; the previous batch was
+            // fully served (we waited for its response echo).
             unsafe {
                 pair.request.payload_mut().0[..msg.len()].copy_from_slice(msg);
             }
@@ -313,6 +374,8 @@ mod tests {
             loop {
                 let h = pair.response.header_acquire();
                 if h.toggle() == toggle {
+                    // SAFETY: response toggle acquire-observed; trustee
+                    // publishes nothing further for this batch.
                     let echoed = unsafe { &pair.response.payload().0[..h.primary_len()] };
                     assert_eq!(echoed, msg);
                     break;

@@ -64,6 +64,9 @@ pub unsafe extern "sysv64" fn raw_switch(save: *mut *mut u8, restore_rsp: *mut u
 /// First-run trampoline: a brand-new fiber's prepared stack "returns" here.
 /// The fiber pointer was parked in `rbx` by [`prepare_stack`]; move it into
 /// the first argument register and enter the Rust entry point.
+// SAFETY: naked — the asm below is the whole body; entered only by the
+// `ret` in raw_switch from a stack laid out by prepare_stack (fiber
+// pointer parked in rbx), and fiber_entry never returns.
 #[unsafe(naked)]
 unsafe extern "sysv64" fn fiber_trampoline() {
     core::arch::naked_asm!(
@@ -91,6 +94,10 @@ unsafe extern "sysv64" fn fiber_trampoline() {
 /// After the six pops and the `ret`, rsp = `top`, which is 16-aligned, so
 /// the `call` in the trampoline gives the entry function a correctly
 /// aligned frame (rsp ≡ 8 mod 16 at entry, per the SysV ABI).
+///
+/// # Safety
+/// `top` must be 16-aligned with at least 56 writable bytes below it;
+/// `fiber_ptr` is stored opaquely and handed to `fiber_entry` later.
 pub unsafe fn prepare_stack(top: *mut u8, fiber_ptr: *mut u8) -> *mut u8 {
     debug_assert_eq!(top as usize % 16, 0, "stack top must be 16-aligned");
     let mut p = top as *mut u64;

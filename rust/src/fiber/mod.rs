@@ -93,6 +93,7 @@ pub fn current_fiber() -> Option<FiberId> {
         if p.is_null() {
             None
         } else {
+            // SAFETY: non-null means EXEC points at this thread's live Executor.
             unsafe { (*p).current }
         }
     })
@@ -130,6 +131,10 @@ pub fn suspend(stash: impl FnOnce(FiberId)) {
 }
 
 /// Fiber entry point, reached via the trampoline on first switch-in.
+///
+/// # Safety
+/// Only reached via the trampoline with `fiber` pointing at the live
+/// `Fiber` whose prepared stack we are now running on.
 pub(crate) unsafe extern "sysv64" fn fiber_entry(fiber: *mut Fiber) -> ! {
     // SAFETY: `fiber` is the live Box<Fiber> this stack belongs to; the
     // executor TLS pointer is installed (we got here via run_one).

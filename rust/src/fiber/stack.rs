@@ -27,7 +27,8 @@ pub struct Stack {
     len: usize,
 }
 
-// The stack is plain memory; ownership moves with the Fiber.
+// SAFETY: the stack is plain owned memory (mmap'd below); ownership
+// moves with the Stack and no aliasing references escape.
 unsafe impl Send for Stack {}
 
 impl Stack {
@@ -62,6 +63,8 @@ impl Stack {
 
     /// Highest address of the stack (stacks grow down), 16-byte aligned.
     pub fn top(&self) -> *mut u8 {
+        // SAFETY: base+len is one-past-the-end of our live mapping — valid for
+        // pointer arithmetic; the pointer is only ever used below the top.
         let top = unsafe { self.base.as_ptr().add(self.len) };
         ((top as usize) & !15) as *mut u8
     }
@@ -120,11 +123,80 @@ mod tests {
         let top = s.top();
         assert_eq!(top as usize % 16, 0);
         // Touch memory near the top (valid region).
+        // SAFETY: top-8 lies inside the usable (non-guard) region of the
+        // mapping we just created.
         unsafe {
             let p = top.sub(8);
             p.write(0xAB);
             assert_eq!(p.read(), 0xAB);
         }
+    }
+
+    /// Pin the bounds accounting: one guard page below exactly
+    /// `usable()` bytes, `top()` 16-aligned at the high end of the
+    /// mapping (ISSUE 6 satellite).
+    #[test]
+    fn stack_bounds_accounting() {
+        let page = page_size();
+        // Deliberately not a page multiple: must round *up*.
+        let s = Stack::new(100 * 1024);
+        assert_eq!(s.usable() % page, 0, "usable size is whole pages");
+        assert!(s.usable() >= 100 * 1024, "never less than requested");
+        assert!(s.usable() < 100 * 1024 + page, "rounds up by less than a page");
+        assert_eq!(s.len, s.usable() + page, "exactly one guard page");
+
+        let base = s.base.as_ptr() as usize;
+        assert_eq!(base % page, 0, "mmap returns page-aligned memory");
+        // The usable region is [base + page, base + len).
+        assert_eq!(base + page + s.usable(), base + s.len);
+
+        let top = s.top() as usize;
+        assert_eq!(top % 16, 0, "switch code requires a 16-aligned top");
+        assert!(top <= base + s.len, "top never exceeds the mapping");
+        // base and len are both page multiples, so the mapping end is
+        // already 16-aligned and the mask in top() shaves nothing.
+        assert_eq!(top, base + s.len, "page-aligned top needs no rounding");
+        assert_eq!(top - s.usable(), base + page, "usable region sits above the guard");
+    }
+
+    /// The guard page must actually be PROT_NONE in the kernel's view:
+    /// find the mapping in /proc/self/maps and check its permission bits
+    /// (an overflowing fiber then faults instead of corrupting memory).
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn guard_page_is_prot_none_in_proc_maps() {
+        let s = Stack::new(64 * 1024);
+        let base = s.base.as_ptr() as usize;
+        let page = page_size();
+        let maps = std::fs::read_to_string("/proc/self/maps").unwrap();
+        let mut guard = None;
+        let mut usable = None;
+        for line in maps.lines() {
+            let Some((range, rest)) = line.split_once(' ') else { continue };
+            let Some((lo, hi)) = range.split_once('-') else { continue };
+            let lo = usize::from_str_radix(lo, 16).unwrap();
+            let hi = usize::from_str_radix(hi, 16).unwrap();
+            if lo == base {
+                guard = Some((hi, rest[..4].to_string()));
+            }
+            if lo == base + page {
+                usable = Some((hi, rest[..4].to_string()));
+            }
+        }
+        let (ghi, gperms) = guard.expect("guard page VMA missing from /proc/self/maps");
+        assert_eq!(ghi, base + page, "guard VMA spans exactly one page");
+        assert!(
+            gperms.starts_with("---"),
+            "guard page must be PROT_NONE, got {gperms}"
+        );
+        // The kernel may merge the rw region with an adjacent anonymous
+        // mapping above it, so only require it to cover our stack.
+        let (uhi, uperms) = usable.expect("usable-region VMA missing");
+        assert!(uhi >= base + s.len, "usable VMA covers the stack");
+        assert!(
+            uperms.starts_with("rw-"),
+            "usable region must be read-write, got {uperms}"
+        );
     }
 
     #[test]

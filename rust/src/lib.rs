@@ -47,6 +47,11 @@
 //! `rust/EXPERIMENTS.md` for the experiment index and measured-vs-paper
 //! results.
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own SAFETY justification, even inside `unsafe fn` bodies. Enforced
+// together with `tests/unsafe_audit.rs` (which requires the comment).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod util;
 pub mod codec;
 pub mod fiber;
@@ -60,5 +65,7 @@ pub mod kvstore;
 pub mod loadgen;
 pub mod memcache;
 pub mod bench;
+#[cfg(feature = "model")]
+pub mod model;
 
 pub use trust::{Latch, Trust, TrusteeRef};

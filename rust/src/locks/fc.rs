@@ -35,6 +35,8 @@ pub struct FcLock<T> {
 
 // SAFETY: `value` is only touched by the combiner, which is unique.
 unsafe impl<T: Send> Send for FcLock<T> {}
+// SAFETY: sharing is safe because every access to `value` funnels
+// through the unique combiner — no concurrent &mut T can exist.
 unsafe impl<T: Send> Sync for FcLock<T> {}
 
 impl<T> FcLock<T> {
@@ -59,6 +61,8 @@ impl<T> FcLock<T> {
             result: Option<R>,
             _marker: std::marker::PhantomData<fn(&mut T)>,
         }
+        // SAFETY: caller passes ctx pointing at a live Ctx<T, R, F> and value
+        // at the lock's T; invoked once per record by the combiner.
         unsafe fn call_one<T, R, F: FnOnce(&mut T) -> R>(ctx: *mut u8, value: *mut u8) {
             // SAFETY: ctx/value types match by construction below.
             unsafe {

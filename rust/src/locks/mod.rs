@@ -49,6 +49,8 @@ pub struct LockCell<L: RawLock, T> {
 
 // SAFETY: access to `value` is serialized by `lock`.
 unsafe impl<L: RawLock, T: Send> Send for LockCell<L, T> {}
+// SAFETY: as for Send — the raw lock serializes every &mut T that
+// with_lock hands out.
 unsafe impl<L: RawLock, T: Send> Sync for LockCell<L, T> {}
 
 impl<L: RawLock, T> LockCell<L, T> {
@@ -70,6 +72,7 @@ impl<L: RawLock, T> LockCell<L, T> {
     #[inline]
     pub fn try_with_lock<R>(&self, f: impl FnOnce(&mut T) -> R) -> Option<R> {
         let tok = self.lock.try_lock()?;
+        // SAFETY: lock held.
         let r = f(unsafe { &mut *self.value.get() });
         self.lock.unlock(tok);
         Some(r)

@@ -1,0 +1,1092 @@
+//! Deterministic interleaving explorer behind the `model` cargo feature —
+//! a zero-dependency, loom-style model checker for the crate's hand-rolled
+//! Acquire/Release protocols.
+//!
+//! ## What it does
+//!
+//! [`explore`] runs a closed-world *model* (a closure that spawns a handful
+//! of virtual threads via [`spawn`]) once per thread schedule, enumerating
+//! schedules by depth-first search over the scheduling decisions taken at
+//! every shared-memory operation. Shared state must go through the
+//! [`crate::util::vatomic`] shim ([`VAtomicU64`](crate::util::vatomic::VAtomicU64),
+//! [`VBool`](crate::util::vatomic::VBool),
+//! [`VCell`](crate::util::vatomic::VCell)): each access is a *yield point*
+//! where the explorer decides which thread runs next.
+//!
+//! Violations the explorer reports, each with a replayable schedule:
+//!
+//! - **data race / torn read** — a [`VCell`](crate::util::vatomic::VCell)
+//!   access not ordered (by a release-store → acquire-load edge on some
+//!   virtual atomic) after the last conflicting access;
+//! - **use-after-free / double-free** — via the tracked-allocation API
+//!   ([`track_alloc`] / [`track_access`] / [`track_free`]);
+//! - **deadlock** — every live thread parked in [`block_until`];
+//! - **assertion failure** — any panic inside a virtual thread.
+//!
+//! ## How ordering bugs are caught under sequential exploration
+//!
+//! The explorer executes every schedule *sequentially consistently*: it
+//! never simulates store buffering or reordering. Instead it tracks
+//! happens-before with per-thread vector clocks: a `Release` store
+//! deposits the writer's clock on the atomic, an `Acquire` load of that
+//! value joins it into the reader's clock, and `Relaxed` transfers
+//! nothing. A payload write published by a `Relaxed`-downgraded store
+//! therefore has *no* happens-before edge to the consumer's read, and the
+//! consumer's `VCell` read is reported as a potential torn read — exactly
+//! the class of bug weakening a publish store introduces on real
+//! hardware, caught without ever executing a weak behaviour. The honest
+//! gap: behaviours that require a *value* to be reordered (e.g. IRIW) are
+//! out of scope; see DESIGN.md "Correctness tooling".
+//!
+//! ## Scheduling
+//!
+//! One OS thread per virtual thread, but exactly one runs at a time; all
+//! others park on a condvar. At each yield point the *running* thread
+//! consults the DFS state and either continues or hands off — there is no
+//! controller round-trip on the hot path, so exploring tens of thousands
+//! of schedules takes seconds. Schedules are enumerated with a
+//! *preemption bound* ([`Opts::preemptions`]): switching away from a
+//! still-runnable thread costs one preemption, switches forced by a block
+//! or exit are free. Small bounds (2–3) are known to expose the vast
+//! majority of concurrency bugs while keeping the schedule space
+//! tractable.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Sentinel: no thread currently holds the virtual CPU.
+const NOBODY: usize = usize::MAX;
+
+/// Marker payload used to unwind virtual threads when a run aborts
+/// (violation found elsewhere, or exploration shutting down). Carried via
+/// `resume_unwind` so the panic hook stays silent.
+struct AbortRun;
+
+/// Exploration options.
+#[derive(Clone, Copy, Debug)]
+pub struct Opts {
+    /// Maximum number of *preemptive* context switches per schedule
+    /// (switching away from a runnable thread). Forced switches (block,
+    /// exit) are free. 2 is enough for every seeded bug in this crate's
+    /// models; raise it to widen coverage.
+    pub preemptions: usize,
+    /// Hard cap on schedules explored; [`Report::completed`] is `false`
+    /// if the DFS was truncated by this cap.
+    pub max_schedules: u64,
+    /// Per-schedule step cap (yield points executed); exceeding it is
+    /// reported as a livelock violation.
+    pub max_steps: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Opts {
+        Opts { preemptions: 2, max_schedules: 500_000, max_steps: 20_000 }
+    }
+}
+
+/// A violation found by the explorer.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Human-readable description (race, UAF, deadlock, assertion text).
+    pub message: String,
+    /// The thread chosen at each branching decision point, in order.
+    /// Feed to [`replay`] to reproduce the failing schedule.
+    pub schedule: Vec<usize>,
+}
+
+/// Result of an [`explore`] call.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Schedules fully executed.
+    pub schedules: u64,
+    /// `true` iff the DFS exhausted every schedule within the preemption
+    /// bound (i.e. was not truncated by `max_schedules`).
+    pub completed: bool,
+    /// Deepest branching-decision stack seen.
+    pub max_depth: usize,
+    /// First violation found, if any; exploration stops at the first.
+    pub violation: Option<Violation>,
+}
+
+impl Report {
+    /// Panic with the violation message if one was found.
+    pub fn assert_ok(&self) {
+        if let Some(v) = &self.violation {
+            panic!("model violation: {} (schedule {:?})", v.message, v.schedule);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-run state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    Blocked,
+    Finished,
+}
+
+/// Raw pointer to a caller-owned `block_until` predicate. Stored in the
+/// shared run state so that *other* threads (the ones taking scheduling
+/// decisions) can re-evaluate it.
+struct PredPtr(*const (dyn Fn() -> bool + 'static));
+
+// SAFETY: the pointee lives in the stack frame of a virtual thread that is
+// parked inside `block_until` for as long as its status is `Blocked`; the
+// pointer is only dereferenced under the run lock while that status holds,
+// and is cleared before the owner is released. Predicates only read
+// `VAtomic*` raw values, so evaluation from another OS thread is sound.
+unsafe impl Send for PredPtr {}
+
+/// One DFS decision point: the candidate threads and which one this run
+/// takes.
+struct Choice {
+    options: Vec<usize>,
+    index: usize,
+}
+
+/// Per-registered-variable metadata for happens-before tracking.
+struct VarState {
+    /// Vector clock deposited by the release-store that wrote the current
+    /// value (empty after a `Relaxed` store).
+    release: Vec<u32>,
+    /// Last non-atomic write: `(thread, clock-at-write)`.
+    last_write: Option<(usize, u32)>,
+    /// Per-thread clock of the last non-atomic read (0 = never read).
+    reads: Vec<u32>,
+}
+
+struct AllocState {
+    name: &'static str,
+    alive: bool,
+}
+
+struct RunState {
+    // --- persistent across runs ---
+    /// Monotone run counter; also the registration generation for
+    /// `VarId`s (variables re-register on their first access each run).
+    generation: u64,
+    /// DFS stack of branching decision points, kept across runs.
+    stack: Vec<Choice>,
+    /// When replaying: the forced schedule (thread id per branching
+    /// decision), instead of DFS enumeration.
+    forced: Option<Vec<usize>>,
+    max_depth: usize,
+
+    // --- reset every run ---
+    active: bool,
+    abort: bool,
+    status: Vec<Status>,
+    preds: Vec<Option<PredPtr>>,
+    current: usize,
+    /// Branching decisions taken this run (thread ids), for replay.
+    chosen: Vec<usize>,
+    /// Index of the next branching decision (into `stack` / `forced`).
+    depth: usize,
+    preemptions_used: usize,
+    steps: u64,
+    violation: Option<Violation>,
+    /// Vector clocks, `clocks[t][u]`.
+    clocks: Vec<Vec<u32>>,
+    vars: Vec<VarState>,
+    allocs: Vec<AllocState>,
+    handles: Vec<JoinHandle<()>>,
+    /// Threads spawned but not yet started are identified positionally;
+    /// spawn is setup-phase only, so ids are assigned deterministically.
+    nthreads: usize,
+}
+
+impl RunState {
+    fn reset_for_run(&mut self) {
+        self.generation += 1;
+        self.active = false;
+        self.abort = false;
+        self.status.clear();
+        self.preds.clear();
+        self.current = NOBODY;
+        self.chosen.clear();
+        self.depth = 0;
+        self.preemptions_used = 0;
+        self.steps = 0;
+        self.violation = None;
+        self.clocks.clear();
+        self.vars.clear();
+        self.allocs.clear();
+        self.nthreads = 0;
+        debug_assert!(self.handles.is_empty());
+    }
+
+    fn all_finished(&self) -> bool {
+        self.status.iter().all(|s| *s == Status::Finished)
+    }
+
+    fn record_violation(&mut self, message: String) {
+        if self.violation.is_none() {
+            self.violation =
+                Some(Violation { message, schedule: self.chosen.clone() });
+        }
+        self.abort = true;
+    }
+
+    /// Join clock `src` into `dst` (element-wise max).
+    fn join(dst: &mut Vec<u32>, src: &[u32]) {
+        if dst.len() < src.len() {
+            dst.resize(src.len(), 0);
+        }
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d = (*d).max(*s);
+        }
+    }
+}
+
+/// Shared run context: one per `explore()` call, shared by the controller
+/// and every virtual thread.
+pub(crate) struct Ctx {
+    m: Mutex<RunState>,
+    cv: Condvar,
+    opts: Opts,
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local identity
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+enum Role {
+    /// The controller thread while the model body runs (single-threaded
+    /// construction phase): shim accesses go straight to memory, no
+    /// scheduling, no clocks.
+    Setup(Arc<Ctx>),
+    /// A virtual thread with its id.
+    VThread(Arc<Ctx>, usize),
+}
+
+thread_local! {
+    static ROLE: RefCell<Option<Role>> = const { RefCell::new(None) };
+}
+
+fn current_role() -> Option<Role> {
+    ROLE.with(|r| r.borrow().clone())
+}
+
+// ---------------------------------------------------------------------------
+// Variable registration (used by util::vatomic)
+// ---------------------------------------------------------------------------
+
+/// Per-shim-object registration slot: packs `(generation << 32) | (index+1)`
+/// so that objects living across runs (or reused from a previous explore)
+/// re-register lazily on first access of each run.
+pub struct VarId(AtomicU64);
+
+impl VarId {
+    pub const fn unregistered() -> VarId {
+        VarId(AtomicU64::new(0))
+    }
+}
+
+impl Default for VarId {
+    fn default() -> Self {
+        VarId::unregistered()
+    }
+}
+
+fn var_index(st: &mut RunState, vid: &VarId) -> usize {
+    let packed = vid.0.load(Ordering::Relaxed);
+    let (gen, idx1) = (packed >> 32, (packed & 0xffff_ffff) as usize);
+    if gen == st.generation && idx1 != 0 {
+        return idx1 - 1;
+    }
+    let idx = st.vars.len();
+    st.vars.push(VarState {
+        release: Vec::new(),
+        last_write: None,
+        reads: vec![0; st.nthreads],
+    });
+    vid.0
+        .store((st.generation << 32) | (idx as u64 + 1), Ordering::Relaxed);
+    idx
+}
+
+// ---------------------------------------------------------------------------
+// Scheduling core
+// ---------------------------------------------------------------------------
+
+/// Compute the candidate set for the next decision. Blocked threads whose
+/// predicate currently holds are candidates (they are unblocked if and
+/// when chosen). Returns `(options, forced_switch)`.
+fn candidates(st: &RunState, prev: usize) -> Vec<usize> {
+    let mut opts = Vec::with_capacity(st.nthreads);
+    let prev_runnable =
+        prev != NOBODY && st.status[prev] == Status::Runnable;
+    // Keep `prev` first so that "continue the current thread" is always
+    // option 0 — DFS then explores the no-preemption schedule first.
+    if prev_runnable {
+        opts.push(prev);
+    }
+    for t in 0..st.nthreads {
+        if prev_runnable && t == prev {
+            continue;
+        }
+        match st.status[t] {
+            Status::Runnable => opts.push(t),
+            Status::Blocked => {
+                let ready = match &st.preds[t] {
+                    // SAFETY: see `PredPtr` — the predicate outlives the
+                    // Blocked status and we hold the run lock.
+                    Some(p) => unsafe { (*p.0)() },
+                    None => false,
+                };
+                if ready {
+                    opts.push(t);
+                }
+            }
+            Status::Finished => {}
+        }
+    }
+    opts
+}
+
+/// Take the next scheduling decision. Called with the run lock held, by
+/// the thread that currently owns the virtual CPU (or the controller for
+/// the initial decision). Grants the CPU to the chosen thread.
+///
+/// Returns the chosen thread, or `None` when every thread has finished.
+/// Detects deadlock (live threads, no candidates).
+fn decide_next(ctx: &Ctx, st: &mut RunState, prev: usize) -> Option<usize> {
+    if st.all_finished() {
+        st.current = NOBODY;
+        ctx.cv.notify_all();
+        return None;
+    }
+    let mut opts = candidates(st, prev);
+    let prev_runnable =
+        prev != NOBODY && st.status[prev] == Status::Runnable;
+    // Preemption bound: once exhausted, a runnable thread must continue.
+    if prev_runnable && st.preemptions_used >= ctx.opts.preemptions {
+        opts.truncate(1); // opts[0] == prev
+    }
+    if opts.is_empty() {
+        let parked: Vec<usize> = (0..st.nthreads)
+            .filter(|&t| st.status[t] == Status::Blocked)
+            .collect();
+        st.record_violation(format!(
+            "deadlock: threads {:?} blocked with no runnable thread",
+            parked
+        ));
+        st.current = NOBODY;
+        ctx.cv.notify_all();
+        return None;
+    }
+    let pick = if opts.len() == 1 {
+        opts[0]
+    } else {
+        // Branching decision: consult replay schedule or DFS stack.
+        let d = st.depth;
+        st.depth += 1;
+        st.max_depth = st.max_depth.max(st.depth);
+        let tid = if let Some(forced) = &st.forced {
+            let want = forced.get(d).copied().unwrap_or(opts[0]);
+            if opts.contains(&want) {
+                want
+            } else {
+                opts[0]
+            }
+        } else {
+            if d == st.stack.len() {
+                st.stack.push(Choice { options: opts.clone(), index: 0 });
+            }
+            let c = &st.stack[d];
+            debug_assert_eq!(
+                c.options, opts,
+                "nondeterministic model: decision {d} options changed between runs"
+            );
+            c.options[c.index]
+        };
+        st.chosen.push(tid);
+        tid
+    };
+    if prev_runnable && pick != prev {
+        st.preemptions_used += 1;
+    }
+    if st.status[pick] == Status::Blocked {
+        st.status[pick] = Status::Runnable;
+        st.preds[pick] = None;
+    }
+    st.current = pick;
+    if pick != prev {
+        ctx.cv.notify_all();
+    }
+    Some(pick)
+}
+
+/// Park the calling virtual thread until it owns the virtual CPU (or the
+/// run aborts, in which case unwind). Lock is held on entry and exit.
+fn wait_for_cpu<'a>(
+    ctx: &Ctx,
+    mut guard: std::sync::MutexGuard<'a, RunState>,
+    me: usize,
+) -> std::sync::MutexGuard<'a, RunState> {
+    while !guard.abort && guard.current != me {
+        guard = ctx
+            .cv
+            .wait(guard)
+            .unwrap_or_else(|e| e.into_inner());
+    }
+    if guard.abort {
+        drop(guard);
+        panic::resume_unwind(Box::new(AbortRun));
+    }
+    guard
+}
+
+/// The common prologue of every model event executed by a virtual thread:
+/// take a scheduling decision at this yield point, hand off if another
+/// thread is chosen, and return with the lock held and the CPU owned.
+fn yield_point<'a>(ctx: &'a Ctx, me: usize) -> std::sync::MutexGuard<'a, RunState> {
+    let mut guard = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+    if guard.abort {
+        drop(guard);
+        panic::resume_unwind(Box::new(AbortRun));
+    }
+    debug_assert_eq!(guard.current, me, "yield point on a thread without the CPU");
+    guard.steps += 1;
+    if guard.steps > ctx.opts.max_steps {
+        guard.record_violation(format!(
+            "step limit exceeded ({} yield points): livelock or unbounded spin \
+             — use model::block_until instead of spinning",
+            ctx.opts.max_steps
+        ));
+        ctx.cv.notify_all();
+        drop(guard);
+        panic::resume_unwind(Box::new(AbortRun));
+    }
+    match decide_next(ctx, &mut guard, me) {
+        Some(pick) if pick == me => guard,
+        _ => wait_for_cpu(ctx, guard, me),
+    }
+}
+
+/// Bump the acting thread's clock component after an event.
+fn tick(st: &mut RunState, me: usize) {
+    st.clocks[me][me] += 1;
+}
+
+// ---------------------------------------------------------------------------
+// Events (called from util::vatomic and the tracked-alloc API)
+// ---------------------------------------------------------------------------
+
+fn is_release(o: Ordering) -> bool {
+    matches!(o, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn is_acquire(o: Ordering) -> bool {
+    matches!(o, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Atomic load through the shim. Setup phase / no model context: plain
+/// load. Virtual thread: yield point + happens-before bookkeeping.
+pub(crate) fn atomic_load(vid: &VarId, inner: &AtomicU64, order: Ordering) -> u64 {
+    match current_role() {
+        Some(Role::VThread(ctx, me)) => {
+            let mut st = yield_point(&ctx, me);
+            let idx = var_index(&mut st, vid);
+            let v = inner.load(Ordering::SeqCst);
+            if is_acquire(order) {
+                let rel = std::mem::take(&mut st.vars[idx].release);
+                RunState::join(&mut st.clocks[me], &rel);
+                st.vars[idx].release = rel;
+            }
+            tick(&mut st, me);
+            v
+        }
+        _ => inner.load(order),
+    }
+}
+
+/// Atomic store through the shim.
+pub(crate) fn atomic_store(vid: &VarId, inner: &AtomicU64, val: u64, order: Ordering) {
+    match current_role() {
+        Some(Role::VThread(ctx, me)) => {
+            let mut st = yield_point(&ctx, me);
+            let idx = var_index(&mut st, vid);
+            if is_release(order) {
+                let clock = st.clocks[me].clone();
+                st.vars[idx].release = clock;
+            } else {
+                // A Relaxed store breaks the release chain: a subsequent
+                // acquire load of *this* value synchronizes with nothing.
+                st.vars[idx].release.clear();
+            }
+            inner.store(val, Ordering::SeqCst);
+            tick(&mut st, me);
+            drop(st);
+        }
+        _ => inner.store(val, order),
+    }
+}
+
+/// Outcome of a VCell access check; the caller performs the raw memory
+/// access *after* this returns (it still owns the virtual CPU until its
+/// next yield point, so the access is exclusive).
+pub(crate) fn cell_write(vid: &VarId) {
+    let role = current_role();
+    match role {
+        Some(Role::VThread(ctx, me)) => {
+            let mut st = yield_point(&ctx, me);
+            let idx = var_index(&mut st, vid);
+            let mut race: Option<String> = None;
+            if let Some((wt, wc)) = st.vars[idx].last_write {
+                if wt != me && st.clocks[me].get(wt).copied().unwrap_or(0) < wc {
+                    race = Some(format!(
+                        "data race: write by thread {me} not ordered after \
+                         write by thread {wt} (missing release/acquire edge)"
+                    ));
+                }
+            }
+            if race.is_none() {
+                for (u, &rc) in st.vars[idx].reads.clone().iter().enumerate() {
+                    if u != me && rc > 0 && st.clocks[me].get(u).copied().unwrap_or(0) < rc {
+                        race = Some(format!(
+                            "data race: write by thread {me} not ordered after \
+                             read by thread {u} (missing release/acquire edge)"
+                        ));
+                        break;
+                    }
+                }
+            }
+            if let Some(msg) = race {
+                st.record_violation(msg);
+                ctx.cv.notify_all();
+                drop(st);
+                panic::resume_unwind(Box::new(AbortRun));
+            }
+            let epoch = st.clocks[me][me];
+            st.vars[idx].last_write = Some((me, epoch));
+            tick(&mut st, me);
+        }
+        Some(Role::Setup(_)) => {}
+        None => panic!("VCell accessed outside a model (build with the protocol, not production code)"),
+    }
+}
+
+pub(crate) fn cell_read(vid: &VarId) {
+    let role = current_role();
+    match role {
+        Some(Role::VThread(ctx, me)) => {
+            let mut st = yield_point(&ctx, me);
+            let idx = var_index(&mut st, vid);
+            if let Some((wt, wc)) = st.vars[idx].last_write {
+                if wt != me && st.clocks[me].get(wt).copied().unwrap_or(0) < wc {
+                    let msg = format!(
+                        "torn read: read by thread {me} races write by thread {wt} \
+                         (missing release/acquire edge)"
+                    );
+                    st.record_violation(msg);
+                    ctx.cv.notify_all();
+                    drop(st);
+                    panic::resume_unwind(Box::new(AbortRun));
+                }
+            }
+            let epoch = st.clocks[me][me];
+            st.vars[idx].reads[me] = epoch;
+            tick(&mut st, me);
+        }
+        Some(Role::Setup(_)) => {}
+        None => panic!("VCell accessed outside a model (build with the protocol, not production code)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public model-building API
+// ---------------------------------------------------------------------------
+
+/// Spawn a virtual thread. Only valid during the model body (setup
+/// phase); all threads must exist before the first one runs, which keeps
+/// thread ids — and therefore schedules — deterministic.
+pub fn spawn<F: FnOnce() + Send + 'static>(f: F) {
+    let ctx = match current_role() {
+        Some(Role::Setup(ctx)) => ctx,
+        Some(Role::VThread(..)) => {
+            panic!("model::spawn called from a virtual thread; spawn all threads in the model body")
+        }
+        None => panic!("model::spawn outside model::explore"),
+    };
+    let id;
+    {
+        let mut st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+        id = st.nthreads;
+        st.nthreads += 1;
+        st.status.push(Status::Runnable);
+        st.preds.push(None);
+    }
+    let tctx = Arc::clone(&ctx);
+    let handle = std::thread::Builder::new()
+        .name(format!("vthread-{id}"))
+        .spawn(move || {
+            ROLE.with(|r| *r.borrow_mut() = Some(Role::VThread(Arc::clone(&tctx), id)));
+            // Wait for the controller to start the run and for this thread
+            // to be granted the CPU the first time.
+            {
+                let guard = tctx.m.lock().unwrap_or_else(|e| e.into_inner());
+                let mut guard = guard;
+                while !guard.abort && !(guard.active && guard.current == id) {
+                    guard = tctx.cv.wait(guard).unwrap_or_else(|e| e.into_inner());
+                }
+                let aborted = guard.abort;
+                drop(guard);
+                if aborted {
+                    finish_thread(&tctx, id, None);
+                    return;
+                }
+            }
+            let result = panic::catch_unwind(AssertUnwindSafe(f));
+            let failure = match result {
+                Ok(()) => None,
+                Err(payload) => {
+                    if payload.downcast_ref::<AbortRun>().is_some() {
+                        None
+                    } else if let Some(s) = payload.downcast_ref::<&str>() {
+                        Some((*s).to_string())
+                    } else if let Some(s) = payload.downcast_ref::<String>() {
+                        Some(s.clone())
+                    } else {
+                        Some("virtual thread panicked (non-string payload)".into())
+                    }
+                }
+            };
+            finish_thread(&tctx, id, failure);
+        })
+        .expect("failed to spawn model thread");
+    ctx.m.lock().unwrap_or_else(|e| e.into_inner()).handles.push(handle);
+}
+
+fn finish_thread(ctx: &Ctx, id: usize, failure: Option<String>) {
+    let mut st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(msg) = failure {
+        st.record_violation(format!("thread {id} panicked: {msg}"));
+    }
+    st.status[id] = Status::Finished;
+    st.preds[id] = None;
+    if st.current == id || st.abort {
+        // Hand the CPU onward (or wake everyone for abort/run-end).
+        if st.abort {
+            st.current = NOBODY;
+            ctx.cv.notify_all();
+        } else {
+            decide_next(ctx, &mut st, id);
+        }
+    }
+    ctx.cv.notify_all();
+}
+
+/// Park the calling virtual thread until `pred` holds. The predicate is
+/// re-evaluated (under the run lock, by whichever thread is taking a
+/// scheduling decision) at every subsequent yield point; when it holds,
+/// this thread becomes schedulable again. `pred` must only read shim
+/// values via the `raw_load` accessors — it runs outside the scheduled
+/// thread and must not take yield points.
+///
+/// Replaces unbounded spin loops in models: a spin loop would make the
+/// schedule space infinite, and a spin that can never be satisfied
+/// becomes a detectable deadlock instead of a hang.
+pub fn block_until<P: Fn() -> bool>(pred: P) {
+    let (ctx, me) = match current_role() {
+        Some(Role::VThread(ctx, me)) => (ctx, me),
+        _ => panic!("model::block_until outside a virtual thread"),
+    };
+    let mut st = yield_point(&ctx, me);
+    if pred() {
+        tick(&mut st, me);
+        return;
+    }
+    let ptr: *const (dyn Fn() -> bool) = &pred;
+    // SAFETY: only the lifetime is transmuted away. We park in this frame
+    // until the scheduler clears the predicate slot and grants us the CPU
+    // (or aborts), so `pred` outlives every dereference; see `PredPtr`.
+    let ptr: *const (dyn Fn() -> bool + 'static) = unsafe { std::mem::transmute(ptr) };
+    st.status[me] = Status::Blocked;
+    st.preds[me] = Some(PredPtr(ptr));
+    // Hand off; we are not runnable, so this is a forced switch.
+    decide_next(&ctx, &mut st, me);
+    let mut st = wait_for_cpu(&ctx, st, me);
+    // Scheduler only grants a blocked thread after seeing `pred()` true,
+    // and nothing ran in between.
+    debug_assert!(st.status[me] == Status::Runnable);
+    tick(&mut st, me);
+}
+
+/// A plain yield point with no memory effect: lets the explorer consider
+/// a context switch here.
+pub fn yield_now() {
+    if let Some(Role::VThread(ctx, me)) = current_role() {
+        let mut st = yield_point(&ctx, me);
+        tick(&mut st, me);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracked allocations (use-after-free / double-free detection)
+// ---------------------------------------------------------------------------
+
+/// Register a model-level allocation; returns its id. Allowed in the
+/// setup phase and in virtual threads.
+pub fn track_alloc(name: &'static str) -> usize {
+    match current_role() {
+        Some(Role::VThread(ctx, me)) => {
+            let mut st = yield_point(&ctx, me);
+            let id = st.allocs.len();
+            st.allocs.push(AllocState { name, alive: true });
+            tick(&mut st, me);
+            id
+        }
+        Some(Role::Setup(ctx)) => {
+            let mut st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+            let id = st.allocs.len();
+            st.allocs.push(AllocState { name, alive: true });
+            id
+        }
+        None => panic!("model::track_alloc outside model::explore"),
+    }
+}
+
+fn alloc_event(op: &str, id: usize, freeing: bool) {
+    let (ctx, me) = match current_role() {
+        Some(Role::VThread(ctx, me)) => (ctx, me),
+        Some(Role::Setup(_)) => panic!("tracked allocations may only be {op}ed by virtual threads"),
+        None => panic!("model::track_{op} outside model::explore"),
+    };
+    let mut st = yield_point(&ctx, me);
+    let a = &mut st.allocs[id];
+    if !a.alive {
+        let msg = if freeing {
+            format!("double-free of tracked allocation `{}` by thread {me}", a.name)
+        } else {
+            format!("use-after-free: thread {me} accessed freed allocation `{}`", a.name)
+        };
+        st.record_violation(msg);
+        ctx.cv.notify_all();
+        drop(st);
+        panic::resume_unwind(Box::new(AbortRun));
+    }
+    if freeing {
+        a.alive = false;
+    }
+    tick(&mut st, me);
+}
+
+/// Record an access to a tracked allocation; a violation if it was freed.
+pub fn track_access(id: usize) {
+    alloc_event("access", id, false);
+}
+
+/// Free a tracked allocation; a violation if already freed.
+pub fn track_free(id: usize) {
+    alloc_event("free", id, true);
+}
+
+/// Is the tracked allocation still alive? For end-of-model assertions
+/// (e.g. "the spill buffer was freed exactly once").
+pub fn tracked_alive(id: usize) -> bool {
+    match current_role() {
+        Some(Role::VThread(ctx, _)) | Some(Role::Setup(ctx)) => {
+            let st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+            st.allocs[id].alive
+        }
+        None => panic!("model::tracked_alive outside model::explore"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The explorer
+// ---------------------------------------------------------------------------
+
+fn install_quiet_panic_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            // Virtual-thread panics are converted into model violations;
+            // suppress their default stderr spew. Everything else goes to
+            // the previous hook.
+            let in_model = ROLE.with(|r| {
+                matches!(r.borrow().as_ref(), Some(Role::VThread(..)))
+            });
+            if !in_model {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Execute one schedule. The DFS stack in `st` supplies the branching
+/// decisions; new decision points are appended with index 0.
+fn run_once(ctx: &Arc<Ctx>, body: &mut dyn FnMut()) -> (Option<Violation>, u64) {
+    {
+        let mut st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+        st.reset_for_run();
+    }
+    ROLE.with(|r| *r.borrow_mut() = Some(Role::Setup(Arc::clone(ctx))));
+    let body_result = panic::catch_unwind(AssertUnwindSafe(body));
+    ROLE.with(|r| *r.borrow_mut() = None);
+
+    let handles;
+    {
+        let mut st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+        let n = st.nthreads;
+        st.clocks = vec![vec![0; n]; n];
+        for t in 0..n {
+            st.clocks[t][t] = 1;
+        }
+        for v in &mut st.vars {
+            v.reads.resize(n, 0);
+        }
+        if body_result.is_err() {
+            st.record_violation("model body panicked during setup".into());
+        }
+        st.active = true;
+        if st.violation.is_none() {
+            // Initial decision: which thread runs first.
+            decide_next(ctx, &mut st, NOBODY);
+        }
+        ctx.cv.notify_all();
+        while !st.all_finished() {
+            st = ctx.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        handles = std::mem::take(&mut st.handles);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let mut st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+    (st.violation.take(), st.steps)
+}
+
+/// Advance the persistent DFS stack to the next unexplored schedule.
+/// Returns `false` when the space is exhausted.
+fn advance_dfs(st: &mut RunState) -> bool {
+    while let Some(top) = st.stack.last_mut() {
+        if top.index + 1 < top.options.len() {
+            top.index += 1;
+            return true;
+        }
+        st.stack.pop();
+    }
+    false
+}
+
+fn new_ctx(opts: Opts, forced: Option<Vec<usize>>) -> Arc<Ctx> {
+    Arc::new(Ctx {
+        m: Mutex::new(RunState {
+            generation: 0,
+            stack: Vec::new(),
+            forced,
+            max_depth: 0,
+            active: false,
+            abort: false,
+            status: Vec::new(),
+            preds: Vec::new(),
+            current: NOBODY,
+            chosen: Vec::new(),
+            depth: 0,
+            preemptions_used: 0,
+            steps: 0,
+            violation: None,
+            clocks: Vec::new(),
+            vars: Vec::new(),
+            allocs: Vec::new(),
+            handles: Vec::new(),
+            nthreads: 0,
+        }),
+        cv: Condvar::new(),
+        opts,
+    })
+}
+
+/// Explore every schedule of the model `body` (up to the preemption
+/// bound), stopping at the first violation.
+///
+/// `body` runs once per schedule on the calling thread (the *setup
+/// phase*): it builds the shared state and calls [`spawn`] for each
+/// virtual thread. Shim accesses during setup hit memory directly.
+pub fn explore(opts: Opts, mut body: impl FnMut()) -> Report {
+    install_quiet_panic_hook();
+    let ctx = new_ctx(opts, None);
+    let mut schedules = 0u64;
+    let mut violation = None;
+    let mut completed = true;
+    loop {
+        let (v, _steps) = run_once(&ctx, &mut body);
+        schedules += 1;
+        if v.is_some() {
+            violation = v;
+            break;
+        }
+        let mut st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+        if !advance_dfs(&mut st) {
+            break;
+        }
+        drop(st);
+        if schedules >= opts.max_schedules {
+            completed = false;
+            break;
+        }
+    }
+    let st = ctx.m.lock().unwrap_or_else(|e| e.into_inner());
+    Report { schedules, completed, max_depth: st.max_depth, violation }
+}
+
+/// Re-execute a single schedule previously reported in a
+/// [`Violation::schedule`]. Returns the violation it reproduces (if any).
+pub fn replay(opts: Opts, schedule: &[usize], mut body: impl FnMut()) -> Option<Violation> {
+    install_quiet_panic_hook();
+    let ctx = new_ctx(opts, Some(schedule.to_vec()));
+    let (v, _steps) = run_once(&ctx, &mut body);
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests (compiled only with --features model)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::vatomic::{VAtomicU64, VCell};
+    use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+
+    /// Two increments through a shim atomic: every schedule completes,
+    /// and the explorer enumerates more than one schedule.
+    #[test]
+    fn explores_multiple_schedules() {
+        let report = explore(Opts::default(), || {
+            let a = Arc::new(VAtomicU64::new(0));
+            let (a1, a2) = (Arc::clone(&a), Arc::clone(&a));
+            spawn(move || {
+                let v = a1.load(Relaxed);
+                a1.store(v + 1, Relaxed);
+            });
+            spawn(move || {
+                let v = a2.load(Relaxed);
+                a2.store(v + 1, Relaxed);
+            });
+        });
+        report.assert_ok();
+        assert!(report.completed, "tiny model must be exhaustible");
+        assert!(report.schedules > 1, "two racing threads need >1 schedule");
+    }
+
+    /// The classic lost-update: both threads can read 0, so some schedule
+    /// ends with counter == 1. Detected via an end-state assertion the
+    /// explorer surfaces as a violation.
+    #[test]
+    fn finds_lost_update() {
+        let report = explore(Opts::default(), || {
+            let a = Arc::new(VAtomicU64::new(0));
+            let done = Arc::new(VAtomicU64::new(0));
+            for _ in 0..2 {
+                let a = Arc::clone(&a);
+                let done = Arc::clone(&done);
+                spawn(move || {
+                    let v = a.load(Relaxed);
+                    a.store(v + 1, Relaxed);
+                    let d = done.load(Relaxed);
+                    done.store(d + 1, Relaxed);
+                    if done.load(Relaxed) == 2 {
+                        assert_eq!(a.load(Relaxed), 2, "lost update");
+                    }
+                });
+            }
+        });
+        let v = report.violation.expect("explorer must find the lost update");
+        assert!(v.message.contains("lost update"), "got: {}", v.message);
+        // The schedule replays to the same violation.
+        let r = replay(Opts::default(), &v.schedule, || {
+            let a = Arc::new(VAtomicU64::new(0));
+            let done = Arc::new(VAtomicU64::new(0));
+            for _ in 0..2 {
+                let a = Arc::clone(&a);
+                let done = Arc::clone(&done);
+                spawn(move || {
+                    let v = a.load(Relaxed);
+                    a.store(v + 1, Relaxed);
+                    let d = done.load(Relaxed);
+                    done.store(d + 1, Relaxed);
+                    if done.load(Relaxed) == 2 {
+                        assert_eq!(a.load(Relaxed), 2, "lost update");
+                    }
+                });
+            }
+        });
+        assert!(r.is_some(), "replay must reproduce the violation");
+    }
+
+    /// Release/acquire publish is race-free; the same protocol with a
+    /// Relaxed publish store is a torn read.
+    #[test]
+    fn relaxed_publish_is_a_torn_read() {
+        let run = |publish_order: Ordering| {
+            explore(Opts::default(), move || {
+                let flag = Arc::new(VAtomicU64::new(0));
+                let data = Arc::new(VCell::new(0u64));
+                let (f1, d1) = (Arc::clone(&flag), Arc::clone(&data));
+                spawn(move || {
+                    d1.set(42);
+                    f1.store(1, publish_order);
+                });
+                let (f2, d2) = (Arc::clone(&flag), Arc::clone(&data));
+                spawn(move || {
+                    block_until(move || f2.raw_load() == 1);
+                    if f2.load(Acquire) == 1 {
+                        assert_eq!(d2.get(), 42);
+                    }
+                });
+            })
+        };
+        run(Release).assert_ok();
+        let v = run(Relaxed).violation.expect("Relaxed publish must race");
+        assert!(v.message.contains("race") || v.message.contains("torn"), "got: {}", v.message);
+    }
+
+    /// block_until on a condition nobody will ever make true is a
+    /// detected deadlock, not a hang.
+    #[test]
+    fn detects_deadlock() {
+        let report = explore(Opts::default(), || {
+            let a = Arc::new(VAtomicU64::new(0));
+            let a1 = Arc::clone(&a);
+            spawn(move || {
+                block_until(move || a1.raw_load() == 1);
+            });
+        });
+        let v = report.violation.expect("must detect deadlock");
+        assert!(v.message.contains("deadlock"), "got: {}", v.message);
+    }
+
+    /// Use-after-free through the tracked-allocation API.
+    #[test]
+    fn detects_use_after_free() {
+        let report = explore(Opts::default(), || {
+            let id = track_alloc("node");
+            let gate = Arc::new(VAtomicU64::new(0));
+            let g1 = Arc::clone(&gate);
+            spawn(move || {
+                track_free(id);
+                g1.store(1, Release);
+            });
+            let g2 = Arc::clone(&gate);
+            spawn(move || {
+                block_until(move || g2.raw_load() == 1);
+                let _ = g2.load(Acquire);
+                track_access(id);
+            });
+        });
+        let v = report.violation.expect("must detect UAF");
+        assert!(v.message.contains("use-after-free"), "got: {}", v.message);
+    }
+}

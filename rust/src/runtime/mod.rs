@@ -150,6 +150,8 @@ impl Shared {
         let fd = self.wake_fds[worker];
         if fd >= 0 {
             let one: u64 = 1;
+            // SAFETY: fd is the worker's live eventfd; the write reads 8 bytes
+            // from a live u64.
             unsafe { sys::write(fd, &one as *const u64 as *const sys::c_void, 8) };
         }
     }
@@ -159,6 +161,7 @@ impl Drop for Shared {
     fn drop(&mut self) {
         for &fd in &self.wake_fds {
             if fd >= 0 {
+                // SAFETY: the Shared owns its wake fds; each is closed exactly once, here.
                 unsafe { sys::close(fd) };
             }
         }
@@ -284,6 +287,8 @@ pub fn try_worker_id() -> Option<usize> {
     if p.is_null() {
         None
     } else {
+        // SAFETY: non-null means WORKER points at this thread's Worker, which
+        // lives for the thread's lifetime.
         Some(unsafe { (*p).id })
     }
 }
@@ -291,6 +296,7 @@ pub fn try_worker_id() -> Option<usize> {
 /// Is the calling thread currently in delegated context (§3.4)?
 pub fn in_delegated_context() -> bool {
     let p = WORKER.with(|c| c.get());
+    // SAFETY: checked non-null — points at this thread's live Worker.
     !p.is_null() && unsafe { (*p).in_delegated.get() }
 }
 
@@ -871,6 +877,8 @@ impl Runtime {
             injectors: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
             injector_nonempty: (0..n).map(|_| AtomicBool::new(false)).collect(),
             wake_fds: (0..n)
+                // SAFETY: eventfd has no memory preconditions; failures yield -1,
+                // handled by the fd >= 0 guards at use sites.
                 .map(|_| unsafe { sys::eventfd(0, sys::EFD_NONBLOCK | sys::EFD_CLOEXEC) })
                 .collect(),
         });

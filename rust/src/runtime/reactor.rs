@@ -41,9 +41,12 @@ impl Reactor {
     /// worker's wake eventfd. If `epoll_create1` fails the reactor is
     /// disabled and every [`wait_fd`] degrades to a fiber yield.
     pub(crate) fn new(wake_fd: i32) -> Reactor {
+        // SAFETY: epoll_create1 has no memory preconditions; the fd is checked
+        // before use.
         let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
         if epfd >= 0 && wake_fd >= 0 {
             let mut ev = sys::epoll_event { events: sys::EPOLLIN, data: WAKE_TOKEN };
+            // SAFETY: epfd/wake_fd were checked valid; ev is a live epoll_event.
             unsafe { sys::epoll_ctl(epfd, sys::EPOLL_CTL_ADD, wake_fd, &mut ev) };
         }
         Reactor { epfd, wake_fd, waiters: HashMap::new() }
@@ -82,8 +85,10 @@ impl Reactor {
         let mut ev = sys::epoll_event { events, data: fd as u32 as u64 };
         // ADD for a fresh fd; an fd left registered (but disarmed) by a
         // previous oneshot wake fails ADD with EEXIST, so fall back to MOD.
+        // SAFETY: ev is a live epoll_event; epfd is our epoll instance.
         let mut rc = unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_ADD, fd, &mut ev) };
         if rc < 0 {
+            // SAFETY: same live arguments as the ADD attempt above.
             rc = unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_MOD, fd, &mut ev) };
         }
         if rc < 0 {
@@ -107,6 +112,8 @@ impl Reactor {
             return Vec::new();
         }
         let mut events = [sys::epoll_event { events: 0, data: 0 }; EVENT_BATCH];
+        // SAFETY: events is a live buffer of EVENT_BATCH entries and the
+        // kernel writes at most that many.
         let n = unsafe {
             sys::epoll_wait(self.epfd, events.as_mut_ptr(), EVENT_BATCH as sys::c_int, timeout_ms)
         };
@@ -137,6 +144,7 @@ impl Reactor {
         if self.wake_fd >= 0 {
             let mut val: u64 = 0;
             // A single read resets the eventfd counter to zero.
+            // SAFETY: wake_fd checked valid; val is a live writable u64.
             unsafe { sys::read(self.wake_fd, &mut val as *mut u64 as *mut sys::c_void, 8) };
         }
     }
@@ -145,6 +153,7 @@ impl Reactor {
 impl Drop for Reactor {
     fn drop(&mut self) {
         if self.epfd >= 0 {
+            // SAFETY: the Reactor owns epfd; closed exactly once, here.
             unsafe { sys::close(self.epfd) };
         }
     }
@@ -227,10 +236,12 @@ mod tests {
 
     #[test]
     fn wake_eventfd_pops_a_blocking_poll() {
+        // SAFETY: eventfd has no memory preconditions; checked below.
         let efd = unsafe { sys::eventfd(0, sys::EFD_NONBLOCK | sys::EFD_CLOEXEC) };
         assert!(efd >= 0);
         let mut r = Reactor::new(efd);
         let one: u64 = 1;
+        // SAFETY: efd is the valid eventfd created above; one is a live u64.
         unsafe { sys::write(efd, &one as *const u64 as *const sys::c_void, 8) };
         // The wake event is swallowed (no fiber) but ends the wait early.
         let t0 = std::time::Instant::now();
@@ -247,6 +258,7 @@ mod tests {
         use std::os::unix::io::AsRawFd;
         assert!(r.register(server.as_raw_fd(), true, false, 1));
         assert!(r.poll(0).is_empty());
+        // SAFETY: efd was created by this test; closed exactly once.
         unsafe { sys::close(efd) };
     }
 }

@@ -30,6 +30,8 @@ pub struct XlaExec {
 // (PJRT CPU itself is thread-safe; only the Rc refcounts require the
 // single-owner argument.)
 unsafe impl Send for XlaExec {}
+// SAFETY: same single-owner argument as XlaExec above — a BatchEngine
+// moves its whole self-contained Rc graph with it.
 unsafe impl Send for BatchEngine {}
 
 impl XlaExec {

@@ -65,6 +65,9 @@ pub(crate) struct PropBox<T> {
     value: UnsafeCell<T>,
 }
 
+/// # Safety
+/// `p` must be the pointer the registry stored from
+/// `Box::into_raw::<PropBox<T>>` with this same `T`, not yet reclaimed.
 unsafe fn drop_propbox<T>(p: *mut u8) {
     // SAFETY: registry stored this pointer from Box::into_raw::<PropBox<T>>.
     unsafe { drop(Box::from_raw(p as *mut PropBox<T>)) };
@@ -89,6 +92,10 @@ fn alloc_propbox<T: 'static>(w: &mut Worker, value: T) -> *mut PropBox<T> {
 // ---------------------------------------------------------------------
 
 /// apply(): take the closure env by value, run it on the property, respond.
+///
+/// # Safety
+/// Thunk contract: `env` holds a forgotten `C` (read exactly once);
+/// `prop` points at the live `PropBox<T>` owned by this trustee.
 unsafe fn apply_thunk<T, U, C>(env: *const u8, prop: *mut u8, _args: &[u8], out: &mut ResponseWriter)
 where
     U: Wire,
@@ -104,10 +111,14 @@ where
 }
 
 /// apply() variant without a response (fire-and-forget).
+///
+/// # Safety
+/// Same thunk contract as [`apply_thunk`].
 unsafe fn apply_noresp_thunk<T, C>(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter)
 where
     C: FnOnce(&mut T),
 {
+    // SAFETY: env holds a forgotten C by value; prop is a live PropBox<T>.
     unsafe {
         let c = env.cast::<C>().read_unaligned();
         let pb = prop as *mut PropBox<T>;
@@ -116,6 +127,9 @@ where
 }
 
 /// apply_with(): also decode serialized args.
+///
+/// # Safety
+/// Same thunk contract as [`apply_thunk`]; `args` carry a wire-encoded `V`.
 unsafe fn apply_with_thunk<T, V, U, C>(
     env: *const u8,
     prop: *mut u8,
@@ -126,6 +140,7 @@ unsafe fn apply_with_thunk<T, V, U, C>(
     U: Wire,
     C: FnOnce(&mut T, V) -> U,
 {
+    // SAFETY: env holds a forgotten C by value; prop is a live PropBox<T>.
     unsafe {
         let c = env.cast::<C>().read_unaligned();
         let mut r = WireReader::new(args);
@@ -140,10 +155,14 @@ unsafe fn apply_with_thunk<T, V, U, C>(
 /// borrowed slice (no decode allocation) and writes its response directly
 /// into the channel's response writer — the allocation-free data path
 /// behind the KV backends (one-copy GET).
+///
+/// # Safety
+/// Same thunk contract as [`apply_thunk`]; `args` borrow the framed bytes.
 unsafe fn apply_raw_thunk<T, C>(env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter)
 where
     C: FnOnce(&mut T, &[u8], &mut ResponseWriter),
 {
+    // SAFETY: env holds a forgotten C by value; prop is a live PropBox<T>.
     unsafe {
         let c = env.cast::<C>().read_unaligned();
         let pb = prop as *mut PropBox<T>;
@@ -152,7 +171,12 @@ where
 }
 
 /// Type-erased refcount adjustment; reclaims the property at zero.
+///
+/// # Safety
+/// `env` holds a framed `i64` delta; `prop` points at the live property's
+/// `PropHeader` (refcount touched only by this trustee).
 unsafe fn rc_delta_thunk(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter) {
+    // SAFETY: per the contract above; reclaim consumes the registry slot once.
     unsafe {
         let delta = env.cast::<i64>().read_unaligned();
         let h = &*(prop as *const PropHeader);
@@ -171,12 +195,17 @@ unsafe fn rc_delta_thunk(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut
 /// travel on different client→trustee slot pairs, and the `-1` can land
 /// first, hit zero, and reclaim the property under a live handle (see
 /// DESIGN.md, "refcount ordering contract").
+///
+/// # Safety
+/// `prop` points at the live property's `PropHeader`; only this trustee
+/// mutates the refcount.
 unsafe fn rc_inc_ack_thunk(
     _env: *const u8,
     prop: *mut u8,
     _args: &[u8],
     out: &mut ResponseWriter,
 ) {
+    // SAFETY: prop is the live PropHeader; the refcount is trustee-private.
     unsafe {
         let h = &*(prop as *const PropHeader);
         let rc = h.refcount.get() + 1;
@@ -193,12 +222,18 @@ unsafe fn rc_inc_ack_thunk(
 /// re-entrantly under the in-progress delegated closure. The flag store
 /// is a plain `mov` on x86-64 (Release store, no RMW), preserving the
 /// paper's no-atomic-instructions property on the data path.
+///
+/// # Safety
+/// `env` holds the address of the cloner's spin flag, which stays live
+/// until the flag is set; `prop` points at the live `PropHeader`.
 unsafe fn rc_inc_spin_ack_thunk(
     env: *const u8,
     prop: *mut u8,
     _args: &[u8],
     _out: &mut ResponseWriter,
 ) {
+    // SAFETY: per the contract — flag_addr outlives the spin; prop is the
+    // live PropHeader.
     unsafe {
         let flag_addr = env.cast::<usize>().read_unaligned();
         let h = &*(prop as *const PropHeader);
@@ -222,12 +257,16 @@ pub(crate) fn is_rc_increment_thunk(thunk_raw: u64) -> bool {
 
 /// entrust(): move the value in, allocate the PropBox here, respond with
 /// its address.
+///
+/// # Safety
+/// `env` holds a forgotten `T` moved in by `entrust` (read exactly once).
 unsafe fn entrust_thunk<T: 'static>(
     env: *const u8,
     _prop: *mut u8,
     _args: &[u8],
     out: &mut ResponseWriter,
 ) {
+    // SAFETY: env holds the forgotten T; read exactly once and boxed.
     unsafe {
         let v = env.cast::<T>().read_unaligned();
         let ptr = with_worker(|w| alloc_propbox(w, v));
@@ -259,6 +298,10 @@ impl Drop for DelegatedGuard {
 
 /// launch(): spawn a trustee-side fiber running the closure under the
 /// latch; deliver the result via a second delegation call (Fig. 4).
+///
+/// # Safety
+/// Thunk contract: `env` holds a forgotten `LaunchEnv<C>` (read once);
+/// `prop` points at the live `PropBox<Latch<T>>`.
 unsafe fn launch_thunk<T, U, C>(env: *const u8, prop: *mut u8, _args: &[u8], _out: &mut ResponseWriter)
 where
     T: 'static,
@@ -271,6 +314,8 @@ where
         client: usize,
         cell_addr: usize,
     }
+    // SAFETY: env holds the forgotten LaunchEnv<C>; prop is the live
+    // PropBox<Latch<T>>.
     unsafe {
         let LaunchEnv { c, client, cell_addr } = env.cast::<LaunchEnv<C>>().read_unaligned();
         let latch_prop = prop as *mut PropBox<Latch<T>>;
@@ -314,6 +359,10 @@ fn deliver_launch_result<U: Send + 'static>(client: usize, cell_addr: usize, u: 
         u: U,
         cell_addr: usize,
     }
+    ///
+    /// # Safety
+    /// `env` holds a forgotten `DoneEnv<U>`; `cell_addr` points at the
+    /// `LaunchCell` pinned on the client fiber's suspended stack.
     unsafe fn launch_done_thunk<U: Send + 'static>(
         env: *const u8,
         _prop: *mut u8,
@@ -321,6 +370,8 @@ fn deliver_launch_result<U: Send + 'static>(client: usize, cell_addr: usize, u: 
         _out: &mut ResponseWriter,
     ) {
         // Runs on the *client's* worker, in delegated context.
+        // SAFETY: env holds the forgotten DoneEnv<U>; the cell outlives the
+        // suspended fiber that owns it.
         unsafe {
             let DoneEnv { u, cell_addr } = env.cast::<DoneEnv<U>>().read_unaligned();
             let cell = &mut *(cell_addr as *mut LaunchCell<U>);
@@ -330,6 +381,8 @@ fn deliver_launch_result<U: Send + 'static>(client: usize, cell_addr: usize, u: 
         }
     }
     let done = DoneEnv { u, cell_addr };
+    // SAFETY: done is a live value on this frame; the bytes are copied by
+    // the framing call and the original is forgotten below (a move).
     let env_bytes = unsafe {
         std::slice::from_raw_parts(&done as *const DoneEnv<U> as *const u8, size_of::<DoneEnv<U>>())
     };
@@ -419,7 +472,12 @@ fn delegate_blocking<U: Wire + 'static>(enqueue: impl FnOnce(Completion)) -> U {
 
 /// env bytes of a value to be moved through the channel. Caller must
 /// `mem::forget` the value after framing.
+///
+/// # Safety
+/// The returned bytes are a *move* of `c`: the caller must copy them
+/// exactly once and `mem::forget` the original.
 unsafe fn env_bytes_of<C>(c: &C) -> &[u8] {
+    // SAFETY: any live value is readable as size_of::<C>() bytes.
     unsafe { std::slice::from_raw_parts(c as *const C as *const u8, size_of::<C>()) }
 }
 
@@ -485,6 +543,7 @@ impl TrusteeRef {
                         worker,
                         entrust_thunk::<T>,
                         std::ptr::null_mut(),
+                        // SAFETY: framing copies the bytes once; value is forgotten below.
                         unsafe { env_bytes_of(&value) },
                         completion,
                         true,
@@ -547,6 +606,8 @@ pub struct Trust<T: 'static> {
 // the handle merely routes requests. T: Send because entrust moved T to
 // another thread and drop may run it there.
 unsafe impl<T: Send + 'static> Send for Trust<T> {}
+// SAFETY: same argument — &Trust only enqueues requests; T itself is
+// never touched off-trustee.
 unsafe impl<T: Send + 'static> Sync for Trust<T> {}
 
 impl<T: 'static> Trust<T> {
@@ -591,6 +652,7 @@ impl<T: 'static> Trust<T> {
                         trustee,
                         apply_thunk::<T, U, C>,
                         prop,
+                        // SAFETY: framing copies the bytes once; c is forgotten below.
                         unsafe { env_bytes_of(&c) },
                         completion,
                         true,
@@ -680,6 +742,7 @@ impl<T: 'static> Trust<T> {
             self.trustee,
             apply_thunk::<T, U, C>,
             prop,
+            // SAFETY: framing copies the bytes once; c is forgotten below.
             unsafe { env_bytes_of(&c) },
             completion,
             false,
@@ -706,6 +769,7 @@ impl<T: 'static> Trust<T> {
             self.trustee,
             apply_noresp_thunk::<T, C>,
             prop,
+            // SAFETY: framing copies the bytes once; c is forgotten below.
             unsafe { env_bytes_of(&c) },
             Completion::none(),
             false,
@@ -736,6 +800,7 @@ impl<T: 'static> Trust<T> {
                         trustee,
                         apply_with_thunk::<T, V, U, C>,
                         prop,
+                        // SAFETY: framing copies the bytes once; c is forgotten below.
                         unsafe { env_bytes_of(&c) },
                         completion,
                         true,
@@ -776,6 +841,7 @@ impl<T: 'static> Trust<T> {
             self.trustee,
             apply_with_thunk::<T, V, U, C>,
             prop,
+            // SAFETY: framing copies the bytes once; c is forgotten below.
             unsafe { env_bytes_of(&c) },
             completion,
             false,
@@ -855,6 +921,7 @@ impl<T: 'static> Trust<T> {
             self.trustee,
             apply_raw_thunk::<T, C>,
             prop,
+            // SAFETY: framing copies the bytes once; c is forgotten below.
             unsafe { env_bytes_of(&c) },
             completion,
             false,
@@ -878,6 +945,8 @@ impl<T: 'static> Trust<T> {
         match try_worker_id() {
             Some(id) if id == self.trustee => {
                 // Direct: we are the trustee thread.
+                // SAFETY: prop outlives every handle and only the trustee — us, here —
+                // touches the header.
                 let h = unsafe { &(*self.prop.as_ptr()).header };
                 let rc = (h.refcount.get() as i64 + delta) as u64;
                 h.refcount.set(rc);
@@ -912,11 +981,15 @@ impl<T: 'static> Trust<T> {
                 self.shared.inject(
                     self.trustee,
                     Box::new(move || {
+                        // SAFETY: the injected closure runs on the trustee thread; prop stays
+                        // live until the refcount it guards reaches zero there.
                         let h = unsafe { &*(prop_addr as *const PropHeader) };
                         let rc = (h.refcount.get() as i64 + delta) as u64;
                         h.refcount.set(rc);
                         if rc == 0 {
                             let idx = h.reg_idx.get();
+                            // SAFETY: running on the owning worker; idx is the live registry slot
+                            // recorded when the property was allocated.
                             unsafe { reclaim_on_current_worker(idx) };
                         }
                     }),
@@ -940,6 +1013,8 @@ impl<T: 'static> Trust<T> {
             Some(id) if id == self.trustee => {
                 // Direct: trustee-thread clones are already ordered with
                 // every served decrement.
+                // SAFETY: prop outlives every handle and only the trustee — us, here —
+                // touches the header.
                 let h = unsafe { &(*self.prop.as_ptr()).header };
                 h.refcount.set(h.refcount.get() + 1);
             }
@@ -1015,6 +1090,8 @@ impl<T: 'static> Trust<T> {
                 self.shared.inject(
                     self.trustee,
                     Box::new(move || {
+                        // SAFETY: the injected closure runs on the trustee thread; prop stays
+                        // live while a handle (ours) still exists.
                         let h = unsafe { &*(prop_addr as *const PropHeader) };
                         h.refcount.set(h.refcount.get() + 1);
                         let (m, cv) = &*done2;
@@ -1081,6 +1158,7 @@ impl<T: 'static> Trust<Latch<T>> {
                 self.trustee,
                 launch_thunk::<T, U, C>,
                 prop,
+                // SAFETY: framing copies the bytes once; env is forgotten below.
                 unsafe { env_bytes_of(&env) },
                 Completion::none(),
                 true,
@@ -1140,6 +1218,8 @@ pub struct Latch<T> {
 // Latch is Send (can be entrusted/moved between threads while unused) but
 // intentionally NOT Sync — the compiler derives !Sync from Cell/RefCell,
 // which is exactly the paper's footnote 4.
+// SAFETY: T: Send moves with the latch; all interior mutability is
+// used by one thread at a time (handoff via entrust/launch).
 unsafe impl<T: Send> Send for Latch<T> {}
 
 impl<T> Latch<T> {

@@ -20,6 +20,8 @@ pub fn pin_to_cpu(cpu: usize) -> bool {
         use crate::util::sys as libc;
         let ncpu = num_cpus();
         let target = cpu % ncpu;
+        // SAFETY: set is a live cpu_set_t; CPU_ZERO/CPU_SET only write within
+        // it, and sched_setaffinity reads exactly cpusetsize bytes.
         unsafe {
             let mut set: libc::cpu_set_t = std::mem::zeroed();
             libc::CPU_ZERO(&mut set);

@@ -64,6 +64,8 @@ pub fn pause_n(n: u32) {
 #[inline(always)]
 pub fn prefetch_read<T>(p: *const T) {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: _mm_prefetch is a hint — it dereferences nothing and any
+    // address, valid or not, is permitted.
     unsafe {
         core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
     }

@@ -32,21 +32,27 @@ pub struct CountingAlloc;
 // SAFETY: defers entirely to `System`; the counters do not affect layout
 // or pointer validity.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: the caller upholds GlobalAlloc's contract; we only count.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        // SAFETY: layout forwarded verbatim from our caller.
         unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: the caller upholds GlobalAlloc's contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: ptr/layout forwarded verbatim from our caller.
         unsafe { System.dealloc(ptr, layout) }
     }
 
+    // SAFETY: the caller upholds GlobalAlloc's contract; we only count.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         // A growth realloc is an allocation event for the contract: the
         // hot path must not grow buffers at steady state either.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        // SAFETY: ptr/layout/new_size forwarded verbatim from our caller.
         unsafe { System.realloc(ptr, layout, new_size) }
     }
 }

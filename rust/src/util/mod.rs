@@ -20,6 +20,8 @@
 //!   allocation-free replacement for boxed completions/callbacks)
 //! - [`count_alloc`] — opt-in counting global allocator behind the
 //!   zero-allocation hot-path regression test
+//! - [`vatomic`] — virtual atomics: `std::sync::atomic` newtypes that the
+//!   `model` feature reroutes through the interleaving explorer
 
 pub mod affinity;
 pub mod cache;
@@ -30,6 +32,7 @@ pub mod rng;
 pub mod smallfn;
 pub mod stats;
 pub mod sys;
+pub mod vatomic;
 pub mod zipf;
 
 pub use cache::{pause, pause_n, CachePadded};

@@ -76,6 +76,7 @@ macro_rules! define_inline_fn_once {
             /// The empty value (a fire-and-forget marker): calling it is
             /// a no-op, dropping it is a no-op.
             pub const fn none() -> $name {
+                // SAFETY: touches nothing; unsafe only to match the drop-fn pointer type.
                 unsafe fn drop_nothing(_p: *mut u8, _heap: bool) {}
                 $name {
                     data: $crate::util::smallfn::InlineData::uninit(),
@@ -90,6 +91,8 @@ macro_rules! define_inline_fn_once {
             where
                 C: FnOnce($($argty),*) + 'static,
             {
+                // SAFETY: caller passes `p` pointing at a live `C` (inline buffer or
+                // heap box per `heap`), moved out exactly once.
                 unsafe fn call_c<C: FnOnce($($argty),*)>(
                     p: *mut u8,
                     heap: bool
@@ -107,6 +110,8 @@ macro_rules! define_inline_fn_once {
                         c($($arg),*);
                     }
                 }
+                // SAFETY: caller passes `p` pointing at a live `C` not yet consumed;
+                // drops it in place (or frees the heap box).
                 unsafe fn drop_c<C>(p: *mut u8, heap: bool) {
                     if heap {
                         // SAFETY: as in `call_c`'s heap arm.

@@ -118,12 +118,14 @@ mod tests {
 
     #[test]
     fn page_size_sane() {
+        // SAFETY: sysconf has no memory preconditions.
         let sz = unsafe { sysconf(_SC_PAGESIZE) };
         assert!(sz >= 4096, "page size {sz}");
     }
 
     #[test]
     fn cpu_set_ops() {
+        // SAFETY: cpu_set_t is a plain bitmask; all-zeroes is a valid value.
         let mut set: cpu_set_t = unsafe { std::mem::zeroed() };
         CPU_ZERO(&mut set);
         CPU_SET(0, &mut set);
@@ -135,6 +137,8 @@ mod tests {
 
     #[test]
     fn epoll_eventfd_roundtrip() {
+        // SAFETY: raw syscall roundtrip — every pointer passed is a live local
+        // (event buffer, u64 word), and fds are checked right after creation.
         unsafe {
             let ep = epoll_create1(EPOLL_CLOEXEC);
             assert!(ep >= 0, "epoll_create1 failed");
@@ -168,6 +172,8 @@ mod tests {
 
     #[test]
     fn mmap_roundtrip() {
+        // SAFETY: fresh anonymous mapping; checked against MAP_FAILED before
+        // any access, unmapped exactly once.
         unsafe {
             let p = mmap(
                 std::ptr::null_mut(),

@@ -1,0 +1,195 @@
+//! Virtual atomics — the shim between the crate's lock-free protocols and
+//! the [`crate::model`] interleaving explorer.
+//!
+//! In a normal build every type here is a zero-cost `#[inline]` newtype
+//! over `std::sync::atomic` (or `UnsafeCell` for [`VCell`]): same codegen
+//! as using the std types directly. Under `--features model` every
+//! load/store/cell access first consults a thread-local model context;
+//! inside [`crate::model::explore`] the access becomes a scheduling yield
+//! point with happens-before bookkeeping, outside one it falls back to
+//! the plain operation. This is what lets `channel/slot.rs` run its real
+//! header protocol under the explorer without a test-only fork of the
+//! code.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[cfg(feature = "model")]
+use crate::model::VarId;
+
+/// A `u64` atomic routed through the model explorer when one is active.
+#[derive(Debug)]
+pub struct VAtomicU64 {
+    inner: AtomicU64,
+    #[cfg(feature = "model")]
+    vid: VarId,
+}
+
+impl VAtomicU64 {
+    pub const fn new(v: u64) -> VAtomicU64 {
+        VAtomicU64 {
+            inner: AtomicU64::new(v),
+            #[cfg(feature = "model")]
+            vid: VarId::unregistered(),
+        }
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> u64 {
+        #[cfg(feature = "model")]
+        {
+            crate::model::atomic_load(&self.vid, &self.inner, order)
+        }
+        #[cfg(not(feature = "model"))]
+        {
+            self.inner.load(order)
+        }
+    }
+
+    #[inline]
+    pub fn store(&self, val: u64, order: Ordering) {
+        #[cfg(feature = "model")]
+        {
+            crate::model::atomic_store(&self.vid, &self.inner, val, order)
+        }
+        #[cfg(not(feature = "model"))]
+        {
+            self.inner.store(val, order)
+        }
+    }
+
+    /// Raw value read with **no** scheduling yield point and **no**
+    /// happens-before effect (the moral equivalent of peeking at memory).
+    /// For [`crate::model::block_until`] predicates, which run outside
+    /// the scheduled thread; production code should use [`Self::load`].
+    #[inline]
+    pub fn raw_load(&self) -> u64 {
+        self.inner.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for VAtomicU64 {
+    fn default() -> Self {
+        VAtomicU64::new(0)
+    }
+}
+
+/// A `bool` flavour of [`VAtomicU64`] (stored as 0/1), for ack flags like
+/// the refcount spin-ack in `trust`.
+#[derive(Debug, Default)]
+pub struct VBool(VAtomicU64);
+
+impl VBool {
+    pub const fn new(v: bool) -> VBool {
+        VBool(VAtomicU64::new(v as u64))
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> bool {
+        self.0.load(order) != 0
+    }
+
+    #[inline]
+    pub fn store(&self, val: bool, order: Ordering) {
+        self.0.store(val as u64, order)
+    }
+
+    /// See [`VAtomicU64::raw_load`].
+    #[inline]
+    pub fn raw_load(&self) -> bool {
+        self.0.raw_load() != 0
+    }
+}
+
+/// Non-atomic shared data whose accesses are *race-checked* by the model
+/// explorer: a read or write with no happens-before edge to the last
+/// conflicting access is reported as a torn read / data race.
+///
+/// This type exists for protocol **models** (the payload bytes a slot
+/// header publishes, a refcount only the trustee may touch). It is
+/// deliberately unusable for cross-thread sharing in normal builds:
+///
+/// - without the `model` feature it is `!Sync` (it wraps an
+///   `UnsafeCell`), so safe code cannot share it across threads at all;
+/// - with the `model` feature it is `Sync`, but any access outside a
+///   model context panics, so the only concurrent accesses that can
+///   happen are the serialized, race-checked ones inside
+///   [`crate::model::explore`].
+#[derive(Debug)]
+pub struct VCell<T> {
+    inner: std::cell::UnsafeCell<T>,
+    #[cfg(feature = "model")]
+    vid: VarId,
+}
+
+// SAFETY: with the `model` feature, every access (get/set) either runs
+// inside the explorer — which runs exactly one virtual thread at a time
+// under a global lock, making accesses data-race-free in the Rust sense
+// even when the *modelled* protocol races (that is reported as a
+// violation instead of executed as UB) — or panics before touching the
+// cell. There is no Sync impl without the feature.
+#[cfg(feature = "model")]
+unsafe impl<T: Send> Sync for VCell<T> {}
+
+impl<T: Copy> VCell<T> {
+    pub const fn new(v: T) -> VCell<T> {
+        VCell {
+            inner: std::cell::UnsafeCell::new(v),
+            #[cfg(feature = "model")]
+            vid: VarId::unregistered(),
+        }
+    }
+
+    /// Read the value (a race-checked model event).
+    #[inline]
+    pub fn get(&self) -> T {
+        #[cfg(feature = "model")]
+        crate::model::cell_read(&self.vid);
+        // SAFETY: in a normal build the missing Sync impl confines us to
+        // one thread; under the model feature `cell_read` has either
+        // panicked or serialized us (explorer grants one thread at a
+        // time, and the grant persists until our next yield point).
+        unsafe { *self.inner.get() }
+    }
+
+    /// Write the value (a race-checked model event).
+    #[inline]
+    pub fn set(&self, v: T) {
+        #[cfg(feature = "model")]
+        crate::model::cell_write(&self.vid);
+        // SAFETY: as in `get`.
+        unsafe { *self.inner.get() = v }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+
+    /// Outside a model (or without the feature) the shim is just an
+    /// atomic.
+    #[test]
+    fn passthrough_semantics() {
+        let a = VAtomicU64::new(7);
+        assert_eq!(a.load(Relaxed), 7);
+        a.store(9, Release);
+        assert_eq!(a.load(Acquire), 9);
+        assert_eq!(a.raw_load(), 9);
+
+        let b = VBool::new(false);
+        assert!(!b.load(Relaxed));
+        b.store(true, Release);
+        assert!(b.load(Acquire));
+    }
+
+    /// `VCell` passthrough — only without the model feature: with it,
+    /// access outside a model context is a deliberate panic.
+    #[cfg(not(feature = "model"))]
+    #[test]
+    fn vcell_passthrough() {
+        let c = VCell::new(3u64);
+        assert_eq!(c.get(), 3);
+        c.set(4);
+        assert_eq!(c.get(), 4);
+    }
+}

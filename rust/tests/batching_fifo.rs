@@ -21,18 +21,29 @@ use trustee::trust::local_trustee;
 
 /// Fetch-and-add thunk: add the env u64 to the property, respond with the
 /// pre-increment value (exposes service order on the response stream).
+///
+/// # Safety
+/// `env` holds a framed `u64` delta; `prop` points at the live `u64`
+/// property on the trustee.
 unsafe fn fadd_thunk(env: *const u8, prop: *mut u8, _args: &[u8], out: &mut ResponseWriter) {
+    // SAFETY: env is the framed u64 delta.
     let delta = unsafe { env.cast::<u64>().read_unaligned() };
     let p = prop.cast::<u64>();
+    // SAFETY: prop is the live u64 property; thunks run serially.
     let old = unsafe { *p };
+    // SAFETY: same pointer as the read above.
     unsafe { *p = old + delta };
     out.write_value(&old);
 }
 
 /// Thunk with serialized args (drives the heap path when args are large).
+///
+/// # Safety
+/// `prop` points at the live `u64` property; `args` carry a wire vec.
 unsafe fn arg_len_thunk(_env: *const u8, prop: *mut u8, args: &[u8], out: &mut ResponseWriter) {
     let mut r = WireReader::new(args);
     let v = Vec::<u8>::read(&mut r).unwrap();
+    // SAFETY: prop is the live u64 property.
     unsafe { *prop.cast::<u64>() += v.len() as u64 };
     out.write_value(&(v.len() as u64));
 }
@@ -67,10 +78,12 @@ fn enqueued_is_not_visible_until_flush() {
     }
     assert_eq!(client.queued(), 5, "all five sit in the outbox");
     // The trustee sees nothing before the flush: enqueued != visible.
+    // SAFETY: every record was framed above with matching thunk/env/prop.
     assert_eq!(unsafe { trustee.serve(&pair) }, 0);
     assert_eq!(counter, 0);
 
     assert_eq!(client.try_flush(&pair), 5);
+    // SAFETY: every record was framed above with matching thunk/env/prop.
     assert_eq!(unsafe { trustee.serve(&pair) }, 5);
     assert_eq!(counter, 5);
     assert_eq!(client.poll(&pair), 5);
@@ -105,6 +118,7 @@ fn watermark_requests_flush_before_record_cap() {
     let mut trustee = TrusteeEndpoint::default();
     while client.pending() > 0 {
         client.try_flush(&pair);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         client.poll(&pair);
     }
@@ -146,6 +160,7 @@ fn heap_records_trigger_backpressure() {
     let mut trustee = TrusteeEndpoint::default();
     while client.pending() > 0 {
         client.try_flush(&pair);
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         client.poll(&pair);
     }
@@ -182,6 +197,7 @@ fn fifo_preserved_across_lazy_batches() {
         if client.try_flush(&pair) > 0 {
             batches += 1;
         }
+        // SAFETY: every record was framed above with matching thunk/env/prop.
         unsafe { trustee.serve(&pair) };
         client.poll(&pair);
         assert!(batches < 1000, "no progress");
@@ -260,11 +276,13 @@ fn adaptive_policy_batches_more_than_eager() {
                 enqueued += 1;
                 if eager {
                     client.try_flush(&pair);
+                    // SAFETY: every record was framed above with matching thunk/env/prop.
                     unsafe { trustee.serve(&pair) };
                     client.poll(&pair);
                 }
             }
             client.try_flush(&pair); // the end-of-client-phase flush hook
+            // SAFETY: every record was framed above with matching thunk/env/prop.
             unsafe { trustee.serve(&pair) };
             client.poll(&pair);
         }

@@ -1,0 +1,300 @@
+//! Model-checked Trust clone/drop refcount-ack protocol (`trust/mod.rs`,
+//! ISSUE 6 tentpole part 2b).
+//!
+//! Two closed-world models:
+//!
+//! 1. **Acked clone vs the PR 1 use-after-free.** The object's refcount
+//!    is a plain [`VCell`] mutated only by its trustee (delegated
+//!    refcounting, paper §4.3). Client P1 clones its handle and passes
+//!    the clone to client P2 over a mailbox; both eventually drop. The
+//!    `+1` and the `-1`s travel on *different* slot edges, so nothing
+//!    orders them — unless the clone waits for the trustee's ack before
+//!    the handle escapes (`rc_inc_acked`). The seeded bug skips the ack
+//!    (the historical fire-and-forget clone): the explorer must find the
+//!    premature free and the use-after-free, with a replayable schedule.
+//!
+//! 2. **Spin-ack vs the PR 2 clone-cycle deadlock.** Two trustee threads
+//!    each clone a handle to the *other's* object and spin-wait for the
+//!    inc-ack ([`VBool`], mirroring `rc_inc_spin_ack_thunk`). The fixed
+//!    protocol serves incoming rc-increment batches while spinning
+//!    (`serve_rc_increment_batches`); the seeded bug spins without
+//!    serving — the explorer must report the ack deadlock.
+
+#![cfg(feature = "model")]
+
+use std::sync::atomic::Ordering::{Acquire, Release};
+use std::sync::Arc;
+use trustee::model::{self, Opts};
+use trustee::util::vatomic::{VAtomicU64, VBool, VCell};
+
+/// Preemption bound every test explores exhaustively to (see
+/// `model_slot.rs` for the rationale).
+const BOUND: usize = 2;
+
+fn opts() -> Opts {
+    Opts { preemptions: BOUND, ..Opts::default() }
+}
+
+// ---------------------------------------------------------------------------
+// Model 1: acked clone vs premature free (PR 1 UAF class)
+// ---------------------------------------------------------------------------
+
+const OP_INC: u64 = 1;
+const OP_DEC: u64 = 2;
+
+/// One single-slot request edge to the trustee: toggle bit 0, op code in
+/// bits 1..3; `ack` echoes the toggle when the op has been applied.
+struct Edge {
+    req: VAtomicU64,
+    ack: VAtomicU64,
+}
+
+impl Edge {
+    fn new() -> Edge {
+        Edge { req: VAtomicU64::new(0), ack: VAtomicU64::new(0) }
+    }
+
+    /// Post `op` with the given toggle (producer side).
+    fn post(&self, toggle: bool, op: u64) {
+        self.req.store(toggle as u64 | (op << 1), Release);
+    }
+}
+
+/// Block until the trustee acked `toggle` on `edge`.
+fn wait_ack(edge: &Arc<Edge>, toggle: bool) {
+    let e = Arc::clone(edge);
+    model::block_until(move || e.ack.raw_load() & 1 == toggle as u64);
+    let _ = edge.ack.load(Acquire);
+}
+
+struct RcWorld {
+    /// Refcount of the one shared object — mutated *only* by the trustee
+    /// (delegated refcounting), so a plain cell is correct by protocol.
+    rc: VCell<i64>,
+    /// The object's storage, stood in by a tracked allocation.
+    obj: usize,
+    /// P1's edge (carries the clone `+1`, then P1's drop `-1`).
+    edge_a: Arc<Edge>,
+    /// P2's edge (carries P2's drop `-1`).
+    edge_b: Arc<Edge>,
+    /// Handle handoff from P1 to P2.
+    mailbox: VAtomicU64,
+}
+
+fn rc_trustee(w: Arc<RcWorld>) {
+    // Serve three ops total (one +1, two -1), scanning edge A then B —
+    // the fixed scan order means only *publication* order can save or
+    // doom us, exactly like the real outbox-flush timing.
+    let mut tog_a = false;
+    let mut tog_b = false;
+    for _ in 0..3 {
+        let (wa, wb) = (!tog_a, !tog_b);
+        let (ea, eb) = (Arc::clone(&w.edge_a), Arc::clone(&w.edge_b));
+        model::block_until(move || {
+            ea.req.raw_load() & 1 == wa as u64 || eb.req.raw_load() & 1 == wb as u64
+        });
+        let (edge, toggle) = if w.edge_a.req.load(Acquire) & 1 == wa as u64 {
+            tog_a = wa;
+            (&w.edge_a, wa)
+        } else {
+            tog_b = wb;
+            (&w.edge_b, wb)
+        };
+        let op = (edge.req.load(Acquire) >> 1) & 3;
+        // Applying any rc op touches the object's header.
+        model::track_access(w.obj);
+        match op {
+            OP_INC => w.rc.set(w.rc.get() + 1),
+            OP_DEC => {
+                let rc = w.rc.get() - 1;
+                w.rc.set(rc);
+                if rc == 0 {
+                    model::track_free(w.obj);
+                }
+            }
+            _ => panic!("bogus op {op}"),
+        }
+        edge.ack.store(toggle as u64, Release);
+    }
+    assert_eq!(w.rc.get(), 0, "refcount must end at zero");
+    assert!(!model::tracked_alive(w.obj), "object must be reclaimed exactly once");
+}
+
+/// P1 starts with the only handle (rc = 1): clones it for P2, hands the
+/// clone over, then drops its own handle. `acked_clone` is the protocol
+/// under test: +1 applied (acked) *before* the handle escapes.
+fn rc_p1(w: Arc<RcWorld>, acked_clone: bool) {
+    if acked_clone {
+        w.edge_a.post(true, OP_INC);
+        wait_ack(&w.edge_a, true); // rc_inc_acked: +1 is in before clone returns
+        w.mailbox.store(1, Release); // the clone escapes to P2
+    } else {
+        // Seeded PR 1 bug: fire-and-forget clone — the handle escapes
+        // while the +1 still sits unflushed in the outbox.
+        w.mailbox.store(1, Release);
+        w.edge_a.post(true, OP_INC);
+        wait_ack(&w.edge_a, true); // slot-reuse wait only; too late to help
+    }
+    // Drop P1's own handle.
+    w.edge_a.post(false, OP_DEC);
+}
+
+fn rc_p2(w: Arc<RcWorld>) {
+    let wm = Arc::clone(&w);
+    model::block_until(move || wm.mailbox.raw_load() == 1);
+    let _ = w.mailbox.load(Acquire); // receive the cloned handle
+    // ... use it, then drop it.
+    w.edge_b.post(true, OP_DEC);
+}
+
+fn rc_body(acked_clone: bool) -> impl FnMut() {
+    move || {
+        let w = Arc::new(RcWorld {
+            rc: VCell::new(1),
+            obj: model::track_alloc("trust-object"),
+            edge_a: Arc::new(Edge::new()),
+            edge_b: Arc::new(Edge::new()),
+            mailbox: VAtomicU64::new(0),
+        });
+        let (w1, w2) = (Arc::clone(&w), Arc::clone(&w));
+        model::spawn(move || rc_p1(w1, acked_clone));
+        model::spawn(move || rc_p2(w2));
+        model::spawn(move || rc_trustee(w));
+    }
+}
+
+/// The acked-clone protocol: across every schedule up to the bound the
+/// object is freed exactly once, after all three ops, with no ack
+/// deadlock (a deadlock would be reported as a violation).
+#[test]
+fn acked_clone_has_no_premature_free() {
+    let report = model::explore(opts(), rc_body(true));
+    report.assert_ok();
+    assert!(
+        report.completed,
+        "exploration must exhaust the schedule space at preemption bound {BOUND}"
+    );
+    assert!(
+        report.schedules > 50,
+        "suspiciously few schedules ({})",
+        report.schedules
+    );
+    println!(
+        "refcount-ack model: {} schedules explored exhaustively at preemption bound {BOUND} (max depth {})",
+        report.schedules, report.max_depth
+    );
+}
+
+/// Seeded bug: skipping the clone ack lets a `-1` from the cloned
+/// handle's new owner reach the trustee before the `+1` is even
+/// published — premature free, then use-after-free when the `+1` lands.
+#[test]
+fn seeded_skipped_clone_ack_is_caught_with_replayable_schedule() {
+    let report = model::explore(opts(), rc_body(false));
+    let v = report
+        .violation
+        .expect("explorer must catch the skipped clone ack");
+    assert!(
+        v.message.contains("use-after-free") || v.message.contains("refcount"),
+        "expected a use-after-free from the premature free, got: {}",
+        v.message
+    );
+    let replayed = model::replay(opts(), &v.schedule, rc_body(false))
+        .expect("replaying the reported schedule must reproduce a violation");
+    assert_eq!(
+        replayed.message, v.message,
+        "replay must reproduce the same violation deterministically"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: spin-ack vs the clone-cycle deadlock (PR 2)
+// ---------------------------------------------------------------------------
+
+/// Requests *for one object*: posted by the peer, served by the owner;
+/// the spin-ack flag mirrors `rc_inc_spin_ack_thunk`'s `AtomicBool`.
+struct SpinSide {
+    req: VAtomicU64,
+    ack: VBool,
+    rc: VCell<u64>,
+}
+
+impl SpinSide {
+    fn new() -> SpinSide {
+        SpinSide { req: VAtomicU64::new(0), ack: VBool::new(false), rc: VCell::new(1) }
+    }
+}
+
+/// One trustee thread of the clone cycle: post an inc for the peer's
+/// object, then wait for the ack. `serve_while_spinning` is PR 2's fix
+/// (`serve_rc_increment_batches`): while waiting, admit and apply
+/// incoming rc-increment batches for *our* object.
+fn spin_trustee(mine: Arc<SpinSide>, peers: Arc<SpinSide>, serve_while_spinning: bool) {
+    peers.req.store(1, Release);
+    if serve_while_spinning {
+        let mut served = false;
+        loop {
+            let (m, p) = (Arc::clone(&mine), Arc::clone(&peers));
+            let done_serve = served;
+            model::block_until(move || {
+                p.ack.raw_load() || (!done_serve && m.req.raw_load() == 1)
+            });
+            if !served && mine.req.load(Acquire) == 1 {
+                mine.rc.set(mine.rc.get() + 1);
+                mine.ack.store(true, Release);
+                served = true;
+            }
+            if peers.ack.load(Acquire) {
+                break;
+            }
+        }
+        // Our ack arrived, and the peer always posts its request before
+        // acking ours, so we must have served it: both objects end at 2.
+        assert_eq!(mine.rc.get(), 2, "peer's inc was not admitted while spinning");
+    } else {
+        // Seeded PR 2 bug: spin on our ack without serving anything.
+        let p = Arc::clone(&peers);
+        model::block_until(move || p.ack.raw_load());
+        let _ = peers.ack.load(Acquire);
+    }
+}
+
+fn spin_body(serve_while_spinning: bool) -> impl FnMut() {
+    move || {
+        let a = Arc::new(SpinSide::new());
+        let b = Arc::new(SpinSide::new());
+        let (a1, b1) = (Arc::clone(&a), Arc::clone(&b));
+        model::spawn(move || spin_trustee(a1, b1, serve_while_spinning));
+        model::spawn(move || spin_trustee(b, a, serve_while_spinning));
+    }
+}
+
+/// PR 2's fix model-checked: serving rc-increment batches while
+/// spinning breaks the cycle in every schedule, and both refcounts end
+/// at 2.
+#[test]
+fn spin_ack_with_serving_never_deadlocks() {
+    let report = model::explore(opts(), spin_body(true));
+    report.assert_ok();
+    assert!(report.completed, "must exhaust schedules at bound {BOUND}");
+    println!(
+        "clone-cycle model: {} schedules explored exhaustively at preemption bound {BOUND} (max depth {})",
+        report.schedules, report.max_depth
+    );
+}
+
+/// Seeded bug: both sides spinning without serving is the PR 2 ack
+/// deadlock — detected (not hung) and replayable.
+#[test]
+fn seeded_spin_without_serving_deadlocks() {
+    let report = model::explore(opts(), spin_body(false));
+    let v = report.violation.expect("explorer must catch the ack deadlock");
+    assert!(
+        v.message.contains("deadlock"),
+        "expected a deadlock violation, got: {}",
+        v.message
+    );
+    let replayed = model::replay(opts(), &v.schedule, spin_body(false))
+        .expect("replay must reproduce the deadlock");
+    assert!(replayed.message.contains("deadlock"), "got: {}", replayed.message);
+}

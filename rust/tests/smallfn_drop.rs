@@ -1,0 +1,142 @@
+//! Drop-discipline tests for the inline-storage one-shot closures
+//! (`define_inline_fn_once!`, ISSUE 6 satellite). The erased type manages
+//! captures through raw storage and manual drop glue, so the contract —
+//! captures dropped **exactly once**, whether the closure is called,
+//! dropped uncalled, spilled to the heap, or unwound out of — is pinned
+//! here with a counting guard. Everything is pure in-memory work, so the
+//! whole file runs under Miri.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::rc::Rc;
+
+trustee::define_inline_fn_once! {
+    /// Test subject: erased `FnOnce(u64)` with 24 bytes of inline storage.
+    pub struct Cb(v: u64);
+    inline_bytes = 24;
+}
+
+/// Counting guard: bumps its counter exactly once, from `Drop`.
+struct Canary(Rc<Cell<u32>>);
+
+impl Drop for Canary {
+    fn drop(&mut self) {
+        self.0.set(self.0.get() + 1);
+    }
+}
+
+fn canary() -> (Rc<Cell<u32>>, Canary) {
+    let n = Rc::new(Cell::new(0));
+    (Rc::clone(&n), Canary(Rc::clone(&n)))
+}
+
+#[test]
+fn call_runs_the_closure_and_consumes_captures_once() {
+    let (drops, guard) = canary();
+    let seen = Rc::new(Cell::new(0u64));
+    let seen2 = Rc::clone(&seen);
+    let cb = Cb::new(move |v| {
+        let _hold = &guard;
+        seen2.set(v);
+    });
+    assert!(cb.is_some());
+    assert!(!cb.was_boxed(), "two Rcs must fit the inline buffer");
+    assert_eq!(drops.get(), 0, "captures live until the call");
+    cb.call(7);
+    assert_eq!(seen.get(), 7, "closure body must run with its argument");
+    assert_eq!(drops.get(), 1, "captures dropped exactly once by the call");
+}
+
+#[test]
+fn drop_without_call_drops_captures_once_and_never_runs() {
+    let (drops, guard) = canary();
+    let ran = Rc::new(Cell::new(false));
+    let ran2 = Rc::clone(&ran);
+    let cb = Cb::new(move |_| {
+        let _hold = &guard;
+        ran2.set(true);
+    });
+    drop(cb);
+    assert!(!ran.get(), "an uncalled closure must never run");
+    assert_eq!(drops.get(), 1, "uncalled captures dropped exactly once");
+}
+
+#[test]
+fn oversized_captures_take_the_heap_fallback() {
+    // 64 bytes of payload cannot fit 24 inline bytes.
+    let (drops, guard) = canary();
+    let big = [5u64; 8];
+    let seen = Rc::new(Cell::new(0u64));
+    let seen2 = Rc::clone(&seen);
+    let cb = Cb::new(move |v| {
+        let _hold = &guard;
+        seen2.set(v + big.iter().sum::<u64>());
+    });
+    assert!(cb.was_boxed(), "64-byte captures must spill to the heap");
+    cb.call(2);
+    assert_eq!(seen.get(), 42, "heap-spilled captures must survive intact");
+    assert_eq!(drops.get(), 1);
+
+    // And the uncalled heap representation frees its box (Miri's leak
+    // checker would flag a lost Box) and drops captures exactly once.
+    let (drops, guard) = canary();
+    let big = [0u64; 8];
+    let cb = Cb::new(move |_| {
+        let _hold = (&guard, &big);
+    });
+    assert!(cb.was_boxed());
+    drop(cb);
+    assert_eq!(drops.get(), 1, "heap captures dropped exactly once");
+}
+
+#[test]
+fn over_aligned_captures_take_the_heap_fallback() {
+    #[repr(align(16))]
+    struct Wide([u8; 16]);
+    let (drops, guard) = canary();
+    let wide = Wide([3; 16]);
+    let cb = Cb::new(move |_| {
+        let _hold = (&guard, &wide);
+    });
+    assert!(cb.was_boxed(), "align > 8 must spill regardless of size");
+    cb.call(0);
+    assert_eq!(drops.get(), 1);
+}
+
+#[test]
+fn panic_during_call_drops_captures_exactly_once() {
+    // Inline representation.
+    let (drops, guard) = canary();
+    let cb = Cb::new(move |_| {
+        let _hold = &guard;
+        panic!("boom");
+    });
+    let r = catch_unwind(AssertUnwindSafe(|| cb.call(1)));
+    assert!(r.is_err(), "the panic must propagate");
+    assert_eq!(
+        drops.get(),
+        1,
+        "unwinding out of the call drops captures exactly once"
+    );
+
+    // Heap representation.
+    let (drops, guard) = canary();
+    let big = [0u64; 8];
+    let cb = Cb::new(move |_| {
+        let _hold = (&guard, &big);
+        panic!("boom");
+    });
+    assert!(cb.was_boxed());
+    let r = catch_unwind(AssertUnwindSafe(|| cb.call(1)));
+    assert!(r.is_err());
+    assert_eq!(drops.get(), 1, "heap captures dropped exactly once on unwind");
+}
+
+#[test]
+fn none_is_inert() {
+    let cb = Cb::none();
+    assert!(cb.is_none());
+    assert!(!cb.was_boxed());
+    cb.call(9); // no-op, must not touch uninitialized storage
+    drop(Cb::none()); // dropping the empty value is a no-op too
+}

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Unsafe-audit gate: every `unsafe` site in the crate must carry an
+# adjacent SAFETY justification (tests/unsafe_audit.rs), and the model
+# checker must still vouch for the slot & refcount protocols when the
+# `model` feature is requested.
+#
+# Usage: scripts/check_unsafe.sh [--with-model]
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== unsafe audit (SAFETY-comment lint)"
+cargo test -q --test unsafe_audit -- --nocapture
+
+if [[ "${1:-}" == "--with-model" ]]; then
+    echo "== model checker self-tests"
+    cargo test -q --features model --lib model::
+    echo "== slot & refcount protocol models"
+    cargo test -q --features model --test model_slot --test model_refcount -- --nocapture
+fi
