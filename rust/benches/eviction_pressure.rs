@@ -1,27 +1,114 @@
-//! E18: eviction under memory pressure — the unified item store's byte
-//! budget + per-shard LRU, Trust vs the lock baselines, at varying
-//! budget-to-working-set ratios.
+//! E18/E20: eviction under memory pressure — the unified item store's
+//! byte budget + intrusive LRU, Trust vs the lock baselines, at varying
+//! budget-to-working-set ratios, plus a deep-churn cell (E20) where the
+//! budget is a small fraction of the key space and ~every SET is a
+//! miss-insert that evicts.
 //!
 //! Each cell boots a RESP server with `budget_bytes` set to a fraction
 //! of the prefilled working set and drives a write-heavy load: every
-//! over-budget SET pays a victim scan + reclamation on the owning shard
-//! (trustee-local for Trust, lock-scoped for the baselines). Reported
-//! per cell: kOPs, evictions, and final store bytes — the ratio across
-//! backends is the signal (absolute numbers are box-dependent).
+//! over-budget SET pays an O(1) tail unlink + reclamation on the owning
+//! shard (trustee-local for Trust, lock-scoped for the baselines).
+//! Reported per cell: kOPs, evictions, and final store bytes; the
+//! deep-churn cell adds evictions/sec and the value-slab free-list hit
+//! rate (pool-served buffer acquisitions / all acquisitions — 1.0 means
+//! steady-state churn allocates nothing). The ratio across backends is
+//! the signal (absolute numbers are box-dependent).
 //!
 //! Usage: cargo bench --bench eviction_pressure -- \
 //!            [--keys N] [--val-len L] [--ops N] [--write-pct P]
-//!            [--ratios 100,50,25] [--quick] [--json]
+//!            [--ratios 100,50,25] [--churn-pct P] [--quick] [--json]
 //!
 //! With `--json`, one machine-readable object is printed to stdout —
 //! `scripts/bench_smoke.sh` captures it as `BENCH_eviction_pressure.json`
 //! for cross-PR comparison.
 
 use trustee::bench::print_table;
-use trustee::kvstore::store::ITEM_OVERHEAD;
+use trustee::kvstore::store::entry_cost;
 use trustee::kvstore::BackendKind;
 use trustee::server::{run_resp_load, RespLoadConfig, RespServer, RespServerConfig};
 use trustee::util::cli::Args;
+
+const CONFIGS: [(&str, BackendKind); 3] = [
+    ("TrustS", BackendKind::Trust { shards: 8 }),
+    ("Mutex", BackendKind::Mutex),
+    ("RwLock", BackendKind::RwLock),
+];
+
+struct Cell {
+    kops: f64,
+    evictions_per_sec: f64,
+    slab_hit_rate: f64,
+    json: String,
+}
+
+/// One cell's load shape (the backend and its label vary per column).
+struct CellCfg {
+    budget: u64,
+    /// Keys to prefill (0 = start empty — the deep-churn cell).
+    prefill_keys: u64,
+    keys: u64,
+    val_len: usize,
+    ops: u64,
+    write_pct: u32,
+}
+
+/// Boot a server, run one load cell, and collect the stats that both
+/// output modes need.
+fn run_cell(backend: BackendKind, label: &str, cfg: &CellCfg) -> Cell {
+    let server = RespServer::start(RespServerConfig {
+        workers: 4,
+        dedicated: 0,
+        backend,
+        budget_bytes: cfg.budget,
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    });
+    if cfg.prefill_keys > 0 {
+        server.prefill(cfg.prefill_keys, cfg.val_len);
+    }
+    let stats = run_resp_load(&RespLoadConfig {
+        addr: server.addr(),
+        threads: 2,
+        pipeline: 32,
+        ops_per_thread: cfg.ops,
+        keys: cfg.keys,
+        dist: "uniform".into(),
+        write_pct: cfg.write_pct,
+        ttl_pct: 0,
+        val_len: cfg.val_len,
+        seed: 0xE18,
+    });
+    if !stats.ok() {
+        eprintln!("client errors: {:?}", stats.errors);
+    }
+    let store = server.store_stats();
+    server.stop();
+    let kops = stats.throughput() / 1e3;
+    let secs = stats.elapsed.as_secs_f64().max(1e-9);
+    let evictions_per_sec = store.evictions as f64 / secs;
+    let acquires = store.slab_hits + store.slab_misses;
+    let slab_hit_rate = if acquires == 0 {
+        0.0
+    } else {
+        store.slab_hits as f64 / acquires as f64
+    };
+    let json = format!(
+        "\"{label}\":{{\"kops\":{kops:.2},\"evictions\":{},\
+         \"evictions_per_sec\":{evictions_per_sec:.0},\
+         \"expired_keys\":{},\"store_bytes\":{},\"items\":{},\
+         \"slab_hits\":{},\"slab_misses\":{},\"slab_hit_rate\":{slab_hit_rate:.4},\
+         \"slab_free_bytes\":{},\"slab_slack_bytes\":{}}}",
+        store.evictions,
+        store.expired_keys,
+        store.store_bytes,
+        store.items,
+        store.slab_hits,
+        store.slab_misses,
+        store.slab_free_bytes,
+        store.slab_slack_bytes,
+    );
+    Cell { kops, evictions_per_sec, slab_hit_rate, json }
+}
 
 fn main() {
     let args = Args::from_env();
@@ -38,9 +125,13 @@ fn main() {
     // Budget as a percentage of the prefilled working set; 100 barely
     // evicts (steady churn), 25 keeps the store under heavy pressure.
     let ratios = args.get_list::<u64>("ratios", if quick { &[100, 25] } else { &[100, 50, 25] });
-    // `key:<n>` keys run ~8 bytes at these sizes.
-    let entry_cost = 8 + val_len as u64 + ITEM_OVERHEAD;
-    let working_set = keys * entry_cost;
+    // Deep-churn (E20) budget as a percentage of the key space's bytes:
+    // small enough that ~every SET misses, inserts, and evicts.
+    let churn_pct: u64 = args.get("churn-pct", 10);
+    // `key:<n>` keys run ~8 bytes at these sizes; value charges are
+    // class-rounded, and entry_cost keeps that math in one place.
+    let per_entry = entry_cost(8, val_len);
+    let working_set = keys * per_entry;
 
     if !json {
         println!(
@@ -50,11 +141,6 @@ fn main() {
         );
     }
 
-    let configs = [
-        ("TrustS", BackendKind::Trust { shards: 8 }),
-        ("Mutex", BackendKind::Mutex),
-        ("RwLock", BackendKind::RwLock),
-    ];
     let header = vec!["budget_pct", "TrustS", "Mutex", "RwLock"];
     let mut rows = Vec::new();
     let mut json_rows: Vec<String> = Vec::new();
@@ -64,62 +150,61 @@ fn main() {
         // baselines run 512 shards. If a shard's slice cannot hold a
         // couple of entries, every SET self-evicts and the cell is
         // meaningless — flag it rather than report it silently.
-        if budget > 0 && budget / 512 < 2 * entry_cost {
+        if budget > 0 && budget / 512 < 2 * per_entry {
             eprintln!(
                 "WARNING: budget_pct={ratio} gives {}B/shard on the 512-shard \
-                 baselines (< 2 entries of {entry_cost}B) — raise --keys/--val-len",
+                 baselines (< 2 entries of {per_entry}B) — raise --keys/--val-len",
                 budget / 512
             );
         }
+        let cfg = CellCfg { budget, prefill_keys: keys, keys, val_len, ops, write_pct };
         let mut row = vec![ratio.to_string()];
         let mut cells: Vec<String> = Vec::new();
-        for (label, backend) in configs.clone() {
-            let server = RespServer::start(RespServerConfig {
-                workers: 4,
-                dedicated: 0,
-                backend,
-                budget_bytes: budget,
-                addr: "127.0.0.1:0".into(),
-                ..Default::default()
-            });
-            server.prefill(keys, val_len);
-            let stats = run_resp_load(&RespLoadConfig {
-                addr: server.addr(),
-                threads: 2,
-                pipeline: 32,
-                ops_per_thread: ops,
-                keys,
-                dist: "uniform".into(),
-                write_pct,
-                ttl_pct: 0,
-                val_len,
-                seed: 0xE18,
-            });
-            if !stats.ok() {
-                eprintln!("client errors: {:?}", stats.errors);
-            }
-            let store = server.store_stats();
-            let kops = stats.throughput() / 1e3;
-            row.push(format!("{kops:.1} ({})", store.evictions));
-            cells.push(format!(
-                "\"{label}\":{{\"kops\":{kops:.2},\"evictions\":{},\
-                 \"expired_keys\":{},\"store_bytes\":{},\"items\":{}}}",
-                store.evictions, store.expired_keys, store.store_bytes, store.items
-            ));
-            server.stop();
+        for (label, backend) in CONFIGS {
+            let cell = run_cell(backend, label, &cfg);
+            row.push(format!("{:.1} ({:.0}/s)", cell.kops, cell.evictions_per_sec));
+            cells.push(cell.json);
         }
         eprintln!("done budget_pct={ratio}");
         json_rows.push(format!("{{\"budget_pct\":{ratio},{}}}", cells.join(",")));
         rows.push(row);
     }
+
+    // E20 deep churn: budget ≪ working set, 100% writes over the whole
+    // key space, no prefill — nearly every SET is a miss-insert that
+    // evicts the LRU tail. This is the cell that turns the old
+    // O(capacity) victim scan into wall-clock (and now exercises the
+    // O(1) unlink + slab recycling instead).
+    let churn_budget = (working_set * churn_pct / 100).max(512 * 2 * per_entry);
+    let churn_cfg =
+        CellCfg { budget: churn_budget, prefill_keys: 0, keys, val_len, ops, write_pct: 100 };
+    let mut churn_row = vec![format!("churn:{churn_pct}")];
+    let mut churn_cells: Vec<String> = Vec::new();
+    for (label, backend) in CONFIGS {
+        let cell = run_cell(backend, label, &churn_cfg);
+        churn_row.push(format!(
+            "{:.1} ({:.0}/s, hit {:.2})",
+            cell.kops, cell.evictions_per_sec, cell.slab_hit_rate
+        ));
+        churn_cells.push(cell.json);
+    }
+    eprintln!("done deep_churn churn_pct={churn_pct}");
+
     if json {
         println!(
             "{{\"bench\":\"eviction_pressure\",\"keys\":{keys},\"val_len\":{val_len},\
              \"write_pct\":{write_pct},\"working_set_bytes\":{working_set},\
-             \"rows\":[{}]}}",
-            json_rows.join(",")
+             \"rows\":[{}],\
+             \"deep_churn\":{{\"churn_pct\":{churn_pct},\"budget_bytes\":{churn_budget},{}}}}}",
+            json_rows.join(","),
+            churn_cells.join(",")
         );
     } else {
-        print_table("E18: kOPs (evictions) vs budget ratio", &header, &rows);
+        print_table("E18: kOPs (evictions/s) vs budget ratio", &header, &rows);
+        print_table(
+            "E20: deep churn — kOPs (evictions/s, slab hit rate)",
+            &header,
+            &[churn_row],
+        );
     }
 }

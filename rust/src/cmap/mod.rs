@@ -1,5 +1,7 @@
 //! Map substrate for the storage layer: the from-scratch open-addressing
-//! robin-hood table ([`OaTable`]) and its FxHash hasher.
+//! robin-hood table ([`OaTable`]), its FxHash hasher, and the stable-
+//! handle slab arena ([`Slab`]) the item store threads intrusive LRU
+//! links through.
 //!
 //! The storage unification (PR 5) collapsed the former zoo here — a
 //! generic `ConcurrentMap` trait with sharded `Mutex`/`RwLock` `HashMap`s
@@ -9,11 +11,15 @@
 //! concurrent-map machinery had no remaining users and was deleted
 //! rather than kept as unreachable pub API.
 //!
-//! [`OaTable`] exposes slot-addressed entry points
-//! ([`OaTable::index_of`]/[`OaTable::entry_at`]/[`OaTable::remove_at`])
-//! so LRU victim scans and the incremental expiry sweep can address
-//! entries without building owned keys.
+//! The slab refactor split *finding* an entry from *storing* it: the
+//! table maps key → `u32` slab handle (a [`Slab`] index that never moves
+//! under robin-hood/backward-shift relocation), and
+//! [`OaTable::find_slot_by_hash`] walks a stored hash back to its table
+//! slot in expected O(1) — how the store's LRU tail victim finds its own
+//! table entry without a scan.
 
 pub mod oatable;
+pub mod slab;
 
 pub use oatable::{fxhash, FxHasher, OaTable};
+pub use slab::{Slab, NIL};

@@ -112,7 +112,12 @@ impl<K: Eq + std::hash::Hash, V> OaTable<K, V> {
         *self = bigger;
     }
 
-    fn insert_hashed(&mut self, hash: u64, key: K, value: V) -> Option<V> {
+    /// Insert with a precomputed [`fxhash`] of `key`. Callers that
+    /// already hold the hash (the item store keeps it on each entry for
+    /// [`OaTable::find_slot_by_hash`]) avoid hashing the key twice;
+    /// passing anything other than `fxhash(&key)` corrupts the probe
+    /// sequence.
+    pub fn insert_hashed(&mut self, hash: u64, key: K, value: V) -> Option<V> {
         if (self.len + 1) * 4 > self.slots.len() * 3 {
             self.grow();
         }
@@ -224,6 +229,40 @@ impl<K: Eq + std::hash::Hash, V> OaTable<K, V> {
         Q: Eq + std::hash::Hash + ?Sized,
     {
         self.find_slot(key)
+    }
+
+    /// Find the slot whose entry has hash `hash` and whose *value*
+    /// satisfies `pred`, probing from the hash's home slot with the same
+    /// robin-hood early exit as a keyed lookup — expected O(1), worst
+    /// case the probe-sequence length, never a table scan.
+    ///
+    /// This is the reverse lookup behind O(1) eviction: an entry that
+    /// knows its own hash (and is identified by its value, e.g. a slab
+    /// handle) can locate its table slot without an owned key and
+    /// without scanning `capacity()` slots.
+    pub fn find_slot_by_hash(&self, hash: u64, mut pred: impl FnMut(&V) -> bool) -> Option<usize> {
+        let mut idx = (hash as usize) & self.mask;
+        let mut dist = 0usize;
+        loop {
+            match &self.slots[idx] {
+                None => return None,
+                Some(e) => {
+                    if e.hash == hash && pred(&e.value) {
+                        return Some(idx);
+                    }
+                    // Robin-hood invariant: entries closer to home than
+                    // our probe distance rule out a match further on.
+                    if self.distance(e.hash, idx) < dist {
+                        return None;
+                    }
+                }
+            }
+            idx = (idx + 1) & self.mask;
+            dist += 1;
+            if dist > self.slots.len() {
+                return None;
+            }
+        }
     }
 
     /// The entry in slot `idx` (`None` for an empty slot). Slot indices
@@ -408,6 +447,34 @@ mod tests {
         }
         assert_eq!(t.len(), 0);
         assert_eq!(removed, 49);
+    }
+
+    #[test]
+    fn find_slot_by_hash_is_a_keyed_lookup_in_reverse() {
+        // Values are "handles"; every entry must be findable from its
+        // hash + value predicate, exactly where index_of puts it, across
+        // growth and backward-shift churn.
+        let mut t: OaTable<u64, u32> = OaTable::with_capacity(8);
+        for i in 0..500u64 {
+            t.insert(i, i as u32);
+        }
+        for i in (0..500u64).step_by(3) {
+            t.remove(&i);
+        }
+        for i in 0..500u64 {
+            let found = t.find_slot_by_hash(fxhash(&i), |&v| v == i as u32);
+            assert_eq!(found, t.index_of(&i), "key {i}");
+        }
+        // A hash that matches but a predicate that never does: miss.
+        assert_eq!(t.find_slot_by_hash(fxhash(&1u64), |_| false), None);
+        // insert_hashed with the precomputed hash behaves like insert.
+        let mut t2: OaTable<u64, u32> = OaTable::with_capacity(8);
+        t2.insert_hashed(fxhash(&7u64), 7, 70);
+        assert_eq!(t2.get(&7), Some(&70));
+        assert_eq!(
+            t2.find_slot_by_hash(fxhash(&7u64), |&v| v == 70),
+            t2.index_of(&7)
+        );
     }
 
     #[test]

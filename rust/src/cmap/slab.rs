@@ -1,0 +1,258 @@
+//! Slab arena with stable `u32` handles and LIFO free-list reuse — the
+//! storage substrate that makes intrusive links legal in the item store.
+//!
+//! The open-addressing table ([`OaTable`](crate::cmap::OaTable))
+//! relocates entries on insert (robin hood) and remove (backward shift),
+//! so a pointer or index into a table slot goes stale under churn. A
+//! [`Slab`] decouples *where an entry lives* from *how it is found*: the
+//! table maps key → slab handle, the slab owns the entry at a slot that
+//! never moves until the entry is removed, and freed slots are recycled
+//! LIFO so sustained insert/remove churn reaches a fixed footprint with
+//! no per-op allocation. Because handles are stable, entries may carry
+//! intrusive prev/next links naming *other* slab handles — the basis of
+//! the item store's O(1) LRU eviction
+//! ([`ItemShard`](crate::kvstore::store::ItemShard)).
+//!
+//! Entirely safe Rust: vacancy is an enum discriminant, not a
+//! mem-uninitialized hole, so the whole module runs under Miri as part
+//! of the OS-free layer suite.
+
+/// The null handle: never returned by [`Slab::insert`], usable as a
+/// list-terminator sentinel in intrusive links.
+pub const NIL: u32 = u32::MAX;
+
+enum Slot<T> {
+    Occupied(T),
+    /// Next slot in the free list ([`NIL`] = end).
+    Vacant { next_free: u32 },
+}
+
+/// A slab arena: values live at stable `u32` handles, freed slots are
+/// reused LIFO before the backing vector grows.
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free_head: u32,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab { slots: Vec::new(), free_head: NIL, len: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> Slab<T> {
+        Slab { slots: Vec::with_capacity(cap), free_head: NIL, len: 0 }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slots ever allocated (occupied + free-listed). Handles are always
+    /// `< slot_count()`, so this bounds a cursor walking the slab by
+    /// index — slots never relocate, unlike table slots.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store `value`, reusing the most recently freed slot if one
+    /// exists. The returned handle stays valid (and the value stays at
+    /// it) until `remove(handle)`.
+    pub fn insert(&mut self, value: T) -> u32 {
+        self.len += 1;
+        if self.free_head != NIL {
+            let idx = self.free_head;
+            let slot = &mut self.slots[idx as usize];
+            match *slot {
+                Slot::Vacant { next_free } => {
+                    self.free_head = next_free;
+                    *slot = Slot::Occupied(value);
+                    idx
+                }
+                Slot::Occupied(_) => unreachable!("free list points at an occupied slot"),
+            }
+        } else {
+            assert!(self.slots.len() < NIL as usize, "slab full: 2^32-1 slots");
+            self.slots.push(Slot::Occupied(value));
+            (self.slots.len() - 1) as u32
+        }
+    }
+
+    /// Remove and return the value at `idx`, pushing the slot onto the
+    /// free list. `None` if the slot is vacant or out of range.
+    pub fn remove(&mut self, idx: u32) -> Option<T> {
+        let slot = self.slots.get_mut(idx as usize)?;
+        if matches!(slot, Slot::Vacant { .. }) {
+            return None;
+        }
+        let prev = std::mem::replace(slot, Slot::Vacant { next_free: self.free_head });
+        self.free_head = idx;
+        self.len -= 1;
+        match prev {
+            Slot::Occupied(v) => Some(v),
+            Slot::Vacant { .. } => unreachable!("checked occupied above"),
+        }
+    }
+
+    pub fn get(&self, idx: u32) -> Option<&T> {
+        match self.slots.get(idx as usize) {
+            Some(Slot::Occupied(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, idx: u32) -> Option<&mut T> {
+        match self.slots.get_mut(idx as usize) {
+            Some(Slot::Occupied(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, idx: u32) -> bool {
+        matches!(self.slots.get(idx as usize), Some(Slot::Occupied(_)))
+    }
+
+    /// Drop every entry and reset the free list, keeping the backing
+    /// vector's allocation.
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.free_head = NIL;
+        self.len = 0;
+    }
+
+    /// Occupied `(handle, value)` pairs in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| match s {
+            Slot::Occupied(v) => Some((i as u32, v)),
+            Slot::Vacant { .. } => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_ne!(a, b);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        *s.get_mut(a).unwrap() = "a2";
+        assert_eq!(s.remove(a), Some("a2"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.remove(a), None, "double remove is a no-op");
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(b));
+        assert!(!s.contains(a));
+        assert_eq!(s.get(NIL), None);
+    }
+
+    #[test]
+    fn handles_stay_stable_across_unrelated_churn() {
+        let mut s = Slab::new();
+        let handles: Vec<u32> = (0..100u64).map(|i| s.insert(i)).collect();
+        // Remove every third entry, then insert replacements; the
+        // survivors' handles must still resolve to their values.
+        for h in handles.iter().step_by(3) {
+            s.remove(*h);
+        }
+        for i in 100..134u64 {
+            s.insert(i);
+        }
+        for (i, h) in handles.iter().enumerate() {
+            if i % 3 != 0 {
+                assert_eq!(s.get(*h), Some(&(i as u64)), "handle {h} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn freed_slots_are_reused_lifo_before_growth() {
+        let mut s = Slab::new();
+        let h: Vec<u32> = (0..8u32).map(|i| s.insert(i)).collect();
+        let before = s.slot_count();
+        s.remove(h[2]);
+        s.remove(h[5]);
+        // LIFO: the most recently freed slot comes back first.
+        assert_eq!(s.insert(50), h[5]);
+        assert_eq!(s.insert(20), h[2]);
+        assert_eq!(s.slot_count(), before, "reuse must not grow the slab");
+        let fresh = s.insert(99);
+        assert_eq!(fresh as usize, before, "exhausted free list grows");
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut s = Slab::new();
+        for i in 0..10u32 {
+            s.insert(i);
+        }
+        s.remove(3);
+        s.clear();
+        assert_eq!(s.len(), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.slot_count(), 0);
+        assert_eq!(s.get(0), None);
+        let h = s.insert(7u32);
+        assert_eq!(h, 0, "fresh slab allocates from slot 0 again");
+    }
+
+    #[test]
+    fn iter_sees_exactly_the_occupied_slots() {
+        let mut s = Slab::new();
+        let h: Vec<u32> = (0..20u32).map(|i| s.insert(i * 10)).collect();
+        for h in h.iter().step_by(2) {
+            s.remove(*h);
+        }
+        let got: Vec<(u32, u32)> = s.iter().map(|(h, v)| (h, *v)).collect();
+        let want: Vec<(u32, u32)> = (0..20u32)
+            .filter(|i| i % 2 == 1)
+            .map(|i| (h[i as usize], i * 10))
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prop_model_equivalence_under_churn() {
+        // Random insert/remove sequences agree with a HashMap keyed by
+        // the returned handles; len and membership always match.
+        check::<Vec<(u16, bool)>>("slab-model", 120, |ops| {
+            let mut s = Slab::new();
+            let mut m: HashMap<u32, u16> = HashMap::new();
+            let mut handles: Vec<u32> = Vec::new();
+            for &(v, del) in ops {
+                if del && !handles.is_empty() {
+                    let h = handles.remove(v as usize % handles.len());
+                    assert_eq!(s.remove(h), m.remove(&h));
+                } else {
+                    let h = s.insert(v);
+                    assert!(m.insert(h, v).is_none(), "handle {h} double-issued");
+                    handles.push(h);
+                }
+                if s.len() != m.len() {
+                    return false;
+                }
+            }
+            m.iter().all(|(h, v)| s.get(*h) == Some(v))
+                && s.iter().count() == m.len()
+        });
+    }
+}

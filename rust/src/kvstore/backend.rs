@@ -14,7 +14,7 @@
 //!   port (§7).
 //! - [`LockedItemKv`] puts the same shard behind `Mutex`/`RwLock` locks
 //!   (the `mutex`/`rwlock`/`swift` baselines). Because a cache GET
-//!   mutates (LRU stamp, lazy expiry), even the readers-writer variants
+//!   mutates (LRU relink, lazy expiry), even the readers-writer variants
 //!   take the exclusive lock on the read path — stock memcached's
 //!   synchronization profile ("memory allocation, LRU updates as well as
 //!   table writes, all of which involve synchronization in a lock-based
@@ -109,8 +109,9 @@ crate::define_inline_fn_once! {
 /// slot, or into the table on a fresh insert).
 pub trait AsyncKv: Send + Sync + 'static {
     /// Look `key` up; `cb` receives the value borrowed (one-copy GET).
-    /// A GET carries full cache semantics: it bumps the item's LRU
-    /// stamp and lazily reclaims an expired entry (reported as a miss).
+    /// A GET carries full cache semantics: it relinks the item to the
+    /// LRU head and lazily reclaims an expired entry (reported as a
+    /// miss).
     ///
     /// **Contract:** `cb` must only *render* — it must not call back
     /// into this backend synchronously. Lock backends run it while
@@ -203,7 +204,7 @@ pub trait AsyncKv: Send + Sync + 'static {
     fn len(&self) -> usize;
 
     /// Run a bounded expiry sweep over every shard *now* (`max_slots`
-    /// table slots per shard), returning entries reclaimed. Diagnostic /
+    /// slab slots per shard), returning entries reclaimed. Diagnostic /
     /// test entry point; production reclamation runs incrementally via
     /// [`AsyncKv::maintenance_tick`].
     fn sweep_now(&self, max_slots: usize) -> u64 {
@@ -211,7 +212,8 @@ pub trait AsyncKv: Send + Sync + 'static {
         0
     }
 
-    /// Aggregated store counters (items, bytes, evictions, expirations).
+    /// Aggregated store counters (items, bytes, evictions, expirations,
+    /// plus the value-slab pool hit/miss/fragmentation gauges).
     /// Diagnostic; may take locks / delegate per shard.
     fn store_stats(&self) -> StoreStats {
         StoreStats { items: self.len() as u64, ..Default::default() }
@@ -391,7 +393,7 @@ impl<L: ShardLock> AsyncKv for LockedItemKv<L> {
 // ---------------------------------------------------------------------
 
 /// The Trust\<T\>-backed store: one entrusted [`ItemShard`] per trustee.
-/// Every cache mutation — table write, LRU stamp, expiry reclamation,
+/// Every cache mutation — table write, LRU relink, expiry reclamation,
 /// budget eviction — is trustee-local, with zero synchronization.
 pub struct TrustKv {
     shards: Vec<Trust<ItemShard>>,
@@ -597,8 +599,8 @@ impl AsyncKv for TrustKv {
     fn store_stats(&self) -> StoreStats {
         let mut total = StoreStats::default();
         for s in &self.shards {
-            let t = s.apply(|t| t.stats().to_tuple());
-            total.merge(&StoreStats::from_tuple(t));
+            let a = s.apply(|t| t.stats().to_array());
+            total.merge(&StoreStats::from_array(a));
         }
         total
     }

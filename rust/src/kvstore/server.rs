@@ -213,7 +213,8 @@ impl KvServer {
         self.core.hot_path_stats()
     }
 
-    /// Item-store counters (items, bytes, evictions, expirations).
+    /// Item-store counters (items, bytes, evictions, expirations, plus
+    /// the value-slab pool hit/miss and fragmentation gauges).
     pub fn store_stats(&self) -> crate::kvstore::store::StoreStats {
         self.backend.store_stats()
     }

@@ -336,7 +336,8 @@ impl McdServer {
         self.core.metrics()
     }
 
-    /// Item-store counters (items, bytes, evictions, expirations).
+    /// Item-store counters (items, bytes, evictions, expirations, plus
+    /// the value-slab pool hit/miss and fragmentation gauges).
     pub fn store_stats(&self) -> StoreStats {
         self.backend.store_stats()
     }

@@ -696,7 +696,8 @@ impl RespServer {
         self.core.hot_path_stats()
     }
 
-    /// Item-store counters (items, bytes, evictions, expirations).
+    /// Item-store counters (items, bytes, evictions, expirations, plus
+    /// the value-slab pool hit/miss and fragmentation gauges).
     pub fn store_stats(&self) -> StoreStats {
         self.backend.store_stats()
     }

@@ -5,10 +5,15 @@
 //! allocation events** across thousands of steady-state delegated
 //! operations — for windowed async fetch-add delegation (the paper's
 //! §6.1 microworkload), for a KV GET/PUT round trip over the Trust
-//! backend (the §6.3 data path), and for the memcached-shaped
-//! `set_item`/`get_item` round trip (flags + TTL + LRU stamping on the
-//! unified item store, the §7 data path). Warmup rounds let every
-//! recycled buffer
+//! backend (the §6.3 data path), for the memcached-shaped
+//! `set_item`/`get_item` round trip (flags + TTL + LRU relinking on the
+//! unified item store, the §7 data path), for sustained **over-budget
+//! SET churn** (every op a fresh key: miss-insert + LRU-tail eviction,
+//! recycled end to end through the item slab's free list, the key-buffer
+//! pool, and the size-classed value pools), and for a **one-directional
+//! PUT-only stream** (no GET back-traffic to cross-feed free lists —
+//! the closed store-side caveat from the pre-slab design). Warmup rounds
+//! let every recycled buffer
 //! (outbox arena, completion deques, response scratch, table entry)
 //! reach its high-water mark first; after that, a single allocation
 //! anywhere in the measured window — any worker thread, any layer — is
@@ -21,7 +26,9 @@
 
 use std::cell::Cell;
 use std::rc::Rc;
+use std::sync::Arc;
 use trustee::kvstore::backend::{AckCb, AsyncKv, GetCb, GetItemCb, TrustKv};
+use trustee::kvstore::store::entry_cost;
 use trustee::runtime::Runtime;
 use trustee::trust::local_trustee;
 use trustee::util::count_alloc::{snapshot, CountingAlloc};
@@ -62,7 +69,7 @@ fn fadd_rounds(ct: &Trust<u64>, ops: u64, window: u64) -> u64 {
     completed.get()
 }
 
-/// One test, three phases. The counters are process-wide and the default
+/// One test, five phases. The counters are process-wide and the default
 /// test harness runs `#[test]` fns concurrently, so separate tests would
 /// see each other's setup allocations inside their measured windows;
 /// sequential phases in a single test keep every window quiet.
@@ -72,6 +79,8 @@ fn hot_paths_are_allocation_free_at_steady_state() {
     fetch_add_phase();
     kv_get_put_phase();
     mcd_item_phase();
+    eviction_churn_phase();
+    one_directional_put_phase();
 }
 
 fn fetch_add_phase() {
@@ -172,8 +181,8 @@ fn kv_get_put_phase() {
 /// `set_item` (flags + TTL) + one `get_item` (key echo, flags, borrowed
 /// value) against a fixed key, window 1. The TTL is far enough out that
 /// this key never expires mid-test; each overwrite re-stamps the
-/// deadline, the LRU stamp, and the byte accounting — all of which must
-/// stay allocation-free.
+/// deadline, relinks the item to the LRU head, and updates the byte
+/// accounting — all of which must stay allocation-free.
 fn mcd_rounds(kv: &Arc<dyn AsyncKv>, rounds: u64) -> u64 {
     const TTL_MS: u64 = 60 * 60 * 1000;
     let key: &[u8] = b"alloc-regression-mcd-key";
@@ -263,6 +272,151 @@ fn mcd_item_phase() {
         delta.allocs, 0,
         "steady-state mcd set_item/get_item round trips (with the \
          maintenance sweep active) must not allocate \
+         ({} allocs / {} bytes across 1000 ops)",
+        delta.allocs, delta.bytes
+    );
+    drop(kv);
+    rt.shutdown();
+}
+
+/// Over-budget SET churn, window 1: every op writes a *fresh* 8-byte
+/// key (a little-endian counter), so at steady state every SET is a
+/// miss-insert that evicts the LRU tail on the owning shard. Insert and
+/// evict must recycle end to end through the item slab's free list, the
+/// pooled key buffers, and the size-classed value pools.
+fn churn_rounds(kv: &Arc<dyn AsyncKv>, start: u64, rounds: u64) -> u64 {
+    let val = [b'c'; 16];
+    let done = Rc::new(Cell::new(0u64));
+    let parked: Rc<Cell<Option<fiber::FiberId>>> = Rc::new(Cell::new(None));
+    let mut completed = 0u64;
+    for i in 0..rounds {
+        let d = done.clone();
+        let p = parked.clone();
+        let key = (start + i).to_le_bytes();
+        kv.set_item(
+            &key,
+            &val,
+            0,
+            0,
+            AckCb::new(move |_existed| {
+                d.set(d.get() + 1);
+                if let Some(id) = p.take() {
+                    fiber::with_executor(|e| e.resume(id));
+                }
+            }),
+        );
+        completed += 1;
+        while done.get() < completed {
+            fiber::suspend(|id| parked.set(Some(id)));
+        }
+    }
+    done.get()
+}
+
+fn eviction_churn_phase() {
+    use trustee::kvstore::BackendKind;
+    let rt = Runtime::builder().workers(2).build();
+    // Budget sized to 40 entries per shard: each 8-byte key + class-16
+    // value charges entry_cost(8, 16) bytes, and the total splits evenly
+    // over the two shards.
+    let per_entry = entry_cost(8, 16);
+    let kv = BackendKind::Trust { shards: 2 }.build_with(
+        &rt,
+        &[0],
+        &trustee::kvstore::StoreConfig::with_budget(2 * 40 * per_entry),
+    );
+    // Warmup fills both shards to their budget and brings every free
+    // list (slab slots, key pool, class-16 value pool) to steady state.
+    let kv2 = kv.clone();
+    rt.block_on(1, move || churn_rounds(&kv2, 0, 1_500));
+    let before_stats = kv.store_stats();
+    let kv2 = kv.clone();
+    let delta = rt.block_on(1, move || {
+        let before = snapshot();
+        let done = churn_rounds(&kv2, 1_500, 3_000);
+        let after = snapshot();
+        assert_eq!(done, 3_000);
+        after.since(&before)
+    });
+    let stats = kv.store_stats();
+    assert_eq!(
+        delta.allocs, 0,
+        "steady-state over-budget SET churn must not allocate \
+         ({} allocs / {} bytes across 3000 insert+evict ops)",
+        delta.allocs, delta.bytes
+    );
+    // The window must actually churn: with both shards at budget and
+    // every key fresh, each measured SET inserts and evicts exactly one
+    // LRU tail, served entirely from the value pools.
+    let evicted = stats.evictions - before_stats.evictions;
+    assert_eq!(
+        evicted, 3_000,
+        "every measured SET must evict ({before_stats:?} -> {stats:?})"
+    );
+    assert_eq!(
+        stats.slab_misses, before_stats.slab_misses,
+        "measured churn must be pool-served ({before_stats:?} -> {stats:?})"
+    );
+    drop(kv);
+    rt.shutdown();
+}
+
+/// PUT-only stream, window 1: overwrite a small rotating key set with a
+/// class-72 value and never issue a GET. One-directional traffic like
+/// this has no response payloads flowing back, so nothing cross-feeds
+/// the old heap free lists — the overwrite must recycle the store-side
+/// value buffer in place instead.
+fn oneway_rounds(kv: &Arc<dyn AsyncKv>, rounds: u64) -> u64 {
+    let val = [b'p'; 64];
+    let done = Rc::new(Cell::new(0u64));
+    let parked: Rc<Cell<Option<fiber::FiberId>>> = Rc::new(Cell::new(None));
+    let mut completed = 0u64;
+    for i in 0..rounds {
+        let d = done.clone();
+        let p = parked.clone();
+        let key = [b'w', (i % 8) as u8];
+        kv.set_item(
+            &key,
+            &val,
+            3,
+            0,
+            AckCb::new(move |_existed| {
+                d.set(d.get() + 1);
+                if let Some(id) = p.take() {
+                    fiber::with_executor(|e| e.resume(id));
+                }
+            }),
+        );
+        completed += 1;
+        while done.get() < completed {
+            fiber::suspend(|id| parked.set(Some(id)));
+        }
+    }
+    done.get()
+}
+
+fn one_directional_put_phase() {
+    use trustee::kvstore::BackendKind;
+    let rt = Runtime::builder().workers(2).build();
+    let kv = BackendKind::Trust { shards: 2 }.build_with(
+        &rt,
+        &[0],
+        &trustee::kvstore::StoreConfig::default(),
+    );
+    let kv2 = kv.clone();
+    let delta = rt.block_on(1, move || {
+        // Warmup inserts the 8 keys (the productive allocations) and
+        // grows the outbox arena to its PUT-heavy high-water mark.
+        oneway_rounds(&kv2, 500);
+        let before = snapshot();
+        let done = oneway_rounds(&kv2, 1_000);
+        let after = snapshot();
+        assert_eq!(done, 1_000);
+        after.since(&before)
+    });
+    assert_eq!(
+        delta.allocs, 0,
+        "a one-directional PUT-heavy stream must not allocate \
          ({} allocs / {} bytes across 1000 ops)",
         delta.allocs, delta.bytes
     );

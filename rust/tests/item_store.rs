@@ -14,7 +14,7 @@ use std::rc::Rc;
 use std::sync::{Arc, Mutex, RwLock};
 use trustee::fiber;
 use trustee::kvstore::backend::{AckCb, AsyncKv, GetItemCb, TtlCb};
-use trustee::kvstore::store::{StoreClock, StoreConfig, ITEM_OVERHEAD, TTL_MISSING, TTL_NO_EXPIRY};
+use trustee::kvstore::store::{entry_cost, StoreClock, StoreConfig, TTL_MISSING, TTL_NO_EXPIRY};
 use trustee::kvstore::{ItemShard, LockedItemKv, StoreStats, TrustKv};
 use trustee::runtime::Runtime;
 
@@ -84,11 +84,11 @@ fn backends_one_shard(rt: &Runtime, cfg: &StoreConfig) -> Vec<(&'static str, Arc
 #[test]
 fn lru_victim_order_is_deterministic_across_backends() {
     // One shard, budget for exactly 4 entries of this shape.
-    let entry_cost = 2 + 100 + ITEM_OVERHEAD; // "k0" + 100-byte value
+    let per_entry = entry_cost(2, 100); // "k0" + a 100-byte (class-120) value
     let val = vec![b'x'; 100];
     let rt = Runtime::builder().workers(2).build();
     let mut outcomes: Vec<(&'static str, Vec<bool>, StoreStats)> = Vec::new();
-    for (name, kv) in backends_one_shard(&rt, &StoreConfig::with_budget(4 * entry_cost)) {
+    for (name, kv) in backends_one_shard(&rt, &StoreConfig::with_budget(4 * per_entry)) {
         let kv2 = kv.clone();
         let val = val.clone();
         let hits = rt.block_on(1, move || {
@@ -114,10 +114,10 @@ fn lru_victim_order_is_deterministic_across_backends() {
         assert_eq!(stats.evictions, 2, "{name}: eviction count");
         assert_eq!(stats.items, 4, "{name}: live items");
         assert!(
-            stats.store_bytes <= 4 * entry_cost,
+            stats.store_bytes <= 4 * per_entry,
             "{name}: budget exceeded ({} > {})",
             stats.store_bytes,
-            4 * entry_cost
+            4 * per_entry
         );
     }
     rt.shutdown();
@@ -157,7 +157,7 @@ fn lazy_and_sweep_expiry_agree_across_backends() {
         assert_eq!(stats.items, 1, "{name}: only b survives");
         assert_eq!(stats.expired_keys, 2, "{name}: a (lazy) + c (sweep)");
         assert_eq!(stats.evictions, 0, "{name}");
-        assert_eq!(stats.store_bytes, 1 + 1 + ITEM_OVERHEAD, "{name}");
+        assert_eq!(stats.store_bytes, entry_cost(1, 1), "{name}");
         // The clock is shared across backends in this loop; rewind is
         // impossible, so later backends just see a larger `now` — the
         // relative script stays identical.

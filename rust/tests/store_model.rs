@@ -1,0 +1,346 @@
+//! The full cache state machine — set / get / del / touch, lazy expiry,
+//! budget eviction — replayed from seeded random scripts against a
+//! naive Vec-backed LRU reference model, on **every backend flavor**.
+//!
+//! The reference model is the obviously-correct implementation: an
+//! MRU-first `Vec` scanned linearly, with the same published semantics
+//! (tail victims, expired-vs-evicted victim counting, class-rounded
+//! byte charges via the real [`entry_cost`]). Any divergence in an op
+//! result, a counter, or the surviving contents — on any backend —
+//! means the slab-handle + intrusive-LRU store broke the contract the
+//! old stamp-scan store pinned. The per-backend stats are also compared
+//! across backends at the end of each script: victim order, expiry
+//! accounting, and even the value-pool gauges must be identical because
+//! all four flavors drive the same `ItemShard` with the same ops.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::{Arc, Mutex, RwLock};
+use trustee::fiber;
+use trustee::kvstore::backend::{AckCb, AsyncKv, GetItemCb};
+use trustee::kvstore::store::{entry_cost, StoreClock, StoreConfig};
+use trustee::kvstore::{ItemShard, LockedItemKv, StoreStats, TrustKv};
+use trustee::runtime::Runtime;
+
+// ---------------------------------------------------------------------
+// Synchronous op helpers (run inside a runtime fiber so Trust
+// completions can flow; lock backends complete inline).
+// ---------------------------------------------------------------------
+
+fn set_sync(kv: &Arc<dyn AsyncKv>, key: &[u8], val: &[u8], flags: u32, ttl_ms: u64) -> bool {
+    let r: Rc<Cell<Option<bool>>> = Rc::new(Cell::new(None));
+    let r2 = r.clone();
+    kv.set_item(key, val, flags, ttl_ms, AckCb::new(move |e| r2.set(Some(e))));
+    while r.get().is_none() {
+        fiber::yield_now();
+    }
+    r.get().unwrap()
+}
+
+fn get_sync(kv: &Arc<dyn AsyncKv>, key: &[u8]) -> Option<(u32, Vec<u8>)> {
+    let r: Rc<Cell<bool>> = Rc::new(Cell::new(false));
+    let out: Rc<RefCell<Option<(u32, Vec<u8>)>>> = Rc::new(RefCell::new(None));
+    let (r2, o2) = (r.clone(), out.clone());
+    kv.get_item(
+        key,
+        GetItemCb::new(move |_k: &[u8], item: Option<(u32, &[u8])>| {
+            *o2.borrow_mut() = item.map(|(f, v)| (f, v.to_vec()));
+            r2.set(true);
+        }),
+    );
+    while !r.get() {
+        fiber::yield_now();
+    }
+    out.borrow_mut().take()
+}
+
+fn del_sync(kv: &Arc<dyn AsyncKv>, key: &[u8]) -> bool {
+    let r: Rc<Cell<Option<bool>>> = Rc::new(Cell::new(None));
+    let r2 = r.clone();
+    kv.del(key, AckCb::new(move |e| r2.set(Some(e))));
+    while r.get().is_none() {
+        fiber::yield_now();
+    }
+    r.get().unwrap()
+}
+
+fn touch_sync(kv: &Arc<dyn AsyncKv>, key: &[u8], ttl_ms: u64) -> bool {
+    let r: Rc<Cell<Option<bool>>> = Rc::new(Cell::new(None));
+    let r2 = r.clone();
+    kv.touch(key, ttl_ms, AckCb::new(move |e| r2.set(Some(e))));
+    while r.get().is_none() {
+        fiber::yield_now();
+    }
+    r.get().unwrap()
+}
+
+// ---------------------------------------------------------------------
+// The reference model: MRU-first Vec, linear scans, naive eviction.
+// ---------------------------------------------------------------------
+
+struct MEntry {
+    key: Vec<u8>,
+    flags: u32,
+    val: Vec<u8>,
+    expires_at_ms: u64,
+}
+
+impl MEntry {
+    fn is_expired(&self, now: u64) -> bool {
+        self.expires_at_ms != 0 && self.expires_at_ms <= now
+    }
+}
+
+struct Model {
+    /// MRU first; the victim is always the last element.
+    entries: Vec<MEntry>,
+    now: u64,
+    budget: u64,
+    evictions: u64,
+    expired: u64,
+}
+
+impl Model {
+    /// `now` starts wherever the (shared, rewind-free) manual clock
+    /// currently reads, so one clock can serve every backend in turn.
+    fn new(budget: u64, now: u64) -> Model {
+        Model { entries: Vec::new(), now, budget, evictions: 0, expired: 0 }
+    }
+
+    fn bytes(&self) -> u64 {
+        self.entries.iter().map(|e| entry_cost(e.key.len(), e.val.len())).sum()
+    }
+
+    fn find(&self, key: &[u8]) -> Option<usize> {
+        self.entries.iter().position(|e| e.key == key)
+    }
+
+    fn bump(&mut self, pos: usize) {
+        let e = self.entries.remove(pos);
+        self.entries.insert(0, e);
+    }
+
+    fn get(&mut self, key: &[u8]) -> Option<(u32, Vec<u8>)> {
+        let pos = self.find(key)?;
+        if self.entries[pos].is_expired(self.now) {
+            self.entries.remove(pos);
+            self.expired += 1;
+            return None;
+        }
+        self.bump(pos);
+        Some((self.entries[0].flags, self.entries[0].val.clone()))
+    }
+
+    fn set(&mut self, key: &[u8], val: &[u8], flags: u32, ttl_ms: u64) -> bool {
+        let expires = if ttl_ms == 0 { 0 } else { self.now.saturating_add(ttl_ms) };
+        let existed = match self.find(key) {
+            Some(pos) => {
+                let was_expired = self.entries[pos].is_expired(self.now);
+                if was_expired {
+                    self.expired += 1;
+                }
+                let e = &mut self.entries[pos];
+                e.flags = flags;
+                e.val = val.to_vec();
+                e.expires_at_ms = expires;
+                self.bump(pos);
+                !was_expired
+            }
+            None => {
+                self.entries.insert(
+                    0,
+                    MEntry { key: key.to_vec(), flags, val: val.to_vec(), expires_at_ms: expires },
+                );
+                false
+            }
+        };
+        while self.budget > 0 && self.bytes() > self.budget {
+            let victim = self.entries.pop().expect("over budget implies non-empty");
+            if victim.is_expired(self.now) {
+                self.expired += 1;
+            } else {
+                self.evictions += 1;
+            }
+        }
+        existed
+    }
+
+    fn del(&mut self, key: &[u8]) -> bool {
+        let Some(pos) = self.find(key) else {
+            return false;
+        };
+        let was_expired = self.entries[pos].is_expired(self.now);
+        self.entries.remove(pos);
+        if was_expired {
+            self.expired += 1;
+            false
+        } else {
+            true
+        }
+    }
+
+    fn touch(&mut self, key: &[u8], ttl_ms: u64) -> bool {
+        let Some(pos) = self.find(key) else {
+            return false;
+        };
+        if self.entries[pos].is_expired(self.now) {
+            self.entries.remove(pos);
+            self.expired += 1;
+            return false;
+        }
+        self.entries[pos].expires_at_ms =
+            if ttl_ms == 0 { 0 } else { self.now.saturating_add(ttl_ms) };
+        self.bump(pos);
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeded script generation (SplitMix64 — no external crates).
+// ---------------------------------------------------------------------
+
+fn next_rand(s: &mut u64) -> u64 {
+    *s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *s;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Set { k: u8, len: usize, flags: u32, ttl_ms: u64 },
+    Get { k: u8 },
+    Del { k: u8 },
+    Touch { k: u8, ttl_ms: u64 },
+    Advance { ms: u64 },
+}
+
+/// 8 keys, value lengths spanning several size classes, a mix of
+/// no-expiry and short TTLs, and clock advances that expire them
+/// mid-script. Set-heavy so the budget keeps evicting.
+fn script(seed: u64, len: usize) -> Vec<Op> {
+    let mut s = seed;
+    (0..len)
+        .map(|_| {
+            let r = next_rand(&mut s);
+            let k = ((r >> 8) % 8) as u8;
+            match r % 8 {
+                0..=2 => Op::Set {
+                    k,
+                    len: ((r >> 16) % 96 + 1) as usize,
+                    flags: ((r >> 24) % 100) as u32,
+                    ttl_ms: if (r >> 32) % 3 == 0 { 0 } else { (r >> 32) % 40 + 1 },
+                },
+                3 | 4 => Op::Get { k },
+                5 => Op::Del { k },
+                6 => Op::Touch {
+                    k,
+                    ttl_ms: if (r >> 16) % 2 == 0 { 0 } else { (r >> 16) % 40 + 1 },
+                },
+                _ => Op::Advance { ms: (r >> 16) % 16 },
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// The harness
+// ---------------------------------------------------------------------
+
+/// Build each backend flavor with one shard (so every key contends for
+/// the same budget) over the given store config.
+fn backends_one_shard(rt: &Runtime, cfg: &StoreConfig) -> Vec<(&'static str, Arc<dyn AsyncKv>)> {
+    vec![
+        ("trust", TrustKv::with_config(rt, &[0], 1, cfg) as Arc<dyn AsyncKv>),
+        (
+            "mutex",
+            Arc::new(LockedItemKv::<Mutex<ItemShard>>::new(1, "mutex", cfg)),
+        ),
+        (
+            "rwlock",
+            Arc::new(LockedItemKv::<RwLock<ItemShard>>::new(1, "rwlock", cfg)),
+        ),
+        (
+            "swift",
+            Arc::new(LockedItemKv::<RwLock<ItemShard>>::new(1, "swift", cfg)),
+        ),
+    ]
+}
+
+#[test]
+fn random_scripts_match_the_naive_lru_model_on_every_backend() {
+    // Budget for ~5 of the largest entries this script writes ("kN" +
+    // a 96-byte value), so eviction stays busy over the 8-key space.
+    let budget = 5 * entry_cost(2, 96);
+    let rt = Runtime::builder().workers(2).build();
+    // One manual clock shared by every backend (rewind is impossible, so
+    // later backends just see a larger `now`; the model resyncs).
+    let clock = StoreClock::manual();
+    let cfg = StoreConfig { budget_bytes: budget, clock: clock.clone() };
+    for seed in [0xA5A5_u64, 0x5EED, 0xC0FFEE] {
+        let mut all_stats: Vec<(&'static str, StoreStats)> = Vec::new();
+        for (name, kv) in backends_one_shard(&rt, &cfg) {
+            let kv2 = kv.clone();
+            let clock2 = clock.clone();
+            let model_start = clock.now_ms();
+            let model_end = rt.block_on(1, move || {
+                let mut model = Model::new(budget, model_start);
+                for (i, op) in script(seed, 400).into_iter().enumerate() {
+                    match op {
+                        Op::Set { k, len, flags, ttl_ms } => {
+                            let key = [b'k', k];
+                            let val = vec![k.wrapping_mul(31).wrapping_add(len as u8); len];
+                            let got = set_sync(&kv2, &key, &val, flags, ttl_ms);
+                            let want = model.set(&key, &val, flags, ttl_ms);
+                            assert_eq!(got, want, "{name} seed {seed:#x} op {i}: {op:?}");
+                        }
+                        Op::Get { k } => {
+                            let got = get_sync(&kv2, &[b'k', k]);
+                            let want = model.get(&[b'k', k]);
+                            assert_eq!(got, want, "{name} seed {seed:#x} op {i}: {op:?}");
+                        }
+                        Op::Del { k } => {
+                            let got = del_sync(&kv2, &[b'k', k]);
+                            let want = model.del(&[b'k', k]);
+                            assert_eq!(got, want, "{name} seed {seed:#x} op {i}: {op:?}");
+                        }
+                        Op::Touch { k, ttl_ms } => {
+                            let got = touch_sync(&kv2, &[b'k', k], ttl_ms);
+                            let want = model.touch(&[b'k', k], ttl_ms);
+                            assert_eq!(got, want, "{name} seed {seed:#x} op {i}: {op:?}");
+                        }
+                        Op::Advance { ms } => {
+                            clock2.advance(ms);
+                            model.now += ms;
+                        }
+                    }
+                }
+                // Final contents: one GET per possible key is both a
+                // value/flags comparison and a last victim-order probe
+                // (a divergent eviction would have dropped a different
+                // survivor set).
+                for k in 0..8u8 {
+                    let got = get_sync(&kv2, &[b'k', k]);
+                    let want = model.get(&[b'k', k]);
+                    assert_eq!(got, want, "{name} seed {seed:#x}: final contents of key {k}");
+                }
+                (model.entries.len() as u64, model.bytes(), model.evictions, model.expired)
+            });
+            let stats = kv.store_stats();
+            let (items, bytes, evictions, expired) = model_end;
+            assert_eq!(stats.items, items, "{name} seed {seed:#x}: live items");
+            assert_eq!(stats.store_bytes, bytes, "{name} seed {seed:#x}: charged bytes");
+            assert_eq!(stats.evictions, evictions, "{name} seed {seed:#x}: evictions");
+            assert_eq!(stats.expired_keys, expired, "{name} seed {seed:#x}: expired keys");
+            all_stats.push((name, stats));
+        }
+        // Same ops on the same shard code: every backend must land on
+        // byte-identical stats, value-pool gauges included.
+        let (first_name, first) = &all_stats[0];
+        for (name, stats) in &all_stats[1..] {
+            assert_eq!(stats, first, "seed {seed:#x}: {name} diverged from {first_name}");
+        }
+    }
+    rt.shutdown();
+}
