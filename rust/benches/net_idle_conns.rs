@@ -8,8 +8,22 @@
 //! are parked on fd readiness in the per-worker reactor — O(ready fds)
 //! per tick — so the active connection's latency should stay within ~2x
 //! of the 0-idle baseline regardless of how many connections sit idle.
+//! `NetPolicy::IoUring` parks the same way but *stages* its polls into
+//! the worker's submission ring — one `io_uring_enter` per scheduler
+//! loop — so the sweep also records the submission-batching counters.
 //!
 //! Usage: cargo bench --bench net_idle_conns -- [--ops N] [--idle N]
+//!
+//! Connection-scale sweep (E21): `--sweep` walks a connection ladder
+//! (default 1000,10000,100000 — clamped to the process fd budget with a
+//! visible message) with a mixed idle/active population (`--active-pct`,
+//! default 1%) under all three policies, and `--json` emits one
+//! machine-readable object (captured by `scripts/bench_smoke.sh` as
+//! `BENCH_net_idle_conns.json`):
+//!
+//!   cargo bench --bench net_idle_conns -- --sweep --json \
+//!       [--conns 1000,10000,100000] [--ops N] [--active-pct P] \
+//!       [--policies busy,epoll,uring]
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -68,14 +82,167 @@ fn per_op_ns(net: NetPolicy, idle: usize, ops: u64) -> f64 {
     elapsed / ops as f64 * 1e9
 }
 
+/// Loopback connections this process can hold open: each one consumes
+/// two fds here (client end + server end), plus headroom for the rest of
+/// the process. A sweep rung above this is clamped with a visible note —
+/// the full 100k rung needs a host with `ulimit -n` ≳ 210k.
+fn conn_budget() -> usize {
+    let soft = std::fs::read_to_string("/proc/self/limits")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Max open files"))
+                .and_then(|l| l.split_whitespace().nth(3)?.parse::<usize>().ok())
+        })
+        .unwrap_or(1024);
+    soft.saturating_sub(256) / 2
+}
+
+/// One sweep cell: `conns` open connections of which `active` issue
+/// round-robin sync GETs; returns (connections actually opened, mean
+/// per-op ns, server uring totals).
+fn sweep_cell(
+    net: NetPolicy,
+    conns: usize,
+    active: usize,
+    ops: u64,
+) -> (usize, f64, trustee::runtime::uring::UringStats) {
+    let server = KvServer::start(KvServerConfig {
+        workers: 2,
+        backend: BackendKind::Trust { shards: 2 },
+        net,
+        ..Default::default()
+    });
+    server.prefill(64, 16);
+    let mut pool: Vec<TcpStream> = Vec::with_capacity(conns);
+    for i in 0..conns {
+        match TcpStream::connect(server.addr()) {
+            Ok(s) => pool.push(s),
+            Err(e) => {
+                eprintln!("sweep: stopped opening at {i}/{conns} connections ({e})");
+                break;
+            }
+        }
+        // Brief pauses keep the accept backlog from overflowing while the
+        // single-core server spawns fibers for a large wave.
+        if i % 500 == 499 {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+    let opened = pool.len();
+    let active = active.min(opened).max(1);
+    for s in pool.iter_mut().take(active) {
+        s.set_nodelay(true).ok();
+    }
+    // Let the idle population reach steady state (parked under
+    // epoll/uring, yield-looping under busy-poll).
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let warmup = (active as u64 * 4).min(ops);
+    for i in 0..warmup {
+        let c = &mut pool[(i as usize) % active];
+        sync_get(c, i, &trustee::kvstore::key_bytes(i % 64));
+    }
+    let t0 = std::time::Instant::now();
+    for i in 0..ops {
+        let c = &mut pool[(i as usize) % active];
+        sync_get(c, (1u64 << 32) | i, &trustee::kvstore::key_bytes(i % 64));
+    }
+    let per_op_ns = t0.elapsed().as_secs_f64() / ops as f64 * 1e9;
+    let uring = server.uring_stats();
+    drop(pool);
+    server.stop();
+    (opened, per_op_ns, uring)
+}
+
+fn run_sweep(args: &Args) {
+    let json = args.flag("json");
+    let ops: u64 = args.get("ops", 2_000);
+    let active_pct: usize = args.get("active-pct", 1);
+    let ladder = args.get_str("conns", "1000,10000,100000");
+    let policy_spec = args.get_str("policies", "busy,epoll,uring");
+    let policies: Vec<NetPolicy> = policy_spec
+        .split(',')
+        .map(|s| NetPolicy::from_spec(s.trim()).unwrap_or_else(|e| panic!("--policies: {e}")))
+        .collect();
+    let budget = conn_budget();
+    let mut rows = Vec::new();
+    let mut cells: Vec<String> = Vec::new();
+    for &net in &policies {
+        for rung in ladder.split(',') {
+            let requested: usize = rung.trim().parse().expect("bad --conns entry");
+            let conns = requested.min(budget);
+            if conns < requested {
+                eprintln!(
+                    "sweep: clamped {requested} -> {conns} connections \
+                     (process fd budget; raise ulimit -n for the full rung)"
+                );
+            }
+            let active = (conns * active_pct / 100).max(1);
+            let (opened, per_op, uring) = sweep_cell(net, conns, active, ops);
+            let sqes_per_enter = if uring.enters > 0 {
+                uring.sqes_submitted as f64 / uring.enters as f64
+            } else {
+                0.0
+            };
+            eprintln!(
+                "done {} conns={opened} active={active}: {} per op",
+                net.label(),
+                fmt_ns(per_op)
+            );
+            rows.push(vec![
+                net.label().into(),
+                format!("{opened} (req {requested})"),
+                active.to_string(),
+                fmt_ns(per_op),
+                if uring.enters > 0 {
+                    format!("{sqes_per_enter:.1} sqes/enter")
+                } else {
+                    String::new()
+                },
+            ]);
+            cells.push(format!(
+                "{{\"policy\":\"{}\",\"conns_requested\":{requested},\"conns\":{opened},\
+                 \"active\":{active},\"ops\":{ops},\"per_op_ns\":{per_op:.1},\
+                 \"uring_enters\":{},\"uring_sqes\":{},\"uring_cqes\":{},\
+                 \"uring_sq_full_flushes\":{},\"uring_enter_waits\":{},\
+                 \"uring_max_sqes_per_enter\":{},\"sqes_per_enter\":{sqes_per_enter:.2}}}",
+                net.label(),
+                uring.enters,
+                uring.sqes_submitted,
+                uring.cqes_harvested,
+                uring.sq_full_flushes,
+                uring.enter_waits,
+                uring.max_sqes_per_enter,
+            ));
+        }
+    }
+    if json {
+        println!(
+            "{{\"bench\":\"net_idle_conns\",\"mode\":\"sweep\",\"active_pct\":{active_pct},\
+             \"fd_budget\":{budget},\"cells\":[{}]}}",
+            cells.join(",")
+        );
+    } else {
+        print_table(
+            "E21: connection-scale sweep (mixed idle/active; per-policy latency curve)",
+            &["policy", "conns", "active", "per-op latency", "uring batching"],
+            &rows,
+        );
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let ops: u64 = args.get("ops", 3_000);
     let idle: usize = args.get("idle", 64);
+    if args.flag("sweep") {
+        run_sweep(&args);
+        return;
+    }
 
     let mut rows = Vec::new();
     let mut ratios = Vec::new();
-    for net in [NetPolicy::BusyPoll, NetPolicy::Epoll] {
+    for net in [NetPolicy::BusyPoll, NetPolicy::Epoll, NetPolicy::IoUring] {
         let base = per_op_ns(net, 0, ops);
         let loaded = per_op_ns(net, idle, ops);
         let ratio = loaded / base;

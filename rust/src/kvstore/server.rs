@@ -213,6 +213,12 @@ impl KvServer {
         self.core.hot_path_stats()
     }
 
+    /// io_uring submission/completion counters across all workers
+    /// (zeros unless running under `NetPolicy::IoUring`; diagnostic).
+    pub fn uring_stats(&self) -> crate::runtime::uring::UringStats {
+        self.core.uring_stats()
+    }
+
     /// Item-store counters (items, bytes, evictions, expirations, plus
     /// the value-slab pool hit/miss and fragmentation gauges).
     pub fn store_stats(&self) -> crate::kvstore::store::StoreStats {
@@ -411,7 +417,7 @@ mod tests {
 
     #[test]
     fn unknown_op_answers_bad_request_and_closes() {
-        for net in [NetPolicy::BusyPoll, NetPolicy::Epoll] {
+        for net in [NetPolicy::BusyPoll, NetPolicy::Epoll, NetPolicy::IoUring] {
             let server = KvServer::start(KvServerConfig {
                 workers: 2,
                 backend: BackendKind::Trust { shards: 2 },

@@ -5,20 +5,20 @@
 //! ```text
 //! trustee kv-server    --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
-//!                      [--val-len L] [--net epoll|busy]
+//!                      [--val-len L] [--net epoll|busy|uring]
 //! trustee kv-load      --addr HOST:PORT --threads T --pipeline P --ops N
 //!                      --keys K --dist uniform|zipf --write-pct W
 //!                      [--val-len L] [--seed S]
 //! trustee mcd-server   --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
-//!                      [--val-len L] [--budget-mb M] [--net epoll|busy]
+//!                      [--val-len L] [--budget-mb M] [--net epoll|busy|uring]
 //!                      (--engine stock is accepted as an alias for
 //!                       --backend mutex; exptime is honored)
 //! trustee mcd-load     --addr HOST:PORT ... (same knobs as kv-load, plus
 //!                      [--ttl-pct P]: % of sets carrying exptime 1)
 //! trustee resp-server  --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
-//!                      [--val-len L] [--budget-mb M] [--net epoll|busy]
+//!                      [--val-len L] [--budget-mb M] [--net epoll|busy|uring]
 //!                      (RESP2 — point redis-cli or any Redis client at it:
 //!                       PING, GET, SET [EX|PX], DEL, EXISTS, MGET, INCR,
 //!                       EXPIRE, PEXPIRE, TTL, PTTL, PERSIST, FLUSHALL)
@@ -67,6 +67,15 @@ fn main() {
     }
 }
 
+/// Parse `--net`, exiting with the descriptive reason on an unknown spec
+/// (like the other config errors; never a panic backtrace).
+fn parse_net(args: &Args) -> trustee::kvstore::NetPolicy {
+    trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")).unwrap_or_else(|e| {
+        eprintln!("invalid --net: {e}");
+        std::process::exit(1);
+    })
+}
+
 /// Exit nonzero with every client-thread error when a load run failed.
 fn bail_on_client_errors(errors: &[String]) {
     if !errors.is_empty() {
@@ -83,7 +92,7 @@ fn kv_server(args: &Args) {
         dedicated: args.get("dedicated", 0),
         backend: BackendKind::from_spec(&args.get_str("backend", "trust")),
         addr: args.get_str("addr", "127.0.0.1:7878"),
-        net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
+        net: parse_net(args),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {
@@ -140,7 +149,7 @@ fn mcd_server(args: &Args) {
         backend,
         budget_bytes: args.get::<u64>("budget-mb", 0) << 20,
         addr: args.get_str("addr", "127.0.0.1:11211"),
-        net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
+        net: parse_net(args),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {
@@ -188,7 +197,7 @@ fn resp_server(args: &Args) {
         backend: BackendKind::from_spec(&args.get_str("backend", "trust")),
         budget_bytes: args.get::<u64>("budget-mb", 0) << 20,
         addr: args.get_str("addr", "127.0.0.1:6379"),
-        net: trustee::kvstore::NetPolicy::from_spec(&args.get_str("net", "epoll")),
+        net: parse_net(args),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {

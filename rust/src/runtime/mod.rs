@@ -23,16 +23,20 @@
 //!    [`Backoff`] when idle;
 //! 2. **poll** — consume completed response batches, running completions
 //!    (fiber wake-ups / `then`-callbacks) *outside* any worker borrow;
-//! 3. **reactor** — wake fibers whose fds became ready ([`reactor`]);
-//!    when the worker has been fully idle for a while it *blocks* here in
-//!    `epoll_wait` (bounded by [`IDLE_EPOLL_TIMEOUT_MS`]) instead of
-//!    backoff-spinning;
+//! 3. **reactor** — wake fibers whose fds became ready: the epoll
+//!    [`reactor`] sweep plus the syscall-free [`uring`] completion-ring
+//!    harvest; when the worker has been fully idle for a while it
+//!    *blocks* here (bounded by [`IDLE_EPOLL_TIMEOUT_MS`]) — in the
+//!    ring's `io_uring_enter` when fibers are uring-parked, else in
+//!    `epoll_wait` — instead of backoff-spinning;
 //! 4. **inject** — drain the mutex-guarded injector queue through which
 //!    non-worker threads submit jobs (start-up entrusting, root fibers);
 //!    injects also write the worker's wake eventfd to end an idle block;
 //! 5. **client** — run one application fiber slice, then **flush** every
 //!    dirty outbox (the end-of-client-phase hook of the adaptive
-//!    [`FlushPolicy`]).
+//!    [`FlushPolicy`]) and publish the loop's staged io_uring SQEs with
+//!    at most **one `io_uring_enter`** — the same batch-at-the-boundary
+//!    discipline, applied to the kernel.
 //!
 //! ## Borrow discipline (re-entrancy)
 //!
@@ -46,6 +50,7 @@
 //! every call, so nested calls never alias a live long-lived borrow.
 
 pub mod reactor;
+pub mod uring;
 #[cfg(feature = "xla")]
 pub mod xla_exec;
 
@@ -249,6 +254,16 @@ pub struct Worker {
     serving_column: Cell<usize>,
     /// Readiness reactor (fd parking for socket fibers + idle blocking).
     pub reactor: reactor::Reactor,
+    /// io_uring reactor, created lazily on the first uring fd wait
+    /// ([`Worker::ensure_uring`]); workers that never see
+    /// `NetPolicy::IoUring` traffic pay nothing for it.
+    uring: Option<Box<uring::UringReactor>>,
+    /// A uring creation attempt failed on this worker (don't retry every
+    /// wait; the failure was already logged).
+    uring_failed: bool,
+    /// Recycled scratch for ready-fiber harvests (epoll + uring), so the
+    /// steady network path allocates nothing per scheduler tick.
+    wake_scratch: Vec<fiber::FiberId>,
     pub registry: Registry,
     /// Maintenance callbacks run every [`MAINTENANCE_EVERY`] scheduler
     /// loops (see [`Worker::register_maintenance`]). Dropped at the
@@ -402,6 +417,32 @@ impl Worker {
     /// Heap-byte backpressure flushes across all edges (metrics).
     pub fn backpressure_hits(&self) -> u64 {
         self.clients.iter().map(|c| c.backpressure_hits).sum()
+    }
+
+    /// The worker's io_uring reactor, creating it on first use. Returns
+    /// `None` — after logging the reason, once — when the kernel can't
+    /// provide a ring; callers degrade (busy-poll park, epoll accept).
+    pub(crate) fn ensure_uring(&mut self) -> Option<&mut uring::UringReactor> {
+        if self.uring.is_none() && !self.uring_failed {
+            match uring::UringReactor::new(self.shared.wake_fds[self.id]) {
+                Ok(r) => self.uring = Some(r),
+                Err(e) => {
+                    self.uring_failed = true;
+                    eprintln!(
+                        "trustee worker {}: io_uring reactor unavailable ({e}); \
+                         uring fd waits degrade to busy-poll",
+                        self.id
+                    );
+                }
+            }
+        }
+        self.uring.as_deref_mut()
+    }
+
+    /// This worker's io_uring submission/completion counters (zeros when
+    /// the ring was never created).
+    pub fn uring_stats(&self) -> uring::UringStats {
+        self.uring.as_deref().map(|u| u.stats).unwrap_or_default()
     }
 
     /// Hot-path allocation/copy counters aggregated over this worker's
@@ -632,14 +673,11 @@ fn drop_maintenance() {
     drop(cbs);
 }
 
-/// Reactor phase: wake fibers whose fds became ready. With `timeout_ms` 0
-/// this is the per-tick sweep (a no-op syscall-wise while nothing is
-/// parked); an idle worker passes [`IDLE_EPOLL_TIMEOUT_MS`] to *sleep* in
-/// `epoll_wait` instead of backoff-spinning. Returns fibers woken.
-fn reactor_phase(timeout_ms: i32) -> usize {
-    let ready = with_worker(|w| w.reactor.poll(timeout_ms));
-    let n = ready.len();
-    for id in ready {
+/// Resume each harvested fiber with no worker borrow held, then hand the
+/// (cleared) scratch vector back to the worker for the next tick.
+fn resume_scratch(mut scratch: Vec<fiber::FiberId>) -> usize {
+    let n = scratch.len();
+    for &id in &scratch {
         // Resume outside the worker borrow; defensively, in case an id was
         // recycled between the poll and this wake (it cannot be today —
         // fd-parked fibers are woken only here — but resume_if_parked makes
@@ -648,18 +686,82 @@ fn reactor_phase(timeout_ms: i32) -> usize {
             e.resume_if_parked(id);
         });
     }
+    scratch.clear();
+    with_worker(|w| {
+        if w.wake_scratch.capacity() < scratch.capacity() {
+            w.wake_scratch = scratch;
+        }
+    });
     n
 }
 
-/// Shutdown sweep: resume every fd-parked fiber so it can re-check its
-/// exit conditions; parked-on-fd fibers would otherwise hang teardown.
-fn wake_all_fd_waiters() {
-    let waiters = with_worker(|w| w.reactor.take_all_waiters());
-    for id in waiters {
-        fiber::with_executor(|e| {
-            e.resume_if_parked(id);
-        });
+/// Reactor phase: wake fibers whose fds became ready. With `timeout_ms` 0
+/// this is the per-tick sweep (a no-op syscall-wise while nothing is
+/// parked); an idle worker passes [`IDLE_EPOLL_TIMEOUT_MS`] to *sleep* in
+/// `epoll_wait` instead of backoff-spinning. Uses the worker's recycled
+/// scratch vector — no allocation per tick. Returns fibers woken.
+fn reactor_phase(timeout_ms: i32) -> usize {
+    let mut scratch = with_worker(|w| std::mem::take(&mut w.wake_scratch));
+    with_worker(|w| w.reactor.poll_into(timeout_ms, &mut scratch));
+    resume_scratch(scratch)
+}
+
+/// Uring harvest phase: drain the completion ring (pure shared-memory
+/// reads — **no syscall**) and wake the parked fibers. A worker without a
+/// ring returns immediately.
+fn uring_phase() -> usize {
+    let has = with_worker(|w| w.uring.is_some());
+    if !has {
+        return 0;
     }
+    let mut scratch = with_worker(|w| std::mem::take(&mut w.wake_scratch));
+    with_worker(|w| {
+        if let Some(u) = w.uring.as_deref_mut() {
+            u.poll_into(&mut scratch);
+        }
+    });
+    resume_scratch(scratch)
+}
+
+/// Uring flush phase: publish every SQE staged this loop with at most one
+/// `io_uring_enter` — the kernel-boundary sibling of [`flush_phase`]'s
+/// outbox publish. Runs after the client phase so all of a loop's parks
+/// ride the same syscall.
+fn uring_flush_phase() -> usize {
+    with_worker(|w| w.uring.as_deref_mut().map_or(0, |u| u.flush()))
+}
+
+/// Idle block: sleep (bounded) waiting for readiness instead of
+/// backoff-spinning. Prefer the ring's `io_uring_enter` while fibers are
+/// uring-parked — their completions raise no epoll signal — otherwise
+/// block in `epoll_wait`. Injected jobs end either block immediately via
+/// the wake eventfd (registered in both). Returns fibers woken.
+fn idle_block_phase(timeout_ms: i32) -> usize {
+    let uring_blocks = with_worker(|w| w.uring.as_deref().is_some_and(|u| u.wants_block()));
+    if !uring_blocks {
+        return reactor_phase(timeout_ms);
+    }
+    let mut scratch = with_worker(|w| std::mem::take(&mut w.wake_scratch));
+    with_worker(|w| {
+        if let Some(u) = w.uring.as_deref_mut() {
+            u.enter_wait(timeout_ms, &mut scratch);
+        }
+    });
+    resume_scratch(scratch)
+}
+
+/// Shutdown sweep: resume every fd-parked fiber (epoll- and uring-parked,
+/// plus parked acceptors) so it can re-check its exit conditions;
+/// parked-on-fd fibers would otherwise hang teardown.
+fn wake_all_fd_waiters() {
+    let mut scratch = with_worker(|w| std::mem::take(&mut w.wake_scratch));
+    with_worker(|w| {
+        w.reactor.take_all_waiters_into(&mut scratch);
+        if let Some(u) = w.uring.as_deref_mut() {
+            u.take_all_waiters(&mut scratch);
+        }
+    });
+    resume_scratch(scratch);
 }
 
 /// Shutdown path: drop every property still registered on this worker,
@@ -696,9 +798,12 @@ fn worker_loop() {
         let mut useful = serve_phase();
         useful += poll_phase();
         useful += reactor_phase(0);
+        useful += uring_phase();
         useful += injector_phase();
         let ran_fiber = fiber::with_executor(|e| e.run_one());
         flush_phase();
+        // One io_uring_enter covers every SQE staged anywhere this loop.
+        uring_flush_phase();
         let shutting_down = shared.shutdown.load(Ordering::Acquire);
         if maintenance_live && !shutting_down && loops % MAINTENANCE_EVERY == 0 {
             useful += maintenance_phase();
@@ -725,12 +830,15 @@ fn worker_loop() {
             }
         } else if !shutting_down
             && idle_ticks >= IDLE_EPOLL_TICKS
-            && with_worker(|w| w.reactor.enabled())
+            && with_worker(|w| {
+                w.reactor.enabled() || w.uring.as_deref().is_some_and(|u| u.wants_block())
+            })
         {
-            // Idle worker: block in epoll_wait (bounded) instead of
-            // spinning. fd readiness and injected jobs (eventfd) end the
+            // Idle worker: block (bounded) instead of spinning — in the
+            // ring's io_uring_enter when fibers are uring-parked, else in
+            // epoll_wait. fd readiness and injected jobs (eventfd) end the
             // block immediately; slot-matrix traffic waits out the bound.
-            if reactor_phase(IDLE_EPOLL_TIMEOUT_MS) > 0 {
+            if idle_block_phase(IDLE_EPOLL_TIMEOUT_MS) > 0 {
                 backoff.reset();
                 idle_ticks = 0;
             }
@@ -912,6 +1020,9 @@ impl Runtime {
                             in_delegated: Cell::new(false),
                             serving_column: Cell::new(usize::MAX),
                             reactor: reactor::Reactor::new(shared.wake_fds[id]),
+                            uring: None,
+                            uring_failed: false,
+                            wake_scratch: Vec::new(),
                             registry: Registry::default(),
                             maintenance: Vec::new(),
                             loops: 0,
@@ -997,6 +1108,18 @@ impl Runtime {
         let mut total = HotPathStats::default();
         for w in 0..self.shared.n() {
             let s = self.block_on(w, || with_worker(|wk| wk.hot_path_stats()));
+            total.merge(&s);
+        }
+        total
+    }
+
+    /// Aggregate [`uring::UringStats`] across all workers (zeros for
+    /// workers that never created a ring). Diagnostic, like
+    /// [`Runtime::hot_path_totals`]; call from a non-runtime thread.
+    pub fn uring_totals(&self) -> uring::UringStats {
+        let mut total = uring::UringStats::default();
+        for w in 0..self.shared.n() {
+            let s = self.block_on(w, || with_worker(|wk| wk.uring_stats()));
             total.merge(&s);
         }
         total

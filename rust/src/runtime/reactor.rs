@@ -98,18 +98,20 @@ impl Reactor {
         true
     }
 
-    /// Collect the fibers whose fds became ready, waiting up to
-    /// `timeout_ms` (0 = non-blocking). Wake-eventfd events are drained
-    /// here and produce no fiber.
-    pub(crate) fn poll(&mut self, timeout_ms: i32) -> Vec<FiberId> {
+    /// Collect the fibers whose fds became ready into `out`, waiting up
+    /// to `timeout_ms` (0 = non-blocking); returns the number appended.
+    /// The scheduler passes its recycled scratch vector, so the steady
+    /// network path allocates nothing per tick. Wake-eventfd events are
+    /// drained here and produce no fiber.
+    pub(crate) fn poll_into(&mut self, timeout_ms: i32, out: &mut Vec<FiberId>) -> usize {
         if self.epfd < 0 {
-            return Vec::new();
+            return 0;
         }
         // Zero-timeout polls with nothing parked skip the syscall: the only
         // other registrant is the wake eventfd, whose payload (the injector
         // queue) is drained by the injector phase every tick anyway.
         if timeout_ms == 0 && self.waiters.is_empty() {
-            return Vec::new();
+            return 0;
         }
         let mut events = [sys::epoll_event { events: 0, data: 0 }; EVENT_BATCH];
         // SAFETY: events is a live buffer of EVENT_BATCH entries and the
@@ -118,9 +120,9 @@ impl Reactor {
             sys::epoll_wait(self.epfd, events.as_mut_ptr(), EVENT_BATCH as sys::c_int, timeout_ms)
         };
         if n <= 0 {
-            return Vec::new();
+            return 0;
         }
-        let mut ready = Vec::with_capacity(n as usize);
+        let before = out.len();
         for ev in &events[..n as usize] {
             let data = ev.data; // copy out of the packed struct
             if data == WAKE_TOKEN {
@@ -128,16 +130,25 @@ impl Reactor {
                 continue;
             }
             if let Some(fiber) = self.waiters.remove(&(data as i32)) {
-                ready.push(fiber);
+                out.push(fiber);
             }
         }
-        ready
+        out.len() - before
     }
 
-    /// Detach every parked waiter (the shutdown sweep: fibers re-check
-    /// their exit conditions once resumed).
-    pub(crate) fn take_all_waiters(&mut self) -> Vec<FiberId> {
-        self.waiters.drain().map(|(_, f)| f).collect()
+    /// [`Reactor::poll_into`] with a fresh vector (tests/diagnostics; the
+    /// scheduler uses the scratch-recycling form).
+    #[cfg(test)]
+    pub(crate) fn poll(&mut self, timeout_ms: i32) -> Vec<FiberId> {
+        let mut out = Vec::new();
+        self.poll_into(timeout_ms, &mut out);
+        out
+    }
+
+    /// Detach every parked waiter into `out` (the shutdown sweep: fibers
+    /// re-check their exit conditions once resumed).
+    pub(crate) fn take_all_waiters_into(&mut self, out: &mut Vec<FiberId>) {
+        out.extend(self.waiters.drain().map(|(_, f)| f));
     }
 
     fn drain_wake(&mut self) {
@@ -203,7 +214,9 @@ mod tests {
         assert!(!r.enabled());
         assert!(!r.register(0, true, false, 0));
         assert!(r.poll(0).is_empty());
-        assert!(r.take_all_waiters().is_empty());
+        let mut swept = Vec::new();
+        r.take_all_waiters_into(&mut swept);
+        assert!(swept.is_empty());
     }
 
     #[test]

@@ -1,0 +1,897 @@
+//! Per-worker io_uring reactor: the batched-kernel-boundary sibling of
+//! the epoll [`super::reactor`].
+//!
+//! The epoll reactor already made *idle* connections cheap, but every
+//! park still pays an `epoll_ctl` syscall to re-arm its oneshot interest,
+//! and every tick with waiters pays an `epoll_wait`. This reactor applies
+//! the crate's delegation philosophy — batch many requests onto one
+//! carrier — to the kernel boundary itself: fibers that park on fd
+//! readiness *stage* a `POLL_ADD` SQE into the worker's mmap'd submission
+//! ring (a few plain stores, no syscall), and the scheduler publishes the
+//! whole batch with **one `io_uring_enter` per loop** from its flush
+//! phase, mirroring the outbox flush-watermark discipline. Completions
+//! are harvested from the mmap'd completion ring with **no syscall at
+//! all**. The listener uses a single multishot `ACCEPT` SQE, so a wave of
+//! new connections costs one staged SQE total, and each worker's wake
+//! eventfd is armed with a multishot `POLL_ADD` so [`super::Shared::inject`]
+//! and shutdown still pop a blocked `io_uring_enter` wait instantly.
+//!
+//! ## Ring memory-ordering contract
+//!
+//! The SQ/CQ rings are shared memory between this thread and the kernel
+//! (DESIGN.md, "Kernel-boundary batching"):
+//!
+//! - **SQ (we produce, kernel consumes):** write the SQE body and the
+//!   `array[idx]` slot with plain stores, then publish by storing the SQ
+//!   tail with `Release`; read the kernel's SQ head with `Acquire` for
+//!   the ring-full check.
+//! - **CQ (kernel produces, we consume):** read the CQ tail with
+//!   `Acquire`, copy CQEs out by value, then store the CQ head with
+//!   `Release` so the kernel may reuse the entries.
+//!
+//! ## SQE lifetime / user_data
+//!
+//! Every SQE this reactor submits is self-contained — `POLL_ADD` and
+//! `ACCEPT` (with null address buffers) carry **no userspace buffer**, so
+//! there is no buffer to keep alive while an operation is in flight and
+//! no ownership handoff to get wrong. Connection payload bytes keep
+//! moving through the engine's ordinary non-blocking `read`/`write`
+//! calls once a fiber is woken. `user_data` carries a kind tag in the
+//! top byte and the payload ([`FiberId`] or accept token) below it; a
+//! parked fiber is woken only while it is present in the `waiters` set,
+//! so a stale CQE (shutdown swept the fiber first, or the fd was
+//! recycled) is ignored rather than waking an unrelated fiber. Wake-ups
+//! may still be spurious — every fd waiter re-checks its socket.
+
+use crate::fiber::{self, FiberId};
+use crate::util::sys;
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::OnceLock;
+
+/// SQ entries per worker ring (CQ gets 2x). Bounds SQEs *staged per
+/// scheduler loop*, not total parked fibers (the kernel holds armed polls
+/// internally after submission); an overfull loop flushes mid-stage and
+/// counts it in [`UringStats::sq_full_flushes`].
+const URING_ENTRIES: u32 = 4096;
+
+/// `user_data` layout: kind tag in the top byte, payload below.
+const UD_KIND_SHIFT: u32 = 56;
+const UD_PAYLOAD_MASK: u64 = (1u64 << UD_KIND_SHIFT) - 1;
+const KIND_POLL: u64 = 1;
+const KIND_ACCEPT: u64 = 2;
+const KIND_WAKE: u64 = 3;
+
+/// Submission/completion counters (metrics + the batching contract:
+/// `enters` grows by at most one per scheduler loop regardless of how
+/// many connections had pending I/O).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UringStats {
+    /// `io_uring_enter` syscalls issued (submission flushes + blocking
+    /// waits).
+    pub enters: u64,
+    /// SQEs submitted across all enters.
+    pub sqes_submitted: u64,
+    /// CQEs harvested from the completion ring.
+    pub cqes_harvested: u64,
+    /// Mid-loop flushes forced by a full SQ ring (should be ~0).
+    pub sq_full_flushes: u64,
+    /// Enters that blocked waiting for a completion (idle phase).
+    pub enter_waits: u64,
+    /// Largest SQE batch a single enter carried.
+    pub max_sqes_per_enter: u64,
+}
+
+impl UringStats {
+    pub fn merge(&mut self, o: &UringStats) {
+        self.enters += o.enters;
+        self.sqes_submitted += o.sqes_submitted;
+        self.cqes_harvested += o.cqes_harvested;
+        self.sq_full_flushes += o.sq_full_flushes;
+        self.enter_waits += o.enter_waits;
+        self.max_sqes_per_enter = self.max_sqes_per_enter.max(o.max_sqes_per_enter);
+    }
+}
+
+/// One multishot-accept registration (one per listener; in practice one
+/// per server).
+struct AcceptState {
+    listener_fd: i32,
+    /// Accepted connection fds delivered by CQEs, awaiting the acceptor
+    /// fiber.
+    queue: VecDeque<i32>,
+    /// The acceptor fiber, when parked waiting for the next connection.
+    parked: Option<FiberId>,
+    /// Is the multishot SQE still armed in the kernel? (A CQE without
+    /// `IORING_CQE_F_MORE` disarms it; `accept_take` re-arms.)
+    armed: bool,
+    closed: bool,
+}
+
+/// One worker's io_uring instance: ring mappings, staged-submission
+/// state, the parked-fiber set, and accept registrations.
+pub struct UringReactor {
+    ring_fd: i32,
+    /// Wake eventfd (owned by [`super::Shared`]; armed here, not closed).
+    wake_fd: i32,
+    /// The (single) ring mapping and the SQE array mapping.
+    ring_ptr: *mut u8,
+    ring_len: usize,
+    sqes_ptr: *mut sys::io_uring_sqe,
+    sqes_len: usize,
+    // SQ geometry/pointers (into ring_ptr).
+    sq_head: *const AtomicU32,
+    sq_tail: *const AtomicU32,
+    sq_flags: *const AtomicU32,
+    sq_mask: u32,
+    sq_entries: u32,
+    sq_array: *mut u32,
+    // CQ geometry/pointers (into ring_ptr).
+    cq_head: *const AtomicU32,
+    cq_tail: *const AtomicU32,
+    cq_mask: u32,
+    cqes: *const sys::io_uring_cqe,
+    /// Local (unpublished) SQ tail and the value last published+entered.
+    sq_tail_local: u32,
+    sq_tail_submitted: u32,
+    /// Fibers parked on a POLL_ADD; a CQE wakes a fiber only while its id
+    /// is in here (stale CQEs are ignored).
+    waiters: HashSet<FiberId>,
+    /// Is the wake eventfd's multishot poll currently armed?
+    wake_armed: bool,
+    accepts: Vec<Option<AcceptState>>,
+    pub stats: UringStats,
+}
+
+/// Probe io_uring availability once per process: ring creation, the
+/// feature bits the reactor depends on, and the ring mappings. Servers
+/// resolve `NetPolicy::IoUring` through this and fall back to epoll
+/// (with the returned reason) when it fails.
+pub fn probe() -> Result<(), String> {
+    static PROBE: OnceLock<Result<(), String>> = OnceLock::new();
+    PROBE
+        .get_or_init(|| UringReactor::new_with_entries(-1, 8).map(drop))
+        .clone()
+}
+
+impl UringReactor {
+    /// Build a reactor around a fresh ring, arming the worker's wake
+    /// eventfd (when valid) with a multishot poll so cross-worker wakes
+    /// end a blocking [`UringReactor::enter_wait`] instantly.
+    pub(crate) fn new(wake_fd: i32) -> Result<Box<UringReactor>, String> {
+        Self::new_with_entries(wake_fd, URING_ENTRIES)
+    }
+
+    fn new_with_entries(wake_fd: i32, entries: u32) -> Result<Box<UringReactor>, String> {
+        let mut p = sys::io_uring_params::default();
+        // SAFETY: p is a live zeroed params block; the fd is checked below.
+        let ring_fd = unsafe { sys::io_uring_setup(entries, &mut p) };
+        if ring_fd < 0 {
+            return Err(format!("io_uring_setup: {}", std::io::Error::last_os_error()));
+        }
+        // Close the fd on any early return below.
+        struct FdGuard(i32);
+        impl Drop for FdGuard {
+            fn drop(&mut self) {
+                if self.0 >= 0 {
+                    // SAFETY: the guard owns the fd; closed exactly once.
+                    unsafe { sys::close(self.0) };
+                }
+            }
+        }
+        let mut guard = FdGuard(ring_fd);
+        let need =
+            sys::IORING_FEAT_SINGLE_MMAP | sys::IORING_FEAT_NODROP | sys::IORING_FEAT_EXT_ARG;
+        if p.features & need != need {
+            return Err(format!(
+                "io_uring features {:#x} lack required SINGLE_MMAP|NODROP|EXT_ARG (kernel too old)",
+                p.features
+            ));
+        }
+        let sq_sz = p.sq_off.array as usize + p.sq_entries as usize * std::mem::size_of::<u32>();
+        let cq_sz = p.cq_off.cqes as usize
+            + p.cq_entries as usize * std::mem::size_of::<sys::io_uring_cqe>();
+        let ring_len = sq_sz.max(cq_sz);
+        // SAFETY: mapping the just-created ring fd at the documented offset;
+        // checked against MAP_FAILED before use.
+        let ring_ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                ring_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED | sys::MAP_POPULATE,
+                ring_fd,
+                sys::IORING_OFF_SQ_RING,
+            )
+        };
+        if ring_ptr == sys::MAP_FAILED {
+            return Err(format!("io_uring ring mmap: {}", std::io::Error::last_os_error()));
+        }
+        let sqes_len = p.sq_entries as usize * std::mem::size_of::<sys::io_uring_sqe>();
+        // SAFETY: as above, at the SQE-array offset; checked before use. On
+        // failure the ring mapping is released before returning.
+        let sqes_ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                sqes_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED | sys::MAP_POPULATE,
+                ring_fd,
+                sys::IORING_OFF_SQES,
+            )
+        };
+        if sqes_ptr == sys::MAP_FAILED {
+            let e = std::io::Error::last_os_error();
+            // SAFETY: ring_ptr is the live mapping created above; unmapped
+            // exactly once on this early-exit path.
+            unsafe { sys::munmap(ring_ptr, ring_len) };
+            return Err(format!("io_uring sqes mmap: {e}"));
+        }
+        let base = ring_ptr as *mut u8;
+        // SAFETY: all offsets come from the kernel's params block and lie
+        // within the mapping; the kernel guarantees natural alignment, so
+        // casting the u32 head/tail/flags words to AtomicU32 is sound.
+        let (sq_head, sq_tail, sq_flags, sq_mask, sq_entries, sq_array, tail0) = unsafe {
+            (
+                base.add(p.sq_off.head as usize) as *const AtomicU32,
+                base.add(p.sq_off.tail as usize) as *const AtomicU32,
+                base.add(p.sq_off.flags as usize) as *const AtomicU32,
+                *(base.add(p.sq_off.ring_mask as usize) as *const u32),
+                *(base.add(p.sq_off.ring_entries as usize) as *const u32),
+                base.add(p.sq_off.array as usize) as *mut u32,
+                (*(base.add(p.sq_off.tail as usize) as *const AtomicU32)).load(Ordering::Acquire),
+            )
+        };
+        // SAFETY: same justification as the SQ pointer derivations above.
+        let (cq_head, cq_tail, cq_mask, cqes) = unsafe {
+            (
+                base.add(p.cq_off.head as usize) as *const AtomicU32,
+                base.add(p.cq_off.tail as usize) as *const AtomicU32,
+                *(base.add(p.cq_off.ring_mask as usize) as *const u32),
+                base.add(p.cq_off.cqes as usize) as *const sys::io_uring_cqe,
+            )
+        };
+        guard.0 = -1; // ownership moves into the reactor
+        let mut r = Box::new(UringReactor {
+            ring_fd,
+            wake_fd,
+            ring_ptr: ring_ptr as *mut u8,
+            ring_len,
+            sqes_ptr: sqes_ptr as *mut sys::io_uring_sqe,
+            sqes_len,
+            sq_head,
+            sq_tail,
+            sq_flags,
+            sq_mask,
+            sq_entries,
+            sq_array,
+            cq_head,
+            cq_tail,
+            cq_mask,
+            cqes,
+            sq_tail_local: tail0,
+            sq_tail_submitted: tail0,
+            waiters: HashSet::new(),
+            wake_armed: false,
+            accepts: Vec::new(),
+            stats: UringStats::default(),
+        });
+        if wake_fd >= 0 {
+            r.arm_wake();
+            r.flush();
+        }
+        Ok(r)
+    }
+
+    /// Fibers currently parked on a poll SQE (incl. parked acceptors).
+    pub fn waiting(&self) -> usize {
+        self.waiters.len()
+            + self.accepts.iter().flatten().filter(|a| a.parked.is_some()).count()
+    }
+
+    /// Should the idle scheduler block in this ring's `enter_wait` (vs
+    /// the epoll reactor)? True while anything is parked here.
+    pub fn wants_block(&self) -> bool {
+        self.waiting() > 0
+    }
+
+    /// Stage one SQE, flushing mid-loop only if the ring is full. Returns
+    /// a pointer valid until the next stage/flush.
+    fn next_sqe(&mut self) -> Option<*mut sys::io_uring_sqe> {
+        // SAFETY: sq_head points into the live ring mapping (kernel-written
+        // consumer index).
+        let head = unsafe { (*self.sq_head).load(Ordering::Acquire) };
+        if self.sq_tail_local.wrapping_sub(head) >= self.sq_entries {
+            // Ring full this loop: publish + enter now (counted; the
+            // batching contract is "at most one enter per loop" in the
+            // steady state, not a hard ceiling under pathological bursts).
+            self.stats.sq_full_flushes += 1;
+            self.flush();
+            // SAFETY: as above.
+            let head = unsafe { (*self.sq_head).load(Ordering::Acquire) };
+            if self.sq_tail_local.wrapping_sub(head) >= self.sq_entries {
+                return None;
+            }
+        }
+        let idx = self.sq_tail_local & self.sq_mask;
+        // SAFETY: idx < sq_entries, so both derived pointers stay inside
+        // their mappings; the slot is ours exclusively until the tail that
+        // covers it is published.
+        let sqe = unsafe {
+            let sqe = self.sqes_ptr.add(idx as usize);
+            std::ptr::write(sqe, sys::io_uring_sqe::default());
+            std::ptr::write(self.sq_array.add(idx as usize), idx);
+            sqe
+        };
+        self.sq_tail_local = self.sq_tail_local.wrapping_add(1);
+        Some(sqe)
+    }
+
+    /// Arm `fd` for one readiness event (oneshot `POLL_ADD`) and record
+    /// `fiber` as its waiter. Returns false (nothing recorded) if no SQE
+    /// could be staged — the caller must not park the fiber then.
+    pub(crate) fn register(
+        &mut self,
+        fd: i32,
+        want_read: bool,
+        want_write: bool,
+        fiber: FiberId,
+    ) -> bool {
+        if !want_read && !want_write {
+            return false;
+        }
+        let mut mask = sys::POLLERR | sys::POLLHUP;
+        if want_read {
+            mask |= sys::POLLIN | sys::POLLRDHUP;
+        }
+        if want_write {
+            mask |= sys::POLLOUT;
+        }
+        let Some(sqe) = self.next_sqe() else { return false };
+        // SAFETY: sqe was just staged by next_sqe and is exclusively ours
+        // until the tail publish.
+        unsafe {
+            (*sqe).opcode = sys::IORING_OP_POLL_ADD;
+            (*sqe).fd = fd;
+            (*sqe).op_flags = mask;
+            (*sqe).user_data = (KIND_POLL << UD_KIND_SHIFT) | (fiber as u64 & UD_PAYLOAD_MASK);
+        }
+        self.waiters.insert(fiber);
+        true
+    }
+
+    /// Stage the wake eventfd's multishot poll.
+    fn arm_wake(&mut self) {
+        if self.wake_fd < 0 || self.wake_armed {
+            return;
+        }
+        if let Some(sqe) = self.next_sqe() {
+            // SAFETY: sqe staged by next_sqe, exclusively ours until publish.
+            unsafe {
+                (*sqe).opcode = sys::IORING_OP_POLL_ADD;
+                (*sqe).fd = self.wake_fd;
+                (*sqe).op_flags = sys::POLLIN;
+                (*sqe).len = sys::IORING_POLL_ADD_MULTI;
+                (*sqe).user_data = KIND_WAKE << UD_KIND_SHIFT;
+            }
+            self.wake_armed = true;
+        }
+    }
+
+    /// Register a listener for multishot accept; returns the token the
+    /// acceptor fiber polls with [`UringReactor::accept_take`].
+    pub(crate) fn accept_register(&mut self, listener_fd: i32) -> Option<usize> {
+        let token = match self.accepts.iter().position(|a| a.is_none()) {
+            Some(i) => i,
+            None => {
+                self.accepts.push(None);
+                self.accepts.len() - 1
+            }
+        };
+        self.accepts[token] = Some(AcceptState {
+            listener_fd,
+            queue: VecDeque::new(),
+            parked: None,
+            armed: false,
+            closed: false,
+        });
+        if !self.arm_accept(token) {
+            self.accepts[token] = None;
+            return None;
+        }
+        Some(token)
+    }
+
+    fn arm_accept(&mut self, token: usize) -> bool {
+        let fd = match &self.accepts[token] {
+            Some(a) if !a.closed && !a.armed => a.listener_fd,
+            _ => return self.accepts[token].as_ref().is_some_and(|a| a.armed),
+        };
+        let Some(sqe) = self.next_sqe() else { return false };
+        // SAFETY: sqe staged by next_sqe, exclusively ours until publish.
+        // addr/off stay null: we do not ask for the peer address, so the
+        // SQE references no userspace memory while in flight.
+        unsafe {
+            (*sqe).opcode = sys::IORING_OP_ACCEPT;
+            (*sqe).fd = fd;
+            (*sqe).ioprio = sys::IORING_ACCEPT_MULTISHOT;
+            (*sqe).op_flags = sys::SOCK_CLOEXEC;
+            (*sqe).user_data = (KIND_ACCEPT << UD_KIND_SHIFT) | token as u64;
+        }
+        if let Some(a) = &mut self.accepts[token] {
+            a.armed = true;
+        }
+        true
+    }
+
+    /// Pop the next accepted connection fd, re-arming the multishot SQE
+    /// if the kernel disarmed it (e.g. after EMFILE). `None` means
+    /// "nothing pending — park".
+    pub(crate) fn accept_take(&mut self, token: usize) -> Option<i32> {
+        let needs_arm = match &self.accepts[token] {
+            Some(a) if !a.closed => a.queue.is_empty() && !a.armed,
+            _ => false,
+        };
+        if needs_arm {
+            self.arm_accept(token);
+        }
+        self.accepts[token].as_mut().and_then(|a| a.queue.pop_front())
+    }
+
+    /// Park `fiber` until a connection lands on `token`. False if the
+    /// fiber must not park (work already queued, or the slot is closed).
+    pub(crate) fn accept_park(&mut self, token: usize, fiber: FiberId) -> bool {
+        match &mut self.accepts[token] {
+            Some(a) if !a.closed && a.queue.is_empty() => {
+                a.parked = Some(fiber);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Tear down an accept registration, closing any queued-but-untaken
+    /// connection fds. Late CQEs for the token are closed on arrival.
+    pub(crate) fn accept_close(&mut self, token: usize) {
+        if let Some(a) = &mut self.accepts[token] {
+            a.closed = true;
+            while let Some(fd) = a.queue.pop_front() {
+                // SAFETY: fd was delivered by an accept CQE and never handed
+                // out; closing here is its single ownership release.
+                unsafe { sys::close(fd) };
+            }
+            a.parked = None;
+        }
+        self.accepts[token] = None;
+    }
+
+    /// Publish staged SQEs with one `io_uring_enter`. The scheduler calls
+    /// this once per loop (end-of-client-phase), so an entire loop's
+    /// parks — any number of connections — cost at most one syscall.
+    /// Returns SQEs submitted.
+    pub(crate) fn flush(&mut self) -> usize {
+        let staged = self.sq_tail_local.wrapping_sub(self.sq_tail_submitted);
+        // SAFETY: sq_flags points into the live ring mapping.
+        let overflow =
+            unsafe { (*self.sq_flags).load(Ordering::Acquire) } & sys::IORING_SQ_CQ_OVERFLOW != 0;
+        if staged == 0 && !overflow {
+            return 0;
+        }
+        // Publish: SQE bodies and array slots were plain-stored above; the
+        // Release tail store makes them visible to the kernel's Acquire.
+        // SAFETY: sq_tail points into the live ring mapping.
+        unsafe { (*self.sq_tail).store(self.sq_tail_local, Ordering::Release) };
+        // GETEVENTS only when the kernel parked completions in its overflow
+        // list (NODROP) — it makes the kernel flush them into the CQ.
+        let flags = if overflow { sys::IORING_ENTER_GETEVENTS } else { 0 };
+        // SAFETY: ring_fd is our live ring; the published tail covers
+        // exactly `staged` fully-written SQEs; no EXT_ARG, so arg is null.
+        let rc = unsafe {
+            sys::io_uring_enter(self.ring_fd, staged, 0, flags, std::ptr::null(), 0)
+        };
+        self.stats.enters += 1;
+        if rc > 0 {
+            let n = rc as u32;
+            self.sq_tail_submitted = self.sq_tail_submitted.wrapping_add(n);
+            self.stats.sqes_submitted += n as u64;
+            self.stats.max_sqes_per_enter = self.stats.max_sqes_per_enter.max(n as u64);
+            n as usize
+        } else {
+            0
+        }
+    }
+
+    /// Harvest completions into `out` — pure shared-memory reads, **no
+    /// syscall**. The scheduler passes its recycled scratch vector.
+    pub(crate) fn poll_into(&mut self, out: &mut Vec<FiberId>) {
+        // SAFETY: cq_head/cq_tail point into the live ring mapping; we are
+        // the only CQ consumer.
+        let mut head = unsafe { (*self.cq_head).load(Ordering::Relaxed) };
+        let tail = unsafe { (*self.cq_tail).load(Ordering::Acquire) };
+        if head == tail {
+            return;
+        }
+        while head != tail {
+            let idx = (head & self.cq_mask) as usize;
+            // SAFETY: idx < cq_entries keeps the read inside the mapping;
+            // the Acquire tail load above ordered the kernel's CQE writes
+            // before this copy.
+            let cqe = unsafe { std::ptr::read(self.cqes.add(idx)) };
+            self.handle_cqe(cqe, out);
+            head = head.wrapping_add(1);
+        }
+        // SAFETY: as above; the Release store returns the entries to the
+        // kernel after our copies are done.
+        unsafe { (*self.cq_head).store(head, Ordering::Release) };
+    }
+
+    fn handle_cqe(&mut self, cqe: sys::io_uring_cqe, out: &mut Vec<FiberId>) {
+        self.stats.cqes_harvested += 1;
+        let payload = cqe.user_data & UD_PAYLOAD_MASK;
+        match cqe.user_data >> UD_KIND_SHIFT {
+            KIND_POLL => {
+                let fiber = payload as FiberId;
+                // Wake only a fiber we still believe parked: a stale CQE
+                // (fiber already swept at shutdown, fd recycled) is dropped
+                // here instead of waking an unrelated fiber.
+                if self.waiters.remove(&fiber) {
+                    out.push(fiber);
+                }
+            }
+            KIND_WAKE => {
+                if cqe.flags & sys::IORING_CQE_F_MORE == 0 {
+                    self.wake_armed = false;
+                    self.arm_wake();
+                }
+                if self.wake_fd >= 0 {
+                    let mut val: u64 = 0;
+                    // Drain the counter (nonblocking eventfd; the epoll
+                    // reactor may race us to it, which is fine — the CQE
+                    // itself already ended any blocking wait).
+                    // SAFETY: wake_fd is the worker's live eventfd; val is a
+                    // live writable u64.
+                    unsafe { sys::read(self.wake_fd, &mut val as *mut u64 as *mut sys::c_void, 8) };
+                }
+            }
+            KIND_ACCEPT => {
+                let token = payload as usize;
+                let more = cqe.flags & sys::IORING_CQE_F_MORE != 0;
+                match self.accepts.get_mut(token).and_then(|a| a.as_mut()) {
+                    Some(a) if !a.closed => {
+                        if !more {
+                            a.armed = false;
+                        }
+                        if cqe.res >= 0 {
+                            a.queue.push_back(cqe.res);
+                        }
+                        // Transient failures (ECONNABORTED, EMFILE, …) just
+                        // disarm; accept_take re-arms on the next pass.
+                        if let Some(f) = a.parked.take() {
+                            out.push(f);
+                        }
+                    }
+                    _ => {
+                        if cqe.res >= 0 {
+                            // Late accept for a closed registration: we own
+                            // the fd, nobody else will.
+                            // SAFETY: fd delivered by this CQE, closed once.
+                            unsafe { sys::close(cqe.res) };
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Submit anything staged and block until a completion arrives or
+    /// `timeout_ms` expires (the idle phase's sibling of a blocking
+    /// `epoll_wait`); the armed wake eventfd ends the block on
+    /// [`super::Shared::inject`]/shutdown. Harvests into `out`; returns
+    /// fibers woken.
+    pub(crate) fn enter_wait(&mut self, timeout_ms: i32, out: &mut Vec<FiberId>) -> usize {
+        let staged = self.sq_tail_local.wrapping_sub(self.sq_tail_submitted);
+        // SAFETY: sq_tail points into the live ring mapping (publish before
+        // the blocking enter so staged SQEs are part of the same syscall).
+        unsafe { (*self.sq_tail).store(self.sq_tail_local, Ordering::Release) };
+        let ts = sys::kernel_timespec {
+            tv_sec: timeout_ms as i64 / 1000,
+            tv_nsec: (timeout_ms as i64 % 1000) * 1_000_000,
+        };
+        let arg = sys::io_uring_getevents_arg {
+            sigmask: 0,
+            sigmask_sz: 0,
+            pad: 0,
+            ts: &ts as *const sys::kernel_timespec as u64,
+        };
+        // SAFETY: ring_fd is our live ring; the published tail covers the
+        // staged SQEs; arg/ts are live locals matching EXT_ARG's contract
+        // for the duration of the call.
+        let rc = unsafe {
+            sys::io_uring_enter(
+                self.ring_fd,
+                staged,
+                1,
+                sys::IORING_ENTER_GETEVENTS | sys::IORING_ENTER_EXT_ARG,
+                &arg as *const sys::io_uring_getevents_arg as *const sys::c_void,
+                std::mem::size_of::<sys::io_uring_getevents_arg>(),
+            )
+        };
+        self.stats.enters += 1;
+        self.stats.enter_waits += 1;
+        if rc > 0 {
+            let n = rc as u32;
+            self.sq_tail_submitted = self.sq_tail_submitted.wrapping_add(n);
+            self.stats.sqes_submitted += n as u64;
+            self.stats.max_sqes_per_enter = self.stats.max_sqes_per_enter.max(n as u64);
+        }
+        let before = out.len();
+        self.poll_into(out);
+        out.len() - before
+    }
+
+    /// Detach every parked waiter — poll parks and parked acceptors —
+    /// into `out` (the shutdown sweep; resumed fibers re-check their exit
+    /// conditions). Armed kernel-side SQEs stay armed; their late CQEs
+    /// are ignored by the `waiters` membership check.
+    pub(crate) fn take_all_waiters(&mut self, out: &mut Vec<FiberId>) {
+        out.extend(self.waiters.drain());
+        for a in self.accepts.iter_mut().flatten() {
+            if let Some(f) = a.parked.take() {
+                out.push(f);
+            }
+        }
+    }
+}
+
+impl Drop for UringReactor {
+    fn drop(&mut self) {
+        // SAFETY: the reactor owns both mappings and the ring fd; each is
+        // released exactly once, here. The kernel cancels still-armed SQEs
+        // when the ring fd closes.
+        unsafe {
+            sys::munmap(self.sqes_ptr as *mut sys::c_void, self.sqes_len);
+            sys::munmap(self.ring_ptr as *mut sys::c_void, self.ring_len);
+            sys::close(self.ring_fd);
+        }
+    }
+}
+
+/// Park the current fiber until `fd` is readable/writable via the
+/// worker's uring reactor ([`crate::server::netfiber::NetPolicy::IoUring`]'s
+/// sibling of [`super::reactor::wait_fd`]). Spurious wake-ups are
+/// possible; callers re-check their socket and loop. Degrades to a
+/// momentary park (busy-poll) when the ring is unavailable, and to a
+/// yield during shutdown.
+pub fn wait_fd(fd: i32, want_read: bool, want_write: bool) {
+    let shutting_down = super::with_worker(|w| w.shared.shutting_down());
+    if shutting_down || (!want_read && !want_write) {
+        fiber::yield_now();
+        return;
+    }
+    fiber::suspend(|id| {
+        let ok = super::with_worker(|w| match w.ensure_uring() {
+            Some(u) => u.register(fd, want_read, want_write, id),
+            None => false,
+        });
+        if !ok {
+            // Could not stage the poll: make ourselves runnable again
+            // before the switch-out (momentary park, never stranded).
+            fiber::with_executor(|e| {
+                e.resume(id);
+            });
+        }
+    });
+}
+
+/// Register the current worker's ring for multishot accept on
+/// `listener_fd`. `None` when the ring is unavailable (caller falls back
+/// to the epoll accept path).
+pub(crate) fn accept_register(listener_fd: i32) -> Option<usize> {
+    super::with_worker(|w| w.ensure_uring().and_then(|u| u.accept_register(listener_fd)))
+}
+
+/// Take the next accepted fd for `token`, if any.
+pub(crate) fn accept_take(token: usize) -> Option<i32> {
+    super::with_worker(|w| w.uring.as_deref_mut().and_then(|u| u.accept_take(token)))
+}
+
+/// Park the acceptor fiber until a connection (or the shutdown sweep)
+/// arrives. Spurious returns possible; the caller loops.
+pub(crate) fn accept_park(token: usize) {
+    if super::with_worker(|w| w.shared.shutting_down()) {
+        fiber::yield_now();
+        return;
+    }
+    fiber::suspend(|id| {
+        let ok = super::with_worker(|w| match w.uring.as_deref_mut() {
+            Some(u) => u.accept_park(token, id),
+            None => false,
+        });
+        if !ok {
+            fiber::with_executor(|e| {
+                e.resume(id);
+            });
+        }
+    });
+}
+
+/// Tear down an accept registration on the current worker.
+pub(crate) fn accept_close(token: usize) {
+    super::with_worker(|w| {
+        if let Some(u) = w.uring.as_deref_mut() {
+            u.accept_close(token);
+        }
+    });
+}
+
+/// Number of uring-parked fibers on the current worker (tests/metrics).
+pub fn fd_waiters() -> usize {
+    super::with_worker(|w| w.uring.as_deref().map_or(0, |u| u.waiting()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+
+    /// Build a standalone reactor or skip the test with a visible reason.
+    /// With `TRUSTEE_REQUIRE_URING` set (CI on capable kernels), a skip
+    /// becomes a failure instead.
+    fn reactor_or_skip(test: &str, wake_fd: i32) -> Option<Box<UringReactor>> {
+        match UringReactor::new_with_entries(wake_fd, 16) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                assert!(
+                    std::env::var_os("TRUSTEE_REQUIRE_URING").is_none(),
+                    "TRUSTEE_REQUIRE_URING set but io_uring unavailable: {e}"
+                );
+                eprintln!("SKIP {test}: io_uring unavailable ({e})");
+                None
+            }
+        }
+    }
+
+    fn tcp_pair() -> (std::net::TcpStream, std::net::TcpStream) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn probe_reports() {
+        match probe() {
+            Ok(()) => {}
+            Err(e) => eprintln!("SKIP probe_reports: io_uring unavailable ({e})"),
+        }
+    }
+
+    #[test]
+    fn staged_polls_submit_with_one_enter_and_wake_on_ready() {
+        let Some(mut r) =
+            reactor_or_skip("staged_polls_submit_with_one_enter_and_wake_on_ready", -1)
+        else {
+            return;
+        };
+        // Stage many parks; none of them is a syscall.
+        let pairs: Vec<_> = (0..8).map(|_| tcp_pair()).collect();
+        for (i, (_c, s)) in pairs.iter().enumerate() {
+            assert!(r.register(s.as_raw_fd(), true, false, 100 + i));
+        }
+        assert_eq!(r.stats.enters, 0, "staging must not enter the kernel");
+        assert_eq!(r.waiting(), 8);
+        // One enter moves the whole batch: the submission-batching
+        // contract the scheduler relies on (one enter per loop).
+        assert_eq!(r.flush(), 8);
+        assert_eq!(r.stats.enters, 1);
+        assert_eq!(r.stats.sqes_submitted, 8);
+        assert_eq!(r.stats.max_sqes_per_enter, 8);
+        let mut out = Vec::new();
+        r.poll_into(&mut out);
+        assert!(out.is_empty(), "no data yet");
+        // Make every socket readable; completions arrive without another
+        // submission syscall (enter_wait used here to avoid sleeping).
+        for (c, _s) in &pairs {
+            let mut c = c;
+            c.write_all(b"x").unwrap();
+        }
+        let mut woken = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while woken.len() < 8 && std::time::Instant::now() < deadline {
+            r.enter_wait(100, &mut woken);
+        }
+        woken.sort_unstable();
+        assert_eq!(woken, (100..108).collect::<Vec<_>>());
+        assert_eq!(r.waiting(), 0);
+    }
+
+    #[test]
+    fn wake_eventfd_pops_a_blocking_enter() {
+        // SAFETY: eventfd has no memory preconditions; checked below.
+        let efd = unsafe { sys::eventfd(0, sys::EFD_NONBLOCK | sys::EFD_CLOEXEC) };
+        assert!(efd >= 0);
+        let Some(mut r) = reactor_or_skip("wake_eventfd_pops_a_blocking_enter", efd) else {
+            // SAFETY: efd created above; closed exactly once on this path.
+            unsafe { sys::close(efd) };
+            return;
+        };
+        let one: u64 = 1;
+        // SAFETY: efd is the valid eventfd created above; one is a live u64.
+        unsafe { sys::write(efd, &one as *const u64 as *const sys::c_void, 8) };
+        let mut out = Vec::new();
+        let t0 = std::time::Instant::now();
+        r.enter_wait(2000, &mut out);
+        assert!(out.is_empty(), "the wake produces no fiber");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_millis(1500),
+            "registered eventfd must end the blocking enter early"
+        );
+        // Multishot: a second wake still lands without re-arming by hand.
+        // SAFETY: as above.
+        unsafe { sys::write(efd, &one as *const u64 as *const sys::c_void, 8) };
+        let t0 = std::time::Instant::now();
+        r.enter_wait(2000, &mut out);
+        assert!(t0.elapsed() < std::time::Duration::from_millis(1500));
+        drop(r);
+        // SAFETY: efd created by this test; closed exactly once.
+        unsafe { sys::close(efd) };
+    }
+
+    #[test]
+    fn shutdown_sweep_detaches_parked_fibers() {
+        let Some(mut r) = reactor_or_skip("shutdown_sweep_detaches_parked_fibers", -1) else {
+            return;
+        };
+        let (_c1, s1) = tcp_pair();
+        let (_c2, s2) = tcp_pair();
+        assert!(r.register(s1.as_raw_fd(), true, false, 7));
+        assert!(r.register(s2.as_raw_fd(), false, true, 9));
+        r.flush();
+        let mut out = Vec::new();
+        r.take_all_waiters(&mut out);
+        out.sort_unstable();
+        assert_eq!(out, vec![7, 9]);
+        assert_eq!(r.waiting(), 0);
+        // s2 was write-ready: its CQE may already sit in the ring. Swept
+        // waiters must not be re-woken by stale completions.
+        let mut late = Vec::new();
+        r.enter_wait(50, &mut late);
+        assert!(late.is_empty(), "stale CQEs after the sweep wake nobody");
+    }
+
+    #[test]
+    fn multishot_accept_queues_connections() {
+        let Some(mut r) = reactor_or_skip("multishot_accept_queues_connections", -1) else {
+            return;
+        };
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let token = r.accept_register(listener.as_raw_fd()).expect("accept_register");
+        r.flush();
+        assert_eq!(r.stats.enters, 1, "one enter armed the multishot accept");
+        let clients: Vec<_> =
+            (0..3).map(|_| std::net::TcpStream::connect(addr).unwrap()).collect();
+        let mut got = Vec::new();
+        let mut scratch = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while got.len() < 3 && std::time::Instant::now() < deadline {
+            r.enter_wait(100, &mut scratch);
+            while let Some(fd) = r.accept_take(token) {
+                assert!(fd >= 0);
+                // SAFETY: the CQE handed us ownership of this accepted fd;
+                // wrapping it transfers that ownership to the TcpStream.
+                let s = unsafe { <std::net::TcpStream as std::os::fd::FromRawFd>::from_raw_fd(fd) };
+                got.push(s);
+            }
+        }
+        assert_eq!(got.len(), 3, "one multishot SQE served every connection");
+        // The single arming SQE plus nothing else was ever submitted.
+        assert_eq!(r.stats.sqes_submitted, 1);
+        r.accept_close(token);
+        drop(clients);
+    }
+}

@@ -640,7 +640,10 @@ impl ServerCore {
         // Socket workers: the non-dedicated ones (validate_topology
         // guarantees at least one).
         let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
-        let policy = cfg.net;
+        // Settle the policy against kernel capabilities once, here:
+        // IoUring on a kernel without io_uring degrades to Epoll with a
+        // logged reason, and every connection fiber sees the result.
+        let policy = cfg.net.resolve();
 
         // Round-robin dispatch of accepted streams onto socket workers.
         let dispatch = {
@@ -710,6 +713,15 @@ impl ServerCore {
     /// counters. Diagnostic: runs a short fiber per worker.
     pub fn hot_path_stats(&self) -> crate::runtime::HotPathStats {
         self.runtime().hot_path_totals()
+    }
+
+    /// io_uring submission/completion counters aggregated across the
+    /// runtime's workers (zeros unless connections ran under
+    /// `NetPolicy::IoUring`). The batching contract lives here: `enters`
+    /// stays at ~one per scheduler loop no matter how many connections
+    /// had pending I/O. Diagnostic: runs a short fiber per worker.
+    pub fn uring_stats(&self) -> crate::runtime::uring::UringStats {
+        self.runtime().uring_totals()
     }
 
     /// Issue `n` backend operations from a worker fiber with a bounded

@@ -11,9 +11,19 @@
 //!   when the fd becomes readable/writable. Idle connections cost
 //!   O(ready fds) per tick, so they no longer steal serve-phase capacity
 //!   from the trustees (paper §6.3/§7's saturation assumption).
+//! - [`NetPolicy::IoUring`] — the fiber parks by *staging* a poll SQE
+//!   into the worker's io_uring submission ring
+//!   ([`crate::runtime::uring`]); the scheduler publishes the whole
+//!   loop's parks with one `io_uring_enter` and harvests readiness from
+//!   the completion ring with no syscall, and the listener runs on a
+//!   single multishot-accept SQE. Same delegation philosophy as the slot
+//!   matrix, applied to the kernel boundary (DESIGN.md,
+//!   "Kernel-boundary batching"). Requires kernel support — resolve via
+//!   [`NetPolicy::resolve`], which falls back to Epoll with a logged
+//!   reason instead of failing.
 
 use crate::fiber;
-use crate::runtime::reactor;
+use crate::runtime::{reactor, uring};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
@@ -35,15 +45,22 @@ pub enum NetPolicy {
     /// Park on fd readiness in the per-worker epoll reactor.
     #[default]
     Epoll,
+    /// Park via a poll SQE in the per-worker io_uring; submissions are
+    /// batched one-`io_uring_enter`-per-scheduler-loop and completions
+    /// harvested syscall-free.
+    IoUring,
 }
 
 impl NetPolicy {
-    /// Parse a CLI spec (`busy` | `epoll`).
-    pub fn from_spec(s: &str) -> NetPolicy {
+    /// Parse a CLI spec (`busy` | `epoll` | `uring`). Unknown specs are a
+    /// descriptive `Err`, surfaced through the server configs' `validate()`
+    /// like every other config check.
+    pub fn from_spec(s: &str) -> Result<NetPolicy, String> {
         match s {
-            "busy" | "busypoll" | "busy-poll" => NetPolicy::BusyPoll,
-            "epoll" => NetPolicy::Epoll,
-            other => panic!("unknown net policy {other:?} (want busy|epoll)"),
+            "busy" | "busypoll" | "busy-poll" => Ok(NetPolicy::BusyPoll),
+            "epoll" => Ok(NetPolicy::Epoll),
+            "uring" | "io_uring" | "iouring" | "io-uring" => Ok(NetPolicy::IoUring),
+            other => Err(format!("unknown net policy {other:?} (want busy|epoll|uring)")),
         }
     }
 
@@ -51,6 +68,25 @@ impl NetPolicy {
         match self {
             NetPolicy::BusyPoll => "busy-poll",
             NetPolicy::Epoll => "epoll",
+            NetPolicy::IoUring => "uring",
+        }
+    }
+
+    /// Resolve the policy against kernel capabilities: [`NetPolicy::IoUring`]
+    /// degrades to [`NetPolicy::Epoll`] — with the reason logged, never a
+    /// panic — when the io_uring probe fails (old kernel, seccomp,
+    /// `io_uring_disabled` sysctl). Servers call this once at start-up so
+    /// every connection fiber sees the settled policy.
+    pub fn resolve(self) -> NetPolicy {
+        match self {
+            NetPolicy::IoUring => match uring::probe() {
+                Ok(()) => NetPolicy::IoUring,
+                Err(e) => {
+                    eprintln!("net policy uring unavailable ({e}); falling back to epoll");
+                    NetPolicy::Epoll
+                }
+            },
+            p => p,
         }
     }
 }
@@ -66,6 +102,7 @@ pub fn net_wait(policy: NetPolicy, fd: i32, want_read: bool, want_write: bool) {
     match policy {
         NetPolicy::BusyPoll => fiber::yield_now(),
         NetPolicy::Epoll => reactor::wait_fd(fd, want_read, want_write),
+        NetPolicy::IoUring => uring::wait_fd(fd, want_read, want_write),
     }
 }
 
@@ -220,10 +257,47 @@ pub fn accept_fiber(
     }
 }
 
+/// Accept-loop fiber body for [`NetPolicy::IoUring`]: one **multishot
+/// ACCEPT** SQE serves every incoming connection — the kernel re-arms it
+/// internally, so a wave of N connections costs zero accept syscalls here
+/// (the completions ride the worker's ordinary CQ harvest). The fiber
+/// drains queued accepted fds, dispatches them, and parks until the next
+/// completion; the runtime's shutdown sweep (and `stop`) wake the park.
+/// If the worker cannot create a ring, this degrades to the epoll
+/// [`accept_fiber`] — which serves connections of any policy — so a
+/// partially-capable host still accepts.
+pub fn uring_accept_fiber(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    mut dispatch: impl FnMut(TcpStream),
+) {
+    let Some(token) = uring::accept_register(listener.as_raw_fd()) else {
+        eprintln!("uring acceptor: ring unavailable on this worker; using epoll accept loop");
+        return accept_fiber(listener, NetPolicy::Epoll, stop, dispatch);
+    };
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match uring::accept_take(token) {
+            Some(fd) => {
+                // SAFETY: the accept CQE handed this fiber sole ownership
+                // of the connection fd; wrapping transfers it to the
+                // TcpStream (the engine sets non-blocking itself).
+                let stream = unsafe { <TcpStream as std::os::fd::FromRawFd>::from_raw_fd(fd) };
+                dispatch(stream);
+            }
+            None => uring::accept_park(token),
+        }
+    }
+    uring::accept_close(token);
+}
+
 /// Start the accept loop for `policy`: an fd-parked fiber on `worker`
-/// under [`NetPolicy::Epoll`] (no thread), or the legacy dedicated
-/// 200 µs sleep-poll thread under [`NetPolicy::BusyPoll`] (returned for
-/// joining at stop). Shared by the KV and memcached servers.
+/// under [`NetPolicy::Epoll`] (no thread), a multishot-accept fiber under
+/// [`NetPolicy::IoUring`], or the legacy dedicated 200 µs sleep-poll
+/// thread under [`NetPolicy::BusyPoll`] (returned for joining at stop).
+/// Shared by the KV and memcached servers.
 pub fn start_acceptor(
     policy: NetPolicy,
     listener: TcpListener,
@@ -240,6 +314,17 @@ pub fn start_acceptor(
                 Box::new(move || {
                     fiber::with_executor(|e| {
                         e.spawn(move || accept_fiber(listener, policy, stop, dispatch));
+                    });
+                }),
+            );
+            Ok(None)
+        }
+        NetPolicy::IoUring => {
+            shared.inject(
+                worker,
+                Box::new(move || {
+                    fiber::with_executor(|e| {
+                        e.spawn(move || uring_accept_fiber(listener, stop, dispatch));
                     });
                 }),
             );
@@ -349,9 +434,24 @@ mod tests {
 
     #[test]
     fn net_policy_specs_parse() {
-        assert_eq!(NetPolicy::from_spec("busy"), NetPolicy::BusyPoll);
-        assert_eq!(NetPolicy::from_spec("epoll"), NetPolicy::Epoll);
+        assert_eq!(NetPolicy::from_spec("busy"), Ok(NetPolicy::BusyPoll));
+        assert_eq!(NetPolicy::from_spec("epoll"), Ok(NetPolicy::Epoll));
+        assert_eq!(NetPolicy::from_spec("uring"), Ok(NetPolicy::IoUring));
+        assert_eq!(NetPolicy::from_spec("io_uring"), Ok(NetPolicy::IoUring));
         assert_eq!(NetPolicy::default(), NetPolicy::Epoll);
         assert_eq!(NetPolicy::BusyPoll.label(), "busy-poll");
+        assert_eq!(NetPolicy::IoUring.label(), "uring");
+        let err = NetPolicy::from_spec("nope").unwrap_err();
+        assert!(err.contains("nope") && err.contains("uring"), "descriptive: {err}");
+    }
+
+    #[test]
+    fn resolve_never_panics() {
+        // IoUring resolves to itself (capable kernel) or Epoll (with the
+        // reason logged) — never a panic; other policies are identity.
+        let r = NetPolicy::IoUring.resolve();
+        assert!(matches!(r, NetPolicy::IoUring | NetPolicy::Epoll));
+        assert_eq!(NetPolicy::Epoll.resolve(), NetPolicy::Epoll);
+        assert_eq!(NetPolicy::BusyPoll.resolve(), NetPolicy::BusyPoll);
     }
 }

@@ -5,14 +5,25 @@
 //! "heavy traffic from millions of users" north star makes wire-path
 //! totality a hard requirement, not a nicety.
 //!
-//! Each scenario runs under both net policies, then proves the server is
-//! still healthy by completing a well-formed round trip on a fresh
-//! connection.
+//! Each scenario runs under every net policy (io_uring included when the
+//! kernel probe passes — otherwise skipped with a visible message), then
+//! proves the server is still healthy by completing a well-formed round
+//! trip on a fresh connection.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig, NetPolicy};
 use trustee::util::Rng;
+
+/// Every policy to harden against; IoUring only where the kernel has it.
+fn policies(test: &str) -> Vec<NetPolicy> {
+    let mut v = vec![NetPolicy::BusyPoll, NetPolicy::Epoll];
+    match trustee::runtime::uring::probe() {
+        Ok(()) => v.push(NetPolicy::IoUring),
+        Err(e) => eprintln!("SKIP {test} under uring: io_uring unavailable ({e})"),
+    }
+    v
+}
 
 fn start(net: NetPolicy) -> KvServer {
     KvServer::start(KvServerConfig {
@@ -69,7 +80,7 @@ fn throw_garbage(server: &KvServer, bytes: &[u8]) {
 
 #[test]
 fn hostile_frame_len_is_rejected_without_ballooning() {
-    for net in [NetPolicy::BusyPoll, NetPolicy::Epoll] {
+    for net in policies("hostile_frame_len_is_rejected_without_ballooning") {
         let server = start(net);
         // A 4 GiB frame_len announcement, then silence.
         throw_garbage(&server, &u32::MAX.to_le_bytes());
@@ -84,7 +95,7 @@ fn hostile_frame_len_is_rejected_without_ballooning() {
 
 #[test]
 fn truncated_and_corrupt_frames_never_panic_workers() {
-    for net in [NetPolicy::BusyPoll, NetPolicy::Epoll] {
+    for net in policies("truncated_and_corrupt_frames_never_panic_workers") {
         let server = start(net);
         // Truncated valid frame.
         let mut buf = Vec::new();
@@ -108,7 +119,7 @@ fn truncated_and_corrupt_frames_never_panic_workers() {
 
 #[test]
 fn random_byte_storms_never_panic_workers() {
-    for net in [NetPolicy::BusyPoll, NetPolicy::Epoll] {
+    for net in policies("random_byte_storms_never_panic_workers") {
         let server = start(net);
         let mut rng = Rng::new(0xBAD_BEEF ^ net.label().len() as u64);
         for round in 0..16u64 {

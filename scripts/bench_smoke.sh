@@ -32,8 +32,17 @@ cargo bench --bench eviction_pressure -- --json --quick --ops 1500 \
     > "$OUT_DIR/BENCH_eviction_pressure.json"
 echo "wrote BENCH_eviction_pressure.json" >&2
 
+# E21 connection-scale sweep, CI-sized rungs (the full ladder is
+# 1000,10000,100000 — see EXPERIMENTS.md E21). Cells where io_uring is
+# unavailable fall back to epoll with a logged reason and still emit
+# valid JSON, so this works on any kernel.
+cargo bench --bench net_idle_conns -- --sweep --json \
+    --conns 64,256 --ops 400 --active-pct 5 \
+    > "$OUT_DIR/BENCH_net_idle_conns.json"
+echo "wrote BENCH_net_idle_conns.json" >&2
+
 # Sanity: every file must be non-empty JSON (first byte '{').
-for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json BENCH_eviction_pressure.json; do
+for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json BENCH_eviction_pressure.json BENCH_net_idle_conns.json; do
     head -c 1 "$OUT_DIR/$f" | grep -q '{' || { echo "bad JSON in $f" >&2; exit 1; }
 done
 echo "bench smoke OK" >&2
