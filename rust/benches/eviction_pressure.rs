@@ -77,6 +77,7 @@ fn run_cell(backend: BackendKind, label: &str, cfg: &CellCfg) -> Cell {
         ttl_pct: 0,
         val_len: cfg.val_len,
         seed: 0xE18,
+        retry_shed: false,
     });
     if !stats.ok() {
         eprintln!("client errors: {:?}", stats.errors);

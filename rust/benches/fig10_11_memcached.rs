@@ -32,6 +32,7 @@ fn run_one(backend: BackendKind, keys: u64, dist: &str, write_pct: u32, ops: u64
         ttl_pct: 0,
         val_len: 16,
         seed: 0x3E3C,
+        retry_shed: false,
     });
     let tput = stats.throughput();
     server.stop();

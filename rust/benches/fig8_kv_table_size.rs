@@ -38,6 +38,7 @@ fn run_one(
         write_pct,
         val_len: 16,
         seed: 0xF18,
+        retry_shed: false,
     });
     let tput = stats.throughput();
     server.stop();

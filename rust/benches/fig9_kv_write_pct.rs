@@ -71,6 +71,7 @@ fn main() {
                     write_pct: pct,
                     val_len: 16,
                     seed: 0xF19,
+                    retry_shed: false,
                 });
                 let kops = stats.throughput() / 1e3;
                 row.push(format!("{kops:.1}"));

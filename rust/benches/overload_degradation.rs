@@ -1,0 +1,120 @@
+//! E22: overload degradation curve — goodput and shed rate vs offered
+//! concurrency, with admission control on (watermarked) and off
+//! (`shed_high = 0`).
+//!
+//! The claim under test: past the shed watermark a watermarked server
+//! degrades *gracefully* — goodput stays near capacity and the excess is
+//! answered with cheap protocol-level overload errors — instead of
+//! queueing without bound. Offered concurrency is swept by pipeline
+//! depth (offered = client threads × pipeline); each level runs the same
+//! storm against both tunings.
+//!
+//! Usage: cargo bench --bench overload_degradation -- \
+//!            [--pipelines 1,4,16,...] [--shed-high Q] [--shed-low Q]
+//!            [--keys N] [--ops N] [--quick] [--json]
+//!
+//! With `--json`, one machine-readable object is printed to stdout —
+//! `scripts/bench_smoke.sh` captures it as
+//! `BENCH_overload_degradation.json` for cross-PR comparison.
+
+use trustee::bench::print_table;
+use trustee::kvstore::BackendKind;
+use trustee::memcache::{run_memtier, McdServer, McdServerConfig, MemtierConfig};
+use trustee::server::ServerTuning;
+use trustee::util::cli::Args;
+
+struct Cell {
+    goodput_kops: f64,
+    shed_rate: f64,
+    shed_metric: u64,
+}
+
+fn run_level(tuning: ServerTuning, pipeline: usize, threads: usize, keys: u64, ops: u64) -> Cell {
+    let server = McdServer::start(McdServerConfig {
+        workers: 2,
+        backend: BackendKind::Trust { shards: 4 },
+        tuning,
+        ..Default::default()
+    });
+    server.prefill(keys, 16);
+    let stats = run_memtier(&MemtierConfig {
+        addr: server.addr(),
+        threads,
+        pipeline,
+        ops_per_thread: ops,
+        keys,
+        dist: "uniform".into(),
+        write_pct: 10,
+        ttl_pct: 0,
+        val_len: 16,
+        seed: 0xE22,
+        retry_shed: false,
+    });
+    if !stats.ok() {
+        eprintln!("client errors: {:?}", stats.errors);
+    }
+    let served = stats.ops - stats.shed;
+    let shed_metric = server.metrics().totals().shed;
+    server.stop();
+    Cell {
+        goodput_kops: served as f64 / stats.elapsed.as_secs_f64() / 1e3,
+        shed_rate: stats.shed as f64 / (stats.ops.max(1)) as f64,
+        shed_metric,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let json = args.flag("json");
+    let keys: u64 = args.get("keys", 512);
+    let ops: u64 = args.get("ops", if quick { 1_500 } else { 5_000 });
+    let threads: usize = args.get("client-threads", 2);
+    let shed_high: u64 = args.get("shed-high", 64);
+    let shed_low: u64 = args.get("shed-low", 48);
+    let default_pipelines: &[usize] = if quick { &[4, 128] } else { &[1, 4, 16, 64, 256] };
+    let pipelines = args.get_list::<usize>("pipelines", default_pipelines);
+
+    let watermarked =
+        ServerTuning { shed_high, shed_low, ..ServerTuning::default() };
+    let unlimited = ServerTuning { shed_high: 0, ..ServerTuning::default() };
+
+    if !json {
+        println!(
+            "# E22: overload degradation, memcached front end \
+             ({keys} keys, shed band {shed_low}..{shed_high}); \
+             cell = goodput kOPs (shed %)"
+        );
+    }
+
+    let header = vec!["offered", "watermarked", "unlimited"];
+    let mut rows = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+    for &pipeline in &pipelines {
+        let offered = threads * pipeline;
+        let shed = run_level(watermarked, pipeline, threads, keys, ops);
+        let open = run_level(unlimited, pipeline, threads, keys, ops);
+        rows.push(vec![
+            offered.to_string(),
+            format!("{:.1} ({:.0}%)", shed.goodput_kops, shed.shed_rate * 100.0),
+            format!("{:.1} ({:.0}%)", open.goodput_kops, open.shed_rate * 100.0),
+        ]);
+        json_rows.push(format!(
+            "{{\"pipeline\":{pipeline},\"offered\":{offered},\
+             \"watermarked\":{{\"goodput_kops\":{:.2},\"shed_rate\":{:.4},\"shed\":{}}},\
+             \"unlimited\":{{\"goodput_kops\":{:.2},\"shed_rate\":{:.4},\"shed\":{}}}}}",
+            shed.goodput_kops, shed.shed_rate, shed.shed_metric,
+            open.goodput_kops, open.shed_rate, open.shed_metric,
+        ));
+        eprintln!("done offered={offered}");
+    }
+    if json {
+        println!(
+            "{{\"bench\":\"overload_degradation\",\"shed_high\":{shed_high},\
+             \"shed_low\":{shed_low},\"keys\":{keys},\"rows\":[{}]}}",
+            json_rows.join(",")
+        );
+    } else {
+        print_table("E22: goodput kOPs vs offered concurrency", &header, &rows);
+    }
+}

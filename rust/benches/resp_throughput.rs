@@ -66,6 +66,7 @@ fn main() {
                 ttl_pct: 0,
                 val_len: 16,
                 seed: 0xE16,
+                retry_shed: false,
             });
             if !stats.ok() {
                 eprintln!("client errors: {:?}", stats.errors);

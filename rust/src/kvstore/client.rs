@@ -11,7 +11,7 @@
 //! progress context, instead of panicking the client thread.
 
 use super::proto::{self, FrameCursor};
-use crate::loadgen::{run_pipelined_loader, LoadDriver, Reply};
+use crate::loadgen::{run_pipelined_loader_opts, LoadDriver, Reply};
 use crate::util::stats::LatencyHist;
 use crate::util::{KeyDist, Rng};
 use std::collections::HashMap;
@@ -40,6 +40,9 @@ pub struct LoadConfig {
     pub write_pct: u32,
     pub val_len: usize,
     pub seed: u64,
+    /// Re-issue requests the server shed with `ST_OVERLOADED` (bounded;
+    /// off = count them as valueless completions).
+    pub retry_shed: bool,
 }
 
 /// Aggregated results. `errors` holds one descriptive entry per client
@@ -51,6 +54,8 @@ pub struct LoadStats {
     pub hist: LatencyHist,
     pub hits: u64,
     pub misses: u64,
+    /// Requests the server answered with `ST_OVERLOADED`.
+    pub shed: u64,
     pub errors: Vec<String>,
 }
 
@@ -72,6 +77,7 @@ struct ThreadResult {
     hist: LatencyHist,
     hits: u64,
     misses: u64,
+    shed: u64,
     error: Option<String>,
 }
 
@@ -88,6 +94,7 @@ pub fn run_load(cfg: &LoadConfig) -> LoadStats {
     let mut ops = 0;
     let mut hits = 0;
     let mut misses = 0;
+    let mut shed = 0;
     let mut errors = Vec::new();
     for (t, h) in handles.into_iter().enumerate() {
         match h.join() {
@@ -95,6 +102,7 @@ pub fn run_load(cfg: &LoadConfig) -> LoadStats {
                 ops += r.ops;
                 hits += r.hits;
                 misses += r.misses;
+                shed += r.shed;
                 hist.merge(&r.hist);
                 if let Some(e) = r.error {
                     errors.push(format!("client thread {t}: {e}"));
@@ -103,7 +111,7 @@ pub fn run_load(cfg: &LoadConfig) -> LoadStats {
             Err(_) => errors.push(format!("client thread {t} panicked")),
         }
     }
-    LoadStats { ops, elapsed: start.elapsed(), hist, hits, misses, errors }
+    LoadStats { ops, elapsed: start.elapsed(), hist, hits, misses, shed, errors }
 }
 
 /// The binary-KV wire format plugged into the shared loader skeleton:
@@ -143,7 +151,10 @@ impl LoadDriver for KvDriver {
             return Err(format!("response for unknown request id {}", resp.id));
         };
         self.hist.record(t0.elapsed().as_nanos() as u64);
-        Ok(Some(Reply { used: cursor.consumed, hit: resp.status == proto::ST_OK }))
+        if resp.status == proto::ST_OVERLOADED {
+            return Ok(Some(Reply::shed(cursor.consumed)));
+        }
+        Ok(Some(Reply::ok(cursor.consumed, resp.status == proto::ST_OK)))
     }
 }
 
@@ -157,12 +168,19 @@ fn run_one_connection(cfg: &LoadConfig, tid: u64) -> ThreadResult {
         in_flight: HashMap::new(),
         hist: LatencyHist::new(),
     };
-    let r = run_pipelined_loader(cfg.addr, cfg.pipeline, cfg.ops_per_thread, &mut driver);
+    let r = run_pipelined_loader_opts(
+        cfg.addr,
+        cfg.pipeline,
+        cfg.ops_per_thread,
+        &mut driver,
+        cfg.retry_shed,
+    );
     ThreadResult {
         ops: r.done,
         hist: driver.hist,
         hits: r.hits,
         misses: r.misses,
+        shed: r.shed,
         error: r.error,
     }
 }
@@ -191,6 +209,7 @@ mod tests {
             write_pct: 5,
             val_len: 16,
             seed: 42,
+            retry_shed: false,
         });
         assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 1000);
@@ -219,6 +238,7 @@ mod tests {
             write_pct: 50,
             val_len: 16,
             seed: 7,
+            retry_shed: false,
         });
         assert!(stats.ok(), "client errors: {:?}", stats.errors);
         assert_eq!(stats.ops, 600);
@@ -240,6 +260,7 @@ mod tests {
             write_pct: 0,
             val_len: 8,
             seed: 1,
+            retry_shed: false,
         });
         assert_eq!(stats.ops, 0);
         assert_eq!(stats.errors.len(), 2);
@@ -271,6 +292,7 @@ mod tests {
                 write_pct: 5,
                 val_len: 16,
                 seed: 3,
+                retry_shed: false,
             })
         });
         // Let it get going, then yank the server.

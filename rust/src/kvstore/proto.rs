@@ -26,6 +26,10 @@ pub const ST_NOT_FOUND: u8 = 1;
 /// The request was syntactically valid framing but semantically bad
 /// (unknown op). The server answers with this status and closes.
 pub const ST_BAD_REQUEST: u8 = 2;
+/// The server is shedding load (queue depth over its watermark or
+/// deadline pressure). The request was *not* executed; the connection
+/// stays open and the client may retry later.
+pub const ST_OVERLOADED: u8 = 3;
 
 /// Hard ceiling on `frame_len`. Generous for the workloads here (64 KiB
 /// keys + values up to ~1 MiB) while keeping a hostile length field from

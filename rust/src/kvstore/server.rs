@@ -16,7 +16,7 @@ use super::backend::{AsyncKv, BackendKind};
 use super::proto::{self, FrameCursor, ProtoError};
 use crate::runtime::Runtime;
 use crate::server::engine::{
-    Completion, ConnMetrics, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore,
+    Completion, ConnMetrics, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore, ServerTuning,
 };
 use crate::server::netfiber::{self, NetPolicy};
 use std::sync::atomic::AtomicU64;
@@ -32,6 +32,9 @@ pub struct KvServerConfig {
     pub addr: String,
     /// How connection fibers wait for socket progress.
     pub net: NetPolicy,
+    /// Overload-control and degradation knobs (shed watermarks, request
+    /// deadline, stalled-connection reaping, stop-drain grace).
+    pub tuning: ServerTuning,
 }
 
 impl Default for KvServerConfig {
@@ -42,6 +45,7 @@ impl Default for KvServerConfig {
             backend: BackendKind::Trust { shards: 0 },
             addr: "127.0.0.1:0".into(),
             net: NetPolicy::default(),
+            tuning: ServerTuning::default(),
         }
     }
 }
@@ -51,7 +55,8 @@ impl KvServerConfig {
     /// misconfiguration that previously died on an internal assert after
     /// worker threads were already spawned reports here instead.
     pub fn validate(&self) -> Result<(), String> {
-        netfiber::validate_topology(self.workers, self.dedicated)
+        netfiber::validate_topology(self.workers, self.dedicated)?;
+        self.tuning.validate()
     }
 }
 
@@ -100,6 +105,11 @@ impl Protocol for KvProtocol {
             Ok(None) => Ok(None),
             Err(e) => Err(KvFault::Frame(e)),
         }
+    }
+
+    fn render_overload(&mut self, req: &proto::Request, out: &mut Vec<u8>) -> bool {
+        proto::write_response(out, req.id, proto::ST_OVERLOADED, &[]);
+        true
     }
 
     fn render_error(&mut self, err: &KvFault, out: &mut Vec<u8>) {
@@ -179,6 +189,7 @@ impl KvServer {
                 dedicated: cfg.dedicated,
                 addr: cfg.addr.clone(),
                 net: cfg.net,
+                tuning: cfg.tuning,
             },
             "kv-accept",
             |rt, trustees| {

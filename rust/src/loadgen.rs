@@ -24,6 +24,22 @@ use std::net::{SocketAddr, TcpStream};
 pub struct Reply {
     pub used: usize,
     pub hit: bool,
+    /// The server answered with its protocol's overload-shed error
+    /// (`-BUSY` / `SERVER_ERROR busy` / `ST_OVERLOADED`): the request was
+    /// *not* executed but the connection is still good. Not a desync.
+    pub shed: bool,
+}
+
+impl Reply {
+    /// An ordinary (non-shed) reply.
+    pub fn ok(used: usize, hit: bool) -> Reply {
+        Reply { used, hit, shed: false }
+    }
+
+    /// A shed reply (counts neither hit nor miss).
+    pub fn shed(used: usize) -> Reply {
+        Reply { used, hit: false, shed: true }
+    }
 }
 
 /// A wire protocol plugged into [`run_pipelined_loader`]. Implementations
@@ -49,21 +65,42 @@ pub struct LoaderResult {
     pub done: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Replies the server shed with an overload error (counted toward
+    /// `done` only when the retry budget ran out or retry was off).
+    pub shed: u64,
     pub error: Option<String>,
 }
 
-/// Drive one nonblocking connection until `ops` requests completed (or a
-/// failure ends the run): top up a `pipeline`-deep window via
-/// [`LoadDriver::encode_next`], flush partial writes, drain the socket,
-/// and parse replies via [`LoadDriver::parse_reply`].
+/// [`run_pipelined_loader_opts`] with shed-retry off: a shed reply counts
+/// as a completed (non-hit, non-miss) op.
 pub fn run_pipelined_loader<D: LoadDriver>(
     addr: SocketAddr,
     pipeline: usize,
     ops: u64,
     driver: &mut D,
 ) -> LoaderResult {
-    let (mut sent, mut done, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
+    run_pipelined_loader_opts(addr, pipeline, ops, driver, false)
+}
+
+/// Drive one nonblocking connection until `ops` requests completed (or a
+/// failure ends the run): top up a `pipeline`-deep window via
+/// [`LoadDriver::encode_next`], flush partial writes, drain the socket,
+/// and parse replies via [`LoadDriver::parse_reply`].
+///
+/// A [`Reply::shed`] reply bumps `shed`; with `retry_shed` it is re-issued
+/// through `encode_next` (bounded: at most `ops` total retries, so a
+/// permanently-overloaded server still terminates), otherwise it counts
+/// as a completed op with no hit/miss.
+pub fn run_pipelined_loader_opts<D: LoadDriver>(
+    addr: SocketAddr,
+    pipeline: usize,
+    ops: u64,
+    driver: &mut D,
+    retry_shed: bool,
+) -> LoaderResult {
+    let (mut sent, mut done, mut hits, mut misses, mut shed) = (0u64, 0u64, 0u64, 0u64, 0u64);
     let mut inflight = 0usize;
+    let mut retry_budget = if retry_shed { ops } else { 0 };
 
     // One macro instead of `.unwrap()`: bail out with the stats gathered
     // so far and a message carrying progress context.
@@ -73,6 +110,7 @@ pub fn run_pipelined_loader<D: LoadDriver>(
                 done,
                 hits,
                 misses,
+                shed,
                 error: Some(format!("after {done}/{ops} ops: {}", format!($($arg)*))),
             }
         };
@@ -129,6 +167,20 @@ pub fn run_pipelined_loader<D: LoadDriver>(
                 Ok(Some(reply)) => {
                     parsed += reply.used;
                     inflight -= 1;
+                    if reply.shed {
+                        shed += 1;
+                        if retry_budget > 0 {
+                            // Re-issue through the normal top-up path (the
+                            // driver books fresh expectation state there).
+                            retry_budget -= 1;
+                            sent -= 1;
+                            continue;
+                        }
+                        // Out of retries (or retry off): a counted,
+                        // valueless completion.
+                        done += 1;
+                        continue;
+                    }
                     done += 1;
                     if reply.hit {
                         hits += 1;
@@ -145,7 +197,7 @@ pub fn run_pipelined_loader<D: LoadDriver>(
             parsed = 0;
         }
     }
-    LoaderResult { done, hits, misses, error: None }
+    LoaderResult { done, hits, misses, shed, error: None }
 }
 
 #[cfg(test)]
@@ -169,8 +221,9 @@ mod tests {
                 return Ok(None);
             };
             match &buf[..nl] {
-                b"pong" => Ok(Some(Reply { used: nl + 1, hit: true })),
-                b"miss" => Ok(Some(Reply { used: nl + 1, hit: false })),
+                b"pong" => Ok(Some(Reply::ok(nl + 1, true))),
+                b"miss" => Ok(Some(Reply::ok(nl + 1, false))),
+                b"busy" => Ok(Some(Reply::shed(nl + 1))),
                 other => Err(format!(
                     "unexpected reply {:?}",
                     String::from_utf8_lossy(other)
@@ -214,6 +267,34 @@ mod tests {
         assert!(r.error.is_none(), "{:?}", r.error);
         assert_eq!((r.done, r.hits, r.misses), (10, 5, 5));
         assert_eq!(driver.sent, 10);
+        drop(h);
+    }
+
+    #[test]
+    fn shed_replies_count_without_retry() {
+        // Server alternates pong/busy; without retry a shed reply is a
+        // completed op that is neither hit nor miss.
+        let (addr, h) = echo_server(b"pong\nbusy\n");
+        let mut driver = EchoDriver { sent: 0 };
+        let r = run_pipelined_loader(addr, 4, 10, &mut driver);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!((r.done, r.hits, r.misses, r.shed), (10, 5, 0, 5));
+        assert_eq!(driver.sent, 10);
+        drop(h);
+    }
+
+    #[test]
+    fn shed_replies_reissue_with_retry() {
+        // pong/pong/busy rotation: every third reply is shed and retried.
+        // 12 completions require 12 pongs; the retry budget (= ops) is
+        // ample, so every done op is a hit and shed counts the retries.
+        let (addr, h) = echo_server(b"pong\npong\nbusy\n");
+        let mut driver = EchoDriver { sent: 0 };
+        let r = run_pipelined_loader_opts(addr, 4, 12, &mut driver, true);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!((r.done, r.hits, r.misses), (12, 12, 0));
+        assert!(r.shed >= 4, "rotation sheds every 3rd reply: {}", r.shed);
+        assert_eq!(driver.sent as u64, 12 + r.shed);
         drop(h);
     }
 

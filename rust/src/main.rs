@@ -6,9 +6,11 @@
 //! trustee kv-server    --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
 //!                      [--val-len L] [--net epoll|busy|uring]
+//!                      [--shed-high Q --shed-low Q] [--deadline-ms MS]
+//!                      [--stall-ms MS] [--grace-ms MS] [--idle-ticks T]
 //! trustee kv-load      --addr HOST:PORT --threads T --pipeline P --ops N
 //!                      --keys K --dist uniform|zipf --write-pct W
-//!                      [--val-len L] [--seed S]
+//!                      [--val-len L] [--seed S] [--retry-shed]
 //! trustee mcd-server   --backend trust[:N]|mutex|rwlock|swift --workers W
 //!                      --dedicated D --addr HOST:PORT [--prefill N]
 //!                      [--val-len L] [--budget-mb M] [--net epoll|busy|uring]
@@ -29,6 +31,13 @@
 //! trustee demo         quick in-process tour (Figure 1)
 //! ```
 //!
+//! All three servers accept the same overload/robustness knobs
+//! (`--shed-high/--shed-low` queue watermarks, `--deadline-ms`,
+//! `--stall-ms`, `--grace-ms`, `--idle-ticks`; defaults =
+//! [`ServerTuning::default`]), and all three loaders accept
+//! `--retry-shed` to re-issue shed requests instead of counting them as
+//! valueless completions.
+//!
 //! All three servers ride the shared delegated connection engine
 //! (`trustee::server::engine`); the load generators report client-side
 //! I/O failures descriptively and exit nonzero instead of panicking.
@@ -36,7 +45,7 @@
 use trustee::bench::fadd::{run_async, run_lock_by_name, run_trust, FaddConfig};
 use trustee::kvstore::{run_load, BackendKind, KvServer, KvServerConfig, LoadConfig};
 use trustee::memcache::{run_memtier, McdServer, McdServerConfig, MemtierConfig};
-use trustee::server::{run_resp_load, RespLoadConfig, RespServer, RespServerConfig};
+use trustee::server::{run_resp_load, RespLoadConfig, RespServer, RespServerConfig, ServerTuning};
 use trustee::util::cli::Args;
 use trustee::util::stats::{fmt_mops, fmt_ns};
 
@@ -76,6 +85,20 @@ fn parse_net(args: &Args) -> trustee::kvstore::NetPolicy {
     })
 }
 
+/// Build the shared overload/robustness tuning from the server flags,
+/// starting from the library defaults.
+fn parse_tuning(args: &Args) -> ServerTuning {
+    let d = ServerTuning::default();
+    ServerTuning {
+        shed_high: args.get("shed-high", d.shed_high),
+        shed_low: args.get("shed-low", d.shed_low),
+        deadline_ms: args.get("deadline-ms", d.deadline_ms),
+        conn_stall_ms: args.get("stall-ms", d.conn_stall_ms),
+        stop_drain_grace_ms: args.get("grace-ms", d.stop_drain_grace_ms),
+        idle_ticks: args.get("idle-ticks", d.idle_ticks),
+    }
+}
+
 /// Exit nonzero with every client-thread error when a load run failed.
 fn bail_on_client_errors(errors: &[String]) {
     if !errors.is_empty() {
@@ -93,6 +116,7 @@ fn kv_server(args: &Args) {
         backend: BackendKind::from_spec(&args.get_str("backend", "trust")),
         addr: args.get_str("addr", "127.0.0.1:7878"),
         net: parse_net(args),
+        tuning: parse_tuning(args),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {
@@ -120,17 +144,19 @@ fn kv_load(args: &Args) {
         write_pct: args.get("write-pct", 5),
         val_len: args.get("val-len", 16),
         seed: args.get("seed", 42),
+        retry_shed: args.flag("retry-shed"),
     });
     bail_on_client_errors(&stats.errors);
     println!(
-        "{} ops in {:.2}s = {} | mean {} p99.9 {} | hits {} misses {}",
+        "{} ops in {:.2}s = {} | mean {} p99.9 {} | hits {} misses {} shed {}",
         stats.ops,
         stats.elapsed.as_secs_f64(),
         fmt_mops(stats.throughput()),
         fmt_ns(stats.hist.mean()),
         fmt_ns(stats.hist.quantile(0.999) as f64),
         stats.hits,
-        stats.misses
+        stats.misses,
+        stats.shed
     );
 }
 
@@ -150,6 +176,7 @@ fn mcd_server(args: &Args) {
         budget_bytes: args.get::<u64>("budget-mb", 0) << 20,
         addr: args.get_str("addr", "127.0.0.1:11211"),
         net: parse_net(args),
+        tuning: parse_tuning(args),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {
@@ -178,15 +205,17 @@ fn mcd_load(args: &Args) {
         ttl_pct: args.get("ttl-pct", 0),
         val_len: args.get("val-len", 16),
         seed: args.get("seed", 42),
+        retry_shed: args.flag("retry-shed"),
     });
     bail_on_client_errors(&stats.errors);
     println!(
-        "{} ops in {:.2}s = {} | hits {} misses {}",
+        "{} ops in {:.2}s = {} | hits {} misses {} shed {}",
         stats.ops,
         stats.elapsed.as_secs_f64(),
         fmt_mops(stats.throughput()),
         stats.hits,
-        stats.misses
+        stats.misses,
+        stats.shed
     );
 }
 
@@ -198,6 +227,7 @@ fn resp_server(args: &Args) {
         budget_bytes: args.get::<u64>("budget-mb", 0) << 20,
         addr: args.get_str("addr", "127.0.0.1:6379"),
         net: parse_net(args),
+        tuning: parse_tuning(args),
     });
     let prefill: u64 = args.get("prefill", 0);
     if prefill > 0 {
@@ -229,15 +259,17 @@ fn resp_load(args: &Args) {
         ttl_pct: args.get("ttl-pct", 0),
         val_len: args.get("val-len", 16),
         seed: args.get("seed", 42),
+        retry_shed: args.flag("retry-shed"),
     });
     bail_on_client_errors(&stats.errors);
     println!(
-        "{} ops in {:.2}s = {} | hits {} misses {}",
+        "{} ops in {:.2}s = {} | hits {} misses {} shed {}",
         stats.ops,
         stats.elapsed.as_secs_f64(),
         fmt_mops(stats.throughput()),
         stats.hits,
-        stats.misses
+        stats.misses,
+        stats.shed
     );
 }
 

@@ -10,7 +10,7 @@
 //! dropping a connection mid-run fails the run descriptively) instead of
 //! panicking the client thread.
 
-use crate::loadgen::{run_pipelined_loader, LoadDriver, Reply};
+use crate::loadgen::{run_pipelined_loader_opts, LoadDriver, Reply};
 use crate::util::{KeyDist, Rng};
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -42,6 +42,9 @@ pub struct MemtierConfig {
     pub ttl_pct: u32,
     pub val_len: usize,
     pub seed: u64,
+    /// Re-issue requests the server shed with `SERVER_ERROR busy`
+    /// (bounded; off = count them as valueless completions).
+    pub retry_shed: bool,
 }
 
 /// Aggregated results. `errors` holds one descriptive entry per client
@@ -51,6 +54,8 @@ pub struct MemtierStats {
     pub elapsed: std::time::Duration,
     pub hits: u64,
     pub misses: u64,
+    /// Requests the server answered with `SERVER_ERROR busy`.
+    pub shed: u64,
     pub errors: Vec<String>,
 }
 
@@ -76,13 +81,15 @@ pub fn run_memtier(cfg: &MemtierConfig) -> MemtierStats {
     let mut ops = 0;
     let mut hits = 0;
     let mut misses = 0;
+    let mut shed = 0;
     let mut errors = Vec::new();
     for (t, h) in handles.into_iter().enumerate() {
         match h.join() {
-            Ok((o, hi, mi, err)) => {
+            Ok((o, hi, mi, sh, err)) => {
                 ops += o;
                 hits += hi;
                 misses += mi;
+                shed += sh;
                 if let Some(e) = err {
                     errors.push(format!("client thread {t}: {e}"));
                 }
@@ -90,8 +97,12 @@ pub fn run_memtier(cfg: &MemtierConfig) -> MemtierStats {
             Err(_) => errors.push(format!("client thread {t} panicked")),
         }
     }
-    MemtierStats { ops, elapsed: start.elapsed(), hits, misses, errors }
+    MemtierStats { ops, elapsed: start.elapsed(), hits, misses, shed, errors }
 }
+
+/// The overload-shed line [`crate::memcache::server::McdProtocol`]
+/// renders (without its CRLF).
+const SHED_LINE: &[u8] = b"SERVER_ERROR busy";
 
 /// What we expect back for each sent command (text protocol is in-order).
 enum Expect {
@@ -146,6 +157,10 @@ impl LoadDriver for McdDriver {
             Expect::Stored => {
                 let Some(end) = find_crlf(buf) else { return Ok(None) };
                 let line = &buf[..end];
+                if line == SHED_LINE {
+                    self.expect.pop_front();
+                    return Ok(Some(Reply::shed(end + 2)));
+                }
                 if line != b"STORED" {
                     return Err(format!(
                         "expected STORED, got {:?}",
@@ -153,14 +168,21 @@ impl LoadDriver for McdDriver {
                     ));
                 }
                 self.expect.pop_front();
-                Ok(Some(Reply { used: end + 2, hit: true }))
+                Ok(Some(Reply::ok(end + 2, true)))
             }
             Expect::Value => {
+                // A shed GET answers the busy line instead of VALUE/END.
+                if let Some(end) = find_crlf(buf) {
+                    if &buf[..end] == SHED_LINE {
+                        self.expect.pop_front();
+                        return Ok(Some(Reply::shed(end + 2)));
+                    }
+                }
                 // Either "END\r\n" (miss) or VALUE header + data + END.
                 match try_parse_get(buf)? {
                     Some((used, hit)) => {
                         self.expect.pop_front();
-                        Ok(Some(Reply { used, hit }))
+                        Ok(Some(Reply::ok(used, hit)))
                     }
                     None => Ok(None),
                 }
@@ -169,7 +191,7 @@ impl LoadDriver for McdDriver {
     }
 }
 
-fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64, Option<String>) {
+fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64, u64, Option<String>) {
     let mut driver = McdDriver {
         rng: Rng::new(cfg.seed ^ (tid.wrapping_mul(0xA24B_AED4))),
         dist: KeyDist::from_spec(&cfg.dist, cfg.keys),
@@ -178,8 +200,14 @@ fn run_connection(cfg: &MemtierConfig, tid: u64) -> (u64, u64, u64, Option<Strin
         val: vec![b'm'; cfg.val_len],
         expect: VecDeque::with_capacity(cfg.pipeline),
     };
-    let r = run_pipelined_loader(cfg.addr, cfg.pipeline, cfg.ops_per_thread, &mut driver);
-    (r.done, r.hits, r.misses, r.error)
+    let r = run_pipelined_loader_opts(
+        cfg.addr,
+        cfg.pipeline,
+        cfg.ops_per_thread,
+        &mut driver,
+        cfg.retry_shed,
+    );
+    (r.done, r.hits, r.misses, r.shed, r.error)
 }
 
 fn find_crlf(buf: &[u8]) -> Option<usize> {
@@ -249,6 +277,7 @@ mod tests {
             ttl_pct,
             val_len: 16,
             seed: 99,
+            retry_shed: false,
         });
         server.stop();
         stats
@@ -306,6 +335,7 @@ mod tests {
             ttl_pct: 0,
             val_len: 8,
             seed: 5,
+            retry_shed: false,
         });
         assert_eq!(stats.ops, 0);
         assert_eq!(stats.errors.len(), 1);

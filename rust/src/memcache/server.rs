@@ -34,7 +34,7 @@ use crate::kvstore::backend::{AckCb, AsyncKv, BackendKind, GetItemCb};
 use crate::kvstore::store::{StoreConfig, StoreStats};
 use crate::runtime::Runtime;
 use crate::server::engine::{
-    Completion, ConnMetrics, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore,
+    Completion, ConnMetrics, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore, ServerTuning,
 };
 use crate::server::netfiber::{self, NetPolicy};
 use std::sync::atomic::AtomicU64;
@@ -175,6 +175,9 @@ pub struct McdServerConfig {
     pub addr: String,
     /// How connection fibers wait for socket progress.
     pub net: NetPolicy,
+    /// Overload-control and degradation knobs (shed watermarks, request
+    /// deadline, stalled-connection reaping, stop-drain grace).
+    pub tuning: ServerTuning,
 }
 
 impl Default for McdServerConfig {
@@ -186,6 +189,7 @@ impl Default for McdServerConfig {
             budget_bytes: 0,
             addr: "127.0.0.1:0".into(),
             net: NetPolicy::default(),
+            tuning: ServerTuning::default(),
         }
     }
 }
@@ -195,7 +199,8 @@ impl McdServerConfig {
     /// (mirrors [`crate::kvstore::KvServerConfig::validate`]).
     pub fn validate(&self) -> Result<(), String> {
         netfiber::validate_topology(self.workers, self.dedicated)?;
-        self.backend.validate_budget(self.budget_bytes)
+        self.backend.validate_budget(self.budget_bytes)?;
+        self.tuning.validate()
     }
 }
 
@@ -231,6 +236,14 @@ impl Protocol for McdProtocol {
 
     fn render_error(&mut self, err: &McdParseError, out: &mut Vec<u8>) {
         out.extend_from_slice(err.wire_line());
+    }
+
+    /// Shed replies are a `SERVER_ERROR` line — memcached's "server-side
+    /// problem, command not executed" convention. The connection stays
+    /// open and in-order, so pipelined clients keep their pairing.
+    fn render_overload(&mut self, _req: &Command, out: &mut Vec<u8>) -> bool {
+        out.extend_from_slice(b"SERVER_ERROR busy\r\n");
+        true
     }
 
     fn dispatch(&mut self, cmd: Command, done: Completion) {
@@ -307,6 +320,7 @@ impl McdServer {
                 dedicated: cfg.dedicated,
                 addr: cfg.addr.clone(),
                 net: cfg.net,
+                tuning: cfg.tuning,
             },
             "mcd-accept",
             |rt, trustees| {

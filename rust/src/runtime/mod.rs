@@ -110,6 +110,10 @@ pub struct Shared {
     /// [`Shared::inject`] and at shutdown so a worker blocked in its
     /// reactor's `epoll_wait` wakes immediately.
     wake_fds: Vec<sys::c_int>,
+    /// Consecutive fully-idle ticks before a worker blocks in `epoll_wait`
+    /// (configurable via [`Builder::idle_ticks`]; default
+    /// [`IDLE_EPOLL_TICKS`]).
+    idle_ticks: u32,
 }
 
 impl Shared {
@@ -829,7 +833,7 @@ fn worker_loop() {
                 std::thread::yield_now();
             }
         } else if !shutting_down
-            && idle_ticks >= IDLE_EPOLL_TICKS
+            && idle_ticks >= shared.idle_ticks
             && with_worker(|w| {
                 w.reactor.enabled() || w.uring.as_deref().is_some_and(|u| u.wants_block())
             })
@@ -880,6 +884,10 @@ pub struct Config {
     /// Client-side batching discipline (default adaptive; eager reproduces
     /// the pre-batching behaviour for comparison benchmarks).
     pub flush_policy: FlushPolicy,
+    /// Consecutive fully-idle ticks before a worker blocks in `epoll_wait`
+    /// (lower = sleep sooner under light load; higher = spin longer for
+    /// latency). Clamped to at least 1.
+    pub idle_ticks: u32,
 }
 
 impl Default for Config {
@@ -890,6 +898,7 @@ impl Default for Config {
             stack_size: fiber::DEFAULT_STACK_SIZE,
             pin: false,
             flush_policy: FlushPolicy::Adaptive,
+            idle_ticks: IDLE_EPOLL_TICKS,
         }
     }
 }
@@ -923,6 +932,13 @@ impl Builder {
 
     pub fn flush_policy(mut self, policy: FlushPolicy) -> Self {
         self.cfg.flush_policy = policy;
+        self
+    }
+
+    /// Idle ticks before a worker blocks in `epoll_wait` (see
+    /// [`Config::idle_ticks`]).
+    pub fn idle_ticks(mut self, ticks: u32) -> Self {
+        self.cfg.idle_ticks = ticks;
         self
     }
 
@@ -989,6 +1005,7 @@ impl Runtime {
                 // handled by the fd >= 0 guards at use sites.
                 .map(|_| unsafe { sys::eventfd(0, sys::EFD_NONBLOCK | sys::EFD_CLOEXEC) })
                 .collect(),
+            idle_ticks: cfg.idle_ticks.max(1),
         });
         let pin_plan = affinity::plan_pinning(n, cfg.dedicated);
         let mut handles = Vec::with_capacity(n);

@@ -113,6 +113,13 @@ impl Reactor {
         if timeout_ms == 0 && self.waiters.is_empty() {
             return 0;
         }
+        // Fault injection (`faults` feature only; inline no-op otherwise):
+        // a simulated EINTR — the wait returns no events, exactly like the
+        // real `n <= 0` path below, and the next tick retries. Parked
+        // fibers stay parked; their fds stay armed.
+        if crate::util::faultsim::epoll_fault() {
+            return 0;
+        }
         let mut events = [sys::epoll_event { events: 0, data: 0 }; EVENT_BATCH];
         // SAFETY: events is a live buffer of EVENT_BATCH entries and the
         // kernel writes at most that many.

@@ -481,6 +481,14 @@ impl UringReactor {
         // Release tail store makes them visible to the kernel's Acquire.
         // SAFETY: sq_tail points into the live ring mapping.
         unsafe { (*self.sq_tail).store(self.sq_tail_local, Ordering::Release) };
+        // Fault injection (`faults` feature only; inline no-op otherwise):
+        // a failed `io_uring_enter` — the syscall is skipped, so
+        // `sq_tail_submitted` does not advance and the staged SQEs ride
+        // the next flush. Safe because this function only credits
+        // submissions on rc > 0.
+        if crate::util::faultsim::uring_enter_fault() {
+            return 0;
+        }
         // GETEVENTS only when the kernel parked completions in its overflow
         // list (NODROP) — it makes the kernel flush them into the CQ.
         let flags = if overflow { sys::IORING_ENTER_GETEVENTS } else { 0 };
@@ -594,6 +602,15 @@ impl UringReactor {
         // SAFETY: sq_tail points into the live ring mapping (publish before
         // the blocking enter so staged SQEs are part of the same syscall).
         unsafe { (*self.sq_tail).store(self.sq_tail_local, Ordering::Release) };
+        // Fault injection (`faults` feature only; inline no-op otherwise):
+        // a failed blocking enter — skip the syscall (staged SQEs stay
+        // staged for the next flush) but still harvest whatever the kernel
+        // already completed, like a real EINTR'd enter would.
+        if crate::util::faultsim::uring_enter_fault() {
+            let before = out.len();
+            self.poll_into(out);
+            return out.len() - before;
+        }
         let ts = sys::kernel_timespec {
             tv_sec: timeout_ms as i64 / 1000,
             tv_nsec: (timeout_ms as i64 % 1000) * 1_000_000,

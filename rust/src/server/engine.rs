@@ -92,6 +92,18 @@ pub trait Protocol: 'static {
     /// without answering.
     fn render_error(&mut self, err: &Self::Error, out: &mut Vec<u8>);
 
+    /// Render the on-wire answer for a request the engine **sheds** under
+    /// overload (admission control past the [`ServerTuning::shed_high`]
+    /// watermark, or deadline pressure): RESP `-BUSY`, memcached
+    /// `SERVER_ERROR busy`, KV `ST_OVERLOADED`. Returning `false` (the
+    /// default) means the protocol has no overload representation; the
+    /// engine then dispatches the request normally instead of shedding.
+    /// The shed answer rides the ordinary response spool, so in-order
+    /// protocols keep sequence integrity across shed responses.
+    fn render_overload(&mut self, _req: &Self::Request, _out: &mut Vec<u8>) -> bool {
+        false
+    }
+
     /// How many units of the connection's [`MAX_CONN_INFLIGHT`] budget
     /// this request consumes while outstanding. Default 1; protocols
     /// whose single request fans out into many backend operations (RESP
@@ -175,6 +187,55 @@ pub const MAX_CONN_INFLIGHT: u64 = 128;
 /// dispatching) until the peer drains its socket.
 pub const MAX_OUTBUF: usize = 4 << 20;
 
+/// Optional per-request deadline bookkeeping (only allocated when a
+/// server configures [`ServerTuning::deadline_ms`]; the default path
+/// carries a `None` and pays one branch per begin/complete).
+///
+/// Two structures because the two checkpoints need different access:
+/// completion-delivery looks an arbitrary `seq` up (completions arrive
+/// out of order), while dispatch asks "is the *oldest* outstanding
+/// request past its deadline?" — a front-of-queue peek with lazy
+/// dropping of entries that already completed.
+struct DeadlineTracker {
+    deadline: std::time::Duration,
+    /// Outstanding seq → issue instant (completion-delivery checkpoint).
+    issued: HashMap<u64, std::time::Instant>,
+    /// Issue order (dispatch checkpoint); entries whose seq has left
+    /// `issued` are dropped lazily on the next peek.
+    order: std::collections::VecDeque<(u64, std::time::Instant)>,
+    /// Completions delivered after their deadline (still delivered — the
+    /// in-order spool needs every slot — but counted).
+    misses: u64,
+}
+
+impl DeadlineTracker {
+    fn on_begin(&mut self, seq: u64) {
+        let now = std::time::Instant::now();
+        self.issued.insert(seq, now);
+        self.order.push_back((seq, now));
+    }
+
+    fn on_complete(&mut self, seq: u64) {
+        if let Some(t0) = self.issued.remove(&seq) {
+            if t0.elapsed() > self.deadline {
+                self.misses += 1;
+            }
+        }
+    }
+
+    /// Is the oldest still-outstanding request past its deadline?
+    fn pressure(&mut self) -> bool {
+        while let Some(&(seq, t0)) = self.order.front() {
+            if !self.issued.contains_key(&seq) {
+                self.order.pop_front();
+                continue;
+            }
+            return t0.elapsed() > self.deadline;
+        }
+        false
+    }
+}
+
 /// Per-connection response spool: sequence allocation, completion
 /// buffering under either [`ResponseOrder`], the wire-out buffer with its
 /// partial-write cursor, and the response-buffer pool.
@@ -204,6 +265,9 @@ pub struct Spool {
     /// Response bytes rendered through this spool (bytes-copied metric:
     /// one response-buffer → wire-buffer copy per completion).
     pub resp_bytes: u64,
+    /// Per-request deadline bookkeeping; `None` (the default) when the
+    /// server has no deadline configured.
+    deadline: Option<DeadlineTracker>,
 }
 
 impl Spool {
@@ -222,7 +286,29 @@ impl Spool {
             pool_hits: 0,
             pool_misses: 0,
             resp_bytes: 0,
+            deadline: None,
         }
+    }
+
+    /// Arm per-request deadline tracking ([`ServerTuning::deadline_ms`]).
+    pub fn set_deadline(&mut self, deadline: std::time::Duration) {
+        self.deadline = Some(DeadlineTracker {
+            deadline,
+            issued: HashMap::new(),
+            order: std::collections::VecDeque::new(),
+            misses: 0,
+        });
+    }
+
+    /// Completions delivered after their deadline so far.
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline.as_ref().map_or(0, |t| t.misses)
+    }
+
+    /// Dispatch checkpoint: is the oldest outstanding request already
+    /// past its deadline? (Always false with no deadline configured.)
+    pub fn deadline_pressure(&mut self) -> bool {
+        self.deadline.as_mut().is_some_and(|t| t.pressure())
     }
 
     /// Allocate the next response slot, charging `cost` units against the
@@ -233,6 +319,9 @@ impl Spool {
         let s = self.next_seq;
         self.next_seq += 1;
         self.inflight_cost += cost;
+        if let Some(t) = &mut self.deadline {
+            t.on_begin(s);
+        }
         s
     }
 
@@ -257,6 +346,9 @@ impl Spool {
         self.completed += 1;
         self.inflight_cost -= cost;
         self.resp_bytes += buf.len() as u64;
+        if let Some(t) = &mut self.deadline {
+            t.on_complete(seq);
+        }
         match self.order {
             ResponseOrder::OutOfOrder => self.emit(buf),
             ResponseOrder::InOrder => {
@@ -286,6 +378,12 @@ impl Spool {
             b.clear();
             self.pool.push(b);
         }
+    }
+
+    /// Return an unused checked-out buffer to the pool (a shed attempt
+    /// whose protocol declined to render an overload answer).
+    pub fn give_back(&mut self, b: Vec<u8>) {
+        self.recycle(b);
     }
 
     /// Requests dispatched but not yet completed.
@@ -324,6 +422,148 @@ impl Spool {
 }
 
 // ---------------------------------------------------------------------
+// Tuning + engine-wide shared state
+// ---------------------------------------------------------------------
+
+/// Overload-control and graceful-degradation knobs shared by every front
+/// end. Defaults reproduce the pre-overload-control behaviour except for
+/// the shed watermarks, which sit far above anything a well-behaved
+/// client mix reaches (the per-connection [`MAX_CONN_INFLIGHT`] gate
+/// engages long before the server-wide watermark does).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerTuning {
+    /// Engage admission control once the server-wide sum of outstanding
+    /// [`Protocol::cost`] units across the trustees' queues reaches this
+    /// watermark: new requests get the protocol's overload answer
+    /// ([`Protocol::render_overload`]) instead of queueing. `0` disables
+    /// shedding entirely.
+    pub shed_high: u64,
+    /// Hysteresis: once shedding, keep shedding until the outstanding
+    /// load drains below this (must be <= `shed_high`; the gap is what
+    /// keeps a watermark-riding burst from flapping admit/shed per
+    /// request).
+    pub shed_low: u64,
+    /// Per-request deadline in milliseconds, checked at dispatch (oldest
+    /// outstanding request past its deadline ⇒ shed new arrivals) and at
+    /// completion delivery (late completions are counted, still
+    /// delivered). `0` disables deadlines — and keeps the steady-state
+    /// path allocation-free.
+    pub deadline_ms: u64,
+    /// Slow-consumer defense: a connection with unsent response bytes
+    /// whose peer makes no egress progress for this long is reaped. `0`
+    /// disables reaping (and lets egress-blocked fibers park instead of
+    /// polling the stall clock).
+    pub conn_stall_ms: u64,
+    /// How long a stopping server keeps draining acked-but-unsent
+    /// responses before giving up on a peer that never reads
+    /// (historically a hardcoded 250 ms).
+    pub stop_drain_grace_ms: u64,
+    /// Scheduler ticks with zero progress before an idle worker blocks in
+    /// `epoll_wait`/`io_uring_enter` instead of spinning (historically
+    /// the hardcoded `IDLE_EPOLL_TICKS = 256`).
+    pub idle_ticks: u32,
+}
+
+impl Default for ServerTuning {
+    fn default() -> Self {
+        ServerTuning {
+            shed_high: 4096,
+            shed_low: 3072,
+            deadline_ms: 0,
+            conn_stall_ms: 0,
+            stop_drain_grace_ms: 250,
+            idle_ticks: 256,
+        }
+    }
+}
+
+impl ServerTuning {
+    /// Validate knob coherence (reported before any worker spawns, like
+    /// `validate_topology`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shed_high > 0 && self.shed_low > self.shed_high {
+            return Err(format!(
+                "shed_low ({}) must be <= shed_high ({}): the hysteresis band \
+                 disengages shedding below shed_low",
+                self.shed_low, self.shed_high
+            ));
+        }
+        if self.idle_ticks == 0 {
+            return Err("idle_ticks must be >= 1 (0 would block workers on every idle tick)".into());
+        }
+        Ok(())
+    }
+}
+
+/// State shared by every connection of one server: the ops counter, the
+/// server-wide outstanding-cost gauge the shed watermarks act on, and the
+/// hysteresis latch. One `Arc` per server, cloned into each
+/// [`Completion`] (keeping `Completion` at 32 bytes — small enough that
+/// the backends' 40-byte inline callbacks never spill to the heap).
+pub(crate) struct EngineShared {
+    /// Completed requests (the public `ops_served` counter).
+    ops: Arc<AtomicU64>,
+    /// Outstanding dispatched-but-uncompleted [`Protocol::cost`] units
+    /// across all connections — the aggregate depth of the trustees'
+    /// delegation queues as seen from the socket side.
+    inflight: AtomicU64,
+    /// Hysteresis latch: engaged at `shed_high`, released below
+    /// `shed_low`.
+    shedding: AtomicBool,
+    tuning: ServerTuning,
+}
+
+impl EngineShared {
+    fn new(ops: Arc<AtomicU64>, tuning: ServerTuning) -> Arc<EngineShared> {
+        Arc::new(EngineShared {
+            ops,
+            inflight: AtomicU64::new(0),
+            shedding: AtomicBool::new(false),
+            tuning,
+        })
+    }
+
+    /// Admission decision for a request of weight `cost`, advancing the
+    /// hysteresis latch. Races between connection fibers on different
+    /// workers are benign: the watermark is a load-shedding heuristic,
+    /// not an exact bound.
+    fn should_shed(&self, cost: u64) -> bool {
+        let high = self.tuning.shed_high;
+        if high == 0 {
+            return false;
+        }
+        let q = self.inflight.load(Ordering::Relaxed);
+        if self.shedding.load(Ordering::Relaxed) {
+            if q < self.tuning.shed_low {
+                self.shedding.store(false, Ordering::Relaxed);
+                false
+            } else {
+                true
+            }
+        } else if q.saturating_add(cost) > high {
+            self.shedding.store(true, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn admit(&self, cost: u64) {
+        self.inflight.fetch_add(cost, Ordering::Relaxed);
+    }
+
+    fn release(&self, cost: u64) {
+        self.inflight.fetch_sub(cost, Ordering::Relaxed);
+    }
+
+    /// Outstanding cost units right now (tests/diagnostics).
+    #[cfg(test)]
+    fn inflight_now(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------
 // Completion
 // ---------------------------------------------------------------------
 
@@ -336,7 +576,7 @@ pub struct Completion {
     spool: Rc<RefCell<Spool>>,
     seq: u64,
     cost: u64,
-    ops: Arc<AtomicU64>,
+    shared: Arc<EngineShared>,
 }
 
 impl Completion {
@@ -346,10 +586,12 @@ impl Completion {
         self.spool.borrow_mut().checkout()
     }
 
-    /// Deliver the rendered response and count the op served.
+    /// Deliver the rendered response, release the request's overload
+    /// charge, and count the op served.
     pub fn complete(self, buf: Vec<u8>) {
         self.spool.borrow_mut().complete(self.seq, self.cost, buf);
-        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.shared.release(self.cost);
+        self.shared.ops.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -374,6 +616,18 @@ pub struct WorkerConnStats {
     pub pool_misses: AtomicU64,
     /// Response bytes rendered into wire buffers (bytes-copied metric).
     pub resp_bytes: AtomicU64,
+    /// Requests answered with the protocol's overload error instead of
+    /// being dispatched (admission control past the shed watermark or
+    /// under deadline pressure).
+    pub shed: AtomicU64,
+    /// Completions delivered after their request deadline (late but
+    /// still delivered).
+    pub deadline_misses: AtomicU64,
+    /// Accept attempts that hit fd exhaustion (or an injected EMFILE)
+    /// and took the exponential-backoff path.
+    pub accept_throttled: AtomicU64,
+    /// Connections reaped by the `conn_stall_ms` slow-consumer defense.
+    pub stalled_reaped: AtomicU64,
 }
 
 pub struct ConnMetrics {
@@ -390,6 +644,10 @@ pub struct ConnTotals {
     pub pool_hits: u64,
     pub pool_misses: u64,
     pub resp_bytes: u64,
+    pub shed: u64,
+    pub deadline_misses: u64,
+    pub accept_throttled: u64,
+    pub stalled_reaped: u64,
 }
 
 impl ConnMetrics {
@@ -419,6 +677,10 @@ impl ConnMetrics {
             t.pool_hits += s.pool_hits.load(Ordering::Relaxed);
             t.pool_misses += s.pool_misses.load(Ordering::Relaxed);
             t.resp_bytes += s.resp_bytes.load(Ordering::Relaxed);
+            t.shed += s.shed.load(Ordering::Relaxed);
+            t.deadline_misses += s.deadline_misses.load(Ordering::Relaxed);
+            t.accept_throttled += s.accept_throttled.load(Ordering::Relaxed);
+            t.stalled_reaped += s.stalled_reaped.load(Ordering::Relaxed);
         }
         t
     }
@@ -428,16 +690,12 @@ impl ConnMetrics {
 // The connection fiber
 // ---------------------------------------------------------------------
 
-/// How long a stopping server keeps draining acked-but-unsent responses
-/// before giving up on a peer that never reads.
-const STOP_DRAIN_GRACE: std::time::Duration = std::time::Duration::from_millis(250);
-
 /// The shared connection loop: ingest → parse/dispatch → spool → egress →
 /// exit checks → wait. One fiber per accepted connection.
 fn connection_fiber<P: Protocol>(
     mut stream: TcpStream,
     mut proto: P,
-    ops: Arc<AtomicU64>,
+    shared: Arc<EngineShared>,
     stop: Arc<AtomicBool>,
     policy: NetPolicy,
     metrics: Arc<ConnMetrics>,
@@ -449,7 +707,20 @@ fn connection_fiber<P: Protocol>(
     let stats = metrics.slot();
     stats.accepted.fetch_add(1, Ordering::Relaxed);
     let fd = stream.as_raw_fd();
+    let tuning = shared.tuning;
     let spool = Rc::new(RefCell::new(Spool::new(P::ORDER)));
+    if tuning.deadline_ms > 0 {
+        spool
+            .borrow_mut()
+            .set_deadline(std::time::Duration::from_millis(tuning.deadline_ms));
+    }
+    let grace = std::time::Duration::from_millis(tuning.stop_drain_grace_ms);
+    // Slow-consumer defense: when enabled, a connection sitting on unsent
+    // response bytes whose peer drains nothing for `conn_stall_ms` is
+    // reaped instead of pinning its buffers forever.
+    let stall = (tuning.conn_stall_ms > 0)
+        .then(|| std::time::Duration::from_millis(tuning.conn_stall_ms));
+    let mut last_egress_progress = std::time::Instant::now();
     let mut inbuf = Inbuf::with_capacity(32 * 1024);
     let mut peer_gone = false;
     // Malformed stream: answer (render_error), stop reading/parsing,
@@ -462,6 +733,7 @@ fn connection_fiber<P: Protocol>(
 
     loop {
         let mut progress = false;
+        let mut egress_progress = false;
         // 1. Ingest ("reading requests is done in batches"): drain the
         //    socket up to a fairness bound, and stop reading while the
         //    unparsed backlog is past MAX_INBUF (TCP backpressure instead
@@ -484,10 +756,34 @@ fn connection_fiber<P: Protocol>(
                     progress = true;
                     metrics.slot().requests.fetch_add(1, Ordering::Relaxed);
                     let cost = proto.cost(&req).max(1);
-                    let seq = spool.borrow_mut().begin(cost);
-                    let done =
-                        Completion { spool: spool.clone(), seq, cost, ops: ops.clone() };
-                    proto.dispatch(req, done);
+                    // Overload admission: past the shed watermark (or with
+                    // the oldest outstanding request already over its
+                    // deadline), answer with the protocol's overload error
+                    // instead of queueing more work onto the trustees. The
+                    // shed answer takes an ordinary spool slot, so in-order
+                    // protocols keep request/response sequence integrity.
+                    let overloaded =
+                        shared.should_shed(cost) || spool.borrow_mut().deadline_pressure();
+                    let mut shed = false;
+                    if overloaded {
+                        let mut b = spool.borrow_mut().checkout();
+                        if proto.render_overload(&req, &mut b) {
+                            let seq = spool.borrow_mut().begin(1);
+                            spool.borrow_mut().complete(seq, 1, b);
+                            metrics.slot().shed.fetch_add(1, Ordering::Relaxed);
+                            shed = true;
+                        } else {
+                            // Protocol cannot shed: dispatch normally.
+                            spool.borrow_mut().give_back(b);
+                        }
+                    }
+                    if !shed {
+                        shared.admit(cost);
+                        let seq = spool.borrow_mut().begin(cost);
+                        let done =
+                            Completion { spool: spool.clone(), seq, cost, shared: shared.clone() };
+                        proto.dispatch(req, done);
+                    }
                 }
                 Ok(None) => break,
                 Err(e) => {
@@ -518,6 +814,7 @@ fn connection_fiber<P: Protocol>(
             }
             if sp.unsent() < before {
                 progress = true;
+                egress_progress = true;
             }
         }
         // 4. Exit conditions.
@@ -528,12 +825,22 @@ fn connection_fiber<P: Protocol>(
         if (peer_gone || poisoned) && inflight == 0 && unsent == 0 {
             break;
         }
+        // Slow-consumer defense: reap a connection whose peer accepts no
+        // response bytes for conn_stall_ms while we have bytes to send.
+        if let Some(stall_after) = stall {
+            if unsent == 0 || egress_progress {
+                last_egress_progress = std::time::Instant::now();
+            } else if last_egress_progress.elapsed() > stall_after {
+                metrics.slot().stalled_reaped.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
         if stop.load(Ordering::Acquire) && inflight == 0 {
             if unsent == 0 {
                 break;
             }
-            let deadline = *stop_deadline
-                .get_or_insert_with(|| std::time::Instant::now() + STOP_DRAIN_GRACE);
+            let deadline =
+                *stop_deadline.get_or_insert_with(|| std::time::Instant::now() + grace);
             if std::time::Instant::now() >= deadline {
                 break;
             }
@@ -541,8 +848,16 @@ fn connection_fiber<P: Protocol>(
         // 5. Wait for more work. With responses in flight the wake comes
         //    from the scheduler (backend completions), so yield; otherwise
         //    the only possible wake is the socket — park on it (Epoll)
-        //    instead of re-polling every tick (BusyPoll).
-        if progress || inflight > 0 || stop.load(Ordering::Acquire) {
+        //    instead of re-polling every tick (BusyPoll). With the stall
+        //    clock armed and bytes unsent, an fd park could outlive the
+        //    stall bound (the only fd signal would be peer progress —
+        //    exactly what a stalled peer never produces), so stay in the
+        //    bounded yield loop instead.
+        if progress
+            || inflight > 0
+            || stop.load(Ordering::Acquire)
+            || (stall.is_some() && unsent > 0)
+        {
             fiber::yield_now();
         } else {
             let want_read = !peer_gone && !poisoned && inbuf.backlog() < netfiber::MAX_INBUF;
@@ -556,6 +871,7 @@ fn connection_fiber<P: Protocol>(
     stats.pool_hits.fetch_add(sp.pool_hits, Ordering::Relaxed);
     stats.pool_misses.fetch_add(sp.pool_misses, Ordering::Relaxed);
     stats.resp_bytes.fetch_add(sp.resp_bytes, Ordering::Relaxed);
+    stats.deadline_misses.fetch_add(sp.deadline_misses(), Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------
@@ -571,6 +887,8 @@ pub struct CoreConfig {
     pub addr: String,
     /// How connection fibers wait for socket progress.
     pub net: NetPolicy,
+    /// Overload-control and degradation knobs.
+    pub tuning: ServerTuning,
 }
 
 impl Default for CoreConfig {
@@ -580,6 +898,7 @@ impl Default for CoreConfig {
             dedicated: 0,
             addr: "127.0.0.1:0".into(),
             net: NetPolicy::default(),
+            tuning: ServerTuning::default(),
         }
     }
 }
@@ -614,6 +933,7 @@ impl ServerCore {
         B: FnOnce(&Runtime, &[usize]) -> F,
     {
         netfiber::validate_topology(cfg.workers, cfg.dedicated)?;
+        cfg.tuning.validate()?;
         let listener =
             TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
         let local_addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
@@ -624,6 +944,7 @@ impl ServerCore {
         let rt = Runtime::builder()
             .workers(cfg.workers)
             .dedicated_trustees(cfg.dedicated)
+            .idle_ticks(cfg.tuning.idle_ticks)
             .build();
         // Shard trustees: the dedicated workers if any, else all workers.
         let trustees: Vec<usize> = if cfg.dedicated > 0 {
@@ -636,6 +957,7 @@ impl ServerCore {
         let stop = Arc::new(AtomicBool::new(false));
         let ops_served = Arc::new(AtomicU64::new(0));
         let metrics = ConnMetrics::new(cfg.workers);
+        let engine = EngineShared::new(ops_served.clone(), cfg.tuning);
 
         // Socket workers: the non-dedicated ones (validate_topology
         // guarantees at least one).
@@ -647,7 +969,7 @@ impl ServerCore {
 
         // Round-robin dispatch of accepted streams onto socket workers.
         let dispatch = {
-            let ops = ops_served.clone();
+            let engine = engine.clone();
             let stop = stop.clone();
             let metrics = metrics.clone();
             netfiber::round_robin_dispatch(
@@ -655,11 +977,11 @@ impl ServerCore {
                 socket_workers.clone(),
                 move |stream| {
                     let proto = factory();
-                    let ops = ops.clone();
+                    let engine = engine.clone();
                     let stop = stop.clone();
                     let metrics = metrics.clone();
                     Box::new(move || {
-                        connection_fiber(stream, proto, ops, stop, policy, metrics)
+                        connection_fiber(stream, proto, engine, stop, policy, metrics)
                     })
                 },
             )
@@ -676,6 +998,7 @@ impl ServerCore {
             socket_workers[0],
             dispatch,
             accept_name,
+            metrics.clone(),
         )?;
 
         Ok(ServerCore {
@@ -903,5 +1226,65 @@ mod tests {
         sp.complete(a, 1, buf);
         assert_eq!(&sp.out[..], b"abc");
         assert_eq!(sp.inflight(), 0);
+    }
+
+    #[test]
+    fn shed_hysteresis_engages_at_high_and_releases_below_low() {
+        let tuning = ServerTuning { shed_high: 10, shed_low: 4, ..ServerTuning::default() };
+        let s = EngineShared::new(Arc::new(AtomicU64::new(0)), tuning);
+        assert!(!s.should_shed(10), "exactly at the watermark still admits");
+        s.admit(10);
+        assert_eq!(s.inflight_now(), 10);
+        assert!(s.should_shed(1), "past the watermark sheds");
+        s.release(5);
+        assert!(s.should_shed(1), "hysteresis holds until load drops below shed_low");
+        s.release(2); // inflight 3 < shed_low 4
+        assert!(!s.should_shed(1), "below shed_low the latch releases");
+        assert!(!s.should_shed(1), "and stays released while under the high watermark");
+    }
+
+    #[test]
+    fn shed_high_zero_disables_admission_control() {
+        let tuning = ServerTuning { shed_high: 0, ..ServerTuning::default() };
+        let s = EngineShared::new(Arc::new(AtomicU64::new(0)), tuning);
+        s.admit(u64::MAX / 2);
+        assert!(!s.should_shed(u64::MAX / 2));
+    }
+
+    #[test]
+    fn tuning_validation_rejects_inverted_band_and_zero_idle_ticks() {
+        assert!(ServerTuning::default().validate().is_ok());
+        let bad = ServerTuning { shed_high: 10, shed_low: 11, ..ServerTuning::default() };
+        assert!(bad.validate().is_err(), "shed_low above shed_high must be rejected");
+        let bad = ServerTuning { idle_ticks: 0, ..ServerTuning::default() };
+        assert!(bad.validate().is_err(), "idle_ticks 0 must be rejected");
+        // shed_high == 0 disables shedding; shed_low is then irrelevant.
+        let ok = ServerTuning { shed_high: 0, shed_low: 11, ..ServerTuning::default() };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn deadline_tracker_counts_late_completions_and_reports_pressure() {
+        // Fast path: generous deadline, nothing is late.
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        sp.set_deadline(std::time::Duration::from_secs(10));
+        let a = sp.begin(1);
+        assert!(!sp.deadline_pressure());
+        let b = sp.checkout();
+        sp.complete(a, 1, b);
+        assert_eq!(sp.deadline_misses(), 0);
+
+        // Slow path: the oldest outstanding request ages past its
+        // deadline (dispatch checkpoint), and its eventual completion is
+        // counted late but still delivered (completion checkpoint).
+        let mut sp = Spool::new(ResponseOrder::InOrder);
+        sp.set_deadline(std::time::Duration::from_millis(1));
+        let a = sp.begin(1);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sp.deadline_pressure(), "oldest outstanding request is past deadline");
+        let b = sp.checkout();
+        sp.complete(a, 1, b);
+        assert_eq!(sp.deadline_misses(), 1);
+        assert!(!sp.deadline_pressure(), "nothing outstanding anymore");
     }
 }

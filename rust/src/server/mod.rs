@@ -23,7 +23,7 @@ pub mod resp_load;
 
 pub use engine::{
     Completion, ConnMetrics, ConnTotals, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore,
-    Spool,
+    ServerTuning, Spool,
 };
 pub use netfiber::NetPolicy;
 pub use resp::{RespParseError, RespProtocol, RespRequest, RespServer, RespServerConfig};

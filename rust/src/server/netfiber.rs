@@ -22,8 +22,10 @@
 //!   [`NetPolicy::resolve`], which falls back to Epoll with a logged
 //!   reason instead of failing.
 
+use super::engine::ConnMetrics;
 use crate::fiber;
 use crate::runtime::{reactor, uring};
+use crate::util::faultsim;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
@@ -119,7 +121,17 @@ pub enum ReadOutcome {
 /// Read whatever is available into `buf` (append), one chunk.
 pub fn read_available(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
     let mut chunk = [0u8; 16 * 1024];
-    match stream.read(&mut chunk) {
+    let mut want = chunk.len();
+    // Fault injection (`faults` feature only; inline no-op otherwise):
+    // simulate EAGAIN / ECONNRESET / a short read before touching the
+    // socket. Callers already handle each outcome.
+    match faultsim::read_fault() {
+        Some(faultsim::ReadFault::Eagain) => return ReadOutcome::WouldBlock,
+        Some(faultsim::ReadFault::ConnReset) => return ReadOutcome::Closed,
+        Some(faultsim::ReadFault::Short(n)) => want = n.max(1).min(chunk.len()),
+        None => {}
+    }
+    match stream.read(&mut chunk[..want]) {
         Ok(0) => ReadOutcome::Closed,
         Ok(n) => {
             buf.extend_from_slice(&chunk[..n]);
@@ -140,8 +152,20 @@ pub fn read_available(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome 
 pub fn read_burst(stream: &mut TcpStream, buf: &mut Vec<u8>, max_bytes: usize) -> ReadOutcome {
     let mut total = 0usize;
     let mut chunk = [0u8; 16 * 1024];
+    let mut max_bytes = max_bytes;
+    // Fault injection (`faults` feature only; inline no-op otherwise):
+    // EAGAIN ends the burst empty, ECONNRESET kills it, a short read
+    // clamps the burst to a byte — the caller's loop must make progress
+    // on the leftovers either way.
+    match faultsim::read_fault() {
+        Some(faultsim::ReadFault::Eagain) => return ReadOutcome::WouldBlock,
+        Some(faultsim::ReadFault::ConnReset) => return ReadOutcome::Closed,
+        Some(faultsim::ReadFault::Short(n)) => max_bytes = n.max(1),
+        None => {}
+    }
     loop {
-        match stream.read(&mut chunk) {
+        let want = chunk.len().min(max_bytes - total);
+        match stream.read(&mut chunk[..want]) {
             Ok(0) => {
                 return if total > 0 { ReadOutcome::Data(total) } else { ReadOutcome::Closed };
             }
@@ -166,10 +190,28 @@ pub fn read_burst(stream: &mut TcpStream, buf: &mut Vec<u8>, max_bytes: usize) -
 /// `cursor`. Returns false if the connection died. When the whole buffer
 /// drains, both buffer and cursor reset.
 pub fn write_pending(stream: &mut TcpStream, buf: &mut Vec<u8>, cursor: &mut usize) -> bool {
-    while *cursor < buf.len() {
-        match stream.write(&buf[*cursor..]) {
+    // Fault injection (`faults` feature only; inline no-op otherwise):
+    // simulate EAGAIN (nothing leaves this pass), ECONNRESET (connection
+    // dies), or a short write (at most one byte leaves). Probed only when
+    // there is something to write so an idle egress path never counts as
+    // an attempt.
+    let mut cap = usize::MAX;
+    if *cursor < buf.len() {
+        match faultsim::write_fault() {
+            Some(faultsim::WriteFault::Eagain) => cap = 0,
+            Some(faultsim::WriteFault::ConnReset) => return false,
+            Some(faultsim::WriteFault::Short) => cap = 1,
+            None => {}
+        }
+    }
+    while *cursor < buf.len() && cap > 0 {
+        let end = buf.len().min(cursor.saturating_add(cap));
+        match stream.write(&buf[*cursor..end]) {
             Ok(0) => return false,
-            Ok(n) => *cursor += n,
+            Ok(n) => {
+                *cursor += n;
+                cap -= n.min(cap);
+            }
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted => {
                 break;
             }
@@ -225,6 +267,53 @@ pub fn round_robin_dispatch(
     }
 }
 
+/// Exponential accept backoff with jitter: 1 ms doubling to a 100 ms cap,
+/// the actual delay jittered within ±25% so a fleet of acceptors (or an
+/// acceptor racing a connection flood) does not retry in lockstep. Reset
+/// on any successful accept.
+pub(crate) struct AcceptBackoff {
+    delay_ms: u64,
+    jitter: u64,
+}
+
+impl AcceptBackoff {
+    const MAX_DELAY_MS: u64 = 100;
+
+    pub(crate) fn new() -> AcceptBackoff {
+        AcceptBackoff { delay_ms: 0, jitter: 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    pub(crate) fn reset(&mut self) {
+        self.delay_ms = 0;
+    }
+
+    /// The next (jittered) delay in the exponential schedule.
+    pub(crate) fn next_delay(&mut self) -> std::time::Duration {
+        self.delay_ms = if self.delay_ms == 0 {
+            1
+        } else {
+            (self.delay_ms * 2).min(Self::MAX_DELAY_MS)
+        };
+        // xorshift64: cheap jitter, no global RNG state.
+        self.jitter ^= self.jitter << 13;
+        self.jitter ^= self.jitter >> 7;
+        self.jitter ^= self.jitter << 17;
+        let base_us = self.delay_ms * 1000;
+        let jitter_us = self.jitter % (base_us / 2 + 1);
+        std::time::Duration::from_micros(base_us * 3 / 4 + jitter_us)
+    }
+}
+
+/// Wait out one backoff delay from fiber context: yield-loop until the
+/// deadline (a fiber must never block its worker thread), bailing early
+/// on `stop`. Bounded by [`AcceptBackoff::MAX_DELAY_MS`].
+fn backoff_yield(backoff: &mut AcceptBackoff, stop: &AtomicBool) {
+    let deadline = std::time::Instant::now() + backoff.next_delay();
+    while std::time::Instant::now() < deadline && !stop.load(Ordering::Acquire) {
+        fiber::yield_now();
+    }
+}
+
 /// Accept-loop *fiber* body (the [`NetPolicy::Epoll`] replacement for the
 /// dedicated 200 µs sleep-poll accept thread): accepts until the listener
 /// would block, hands each stream to `dispatch`, then parks on listener
@@ -232,27 +321,46 @@ pub fn round_robin_dispatch(
 /// sweep wakes the park, so setting `stop` before `Runtime::shutdown()`
 /// is enough to terminate it. Transient accept errors (ECONNABORTED, fd
 /// exhaustion under a connection flood, EINTR) must NOT kill the
-/// acceptor: the listener would be dead forever once the flood passed, so
-/// every error path yields and retries.
+/// acceptor: the listener would be dead forever once the flood passed.
+/// EMFILE-class errors take a bounded exponential backoff (counted in
+/// `accept_throttled`) instead of a hot retry loop — under fd exhaustion
+/// the pending backlog keeps the listener readable, so an immediate retry
+/// would spin a worker at 100% while starving the process of the very
+/// closes that would free descriptors.
 pub fn accept_fiber(
     listener: TcpListener,
     policy: NetPolicy,
     stop: Arc<AtomicBool>,
     mut dispatch: impl FnMut(TcpStream),
+    metrics: Arc<ConnMetrics>,
 ) {
     let fd = listener.as_raw_fd();
+    let mut backoff = AcceptBackoff::new();
     loop {
         if stop.load(Ordering::Acquire) {
             break;
         }
+        // Fault injection (`faults` feature only): simulated EMFILE —
+        // must take the same throttled backoff as the real thing.
+        if faultsim::accept_fault() {
+            metrics.slot().accept_throttled.fetch_add(1, Ordering::Relaxed);
+            backoff_yield(&mut backoff, &stop);
+            continue;
+        }
         match listener.accept() {
-            Ok((stream, _peer)) => dispatch(stream),
-            Err(e) if e.kind() == ErrorKind::WouldBlock => net_wait(policy, fd, true, false),
+            Ok((stream, _peer)) => {
+                backoff.reset();
+                dispatch(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                backoff.reset();
+                net_wait(policy, fd, true, false);
+            }
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            // EMFILE/ENFILE/ECONNABORTED/…: back off a fiber slice and
-            // retry. The pending backlog keeps the fd readable, so under
-            // Epoll a park would wake right back — yield instead.
-            Err(_) => fiber::yield_now(),
+            Err(_) => {
+                metrics.slot().accept_throttled.fetch_add(1, Ordering::Relaxed);
+                backoff_yield(&mut backoff, &stop);
+            }
         }
     }
 }
@@ -270,17 +378,28 @@ pub fn uring_accept_fiber(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     mut dispatch: impl FnMut(TcpStream),
+    metrics: Arc<ConnMetrics>,
 ) {
     let Some(token) = uring::accept_register(listener.as_raw_fd()) else {
         eprintln!("uring acceptor: ring unavailable on this worker; using epoll accept loop");
-        return accept_fiber(listener, NetPolicy::Epoll, stop, dispatch);
+        return accept_fiber(listener, NetPolicy::Epoll, stop, dispatch, metrics);
     };
+    let mut backoff = AcceptBackoff::new();
     loop {
         if stop.load(Ordering::Acquire) {
             break;
         }
+        // Fault injection (`faults` feature only): simulated EMFILE on
+        // the uring accept path — throttle instead of spinning on the
+        // queued fds.
+        if faultsim::accept_fault() {
+            metrics.slot().accept_throttled.fetch_add(1, Ordering::Relaxed);
+            backoff_yield(&mut backoff, &stop);
+            continue;
+        }
         match uring::accept_take(token) {
             Some(fd) => {
+                backoff.reset();
                 // SAFETY: the accept CQE handed this fiber sole ownership
                 // of the connection fd; wrapping transfers it to the
                 // TcpStream (the engine sets non-blocking itself).
@@ -306,6 +425,7 @@ pub fn start_acceptor(
     worker: usize,
     mut dispatch: impl FnMut(TcpStream) + Send + 'static,
     thread_name: &str,
+    metrics: Arc<ConnMetrics>,
 ) -> Result<Option<std::thread::JoinHandle<()>>, String> {
     match policy {
         NetPolicy::Epoll => {
@@ -313,7 +433,7 @@ pub fn start_acceptor(
                 worker,
                 Box::new(move || {
                     fiber::with_executor(|e| {
-                        e.spawn(move || accept_fiber(listener, policy, stop, dispatch));
+                        e.spawn(move || accept_fiber(listener, policy, stop, dispatch, metrics));
                     });
                 }),
             );
@@ -324,7 +444,7 @@ pub fn start_acceptor(
                 worker,
                 Box::new(move || {
                     fiber::with_executor(|e| {
-                        e.spawn(move || uring_accept_fiber(listener, stop, dispatch));
+                        e.spawn(move || uring_accept_fiber(listener, stop, dispatch, metrics));
                     });
                 }),
             );
@@ -334,17 +454,31 @@ pub fn start_acceptor(
             let handle = std::thread::Builder::new()
                 .name(thread_name.into())
                 .spawn(move || {
+                    let mut backoff = AcceptBackoff::new();
                     while !stop.load(Ordering::Acquire) {
+                        // Fault injection (`faults` feature only):
+                        // simulated EMFILE takes the throttled path.
+                        if faultsim::accept_fault() {
+                            metrics.slot().accept_throttled.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(backoff.next_delay());
+                            continue;
+                        }
                         match listener.accept() {
-                            Ok((stream, _peer)) => dispatch(stream),
+                            Ok((stream, _peer)) => {
+                                backoff.reset();
+                                dispatch(stream);
+                            }
                             Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                                backoff.reset();
                                 std::thread::sleep(std::time::Duration::from_micros(200));
                             }
                             Err(e) if e.kind() == ErrorKind::Interrupted => {}
                             // Transient (fd exhaustion, aborted handshake):
-                            // never kill the acceptor; retry after a pause.
+                            // never kill the acceptor; bounded exponential
+                            // backoff instead of a hot 1 ms retry.
                             Err(_) => {
-                                std::thread::sleep(std::time::Duration::from_millis(1));
+                                metrics.slot().accept_throttled.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(backoff.next_delay());
                             }
                         }
                     }

@@ -19,7 +19,9 @@
 //! out of order. Parsing is **total**: hostile bytes answer
 //! `-ERR Protocol error: …` and close, never a worker panic.
 
-use super::engine::{Completion, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore};
+use super::engine::{
+    Completion, CoreConfig, Inbuf, Protocol, ResponseOrder, ServerCore, ServerTuning,
+};
 use super::netfiber::{self, NetPolicy};
 use crate::kvstore::backend::{AckCb, AsyncKv, BackendKind, FlushCb, GetCb, IncrCb, TtlCb};
 use crate::kvstore::store::{StoreConfig, StoreStats, TTL_MISSING, TTL_NO_EXPIRY};
@@ -291,6 +293,14 @@ impl Protocol for RespProtocol {
 
     fn render_error(&mut self, err: &RespParseError, out: &mut Vec<u8>) {
         write_error(out, &format!("ERR Protocol error: {}", err.message()));
+    }
+
+    /// Shed replies use the memcached-era `-BUSY` convention: a normal
+    /// error reply on an open connection, so pipelined clients keep their
+    /// request/response pairing and may retry.
+    fn render_overload(&mut self, _req: &RespRequest, out: &mut Vec<u8>) -> bool {
+        write_error(out, "BUSY server overloaded, try again later");
+        true
     }
 
     /// Multi-key commands fan out into one backend operation per key and
@@ -613,6 +623,9 @@ pub struct RespServerConfig {
     pub addr: String,
     /// How connection fibers wait for socket progress.
     pub net: NetPolicy,
+    /// Overload-control and degradation knobs (shed watermarks, request
+    /// deadline, stalled-connection reaping, stop-drain grace).
+    pub tuning: ServerTuning,
 }
 
 impl Default for RespServerConfig {
@@ -624,6 +637,7 @@ impl Default for RespServerConfig {
             budget_bytes: 0,
             addr: "127.0.0.1:0".into(),
             net: NetPolicy::default(),
+            tuning: ServerTuning::default(),
         }
     }
 }
@@ -632,7 +646,8 @@ impl RespServerConfig {
     /// Topology + budget sanity checks, before any runtime is built.
     pub fn validate(&self) -> Result<(), String> {
         netfiber::validate_topology(self.workers, self.dedicated)?;
-        self.backend.validate_budget(self.budget_bytes)
+        self.backend.validate_budget(self.budget_bytes)?;
+        self.tuning.validate()
     }
 }
 
@@ -663,6 +678,7 @@ impl RespServer {
                 dedicated: cfg.dedicated,
                 addr: cfg.addr.clone(),
                 net: cfg.net,
+                tuning: cfg.tuning,
             },
             "resp-accept",
             |rt, trustees| {

@@ -10,7 +10,7 @@
 //! fails the run descriptively) instead of panicking the client thread.
 
 use super::resp::{write_array_header, write_bulk};
-use crate::loadgen::{run_pipelined_loader, LoadDriver, Reply};
+use crate::loadgen::{run_pipelined_loader_opts, LoadDriver, Reply};
 use crate::util::{KeyDist, Rng};
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -40,6 +40,9 @@ pub struct RespLoadConfig {
     pub ttl_pct: u32,
     pub val_len: usize,
     pub seed: u64,
+    /// Re-issue requests the server shed with `-BUSY` (bounded; off =
+    /// count them as valueless completions).
+    pub retry_shed: bool,
 }
 
 /// Aggregated results. `errors` holds one descriptive entry per client
@@ -50,6 +53,8 @@ pub struct RespLoadStats {
     pub elapsed: std::time::Duration,
     pub hits: u64,
     pub misses: u64,
+    /// Requests the server answered with `-BUSY`.
+    pub shed: u64,
     pub errors: Vec<String>,
 }
 
@@ -75,13 +80,15 @@ pub fn run_resp_load(cfg: &RespLoadConfig) -> RespLoadStats {
     let mut ops = 0;
     let mut hits = 0;
     let mut misses = 0;
+    let mut shed = 0;
     let mut errors = Vec::new();
     for (t, h) in handles.into_iter().enumerate() {
         match h.join() {
-            Ok((o, hi, mi, err)) => {
+            Ok((o, hi, mi, sh, err)) => {
                 ops += o;
                 hits += hi;
                 misses += mi;
+                shed += sh;
                 if let Some(e) = err {
                     errors.push(format!("client thread {t}: {e}"));
                 }
@@ -89,14 +96,23 @@ pub fn run_resp_load(cfg: &RespLoadConfig) -> RespLoadStats {
             Err(_) => errors.push(format!("client thread {t} panicked")),
         }
     }
-    RespLoadStats { ops, elapsed: start.elapsed(), hits, misses, errors }
+    RespLoadStats { ops, elapsed: start.elapsed(), hits, misses, shed, errors }
 }
 
-/// Parse one complete RESP reply: `Ok(Some((bytes_used, is_hit)))` where
-/// `is_hit` is false only for a null bulk (missing key), `Ok(None)` =
-/// wait for more bytes, `Err` = the server answered an error or the
+/// One parsed wire reply (see [`parse_reply`]).
+#[derive(Debug, PartialEq, Eq)]
+enum Parsed {
+    /// Ordinary reply; `hit` is false only for a null bulk (missing key).
+    Done { used: usize, hit: bool },
+    /// The server shed the request with `-BUSY …` (not a desync: the
+    /// connection is still good and the request may be retried).
+    Shed { used: usize },
+}
+
+/// Parse one complete RESP reply: `Ok(Some(parsed))`, `Ok(None)` = wait
+/// for more bytes, `Err` = the server answered a (non-BUSY) error or the
 /// stream is broken.
-fn parse_reply(buf: &[u8]) -> Result<Option<(usize, bool)>, String> {
+fn parse_reply(buf: &[u8]) -> Result<Option<Parsed>, String> {
     if buf.is_empty() {
         return Ok(None);
     }
@@ -107,18 +123,23 @@ fn parse_reply(buf: &[u8]) -> Result<Option<(usize, bool)>, String> {
         return Ok(None);
     };
     match buf[0] {
-        b'+' | b':' => Ok(Some((le + 2, true))),
-        b'-' => Err(format!(
-            "server error reply: {}",
-            String::from_utf8_lossy(&buf[1..le])
-        )),
+        b'+' | b':' => Ok(Some(Parsed::Done { used: le + 2, hit: true })),
+        b'-' => {
+            if buf[1..le].starts_with(b"BUSY") {
+                return Ok(Some(Parsed::Shed { used: le + 2 }));
+            }
+            Err(format!(
+                "server error reply: {}",
+                String::from_utf8_lossy(&buf[1..le])
+            ))
+        }
         b'$' => {
             let n: i64 = std::str::from_utf8(&buf[1..le])
                 .ok()
                 .and_then(|s| s.parse().ok())
                 .ok_or("malformed bulk length in reply")?;
             if n < 0 {
-                return Ok(Some((le + 2, false)));
+                return Ok(Some(Parsed::Done { used: le + 2, hit: false }));
             }
             // A length past the server's own bulk cap means the stream is
             // desynced: fail descriptively instead of waiting forever for
@@ -130,7 +151,7 @@ fn parse_reply(buf: &[u8]) -> Result<Option<(usize, bool)>, String> {
             if buf.len() < need {
                 return Ok(None);
             }
-            Ok(Some((need, true)))
+            Ok(Some(Parsed::Done { used: need, hit: true }))
         }
         other => Err(format!("unexpected reply type byte {other:#04x}")),
     }
@@ -198,16 +219,20 @@ impl LoadDriver for RespDriver {
             return Ok(None);
         }
         match parse_reply(buf)? {
-            Some((used, hit)) => {
+            Some(Parsed::Done { used, hit }) => {
                 let was_get = matches!(self.expect.pop_front(), Some(Expect::Get));
-                Ok(Some(Reply { used, hit: hit || !was_get }))
+                Ok(Some(Reply::ok(used, hit || !was_get)))
+            }
+            Some(Parsed::Shed { used }) => {
+                self.expect.pop_front();
+                Ok(Some(Reply::shed(used)))
             }
             None => Ok(None),
         }
     }
 }
 
-fn run_connection(cfg: &RespLoadConfig, tid: u64) -> (u64, u64, u64, Option<String>) {
+fn run_connection(cfg: &RespLoadConfig, tid: u64) -> (u64, u64, u64, u64, Option<String>) {
     let mut driver = RespDriver {
         rng: Rng::new(cfg.seed ^ (tid.wrapping_mul(0xC2B2_AE35))),
         dist: KeyDist::from_spec(&cfg.dist, cfg.keys),
@@ -216,8 +241,14 @@ fn run_connection(cfg: &RespLoadConfig, tid: u64) -> (u64, u64, u64, Option<Stri
         val: vec![b'r'; cfg.val_len],
         expect: VecDeque::with_capacity(cfg.pipeline),
     };
-    let r = run_pipelined_loader(cfg.addr, cfg.pipeline, cfg.ops_per_thread, &mut driver);
-    (r.done, r.hits, r.misses, r.error)
+    let r = run_pipelined_loader_opts(
+        cfg.addr,
+        cfg.pipeline,
+        cfg.ops_per_thread,
+        &mut driver,
+        cfg.retry_shed,
+    );
+    (r.done, r.hits, r.misses, r.shed, r.error)
 }
 
 #[cfg(test)]
@@ -226,16 +257,33 @@ mod tests {
 
     #[test]
     fn reply_parser_handles_each_type_and_partials() {
-        assert_eq!(parse_reply(b"+OK\r\n").unwrap(), Some((5, true)));
-        assert_eq!(parse_reply(b":42\r\n").unwrap(), Some((5, true)));
-        assert_eq!(parse_reply(b"$-1\r\n").unwrap(), Some((5, false)));
-        assert_eq!(parse_reply(b"$5\r\nhello\r\nrest").unwrap(), Some((11, true)));
+        assert_eq!(
+            parse_reply(b"+OK\r\n").unwrap(),
+            Some(Parsed::Done { used: 5, hit: true })
+        );
+        assert_eq!(
+            parse_reply(b":42\r\n").unwrap(),
+            Some(Parsed::Done { used: 5, hit: true })
+        );
+        assert_eq!(
+            parse_reply(b"$-1\r\n").unwrap(),
+            Some(Parsed::Done { used: 5, hit: false })
+        );
+        assert_eq!(
+            parse_reply(b"$5\r\nhello\r\nrest").unwrap(),
+            Some(Parsed::Done { used: 11, hit: true })
+        );
         let full = b"$5\r\nhello\r\n";
         for cut in 0..full.len() {
             assert_eq!(parse_reply(&full[..cut]).unwrap(), None, "cut={cut}");
         }
         assert!(parse_reply(b"-ERR nope\r\n").is_err());
         assert!(parse_reply(b"?junk\r\n").is_err());
+        // A -BUSY error is a shed marker, not a desync.
+        assert_eq!(
+            parse_reply(b"-BUSY server overloaded, try again later\r\n").unwrap(),
+            Some(Parsed::Shed { used: 42 })
+        );
         // Desync guard: absurd declared lengths error instead of hanging.
         assert!(parse_reply(b"$99999999\r\n").is_err());
         assert!(parse_reply(b"$999999999999999999999\r\n").is_err());

@@ -1,0 +1,425 @@
+//! Deterministic fault injection at the syscall boundary.
+//!
+//! Behind the `faults` cargo feature (off by default, like `model`), this
+//! module interposes on the handful of places the crate touches the
+//! kernel for network I/O — the reactor's `epoll_wait`, the ring's
+//! `io_uring_enter`, and the `read`/`write`/`accept` paths in
+//! `server::netfiber` — and injects the failures a production deployment
+//! will eventually see: `EAGAIN`, `EINTR`, `ECONNRESET`, `EMFILE`, short
+//! reads, short writes, and failed ring submissions.
+//!
+//! Decisions are **deterministic given a seed**: each injection site owns
+//! an attempt counter, and the (seed, site, attempt-index) triple is
+//! hashed through SplitMix64 to a fault/no-fault decision. Two runs with
+//! the same seed and the same per-site call sequences inject the same
+//! faults, regardless of thread scheduling across sites — which is what
+//! makes a chaos failure replayable from its logged seed.
+//!
+//! Configuration is either programmatic ([`install`]) or via the
+//! `TRUSTEE_FAULTS=seed:rate:mask` environment variable, where `rate` is
+//! the injection probability in basis points (1/10,000ths; `100` = 1%)
+//! and `mask` is a bitwise OR of the `MASK_*` fault-kind bits (`0` or a
+//! missing variable disables injection). Per-site counters record how
+//! many faults actually fired so tests can assert a plan exercised every
+//! site ([`injected`]).
+//!
+//! With the feature disabled every probe in this module compiles to an
+//! inline `None`/`false` constant — the production hot path pays nothing
+//! (enforced by `tests/alloc_regression.rs` and the bench suite running
+//! without the feature).
+
+/// Injection sites, one per interposed syscall boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Socket reads (`server::netfiber::read_burst` / `read_available`).
+    Read,
+    /// Socket writes (`server::netfiber::write_pending`).
+    Write,
+    /// Accept paths (fiber, busy-poll thread, and uring acceptor).
+    Accept,
+    /// The reactor's `epoll_wait` (simulated `EINTR`).
+    EpollWait,
+    /// The ring's `io_uring_enter` (simulated submission failure).
+    UringEnter,
+}
+
+/// Number of [`Site`] variants (sizes the per-site counter arrays).
+pub const NSITES: usize = 5;
+
+impl Site {
+    /// Stable per-site array index (counter slots; also used by tests to
+    /// index per-site tallies).
+    pub fn index(self) -> usize {
+        match self {
+            Site::Read => 0,
+            Site::Write => 1,
+            Site::Accept => 2,
+            Site::EpollWait => 3,
+            Site::UringEnter => 4,
+        }
+    }
+
+    /// Human label for logs ("replay with TRUSTEE_FAULTS=…").
+    pub fn label(self) -> &'static str {
+        match self {
+            Site::Read => "read",
+            Site::Write => "write",
+            Site::Accept => "accept",
+            Site::EpollWait => "epoll_wait",
+            Site::UringEnter => "io_uring_enter",
+        }
+    }
+}
+
+/// What a read-site injection tells the caller to pretend happened.
+#[cfg_attr(not(feature = "faults"), allow(dead_code))]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadFault {
+    /// Pretend the socket returned `EAGAIN` (no bytes this pass).
+    Eagain,
+    /// Pretend the peer reset the connection (`ECONNRESET`).
+    ConnReset,
+    /// Deliver at most this many bytes this pass (short read).
+    Short(usize),
+}
+
+/// What a write-site injection tells the caller to pretend happened.
+#[cfg_attr(not(feature = "faults"), allow(dead_code))]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteFault {
+    /// Pretend the socket returned `EAGAIN` (nothing written this pass).
+    Eagain,
+    /// Pretend the peer reset the connection (`ECONNRESET`).
+    ConnReset,
+    /// Write at most one byte this pass (short write).
+    Short,
+}
+
+/// Fault-kind mask bits for [`install`] / `TRUSTEE_FAULTS`.
+pub const MASK_EAGAIN: u32 = 1 << 0;
+pub const MASK_EINTR: u32 = 1 << 1;
+pub const MASK_CONNRESET: u32 = 1 << 2;
+pub const MASK_EMFILE: u32 = 1 << 3;
+pub const MASK_SHORT_READ: u32 = 1 << 4;
+pub const MASK_SHORT_WRITE: u32 = 1 << 5;
+pub const MASK_URING_ENTER: u32 = 1 << 6;
+/// Every fault kind.
+pub const MASK_ALL: u32 = (1 << 7) - 1;
+
+#[cfg(feature = "faults")]
+mod imp {
+    use super::*;
+    use crate::util::rng::splitmix64;
+    use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+    use std::sync::Once;
+
+    /// Fast-path gate: a single relaxed load on every probe while no plan
+    /// is installed.
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    static SEED: AtomicU64 = AtomicU64::new(0);
+    /// Injection probability in basis points (1/10,000ths).
+    static RATE_BP: AtomicU32 = AtomicU32::new(0);
+    static MASK: AtomicU32 = AtomicU32::new(0);
+    /// Per-site attempt counters (the deterministic decision index).
+    static ATTEMPTS: [AtomicU64; NSITES] = [
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+    ];
+    /// Per-site counters of faults that actually fired.
+    static INJECTED: [AtomicU64; NSITES] = [
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+    ];
+    static ENV_INIT: Once = Once::new();
+
+    /// Install a fault plan: `rate_bp` is the per-probe injection
+    /// probability in basis points, `mask` selects fault kinds
+    /// (`MASK_*`). Resets the attempt and injected counters so a test's
+    /// assertions see only its own plan.
+    pub fn install(seed: u64, rate_bp: u32, mask: u32) {
+        SEED.store(seed, Ordering::Relaxed);
+        RATE_BP.store(rate_bp.min(10_000), Ordering::Relaxed);
+        MASK.store(mask, Ordering::Relaxed);
+        for i in 0..NSITES {
+            ATTEMPTS[i].store(0, Ordering::Relaxed);
+            INJECTED[i].store(0, Ordering::Relaxed);
+        }
+        ENABLED.store(rate_bp > 0 && mask != 0, Ordering::Release);
+    }
+
+    /// Disable injection (counters are left readable for assertions).
+    pub fn clear() {
+        ENABLED.store(false, Ordering::Release);
+    }
+
+    /// Parse `TRUSTEE_FAULTS=seed:rate:mask` and install it. Returns
+    /// whether a plan was installed. Numbers accept a `0x` hex prefix.
+    pub fn install_from_env() -> bool {
+        let spec = match std::env::var("TRUSTEE_FAULTS") {
+            Ok(s) if !s.is_empty() => s,
+            _ => return false,
+        };
+        let mut parts = spec.splitn(3, ':');
+        let num = |s: Option<&str>| -> Option<u64> {
+            let s = s?.trim();
+            if let Some(hex) = s.strip_prefix("0x") {
+                u64::from_str_radix(hex, 16).ok()
+            } else {
+                s.parse().ok()
+            }
+        };
+        match (num(parts.next()), num(parts.next()), num(parts.next())) {
+            (Some(seed), Some(rate), Some(mask)) => {
+                install(seed, rate as u32, mask as u32);
+                true
+            }
+            _ => {
+                eprintln!("TRUSTEE_FAULTS: expected seed:rate:mask, got {spec:?}; ignored");
+                false
+            }
+        }
+    }
+
+    /// Faults that actually fired at `site` under the current plan.
+    pub fn injected(site: Site) -> u64 {
+        INJECTED[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// The installed plan as a replay spec (`seed:rate:mask`), if any.
+    pub fn plan_spec() -> Option<String> {
+        if !ENABLED.load(Ordering::Acquire) {
+            return None;
+        }
+        Some(format!(
+            "{}:{}:0x{:x}",
+            SEED.load(Ordering::Relaxed),
+            RATE_BP.load(Ordering::Relaxed),
+            MASK.load(Ordering::Relaxed)
+        ))
+    }
+
+    /// Deterministic per-(site, attempt) decision: returns the subset of
+    /// `candidates` the plan picked, or 0 for "no fault".
+    fn decide(site: Site, candidates: u32) -> u32 {
+        ENV_INIT.call_once(|| {
+            install_from_env();
+        });
+        if !ENABLED.load(Ordering::Relaxed) {
+            return 0;
+        }
+        let candidates = candidates & MASK.load(Ordering::Relaxed);
+        if candidates == 0 {
+            return 0;
+        }
+        let attempt = ATTEMPTS[site.index()].fetch_add(1, Ordering::Relaxed);
+        // Hash (seed, site, attempt) so decisions are independent of the
+        // interleaving of *other* sites' probes.
+        let mut s = SEED
+            .load(Ordering::Relaxed)
+            .wrapping_add((site.index() as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(attempt.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        let r = splitmix64(&mut s);
+        if (r % 10_000) as u32 >= RATE_BP.load(Ordering::Relaxed) {
+            return 0;
+        }
+        // Pick one of the candidate kinds with a second draw.
+        let n = candidates.count_ones();
+        let pick = (splitmix64(&mut s) % n as u64) as u32;
+        let mut rem = candidates;
+        for _ in 0..pick {
+            rem &= rem - 1; // drop lowest set bit
+        }
+        let kind = rem & rem.wrapping_neg(); // isolate lowest set bit
+        INJECTED[site.index()].fetch_add(1, Ordering::Relaxed);
+        kind
+    }
+
+    /// Probe the read site. `Some` overrides the real socket read.
+    #[inline]
+    pub fn read_fault() -> Option<ReadFault> {
+        match decide(Site::Read, MASK_EAGAIN | MASK_CONNRESET | MASK_SHORT_READ) {
+            MASK_EAGAIN => Some(ReadFault::Eagain),
+            MASK_CONNRESET => Some(ReadFault::ConnReset),
+            MASK_SHORT_READ => Some(ReadFault::Short(1)),
+            _ => None,
+        }
+    }
+
+    /// Probe the write site. `Some` overrides the real socket write.
+    #[inline]
+    pub fn write_fault() -> Option<WriteFault> {
+        match decide(Site::Write, MASK_EAGAIN | MASK_CONNRESET | MASK_SHORT_WRITE) {
+            MASK_EAGAIN => Some(WriteFault::Eagain),
+            MASK_CONNRESET => Some(WriteFault::ConnReset),
+            MASK_SHORT_WRITE => Some(WriteFault::Short),
+            _ => None,
+        }
+    }
+
+    /// Probe the accept site: `true` simulates `EMFILE` (the acceptor
+    /// must take its backoff path instead of retrying hot).
+    #[inline]
+    pub fn accept_fault() -> bool {
+        decide(Site::Accept, MASK_EMFILE) != 0
+    }
+
+    /// Probe the `epoll_wait` site: `true` simulates `EINTR` (the poll
+    /// returns no events; the caller's next tick retries).
+    #[inline]
+    pub fn epoll_fault() -> bool {
+        decide(Site::EpollWait, MASK_EINTR) != 0
+    }
+
+    /// Probe the `io_uring_enter` site: `true` simulates a failed enter
+    /// (staged SQEs stay staged; the next flush resubmits them).
+    #[inline]
+    pub fn uring_enter_fault() -> bool {
+        decide(Site::UringEnter, MASK_URING_ENTER) != 0
+    }
+}
+
+#[cfg(not(feature = "faults"))]
+mod imp {
+    use super::*;
+
+    /// No-op without the `faults` feature (plan ignored).
+    #[inline(always)]
+    pub fn install(_seed: u64, _rate_bp: u32, _mask: u32) {}
+
+    /// No-op without the `faults` feature.
+    #[inline(always)]
+    pub fn clear() {}
+
+    /// Always `false` without the `faults` feature.
+    #[inline(always)]
+    pub fn install_from_env() -> bool {
+        false
+    }
+
+    /// Always 0 without the `faults` feature.
+    #[inline(always)]
+    pub fn injected(_site: Site) -> u64 {
+        0
+    }
+
+    /// Always `None` without the `faults` feature.
+    #[inline(always)]
+    pub fn plan_spec() -> Option<String> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn read_fault() -> Option<ReadFault> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn write_fault() -> Option<WriteFault> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn accept_fault() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn epoll_fault() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn uring_enter_fault() -> bool {
+        false
+    }
+}
+
+pub use imp::*;
+
+#[cfg(all(test, feature = "faults"))]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The plan is process-global state; tests that install one must not
+    /// interleave. Shared with `tests/chaos.rs` conceptually (that file
+    /// is a separate binary, so only in-file serialization is needed).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_plan_injects_nothing() {
+        let _g = LOCK.lock().unwrap();
+        install(1, 0, MASK_ALL);
+        for _ in 0..100 {
+            assert_eq!(read_fault(), None);
+            assert!(!accept_fault());
+        }
+        assert_eq!(injected(Site::Read), 0);
+        clear();
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let _g = LOCK.lock().unwrap();
+        let run = || {
+            install(0xDEAD_BEEF, 2_500, MASK_ALL);
+            let seq: Vec<Option<ReadFault>> = (0..64).map(|_| read_fault()).collect();
+            let fired = injected(Site::Read);
+            clear();
+            (seq, fired)
+        };
+        let (a, fa) = run();
+        let (b, fb) = run();
+        assert_eq!(a, b, "decisions must replay given the seed");
+        assert_eq!(fa, fb);
+        assert!(fa > 0, "25% over 64 attempts must fire at least once");
+    }
+
+    #[test]
+    fn sites_decide_independently() {
+        let _g = LOCK.lock().unwrap();
+        // Interleaving another site's probes must not perturb read-site
+        // decisions: the decision index is per-site.
+        install(42, 5_000, MASK_ALL);
+        let plain: Vec<Option<ReadFault>> = (0..32).map(|_| read_fault()).collect();
+        install(42, 5_000, MASK_ALL);
+        let interleaved: Vec<Option<ReadFault>> = (0..32)
+            .map(|_| {
+                accept_fault();
+                epoll_fault();
+                read_fault()
+            })
+            .collect();
+        assert_eq!(plain, interleaved);
+        clear();
+    }
+
+    #[test]
+    fn mask_restricts_kinds() {
+        let _g = LOCK.lock().unwrap();
+        install(7, 10_000, MASK_CONNRESET);
+        for _ in 0..32 {
+            assert_eq!(read_fault(), Some(ReadFault::ConnReset));
+            // Accept has no candidate under this mask: never fires.
+            assert!(!accept_fault());
+        }
+        assert_eq!(injected(Site::Read), 32);
+        assert_eq!(injected(Site::Accept), 0);
+        clear();
+    }
+
+    #[test]
+    fn plan_spec_round_trips() {
+        let _g = LOCK.lock().unwrap();
+        install(9, 100, MASK_EAGAIN | MASK_EMFILE);
+        assert_eq!(plan_spec().as_deref(), Some("9:100:0x9"));
+        clear();
+        assert_eq!(plan_spec(), None);
+    }
+}

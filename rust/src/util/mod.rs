@@ -20,6 +20,8 @@
 //!   allocation-free replacement for boxed completions/callbacks)
 //! - [`count_alloc`] — opt-in counting global allocator behind the
 //!   zero-allocation hot-path regression test
+//! - [`faultsim`] — deterministic syscall-boundary fault injection
+//!   behind the `faults` feature (compiled to no-ops by default)
 //! - [`vatomic`] — virtual atomics: `std::sync::atomic` newtypes that the
 //!   `model` feature reroutes through the interleaving explorer
 
@@ -27,6 +29,7 @@ pub mod affinity;
 pub mod cache;
 pub mod cli;
 pub mod count_alloc;
+pub mod faultsim;
 pub mod quickcheck;
 pub mod rng;
 pub mod smallfn;

@@ -84,7 +84,21 @@ pub struct epoll_event {
     pub data: u64,
 }
 
+/// `getrlimit`/`setrlimit` resource id for the open-file-descriptor cap.
+pub const RLIMIT_NOFILE: c_int = 7;
+
+/// Linux `struct rlimit` (64-bit fields on x86-64).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct rlimit {
+    pub rlim_cur: u64,
+    pub rlim_max: u64,
+}
+
 extern "C" {
+    pub fn getrlimit(resource: c_int, rlim: *mut rlimit) -> c_int;
+    pub fn setrlimit(resource: c_int, rlim: *const rlimit) -> c_int;
+
     pub fn mmap(
         addr: *mut c_void,
         len: size_t,

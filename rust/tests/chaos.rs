@@ -1,0 +1,221 @@
+//! Chaos harness (`--features faults` only, see `[[test]]` gate in
+//! Cargo.toml): seeded randomized fault-injection runs over every
+//! NetPolicy × backend cell of the memcached server, with tight shed
+//! watermarks so overload control engages under the same storm.
+//!
+//! Invariants asserted per cell:
+//! - the server keeps accepting: after the storm a fresh connection
+//!   completes a clean round trip;
+//! - surviving connections got *correct* responses (the loader's strict
+//!   parsers treat any desync as an error; injected resets/EOFs are the
+//!   only tolerated failures);
+//! - loader stats stay coherent (`done == hits + misses + shed`);
+//! - shutdown completes within the drain-grace bound;
+//! - no leaked fds (`/proc/self/fd` returns to its pre-server count);
+//! - across a test's pinned-seed matrix, every injection site the
+//!   environment can reach actually fired (`faultsim::injected`).
+//!
+//! The fault plan is process-global, so every test serializes on
+//! [`PLAN_LOCK`]. Each pinned seed is replayable: run the same seed via
+//! `TRUSTEE_FAULTS=seed:rate:mask` (the randomized test logs its seed in
+//! exactly that spec form).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+use trustee::kvstore::BackendKind;
+use trustee::memcache::{run_memtier, McdServer, McdServerConfig, MemtierConfig};
+use trustee::server::{NetPolicy, ServerTuning};
+use trustee::util::faultsim::{self, Site};
+
+/// Serializes every chaos test: the fault plan and its counters are
+/// process-global.
+static PLAN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Injection probability per probe, in basis points (5%): high enough
+/// that a short storm exercises every site, low enough that most
+/// connections make progress.
+const RATE_BP: u32 = 500;
+
+/// Pinned seeds: the deterministic regression matrix.
+const PINNED_SEEDS: [u64; 2] = [0xC4A0_5EED, 0x7357_BEEF];
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    PLAN_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fd_count() -> usize {
+    std::fs::read_dir("/proc/self/fd").unwrap().count()
+}
+
+fn backends() -> [BackendKind; 4] {
+    [
+        BackendKind::Trust { shards: 2 },
+        BackendKind::Mutex,
+        BackendKind::RwLock,
+        BackendKind::Swift,
+    ]
+}
+
+/// Clean health probe (run with faults cleared): one SET + GET round
+/// trip on a fresh connection.
+fn assert_accepting(addr: std::net::SocketAddr) {
+    let mut c = TcpStream::connect(addr).expect("server stopped accepting after the storm");
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    c.write_all(b"set chaos-health 0 0 2\r\nok\r\nget chaos-health\r\n").unwrap();
+    let want = b"STORED\r\nVALUE chaos-health 0 2\r\nok\r\nEND\r\n";
+    let mut got = Vec::new();
+    let mut chunk = [0u8; 256];
+    while got.len() < want.len() {
+        let n = c.read(&mut chunk).expect("health read timed out");
+        assert!(n > 0, "server closed the health connection");
+        got.extend_from_slice(&chunk[..n]);
+    }
+    assert_eq!(&got[..], &want[..], "post-storm responses must be byte-correct");
+}
+
+/// One chaos cell: start the server under an installed plan, storm it
+/// with the strict in-crate loader, verify every invariant, and return
+/// the per-site injected counts this cell produced (sampled before
+/// `clear`, since `install` resets the counters).
+fn chaos_cell(policy: NetPolicy, backend: BackendKind, seed: u64) -> [u64; faultsim::NSITES] {
+    let fds_before = fd_count();
+    faultsim::install(seed, RATE_BP, faultsim::MASK_ALL);
+    let server = McdServer::start(McdServerConfig {
+        workers: 2,
+        backend,
+        net: policy,
+        tuning: ServerTuning { shed_high: 64, shed_low: 32, ..ServerTuning::default() },
+        ..Default::default()
+    });
+    // Backend-direct prefill (no socket in that path): loader GETs that
+    // reach the store must hit, so a miss storm would flag corruption.
+    server.prefill(64, 8);
+
+    let stats = run_memtier(&MemtierConfig {
+        addr: server.addr(),
+        threads: 2,
+        pipeline: 8,
+        ops_per_thread: 150,
+        keys: 64,
+        dist: "uniform".into(),
+        write_pct: 20,
+        ttl_pct: 0,
+        val_len: 8,
+        seed,
+        retry_shed: false,
+    });
+    // Injected resets/EOFs legitimately kill client threads mid-run;
+    // anything else (a desync, an unexpected reply) is a real bug.
+    for e in &stats.errors {
+        assert!(
+            e.contains("server closed")
+                || e.contains("read:")
+                || e.contains("write:")
+                || e.contains("connect"),
+            "client failure is not a tolerated fault under {policy:?}/{backend:?} seed {seed}: {e}"
+        );
+    }
+    assert_eq!(
+        stats.ops,
+        stats.hits + stats.misses + stats.shed,
+        "loader accounting must stay coherent under faults"
+    );
+    let injected = [
+        faultsim::injected(Site::Read),
+        faultsim::injected(Site::Write),
+        faultsim::injected(Site::Accept),
+        faultsim::injected(Site::EpollWait),
+        faultsim::injected(Site::UringEnter),
+    ];
+
+    // The storm is over: stop injecting, then check the invariants.
+    faultsim::clear();
+    assert_accepting(server.addr());
+    assert!(
+        server.metrics().totals().requests > 0,
+        "the storm must have reached the server"
+    );
+
+    let t0 = Instant::now();
+    server.stop();
+    let stop_elapsed = t0.elapsed();
+    assert!(
+        stop_elapsed < Duration::from_secs(5),
+        "shutdown took {stop_elapsed:?} — drain grace is 250ms plus teardown"
+    );
+    assert_eq!(fd_count(), fds_before, "fd leak under {policy:?}/{backend:?} seed {seed}");
+    injected
+}
+
+/// Run the pinned-seed × backend matrix for one policy, summing per-site
+/// injected counts across cells.
+fn run_matrix(policy: NetPolicy) -> [u64; faultsim::NSITES] {
+    let mut sum = [0u64; faultsim::NSITES];
+    for seed in PINNED_SEEDS {
+        for backend in backends() {
+            let cell = chaos_cell(policy, backend, seed);
+            for (s, c) in sum.iter_mut().zip(cell) {
+                *s += c;
+            }
+        }
+    }
+    sum
+}
+
+#[test]
+fn chaos_epoll_matrix_survives_and_covers_sites() {
+    let _g = lock();
+    let sum = run_matrix(NetPolicy::Epoll);
+    assert!(sum[Site::Read.index()] > 0, "no read faults fired: {sum:?}");
+    assert!(sum[Site::Write.index()] > 0, "no write faults fired: {sum:?}");
+    assert!(sum[Site::Accept.index()] > 0, "no accept faults fired: {sum:?}");
+    assert!(sum[Site::EpollWait.index()] > 0, "no epoll_wait faults fired: {sum:?}");
+}
+
+#[test]
+fn chaos_busypoll_matrix_survives() {
+    let _g = lock();
+    let sum = run_matrix(NetPolicy::BusyPoll);
+    assert!(sum[Site::Read.index()] > 0, "no read faults fired: {sum:?}");
+    assert!(sum[Site::Write.index()] > 0, "no write faults fired: {sum:?}");
+    assert!(sum[Site::Accept.index()] > 0, "no accept faults fired: {sum:?}");
+}
+
+#[test]
+fn chaos_uring_matrix_survives_and_covers_enter_site() {
+    let _g = lock();
+    if let Err(e) = trustee::runtime::uring::probe() {
+        eprintln!("SKIP chaos under uring: io_uring unavailable ({e})");
+        return;
+    }
+    let sum = run_matrix(NetPolicy::IoUring);
+    assert!(sum[Site::Read.index()] > 0, "no read faults fired: {sum:?}");
+    assert!(sum[Site::Write.index()] > 0, "no write faults fired: {sum:?}");
+    assert!(
+        sum[Site::UringEnter.index()] > 0,
+        "no io_uring_enter faults fired: {sum:?}"
+    );
+}
+
+#[test]
+fn chaos_randomized_seed_logs_replay_spec() {
+    let _g = lock();
+    // One randomized cell per run widens coverage beyond the pinned
+    // seeds; the seed is logged in TRUSTEE_FAULTS spec form so a CI
+    // failure is replayable. TRUSTEE_CHAOS_SEED pins it for replay.
+    let seed = match std::env::var("TRUSTEE_CHAOS_SEED") {
+        Ok(s) => s.parse().expect("TRUSTEE_CHAOS_SEED must be a u64"),
+        Err(_) => std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64,
+    };
+    eprintln!(
+        "chaos: randomized seed {seed} \
+         (replay: TRUSTEE_CHAOS_SEED={seed}, plan spec {seed}:{RATE_BP}:0x{:x})",
+        faultsim::MASK_ALL
+    );
+    chaos_cell(NetPolicy::Epoll, BackendKind::Trust { shards: 2 }, seed);
+}

@@ -1,0 +1,104 @@
+//! Accept-loop fd-exhaustion regression test: when `accept(2)` hits the
+//! process's `RLIMIT_NOFILE` ceiling (EMFILE), the acceptor must count
+//! the event in `accept_throttled`, back off instead of spinning, and —
+//! once descriptors free up — accept the connection that sat in the
+//! listen backlog the whole time.
+//!
+//! This is the only test in this binary on purpose: it clamps the
+//! process-wide fd limit, which would race any concurrently-running test
+//! that opens sockets or files.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig};
+use trustee::util::sys;
+
+/// One PUT + GET round trip over an already-connected stream.
+fn round_trip(c: &mut TcpStream, key: &[u8]) {
+    let mut buf = Vec::new();
+    proto::write_request(&mut buf, 1, proto::OP_PUT, key, b"alive");
+    proto::write_request(&mut buf, 2, proto::OP_GET, key, &[]);
+    c.write_all(&buf).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut cursor = proto::FrameCursor::new();
+    let mut rbuf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut got = 0;
+    while got < 2 {
+        if let Some(r) = cursor.next_response(&rbuf).unwrap() {
+            match got {
+                0 => assert_eq!((r.id, r.status), (1, proto::ST_OK)),
+                _ => assert_eq!((r.id, r.val.as_slice()), (2, &b"alive"[..])),
+            }
+            got += 1;
+            continue;
+        }
+        let n = c.read(&mut chunk).expect("read timed out");
+        assert!(n > 0, "server closed during round trip");
+        rbuf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+#[test]
+fn accept_recovers_from_fd_exhaustion_with_backoff() {
+    let mut saved = sys::rlimit { rlim_cur: 0, rlim_max: 0 };
+    // SAFETY: plain getrlimit into a properly-sized, owned struct.
+    let rc = unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut saved) };
+    assert_eq!(rc, 0, "getrlimit failed");
+
+    let server = KvServer::start(KvServerConfig {
+        workers: 2,
+        backend: BackendKind::Trust { shards: 2 },
+        ..Default::default()
+    });
+    // Baseline health check (also warms every lazily-created fd —
+    // reactors, wake eventfds — so the clamp below can't starve startup).
+    let mut warm = TcpStream::connect(server.addr()).unwrap();
+    round_trip(&mut warm, b"warmup-k");
+
+    // Clamp the soft limit just above the current fd population, then
+    // burn every remaining descriptor so the next accept must EMFILE.
+    let max_fd = std::fs::read_dir("/proc/self/fd")
+        .unwrap()
+        .filter_map(|e| e.ok()?.file_name().to_str()?.parse::<u64>().ok())
+        .max()
+        .unwrap();
+    let clamp = sys::rlimit { rlim_cur: max_fd + 8, rlim_max: saved.rlim_max };
+    // SAFETY: lowering the soft fd limit; restored before the test ends.
+    let rc = unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &clamp) };
+    assert_eq!(rc, 0, "setrlimit(clamp) failed");
+    let mut fillers = Vec::new();
+    loop {
+        match std::fs::File::open("/dev/null") {
+            Ok(f) => fillers.push(f),
+            Err(_) => break, // EMFILE: the table is full
+        }
+    }
+    // Free exactly one slot: the client's connect() takes it, the TCP
+    // handshake completes in the kernel backlog, and the server's
+    // accept() — needing a second descriptor — hits EMFILE.
+    fillers.pop();
+    let mut pending = TcpStream::connect(server.addr()).expect("backlog connect");
+
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics().totals().accept_throttled == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "acceptor never reported EMFILE throttling"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Recovery: free the descriptors and restore the limit; the backed-
+    // off acceptor must pick the pending connection up and serve it.
+    drop(fillers);
+    // SAFETY: restoring the limit saved above.
+    let rc = unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &saved) };
+    assert_eq!(rc, 0, "setrlimit(restore) failed");
+    round_trip(&mut pending, b"post-emfile-k");
+
+    let totals = server.metrics().totals();
+    assert!(totals.accept_throttled >= 1, "throttle metric must have fired");
+    server.stop();
+}

@@ -1,0 +1,194 @@
+//! Wire-level overload-shedding tests: a pipelined client that bursts
+//! past the shed watermark must receive its protocol's overload error —
+//! `-BUSY` (RESP), `SERVER_ERROR busy` (memcached), `ST_OVERLOADED`
+//! (binary KV) — on the still-open connection, never a silent close, and
+//! the in-order protocols must keep request/response sequence integrity
+//! through the admit/shed mix.
+//!
+//! Determinism: `dedicated: 1` puts the shard trustee on worker 0 and the
+//! connection fiber on worker 1, so every dispatch crosses a delegation
+//! channel and its completion can only land between scheduler phases —
+//! a single pipelined burst therefore drives the server-wide inflight
+//! gauge through the (tiny) watermark before the first completion
+//! returns.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig};
+use trustee::memcache::{McdServer, McdServerConfig};
+use trustee::server::{RespServer, RespServerConfig, ServerTuning};
+
+/// A watermark low enough that one pipelined burst must cross it: two
+/// cost units admitted, the third concurrent request sheds.
+fn tight_tuning() -> ServerTuning {
+    ServerTuning { shed_high: 2, shed_low: 2, ..ServerTuning::default() }
+}
+
+const BURST: usize = 100;
+
+/// Read until `buf` satisfies `done`, with a deadline (avoids hanging the
+/// suite if the server stops answering).
+fn read_until(c: &mut TcpStream, buf: &mut Vec<u8>, mut done: impl FnMut(&[u8]) -> bool) {
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut chunk = [0u8; 16 * 1024];
+    while !done(buf) {
+        let n = c.read(&mut chunk).expect("read timed out waiting for replies");
+        assert!(n > 0, "server closed the connection mid-burst (shed must answer, not drop)");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+#[test]
+fn kv_burst_past_watermark_answers_every_id_with_ok_or_overloaded() {
+    let server = KvServer::start(KvServerConfig {
+        workers: 2,
+        dedicated: 1,
+        backend: BackendKind::Trust { shards: 1 },
+        tuning: tight_tuning(),
+        ..Default::default()
+    });
+    server.prefill(8, 16);
+    let mut buf = Vec::new();
+    for id in 0..BURST as u64 {
+        proto::write_request(&mut buf, id, proto::OP_GET, &(id % 8).to_le_bytes(), &[]);
+    }
+    let mut c = TcpStream::connect(server.addr()).unwrap();
+    c.write_all(&buf).unwrap();
+
+    let mut cursor = proto::FrameCursor::new();
+    let mut rbuf = Vec::new();
+    let mut seen = vec![false; BURST];
+    let (mut ok, mut shed) = (0u64, 0u64);
+    let mut got = 0usize;
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut chunk = [0u8; 16 * 1024];
+    while got < BURST {
+        if let Some(r) = cursor.next_response(&rbuf).unwrap() {
+            assert!(!seen[r.id as usize], "duplicate response for id {}", r.id);
+            seen[r.id as usize] = true;
+            match r.status {
+                proto::ST_OK => ok += 1,
+                proto::ST_OVERLOADED => shed += 1,
+                s => panic!("unexpected status {s} for id {}", r.id),
+            }
+            got += 1;
+            continue;
+        }
+        let n = c.read(&mut chunk).expect("read timed out");
+        assert!(n > 0, "server closed mid-burst (shed must answer, not drop)");
+        rbuf.extend_from_slice(&chunk[..n]);
+    }
+    assert_eq!(ok + shed, BURST as u64);
+    assert!(ok >= 2, "the first requests under the watermark must be served (ok={ok})");
+    assert!(shed >= 1, "a {BURST}-deep burst over shed_high=2 must shed");
+    assert_eq!(server.metrics().totals().shed, shed, "shed metric must match wire replies");
+    server.stop();
+}
+
+#[test]
+fn mcd_burst_keeps_reply_order_through_the_shed_mix() {
+    let server = McdServer::start(McdServerConfig {
+        workers: 2,
+        dedicated: 1,
+        backend: BackendKind::Trust { shards: 1 },
+        tuning: tight_tuning(),
+        ..Default::default()
+    });
+    server.prefill(8, 8);
+    let mut buf = Vec::new();
+    for i in 0..BURST {
+        buf.extend_from_slice(format!("get memtier-{}\r\n", i % 8).as_bytes());
+    }
+    let mut c = TcpStream::connect(server.addr()).unwrap();
+    c.write_all(&buf).unwrap();
+
+    // Each reply is VALUE <echoed key> … END (served) or the busy line
+    // (shed). The echoed key pins every served reply to its position in
+    // the request pipeline: sequence integrity, not just totality.
+    let mut rbuf = Vec::new();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    let mut pos = 0usize;
+    for i in 0..BURST {
+        let line_end = loop {
+            if let Some(nl) = rbuf[pos..].windows(2).position(|w| w == b"\r\n") {
+                break pos + nl;
+            }
+            read_until(&mut c, &mut rbuf, |b| b[pos..].windows(2).any(|w| w == b"\r\n"));
+        };
+        let line = rbuf[pos..line_end].to_vec();
+        if line == b"SERVER_ERROR busy" {
+            shed += 1;
+            pos = line_end + 2;
+            continue;
+        }
+        let want = format!("VALUE memtier-{} 0 8", i % 8);
+        assert_eq!(
+            String::from_utf8_lossy(&line),
+            want,
+            "reply {i} out of sequence (shed mix must not reorder)"
+        );
+        // data block + END\r\n
+        let need = line_end + 2 + 8 + 2 + 5;
+        read_until(&mut c, &mut rbuf, |b| b.len() >= need);
+        assert_eq!(&rbuf[need - 5..need], b"END\r\n");
+        pos = need;
+        ok += 1;
+    }
+    assert_eq!(ok + shed, BURST as u64);
+    assert!(ok >= 2, "requests under the watermark must be served (ok={ok})");
+    assert!(shed >= 1, "a {BURST}-deep burst over shed_high=2 must shed");
+    assert_eq!(server.metrics().totals().shed, shed);
+    server.stop();
+}
+
+#[test]
+fn resp_incr_burst_sheds_with_busy_and_preserves_sequence() {
+    let server = RespServer::start(RespServerConfig {
+        workers: 2,
+        dedicated: 1,
+        backend: BackendKind::Trust { shards: 1 },
+        tuning: tight_tuning(),
+        ..Default::default()
+    });
+    let mut buf = Vec::new();
+    for _ in 0..BURST {
+        buf.extend_from_slice(b"*2\r\n$4\r\nINCR\r\n$3\r\nctr\r\n");
+    }
+    let mut c = TcpStream::connect(server.addr()).unwrap();
+    c.write_all(&buf).unwrap();
+
+    // Served INCRs return :1, :2, :3, … — shed ones return -BUSY and do
+    // NOT advance the counter, so the integer subsequence must be exactly
+    // 1..=ok in order. Any reordering or double-execution breaks it.
+    let mut rbuf = Vec::new();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    let mut pos = 0usize;
+    for i in 0..BURST {
+        read_until(&mut c, &mut rbuf, |b| b[pos..].windows(2).any(|w| w == b"\r\n"));
+        let nl = pos + rbuf[pos..].windows(2).position(|w| w == b"\r\n").unwrap();
+        let line = &rbuf[pos..nl];
+        match line.first().copied() {
+            Some(b':') => {
+                let n: u64 = std::str::from_utf8(&line[1..]).unwrap().parse().unwrap();
+                assert_eq!(n, ok + 1, "reply {i}: counter out of sequence");
+                ok += 1;
+            }
+            Some(b'-') => {
+                assert!(
+                    line.starts_with(b"-BUSY"),
+                    "reply {i}: unexpected error {:?}",
+                    String::from_utf8_lossy(line)
+                );
+                shed += 1;
+            }
+            other => panic!("reply {i}: unexpected type byte {other:?}"),
+        }
+        pos = nl + 2;
+    }
+    assert_eq!(ok + shed, BURST as u64);
+    assert!(ok >= 2, "requests under the watermark must be served (ok={ok})");
+    assert!(shed >= 1, "a {BURST}-deep burst over shed_high=2 must shed");
+    assert_eq!(server.metrics().totals().shed, shed);
+    server.stop();
+}

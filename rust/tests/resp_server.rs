@@ -20,6 +20,7 @@ fn start(backend: BackendKind, net: NetPolicy, workers: usize, dedicated: usize)
         budget_bytes: 0,
         net,
         addr: "127.0.0.1:0".into(),
+        ..Default::default()
     })
 }
 

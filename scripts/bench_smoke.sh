@@ -32,6 +32,12 @@ cargo bench --bench eviction_pressure -- --json --quick --ops 1500 \
     > "$OUT_DIR/BENCH_eviction_pressure.json"
 echo "wrote BENCH_eviction_pressure.json" >&2
 
+# E22 degradation curve, CI-sized: goodput + shed rate at two offered-
+# concurrency levels, watermarked vs unlimited admission.
+cargo bench --bench overload_degradation -- --json --quick --ops 800 \
+    > "$OUT_DIR/BENCH_overload_degradation.json"
+echo "wrote BENCH_overload_degradation.json" >&2
+
 # E21 connection-scale sweep, CI-sized rungs (the full ladder is
 # 1000,10000,100000 — see EXPERIMENTS.md E21). Cells where io_uring is
 # unavailable fall back to epoll with a logged reason and still emit
@@ -42,7 +48,7 @@ cargo bench --bench net_idle_conns -- --sweep --json \
 echo "wrote BENCH_net_idle_conns.json" >&2
 
 # Sanity: every file must be non-empty JSON (first byte '{').
-for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json BENCH_eviction_pressure.json BENCH_net_idle_conns.json; do
+for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json BENCH_eviction_pressure.json BENCH_overload_degradation.json BENCH_net_idle_conns.json; do
     head -c 1 "$OUT_DIR/$f" | grep -q '{' || { echo "bad JSON in $f" >&2; exit 1; }
 done
 echo "bench smoke OK" >&2
