@@ -23,7 +23,13 @@
 //!
 //!   cargo bench --bench net_idle_conns -- --sweep --json \
 //!       [--conns 1000,10000,100000] [--ops N] [--active-pct P] \
-//!       [--policies busy,epoll,uring]
+//!       [--policies busy,epoll,uring,uring-data]
+//!
+//! In the sweep, `uring` pins the *readiness* plane (poll wake + `read`)
+//! and `uring-data` pins the *data* plane (provided-buffer multishot
+//! RECV + ring SEND; skipped with a note on kernels without
+//! `IORING_REGISTER_PBUF_RING`), so a ladder run distinguishes the two
+//! planes' idle-scale behaviour in one JSON object.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -159,67 +165,111 @@ fn run_sweep(args: &Args) {
     let ops: u64 = args.get("ops", 2_000);
     let active_pct: usize = args.get("active-pct", 1);
     let ladder = args.get_str("conns", "1000,10000,100000");
-    let policy_spec = args.get_str("policies", "busy,epoll,uring");
-    let policies: Vec<NetPolicy> = policy_spec
+    let policy_spec = args.get_str("policies", "busy,epoll,uring,uring-data");
+    // (policy, pin data plane). In sweep mode plain `uring` pins the
+    // readiness plane so the `uring-data` cell is a true A/B, not
+    // whatever the kernel happens to auto-engage.
+    let policies: Vec<(NetPolicy, bool)> = policy_spec
         .split(',')
-        .map(|s| NetPolicy::from_spec(s.trim()).unwrap_or_else(|e| panic!("--policies: {e}")))
+        .map(|s| match s.trim() {
+            "uring-data" => (NetPolicy::IoUring, true),
+            other => (
+                NetPolicy::from_spec(other).unwrap_or_else(|e| panic!("--policies: {e}")),
+                false,
+            ),
+        })
         .collect();
+    let pbuf_ok = trustee::runtime::uring::probe_pbuf().is_ok();
+    let dataplane_orig = trustee::runtime::uring::dataplane_enabled();
     let budget = conn_budget();
     let mut rows = Vec::new();
     let mut cells: Vec<String> = Vec::new();
-    for &net in &policies {
+    for &(net, want_data) in &policies {
+        if want_data && !pbuf_ok {
+            eprintln!("sweep: skipping uring-data cells (PBUF_RING unavailable on this kernel)");
+            continue;
+        }
+        let label: String = if net == NetPolicy::IoUring {
+            if want_data { "uring+pbuf".into() } else { "uring".into() }
+        } else {
+            net.label().into()
+        };
         for rung in ladder.split(',') {
             let requested: usize = rung.trim().parse().expect("bad --conns entry");
             let conns = requested.min(budget);
             if conns < requested {
+                // Each loopback connection costs two fds in this process
+                // (client end + server end), plus fixed headroom.
                 eprintln!(
                     "sweep: clamped {requested} -> {conns} connections \
-                     (process fd budget; raise ulimit -n for the full rung)"
+                     (process fd budget {budget}; this rung needs ulimit -n >= {})",
+                    requested * 2 + 256
                 );
             }
             let active = (conns * active_pct / 100).max(1);
+            if net == NetPolicy::IoUring {
+                trustee::runtime::uring::set_dataplane_enabled(want_data);
+            }
             let (opened, per_op, uring) = sweep_cell(net, conns, active, ops);
+            if net == NetPolicy::IoUring {
+                trustee::runtime::uring::set_dataplane_enabled(dataplane_orig);
+            }
             let sqes_per_enter = if uring.enters > 0 {
                 uring.sqes_submitted as f64 / uring.enters as f64
             } else {
                 0.0
             };
-            eprintln!(
-                "done {} conns={opened} active={active}: {} per op",
-                net.label(),
-                fmt_ns(per_op)
-            );
+            eprintln!("done {label} conns={opened} active={active}: {} per op", fmt_ns(per_op));
             rows.push(vec![
-                net.label().into(),
+                label.clone(),
                 format!("{opened} (req {requested})"),
                 active.to_string(),
                 fmt_ns(per_op),
-                if uring.enters > 0 {
+                if want_data {
+                    format!(
+                        "{sqes_per_enter:.1} sqes/enter, {} recv-cqe, {} recycled",
+                        uring.recv_cqes, uring.pbuf_recycled
+                    )
+                } else if uring.enters > 0 {
                     format!("{sqes_per_enter:.1} sqes/enter")
                 } else {
                     String::new()
                 },
             ]);
             cells.push(format!(
-                "{{\"policy\":\"{}\",\"conns_requested\":{requested},\"conns\":{opened},\
+                "{{\"policy\":\"{label}\",\"plane\":\"{}\",\
+                 \"conns_requested\":{requested},\"conns\":{opened},\
                  \"active\":{active},\"ops\":{ops},\"per_op_ns\":{per_op:.1},\
                  \"uring_enters\":{},\"uring_sqes\":{},\"uring_cqes\":{},\
                  \"uring_sq_full_flushes\":{},\"uring_enter_waits\":{},\
-                 \"uring_max_sqes_per_enter\":{},\"sqes_per_enter\":{sqes_per_enter:.2}}}",
-                net.label(),
+                 \"uring_max_sqes_per_enter\":{},\"sqes_per_enter\":{sqes_per_enter:.2},\
+                 \"recv_cqes\":{},\"pbuf_recycled\":{},\"enobufs\":{},\"send_sqes\":{},\
+                 \"short_send_continuations\":{}}}",
+                if net != NetPolicy::IoUring {
+                    ""
+                } else if want_data {
+                    "data"
+                } else {
+                    "readiness"
+                },
                 uring.enters,
                 uring.sqes_submitted,
                 uring.cqes_harvested,
                 uring.sq_full_flushes,
                 uring.enter_waits,
                 uring.max_sqes_per_enter,
+                uring.recv_cqes,
+                uring.pbuf_recycled,
+                uring.enobufs,
+                uring.send_sqes,
+                uring.short_send_continuations,
             ));
         }
     }
     if json {
         println!(
             "{{\"bench\":\"net_idle_conns\",\"mode\":\"sweep\",\"active_pct\":{active_pct},\
-             \"fd_budget\":{budget},\"cells\":[{}]}}",
+             \"fd_budget\":{budget},\"pbuf_capable\":{pbuf_ok},\"cells\":[{}]}}",
             cells.join(",")
         );
     } else {

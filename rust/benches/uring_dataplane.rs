@@ -1,0 +1,253 @@
+//! E23 — io_uring data plane vs readiness plane: throughput and
+//! syscalls/op for the same pipelined GET workload under
+//! `NetPolicy::IoUring`, A/B'd inside one process via the data-plane
+//! kill switch ([`trustee::runtime::uring::set_dataplane_enabled`];
+//! servers started after the flip observe it).
+//!
+//! The readiness cell is PR 8's plane: parked fibers woken by ring
+//! polls, then `read()`/`write()` per wake. The data cell is this PR's
+//! plane: multishot RECV into provided buffers and ring-submitted SEND,
+//! so a registered connection's steady state makes **zero** read/write
+//! syscalls — the bench asserts exactly that via the server-side syscall
+//! counters, plus the buffer-recycling invariant (`pbuf_recycled` ≈
+//! RECV completions that carried a buffer).
+//!
+//! Usage: cargo bench --bench uring_dataplane -- \
+//!          [--ops N] [--conns N] [--pipeline N] [--json]
+//!
+//! `--json` emits one machine-readable object (captured by
+//! `scripts/bench_smoke.sh` as `BENCH_uring_dataplane.json`). On kernels
+//! without io_uring or without `IORING_REGISTER_PBUF_RING` the missing
+//! cells are skipped with a visible note and the bench still exits 0.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use trustee::bench::print_table;
+use trustee::kvstore::{proto, BackendKind, KvServer, KvServerConfig, NetPolicy};
+use trustee::runtime::uring::{self, UringStats};
+use trustee::server::netfiber;
+use trustee::util::cli::Args;
+use trustee::util::stats::fmt_ns;
+
+/// One pipelined burst: `depth` GETs written back to back, then all
+/// `depth` responses drained. Returns bytes of value payload observed
+/// (a cheap correctness signal: prefilled values are 16 bytes).
+fn burst(c: &mut TcpStream, rbuf: &mut Vec<u8>, chunk: &mut [u8], id: u64, depth: u64) -> usize {
+    let mut wbuf = Vec::new();
+    for k in 0..depth {
+        let key = trustee::kvstore::key_bytes((id + k) % 64);
+        proto::write_request(&mut wbuf, id + k, proto::OP_GET, &key, &[]);
+    }
+    c.write_all(&wbuf).unwrap();
+    rbuf.clear();
+    let mut cursor = proto::FrameCursor::new();
+    let mut got = 0;
+    let mut val_bytes = 0;
+    while got < depth {
+        if let Some(r) = cursor.next_response(rbuf).unwrap() {
+            assert_eq!(r.status, proto::ST_OK, "prefilled GET must hit");
+            val_bytes += r.val.len();
+            got += 1;
+            continue;
+        }
+        let n = c.read(chunk).unwrap();
+        assert!(n > 0, "server closed mid-burst");
+        rbuf.extend_from_slice(&chunk[..n]);
+    }
+    val_bytes
+}
+
+struct Cell {
+    plane: &'static str,
+    ops: u64,
+    ops_per_sec: f64,
+    per_op_ns: f64,
+    /// Server-side `read()`/`write()` syscalls per op (netfiber counters;
+    /// this bench is the only traffic in the process, so deltas are
+    /// attributable).
+    reads_per_op: f64,
+    writes_per_op: f64,
+    uring: UringStats,
+}
+
+fn run_cell(dataplane: bool, conns: usize, ops: u64, depth: u64) -> Cell {
+    uring::set_dataplane_enabled(dataplane);
+    let server = KvServer::start(KvServerConfig {
+        workers: 2,
+        backend: BackendKind::Trust { shards: 2 },
+        net: NetPolicy::IoUring,
+        ..Default::default()
+    });
+    server.prefill(64, 16);
+    let mut pool: Vec<TcpStream> = (0..conns)
+        .map(|_| {
+            let c = TcpStream::connect(server.addr()).unwrap();
+            c.set_nodelay(true).ok();
+            c
+        })
+        .collect();
+    let mut rbuf = Vec::new();
+    let mut chunk = [0u8; 64 * 1024];
+    let bursts = ops / depth;
+    let warmup = (bursts / 10).max(4);
+    for i in 0..warmup {
+        let c = &mut pool[(i as usize) % conns];
+        burst(c, &mut rbuf, &mut chunk, i * depth, depth);
+    }
+    let reads0 = netfiber::read_syscalls();
+    let writes0 = netfiber::write_syscalls();
+    let stats0 = server.uring_stats();
+    let t0 = std::time::Instant::now();
+    for i in 0..bursts {
+        let c = &mut pool[(i as usize) % conns];
+        burst(c, &mut rbuf, &mut chunk, (1u64 << 32) | (i * depth), depth);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let done = bursts * depth;
+    let reads = netfiber::read_syscalls() - reads0;
+    let writes = netfiber::write_syscalls() - writes0;
+    let mut stats = server.uring_stats();
+    drop(pool);
+    server.stop();
+    // Report the measured window's deltas, not process totals (the two
+    // cells share one process).
+    stats.enters -= stats0.enters;
+    stats.sqes_submitted -= stats0.sqes_submitted;
+    stats.cqes_harvested -= stats0.cqes_harvested;
+    stats.recv_cqes -= stats0.recv_cqes;
+    stats.pbuf_recycled -= stats0.pbuf_recycled;
+    stats.enobufs -= stats0.enobufs;
+    stats.send_sqes -= stats0.send_sqes;
+    stats.short_send_continuations -= stats0.short_send_continuations;
+    Cell {
+        plane: if dataplane { "data (pbuf+multishot)" } else { "readiness (poll+read)" },
+        ops: done,
+        ops_per_sec: done as f64 / elapsed,
+        per_op_ns: elapsed / done as f64 * 1e9,
+        reads_per_op: reads as f64 / done as f64,
+        writes_per_op: writes as f64 / done as f64,
+        uring: stats,
+    }
+}
+
+fn json_cell(c: &Cell) -> String {
+    format!(
+        "{{\"plane\":\"{}\",\"ops\":{},\"ops_per_sec\":{:.0},\"per_op_ns\":{:.1},\
+         \"read_syscalls_per_op\":{:.4},\"write_syscalls_per_op\":{:.4},\
+         \"uring_enters\":{},\"uring_sqes\":{},\"uring_cqes\":{},\
+         \"recv_cqes\":{},\"pbuf_recycled\":{},\"enobufs\":{},\
+         \"send_sqes\":{},\"short_send_continuations\":{}}}",
+        c.plane,
+        c.ops,
+        c.ops_per_sec,
+        c.per_op_ns,
+        c.reads_per_op,
+        c.writes_per_op,
+        c.uring.enters,
+        c.uring.sqes_submitted,
+        c.uring.cqes_harvested,
+        c.uring.recv_cqes,
+        c.uring.pbuf_recycled,
+        c.uring.enobufs,
+        c.uring.send_sqes,
+        c.uring.short_send_continuations,
+    )
+}
+
+fn main() {
+    let args = Args::from_env();
+    let json = args.flag("json");
+    let ops: u64 = args.get("ops", 40_000);
+    let conns: usize = args.get("conns", 4);
+    let depth: u64 = args.get("pipeline", 16);
+
+    if let Err(e) = uring::probe() {
+        if json {
+            println!("{{\"bench\":\"uring_dataplane\",\"skipped\":\"io_uring unavailable: {e}\"}}");
+        } else {
+            eprintln!("SKIP uring_dataplane: io_uring unavailable ({e})");
+        }
+        return;
+    }
+    let pbuf = match uring::probe_pbuf() {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("note: PBUF_RING unavailable ({e}); running the readiness cell only");
+            false
+        }
+    };
+    let orig = uring::dataplane_enabled();
+    if !orig {
+        eprintln!("note: data plane disabled by kill switch (TRUSTEE_URING_NO_PBUF)");
+    }
+
+    let readiness = run_cell(false, conns, ops, depth);
+    let data = if pbuf && orig { Some(run_cell(true, conns, ops, depth)) } else { None };
+    uring::set_dataplane_enabled(orig);
+
+    if let Some(d) = &data {
+        // Mechanism invariants — these must hold wherever the plane runs,
+        // independent of machine speed (throughput is reported, not
+        // asserted, to keep CI runners honest but green).
+        assert!(d.uring.recv_cqes > 0, "data cell never saw a RECV CQE: {:?}", d.uring);
+        assert!(d.uring.send_sqes > 0, "data cell never staged a SEND SQE: {:?}", d.uring);
+        assert_eq!(
+            (d.reads_per_op, d.writes_per_op),
+            (0.0, 0.0),
+            "registered data-plane connections must make no read/write syscalls"
+        );
+        // Every consumed buffer comes back: the only RECV CQEs that carry
+        // no buffer are EOF/ENOBUFS/disarm edges, a handful per
+        // connection, so the gap must stay a small constant — a widening
+        // gap is a pool leak.
+        let gap = d.uring.recv_cqes - d.uring.pbuf_recycled;
+        assert!(
+            gap <= d.uring.enobufs + (conns as u64) * 4 + 64,
+            "provided-buffer leak: {} RECV CQEs vs {} recycled ({:?})",
+            d.uring.recv_cqes,
+            d.uring.pbuf_recycled,
+            d.uring
+        );
+    }
+
+    if json {
+        let mut cells = vec![json_cell(&readiness)];
+        cells.extend(data.as_ref().map(json_cell));
+        println!(
+            "{{\"bench\":\"uring_dataplane\",\"conns\":{conns},\"pipeline\":{depth},\
+             \"pbuf_capable\":{pbuf},\"cells\":[{}]}}",
+            cells.join(",")
+        );
+        return;
+    }
+
+    let mut rows = Vec::new();
+    for c in std::iter::once(&readiness).chain(data.as_ref()) {
+        rows.push(vec![
+            c.plane.into(),
+            format!("{:.0}", c.ops_per_sec),
+            fmt_ns(c.per_op_ns),
+            format!("{:.3} rd / {:.3} wr", c.reads_per_op, c.writes_per_op),
+            format!(
+                "{} recv-cqe, {} recycled, {} enobufs, {} send-sqe",
+                c.uring.recv_cqes, c.uring.pbuf_recycled, c.uring.enobufs, c.uring.send_sqes
+            ),
+        ]);
+    }
+    print_table(
+        &format!(
+            "E23: io_uring readiness vs data plane \
+             ({conns} conns, pipeline {depth}, {ops} GETs per cell)"
+        ),
+        &["plane", "ops/s", "per-op", "syscalls/op", "data-plane counters"],
+        &rows,
+    );
+    if let Some(d) = &data {
+        println!(
+            "data/readiness throughput ratio = {:.2}x (expect >= 1.0 on pbuf-capable kernels)",
+            d.ops_per_sec / readiness.ops_per_sec
+        );
+    } else {
+        println!("data plane not run (kernel or kill switch); readiness cell only");
+    }
+}

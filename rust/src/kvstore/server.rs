@@ -230,6 +230,12 @@ impl KvServer {
         self.core.uring_stats()
     }
 
+    /// The settled network plane (requested vs resolved policy, data-
+    /// plane capability, fallback reason).
+    pub fn net_info(&self) -> &crate::server::netfiber::NetInfo {
+        self.core.net_info()
+    }
+
     /// Item-store counters (items, bytes, evictions, expirations, plus
     /// the value-slab pool hit/miss and fragmentation gauges).
     pub fn store_stats(&self) -> crate::kvstore::store::StoreStats {

@@ -123,7 +123,11 @@ fn kv_server(args: &Args) {
         server.prefill(prefill, args.get("val-len", 16));
         println!("prefilled {prefill} keys");
     }
-    println!("kv server listening on {} (ctrl-c to stop)", server.addr());
+    println!(
+        "kv server listening on {} ({}) (ctrl-c to stop)",
+        server.addr(),
+        server.net_info().summary()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -183,7 +187,11 @@ fn mcd_server(args: &Args) {
         server.prefill(prefill, args.get("val-len", 16));
         println!("prefilled {prefill} items");
     }
-    println!("mini-memcached listening on {} (ctrl-c to stop)", server.addr());
+    println!(
+        "mini-memcached listening on {} ({}) (ctrl-c to stop)",
+        server.addr(),
+        server.net_info().summary()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -235,8 +243,9 @@ fn resp_server(args: &Args) {
         println!("prefilled {prefill} keys");
     }
     println!(
-        "resp (redis-protocol) server listening on {} (ctrl-c to stop)",
-        server.addr()
+        "resp (redis-protocol) server listening on {} ({}) (ctrl-c to stop)",
+        server.addr(),
+        server.net_info().summary()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

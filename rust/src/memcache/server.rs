@@ -361,6 +361,18 @@ impl McdServer {
         self.core.hot_path_stats()
     }
 
+    /// io_uring submission/completion counters across all workers
+    /// (zeros unless running under `NetPolicy::IoUring`; diagnostic).
+    pub fn uring_stats(&self) -> crate::runtime::uring::UringStats {
+        self.core.uring_stats()
+    }
+
+    /// The settled network plane (requested vs resolved policy, data-
+    /// plane capability, fallback reason).
+    pub fn net_info(&self) -> &crate::server::netfiber::NetInfo {
+        self.core.net_info()
+    }
+
     /// Populate the table with `n` items of `val_len` bytes.
     pub fn prefill(&self, n: u64, val_len: usize) {
         let kv = self.backend.clone();

@@ -29,24 +29,53 @@
 //!   `Acquire`, copy CQEs out by value, then store the CQ head with
 //!   `Release` so the kernel may reuse the entries.
 //!
+//! ## Two planes: readiness and data
+//!
+//! The reactor runs one of two planes per connection (DESIGN.md,
+//! "Kernel-boundary batching"):
+//!
+//! - **Readiness plane** (always available): `POLL_ADD` parks as above;
+//!   payload bytes move through the engine's ordinary non-blocking
+//!   `read`/`write` calls once a fiber is woken.
+//! - **Data plane** (kernels with `IORING_REGISTER_PBUF_RING`): the
+//!   worker registers a provided-buffer ring ([`PbufRing`]) and each
+//!   connection arms one **multishot `RECV`** SQE with
+//!   `IOSQE_BUFFER_SELECT` — arriving bytes land in kernel-picked pool
+//!   buffers and surface as CQEs with **no `read` syscall**. Responses
+//!   go out as ring-submitted `SEND` SQEs (short writes continue with a
+//!   follow-up SQE). Idle connections hold no committed inbuf.
+//!
+//! ## Buffer-ownership contract (data plane)
+//!
+//! A pool buffer is **kernel-owned** from the moment it is published at
+//! the buf_ring tail until a RECV CQE names its `bid`; it is then
+//! **engine-owned** (the connection fiber parses it, in place when a
+//! whole frame landed) until [`UringReactor::recv_recycle`] republishes
+//! it. Backpressure is *withheld replenishment*: a fiber over its
+//! `MAX_INBUF` backlog stops taking/recycling, the pool drains, and the
+//! kernel's `ENOBUFS` (counted, re-armed on the next recycle) stops the
+//! flow without a syscall per stall. SEND SQEs reference only
+//! reactor-owned buffers ([`ConnState::send_active`], frozen while an
+//! SQE is in flight), never fiber stack memory, and a closing
+//! connection's slot is finalized only after its last SEND CQE lands.
+//!
 //! ## SQE lifetime / user_data
 //!
-//! Every SQE this reactor submits is self-contained — `POLL_ADD` and
-//! `ACCEPT` (with null address buffers) carry **no userspace buffer**, so
-//! there is no buffer to keep alive while an operation is in flight and
-//! no ownership handoff to get wrong. Connection payload bytes keep
-//! moving through the engine's ordinary non-blocking `read`/`write`
-//! calls once a fiber is woken. `user_data` carries a kind tag in the
-//! top byte and the payload ([`FiberId`] or accept token) below it; a
-//! parked fiber is woken only while it is present in the `waiters` set,
-//! so a stale CQE (shutdown swept the fiber first, or the fd was
-//! recycled) is ignored rather than waking an unrelated fiber. Wake-ups
-//! may still be spurious — every fd waiter re-checks its socket.
+//! `POLL_ADD` and `ACCEPT` (with null address buffers) carry **no
+//! userspace buffer**; `RECV` borrows kernel-selected pool buffers and
+//! `SEND` borrows the frozen `send_active` vector per the contract
+//! above. `user_data` carries a kind tag in the top byte and the payload
+//! ([`FiberId`], accept token, or generation-tagged connection token)
+//! below it; a parked fiber is woken only while it is present in the
+//! `waiters` set, and connection CQEs are dropped (their buffers
+//! recycled) when the slot generation no longer matches, so a stale CQE
+//! never wakes an unrelated fiber or corrupts a recycled slot. Wake-ups
+//! may still be spurious — every waiter re-checks its socket/queues.
 
 use crate::fiber::{self, FiberId};
 use crate::util::sys;
 use std::collections::{HashSet, VecDeque};
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU32, Ordering};
 use std::sync::OnceLock;
 
 /// SQ entries per worker ring (CQ gets 2x). Bounds SQEs *staged per
@@ -61,6 +90,34 @@ const UD_PAYLOAD_MASK: u64 = (1u64 << UD_KIND_SHIFT) - 1;
 const KIND_POLL: u64 = 1;
 const KIND_ACCEPT: u64 = 2;
 const KIND_WAKE: u64 = 3;
+const KIND_RECV: u64 = 4;
+const KIND_SEND: u64 = 5;
+
+/// Connection-op payload layout: slot index in the low bits, slot
+/// generation above it. A recycled slot bumps its generation, so a late
+/// CQE from the slot's previous life fails the generation check and is
+/// dropped (its provided buffer recycled) instead of corrupting the new
+/// occupant.
+const CONN_TOKEN_BITS: u32 = 24;
+const CONN_TOKEN_MASK: u64 = (1u64 << CONN_TOKEN_BITS) - 1;
+
+fn conn_ud(kind: u64, gen: u32, token: usize) -> u64 {
+    debug_assert!((token as u64) <= CONN_TOKEN_MASK);
+    (kind << UD_KIND_SHIFT) | ((gen as u64) << CONN_TOKEN_BITS) | (token as u64 & CONN_TOKEN_MASK)
+}
+
+fn conn_ud_split(payload: u64) -> (u32, usize) {
+    (((payload >> CONN_TOKEN_BITS) & u32::MAX as u64) as u32, (payload & CONN_TOKEN_MASK) as usize)
+}
+
+/// Provided-buffer ring geometry per worker: `PBUF_ENTRIES` buffers of
+/// `PBUF_BUF_SZ` bytes each (4 MiB total). One buffer group per ring.
+const PBUF_ENTRIES: u16 = 256;
+const PBUF_BUF_SZ: usize = 16 * 1024;
+const PBUF_BGID: u16 = 0;
+
+/// `-ENOBUFS`: the kernel found the provided-buffer pool empty.
+const ENOBUFS_ERR: i32 = 105;
 
 /// Submission/completion counters (metrics + the batching contract:
 /// `enters` grows by at most one per scheduler loop regardless of how
@@ -80,6 +137,20 @@ pub struct UringStats {
     pub enter_waits: u64,
     /// Largest SQE batch a single enter carried.
     pub max_sqes_per_enter: u64,
+    /// Data-plane RECV completions (each delivered a provided buffer,
+    /// an EOF, or a pool-exhaustion notice) — `> 0` proves the data
+    /// plane actually ran.
+    pub recv_cqes: u64,
+    /// Provided buffers returned to the pool after the engine consumed
+    /// them (steady state: ≈ buffers consumed; a widening gap is a leak).
+    pub pbuf_recycled: u64,
+    /// RECV completions that found the pool empty (`-ENOBUFS`):
+    /// backpressure-by-withheld-replenishment engaging at the wire.
+    pub enobufs: u64,
+    /// Data-plane SEND SQEs staged.
+    pub send_sqes: u64,
+    /// Follow-up SEND SQEs staged because a completion wrote short.
+    pub short_send_continuations: u64,
 }
 
 impl UringStats {
@@ -90,6 +161,11 @@ impl UringStats {
         self.sq_full_flushes += o.sq_full_flushes;
         self.enter_waits += o.enter_waits;
         self.max_sqes_per_enter = self.max_sqes_per_enter.max(o.max_sqes_per_enter);
+        self.recv_cqes += o.recv_cqes;
+        self.pbuf_recycled += o.pbuf_recycled;
+        self.enobufs += o.enobufs;
+        self.send_sqes += o.send_sqes;
+        self.short_send_continuations += o.short_send_continuations;
     }
 }
 
@@ -106,6 +182,208 @@ struct AcceptState {
     /// `IORING_CQE_F_MORE` disarms it; `accept_take` re-arms.)
     armed: bool,
     closed: bool,
+}
+
+/// The worker's registered provided-buffer ring: a shared
+/// `io_uring_buf` array the kernel pops buffers from (head, kernel-side)
+/// and we republish consumed buffers to (tail, published with `Release`
+/// through entry 0's `resv` word — the kernel's
+/// `io_uring_buf_ring.tail` union member), plus the buffer slab itself.
+struct PbufRing {
+    ring_ptr: *mut sys::io_uring_buf,
+    ring_len: usize,
+    slab_ptr: *mut u8,
+    slab_len: usize,
+    entries: u16,
+    mask: u16,
+    /// Local tail mirror; the shared tail word is store-only from our
+    /// side (the kernel never writes it).
+    tail_local: u16,
+}
+
+impl PbufRing {
+    /// Map the buf_ring + slab and register the ring with the kernel.
+    fn new(ring_fd: i32) -> Result<PbufRing, String> {
+        let entries = PBUF_ENTRIES;
+        let ring_len = entries as usize * std::mem::size_of::<sys::io_uring_buf>();
+        // SAFETY: fresh anonymous mapping; checked against MAP_FAILED
+        // before use.
+        let ring_ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                ring_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_PRIVATE | sys::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if ring_ptr == sys::MAP_FAILED {
+            return Err(format!("pbuf ring mmap: {}", std::io::Error::last_os_error()));
+        }
+        let reg = sys::io_uring_buf_reg {
+            ring_addr: ring_ptr as u64,
+            ring_entries: entries as u32,
+            bgid: PBUF_BGID,
+            flags: 0,
+            resv: [0; 3],
+        };
+        // SAFETY: ring_fd is a live io_uring fd; reg is a live
+        // io_uring_buf_reg naming the mapping created above (nr_args = 1
+        // per the PBUF_RING register contract).
+        let rc = unsafe {
+            sys::io_uring_register(
+                ring_fd,
+                sys::IORING_REGISTER_PBUF_RING,
+                &reg as *const sys::io_uring_buf_reg as *const sys::c_void,
+                1,
+            )
+        };
+        if rc < 0 {
+            let e = std::io::Error::last_os_error();
+            // SAFETY: ring_ptr is the live mapping created above; unmapped
+            // exactly once on this early-exit path.
+            unsafe { sys::munmap(ring_ptr, ring_len) };
+            return Err(format!("IORING_REGISTER_PBUF_RING: {e} (kernel lacks pbuf rings?)"));
+        }
+        let slab_len = entries as usize * PBUF_BUF_SZ;
+        // SAFETY: fresh anonymous mapping; checked against MAP_FAILED.
+        let slab_ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                slab_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_PRIVATE | sys::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if slab_ptr == sys::MAP_FAILED {
+            let e = std::io::Error::last_os_error();
+            // SAFETY: unregister the ring we just registered and release
+            // its mapping, each exactly once on this early-exit path.
+            unsafe {
+                sys::io_uring_register(
+                    ring_fd,
+                    sys::IORING_UNREGISTER_PBUF_RING,
+                    &reg as *const sys::io_uring_buf_reg as *const sys::c_void,
+                    1,
+                );
+                sys::munmap(ring_ptr, ring_len);
+            }
+            return Err(format!("pbuf slab mmap: {e}"));
+        }
+        let mut p = PbufRing {
+            ring_ptr: ring_ptr as *mut sys::io_uring_buf,
+            ring_len,
+            slab_ptr: slab_ptr as *mut u8,
+            slab_len,
+            entries,
+            mask: entries - 1,
+            tail_local: 0,
+        };
+        // Hand the whole pool to the kernel up front.
+        for bid in 0..entries {
+            p.provide(bid);
+        }
+        Ok(p)
+    }
+
+    /// The shared ring tail: entry 0's `resv` halfword (the kernel's
+    /// `io_uring_buf_ring.tail` union member).
+    fn tail_word(&self) -> *const AtomicU16 {
+        // SAFETY: ring_ptr is the live ring mapping; the resv field of
+        // entry 0 is 2-byte aligned (offset 14 of a 16-byte struct), so
+        // the AtomicU16 cast is sound. The kernel only reads this word.
+        unsafe { std::ptr::addr_of!((*self.ring_ptr).resv) as *const AtomicU16 }
+    }
+
+    /// Publish buffer `bid` at the ring tail (ownership returns to the
+    /// kernel the instant the tail store lands).
+    fn provide(&mut self, bid: u16) {
+        debug_assert!(bid < self.entries);
+        let idx = (self.tail_local & self.mask) as usize;
+        // SAFETY: idx < entries keeps the entry write inside the ring
+        // mapping and bid < entries keeps the address inside the slab;
+        // the slot below the unpublished tail is ours exclusively. The
+        // `resv` field is deliberately left untouched — in entry 0 it is
+        // the shared tail word.
+        unsafe {
+            let e = self.ring_ptr.add(idx);
+            (*e).addr = self.slab_ptr.add(bid as usize * PBUF_BUF_SZ) as u64;
+            (*e).len = PBUF_BUF_SZ as u32;
+            (*e).bid = bid;
+        }
+        self.tail_local = self.tail_local.wrapping_add(1);
+        // SAFETY: tail_word points into the live mapping; the Release
+        // store publishes the entry writes above to the kernel's Acquire.
+        unsafe { (*self.tail_word()).store(self.tail_local, Ordering::Release) };
+    }
+
+    /// Start of buffer `bid` in the slab (valid for `PBUF_BUF_SZ` bytes).
+    fn buf_ptr(&self, bid: u16) -> *const u8 {
+        debug_assert!(bid < self.entries);
+        // SAFETY: bid < entries keeps the pointer inside the slab mapping.
+        unsafe { self.slab_ptr.add(bid as usize * PBUF_BUF_SZ) }
+    }
+}
+
+/// One RECV completion's worth of bytes awaiting the connection fiber.
+/// `owns` is false only for the front half of a fault-split segment —
+/// the buffer goes back to the pool once the owning half is consumed.
+struct RecvSeg {
+    bid: u16,
+    off: u32,
+    len: u32,
+    owns: bool,
+}
+
+/// Per-connection data-plane state (multishot RECV + ring-batched SEND).
+struct ConnState {
+    fd: i32,
+    gen: u32,
+    /// Kernel-filled segments the fiber has not yet taken. Withholding
+    /// takes (and hence recycles) is the backpressure mechanism.
+    queue: VecDeque<RecvSeg>,
+    parked: Option<FiberId>,
+    /// Is the multishot RECV SQE still armed in the kernel?
+    recv_armed: bool,
+    eof: bool,
+    recv_err: Option<i32>,
+    /// Hit `-ENOBUFS`; re-armed from `recv_recycle` (not at park time)
+    /// so an empty pool cannot spin arm→ENOBUFS→arm.
+    starved: bool,
+    /// Bytes an in-flight (or about-to-be-staged) SEND SQE references.
+    /// **Frozen** (never mutated, never reallocated) while
+    /// `send_inflight` — the kernel reads it concurrently.
+    send_active: Vec<u8>,
+    /// Bytes of `send_active` already acknowledged by SEND CQEs.
+    send_acked: usize,
+    send_inflight: bool,
+    /// Overflow bytes queued while a SEND was in flight; swapped into
+    /// `send_active` when it settles.
+    send_next: Vec<u8>,
+    send_err: bool,
+    /// Fiber has detached; finalize the slot (close fd, recycle queued
+    /// buffers) once the in-flight SEND settles.
+    closing: bool,
+}
+
+impl ConnState {
+    fn send_pending(&self) -> usize {
+        (self.send_active.len() - self.send_acked) + self.send_next.len()
+    }
+}
+
+/// What [`UringReactor::recv_take`] hands the connection fiber.
+pub(crate) enum RecvTake {
+    /// One kernel-filled segment, engine-owned until recycled. `ptr` is
+    /// valid for `len` bytes until `recv_recycle(bid, owns)` runs.
+    Data { ptr: *const u8, len: u32, bid: u16, owns: bool },
+    /// Nothing queued (RECV re-armed if the pool allows) — park.
+    Empty,
+    Eof,
+    Err(i32),
 }
 
 /// One worker's io_uring instance: ring mappings, staged-submission
@@ -140,7 +418,23 @@ pub struct UringReactor {
     /// Is the wake eventfd's multishot poll currently armed?
     wake_armed: bool,
     accepts: Vec<Option<AcceptState>>,
+    /// Data-plane connection slots; `gen` survives slot reuse so stale
+    /// CQEs are detectable.
+    conns: Vec<ConnSlot>,
+    free_conns: Vec<usize>,
+    /// Tokens whose RECV hit `-ENOBUFS`, re-armed one per recycle.
+    starved: VecDeque<usize>,
+    /// The provided-buffer ring, created lazily on the first
+    /// data-plane registration; `pbuf_disabled` latches a failure so an
+    /// incapable kernel pays the probe once.
+    pbuf: Option<PbufRing>,
+    pbuf_disabled: bool,
     pub stats: UringStats,
+}
+
+struct ConnSlot {
+    gen: u32,
+    state: Option<ConnState>,
 }
 
 /// Probe io_uring availability once per process: ring creation, the
@@ -152,6 +446,49 @@ pub fn probe() -> Result<(), String> {
     PROBE
         .get_or_init(|| UringReactor::new_with_entries(-1, 8).map(drop))
         .clone()
+}
+
+/// Probe the *data plane* once per process: ring creation plus a
+/// provided-buffer ring registration (`IORING_REGISTER_PBUF_RING`).
+/// Pure kernel capability — the runtime kill switch
+/// (`TRUSTEE_URING_NO_PBUF` / [`set_dataplane_enabled`]) is separate,
+/// so a bench can A/B the two planes inside one process.
+pub fn probe_pbuf() -> Result<(), String> {
+    static PROBE: OnceLock<Result<(), String>> = OnceLock::new();
+    PROBE
+        .get_or_init(|| {
+            let r = UringReactor::new_with_entries(-1, 8)?;
+            let p = PbufRing::new(r.ring_fd)?;
+            drop(r); // closes the ring fd, which tears down the registration
+            // SAFETY: the probe owns these two fresh mappings; each is
+            // released exactly once, after the ring fd close above.
+            unsafe {
+                sys::munmap(p.ring_ptr as *mut sys::c_void, p.ring_len);
+                sys::munmap(p.slab_ptr as *mut sys::c_void, p.slab_len);
+            }
+            Ok(())
+        })
+        .clone()
+}
+
+/// Runtime kill switch for the data plane (initialized from
+/// `TRUSTEE_URING_NO_PBUF`): when off, `NetPolicy::IoUring` keeps the
+/// readiness plane even on pbuf-capable kernels. Consulted at each
+/// reactor's first data-plane registration, so flipping it between
+/// server starts (as the A/B benches do) takes effect per server.
+pub fn dataplane_enabled() -> bool {
+    dataplane_flag().load(Ordering::Relaxed)
+}
+
+/// Flip the data-plane kill switch (benches/tests; servers started
+/// after the flip observe it).
+pub fn set_dataplane_enabled(on: bool) {
+    dataplane_flag().store(on, Ordering::Relaxed);
+}
+
+fn dataplane_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| AtomicBool::new(std::env::var_os("TRUSTEE_URING_NO_PBUF").is_none()))
 }
 
 impl UringReactor {
@@ -274,6 +611,11 @@ impl UringReactor {
             waiters: HashSet::new(),
             wake_armed: false,
             accepts: Vec::new(),
+            conns: Vec::new(),
+            free_conns: Vec::new(),
+            starved: VecDeque::new(),
+            pbuf: None,
+            pbuf_disabled: false,
             stats: UringStats::default(),
         });
         if wake_fd >= 0 {
@@ -283,10 +625,17 @@ impl UringReactor {
         Ok(r)
     }
 
-    /// Fibers currently parked on a poll SQE (incl. parked acceptors).
+    /// Fibers currently parked on a poll SQE (incl. parked acceptors and
+    /// data-plane connection fibers).
     pub fn waiting(&self) -> usize {
         self.waiters.len()
             + self.accepts.iter().flatten().filter(|a| a.parked.is_some()).count()
+            + self
+                .conns
+                .iter()
+                .filter_map(|s| s.state.as_ref())
+                .filter(|c| c.parked.is_some())
+                .count()
     }
 
     /// Should the idle scheduler block in this ring's `enter_wait` (vs
@@ -465,6 +814,302 @@ impl UringReactor {
         self.accepts[token] = None;
     }
 
+    /// Lazily create + register the provided-buffer ring. False (latched)
+    /// when the kernel lacks pbuf rings or the data plane is disabled —
+    /// callers fall back to the readiness plane, never panic.
+    fn ensure_pbuf(&mut self) -> bool {
+        if self.pbuf.is_some() {
+            return true;
+        }
+        if self.pbuf_disabled {
+            return false;
+        }
+        if !dataplane_enabled() {
+            self.pbuf_disabled = true;
+            return false;
+        }
+        match PbufRing::new(self.ring_fd) {
+            Ok(p) => {
+                self.pbuf = Some(p);
+                true
+            }
+            Err(e) => {
+                eprintln!("uring data plane unavailable ({e}); staying on the readiness plane");
+                self.pbuf_disabled = true;
+                false
+            }
+        }
+    }
+
+    /// Register `fd` on the data plane, arming its multishot RECV.
+    /// Ownership of `fd` transfers to the reactor (closed at finalize).
+    /// `None` → caller keeps fd ownership and the readiness plane.
+    pub(crate) fn conn_register(&mut self, fd: i32) -> Option<usize> {
+        if !self.ensure_pbuf() {
+            return None;
+        }
+        let token = match self.free_conns.pop() {
+            Some(t) => t,
+            None => {
+                if self.conns.len() as u64 > CONN_TOKEN_MASK {
+                    return None;
+                }
+                self.conns.push(ConnSlot { gen: 0, state: None });
+                self.conns.len() - 1
+            }
+        };
+        let gen = self.conns[token].gen;
+        self.conns[token].state = Some(ConnState {
+            fd,
+            gen,
+            queue: VecDeque::new(),
+            parked: None,
+            recv_armed: false,
+            eof: false,
+            recv_err: None,
+            starved: false,
+            send_active: Vec::new(),
+            send_acked: 0,
+            send_inflight: false,
+            send_next: Vec::new(),
+            send_err: false,
+            closing: false,
+        });
+        if !self.arm_recv(token) {
+            self.conns[token].state = None;
+            self.free_conns.push(token);
+            return None;
+        }
+        Some(token)
+    }
+
+    /// Stage the multishot BUFFER_SELECT RECV for `token`. False if no
+    /// SQE slot was available (ring full even after a mid-loop flush).
+    fn arm_recv(&mut self, token: usize) -> bool {
+        let (fd, gen) = match self.conns[token].state.as_ref() {
+            Some(c) if !c.recv_armed && !c.eof && !c.closing && c.recv_err.is_none() => {
+                (c.fd, c.gen)
+            }
+            Some(c) => return c.recv_armed,
+            None => return false,
+        };
+        let Some(sqe) = self.next_sqe() else { return false };
+        // SAFETY: sqe staged by next_sqe, exclusively ours until publish.
+        // No userspace address: BUFFER_SELECT makes the kernel pick a
+        // pool buffer per completion (len 0 = "up to the buffer size").
+        unsafe {
+            (*sqe).opcode = sys::IORING_OP_RECV;
+            (*sqe).fd = fd;
+            (*sqe).ioprio = sys::IORING_RECV_MULTISHOT;
+            (*sqe).flags = sys::IOSQE_BUFFER_SELECT;
+            (*sqe).buf_index = PBUF_BGID;
+            (*sqe).user_data = conn_ud(KIND_RECV, gen, token);
+        }
+        if let Some(c) = self.conns[token].state.as_mut() {
+            c.recv_armed = true;
+            c.starved = false;
+        }
+        true
+    }
+
+    /// Pop the next kernel-filled segment for `token`, re-arming the
+    /// RECV when the kernel disarmed it (unless the conn is starved —
+    /// then `recv_recycle` re-arms, so an empty pool cannot spin).
+    pub(crate) fn recv_take(&mut self, token: usize) -> RecvTake {
+        let Some(c) = self.conns.get_mut(token).and_then(|s| s.state.as_mut()) else {
+            return RecvTake::Err(0);
+        };
+        if let Some(seg) = c.queue.pop_front() {
+            let Some(p) = self.pbuf.as_ref() else { return RecvTake::Err(0) };
+            // SAFETY: seg came from a RECV CQE naming bid, so
+            // off + len <= PBUF_BUF_SZ and the pointer stays inside the
+            // slab; the buffer is engine-owned until recycled.
+            let ptr = unsafe { p.buf_ptr(seg.bid).add(seg.off as usize) };
+            return RecvTake::Data { ptr, len: seg.len, bid: seg.bid, owns: seg.owns };
+        }
+        if c.eof {
+            return RecvTake::Eof;
+        }
+        if let Some(e) = c.recv_err {
+            return RecvTake::Err(e);
+        }
+        if !c.recv_armed && !c.starved {
+            self.arm_recv(token);
+        }
+        RecvTake::Empty
+    }
+
+    /// Return a consumed buffer to the pool (`owns == false` halves of a
+    /// fault-split segment are no-ops) and feed one starved connection.
+    pub(crate) fn recv_recycle(&mut self, bid: u16, owns: bool) {
+        if !owns {
+            return;
+        }
+        if let Some(p) = self.pbuf.as_mut() {
+            p.provide(bid);
+            self.stats.pbuf_recycled += 1;
+        }
+        // One returned buffer can satisfy one starved RECV.
+        while let Some(t) = self.starved.pop_front() {
+            let alive = self
+                .conns
+                .get(t)
+                .and_then(|s| s.state.as_ref())
+                .is_some_and(|c| c.starved && !c.closing);
+            if alive {
+                self.arm_recv(t);
+                break;
+            }
+        }
+    }
+
+    /// Queue `bytes` for ring-submitted SEND. False when the connection
+    /// already failed (caller treats it like a dead socket). The bytes
+    /// are copied into reactor-owned storage, so the caller's buffer is
+    /// free the moment this returns.
+    pub(crate) fn send_enqueue(&mut self, token: usize, bytes: &[u8]) -> bool {
+        let Some(c) = self.conns.get_mut(token).and_then(|s| s.state.as_mut()) else {
+            return false;
+        };
+        if c.send_err || c.closing {
+            return false;
+        }
+        if bytes.is_empty() {
+            return true;
+        }
+        if c.send_inflight {
+            // send_active is frozen under the in-flight SQE; overflow
+            // rides send_next and swaps in when the CQE lands.
+            c.send_next.extend_from_slice(bytes);
+            return true;
+        }
+        if c.send_active.len() > c.send_acked {
+            // A previous arm_send failed (ring full); keep appending and
+            // retry below.
+            c.send_active.extend_from_slice(bytes);
+        } else {
+            c.send_active.clear();
+            c.send_acked = 0;
+            c.send_active.extend_from_slice(bytes);
+        }
+        self.arm_send(token);
+        true
+    }
+
+    /// Bytes accepted by [`UringReactor::send_enqueue`] but not yet
+    /// acknowledged by SEND CQEs (the engine's exit check adds this to
+    /// the spool's own unsent count).
+    pub(crate) fn send_pending(&self, token: usize) -> usize {
+        self.conns
+            .get(token)
+            .and_then(|s| s.state.as_ref())
+            .map_or(0, |c| c.send_pending())
+    }
+
+    /// Did a SEND complete with an error? (Pending bytes were dropped;
+    /// the connection is as dead as a failed `write`.)
+    pub(crate) fn send_failed(&self, token: usize) -> bool {
+        self.conns.get(token).and_then(|s| s.state.as_ref()).is_some_and(|c| c.send_err)
+    }
+
+    /// Stage a SEND SQE covering `send_active[send_acked..]`. False if
+    /// no SQE slot was available (retried at enqueue/park time).
+    fn arm_send(&mut self, token: usize) -> bool {
+        let (fd, gen, addr, len) = match self.conns[token].state.as_ref() {
+            Some(c) if !c.send_inflight && !c.send_err && c.send_active.len() > c.send_acked => (
+                c.fd,
+                c.gen,
+                c.send_active[c.send_acked..].as_ptr() as u64,
+                (c.send_active.len() - c.send_acked) as u32,
+            ),
+            _ => return false,
+        };
+        let Some(sqe) = self.next_sqe() else { return false };
+        // SAFETY: sqe staged by next_sqe, exclusively ours until publish.
+        // addr/len reference send_active, which stays frozen (no mutation,
+        // no reallocation) until this SQE's CQE clears send_inflight.
+        unsafe {
+            (*sqe).opcode = sys::IORING_OP_SEND;
+            (*sqe).fd = fd;
+            (*sqe).addr = addr;
+            (*sqe).len = len;
+            (*sqe).user_data = conn_ud(KIND_SEND, gen, token);
+        }
+        if let Some(c) = self.conns[token].state.as_mut() {
+            c.send_inflight = true;
+        }
+        self.stats.send_sqes += 1;
+        true
+    }
+
+    /// Park the connection fiber until a conn CQE (RECV, SEND settle, or
+    /// cancellation) arrives. False if work is already available — the
+    /// caller must not park then. Re-arms a disarmed RECV (when the
+    /// caller still wants bytes) and retries a stalled SEND first, so a
+    /// parked fiber always has an armed SQE to wake it.
+    pub(crate) fn conn_park(
+        &mut self,
+        token: usize,
+        fiber: FiberId,
+        want_read: bool,
+    ) -> bool {
+        let Some(c) = self.conns.get_mut(token).and_then(|s| s.state.as_mut()) else {
+            return false;
+        };
+        if c.closing {
+            return false;
+        }
+        if want_read && (!c.queue.is_empty() || c.eof || c.recv_err.is_some()) {
+            return false;
+        }
+        if c.send_err {
+            return false;
+        }
+        let rearm_recv = want_read && !c.recv_armed && !c.starved;
+        let retry_send = !c.send_inflight && c.send_active.len() > c.send_acked;
+        if rearm_recv {
+            self.arm_recv(token);
+        }
+        if retry_send {
+            self.arm_send(token);
+        }
+        if let Some(c) = self.conns.get_mut(token).and_then(|s| s.state.as_mut()) {
+            c.parked = Some(fiber);
+        }
+        true
+    }
+
+    /// Detach the fiber from `token`: drop undelivered input, keep the
+    /// in-flight SEND alive until its CQE, then finalize (close fd,
+    /// recycle queued buffers, bump the slot generation).
+    pub(crate) fn conn_close(&mut self, token: usize) {
+        let Some(c) = self.conns.get_mut(token).and_then(|s| s.state.as_mut()) else {
+            return;
+        };
+        c.parked = None;
+        c.closing = true;
+        c.send_next.clear();
+        if !c.send_inflight {
+            self.finalize_conn(token);
+        }
+    }
+
+    /// Free a closing slot: return its queued buffers to the pool, close
+    /// the fd (cancelling the armed multishot RECV), and bump the
+    /// generation so late CQEs are recognized as stale.
+    fn finalize_conn(&mut self, token: usize) {
+        let Some(c) = self.conns[token].state.take() else { return };
+        for seg in c.queue {
+            self.recv_recycle(seg.bid, seg.owns);
+        }
+        // SAFETY: conn_register transferred fd ownership to the reactor;
+        // this is its single release. The kernel's file reference keeps
+        // any in-flight op safe; the armed RECV is cancelled by the close.
+        unsafe { sys::close(c.fd) };
+        self.conns[token].gen = self.conns[token].gen.wrapping_add(1);
+        self.free_conns.push(token);
+    }
+
     /// Publish staged SQEs with one `io_uring_enter`. The scheduler calls
     /// this once per loop (end-of-client-phase), so an entire loop's
     /// parks — any number of connections — cost at most one syscall.
@@ -588,6 +1233,129 @@ impl UringReactor {
                     }
                 }
             }
+            KIND_RECV => {
+                self.stats.recv_cqes += 1;
+                let (gen, token) = conn_ud_split(payload);
+                let has_buf = cqe.flags & sys::IORING_CQE_F_BUFFER != 0;
+                let bid = (cqe.flags >> sys::IORING_CQE_BUFFER_SHIFT) as u16;
+                let live = self
+                    .conns
+                    .get(token)
+                    .and_then(|s| s.state.as_ref())
+                    .is_some_and(|c| c.gen == gen && !c.closing);
+                if !live {
+                    // Stale completion for a recycled/closing slot: the
+                    // buffer still belongs to us — back to the pool.
+                    if has_buf {
+                        self.recv_recycle(bid, true);
+                    }
+                    return;
+                }
+                let more = cqe.flags & sys::IORING_CQE_F_MORE != 0;
+                let mut starve = false;
+                // Fault injection (`faults` feature only; inline None
+                // otherwise) — lossless by construction: Short splits the
+                // delivery in two (no byte dropped), Enobufs delivers the
+                // data but simulates a pool-exhausted disarm so the
+                // starved re-arm machinery is exercised under chaos.
+                let fault =
+                    if cqe.res > 0 { crate::util::faultsim::uring_recv_fault() } else { None };
+                {
+                    let c = self.conns[token].state.as_mut().expect("checked live above");
+                    if !more {
+                        c.recv_armed = false;
+                    }
+                    if cqe.res > 0 && has_buf {
+                        let len = cqe.res as u32;
+                        match fault {
+                            Some(crate::util::faultsim::UringRecvFault::Short) if len >= 2 => {
+                                let cut = len / 2;
+                                c.queue.push_back(RecvSeg { bid, off: 0, len: cut, owns: false });
+                                c.queue.push_back(RecvSeg {
+                                    bid,
+                                    off: cut,
+                                    len: len - cut,
+                                    owns: true,
+                                });
+                            }
+                            _ => c.queue.push_back(RecvSeg { bid, off: 0, len, owns: true }),
+                        }
+                        if matches!(fault, Some(crate::util::faultsim::UringRecvFault::Enobufs)) {
+                            c.recv_armed = false;
+                            starve = true;
+                        }
+                    } else if cqe.res == 0 {
+                        c.eof = true;
+                    } else if cqe.res == -ENOBUFS_ERR {
+                        starve = true;
+                    } else if cqe.res < 0 {
+                        c.recv_err = Some(-cqe.res);
+                    }
+                    if starve {
+                        c.starved = true;
+                    }
+                    if let Some(f) = c.parked.take() {
+                        out.push(f);
+                    }
+                }
+                if starve {
+                    self.stats.enobufs += 1;
+                    self.starved.push_back(token);
+                }
+            }
+            KIND_SEND => {
+                let (gen, token) = conn_ud_split(payload);
+                let live = self
+                    .conns
+                    .get(token)
+                    .and_then(|s| s.state.as_ref())
+                    .is_some_and(|c| c.gen == gen);
+                if !live {
+                    return; // stale: the slot's buffers are long freed
+                }
+                let mut continue_short = false;
+                let mut start_next = false;
+                let mut finalize = false;
+                {
+                    let c = self.conns[token].state.as_mut().expect("checked live above");
+                    c.send_inflight = false;
+                    if cqe.res < 0 {
+                        // The connection is as dead as a failed write():
+                        // drop pending bytes, let the fiber observe
+                        // send_failed and tear down.
+                        c.send_err = true;
+                        c.send_active.clear();
+                        c.send_next.clear();
+                        c.send_acked = 0;
+                    } else {
+                        c.send_acked += cqe.res as usize;
+                        if c.send_acked < c.send_active.len() {
+                            continue_short = true;
+                        } else {
+                            c.send_active.clear();
+                            c.send_acked = 0;
+                            std::mem::swap(&mut c.send_active, &mut c.send_next);
+                            start_next = !c.send_active.is_empty();
+                        }
+                    }
+                    if c.closing && !continue_short && !start_next {
+                        finalize = true;
+                    }
+                    if !finalize {
+                        if let Some(f) = c.parked.take() {
+                            out.push(f);
+                        }
+                    }
+                }
+                if continue_short {
+                    self.stats.short_send_continuations += 1;
+                    self.arm_send(token);
+                } else if start_next {
+                    self.arm_send(token);
+                } else if finalize {
+                    self.finalize_conn(token);
+                }
+            }
             _ => {}
         }
     }
@@ -658,18 +1426,46 @@ impl UringReactor {
                 out.push(f);
             }
         }
+        for s in &mut self.conns {
+            if let Some(c) = s.state.as_mut() {
+                if let Some(f) = c.parked.take() {
+                    out.push(f);
+                }
+            }
+        }
     }
 }
 
 impl Drop for UringReactor {
     fn drop(&mut self) {
-        // SAFETY: the reactor owns both mappings and the ring fd; each is
-        // released exactly once, here. The kernel cancels still-armed SQEs
-        // when the ring fd closes.
+        // Connection slots still waiting on a deferred SEND settle own
+        // their fds; release them before the ring goes away (the kernel's
+        // file references keep any in-flight op memory-safe).
+        for s in &mut self.conns {
+            if let Some(c) = s.state.take() {
+                // SAFETY: conn_register transferred fd ownership to the
+                // reactor; single release per slot.
+                unsafe { sys::close(c.fd) };
+            }
+        }
+        // The pbuf mappings must outlive the ring registration; drop the
+        // ring fd first (which tears down the registration), then unmap.
+        // SAFETY: the reactor owns both ring mappings and the ring fd;
+        // each is released exactly once, here. The kernel cancels
+        // still-armed SQEs when the ring fd closes.
         unsafe {
             sys::munmap(self.sqes_ptr as *mut sys::c_void, self.sqes_len);
             sys::munmap(self.ring_ptr as *mut sys::c_void, self.ring_len);
             sys::close(self.ring_fd);
+        }
+        if let Some(p) = self.pbuf.take() {
+            // SAFETY: the pbuf ring/slab mappings are owned by the
+            // reactor and unmapped exactly once, after the ring fd close
+            // above ended the kernel's use of them.
+            unsafe {
+                sys::munmap(p.ring_ptr as *mut sys::c_void, p.ring_len);
+                sys::munmap(p.slab_ptr as *mut sys::c_void, p.slab_len);
+            }
         }
     }
 }
@@ -745,6 +1541,80 @@ pub(crate) fn accept_close(token: usize) {
 /// Number of uring-parked fibers on the current worker (tests/metrics).
 pub fn fd_waiters() -> usize {
     super::with_worker(|w| w.uring.as_deref().map_or(0, |u| u.waiting()))
+}
+
+/// Register `fd` on the current worker's data plane. `Some(token)`
+/// transfers fd ownership to the reactor; `None` (no ring, no pbuf
+/// support, or the kill switch) leaves the caller on the readiness
+/// plane with fd ownership intact.
+pub(crate) fn conn_register(fd: i32) -> Option<usize> {
+    super::with_worker(|w| w.ensure_uring().and_then(|u| u.conn_register(fd)))
+}
+
+/// Take the next kernel-filled segment for `token`.
+pub(crate) fn recv_take(token: usize) -> RecvTake {
+    super::with_worker(|w| match w.uring.as_deref_mut() {
+        Some(u) => u.recv_take(token),
+        None => RecvTake::Err(0),
+    })
+}
+
+/// Return a consumed provided buffer to the pool.
+pub(crate) fn recv_recycle(bid: u16, owns: bool) {
+    super::with_worker(|w| {
+        if let Some(u) = w.uring.as_deref_mut() {
+            u.recv_recycle(bid, owns);
+        }
+    });
+}
+
+/// Queue response bytes for ring-submitted SEND on `token`.
+pub(crate) fn send_enqueue(token: usize, bytes: &[u8]) -> bool {
+    super::with_worker(|w| match w.uring.as_deref_mut() {
+        Some(u) => u.send_enqueue(token, bytes),
+        None => false,
+    })
+}
+
+/// Bytes queued for SEND but not yet acknowledged by the kernel.
+pub(crate) fn send_pending(token: usize) -> usize {
+    super::with_worker(|w| w.uring.as_deref().map_or(0, |u| u.send_pending(token)))
+}
+
+/// Did the data-plane SEND path fail for `token`?
+pub(crate) fn send_failed(token: usize) -> bool {
+    super::with_worker(|w| w.uring.as_deref().map_or(true, |u| u.send_failed(token)))
+}
+
+/// Park the current fiber until a data-plane CQE for `token` arrives
+/// (RECV delivery, SEND settle, EOF, error). Spurious returns possible;
+/// the caller loops. Degrades to a yield during shutdown.
+pub(crate) fn conn_park(token: usize, want_read: bool) {
+    if super::with_worker(|w| w.shared.shutting_down()) {
+        fiber::yield_now();
+        return;
+    }
+    fiber::suspend(|id| {
+        let ok = super::with_worker(|w| match w.uring.as_deref_mut() {
+            Some(u) => u.conn_park(token, id, want_read),
+            None => false,
+        });
+        if !ok {
+            fiber::with_executor(|e| {
+                e.resume(id);
+            });
+        }
+    });
+}
+
+/// Detach the current fiber from `token` (fd closes once in-flight
+/// sends settle).
+pub(crate) fn conn_close(token: usize) {
+    super::with_worker(|w| {
+        if let Some(u) = w.uring.as_deref_mut() {
+            u.conn_close(token);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -910,5 +1780,137 @@ mod tests {
         assert_eq!(r.stats.sqes_submitted, 1);
         r.accept_close(token);
         drop(clients);
+    }
+
+    #[test]
+    fn pbuf_probe_reports() {
+        match probe_pbuf() {
+            Ok(()) => {}
+            Err(e) => {
+                assert!(
+                    std::env::var_os("TRUSTEE_REQUIRE_URING_PBUF").is_none(),
+                    "TRUSTEE_REQUIRE_URING_PBUF set but pbuf rings unavailable: {e}"
+                );
+                eprintln!("SKIP pbuf_probe_reports: pbuf rings unavailable ({e})");
+            }
+        }
+    }
+
+    /// A reactor with the data plane engaged, or a visible SKIP.
+    fn pbuf_reactor_or_skip(test: &str) -> Option<Box<UringReactor>> {
+        let mut r = reactor_or_skip(test, -1)?;
+        if !r.ensure_pbuf() {
+            assert!(
+                std::env::var_os("TRUSTEE_REQUIRE_URING_PBUF").is_none(),
+                "TRUSTEE_REQUIRE_URING_PBUF set but the data plane did not engage"
+            );
+            eprintln!("SKIP {test}: pbuf rings unavailable");
+            return None;
+        }
+        Some(r)
+    }
+
+    #[test]
+    fn data_plane_recv_send_roundtrip_without_read_syscalls() {
+        let Some(mut r) =
+            pbuf_reactor_or_skip("data_plane_recv_send_roundtrip_without_read_syscalls")
+        else {
+            return;
+        };
+        let (mut c, s) = tcp_pair();
+        // conn_register takes fd ownership (the reactor closes it).
+        let fd = <std::net::TcpStream as std::os::fd::IntoRawFd>::into_raw_fd(s);
+        let token = r.conn_register(fd).expect("conn_register with a live pbuf ring");
+        assert_eq!(r.flush(), 1, "one SQE armed the multishot RECV");
+        c.write_all(b"hello ring").unwrap();
+        let mut got = Vec::new();
+        let mut scratch = Vec::new();
+        let mut consumed = 0u64;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while got.len() < 10 && std::time::Instant::now() < deadline {
+            r.enter_wait(100, &mut scratch);
+            loop {
+                match r.recv_take(token) {
+                    RecvTake::Data { ptr, len, bid, owns } => {
+                        // SAFETY: the contract of RecvTake::Data — ptr is
+                        // valid for len bytes until the recycle below.
+                        got.extend_from_slice(unsafe {
+                            std::slice::from_raw_parts(ptr, len as usize)
+                        });
+                        r.recv_recycle(bid, owns);
+                        if owns {
+                            consumed += 1;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+        }
+        assert_eq!(&got[..], b"hello ring", "kernel-filled buffers carry the payload");
+        assert!(r.stats.recv_cqes > 0, "data plane must have produced RECV CQEs");
+        assert_eq!(r.stats.pbuf_recycled, consumed, "every consumed buffer recycled");
+
+        // Ring-submitted SEND reaches the peer without a write syscall
+        // from us (the enter that flushes the SQE is the only kernel
+        // crossing).
+        assert!(r.send_enqueue(token, b"pong"));
+        r.flush();
+        let mut back = [0u8; 4];
+        c.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        std::io::Read::read_exact(&mut c, &mut back).unwrap();
+        assert_eq!(&back, b"pong");
+        assert!(r.stats.send_sqes >= 1);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while r.send_pending(token) > 0 && std::time::Instant::now() < deadline {
+            r.enter_wait(100, &mut scratch);
+        }
+        assert_eq!(r.send_pending(token), 0, "SEND CQE settles the pending count");
+
+        // Peer close surfaces as Eof after drained data.
+        drop(c);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            match r.recv_take(token) {
+                RecvTake::Eof => break,
+                RecvTake::Data { bid, owns, .. } => r.recv_recycle(bid, owns),
+                _ => {
+                    assert!(std::time::Instant::now() < deadline, "EOF never arrived");
+                    r.enter_wait(100, &mut scratch);
+                }
+            }
+        }
+        r.conn_close(token);
+        assert_eq!(r.send_pending(token), 0);
+    }
+
+    #[test]
+    fn data_plane_close_defers_until_send_settles() {
+        let Some(mut r) = pbuf_reactor_or_skip("data_plane_close_defers_until_send_settles")
+        else {
+            return;
+        };
+        let (mut c, s) = tcp_pair();
+        let fd = <std::net::TcpStream as std::os::fd::IntoRawFd>::into_raw_fd(s);
+        let token = r.conn_register(fd).expect("conn_register");
+        r.flush();
+        assert!(r.send_enqueue(token, b"final response"));
+        // Detach with the SEND still in flight: the fd must stay open
+        // until the CQE lands, so the peer still receives the bytes.
+        r.conn_close(token);
+        r.flush();
+        let mut back = [0u8; 14];
+        c.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        std::io::Read::read_exact(&mut c, &mut back).unwrap();
+        assert_eq!(&back, b"final response");
+        let mut scratch = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while r.conns[token].state.is_some() && std::time::Instant::now() < deadline {
+            r.enter_wait(100, &mut scratch);
+        }
+        assert!(r.conns[token].state.is_none(), "slot finalized after the SEND settled");
+        // EOF after the deferred close.
+        let mut rest = Vec::new();
+        let _ = std::io::Read::read_to_end(&mut c, &mut rest);
+        assert!(rest.is_empty());
     }
 }

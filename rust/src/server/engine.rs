@@ -32,14 +32,15 @@
 //! runtime construction, trustee topology, acceptor startup (fiber or
 //! thread per [`NetPolicy`]), prefill, and teardown.
 
-use super::netfiber::{self, net_wait, read_burst, write_pending, NetPolicy, ReadOutcome};
+use super::netfiber::{self, net_wait, read_burst, write_pending, NetInfo, NetPolicy, ReadOutcome};
 use crate::fiber;
+use crate::runtime::uring;
 use crate::runtime::Runtime;
 use crate::util::cache::CachePadded;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
-use std::os::unix::io::AsRawFd;
+use std::os::unix::io::{AsRawFd, IntoRawFd};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -125,37 +126,107 @@ pub trait Protocol: 'static {
 /// Per-connection receive buffer with a consumed cursor. The engine
 /// appends socket bytes; the protocol consumes whole requests via
 /// [`Inbuf::advance`]; the engine compacts once per loop.
+///
+/// Under the io_uring data plane the engine can also *attach* a borrowed
+/// kernel-filled provided-buffer slice ([`Inbuf::attach_borrowed`]) in
+/// place of the owned buffer: the protocol then parses straight out of
+/// the kernel's memory (the whole-frame fast path, zero copies), and
+/// only the unconsumed tail of a partial frame is copied once into the
+/// owned buffer at [`Inbuf::detach_borrowed`]. The two modes are
+/// exclusive — a slice is only attached while the owned backlog is
+/// empty, so `unparsed()` is always one contiguous slice either way.
 pub struct Inbuf {
     buf: Vec<u8>,
     consumed: usize,
+    /// Borrowed kernel-filled slice (data plane); null when detached.
+    /// Valid for `ext_len` bytes from attach until detach — the engine
+    /// recycles the provided buffer only after `detach_borrowed`.
+    ext: *const u8,
+    ext_len: usize,
 }
 
 impl Inbuf {
     pub fn with_capacity(n: usize) -> Inbuf {
-        Inbuf { buf: Vec::with_capacity(n), consumed: 0 }
+        Inbuf { buf: Vec::with_capacity(n), consumed: 0, ext: std::ptr::null(), ext_len: 0 }
+    }
+
+    fn attached(&self) -> bool {
+        !self.ext.is_null()
     }
 
     /// The not-yet-consumed bytes.
     pub fn unparsed(&self) -> &[u8] {
-        &self.buf[self.consumed..]
+        if self.attached() {
+            // SAFETY: `attach_borrowed`'s contract keeps `ext` pointing
+            // at `ext_len` readable bytes for the whole attachment (the
+            // provided buffer stays engine-owned until the engine
+            // recycles it, which happens only after detach), and
+            // `advance` bounds `consumed <= ext_len`.
+            unsafe {
+                let left = self.ext_len - self.consumed;
+                std::slice::from_raw_parts(self.ext.add(self.consumed), left)
+            }
+        } else {
+            &self.buf[self.consumed..]
+        }
     }
 
     /// Mark `n` bytes of [`Inbuf::unparsed`] as consumed.
     pub fn advance(&mut self, n: usize) {
-        debug_assert!(self.consumed + n <= self.buf.len());
+        let limit = if self.attached() { self.ext_len } else { self.buf.len() };
+        debug_assert!(self.consumed + n <= limit);
         self.consumed += n;
     }
 
     /// Unparsed backlog in bytes (what [`netfiber::MAX_INBUF`] bounds).
     pub fn backlog(&self) -> usize {
-        self.buf.len() - self.consumed
+        if self.attached() {
+            self.ext_len - self.consumed
+        } else {
+            self.buf.len() - self.consumed
+        }
     }
 
     pub(crate) fn buf_mut(&mut self) -> &mut Vec<u8> {
+        debug_assert!(!self.attached(), "owned buffer is inaccessible while a slice is attached");
         &mut self.buf
     }
 
+    /// Data plane: parse directly out of a kernel-filled provided buffer.
+    /// Caller contract: the owned backlog is empty, and `ptr` stays
+    /// valid for `len` bytes until [`Inbuf::detach_borrowed`] returns
+    /// (i.e. the provided buffer is recycled only after detach).
+    pub(crate) fn attach_borrowed(&mut self, ptr: *const u8, len: usize) {
+        debug_assert!(!self.attached());
+        debug_assert_eq!(self.backlog(), 0);
+        self.buf.clear();
+        self.consumed = 0;
+        self.ext = ptr;
+        self.ext_len = len;
+    }
+
+    /// Detach the borrowed slice, copying any unconsumed tail into the
+    /// owned buffer (the copy-once partial-frame path). After this
+    /// returns the caller may recycle the provided buffer.
+    pub(crate) fn detach_borrowed(&mut self) {
+        if !self.attached() {
+            return;
+        }
+        let (ptr, len, consumed) = (self.ext, self.ext_len, self.consumed);
+        self.ext = std::ptr::null();
+        self.ext_len = 0;
+        self.consumed = 0;
+        if consumed < len {
+            // SAFETY: the provided buffer is still engine-owned here
+            // (recycling happens only after this method returns), and
+            // `consumed <= len` is maintained by `advance`.
+            let tail = unsafe { std::slice::from_raw_parts(ptr.add(consumed), len - consumed) };
+            self.buf.extend_from_slice(tail);
+        }
+    }
+
     fn compact(&mut self) {
+        debug_assert!(!self.attached(), "compact only runs on the owned buffer");
         if self.consumed > 0 {
             self.buf.drain(..self.consumed);
             self.consumed = 0;
@@ -418,6 +489,26 @@ impl Spool {
     /// the connection died.
     pub fn write_to(&mut self, stream: &mut TcpStream) -> bool {
         write_pending(stream, &mut self.out, &mut self.wcursor)
+    }
+
+    /// Data-plane egress: hand the unsent wire bytes to `submit` (the
+    /// ring SEND path). When `submit` accepts them — copies them into
+    /// the reactor's send buffers — the spool forgets them; delivery,
+    /// short-write continuation SQEs, and failure detection belong to
+    /// the reactor from then on. Returns the bytes handed off (0 when
+    /// nothing was pending or `submit` refused).
+    pub(crate) fn drain_into(&mut self, submit: impl FnOnce(&[u8]) -> bool) -> usize {
+        let n = self.out.len() - self.wcursor;
+        if n == 0 {
+            return 0;
+        }
+        if submit(&self.out[self.wcursor..]) {
+            self.out.clear();
+            self.wcursor = 0;
+            n
+        } else {
+            0
+        }
     }
 }
 
@@ -690,6 +781,86 @@ impl ConnMetrics {
 // The connection fiber
 // ---------------------------------------------------------------------
 
+/// Step 2 of both connection loops: parse + dispatch every complete
+/// request in `inbuf`, bounded by the egress gate, with overload
+/// admission and parse-error poisoning. Sets `progress` when anything
+/// parsed and `poisoned` on a parse failure (answered, never a panic).
+fn parse_and_dispatch<P: Protocol>(
+    proto: &mut P,
+    inbuf: &mut Inbuf,
+    spool: &Rc<RefCell<Spool>>,
+    shared: &Arc<EngineShared>,
+    metrics: &ConnMetrics,
+    progress: &mut bool,
+    poisoned: &mut bool,
+) {
+    while !*poisoned && spool.borrow().admits_dispatch() {
+        match proto.parse(inbuf) {
+            Ok(Some(req)) => {
+                *progress = true;
+                metrics.slot().requests.fetch_add(1, Ordering::Relaxed);
+                let cost = proto.cost(&req).max(1);
+                // Overload admission: past the shed watermark (or with
+                // the oldest outstanding request already over its
+                // deadline), answer with the protocol's overload error
+                // instead of queueing more work onto the trustees. The
+                // shed answer takes an ordinary spool slot, so in-order
+                // protocols keep request/response sequence integrity.
+                let overloaded = shared.should_shed(cost) || spool.borrow_mut().deadline_pressure();
+                let mut shed = false;
+                if overloaded {
+                    let mut b = spool.borrow_mut().checkout();
+                    if proto.render_overload(&req, &mut b) {
+                        let seq = spool.borrow_mut().begin(1);
+                        spool.borrow_mut().complete(seq, 1, b);
+                        metrics.slot().shed.fetch_add(1, Ordering::Relaxed);
+                        shed = true;
+                    } else {
+                        // Protocol cannot shed: dispatch normally.
+                        spool.borrow_mut().give_back(b);
+                    }
+                }
+                if !shed {
+                    shared.admit(cost);
+                    let seq = spool.borrow_mut().begin(cost);
+                    let done =
+                        Completion { spool: spool.clone(), seq, cost, shared: shared.clone() };
+                    proto.dispatch(req, done);
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                // Answer the failure (sequenced behind every earlier
+                // command, like any other response), then wind down.
+                *progress = true;
+                metrics.slot().parse_errors.fetch_add(1, Ordering::Relaxed);
+                let (seq, mut b) = {
+                    let mut sp = spool.borrow_mut();
+                    let seq = sp.begin(1);
+                    let b = sp.checkout();
+                    (seq, b)
+                };
+                proto.render_error(&e, &mut b);
+                spool.borrow_mut().complete(seq, 1, b);
+                *poisoned = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Flush per-connection spool counters into the worker's metrics slot
+/// (the shared tail of both connection loops).
+fn flush_conn_stats(metrics: &ConnMetrics, spool: &Rc<RefCell<Spool>>) {
+    let stats = metrics.slot();
+    stats.closed.fetch_add(1, Ordering::Relaxed);
+    let sp = spool.borrow();
+    stats.pool_hits.fetch_add(sp.pool_hits, Ordering::Relaxed);
+    stats.pool_misses.fetch_add(sp.pool_misses, Ordering::Relaxed);
+    stats.resp_bytes.fetch_add(sp.resp_bytes, Ordering::Relaxed);
+    stats.deadline_misses.fetch_add(sp.deadline_misses(), Ordering::Relaxed);
+}
+
 /// The shared connection loop: ingest → parse/dispatch → spool → egress →
 /// exit checks → wait. One fiber per accepted connection.
 fn connection_fiber<P: Protocol>(
@@ -706,6 +877,23 @@ fn connection_fiber<P: Protocol>(
     stream.set_nodelay(true).ok();
     let stats = metrics.slot();
     stats.accepted.fetch_add(1, Ordering::Relaxed);
+    // Data plane: under IoUring on a PBUF_RING-capable kernel, hand the
+    // fd to this worker's reactor (multishot RECV + ring-batched SEND)
+    // and run the data-plane loop instead. `conn_register` returning
+    // `None` — no ring, no PBUF_RING support, the kill switch, or a full
+    // conn slab — keeps this connection on the readiness plane below:
+    // same engine semantics, read/write syscalls instead of provided
+    // buffers.
+    if policy == NetPolicy::IoUring {
+        if let Some(token) = uring::conn_register(stream.as_raw_fd()) {
+            // fd ownership moved to the reactor (it closes the fd after
+            // in-flight SENDs settle); release the stream's claim so the
+            // fd is not double-closed.
+            let _ = stream.into_raw_fd();
+            dataplane_fiber(token, proto, shared, stop, metrics);
+            return;
+        }
+    }
     let fd = stream.as_raw_fd();
     let tuning = shared.tuning;
     let spool = Rc::new(RefCell::new(Spool::new(P::ORDER)));
@@ -750,60 +938,15 @@ fn connection_fiber<P: Protocol>(
         //    reading responses must stall here (its inbuf then fills to
         //    MAX_INBUF and TCP backpressure takes over) instead of
         //    ballooning the response spool without bound.
-        while !poisoned && spool.borrow().admits_dispatch() {
-            match proto.parse(&mut inbuf) {
-                Ok(Some(req)) => {
-                    progress = true;
-                    metrics.slot().requests.fetch_add(1, Ordering::Relaxed);
-                    let cost = proto.cost(&req).max(1);
-                    // Overload admission: past the shed watermark (or with
-                    // the oldest outstanding request already over its
-                    // deadline), answer with the protocol's overload error
-                    // instead of queueing more work onto the trustees. The
-                    // shed answer takes an ordinary spool slot, so in-order
-                    // protocols keep request/response sequence integrity.
-                    let overloaded =
-                        shared.should_shed(cost) || spool.borrow_mut().deadline_pressure();
-                    let mut shed = false;
-                    if overloaded {
-                        let mut b = spool.borrow_mut().checkout();
-                        if proto.render_overload(&req, &mut b) {
-                            let seq = spool.borrow_mut().begin(1);
-                            spool.borrow_mut().complete(seq, 1, b);
-                            metrics.slot().shed.fetch_add(1, Ordering::Relaxed);
-                            shed = true;
-                        } else {
-                            // Protocol cannot shed: dispatch normally.
-                            spool.borrow_mut().give_back(b);
-                        }
-                    }
-                    if !shed {
-                        shared.admit(cost);
-                        let seq = spool.borrow_mut().begin(cost);
-                        let done =
-                            Completion { spool: spool.clone(), seq, cost, shared: shared.clone() };
-                        proto.dispatch(req, done);
-                    }
-                }
-                Ok(None) => break,
-                Err(e) => {
-                    // Answer the failure (sequenced behind every earlier
-                    // command, like any other response), then wind down.
-                    progress = true;
-                    metrics.slot().parse_errors.fetch_add(1, Ordering::Relaxed);
-                    let (seq, mut b) = {
-                        let mut sp = spool.borrow_mut();
-                        let seq = sp.begin(1);
-                        let b = sp.checkout();
-                        (seq, b)
-                    };
-                    proto.render_error(&e, &mut b);
-                    spool.borrow_mut().complete(seq, 1, b);
-                    poisoned = true;
-                    break;
-                }
-            }
-        }
+        parse_and_dispatch(
+            &mut proto,
+            &mut inbuf,
+            &spool,
+            &shared,
+            &metrics,
+            &mut progress,
+            &mut poisoned,
+        );
         inbuf.compact();
         // 3. Egress ("sending results is done in batches").
         {
@@ -865,13 +1008,192 @@ fn connection_fiber<P: Protocol>(
             net_wait(policy, fd, want_read, want_write);
         }
     }
-    let stats = metrics.slot();
-    stats.closed.fetch_add(1, Ordering::Relaxed);
-    let sp = spool.borrow();
-    stats.pool_hits.fetch_add(sp.pool_hits, Ordering::Relaxed);
-    stats.pool_misses.fetch_add(sp.pool_misses, Ordering::Relaxed);
-    stats.resp_bytes.fetch_add(sp.resp_bytes, Ordering::Relaxed);
-    stats.deadline_misses.fetch_add(sp.deadline_misses(), Ordering::Relaxed);
+    flush_conn_stats(&metrics, &spool);
+}
+
+/// The data-plane connection loop (io_uring provided buffers): the same
+/// five steps as [`connection_fiber`], but ingest takes kernel-filled
+/// slices queued by the worker's multishot RECV ([`uring::recv_take`] —
+/// no read syscalls) and egress hands spooled bytes to ring-submitted
+/// SENDs ([`uring::send_enqueue`] — no write syscalls). The reactor owns
+/// the fd; it closes it after in-flight SENDs settle
+/// ([`uring::conn_close`]), so a final response always gets its shot at
+/// the wire.
+///
+/// `MAX_INBUF` backpressure works by *withholding replenishment*: past
+/// the bound the fiber stops taking (and therefore recycling) provided
+/// buffers, the pool drains, RECV hits `ENOBUFS`, and the kernel stalls
+/// the peer at the wire — no reads, no syscalls, no committed
+/// per-connection buffer while idle.
+fn dataplane_fiber<P: Protocol>(
+    token: usize,
+    mut proto: P,
+    shared: Arc<EngineShared>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<ConnMetrics>,
+) {
+    let tuning = shared.tuning;
+    let spool = Rc::new(RefCell::new(Spool::new(P::ORDER)));
+    if tuning.deadline_ms > 0 {
+        spool
+            .borrow_mut()
+            .set_deadline(std::time::Duration::from_millis(tuning.deadline_ms));
+    }
+    let grace = std::time::Duration::from_millis(tuning.stop_drain_grace_ms);
+    let stall = (tuning.conn_stall_ms > 0)
+        .then(|| std::time::Duration::from_millis(tuning.conn_stall_ms));
+    let mut last_egress_progress = std::time::Instant::now();
+    let mut inbuf = Inbuf::with_capacity(32 * 1024);
+    let mut peer_gone = false;
+    let mut poisoned = false;
+    // Ring RECV/SEND errored: responses can no longer reach this peer —
+    // wind down without draining (mirrors `write_to` returning false).
+    let mut conn_dead = false;
+    let mut stop_deadline: Option<std::time::Instant> = None;
+    // SEND bytes the reactor still holds, sampled each loop so a settle
+    // counts as egress progress for the stall clock.
+    let mut last_send_pending = 0usize;
+
+    loop {
+        let mut progress = false;
+        let mut egress_progress = false;
+        // 1. Ingest: take kernel-filled segments. At most one borrowed
+        //    slice is attached per iteration (the whole-frame fast path,
+        //    parsed in place); continuation segments of a partial frame
+        //    are copied once into the owned buffer, bounded by the same
+        //    fairness budget as `read_burst`.
+        let mut borrowed: Option<(u16, bool)> = None;
+        if !peer_gone && !poisoned && !conn_dead {
+            let mut copied = 0usize;
+            while inbuf.backlog() < netfiber::MAX_INBUF && copied < 64 * 1024 {
+                match uring::recv_take(token) {
+                    uring::RecvTake::Data { ptr, len, bid, owns } => {
+                        progress = true;
+                        if inbuf.backlog() == 0 {
+                            inbuf.attach_borrowed(ptr, len as usize);
+                            borrowed = Some((bid, owns));
+                            break;
+                        }
+                        // SAFETY: the reactor guarantees `ptr` names
+                        // `len` readable bytes of a provided-buffer
+                        // segment that stays engine-owned until the
+                        // `recv_recycle` call right below.
+                        let seg = unsafe { std::slice::from_raw_parts(ptr, len as usize) };
+                        inbuf.buf_mut().extend_from_slice(seg);
+                        copied += seg.len();
+                        uring::recv_recycle(bid, owns);
+                    }
+                    uring::RecvTake::Empty => break,
+                    uring::RecvTake::Eof => {
+                        peer_gone = true;
+                        break;
+                    }
+                    uring::RecvTake::Err(_) => {
+                        peer_gone = true;
+                        conn_dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        // 2. Parse + dispatch (identical to the readiness plane; when a
+        //    slice is attached the protocol parses kernel memory in
+        //    place).
+        parse_and_dispatch(
+            &mut proto,
+            &mut inbuf,
+            &spool,
+            &shared,
+            &metrics,
+            &mut progress,
+            &mut poisoned,
+        );
+        // Detach before compaction/egress: any unconsumed tail is copied
+        // once into the owned buffer and the provided buffer goes back
+        // to the pool (replenishing the ring tail — the recycle half of
+        // the backpressure contract).
+        if let Some((bid, owns)) = borrowed.take() {
+            inbuf.detach_borrowed();
+            uring::recv_recycle(bid, owns);
+        }
+        inbuf.compact();
+        // 3. Egress: hand the spooled bytes to the ring SEND path. The
+        //    reactor copies them and owns delivery + short-write
+        //    continuation SQEs from here. The handoff is bounded: past
+        //    MAX_OUTBUF of unsettled SEND bytes the spool keeps the
+        //    overflow, so `egress_bytes` grows and the dispatch gate
+        //    closes — a client that pipelines requests while never
+        //    reading responses cannot make the reactor buffer without
+        //    bound (the data-plane analog of the readiness plane's
+        //    partial-write cursor).
+        {
+            let mut sp = spool.borrow_mut();
+            if uring::send_pending(token) < MAX_OUTBUF {
+                let handed = sp.drain_into(|bytes| uring::send_enqueue(token, bytes));
+                if handed > 0 {
+                    progress = true;
+                } else if sp.unsent() > 0 && uring::send_failed(token) {
+                    conn_dead = true;
+                }
+            }
+        }
+        // 4. Exit conditions: as on the readiness plane, with "unsent"
+        //    covering both the spool and the reactor's in-flight SENDs.
+        let (inflight, spool_unsent) = {
+            let sp = spool.borrow();
+            (sp.inflight(), sp.unsent())
+        };
+        let send_pending = uring::send_pending(token);
+        if send_pending < last_send_pending {
+            progress = true;
+            egress_progress = true;
+        }
+        last_send_pending = send_pending;
+        let unsent = spool_unsent + send_pending;
+        if conn_dead {
+            break;
+        }
+        if (peer_gone || poisoned) && inflight == 0 && unsent == 0 {
+            break;
+        }
+        // Slow-consumer defense, driven by SEND settles instead of
+        // write() progress.
+        if let Some(stall_after) = stall {
+            if unsent == 0 || egress_progress {
+                last_egress_progress = std::time::Instant::now();
+            } else if last_egress_progress.elapsed() > stall_after {
+                metrics.slot().stalled_reaped.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        if stop.load(Ordering::Acquire) && inflight == 0 {
+            if unsent == 0 {
+                break;
+            }
+            let deadline =
+                *stop_deadline.get_or_insert_with(|| std::time::Instant::now() + grace);
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
+        }
+        // 5. Wait: with work in flight the wake comes from the scheduler
+        //    (backend completions), so yield; otherwise park on the
+        //    reactor's data-plane CQEs (RECV delivery, SEND settle).
+        if progress
+            || inflight > 0
+            || stop.load(Ordering::Acquire)
+            || (stall.is_some() && unsent > 0)
+        {
+            fiber::yield_now();
+        } else {
+            let want_read = !peer_gone && !poisoned && inbuf.backlog() < netfiber::MAX_INBUF;
+            uring::conn_park(token, want_read);
+        }
+    }
+    // Return the fd to the reactor for deferred close: in-flight SENDs
+    // settle first, so the last response reaches the wire.
+    uring::conn_close(token);
+    flush_conn_stats(&metrics, &spool);
 }
 
 // ---------------------------------------------------------------------
@@ -914,6 +1236,7 @@ pub struct ServerCore {
     accept_handle: Option<std::thread::JoinHandle<()>>,
     ops_served: Arc<AtomicU64>,
     metrics: Arc<ConnMetrics>,
+    net: NetInfo,
 }
 
 impl ServerCore {
@@ -964,8 +1287,10 @@ impl ServerCore {
         let socket_workers: Vec<usize> = (cfg.dedicated..cfg.workers).collect();
         // Settle the policy against kernel capabilities once, here:
         // IoUring on a kernel without io_uring degrades to Epoll with a
-        // logged reason, and every connection fiber sees the result.
-        let policy = cfg.net.resolve();
+        // reason logged once per server start, and every connection
+        // fiber sees the result (including the data-plane capability).
+        let net = cfg.net.settle();
+        let policy = net.resolved;
 
         // Round-robin dispatch of accepted streams onto socket workers.
         let dispatch = {
@@ -1008,11 +1333,21 @@ impl ServerCore {
             accept_handle,
             ops_served,
             metrics,
+            net,
         })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.local_addr
+    }
+
+    /// The settled network plane: requested vs resolved policy, whether
+    /// the io_uring data plane (provided buffers) engaged, and the
+    /// fallback reason when a degradation happened. Startup lines and
+    /// stats introspection surface this so operators can tell which
+    /// plane actually ran.
+    pub fn net_info(&self) -> &NetInfo {
+        &self.net
     }
 
     pub fn runtime(&self) -> &Runtime {

@@ -29,8 +29,27 @@ use crate::util::faultsim;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Process-wide tallies of the socket syscalls the fallback (readiness)
+/// data path issues. The E23 bench divides these by ops to show the data
+/// plane's read-syscalls/op ≈ 0; cheap relaxed increments next to an
+/// actual syscall.
+static READ_SYSCALLS: AtomicU64 = AtomicU64::new(0);
+static WRITE_SYSCALLS: AtomicU64 = AtomicU64::new(0);
+
+/// `read(2)`-family calls issued by [`read_available`]/[`read_burst`]
+/// since process start.
+pub fn read_syscalls() -> u64 {
+    READ_SYSCALLS.load(Ordering::Relaxed)
+}
+
+/// `write(2)`-family calls issued by [`write_pending`] since process
+/// start.
+pub fn write_syscalls() -> u64 {
+    WRITE_SYSCALLS.load(Ordering::Relaxed)
+}
 
 /// Cap on unparsed receive-buffer backlog: a connection stops reading
 /// (applies TCP backpressure) rather than buffering a hostile or runaway
@@ -75,20 +94,75 @@ impl NetPolicy {
     }
 
     /// Resolve the policy against kernel capabilities: [`NetPolicy::IoUring`]
-    /// degrades to [`NetPolicy::Epoll`] — with the reason logged, never a
-    /// panic — when the io_uring probe fails (old kernel, seccomp,
-    /// `io_uring_disabled` sysctl). Servers call this once at start-up so
-    /// every connection fiber sees the settled policy.
+    /// degrades to [`NetPolicy::Epoll`] — never a panic — when the
+    /// io_uring probe fails (old kernel, seccomp, `io_uring_disabled`
+    /// sysctl). Silent: logging belongs to [`NetPolicy::settle`], which
+    /// each server calls exactly once at start-up (so a fallback is
+    /// reported once per server start, not once per probe call).
     pub fn resolve(self) -> NetPolicy {
-        match self {
+        self.settle_quietly().resolved
+    }
+
+    /// Resolve and report: returns the full [`NetInfo`] (requested vs
+    /// resolved policy, data-plane capability, fallback reason) and logs
+    /// a fallback to stderr. Servers call this once per start; every
+    /// other caller uses the silent [`NetPolicy::resolve`].
+    pub fn settle(self) -> NetInfo {
+        let info = self.settle_quietly();
+        if let Some(reason) = &info.fallback_reason {
+            eprintln!("net policy uring unavailable ({reason}); falling back to epoll");
+        }
+        info
+    }
+
+    fn settle_quietly(self) -> NetInfo {
+        let (resolved, fallback_reason) = match self {
             NetPolicy::IoUring => match uring::probe() {
-                Ok(()) => NetPolicy::IoUring,
-                Err(e) => {
-                    eprintln!("net policy uring unavailable ({e}); falling back to epoll");
-                    NetPolicy::Epoll
-                }
+                Ok(()) => (NetPolicy::IoUring, None),
+                Err(e) => (NetPolicy::Epoll, Some(e)),
             },
-            p => p,
+            p => (p, None),
+        };
+        let dataplane = resolved == NetPolicy::IoUring
+            && uring::dataplane_enabled()
+            && uring::probe_pbuf().is_ok();
+        NetInfo { requested: self, resolved, dataplane, fallback_reason }
+    }
+}
+
+/// The settled network plane of a running server: which policy was asked
+/// for, which one actually runs, and whether the io_uring *data* plane
+/// (provided-buffer RECV/SEND) is engaged — surfaced in startup lines
+/// and introspection so operators can tell which plane ran.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetInfo {
+    pub requested: NetPolicy,
+    pub resolved: NetPolicy,
+    /// Provided-buffer data plane engaged (pbuf-capable kernel and the
+    /// `TRUSTEE_URING_NO_PBUF` kill switch not set).
+    pub dataplane: bool,
+    /// Why an [`NetPolicy::IoUring`] request degraded, when it did.
+    pub fallback_reason: Option<String>,
+}
+
+impl NetInfo {
+    /// Short plane label: `busy-poll`, `epoll`, `uring` (readiness
+    /// plane), or `uring+pbuf` (data plane).
+    pub fn label(&self) -> &'static str {
+        if self.dataplane {
+            "uring+pbuf"
+        } else {
+            self.resolved.label()
+        }
+    }
+
+    /// One-line summary for startup logs, including the degradation when
+    /// the resolved policy differs from the requested one.
+    pub fn summary(&self) -> String {
+        if self.requested == self.resolved {
+            format!("net={}", self.label())
+        } else {
+            format!("net={} (requested {})", self.label(), self.requested.label())
         }
     }
 }
@@ -131,6 +205,7 @@ pub fn read_available(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome 
         Some(faultsim::ReadFault::Short(n)) => want = n.max(1).min(chunk.len()),
         None => {}
     }
+    READ_SYSCALLS.fetch_add(1, Ordering::Relaxed);
     match stream.read(&mut chunk[..want]) {
         Ok(0) => ReadOutcome::Closed,
         Ok(n) => {
@@ -165,6 +240,7 @@ pub fn read_burst(stream: &mut TcpStream, buf: &mut Vec<u8>, max_bytes: usize) -
     }
     loop {
         let want = chunk.len().min(max_bytes - total);
+        READ_SYSCALLS.fetch_add(1, Ordering::Relaxed);
         match stream.read(&mut chunk[..want]) {
             Ok(0) => {
                 return if total > 0 { ReadOutcome::Data(total) } else { ReadOutcome::Closed };
@@ -206,6 +282,7 @@ pub fn write_pending(stream: &mut TcpStream, buf: &mut Vec<u8>, cursor: &mut usi
     }
     while *cursor < buf.len() && cap > 0 {
         let end = buf.len().min(cursor.saturating_add(cap));
+        WRITE_SYSCALLS.fetch_add(1, Ordering::Relaxed);
         match stream.write(&buf[*cursor..end]) {
             Ok(0) => return false,
             Ok(n) => {
@@ -577,6 +654,32 @@ mod tests {
         assert_eq!(NetPolicy::IoUring.label(), "uring");
         let err = NetPolicy::from_spec("nope").unwrap_err();
         assert!(err.contains("nope") && err.contains("uring"), "descriptive: {err}");
+    }
+
+    #[test]
+    fn settle_reports_the_plane() {
+        let info = NetPolicy::Epoll.settle();
+        assert_eq!(info.resolved, NetPolicy::Epoll);
+        assert!(!info.dataplane, "epoll never engages the data plane");
+        assert_eq!(info.label(), "epoll");
+        assert_eq!(info.summary(), "net=epoll");
+
+        let info = NetPolicy::IoUring.settle();
+        match info.resolved {
+            NetPolicy::IoUring => {
+                assert!(info.fallback_reason.is_none());
+                assert!(matches!(info.label(), "uring" | "uring+pbuf"));
+                if info.dataplane {
+                    assert_eq!(info.label(), "uring+pbuf");
+                }
+            }
+            NetPolicy::Epoll => {
+                assert!(info.fallback_reason.is_some(), "a degrade must carry its reason");
+                assert!(!info.dataplane);
+                assert!(info.summary().contains("requested uring"), "{}", info.summary());
+            }
+            NetPolicy::BusyPoll => unreachable!("uring never degrades to busy-poll"),
+        }
     }
 
     #[test]

@@ -712,6 +712,18 @@ impl RespServer {
         self.core.hot_path_stats()
     }
 
+    /// io_uring submission/completion counters across all workers
+    /// (zeros unless running under `NetPolicy::IoUring`; diagnostic).
+    pub fn uring_stats(&self) -> crate::runtime::uring::UringStats {
+        self.core.uring_stats()
+    }
+
+    /// The settled network plane (requested vs resolved policy, data-
+    /// plane capability, fallback reason).
+    pub fn net_info(&self) -> &crate::server::netfiber::NetInfo {
+        self.core.net_info()
+    }
+
     /// Item-store counters (items, bytes, evictions, expirations, plus
     /// the value-slab pool hit/miss and fragmentation gauges).
     pub fn store_stats(&self) -> StoreStats {

@@ -41,10 +41,15 @@ pub enum Site {
     EpollWait,
     /// The ring's `io_uring_enter` (simulated submission failure).
     UringEnter,
+    /// Data-plane RECV completions (simulated `ENOBUFS` pool exhaustion
+    /// and split segment delivery). Injections here are **lossless**:
+    /// the chaos loaders treat any desync as corruption, so both kinds
+    /// deliver every byte and only perturb *how* it arrives.
+    UringRecv,
 }
 
 /// Number of [`Site`] variants (sizes the per-site counter arrays).
-pub const NSITES: usize = 5;
+pub const NSITES: usize = 6;
 
 impl Site {
     /// Stable per-site array index (counter slots; also used by tests to
@@ -56,6 +61,7 @@ impl Site {
             Site::Accept => 2,
             Site::EpollWait => 3,
             Site::UringEnter => 4,
+            Site::UringRecv => 5,
         }
     }
 
@@ -67,6 +73,7 @@ impl Site {
             Site::Accept => "accept",
             Site::EpollWait => "epoll_wait",
             Site::UringEnter => "io_uring_enter",
+            Site::UringRecv => "uring_recv",
         }
     }
 }
@@ -95,6 +102,20 @@ pub enum WriteFault {
     Short,
 }
 
+/// What a data-plane RECV injection tells the reactor to pretend
+/// happened (both kinds deliver every byte — see [`Site::UringRecv`]).
+#[cfg_attr(not(feature = "faults"), allow(dead_code))]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UringRecvFault {
+    /// Deliver the data, then pretend the pool ran dry: disarm the
+    /// multishot RECV as `-ENOBUFS` would, exercising the starved
+    /// re-arm-on-recycle machinery.
+    Enobufs,
+    /// Split the delivered segment in two queue entries so the frame
+    /// parser sees a mid-frame boundary (partial-frame copy path).
+    Short,
+}
+
 /// Fault-kind mask bits for [`install`] / `TRUSTEE_FAULTS`.
 pub const MASK_EAGAIN: u32 = 1 << 0;
 pub const MASK_EINTR: u32 = 1 << 1;
@@ -103,8 +124,10 @@ pub const MASK_EMFILE: u32 = 1 << 3;
 pub const MASK_SHORT_READ: u32 = 1 << 4;
 pub const MASK_SHORT_WRITE: u32 = 1 << 5;
 pub const MASK_URING_ENTER: u32 = 1 << 6;
+pub const MASK_URING_ENOBUFS: u32 = 1 << 7;
+pub const MASK_URING_SHORT_RECV: u32 = 1 << 8;
 /// Every fault kind.
-pub const MASK_ALL: u32 = (1 << 7) - 1;
+pub const MASK_ALL: u32 = (1 << 9) - 1;
 
 #[cfg(feature = "faults")]
 mod imp {
@@ -127,9 +150,11 @@ mod imp {
         AtomicU64::new(0),
         AtomicU64::new(0),
         AtomicU64::new(0),
+        AtomicU64::new(0),
     ];
     /// Per-site counters of faults that actually fired.
     static INJECTED: [AtomicU64; NSITES] = [
+        AtomicU64::new(0),
         AtomicU64::new(0),
         AtomicU64::new(0),
         AtomicU64::new(0),
@@ -282,6 +307,17 @@ mod imp {
     pub fn uring_enter_fault() -> bool {
         decide(Site::UringEnter, MASK_URING_ENTER) != 0
     }
+
+    /// Probe the data-plane RECV site. `Some` perturbs (losslessly) how
+    /// a delivered segment surfaces to the engine.
+    #[inline]
+    pub fn uring_recv_fault() -> Option<UringRecvFault> {
+        match decide(Site::UringRecv, MASK_URING_ENOBUFS | MASK_URING_SHORT_RECV) {
+            MASK_URING_ENOBUFS => Some(UringRecvFault::Enobufs),
+            MASK_URING_SHORT_RECV => Some(UringRecvFault::Short),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(not(feature = "faults"))]
@@ -337,6 +373,11 @@ mod imp {
     #[inline(always)]
     pub fn uring_enter_fault() -> bool {
         false
+    }
+
+    #[inline(always)]
+    pub fn uring_recv_fault() -> Option<UringRecvFault> {
+        None
     }
 }
 

@@ -156,6 +156,8 @@ pub const IORING_FEAT_EXT_ARG: u32 = 1 << 8;
 pub const IORING_OP_NOP: u8 = 0;
 pub const IORING_OP_POLL_ADD: u8 = 6;
 pub const IORING_OP_ACCEPT: u8 = 13;
+pub const IORING_OP_SEND: u8 = 26;
+pub const IORING_OP_RECV: u8 = 27;
 
 /// `io_uring_sqe.len` flag for `IORING_OP_POLL_ADD`: re-arm after every
 /// completion (multishot) instead of one CQE per SQE.
@@ -164,12 +166,29 @@ pub const IORING_POLL_ADD_MULTI: u32 = 1 << 0;
 /// producing a CQE per accepted connection.
 pub const IORING_ACCEPT_MULTISHOT: u16 = 1 << 0;
 
+/// `io_uring_sqe.ioprio` flags for `IORING_OP_RECV`/`IORING_OP_SEND`.
+/// `POLL_FIRST` skips the speculative first attempt and arms readiness
+/// directly (the data-plane default: the fiber only posts a RECV when no
+/// bytes are queued); `MULTISHOT` keeps one RECV SQE producing a CQE per
+/// arriving burst until a terminal completion or `!F_MORE`.
+pub const IORING_RECVSEND_POLL_FIRST: u16 = 1 << 0;
+pub const IORING_RECV_MULTISHOT: u16 = 1 << 1;
+
+/// `io_uring_sqe.flags` bit: pick the destination buffer from the
+/// provided-buffer group named by `sqe.buf_index` instead of `sqe.addr`.
+pub const IOSQE_BUFFER_SELECT: u8 = 1 << 2;
+
 /// `io_uring_enter` flags.
 pub const IORING_ENTER_GETEVENTS: u32 = 1 << 0;
 pub const IORING_ENTER_EXT_ARG: u32 = 1 << 3;
 
+/// CQE flag: the completion carries a provided buffer; the buffer id is
+/// in the upper 16 bits of `cqe.flags` (see [`IORING_CQE_BUFFER_SHIFT`]).
+pub const IORING_CQE_F_BUFFER: u32 = 1 << 0;
 /// CQE flag: this multishot SQE is still armed and will produce more.
 pub const IORING_CQE_F_MORE: u32 = 1 << 1;
+/// Shift extracting the provided-buffer id from `cqe.flags`.
+pub const IORING_CQE_BUFFER_SHIFT: u32 = 16;
 
 /// SQ-ring `flags` bit (kernel → us): completions were dropped into the
 /// internal overflow list (`IORING_FEAT_NODROP`); flushing them into the
@@ -178,6 +197,10 @@ pub const IORING_SQ_CQ_OVERFLOW: u32 = 1 << 1;
 
 /// `io_uring_register` opcode for registering a wakeup eventfd.
 pub const IORING_REGISTER_EVENTFD: c_uint = 4;
+/// `io_uring_register` opcodes for attaching/detaching a provided-buffer
+/// ring (`struct io_uring_buf_reg` argument, nr_args = 1).
+pub const IORING_REGISTER_PBUF_RING: c_uint = 22;
+pub const IORING_UNREGISTER_PBUF_RING: c_uint = 23;
 
 /// Classic `poll(2)` event bits (what `POLL_ADD` takes in
 /// `io_uring_sqe.op_flags`; numerically the same low bits as `EPOLL*`).
@@ -290,6 +313,37 @@ pub struct io_uring_getevents_arg {
 pub struct kernel_timespec {
     pub tv_sec: i64,
     pub tv_nsec: i64,
+}
+
+/// One entry of a provided-buffer ring (`struct io_uring_buf`, 16 bytes):
+/// the userspace side publishes `{addr, len, bid}` triples at the ring
+/// tail and the kernel consumes them for BUFFER_SELECT ops. Also the
+/// head-of-ring shared layout (`struct io_uring_buf_ring` is a union
+/// whose first entry's `resv`/tail word doubles as the ring tail), so a
+/// pbuf ring mapping is just `ring_entries` of these.
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct io_uring_buf {
+    pub addr: u64,
+    pub len: u32,
+    pub bid: u16,
+    /// In entry 0 of the ring this field *is* the ring tail
+    /// (`io_uring_buf_ring.tail` in the kernel's union layout).
+    pub resv: u16,
+}
+
+/// `IORING_REGISTER_PBUF_RING` argument (`struct io_uring_buf_reg`,
+/// 40 bytes): where the [`io_uring_buf`] ring lives, how many entries it
+/// has, and which buffer-group id (`sqe.buf_index` under
+/// `IOSQE_BUFFER_SELECT`) selects it.
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct io_uring_buf_reg {
+    pub ring_addr: u64,
+    pub ring_entries: u32,
+    pub bgid: u16,
+    pub flags: u16,
+    pub resv: [u64; 3],
 }
 
 extern "C" {
@@ -445,6 +499,15 @@ mod tests {
         assert_eq!(std::mem::size_of::<io_uring_params>(), 40 + 40 + 40);
         assert_eq!(std::mem::size_of::<io_uring_getevents_arg>(), 24);
         assert_eq!(std::mem::size_of::<kernel_timespec>(), 16);
+        assert_eq!(std::mem::size_of::<io_uring_buf>(), 16);
+        assert_eq!(std::mem::size_of::<io_uring_buf_reg>(), 40);
+        // The bid sits at offset 12 — the kernel reads it from the shared
+        // ring, so a silent field reorder would corrupt buffer accounting.
+        let b = io_uring_buf { addr: 0, len: 0, bid: 0xBEEF, resv: 0 };
+        // SAFETY: io_uring_buf is a 16-byte repr(C) POD (asserted above);
+        // viewing it as raw bytes has no validity requirements.
+        let raw: [u8; 16] = unsafe { std::mem::transmute(b) };
+        assert_eq!(u16::from_ne_bytes([raw[12], raw[13]]), 0xBEEF);
     }
 
     #[test]

@@ -445,9 +445,112 @@ fn net_phases() {
         Ok(()) => {
             net_idle_window(NetPolicy::IoUring);
             net_roundtrip_window(NetPolicy::IoUring);
+            if !trustee::runtime::uring::dataplane_enabled() {
+                eprintln!("SKIP data-plane alloc phase: disabled via TRUSTEE_URING_NO_PBUF");
+            } else if let Err(e) = trustee::runtime::uring::probe_pbuf() {
+                assert!(
+                    std::env::var_os("TRUSTEE_REQUIRE_URING_PBUF").is_none(),
+                    "TRUSTEE_REQUIRE_URING_PBUF set but PBUF_RING unavailable: {e}"
+                );
+                eprintln!("SKIP data-plane alloc phase: PBUF_RING unavailable ({e})");
+            } else {
+                net_dataplane_window();
+            }
         }
         Err(e) => eprintln!("SKIP net alloc phases under uring: io_uring unavailable ({e})"),
     }
+}
+
+/// One pipelined burst of 16 PUTs and their acks. PUT-only on purpose:
+/// ack frames carry an empty `val`, and `to_vec()` on an empty slice
+/// does not allocate, so the *client* half of the measured window is
+/// silent too and the bar can be exact zero rather than a per-op bound.
+fn tcp_put_burst(
+    c: &mut std::net::TcpStream,
+    wbuf: &mut Vec<u8>,
+    rbuf: &mut Vec<u8>,
+    chunk: &mut [u8],
+    id: u64,
+) {
+    use std::io::{Read, Write};
+    use trustee::kvstore::proto;
+    const BURST: u64 = 16;
+    wbuf.clear();
+    for k in 0..BURST {
+        proto::write_request(wbuf, id + k, proto::OP_PUT, b"dp-alloc-key", b"value-16-bytes!!");
+    }
+    c.write_all(wbuf).unwrap();
+    rbuf.clear();
+    let mut cursor = proto::FrameCursor::new();
+    let mut got = 0;
+    while got < BURST {
+        if let Some(r) = cursor.next_response(rbuf).unwrap() {
+            assert_eq!((r.status, r.val.len()), (proto::ST_OK, 0));
+            got += 1;
+            continue;
+        }
+        let n = c.read(chunk).unwrap();
+        assert!(n > 0, "server closed during data-plane alloc window");
+        rbuf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Steady-state provided-buffer RECV + ring SEND, exact zero: once the
+/// reactor's `send_active`/`send_next` vectors, the per-connection CQE
+/// queue, the engine inbuf, and the spool have hit their high-water
+/// marks, a registered connection's ingest→parse→dispatch→egress loop
+/// touches only recycled storage — kernel-filled pool buffers in,
+/// frozen reactor-owned send buffers out. The window also proves the
+/// plane is *engaged*: RECV CQEs and SEND SQEs advance while the
+/// server-side `read()`/`write()` counters do not.
+fn net_dataplane_window() {
+    use trustee::kvstore::NetPolicy;
+    use trustee::server::netfiber;
+    const BURSTS: u64 = 300;
+    let server = net_server(NetPolicy::IoUring);
+    let mut c = std::net::TcpStream::connect(server.addr()).unwrap();
+    c.set_nodelay(true).ok();
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let mut wbuf = Vec::new();
+    let mut rbuf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    for i in 0..150u64 {
+        tcp_put_burst(&mut c, &mut wbuf, &mut rbuf, &mut chunk, 1 + i * 16);
+    }
+    let stats0 = server.uring_stats();
+    let reads0 = netfiber::read_syscalls();
+    let writes0 = netfiber::write_syscalls();
+    let before = snapshot();
+    for i in 0..BURSTS {
+        tcp_put_burst(&mut c, &mut wbuf, &mut rbuf, &mut chunk, 10_000 + i * 16);
+    }
+    let after = snapshot();
+    let d = after.since(&before);
+    let stats = server.uring_stats();
+    assert_eq!(
+        d.allocs,
+        0,
+        "steady-state data-plane RECV/SEND must not allocate \
+         ({} allocs / {} bytes across {} pipelined PUTs)",
+        d.allocs,
+        d.bytes,
+        BURSTS * 16
+    );
+    assert!(
+        stats.recv_cqes > stats0.recv_cqes && stats.send_sqes > stats0.send_sqes,
+        "measured window must ride the data plane ({stats0:?} -> {stats:?})"
+    );
+    assert!(
+        stats.pbuf_recycled > stats0.pbuf_recycled,
+        "consumed pool buffers must be republished ({stats0:?} -> {stats:?})"
+    );
+    assert_eq!(
+        (netfiber::read_syscalls() - reads0, netfiber::write_syscalls() - writes0),
+        (0, 0),
+        "a registered data-plane connection makes no read/write syscalls"
+    );
+    drop(c);
+    server.stop();
 }
 
 fn net_server(net: trustee::kvstore::NetPolicy) -> trustee::kvstore::KvServer {

@@ -118,6 +118,62 @@ fn truncated_and_corrupt_frames_never_panic_workers() {
 }
 
 #[test]
+fn hostile_bytes_via_provided_buffers_are_answered_not_panicked() {
+    // Data-plane variant: hostile bytes arrive in kernel-filled provided
+    // buffers and are parsed *in place* (the borrowed-slice fast path),
+    // so the protocol's totality contract is exercised against kernel
+    // memory, not a copied Vec. Skips (visibly) when the kernel has no
+    // PBUF_RING; TRUSTEE_REQUIRE_URING_PBUF turns the skip into a
+    // failure.
+    if trustee::runtime::uring::probe().is_err() || !trustee::runtime::uring::dataplane_enabled() {
+        eprintln!("SKIP hostile_bytes_via_provided_buffers: io_uring data plane unavailable");
+        return;
+    }
+    if let Err(e) = trustee::runtime::uring::probe_pbuf() {
+        assert!(
+            std::env::var_os("TRUSTEE_REQUIRE_URING_PBUF").is_none(),
+            "TRUSTEE_REQUIRE_URING_PBUF set but PBUF_RING unavailable: {e}"
+        );
+        eprintln!("SKIP hostile_bytes_via_provided_buffers: provided buffers unavailable ({e})");
+        return;
+    }
+    let server = start(NetPolicy::IoUring);
+    let mut rng = Rng::new(0x9B0F_BEEF);
+    for round in 0..24u64 {
+        let len = 1 + (rng.next_u64() % 4096) as usize;
+        let mut bytes = Vec::with_capacity(len);
+        for _ in 0..len {
+            bytes.push(rng.next_u64() as u8);
+        }
+        match round % 3 {
+            // Corruption at byte zero of a fresh provided buffer.
+            0 => {}
+            // Valid frame first: the corruption lands mid-slice, after
+            // the in-place parser has already consumed a real request.
+            1 => {
+                let mut framed = Vec::new();
+                proto::write_request(&mut framed, round, proto::OP_GET, b"seed", &[]);
+                framed.extend_from_slice(&bytes);
+                bytes = framed;
+            }
+            // Oversized frame announcement: poisons via the length check
+            // while the slice is attached.
+            _ => {
+                let mut framed = ((proto::MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+                framed.extend_from_slice(&bytes);
+                bytes = framed;
+            }
+        }
+        throw_garbage(&server, &bytes);
+    }
+    // The storm really rode the data plane, and the server is healthy.
+    let stats = server.uring_stats();
+    assert!(stats.recv_cqes > 0, "hostile bytes did not arrive via RECV CQEs: {stats:?}");
+    assert_healthy(&server, b"hostile-pbuf");
+    server.stop();
+}
+
+#[test]
 fn random_byte_storms_never_panic_workers() {
     for net in policies("random_byte_storms_never_panic_workers") {
         let server = start(net);

@@ -345,6 +345,223 @@ fn uring_trickled_bytes_wake_the_parked_fiber_each_time() {
     server.stop();
 }
 
+/// Gate a *data-plane* test on PBUF_RING capability (and the
+/// `TRUSTEE_URING_NO_PBUF` kill switch), with a visible skip reason.
+/// `TRUSTEE_REQUIRE_URING_PBUF=1` (CI on capable kernels) turns the skip
+/// into a failure so a probe regression cannot silently hide the plane.
+fn pbuf_or_skip(test: &str) -> bool {
+    if !uring_or_skip(test) {
+        return false;
+    }
+    if !trustee::runtime::uring::dataplane_enabled() {
+        eprintln!("SKIP {test}: data plane disabled via TRUSTEE_URING_NO_PBUF");
+        return false;
+    }
+    match trustee::runtime::uring::probe_pbuf() {
+        Ok(()) => true,
+        Err(e) => {
+            assert!(
+                std::env::var_os("TRUSTEE_REQUIRE_URING_PBUF").is_none(),
+                "TRUSTEE_REQUIRE_URING_PBUF set but PBUF_RING unavailable: {e}"
+            );
+            eprintln!("SKIP {test}: io_uring provided buffers unavailable ({e})");
+            false
+        }
+    }
+}
+
+#[test]
+fn dataplane_pipelined_whole_frames_ride_provided_buffers() {
+    if !pbuf_or_skip("dataplane_pipelined_whole_frames_ride_provided_buffers") {
+        return;
+    }
+    // Pipelined complete frames arrive in kernel-filled provided buffers
+    // and parse in place (the whole-frame fast path): the server's RECV
+    // CQE and ring-SEND counters must move, and every consumed buffer
+    // must be recycled back to the pool while connections are alive.
+    let server = kv_server(NetPolicy::IoUring, 2, 0);
+    let mut c = TcpStream::connect(server.addr()).unwrap();
+    // Batches of pipelined PUT+GET pairs — multiple frames per segment.
+    for round in 0..10u64 {
+        let mut buf = Vec::new();
+        for i in 0..8u64 {
+            let id = round * 100 + i * 2 + 1;
+            proto::write_request(&mut buf, id, proto::OP_PUT, format!("k{i}").as_bytes(), b"v");
+            proto::write_request(&mut buf, id + 1, proto::OP_GET, format!("k{i}").as_bytes(), &[]);
+        }
+        c.write_all(&buf).unwrap();
+        let mut cursor = proto::FrameCursor::new();
+        let mut rbuf = Vec::new();
+        let mut chunk = [0u8; 4096];
+        let mut got = 0;
+        while got < 16 {
+            if let Some(_r) = cursor.next_response(&rbuf).unwrap() {
+                got += 1;
+                continue;
+            }
+            let n = c.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed early");
+            rbuf.extend_from_slice(&chunk[..n]);
+        }
+    }
+    assert_eq!(server.ops_served.load(Ordering::Relaxed), 160);
+    let stats = server.uring_stats();
+    assert!(stats.recv_cqes > 0, "ingest did not ride the data plane: {stats:?}");
+    assert!(stats.send_sqes > 0, "egress did not ride ring SENDs: {stats:?}");
+    assert!(stats.pbuf_recycled > 0, "no provided buffers recycled: {stats:?}");
+    assert!(
+        stats.pbuf_recycled <= stats.recv_cqes,
+        "recycled more buffers than RECV CQEs delivered: {stats:?}"
+    );
+    drop(c);
+    server.stop();
+}
+
+#[test]
+fn dataplane_partial_frames_take_the_copy_once_path() {
+    if !pbuf_or_skip("dataplane_partial_frames_take_the_copy_once_path") {
+        return;
+    }
+    // A frame split across provided-buffer segments: the engine copies
+    // the partial tail into the owned buffer exactly once per detach and
+    // completes the parse when the rest arrives.
+    let server = kv_server(NetPolicy::IoUring, 2, 0);
+    let mut c = TcpStream::connect(server.addr()).unwrap();
+    c.set_nodelay(true).unwrap();
+    let mut buf = Vec::new();
+    proto::write_request(&mut buf, 7, proto::OP_PUT, b"split", &vec![b'p'; 600]);
+    // Three chunks with pauses: each lands as its own RECV CQE, so the
+    // first two leave a partial frame behind (detach → copy-once).
+    for part in buf.chunks(buf.len() / 3 + 1) {
+        c.write_all(part).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let mut cursor = proto::FrameCursor::new();
+    let mut rbuf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    let resp = loop {
+        if let Some(r) = cursor.next_response(&rbuf).unwrap() {
+            break r;
+        }
+        let n = c.read(&mut chunk).unwrap();
+        assert!(n > 0);
+        rbuf.extend_from_slice(&chunk[..n]);
+    };
+    assert_eq!((resp.id, resp.status), (7, proto::ST_OK));
+    // Readback proves the reassembled body was stored intact.
+    kv_roundtrip(&mut c, 100, b"check", b"after-split");
+    let stats = server.uring_stats();
+    assert!(stats.recv_cqes >= 3, "split delivery should take >= 3 RECV CQEs: {stats:?}");
+    drop(c);
+    server.stop();
+}
+
+#[test]
+fn dataplane_enobufs_starvation_recovers_at_the_wire() {
+    if !pbuf_or_skip("dataplane_enobufs_starvation_recovers_at_the_wire") {
+        return;
+    }
+    // Replenish-withheld backpressure, proven at the wire: a client that
+    // pipelines large-response GETs while never reading closes the
+    // dispatch gate (spool + in-flight SEND bytes at MAX_OUTBUF), then
+    // keeps writing until the unparsed backlog passes MAX_INBUF — the
+    // fiber stops taking (and so stops recycling) provided buffers, the
+    // pool drains, and RECV terminates with ENOBUFS. When the client
+    // finally reads, settles reopen the cascade and the starved RECV is
+    // re-armed from the recycle path: every response must come back
+    // byte-correct and the counters must show the starvation.
+    let server = kv_server(NetPolicy::IoUring, 1, 0);
+    {
+        // Prefill one 256 KiB value through a throwaway connection.
+        let mut p = TcpStream::connect(server.addr()).unwrap();
+        kv_roundtrip(&mut p, 1, b"big", &vec![b'B'; 256 * 1024]);
+    }
+    let mut c = TcpStream::connect(server.addr()).unwrap();
+    c.set_nonblocking(true).unwrap();
+    // Phase 1: request ~16 MiB of responses without reading any (64 GETs
+    // x 256 KiB floods spool + reactor past MAX_OUTBUF on both sides).
+    let mut reqs = Vec::new();
+    for i in 0..64u64 {
+        proto::write_request(&mut reqs, 1000 + i, proto::OP_GET, b"big", &[]);
+    }
+    // Phase 2: filler the server must *buffer unparsed* while the gate
+    // is closed — large PUTs (tiny ACK responses) totalling well past
+    // MAX_INBUF plus the whole provided pool plus any plausible socket
+    // buffer autotuning, so the pool must drain.
+    for i in 0..16u64 {
+        proto::write_request(
+            &mut reqs,
+            2000 + i,
+            proto::OP_PUT,
+            b"fill",
+            &vec![b'f'; (1 << 20) - 64],
+        );
+    }
+    // Nonblocking writes until the kernel refuses: the server has by
+    // then absorbed MAX_INBUF + the pool and stopped taking.
+    let mut written = 0;
+    let mut stalled = 0;
+    while written < reqs.len() && stalled < 200 {
+        match c.write(&reqs[written..]) {
+            Ok(n) => {
+                written += n;
+                stalled = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                stalled += 1;
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => panic!("write failed mid-flood: {e}"),
+        }
+    }
+    // Phase 3: drain everything. Every GET must return the exact value,
+    // every PUT must ack — a single corrupted or dropped response means
+    // the starvation path lost data.
+    c.set_nonblocking(false).unwrap();
+    c.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    let writer = std::thread::spawn({
+        let mut c2 = c.try_clone().unwrap();
+        let rest = reqs[written..].to_vec();
+        move || {
+            // Finish the flood (blocking) while the reader drains.
+            c2.write_all(&rest).unwrap();
+        }
+    });
+    let mut cursor = proto::FrameCursor::new();
+    let mut rbuf = Vec::new();
+    let mut chunk = vec![0u8; 64 * 1024];
+    let mut gets = 0u64;
+    let mut puts = 0u64;
+    while gets + puts < 80 {
+        if let Some(r) = cursor.next_response(&rbuf).unwrap() {
+            if (1000..2000).contains(&r.id) {
+                assert_eq!(r.status, proto::ST_OK, "GET {} failed", r.id);
+                assert_eq!(r.val.len(), 256 * 1024, "GET {} returned a torn value", r.id);
+                assert!(r.val.iter().all(|&b| b == b'B'), "GET {} corrupted", r.id);
+                gets += 1;
+            } else {
+                assert_eq!(r.status, proto::ST_OK, "PUT {} failed", r.id);
+                puts += 1;
+            }
+            continue;
+        }
+        proto::compact(&mut rbuf, &mut cursor);
+        let n = c.read(&mut chunk).expect("drain read timed out");
+        assert!(n > 0, "server closed during drain");
+        rbuf.extend_from_slice(&chunk[..n]);
+    }
+    writer.join().unwrap();
+    assert_eq!((gets, puts), (64, 16));
+    let stats = server.uring_stats();
+    assert!(
+        stats.enobufs > 0,
+        "the flood never starved the provided pool (ENOBUFS): {stats:?}"
+    );
+    assert!(stats.recv_cqes > 0 && stats.pbuf_recycled > 0, "{stats:?}");
+    drop(c);
+    server.stop();
+}
+
 #[test]
 fn slow_trickled_bytes_wake_the_parked_fiber_each_time() {
     // A request delivered one byte at a time: the fiber parks between

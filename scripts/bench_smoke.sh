@@ -47,8 +47,15 @@ cargo bench --bench net_idle_conns -- --sweep --json \
     > "$OUT_DIR/BENCH_net_idle_conns.json"
 echo "wrote BENCH_net_idle_conns.json" >&2
 
+# E23 readiness-vs-data-plane A/B, CI-sized. Emits a skip object on
+# kernels without io_uring and a readiness-only cell list without
+# PBUF_RING, so it is valid JSON everywhere.
+cargo bench --bench uring_dataplane -- --json --ops 4000 --conns 2 --pipeline 8 \
+    > "$OUT_DIR/BENCH_uring_dataplane.json"
+echo "wrote BENCH_uring_dataplane.json" >&2
+
 # Sanity: every file must be non-empty JSON (first byte '{').
-for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json BENCH_eviction_pressure.json BENCH_overload_degradation.json BENCH_net_idle_conns.json; do
+for f in BENCH_channel_micro.json BENCH_fig9_kv_write_pct.json BENCH_resp_throughput.json BENCH_eviction_pressure.json BENCH_overload_degradation.json BENCH_net_idle_conns.json BENCH_uring_dataplane.json; do
     head -c 1 "$OUT_DIR/$f" | grep -q '{' || { echo "bad JSON in $f" >&2; exit 1; }
 done
 echo "bench smoke OK" >&2
